@@ -1,0 +1,49 @@
+//! Edge-device adaptation scenario (paper §1 motivation): resources
+//! oscillate; the controller continuously retunes the routing threshold
+//! delta / target bits, and we measure the quality (per-token NLL) the
+//! device actually delivers in each regime — without reloading or
+//! repacking a single weight.
+//!
+//!     cargo run --release --example edge_adaptation
+
+use anyhow::Result;
+use mobiquant::coordinator::controller::{ControllerConfig,
+                                         ElasticController};
+use mobiquant::data::{corpus, ppl};
+use mobiquant::mobiq::artifact::Bundle;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::weights::BackendKind;
+use mobiquant::model::Model;
+
+fn main() -> Result<()> {
+    let dir = mobiquant::artifacts_dir();
+    let bundle = Bundle::load(dir.join("tiny-s.mobiq"))?;
+    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)?;
+
+    let mut ctl = ElasticController::new(ControllerConfig::default());
+    println!("{:>6} {:>9} {:>11} {:>9} {:>9}",
+             "phase", "pressure", "target_bits", "ppl", "avg_bits");
+    // sweep a contention cycle: calm -> rising -> peak -> recovery
+    for (phase, pressure) in [("calm", 0.0), ("rise", 0.35),
+                              ("peak", 0.95), ("cool", 0.5),
+                              ("calm2", 0.05)] {
+        let precision = ctl.update(pressure, 0.0);
+        let r = ppl::evaluate(&model, &toks, precision, 128, 6)?;
+        println!("{:>6} {:>9.2} {:>11.2} {:>9.4} {:>9.2}",
+                 phase, pressure, ctl.target_bits(), r.ppl, r.avg_bits);
+    }
+    println!("\ncontroller switched precision {} times; weights were \
+              packed ONCE at build time", ctl.switches());
+
+    // manual delta override (Eq. 10): the raw elasticity knob
+    println!("\nmanual delta sweep at target 4 bits:");
+    for delta in [-0.8f32, -0.4, 0.0, 0.4, 0.8] {
+        let r = ppl::evaluate(&model, &toks,
+                              Precision::Elastic { target_bits: 4.0, delta },
+                              128, 4)?;
+        println!("  delta {delta:>5.1} -> avg bits {:.2}, ppl {:.4}",
+                 r.avg_bits, r.ppl);
+    }
+    Ok(())
+}

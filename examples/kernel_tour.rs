@@ -1,0 +1,76 @@
+//! Low-level API tour: MoBiSlice decomposition, bit-plane packing, the
+//! shared-scale LUT GEMV, routing, and the traffic model — everything
+//! §4.1/§4.3 of the paper describes, on one toy linear layer.
+//!
+//!     cargo run --release --example kernel_tour
+
+use mobiquant::mobiq::bitplane::PackedSlice;
+use mobiquant::mobiq::gemv::{dequant_gemv, gemv_lut, matvec,
+                             permute_by_mask, TokenLut};
+use mobiquant::mobiq::quantizer::{decompose, reconstruct, GroupParams};
+use mobiquant::util::prng::Pcg;
+
+fn main() {
+    let (d_in, d_out, gs) = (128usize, 64usize, 32usize);
+    let mut rng = Pcg::new(42);
+    let w = rng.normal_vec(d_in * d_out, 0.25);
+
+    // 1. recursive residual decomposition (paper Eq. 2)
+    let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+    let codes = decompose(&w, &base, 4);
+    println!("decomposed {}x{} weight into {} 2-bit slices",
+             d_in, d_out, codes.len());
+    for k in 1..=4 {
+        let rec = reconstruct(&codes, &base, k);
+        let mse: f64 = w.iter().zip(&rec)
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>()
+            / w.len() as f64;
+        println!("  {} slices ({} bits): reconstruction mse {:.3e}",
+                 k, 2 * k, mse);
+    }
+
+    // 2. bit-plane packing (paper §4.3 bit-major layout)
+    let slices: Vec<PackedSlice> = codes.iter()
+        .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+        .collect();
+    println!("\npacked planes: {} bytes/slice vs {} bytes dense f32",
+             slices[0].nbytes(), d_in * d_out * 4);
+
+    // 3. the kernel: LUT bit-serial GEMV with shared scales
+    let x = rng.normal_vec(d_in, 1.0);
+    let mut lut = TokenLut::new(d_in, gs);
+    lut.build(&x, gs);
+    let active = [true, true, false, false]; // a 4-bit token
+    let mut y = vec![0f32; d_out];
+    let mut y_oracle = vec![0f32; d_out];
+    let mut y_fp = vec![0f32; d_out];
+    gemv_lut(&slices, &base, &lut, &active, &mut y);
+    dequant_gemv(&slices, &base, &x, &active, &mut y_oracle);
+    matvec(&w, &x, &mut y_fp, d_in, d_out);
+    let kerr = y.iter().zip(&y_oracle)
+        .map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    println!("\nLUT kernel vs dequant oracle: max diff {:.2e}", kerr);
+    let qerr: f32 = y.iter().zip(&y_fp)
+        .map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    println!("4-bit output vs FP output:    max diff {:.3}", qerr);
+
+    // 4. token permutation (contiguous same-precision groups)
+    let masks: Vec<Vec<bool>> = (0..8)
+        .map(|_| {
+            let mut m = vec![true, false, false, false];
+            for e in 1..4 {
+                m[e] = rng.bool(0.5);
+            }
+            m
+        })
+        .collect();
+    let perm = permute_by_mask(&masks);
+    println!("\ntoken permutation for batched dispatch: {perm:?}");
+
+    // 5. traffic proportionality: bytes fetched per precision
+    println!("\non-demand plane fetch (bytes per token):");
+    for k in 1..=4 {
+        let bytes: usize = slices[..k].iter().map(|s| s.nbytes()).sum();
+        println!("  {} bits -> {} plane bytes", 2 * k, bytes);
+    }
+}

@@ -1,0 +1,43 @@
+//! Quickstart: load a MoBiQuant bundle, inspect it, generate text at two
+//! precisions, and evaluate perplexity across the elastic range.
+//!
+//!     make artifacts          # once (pretrain + calibrate + export)
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use mobiquant::data::{corpus, ppl, tokenizer};
+use mobiquant::mobiq::artifact::Bundle;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::transformer::DecodeStats;
+use mobiquant::model::weights::BackendKind;
+use mobiquant::model::Model;
+
+fn main() -> Result<()> {
+    let dir = mobiquant::artifacts_dir();
+    let bundle = Bundle::load(dir.join("tiny-s.mobiq"))?;
+    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    println!("loaded {} ({} layers, d={}, E={} x {}-bit slices)",
+             model.cfg.name, model.cfg.n_layers, model.cfg.d_model,
+             model.cfg.n_slices, model.cfg.slice_bits);
+
+    // --- generation at low vs high precision --------------------------
+    let prompt = tokenizer::encode("The ancient settlement ");
+    for target in [2.5, 6.0] {
+        let mut stats = DecodeStats::new(model.cfg.n_layers);
+        let out = model.generate(&prompt, 64, Precision::elastic(target),
+                                 &mut stats)?;
+        println!("\n--- target {target} bits (avg used {:.2}) ---\n{}",
+                 stats.avg_bits(), tokenizer::decode(&out));
+    }
+
+    // --- elastic PPL sweep --------------------------------------------
+    let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)?;
+    println!("\nelastic perplexity sweep (wiki valid):");
+    for target in [2.0, 3.0, 4.0, 6.0, 8.0] {
+        let r = ppl::evaluate(&model, &toks, Precision::elastic(target),
+                              128, 8)?;
+        println!("  target {target:>3} bits -> ppl {:.4} (avg bits {:.2})",
+                 r.ppl, r.avg_bits);
+    }
+    Ok(())
+}

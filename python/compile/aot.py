@@ -1,0 +1,492 @@
+"""AOT build orchestrator — `make artifacts` entry point.
+
+Runs ONCE at build time (never on the request path):
+
+  1. generate synthetic corpora (corpus.py)
+  2. pretrain the substitute model family (pretrain.py)
+  3. calibrate MoBiQuant (Alg. 1) + every static-PTQ baseline
+  4. export self-contained .mobiq bundles for the Rust engine
+  5. lower AOT HLO-text modules for the Rust PJRT runtime
+     (HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+     instruction ids that xla_extension 0.5.1 rejects — see
+     /opt/xla-example/README.md)
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--models tiny-s,tiny-m]
+                          [--ablations] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, export, model as model_mod, pretrain
+from .config import MODEL_ZOO, PRETRAIN_STEPS, QuantConfig
+from .kernels import ref as kref
+from .kernels.mobislice_matmul import mobislice_matmul
+from .quant import awq, gptq, mobislice, rotation, smoothquant
+from .quant.calibrate import LINEARS, calibrate, clipped_params, _linear_input
+from .quant.schedules import SCHEDULES
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})` and xla_extension 0.5.1's HLO text
+    # parser silently fills them with ZEROS (we found model weights
+    # zeroed on the Rust side; see DESIGN.md gotchas).
+    try:
+        return comp.as_hlo_text(print_large_constants=True)
+    except TypeError:
+        options = xc._xla.HloPrintOptions.default()
+        options.print_large_constants = True
+        return comp.as_hlo_module().to_string(options)
+
+
+def lower_to_file(fn, args, path: str) -> None:
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# Activation capture for the static-PTQ baselines
+# ---------------------------------------------------------------------------
+
+def capture_linear_inputs(params, cfg, tokens: np.ndarray):
+    """FP activations feeding every linear: {(layer, name): (n_tok, d_in)}."""
+    h = params["embed"][jnp.asarray(tokens.astype(np.int32))]
+    outs = {}
+    for li, bp in enumerate(params["layers"]):
+        for name in LINEARS:
+            x = _linear_input(bp, cfg, h, name)
+            outs[(li, name)] = np.asarray(x).reshape(-1, x.shape[-1])
+        h = jax.vmap(lambda xb, bp=bp: model_mod.block(
+            xb, bp, cfg, 0, lambda l, n, xi, w: xi @ w))(h)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Static baseline calibration (per method, per bit-width)
+# ---------------------------------------------------------------------------
+
+def build_static_records(params, cfg, qcfg, acts, calib_omni, bits_list,
+                         verbose=True):
+    """Returns {method_key: {"meta":..., "records": {(l,n): rec}}}."""
+    out = {}
+    t0 = time.time()
+    for bits in bits_list:
+        for method in ("rtn", "gptq", "awq", "smoothquant", "quarot",
+                       "spinquant"):
+            key = f"{method}{bits}"
+            recs = {}
+            for li, bp in enumerate(params["layers"]):
+                for name in LINEARS:
+                    w = np.asarray(bp[name])
+                    x = acts[(li, name)]
+                    if method == "rtn":
+                        r = gptq.rtn_record(w, bits, qcfg.group_size)
+                    elif method == "gptq":
+                        r = gptq.gptq_quantize(w, x, bits, qcfg.group_size)
+                    elif method == "awq":
+                        r = awq.awq_quantize(w, x, bits, qcfg.group_size)
+                    elif method == "smoothquant":
+                        r = smoothquant.smooth_quantize(w, x, bits,
+                                                        qcfg.group_size)
+                    elif method == "quarot":
+                        r = rotation.quarot_quantize(w, bits,
+                                                     qcfg.group_size)
+                    else:
+                        r = rotation.spinquant_quantize(w, x, bits,
+                                                        qcfg.group_size,
+                                                        n_signs=8)
+                    recs[(li, name)] = r
+            tf = next(iter(recs.values())).transform
+            out[key] = {"meta": export.static_meta(method, bits, tf),
+                        "records": recs}
+            if verbose:
+                print(f"  [static] {key} done ({time.time() - t0:.1f}s)",
+                      flush=True)
+    # OmniQuant-lite records come from the LWC calibration results
+    for bits, cres in calib_omni.items():
+        key = f"omniquant{bits}"
+        recs = {}
+        for li, bp in enumerate(params["layers"]):
+            for name in LINEARS:
+                w = np.asarray(bp[name])
+                cal = cres.layers[li][name]
+                p = clipped_params(w, cal.clip_lo, cal.clip_hi, bits,
+                                   qcfg.group_size)
+                from .quant import quantizer
+                codes = np.asarray(quantizer.quantize(jnp.asarray(w), p),
+                                   np.uint8)
+                recs[(li, name)] = gptq.StaticQuantLinear(
+                    codes=codes, scale=np.asarray(p.scale, np.float32),
+                    zero=np.asarray(p.zero, np.float32), bits=bits,
+                    group_size=qcfg.group_size,
+                    act_scale=np.ones(w.shape[0], np.float32),
+                    transform="none")
+        out[key] = {"meta": export.static_meta("omniquant", bits, "none"),
+                    "records": recs}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Bundle assembly
+# ---------------------------------------------------------------------------
+
+def build_bundle(path, params, cfg, qcfg, calib_mobiq, statics,
+                 pretrain_summary, golden_tokens):
+    w = export.BundleWriter()
+    w.meta.update(export.model_meta(cfg, qcfg))
+    w.meta["pretrain"] = {k: v for k, v in pretrain_summary.items()
+                          if k != "curve"}
+    w.meta["pretrain"]["curve"] = [[int(s), float(l)] for s, l in
+                                   pretrain_summary["curve"]]
+    w.meta["static_methods"] = {k: v["meta"] for k, v in statics.items()}
+    export.add_fp_params(w, params)
+    export.add_mobiq(w, params, calib_mobiq, qcfg)
+    for key, entry in statics.items():
+        for (li, name), rec in entry["records"].items():
+            export.add_static_record(w, key, li, name, rec)
+
+    # golden vectors: FP logits + fixed-k MoBiSlice logits for Rust parity
+    logits = {}
+    tok = jnp.asarray(golden_tokens.astype(np.int32))
+    logits["logits_fp"] = np.asarray(
+        model_mod.forward(params, tok, cfg))
+
+    for k in range(1, qcfg.n_slices + 1):
+        qparams = _reconstructed_params(params, cfg, qcfg, calib_mobiq, k)
+        logits[f"logits_q{k * qcfg.slice_bits}"] = np.asarray(
+            model_mod.forward(qparams, tok, cfg))
+    export.add_golden(w, golden_tokens, logits)
+    w.write(path)
+    return logits
+
+
+def _reconstructed_params(params, cfg, qcfg, calib, k):
+    """Model params with every linear replaced by its k-slice reconstruction."""
+    new_layers = []
+    for lp, lc in zip(params["layers"], calib.layers):
+        nlp = dict(lp)
+        for name in LINEARS:
+            wmat = lp[name]
+            cal = lc[name]
+            base = clipped_params(wmat, cal.clip_lo, cal.clip_hi,
+                                  qcfg.slice_bits, qcfg.group_size)
+            sw = mobislice.decompose(wmat, base, qcfg.n_slices,
+                                     qcfg.slice_bits)
+            nlp[name] = mobislice.reconstruct(sw, k)
+        new_layers.append(nlp)
+    return {**params, "layers": new_layers}
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def lower_model_hlos(out_dir, name, params, cfg, qcfg, calib_mobiq,
+                     seq_len=128):
+    os.makedirs(out_dir, exist_ok=True)
+    spec = jax.ShapeDtypeStruct((seq_len,), jnp.int32)
+
+    def fp_fn(tokens):
+        return (model_mod.forward(params, tokens, cfg),)
+    lower_to_file(fp_fn, (spec,), os.path.join(out_dir, f"{name}_fp.hlo.txt"))
+
+    for k in range(1, qcfg.n_slices + 1):
+        qp = _reconstructed_params(params, cfg, qcfg, calib_mobiq, k)
+
+        def q_fn(tokens, qp=qp):
+            return (model_mod.forward(qp, tokens, cfg),)
+        bits = k * qcfg.slice_bits
+        lower_to_file(q_fn, (spec,),
+                      os.path.join(out_dir, f"{name}_q{bits}.hlo.txt"))
+
+    # standalone Pallas kernel module (layer-0 wq shapes)
+    d_in = cfg.d_model
+    d_out = cfg.d_model
+    t = 16
+    xspec = jax.ShapeDtypeStruct((t, d_in), jnp.float32)
+    pspec = jax.ShapeDtypeStruct(
+        (qcfg.n_slices, qcfg.slice_bits, d_in // 32, d_out), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((d_in // qcfg.group_size, d_out),
+                                 jnp.float32)
+    mspec = jax.ShapeDtypeStruct((t, qcfg.n_slices), jnp.float32)
+
+    def kernel_fn(x, planes, scale, zero, mask):
+        return (mobislice_matmul(x, planes, scale, zero, mask,
+                                 slice_bits=qcfg.slice_bits,
+                                 group_size=qcfg.group_size,
+                                 tile_m=t, tile_n=d_out),)
+    lower_to_file(kernel_fn, (xspec, pspec, sspec, sspec, mspec),
+                  os.path.join(out_dir, f"{name}_kernel.hlo.txt"))
+
+    # layer-0 wq router module
+    cal = calib_mobiq.layers[0]["wq"]
+    w1, b1 = jnp.asarray(cal.router["w1"]), jnp.asarray(cal.router["b1"])
+    w2, b2 = jnp.asarray(cal.router["w2"]), jnp.asarray(cal.router["b2"])
+
+    def router_fn(x):
+        return (jax.nn.relu(x @ w1 + b1) @ w2 + b2,)
+    lower_to_file(router_fn, (jax.ShapeDtypeStruct((t, d_in), jnp.float32),),
+                  os.path.join(out_dir, f"{name}_router.hlo.txt"))
+
+
+# ---------------------------------------------------------------------------
+# Main pipeline
+# ---------------------------------------------------------------------------
+
+def run(out_dir: str, models, ablations: bool, force: bool,
+        fast: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    corpus_dir = os.path.join(out_dir, "corpus")
+    marker = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(marker) and not force:
+        existing = json.load(open(marker))
+        if set(models) <= set(existing.get("models", [])) and (
+                not ablations or existing.get("ablations")):
+            print("[aot] artifacts up to date; skipping (use --force)")
+            return
+
+    t0 = time.time()
+    print("[aot] generating corpora", flush=True)
+    corpus.write_corpora(corpus_dir,
+                         train_chars=120_000 if fast else 900_000,
+                         valid_chars=30_000 if fast else 60_000)
+
+    manifest = {"models": [], "ablations": ablations, "hlo": {},
+                "elapsed": {}}
+    qcfg = QuantConfig()
+    golden_tokens = corpus.tokenize(
+        corpus.generate("wiki", 4096, seed=1234))[:64].astype(np.int32)
+
+    for mname in models:
+        cfg = MODEL_ZOO[mname]
+        steps = 60 if fast else PRETRAIN_STEPS[mname]
+        ckpt = os.path.join(out_dir, f"ckpt_{mname}.npz")
+        bundle_done = os.path.join(out_dir, f"{mname}.mobiq")
+        hlo_done = os.path.join(out_dir, "hlo", f"{mname}_router.hlo.txt")
+        if os.path.exists(bundle_done) and os.path.exists(hlo_done) \
+                and not force:
+            print(f"[aot] {mname} bundle up to date; skipping", flush=True)
+            manifest["models"].append(mname)
+            continue
+        print(f"[aot] pretraining {mname} ({steps} steps)", flush=True)
+        if os.path.exists(ckpt) and not force:
+            params = pretrain.load_params(ckpt)
+            summary = json.load(open(ckpt + ".json"))
+        else:
+            params, summary = pretrain.pretrain(cfg, corpus_dir, steps)
+            pretrain.save_params(params, ckpt)
+            json.dump(summary, open(ckpt + ".json", "w"))
+
+        calib_tokens = _calib_tokens(corpus_dir, "wiki", qcfg, fast)
+
+        print(f"[aot] calibrating MoBiQuant on {mname}", flush=True)
+        s1, s2 = (8, 20) if fast else (30, 90)
+        calib_mobiq = calibrate(params, cfg, qcfg, calib_tokens,
+                                mode="mobiq", stage1_steps=s1,
+                                stage2_steps=s2)
+        calib_omni = {}
+        for bits in ((3,) if fast else (2, 3, 4)):
+            print(f"[aot] calibrating OmniQuant-lite @{bits}b", flush=True)
+            calib_omni[bits] = calibrate(params, cfg, qcfg, calib_tokens,
+                                         mode="omniquant", bits=bits,
+                                         stage1_steps=s1, stage2_steps=0)
+
+        print(f"[aot] static baselines on {mname}", flush=True)
+        acts = capture_linear_inputs(params, cfg,
+                                     calib_tokens[:16 if fast else 32])
+        statics = build_static_records(params, cfg, qcfg, acts, calib_omni,
+                                       (3,) if fast else (3, 4))
+
+        bundle_path = os.path.join(out_dir, f"{mname}.mobiq")
+        print(f"[aot] writing {bundle_path}", flush=True)
+        build_bundle(bundle_path, params, cfg, qcfg, calib_mobiq, statics,
+                     summary, golden_tokens)
+
+        hlo_dir = os.path.join(out_dir, "hlo")
+        print(f"[aot] lowering HLO modules for {mname}", flush=True)
+        lower_model_hlos(hlo_dir, mname, params, cfg, qcfg, calib_mobiq)
+        manifest["models"].append(mname)
+        manifest["elapsed"][mname] = time.time() - t0
+
+    if ablations:
+        run_ablations(out_dir, corpus_dir, qcfg, fast)
+
+    # compatibility alias expected by the Makefile dependency rule
+    first_hlo = os.path.join(out_dir, "hlo", f"{models[0]}_fp.hlo.txt")
+    alias = os.path.join(out_dir, "model.hlo.txt")
+    if os.path.exists(first_hlo):
+        with open(first_hlo) as src, open(alias, "w") as dst:
+            dst.write(src.read())
+
+    json.dump(manifest, open(marker, "w"), indent=1)
+    print(f"[aot] DONE in {time.time() - t0:.0f}s", flush=True)
+
+
+def _calib_tokens(corpus_dir, domain, qcfg, fast):
+    with open(os.path.join(corpus_dir, f"{domain}.train.txt")) as f:
+        stream = corpus.tokenize(f.read())
+    n = 24 if fast else qcfg.nsamples
+    seq = 64 if fast else qcfg.seq_len
+    rng = np.random.default_rng(7)
+    starts = rng.integers(0, len(stream) - seq - 1, size=n)
+    return np.stack([stream[s:s + seq] for s in starts])
+
+
+def run_ablations(out_dir, corpus_dir, qcfg, fast):
+    """App. D ablations on tiny-s: schedules x target bits x calib set."""
+    abl_dir = os.path.join(out_dir, "ablations")
+    os.makedirs(abl_dir, exist_ok=True)
+    cfg = MODEL_ZOO["tiny-s"]
+    ckpt = os.path.join(out_dir, "ckpt_tiny-s.npz")
+    params = pretrain.load_params(ckpt)
+    summary = json.load(open(ckpt + ".json"))
+    golden_tokens = corpus.tokenize(
+        corpus.generate("wiki", 4096, seed=1234))[:64].astype(np.int32)
+    # ablations retrain the router 13x on tiny-s: keep each job short
+    s1, s2 = (8, 20) if fast else (12, 40)
+
+    jobs = []
+    for sched in SCHEDULES:                       # Fig. 8
+        jobs.append((f"sched_{sched}", dict(schedule=sched), "wiki"))
+    for tb in (2.5, 3.0, 3.5, 4.0, 5.0):          # Fig. 9
+        jobs.append((f"target_{tb}", dict(target_bits=tb), "wiki"))
+    for dom in ("wiki", "web", "news", "mix"):    # Tab. 3
+        jobs.append((f"calib_{dom}", dict(), dom))
+
+    for tag, kwargs, dom in jobs:
+        path = os.path.join(abl_dir, f"tiny-s_{tag}.mobiq")
+        if os.path.exists(path):
+            continue
+        print(f"[aot] ablation {tag}", flush=True)
+        if dom == "mix":
+            toks = np.concatenate([
+                _calib_tokens(corpus_dir, d, qcfg, fast)[:qcfg.nsamples // 3]
+                for d in ("wiki", "web", "news")])
+        else:
+            toks = _calib_tokens(corpus_dir, dom, qcfg, fast)
+        cres = calibrate(params, cfg, qcfg, toks, mode="mobiq",
+                         stage1_steps=s1, stage2_steps=s2, verbose=False,
+                         **kwargs)
+        build_bundle(path, params, cfg, qcfg, cres, {}, summary,
+                     golden_tokens)
+
+
+def relower_from_bundle(out_dir: str, mname: str, seq_len: int = 128):
+    """Re-lower all HLO modules for a model from its existing bundle
+    (no recalibration): used after fixing the HLO printer and whenever
+    only the lowering code changes."""
+    from .export import read_bundle
+    from .quant.mobislice import unpack_bitplanes, residual_params
+    from .quant.quantizer import GroupQuantParams, dequantize
+
+    cfg = MODEL_ZOO[mname]
+    qcfg = QuantConfig()
+    params = pretrain.load_params(os.path.join(out_dir,
+                                               f"ckpt_{mname}.npz"))
+    _, tensors = read_bundle(os.path.join(out_dir, f"{mname}.mobiq"))
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    spec = jax.ShapeDtypeStruct((seq_len,), jnp.int32)
+
+    def fp_fn(tokens):
+        return (model_mod.forward(params, tokens, cfg),)
+    lower_to_file(fp_fn, (spec,),
+                  os.path.join(hlo_dir, f"{mname}_fp.hlo.txt"))
+
+    def recon(li, name, k):
+        pre = f"mobiq.layers.{li}.{name}"
+        d_in = params["layers"][li][name].shape[0]
+        base = GroupQuantParams(jnp.asarray(tensors[f"{pre}.scale"]),
+                                jnp.asarray(tensors[f"{pre}.zero"]),
+                                qcfg.slice_bits, qcfg.group_size)
+        acc = None
+        for e in range(k):
+            codes = unpack_bitplanes(
+                tensors[f"{pre}.slice{e}.planes"].astype(np.uint64), d_in)
+            deq = dequantize(jnp.asarray(codes),
+                             residual_params(base, e + 1, qcfg.slice_bits))
+            acc = deq if acc is None else acc + deq
+        return acc
+
+    for k in range(1, qcfg.n_slices + 1):
+        qp = {**params, "layers": [
+            {**lp, **{n: recon(li, n, k) for n in LINEARS}}
+            for li, lp in enumerate(params["layers"])]}
+
+        def q_fn(tokens, qp=qp):
+            return (model_mod.forward(qp, tokens, cfg),)
+        bits = k * qcfg.slice_bits
+        lower_to_file(q_fn, (spec,),
+                      os.path.join(hlo_dir, f"{mname}_q{bits}.hlo.txt"))
+
+    # kernel + router modules
+    d = cfg.d_model
+    t = 16
+    xspec = jax.ShapeDtypeStruct((t, d), jnp.float32)
+    pspec = jax.ShapeDtypeStruct(
+        (qcfg.n_slices, qcfg.slice_bits, d // 32, d), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((d // qcfg.group_size, d), jnp.float32)
+    mspec = jax.ShapeDtypeStruct((t, qcfg.n_slices), jnp.float32)
+
+    def kernel_fn(x, planes, scale, zero, mask):
+        return (mobislice_matmul(x, planes, scale, zero, mask,
+                                 slice_bits=qcfg.slice_bits,
+                                 group_size=qcfg.group_size,
+                                 tile_m=t, tile_n=d),)
+    lower_to_file(kernel_fn, (xspec, pspec, sspec, sspec, mspec),
+                  os.path.join(hlo_dir, f"{mname}_kernel.hlo.txt"))
+
+    pre = "mobiq.layers.0.wq"
+    w1 = jnp.asarray(tensors[f"{pre}.router.w1"])
+    b1 = jnp.asarray(tensors[f"{pre}.router.b1"])
+    w2 = jnp.asarray(tensors[f"{pre}.router.w2"])
+    b2 = jnp.asarray(tensors[f"{pre}.router.b2"])
+
+    def router_fn(x):
+        return (jax.nn.relu(x @ w1 + b1) @ w2 + b2,)
+    lower_to_file(router_fn, (jax.ShapeDtypeStruct((t, d), jnp.float32),),
+                  os.path.join(hlo_dir, f"{mname}_router.hlo.txt"))
+    print(f"[aot] relowered HLO modules for {mname}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="(legacy) single-HLO alias path; implied by out-dir")
+    ap.add_argument("--models", default="tiny-s,tiny-m")
+    ap.add_argument("--ablations", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke-scale build for CI/tests")
+    ap.add_argument("--relower", action="store_true",
+                    help="re-lower HLO modules from existing bundles only")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or out_dir
+    if args.relower:
+        for m in args.models.split(","):
+            relower_from_bundle(out_dir, m)
+        return
+    run(out_dir, args.models.split(","), args.ablations, args.force,
+        args.fast)
+
+
+if __name__ == "__main__":
+    main()

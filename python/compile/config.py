@@ -1,0 +1,95 @@
+"""Model / quantization configuration for the MoBiQuant reproduction.
+
+The paper evaluates LLaMA-2-7B/13B, LLaMA-3-8B and LLaMA-3.2-1B/3B.  Those
+checkpoints (and the A100s to run them) are not available in this environment,
+so we substitute a family of LLaMA-architecture transformers pretrained from
+scratch on synthetic corpora (see DESIGN.md §2).  The mapping used throughout
+the benches:
+
+    tiny-s   <->  LLaMA-3.2-1B   (smallest member)
+    tiny-m   <->  LLaMA-2-7B     (default / headline model)
+    tiny-l   <->  LLaMA-2-13B
+    tiny-gqa <->  Mistral-7B     (grouped-query attention, App. E.2)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder-only transformer dimensions."""
+
+    name: str = "tiny-m"
+    vocab_size: int = 256          # byte-level tokenizer
+    d_model: int = 160
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4            # < n_heads => grouped-query attention
+    d_ff: int = 448                # SwiGLU hidden size
+    max_seq_len: int = 256
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        per_layer = (
+            2 * d * d                                   # wq, wo
+            + 2 * d * (self.n_kv_heads * self.head_dim) # wk, wv
+            + 3 * d * f                                 # gate, up, down
+            + 2 * d                                     # norms
+        )
+        return v * d + self.n_layers * per_layer + d + d * v
+
+    def linear_names(self) -> List[str]:
+        return ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """MoBiSlice / MoBiRoute hyper-parameters (paper §4, App. C.1)."""
+
+    n_slices: int = 4              # E
+    slice_bits: int = 2            # b_e (uniform, paper default "2 2 2 2")
+    group_size: int = 32           # input-dim group for shared scales
+                                   # (paper uses 128 at d=4096; scaled down)
+    router_hidden: int = 16        # 2-layer MLP hidden width
+    target_bits: float = 3.0       # training target budget b (App. D.3)
+    init_bits: float = 8.0         # b_init in the budget schedule (Eq. 7)
+    reg_lambda: float = 1.0e-3     # lambda in Eq. 9
+    epochs: int = 24               # per-layer calibration epochs (Alg. 1)
+    stage1_epochs: int = 10        # first-slice stabilisation epochs
+    nsamples: int = 96             # calibration sequences
+    seq_len: int = 128             # calibration sequence length
+    lwc_lr: float = 5.0e-3         # learnable-weight-clipping LR
+    mobi_lr: float = 2.0e-3        # router + slice params LR
+    schedule: str = "log"          # budget schedule (App. D.2)
+
+    @property
+    def max_bits(self) -> int:
+        return self.n_slices * self.slice_bits
+
+    @property
+    def base_bits(self) -> int:
+        return self.slice_bits       # shared-expert MSB slice
+
+
+MODEL_ZOO = {
+    "tiny-s": ModelConfig(name="tiny-s", d_model=96, n_layers=2, n_heads=4,
+                          n_kv_heads=4, d_ff=256),
+    "tiny-m": ModelConfig(name="tiny-m"),
+    "tiny-l": ModelConfig(name="tiny-l", d_model=224, n_layers=6, n_heads=4,
+                          n_kv_heads=4, d_ff=608),
+    "tiny-gqa": ModelConfig(name="tiny-gqa", d_model=160, n_layers=4,
+                            n_heads=4, n_kv_heads=2, d_ff=448),
+}
+
+# Pretraining step budget per model (1-core CPU budget; see DESIGN.md).
+PRETRAIN_STEPS = {"tiny-s": 400, "tiny-m": 700, "tiny-l": 700, "tiny-gqa": 500}

@@ -1,0 +1,182 @@
+"""Synthetic corpora standing in for WikiText2 / C4 / PTB (DESIGN.md §2).
+
+Three stochastic grammars with distinct token statistics:
+
+  * ``wiki`` — clean encyclopedic declaratives (WikiText2 analogue).
+  * ``web``  — noisy web text with urls, fragments, casing noise (C4).
+  * ``news`` — templated newswire with numbers and quotes (PTB).
+
+All generation is deterministic given the seed, so `make artifacts` is
+reproducible and the Rust side can rely on byte-identical files.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+from typing import List
+
+# ---------------------------------------------------------------------------
+# Shared vocabulary pools
+# ---------------------------------------------------------------------------
+
+_ENTITIES = [
+    "the river", "the valley", "the observatory", "the republic", "the canal",
+    "the archive", "the cathedral", "the railway", "the glacier", "the harbor",
+    "the parliament", "the reactor", "the telescope", "the monastery",
+    "the festival", "the dynasty", "the plateau", "the aqueduct",
+]
+_PROPER = [
+    "Avaria", "Borun", "Cadell", "Doriath", "Elmsworth", "Farrow", "Galdin",
+    "Hale", "Istria", "Jorvik", "Kessel", "Lorane", "Mirefold", "Norwind",
+    "Ostia", "Peralt", "Quillon", "Ravenna", "Solmere", "Tarvos",
+]
+_VERBS_PAST = [
+    "was founded", "was completed", "was abandoned", "was restored",
+    "was documented", "expanded", "declined", "flourished", "was surveyed",
+    "was rebuilt", "was annexed", "was electrified",
+]
+_ADJ = [
+    "ancient", "remote", "industrial", "coastal", "fortified", "celebrated",
+    "obscure", "prosperous", "arid", "volcanic", "medieval", "northern",
+]
+_NOUNS = [
+    "settlement", "region", "institution", "structure", "expedition",
+    "province", "network", "tradition", "reservoir", "manuscript",
+    "observatory", "census", "trade route", "irrigation system",
+]
+_YEARS = list(range(1201, 1999, 7))
+_TOPICS = [
+    "trade", "astronomy", "agriculture", "navigation", "metallurgy",
+    "cartography", "weaving", "printing", "shipbuilding", "medicine",
+]
+_CITIES = ["Avaria", "Borun", "Ostia", "Tarvos", "Kessel", "Lorane"]
+_AGENCIES = ["the ministry", "the council", "the bureau", "the commission",
+             "the exchange", "the port authority"]
+_COMMODITIES = ["grain", "copper", "timber", "salt", "wool", "amber", "tin"]
+
+
+def _wiki_sentence(rng: random.Random) -> str:
+    p = rng.random()
+    if p < 0.25:
+        return (f"{rng.choice(_PROPER)} is a {rng.choice(_ADJ)} "
+                f"{rng.choice(_NOUNS)} near {rng.choice(_ENTITIES)}.")
+    if p < 0.5:
+        return (f"{rng.choice(_ENTITIES).capitalize()} of "
+                f"{rng.choice(_PROPER)} {rng.choice(_VERBS_PAST)} in "
+                f"{rng.choice(_YEARS)}.")
+    if p < 0.7:
+        return (f"The {rng.choice(_NOUNS)} {rng.choice(_VERBS_PAST)} during "
+                f"the {rng.choice(_ADJ)} period and became a center of "
+                f"{rng.choice(_TOPICS)}.")
+    if p < 0.85:
+        return (f"In {rng.choice(_YEARS)}, {rng.choice(_PROPER)} "
+                f"{rng.choice(_VERBS_PAST)}, linking {rng.choice(_ENTITIES)} "
+                f"with {rng.choice(_ENTITIES)}.")
+    return (f"Early records describe the {rng.choice(_ADJ)} "
+            f"{rng.choice(_NOUNS)} as devoted to {rng.choice(_TOPICS)} "
+            f"and {rng.choice(_TOPICS)}.")
+
+
+def _wiki_doc(rng: random.Random) -> str:
+    title = f"= {rng.choice(_PROPER)} {rng.choice(_NOUNS).title()} ="
+    body = " ".join(_wiki_sentence(rng) for _ in range(rng.randint(4, 9)))
+    return f"{title}\n{body}\n"
+
+
+_URL_BITS = ["shop", "blog", "forum", "wiki", "news", "app", "dev", "mail"]
+_WEB_FRAGS = [
+    "click here to read more", "sign up for the newsletter",
+    "posted by admin", "leave a comment below", "terms and conditions apply",
+    "free shipping on orders over 50", "updated last tuesday",
+    "this post has been archived", "error 404 page not found",
+    "cookies are required to continue",
+]
+
+
+def _web_doc(rng: random.Random) -> str:
+    parts: List[str] = []
+    for _ in range(rng.randint(3, 7)):
+        p = rng.random()
+        if p < 0.2:
+            parts.append(
+                f"www.{rng.choice(_URL_BITS)}{rng.randint(1, 99)}."
+                f"{rng.choice(['com', 'net', 'org'])}/"
+                f"{rng.choice(_URL_BITS)}")
+        elif p < 0.45:
+            frag = rng.choice(_WEB_FRAGS)
+            parts.append(frag.upper() if rng.random() < 0.15 else frag)
+        elif p < 0.7:
+            parts.append(
+                f"{rng.choice(_COMMODITIES)} {rng.choice(['sale', 'review', 'guide'])}"
+                f" {rng.randint(2, 9)} stars rated by {rng.randint(3, 900)} users")
+        else:
+            s = _wiki_sentence(rng).lower()
+            parts.append(s.rstrip(".") + rng.choice(["...", "!!", ".", " >>"]))
+    return " | ".join(parts) + "\n"
+
+
+def _news_sentence(rng: random.Random) -> str:
+    p = rng.random()
+    if p < 0.3:
+        return (f"{rng.choice(_AGENCIES).capitalize()} of "
+                f"{rng.choice(_CITIES)} said {rng.choice(_COMMODITIES)} "
+                f"prices rose {rng.randint(1, 19)} percent.")
+    if p < 0.55:
+        return (f"Officials in {rng.choice(_CITIES)} reported that the "
+                f"{rng.choice(_NOUNS)} would require "
+                f"{rng.randint(2, 80)} million to restore.")
+    if p < 0.8:
+        return (f"\"The {rng.choice(_NOUNS)} remains {rng.choice(_ADJ)},\" "
+                f"a spokesman for {rng.choice(_AGENCIES)} said.")
+    return (f"Trading in {rng.choice(_COMMODITIES)} closed "
+            f"{rng.choice(['up', 'down'])} {rng.randint(1, 9)}."
+            f"{rng.randint(0, 9)} points in {rng.choice(_CITIES)}.")
+
+
+def _news_doc(rng: random.Random) -> str:
+    dateline = f"{rng.choice(_CITIES).upper()} -- "
+    return dateline + " ".join(
+        _news_sentence(rng) for _ in range(rng.randint(3, 6))) + "\n"
+
+
+_GENERATORS = {"wiki": _wiki_doc, "web": _web_doc, "news": _news_doc}
+
+
+def _stable_seed(domain: str, seed: int) -> int:
+    """Deterministic across processes (python's hash() is salted)."""
+    h = 2166136261
+    for b in f"{domain}:{seed}".encode():
+        h = ((h ^ b) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def generate(domain: str, n_chars: int, seed: int = 0) -> str:
+    """Generate at least ``n_chars`` characters of ``domain`` text."""
+    rng = random.Random(_stable_seed(domain, seed))
+    gen = _GENERATORS[domain]
+    out: List[str] = []
+    total = 0
+    while total < n_chars:
+        doc = gen(rng)
+        out.append(doc)
+        total += len(doc)
+    return "".join(out)
+
+
+def write_corpora(out_dir: str, train_chars: int = 900_000,
+                  valid_chars: int = 60_000, seed: int = 0) -> None:
+    """Write {wiki,web,news}.{train,valid}.txt under ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    for domain in _GENERATORS:
+        for split, n in (("train", train_chars), ("valid", valid_chars)):
+            path = os.path.join(out_dir, f"{domain}.{split}.txt")
+            text = generate(domain, n, seed=seed + (1 if split == "valid" else 0) * 7919)
+            with open(path, "w") as f:
+                f.write(text)
+
+
+def tokenize(text: str) -> "np.ndarray":  # noqa: F821 - forward numpy ref
+    """Byte-level tokenization: vocab = 256 raw bytes."""
+    import numpy as np
+    return np.frombuffer(text.encode("utf-8", errors="replace"), dtype=np.uint8)

@@ -1,0 +1,153 @@
+""".mobiq artifact bundle writer.
+
+Binary layout (little-endian, parsed by rust/src/mobiq/artifact.rs):
+
+    bytes 0..8    magic  b"MOBIQ1\\0\\0"
+    bytes 8..16   u64    manifest_len (JSON, utf-8)
+    bytes 16..16+manifest_len   JSON manifest
+    then, 8-byte aligned, the raw tensor blob.
+
+The manifest carries the model/quant configs plus a tensor directory:
+``{"tensors": {name: {"dtype": "f32|u8|i32|u64", "shape": [...],
+"offset": int, "nbytes": int}}, ...}`` with offsets relative to the blob
+start.  Everything the Rust engine needs at runtime — FP weights, MoBiSlice
+bit-planes + shared scales, routers + threshold quantiles, static-PTQ
+baseline records, golden vectors — lives in one self-contained file, so the
+request path never touches Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+MAGIC = b"MOBIQ1\x00\x00"
+_DTYPES = {"f32": np.float32, "u8": np.uint8, "i32": np.int32,
+           "u64": np.uint64}
+
+
+class BundleWriter:
+    def __init__(self) -> None:
+        self._tensors: Dict[str, np.ndarray] = {}
+        self.meta: Dict[str, object] = {}
+
+    def add(self, name: str, arr: np.ndarray) -> None:
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        assert name not in self._tensors, f"duplicate tensor {name}"
+        self._tensors[name] = arr
+
+    def write(self, path: str) -> None:
+        directory = {}
+        blobs: List[bytes] = []
+        offset = 0
+        for name, arr in self._tensors.items():
+            dt = {np.dtype(np.float32): "f32", np.dtype(np.uint8): "u8",
+                  np.dtype(np.int32): "i32",
+                  np.dtype(np.uint64): "u64"}[arr.dtype]
+            raw = arr.tobytes()
+            pad = (-len(raw)) % 8
+            directory[name] = {"dtype": dt, "shape": list(arr.shape),
+                               "offset": offset, "nbytes": len(raw)}
+            blobs.append(raw + b"\x00" * pad)
+            offset += len(raw) + pad
+        manifest = dict(self.meta)
+        manifest["tensors"] = directory
+        mjson = json.dumps(manifest).encode("utf-8")
+        mpad = (-(16 + len(mjson))) % 8
+        with open(path, "wb") as f:
+            f.write(MAGIC)
+            f.write(np.uint64(len(mjson) + mpad).tobytes())
+            f.write(mjson + b" " * mpad)
+            for b in blobs:
+                f.write(b)
+
+
+def read_bundle(path: str):
+    """Python-side reader (tests / analysis)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC
+    mlen = int(np.frombuffer(data[8:16], np.uint64)[0])
+    manifest = json.loads(data[16:16 + mlen].decode("utf-8"))
+    blob = data[16 + mlen:]
+    tensors = {}
+    for name, info in manifest["tensors"].items():
+        dt = _DTYPES[info["dtype"]]
+        raw = blob[info["offset"]:info["offset"] + info["nbytes"]]
+        tensors[name] = np.frombuffer(raw, dt).reshape(info["shape"]).copy()
+    return manifest, tensors
+
+
+# ---------------------------------------------------------------------------
+# Assembly helpers
+# ---------------------------------------------------------------------------
+
+def add_fp_params(w: BundleWriter, params) -> None:
+    w.add("fp.embed", np.asarray(params["embed"]))
+    w.add("fp.final_norm", np.asarray(params["final_norm"]))
+    w.add("fp.lm_head", np.asarray(params["lm_head"]))
+    for i, lp in enumerate(params["layers"]):
+        for name, v in lp.items():
+            w.add(f"fp.layers.{i}.{name}", np.asarray(v))
+
+
+def add_mobiq(w: BundleWriter, params, calib, qcfg) -> None:
+    """MoBiSlice bit-planes + shared scales + routers from a CalibResult."""
+    from .quant import mobislice
+    from .quant.calibrate import clipped_params, LINEARS
+
+    for i, (lp, lc) in enumerate(zip(params["layers"], calib.layers)):
+        for name in LINEARS:
+            wmat = np.asarray(lp[name])
+            cal = lc[name]
+            base = clipped_params(
+                np.asarray(wmat), cal.clip_lo, cal.clip_hi,
+                qcfg.slice_bits, qcfg.group_size)
+            sw = mobislice.decompose(wmat, base, qcfg.n_slices,
+                                     qcfg.slice_bits)
+            pre = f"mobiq.layers.{i}.{name}"
+            for e, codes in enumerate(sw.codes):
+                planes = mobislice.pack_bitplanes(np.asarray(codes),
+                                                  qcfg.slice_bits)
+                w.add(f"{pre}.slice{e}.planes", planes)
+            w.add(f"{pre}.scale", np.asarray(base.scale, np.float32))
+            w.add(f"{pre}.zero", np.asarray(base.zero, np.float32))
+            w.add(f"{pre}.router.w1", cal.router["w1"])
+            w.add(f"{pre}.router.b1", cal.router["b1"])
+            w.add(f"{pre}.router.w2", cal.router["w2"])
+            w.add(f"{pre}.router.b2", cal.router["b2"])
+            w.add(f"{pre}.quantiles", cal.quantiles)
+            w.add(f"{pre}.score_sample", cal.score_sample)
+
+
+def add_static_record(w: BundleWriter, method: str, layer: int, name: str,
+                      rec) -> None:
+    pre = f"static.{method}.layers.{layer}.{name}"
+    w.add(f"{pre}.codes", rec.codes)
+    w.add(f"{pre}.scale", rec.scale)
+    w.add(f"{pre}.zero", rec.zero)
+    w.add(f"{pre}.act_scale", rec.act_scale)
+
+
+def static_meta(method: str, bits: int, transform: str) -> Dict:
+    return {"method": method, "bits": bits, "transform": transform}
+
+
+def add_golden(w: BundleWriter, tokens: np.ndarray,
+               logits: Dict[str, np.ndarray]) -> None:
+    w.add("golden.tokens", tokens.astype(np.int32))
+    for k, v in logits.items():
+        w.add(f"golden.{k}", v.astype(np.float32))
+
+
+def model_meta(cfg, qcfg) -> Dict:
+    return {"model": dataclasses.asdict(cfg),
+            "quant": dataclasses.asdict(qcfg)}

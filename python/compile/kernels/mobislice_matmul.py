@@ -1,0 +1,154 @@
+"""L1 — Pallas kernel: token-adaptive MoBiSlice bit-sliced matmul (§4.3).
+
+CUDA -> TPU rethink (DESIGN.md §Hardware-Adaptation): the paper's A100
+kernel does warp-level BMMA on bit-planes with shared-memory staging and
+CUDA-stream slice overlap.  Here:
+
+  * bit-planes live in HBM as int32 words packed along d_in; each grid step
+    stages only the planes of ONE slice into VMEM (BlockSpec index map on
+    the slice axis == the paper's "fetch only the required slices"),
+  * the VPU unpacks words to {0,1} lanes with shift/AND and reconstructs the
+    slice's integer codes, then a single MXU matmul x_tile @ deq_tile
+    replaces tensor-core WMMA,
+  * the slice axis is the innermost grid dimension, so Pallas double-buffers
+    consecutive slices — the TPU analogue of overlapping CUDA streams,
+  * per-token routing enters as a (T, E) mask multiplying the accumulated
+    partial product; token permutation happens host-side (L3) exactly as
+    the paper permutes before kernel launch.
+
+interpret=True always: real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute.  Numerics are pinned to kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, planes_ref, scale_ref, zero_ref, mask_ref, o_ref, *,
+            slice_bits: int, group_size: int, n_slices: int):
+    """One grid step: accumulate slice e's masked partial product.
+
+    Block shapes (leading slice axis is blocked to 1):
+      x_ref:      (TM, K)            f32
+      planes_ref: (1, slice_bits, K // 32, TN) int32
+      scale_ref:  (K // group_size, TN) f32   (base slice scale)
+      zero_ref:   (K // group_size, TN) f32   (base slice zero)
+      mask_ref:   (TM, 1)            f32      (this slice's token gates)
+      o_ref:      (TM, TN)           f32      (revisited across slices)
+    """
+    e = pl.program_id(2)
+    x = x_ref[...]
+    words = planes_ref[0].astype(jnp.uint32)       # (B, K//32, TN)
+    n_words = words.shape[1]
+    tn = words.shape[2]
+    k = n_words * 32
+
+    # --- VPU unpack: words -> integer codes (K, TN) ----------------------
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+    bits = (words[:, :, None, :] >> shifts) & jnp.uint32(1)
+    codes = jnp.zeros((n_words, 32, tn), jnp.uint32)
+    for p in range(slice_bits):
+        codes = codes | (bits[p] << jnp.uint32(p))
+    q = codes.reshape(k, tn).astype(jnp.float32)
+
+    # --- shared-scale dequantization (Eq. 14): s_e = s_1 / 2^{b e} -------
+    s1 = scale_ref[...]
+    z1 = zero_ref[...]
+    z_resid = jnp.full_like(z1, float(2 ** (slice_bits - 1)))
+    shift = jnp.exp2(-(slice_bits * e).astype(jnp.float32))
+    s_e = s1 * shift
+    z_e = jnp.where(e == 0, z1, z_resid)
+    qg = q.reshape(k // group_size, group_size, tn)
+    w = (s_e[:, None, :] * (qg - z_e[:, None, :] + 0.5)).reshape(k, tn)
+
+    # --- MXU matmul + token gating + cross-slice accumulate --------------
+    partial = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    partial = partial * mask_ref[...]
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(e != 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("slice_bits", "group_size",
+                                             "tile_m", "tile_n"))
+def mobislice_matmul(x: jnp.ndarray, planes: jnp.ndarray,
+                     base_scale: jnp.ndarray, base_zero: jnp.ndarray,
+                     mask: jnp.ndarray, *, slice_bits: int = 2,
+                     group_size: int = 32, tile_m: int = 128,
+                     tile_n: int = 128) -> jnp.ndarray:
+    """Token-adaptive bit-sliced matmul.
+
+    x:          (T, K) f32 activations
+    planes:     (E, slice_bits, K // 32, N) int32 packed bit-planes
+    base_scale: (K // group_size, N) f32 shared slice-1 scale
+    base_zero:  (K // group_size, N) f32 shared slice-1 zero
+    mask:       (T, E) f32 router gates, mask[:, 0] == 1
+    -> y: (T, N) f32
+    """
+    t, k = x.shape
+    n_slices, sb, n_words, n = planes.shape
+    assert sb == slice_bits and n_words * 32 == k
+    tm = min(tile_m, t)
+    tn = min(tile_n, n)
+    assert t % tm == 0 and n % tn == 0, "pad T/N to tile multiples host-side"
+    # slice axis innermost: consecutive revisits of the same output block
+    # accumulate while Pallas double-buffers the next slice's planes.
+    grid = (t // tm, n // tn, n_slices)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, slice_bits=slice_bits,
+                          group_size=group_size, n_slices=n_slices),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j, e: (i, 0)),
+            pl.BlockSpec((1, slice_bits, n_words, tn),
+                         lambda i, j, e: (e, 0, 0, j)),
+            pl.BlockSpec((k // group_size, tn), lambda i, j, e: (0, j)),
+            pl.BlockSpec((k // group_size, tn), lambda i, j, e: (0, j)),
+            pl.BlockSpec((tm, 1), lambda i, j, e: (i, e)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, e: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(x, planes, base_scale, base_zero, mask)
+
+
+def vmem_footprint_bytes(k: int, tile_m: int, tile_n: int, slice_bits: int,
+                         group_size: int) -> int:
+    """Static VMEM footprint estimate for DESIGN.md/EXPERIMENTS.md §Perf.
+
+    Counts the resident blocks of one grid step (x tile, one slice's plane
+    words, scale/zero tiles, mask column, output tile) plus the unpacked
+    code tile the kernel materialises.
+    """
+    f32 = 4
+    x_tile = tile_m * k * f32
+    planes = slice_bits * (k // 32) * tile_n * 4
+    scales = 2 * (k // group_size) * tile_n * f32
+    maskb = tile_m * f32
+    out = tile_m * tile_n * f32
+    unpacked = k * tile_n * f32
+    return x_tile + planes + scales + maskb + out + unpacked
+
+
+def mxu_utilization_estimate(k: int, tile_m: int, tile_n: int,
+                             slice_bits: int) -> float:
+    """Fraction of a grid step spent on MXU-shaped work vs VPU unpack.
+
+    MXU: tm*k*tn MACs; VPU unpack: ~32 ops per word * (slice_bits * k/32
+    * tn) words-lanes => k*tn*slice_bits.  Utilization ~ MXU/(MXU + VPU/8)
+    with the VPU's 8-wide disadvantage folded in.
+    """
+    mxu = tile_m * k * tile_n
+    vpu = k * tile_n * slice_bits * 4.0
+    return mxu / (mxu + vpu / 8.0)

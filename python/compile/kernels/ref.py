@@ -1,0 +1,96 @@
+"""Pure-jnp oracle for the MoBiSlice token-adaptive bit-sliced matmul.
+
+This is the CORE correctness signal for the L1 Pallas kernel: pytest sweeps
+shapes/dtypes/masks (python/tests/test_kernel.py) and asserts allclose
+between ``mobislice_matmul`` (Pallas, interpret mode) and ``ref_matmul``.
+
+Semantics (paper Eq. 3 + Eq. 6): with E bit slices of ``slice_bits`` each,
+per-token slice mask m (m[:, 0] == 1, the shared expert):
+
+    y[t] = sum_e m[t, e] * (x[t] @ deq_e(codes_e))
+    deq_e = s_e * (q_e - z_e + 0.5),  s_e = s_1 / 2^{b*e},  z_e = 2^{b-1}
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def slice_scale_zero(base_scale: jnp.ndarray, base_zero: jnp.ndarray,
+                     e: int, slice_bits: int):
+    """Derived (scale, zero) of slice index e (0-based; e=0 is the base)."""
+    if e == 0:
+        return base_scale, base_zero
+    s = base_scale / float(2 ** (slice_bits * e))
+    z = jnp.full_like(base_zero, float(2 ** (slice_bits - 1)))
+    return s, z
+
+
+def dequant_slice(codes_e: jnp.ndarray, base_scale: jnp.ndarray,
+                  base_zero: jnp.ndarray, e: int, slice_bits: int,
+                  group_size: int) -> jnp.ndarray:
+    """codes_e: (d_in, d_out) ints -> dequantized f32 weights."""
+    d_in, d_out = codes_e.shape
+    s, z = slice_scale_zero(base_scale, base_zero, e, slice_bits)
+    q = codes_e.astype(jnp.float32).reshape(-1, group_size, d_out)
+    deq = s[:, None, :] * (q - z[:, None, :] + 0.5)
+    return deq.reshape(d_in, d_out)
+
+
+def ref_matmul(x: jnp.ndarray, codes: jnp.ndarray, base_scale: jnp.ndarray,
+               base_zero: jnp.ndarray, mask: jnp.ndarray, slice_bits: int,
+               group_size: int) -> jnp.ndarray:
+    """Oracle for the kernel.
+
+    x: (T, d_in) f32; codes: (E, d_in, d_out) int32;
+    base_scale/zero: (n_groups, d_out) f32; mask: (T, E) f32 (mask[:,0]=1).
+    """
+    n_slices = codes.shape[0]
+    y = jnp.zeros((x.shape[0], codes.shape[2]), jnp.float32)
+    for e in range(n_slices):
+        w = dequant_slice(codes[e], base_scale, base_zero, e, slice_bits,
+                          group_size)
+        y = y + (x * mask[:, e:e + 1]) @ w
+    return y
+
+
+def pack_words(codes: np.ndarray, slice_bits: int) -> np.ndarray:
+    """Pack codes (E, d_in, d_out) into int32 bit-plane words for the
+    Pallas kernel: (E, slice_bits, d_in // 32, d_out), bit j of word w of
+    plane p = bit p of codes[e, w*32 + j, o].
+
+    This is the TPU-facing layout (32-lane int words feeding the VPU
+    unpack); the Rust engine uses the 64-bit analogue from
+    quant/mobislice.pack_bitplanes.
+    """
+    codes = np.asarray(codes)
+    n_slices, d_in, d_out = codes.shape
+    assert d_in % 32 == 0, "d_in must be a multiple of 32 for int32 packing"
+    planes = np.zeros((n_slices, slice_bits, d_in // 32, d_out),
+                      dtype=np.int64)
+    for e in range(n_slices):
+        for p in range(slice_bits):
+            bits = (codes[e] >> p) & 1                 # (d_in, d_out)
+            chunks = bits.reshape(d_in // 32, 32, d_out).astype(np.int64)
+            shifts = np.arange(32, dtype=np.int64)[None, :, None]
+            planes[e, p] = np.sum(chunks << shifts, axis=1)
+    # store as int32 bit pattern (word with bit 31 set becomes negative)
+    return (planes & 0xFFFFFFFF).astype(np.uint32).view(np.int32).reshape(
+        n_slices, slice_bits, d_in // 32, d_out)
+
+
+def unpack_words(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of pack_words in jnp (used inside the kernel and in tests):
+    (E, B, d_in//32, d_out) int32 -> (E, d_in, d_out) int32 codes."""
+    n_slices, slice_bits, n_words, d_out = planes.shape
+    u = planes.astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    # (E, B, n_words, 32, d_out) bit extraction
+    bits = (u[:, :, :, None, :] >> shifts[None, None, None, :, None]
+            ) & jnp.uint32(1)
+    codes = jnp.zeros((n_slices, n_words * 32, d_out), jnp.uint32)
+    for p in range(slice_bits):
+        codes = codes | (bits[:, p].reshape(n_slices, n_words * 32, d_out)
+                         << jnp.uint32(p))
+    return codes.astype(jnp.int32)

@@ -1,0 +1,204 @@
+"""L2 — LLaMA-style decoder-only transformer in JAX.
+
+This is the compute graph the paper quantizes: RMSNorm, rotary attention
+(optionally grouped-query), SwiGLU MLP.  Every linear goes through the
+``linear_fn`` hook so the quantization stack (python/compile/quant) and the
+Pallas kernel path (python/compile/kernels) can intercept it without
+rewriting the model.
+
+Used at build time only: pretraining (pretrain.py), calibration activations
+(quant/calibrate.py), and AOT lowering (aot.py).  The Rust engine
+re-implements the same forward natively for the request path; golden vectors
+exported by export.py pin the two implementations together.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, object]
+# linear_fn(layer_idx, name, x, W) -> y   with x: (..., d_in), W: (d_in, d_out)
+LinearFn = Callable[[int, str, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _default_linear(layer: int, name: str, x: jnp.ndarray,
+                    w: jnp.ndarray) -> jnp.ndarray:
+    del layer, name
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# Initialisation
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    """Scaled-normal init (GPT-2 style residual scaling)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    dkv = cfg.n_kv_heads * cfg.head_dim
+    keys = iter(jax.random.split(key, 4 + 7 * cfg.n_layers))
+
+    def nrm(k, shape, scale):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    resid_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    layers: List[Dict[str, jnp.ndarray]] = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "wq": nrm(next(keys), (d, d), 0.02),
+            "wk": nrm(next(keys), (d, dkv), 0.02),
+            "wv": nrm(next(keys), (d, dkv), 0.02),
+            "wo": nrm(next(keys), (d, d), resid_scale),
+            "w_gate": nrm(next(keys), (d, f), 0.02),
+            "w_up": nrm(next(keys), (d, f), 0.02),
+            "w_down": nrm(next(keys), (f, d), resid_scale),
+        })
+    return {
+        "embed": nrm(next(keys), (v, d), 0.02),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": nrm(next(keys), (d, v), 0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float,
+                offset: int = 0) -> tuple:
+    """cos/sin tables; pairs (2i, 2i+1) rotated as in LLaMA."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]          # (T, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (T, H, head_dim) with even/odd interleaved pairs."""
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    c = cos[:, None, :]
+    s = sin[:, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x1 * s + x2 * c
+    out = jnp.stack([r1, r2], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], cfg: ModelConfig,
+              layer: int, linear_fn: LinearFn) -> jnp.ndarray:
+    """Causal self-attention over the full sequence.  x: (T, d)."""
+    T = x.shape[0]
+    hd = cfg.head_dim
+    q = linear_fn(layer, "wq", x, lp["wq"]).reshape(T, cfg.n_heads, hd)
+    k = linear_fn(layer, "wk", x, lp["wk"]).reshape(T, cfg.n_kv_heads, hd)
+    v = linear_fn(layer, "wv", x, lp["wv"]).reshape(T, cfg.n_kv_heads, hd)
+    cos, sin = rope_tables(T, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cfg.n_kv_heads != cfg.n_heads:
+        rep = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    # (H, T, T)
+    scores = jnp.einsum("thd,shd->hts", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,shd->thd", probs, v).reshape(T, cfg.d_model)
+    return linear_fn(layer, "wo", ctx, lp["wo"])
+
+
+def mlp(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], cfg: ModelConfig,
+        layer: int, linear_fn: LinearFn) -> jnp.ndarray:
+    g = linear_fn(layer, "w_gate", x, lp["w_gate"])
+    u = linear_fn(layer, "w_up", x, lp["w_up"])
+    return linear_fn(layer, "w_down", jax.nn.silu(g) * u, lp["w_down"])
+
+
+def block(x: jnp.ndarray, lp: Dict[str, jnp.ndarray], cfg: ModelConfig,
+          layer: int, linear_fn: LinearFn) -> jnp.ndarray:
+    x = x + attention(rmsnorm(x, lp["attn_norm"], cfg.norm_eps), lp, cfg,
+                      layer, linear_fn)
+    x = x + mlp(rmsnorm(x, lp["mlp_norm"], cfg.norm_eps), lp, cfg, layer,
+                linear_fn)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Full forward passes
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            linear_fn: Optional[LinearFn] = None) -> jnp.ndarray:
+    """tokens: (T,) int32 -> logits (T, V)."""
+    linear_fn = linear_fn or _default_linear
+    x = params["embed"][tokens]
+    for i, lp in enumerate(params["layers"]):
+        x = block(x, lp, cfg, i, linear_fn)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["lm_head"]
+
+
+def forward_batch(params: Params, tokens: jnp.ndarray,
+                  cfg: ModelConfig) -> jnp.ndarray:
+    """tokens: (B, T) -> logits (B, T, V); pretraining path."""
+    return jax.vmap(lambda t: forward(params, t, cfg))(tokens)
+
+
+def loss_fn(params: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Next-token cross-entropy; tokens: (B, T+1)."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward_batch(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def perplexity(params: Params, tokens, cfg: ModelConfig,
+               linear_fn: Optional[LinearFn] = None,
+               window: int = 128, max_windows: int = 64) -> float:
+    """Sliding non-overlapping window PPL over a 1-D token stream."""
+    import numpy as np
+    tokens = np.asarray(tokens)
+    n = min((tokens.shape[0] - 1) // window, max_windows)
+    total, count = 0.0, 0
+    fwd = jax.jit(lambda t: forward(params, t, cfg, linear_fn))
+    for i in range(n):
+        chunk = jnp.asarray(tokens[i * window:(i + 1) * window + 1].astype("int32"))
+        logits = fwd(chunk[:-1])
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, chunk[1:, None], axis=-1)[:, 0]
+        total += float(jnp.sum(nll))
+        count += window
+    return float(jnp.exp(total / max(count, 1)))
+
+
+def capture_block_inputs(params: Params, tokens: jnp.ndarray,
+                         cfg: ModelConfig):
+    """Per-block residual-stream inputs for layer-wise calibration (Alg. 1).
+
+    tokens: (B, T) int32 -> list over layers of (B, T, d) block inputs.
+    """
+    def single(t):
+        x = params["embed"][t]
+        xs = []
+        for i, lp in enumerate(params["layers"]):
+            xs.append(x)
+            x = block(x, lp, cfg, i, _default_linear)
+        return xs
+    return jax.vmap(single, out_axes=0)(tokens)

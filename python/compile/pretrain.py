@@ -1,0 +1,107 @@
+"""Pretraining of the tiny-llama substitute models (build-time only).
+
+The paper quantizes pretrained LLaMA checkpoints; none are available here,
+so we pretrain the substitute family from scratch on the mixed synthetic
+corpus (DESIGN.md §2).  Hand-rolled Adam with warmup + cosine decay.
+Checkpoints are .npz files consumed by the calibration stack and exporter.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .config import ModelConfig
+from .model import init_params, loss_fn
+from .quant.calibrate import adam_init, adam_update
+
+
+def load_mixed_train(corpus_dir: str) -> np.ndarray:
+    """Concatenate the three domain train sets into one token stream."""
+    streams = []
+    for domain in ("wiki", "web", "news"):
+        path = os.path.join(corpus_dir, f"{domain}.train.txt")
+        with open(path) as f:
+            streams.append(corpus.tokenize(f.read()))
+    return np.concatenate(streams)
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int,
+            seed: int = 0):
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    for _ in range(steps):
+        starts = rng.integers(0, hi, size=batch)
+        yield np.stack([tokens[s:s + seq + 1] for s in starts]).astype(
+            np.int32)
+
+
+def lr_at(step: int, total: int, peak: float = 3e-3,
+          warmup: int = 40) -> float:
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(total - warmup, 1)
+    return peak * 0.5 * (1.0 + np.cos(np.pi * frac))
+
+
+def pretrain(cfg: ModelConfig, corpus_dir: str, steps: int,
+             batch: int = 8, seq: int = 128, seed: int = 0,
+             log_every: int = 50, verbose: bool = True
+             ) -> Tuple[Dict, Dict[str, float]]:
+    """Train from scratch; returns (params, summary)."""
+    tokens = load_mixed_train(corpus_dir)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(jax.value_and_grad(lambda p, t: loss_fn(p, t, cfg)))
+    opt = adam_init(params)
+    t0 = time.time()
+    first_loss, last_loss = None, None
+    curve = []
+    for i, tb in enumerate(batches(tokens, batch, seq, steps, seed)):
+        loss, grads = step_fn(params, jnp.asarray(tb))
+        params, opt = adam_update(params, grads, opt, lr_at(i, steps))
+        last_loss = float(loss)
+        if first_loss is None:
+            first_loss = last_loss
+        if i % log_every == 0:
+            curve.append((i, last_loss))
+            if verbose:
+                print(f"  [pretrain:{cfg.name}] step {i}/{steps} "
+                      f"loss={last_loss:.4f} ({time.time() - t0:.0f}s)",
+                      flush=True)
+    curve.append((steps - 1, last_loss))
+    summary = {"first_loss": first_loss, "final_loss": last_loss,
+               "steps": steps, "seconds": time.time() - t0,
+               "curve": curve}
+    return params, summary
+
+
+def save_params(params: Dict, path: str) -> None:
+    flat = {}
+    flat["embed"] = np.asarray(params["embed"], np.float32)
+    flat["final_norm"] = np.asarray(params["final_norm"], np.float32)
+    flat["lm_head"] = np.asarray(params["lm_head"], np.float32)
+    for i, lp in enumerate(params["layers"]):
+        for k, v in lp.items():
+            flat[f"layers.{i}.{k}"] = np.asarray(v, np.float32)
+    np.savez_compressed(path, **flat)
+
+
+def load_params(path: str) -> Dict:
+    data = np.load(path)
+    n_layers = 1 + max(int(k.split(".")[1]) for k in data.files
+                       if k.startswith("layers."))
+    layers = []
+    for i in range(n_layers):
+        prefix = f"layers.{i}."
+        layers.append({k[len(prefix):]: jnp.asarray(data[k])
+                       for k in data.files if k.startswith(prefix)})
+    return {"embed": jnp.asarray(data["embed"]),
+            "layers": layers,
+            "final_norm": jnp.asarray(data["final_norm"]),
+            "lm_head": jnp.asarray(data["lm_head"])}

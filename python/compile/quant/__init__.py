@@ -1,0 +1,15 @@
+"""MoBiQuant calibration stack (build-time).
+
+Modules:
+  quantizer    — floor-aligned group quantizer (paper Eq. 11-12)
+  mobislice    — recursive residual bit-slice decomposition (Eq. 2-3, App. B)
+  router       — MoBiRoute MLP, annealed gating, budget regularisation
+  schedules    — temperature / budget schedules (App. D.2)
+  calibrate    — Alg. 1 layer-wise joint optimisation (OmniQuant-lite + MoBi)
+  gptq         — GPTQ baseline (Hessian-based column updates)
+  awq          — AWQ baseline (activation-aware scale search)
+  smoothquant  — SmoothQuant baseline (outlier migration into weights)
+  rotation     — QuaRot-lite / SpinQuant-lite Hadamard rotations
+"""
+
+from . import quantizer, mobislice, router, schedules  # noqa: F401

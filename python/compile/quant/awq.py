@@ -1,0 +1,54 @@
+"""AWQ baseline — activation-aware weight quantization (ref. [15]).
+
+Per-input-channel scaling s_j = E[|x_j|]^alpha chosen by grid search to
+minimise the quantized layer-output error.  The scaled weight
+W'[j, :] = s_j * W[j, :] is quantized; at inference the activation is
+divided channel-wise (x'_j = x_j / s_j), which the Rust engine applies via
+the exported ``act_scale`` vector.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .gptq import StaticQuantLinear, dequantize, rtn_record
+
+
+def awq_quantize(w: np.ndarray, x: np.ndarray, bits: int, group_size: int,
+                 n_grid: int = 11) -> StaticQuantLinear:
+    """w: (d_in, d_out); x: (n_tokens, d_in)."""
+    w = np.asarray(w, np.float64)
+    x = np.asarray(x, np.float64)
+    mag = np.mean(np.abs(x), axis=0) + 1e-8          # (d_in,)
+    y_ref = x @ w
+    best_err, best = np.inf, None
+    for alpha in np.linspace(0.0, 1.0, n_grid):
+        s = mag ** alpha
+        s = s / (np.sqrt(s.max() * s.min()) + 1e-12)  # normalise mid-range
+        s = np.maximum(s, 1e-4)
+        rec = rtn_record((w * s[:, None]).astype(np.float32), bits,
+                         group_size)
+        deq = dequantize(rec).astype(np.float64)
+        y = (x / s) @ deq
+        err = float(np.mean((y - y_ref) ** 2))
+        if err < best_err:
+            best_err = err
+            best = rec._replace(act_scale=s.astype(np.float32),
+                                transform="chan_scale")
+    return best
+
+
+def top_outlier_tokens(w: np.ndarray, x: np.ndarray,
+                       rec: StaticQuantLinear, frac: float = 0.1
+                       ) -> np.ndarray:
+    """Indices of the top-``frac`` tokens by per-token quantization error.
+
+    Used by the outlier-migration analyses (Fig. 1 right, App. E.1: the
+    41% / 16% top-outlier overlap numbers).
+    """
+    deq = dequantize(rec).astype(np.float64)
+    y_ref = x @ np.asarray(w, np.float64)
+    y_q = (x / rec.act_scale.astype(np.float64)) @ deq
+    err = np.sum((y_ref - y_q) ** 2, axis=-1)
+    k = max(1, int(len(err) * frac))
+    return np.argsort(err)[::-1][:k]

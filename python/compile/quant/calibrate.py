@@ -1,0 +1,331 @@
+"""Layer-wise joint calibration — paper Alg. 1 (+ OmniQuant-lite baseline).
+
+For each transformer block we match the quantized block's output to the
+full-precision block's output on calibration activations, maintaining two
+activation streams (H_fp, H_q) exactly as Alg. 1 does:
+
+  Stage 1 — first-slice stabilisation: optimise the learnable weight
+            clipping (LWC) parameters of the shared MSB slice only.
+  Stage 2 — joint training: derive residual slices from the shared
+            Theta_q, score tokens with MoBiRoute, anneal the gate
+            temperature, and optimise reconstruction + budget
+            regularisation (Eq. 9).
+
+``mode="omniquant"`` runs the same pipeline with LWC only at a fixed target
+bit-width and no router — our OmniQuant-lite baseline (the paper's PTQ
+backbone).  Optimiser is a hand-rolled Adam (no optax in this environment).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ModelConfig, QuantConfig
+from ..model import attention, block as block_fwd, mlp, rmsnorm
+from . import mobislice, quantizer
+from . import router as router_mod
+from .schedules import budget, gate_temperature
+
+LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+TAU_CAP = 50.0   # sigmoid(50*s) is numerically hard already; avoids inf*0 NaN
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam over pytrees
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    return {"m": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    ms = 1.0 / (1 - b1 ** t)
+    vs = 1.0 / (1 - b2 ** t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * ms) / (jnp.sqrt(v_ * vs) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear paths
+# ---------------------------------------------------------------------------
+
+def clip_factors(raw: jnp.ndarray) -> jnp.ndarray:
+    """LWC parameterisation: sigmoid keeps the clip factor in (0, 1)."""
+    return jax.nn.sigmoid(raw)
+
+
+def clipped_params(w, clip_raw_lo, clip_raw_hi, bits, group_size):
+    return quantizer.calc_params(
+        w, bits, group_size,
+        clip_lo=clip_factors(clip_raw_lo), clip_hi=clip_factors(clip_raw_hi))
+
+
+def static_quant_linear(w, clip_raw_lo, clip_raw_hi, bits, group_size):
+    """OmniQuant-lite / stage-1 path: LWC + STE quantize-dequantize."""
+    p = clipped_params(w, clip_raw_lo, clip_raw_hi, bits, group_size)
+    return quantizer.quantize_ste(w, p)
+
+
+def mobiq_linear(x, w, qp, rp, tau, qcfg: QuantConfig):
+    """Token-routed MoBiSlice linear (Eq. 6).  Returns (y, scores, gates)."""
+    base = clipped_params(w, qp["clip_lo"], qp["clip_hi"], qcfg.slice_bits,
+                          qcfg.group_size)
+    deqs = mobislice.decompose_ste(w, base, qcfg.n_slices, qcfg.slice_bits)
+    s = router_mod.scores(rp, x)                       # (..., E-1)
+    g = router_mod.gate_tau(s, tau)
+    y = x @ deqs[0]                                    # shared expert slice
+    for e in range(1, qcfg.n_slices):
+        y = y + g[..., e - 1:e] * (x @ deqs[e])
+    return y, s, g
+
+
+def _quant_block_fwd(bp, qparams, rparams, x, tau, cfg: ModelConfig,
+                     qcfg: QuantConfig, mode: str, bits: int):
+    """Forward one transformer block with quantized linears.
+
+    x: (B, T, d).  Returns (y, scores{name: (B,T,E-1)}, gates{...}).
+    """
+    def single(xb):
+        scores_loc: Dict[str, jnp.ndarray] = {}
+        gates_loc: Dict[str, jnp.ndarray] = {}
+
+        def linear_fn(layer, name, xin, w):
+            del layer
+            if mode == "omniquant":
+                wq = static_quant_linear(
+                    w, qparams[name]["clip_lo"], qparams[name]["clip_hi"],
+                    bits, qcfg.group_size)
+                return xin @ wq
+            if mode == "stage1":
+                wq = static_quant_linear(
+                    w, qparams[name]["clip_lo"], qparams[name]["clip_hi"],
+                    qcfg.slice_bits, qcfg.group_size)
+                return xin @ wq
+            y, s, g = mobiq_linear(xin, w, qparams[name], rparams[name],
+                                   tau, qcfg)
+            scores_loc[name] = s
+            gates_loc[name] = g
+            return y
+
+        y = block_fwd(xb, bp, cfg, 0, linear_fn)
+        return y, scores_loc, gates_loc
+
+    return jax.vmap(single)(x)
+
+
+# ---------------------------------------------------------------------------
+# Results containers
+# ---------------------------------------------------------------------------
+
+class LinearCalib(NamedTuple):
+    clip_lo: np.ndarray        # raw (pre-sigmoid) LWC params (g, d_out)
+    clip_hi: np.ndarray
+    router: Optional[Dict[str, np.ndarray]]       # exported router arrays
+    quantiles: Optional[np.ndarray]               # pooled score quantiles
+    score_sample: Optional[np.ndarray]            # (n_tok, E-1) sample
+
+
+class CalibResult(NamedTuple):
+    mode: str
+    bits: int                                     # omniquant target bits
+    layers: List[Dict[str, LinearCalib]]
+    history: List[Dict[str, float]]
+
+
+# ---------------------------------------------------------------------------
+# Main entry
+# ---------------------------------------------------------------------------
+
+def calibrate(params, cfg: ModelConfig, qcfg: QuantConfig,
+              calib_tokens: np.ndarray, mode: str = "mobiq",
+              bits: int = 3, seed: int = 0,
+              schedule: Optional[str] = None,
+              target_bits: Optional[float] = None,
+              minibatch: int = 16, stage1_steps: int = 30,
+              stage2_steps: int = 90,
+              verbose: bool = True) -> CalibResult:
+    """Run Alg. 1 over all blocks.
+
+    calib_tokens: (nsamples, seq_len) int array.
+    mode: "mobiq" (full method) or "omniquant" (LWC-only baseline @ bits).
+    """
+    schedule = schedule or qcfg.schedule
+    target_bits = qcfg.target_bits if target_bits is None else target_bits
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+
+    tokens = jnp.asarray(np.asarray(calib_tokens).astype(np.int32))
+    h_fp = params["embed"][tokens]           # (B, T, d)
+    h_q = h_fp
+
+    layers_out: List[Dict[str, LinearCalib]] = []
+    history: List[Dict[str, float]] = []
+    t_start = time.time()
+    n = tokens.shape[0]
+    mb = min(minibatch, n)
+
+    fp_block = jax.jit(lambda x, bp: jax.vmap(
+        lambda xb: block_fwd(xb, bp, cfg, 0, lambda l, nm, xi, w: xi @ w))(x))
+
+    # Jitted steps are defined ONCE and take the block params as traced
+    # arguments, so every transformer block reuses the same compilation
+    # (identical shapes across blocks) — a large win on this 1-core CPU.
+    s1_bits = bits if mode == "omniquant" else qcfg.slice_bits
+    s1_mode = "omniquant" if mode == "omniquant" else "stage1"
+
+    def s1_loss(qp, bp, rp, x, y_ref):
+        y, _, _ = _quant_block_fwd(bp, qp, rp, x, 1.0, cfg, qcfg,
+                                   s1_mode, s1_bits)
+        return jnp.mean((y - y_ref) ** 2)
+
+    s1_step = jax.jit(jax.value_and_grad(s1_loss, argnums=0))
+
+    def s2_loss(both, bp, x, y_ref, tau, b_t):
+        qp, rp = both
+        y, _, gates = _quant_block_fwd(bp, qp, rp, x, tau, cfg, qcfg,
+                                       "mobiq", 0)
+        rec = jnp.mean((y - y_ref) ** 2)
+        reg = 0.0
+        for name in LINEARS:
+            reg = reg + router_mod.reg_loss_bt(
+                gates[name], b_t, qcfg.base_bits, qcfg.slice_bits)
+        return rec + qcfg.reg_lambda * reg / len(LINEARS)
+
+    s2_step = jax.jit(jax.value_and_grad(s2_loss, argnums=0))
+
+    prop_mobiq = jax.jit(lambda bp, qp, rp, x: _quant_block_fwd(
+        bp, qp, rp, x, TAU_CAP, cfg, qcfg, "mobiq", 0)[0])
+    prop_static = jax.jit(lambda bp, qp, rp, x: _quant_block_fwd(
+        bp, qp, rp, x, 1.0, cfg, qcfg, "omniquant", bits)[0])
+
+    for li, bp in enumerate(params["layers"]):
+        qparams = {}
+        for name in LINEARS:
+            w = bp[name]
+            g = quantizer.n_groups(w.shape[0], qcfg.group_size)
+            init = jnp.full((g, w.shape[1]), 4.0)   # sigmoid(4) ~ 0.982
+            qparams[name] = {"clip_lo": init, "clip_hi": init}
+        rparams = {}
+        for name in LINEARS:
+            key, sub = jax.random.split(key)
+            rparams[name] = router_mod.init_router(
+                sub, bp[name].shape[0], qcfg.router_hidden,
+                qcfg.n_slices - 1)
+
+        y_fp_full = fp_block(h_fp, bp)
+
+        # ------------------------- Stage 1: LWC ------------------------
+        opt = adam_init(qparams)
+        s1_final = float("nan")
+        for _ in range(stage1_steps):
+            idx = rng.choice(n, size=mb, replace=False)
+            loss, grads = s1_step(qparams, bp, rparams, h_q[idx],
+                                  y_fp_full[idx])
+            qparams, opt = adam_update(qparams, grads, opt, qcfg.lwc_lr)
+            s1_final = float(loss)
+
+        # ------------------- Stage 2: joint MoBi training --------------
+        s2_final = 0.0
+        if mode == "mobiq":
+            both = (qparams, rparams)
+            opt = adam_init(both)
+            for t in range(1, stage2_steps + 1):
+                tau = min(gate_temperature(t, stage2_steps), TAU_CAP)
+                b_t = budget(t, stage2_steps, qcfg.init_bits, target_bits,
+                             schedule)
+                idx = rng.choice(n, size=mb, replace=False)
+                loss, grads = s2_step(both, bp, h_q[idx], y_fp_full[idx],
+                                      jnp.float32(tau), jnp.float32(b_t))
+                both, opt = adam_update(both, grads, opt, qcfg.mobi_lr)
+                s2_final = float(loss)
+            qparams, rparams = both
+
+        # ------------------ Commit + propagate streams -----------------
+        lin_out: Dict[str, LinearCalib] = {}
+        all_scores: Dict[str, np.ndarray] = {}
+        if mode == "mobiq":
+            for name in LINEARS:
+                xin = _linear_input(bp, cfg, h_q, name)
+                s = router_mod.scores(rparams[name], xin)
+                all_scores[name] = np.asarray(s).reshape(
+                    -1, qcfg.n_slices - 1)
+
+        for name in LINEARS:
+            rexp = (router_mod.export_arrays(rparams[name])
+                    if mode == "mobiq" else None)
+            quant = (router_mod.score_quantiles(all_scores[name])
+                     if mode == "mobiq" else None)
+            sample = (all_scores[name][:512].astype(np.float32)
+                      if mode == "mobiq" else None)
+            lin_out[name] = LinearCalib(
+                clip_lo=np.asarray(qparams[name]["clip_lo"], np.float32),
+                clip_hi=np.asarray(qparams[name]["clip_hi"], np.float32),
+                router=rexp, quantiles=quant, score_sample=sample)
+        layers_out.append(lin_out)
+
+        # propagate: H_fp through FP block, H_q through the quantized block
+        h_fp = y_fp_full
+        if mode == "mobiq":
+            h_q = prop_mobiq(bp, qparams, rparams, h_q)
+        else:
+            h_q = prop_static(bp, qparams, rparams, h_q)
+
+        history.append({"layer": li, "stage1_loss": s1_final,
+                        "stage2_loss": s2_final,
+                        "elapsed_s": time.time() - t_start})
+        if verbose:
+            print(f"  [calib:{mode}] block {li}: s1={s1_final:.5f} "
+                  f"s2={s2_final:.5f} ({time.time() - t_start:.1f}s)",
+                  flush=True)
+
+    return CalibResult(mode=mode, bits=bits, layers=layers_out,
+                       history=history)
+
+
+def _linear_input(bp, cfg: ModelConfig, x, name: str):
+    """Recompute the input activation feeding a given linear in a block.
+
+    Used to collect router scores on the calibration set (App. C.2).
+    x: (B, T, d) block input.
+    """
+    def plain(l, n, xi, w):
+        return xi @ w
+
+    xa = jax.vmap(lambda xb: rmsnorm(xb, bp["attn_norm"], cfg.norm_eps))(x)
+    if name in ("wq", "wk", "wv"):
+        return xa
+    if name == "wo":
+        outs = {}
+
+        def hooked(xb):
+            def hook(layer, n, xi, w):
+                if n == "wo":
+                    outs["x"] = xi
+                return xi @ w
+            attention(rmsnorm(xb, bp["attn_norm"], cfg.norm_eps), bp, cfg,
+                      0, hook)
+            return outs.pop("x")
+        return jax.vmap(hooked)(x)
+    # MLP linears: input is the post-attention residual, normed
+    xr = x + jax.vmap(lambda xb: attention(
+        rmsnorm(xb, bp["attn_norm"], cfg.norm_eps), bp, cfg, 0, plain))(x)
+    xm = jax.vmap(lambda xb: rmsnorm(xb, bp["mlp_norm"], cfg.norm_eps))(xr)
+    if name in ("w_gate", "w_up"):
+        return xm
+    g = xm @ bp["w_gate"]
+    u = xm @ bp["w_up"]
+    return jax.nn.silu(g) * u

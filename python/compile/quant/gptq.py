@@ -1,0 +1,116 @@
+"""GPTQ baseline — Hessian-based error-compensating quantization.
+
+Frantar et al., "GPTQ: Accurate post-training quantization for generative
+pre-trained transformers" (ref. [12] in the paper).  Classic column-wise
+algorithm with Cholesky inverse-Hessian back-substitution and group-wise
+scales, adapted to this repo's floor-aligned quantizer so the exported
+codes dequantize identically in the Rust engine:
+
+    deq = s * (q - z + 0.5)
+
+W is (d_in, d_out) with y = x @ W; the Hessian is over the d_in axis.
+Pure numpy — runs at build time on tiny-model scale in milliseconds.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class StaticQuantLinear(NamedTuple):
+    """Exported static-PTQ linear (shared with AWQ/SmoothQuant/RTN)."""
+    codes: np.ndarray        # (d_in, d_out) uint8
+    scale: np.ndarray        # (n_groups, d_out) f32
+    zero: np.ndarray         # (n_groups, d_out) f32
+    bits: int
+    group_size: int
+    act_scale: np.ndarray    # (d_in,) f32 per-channel input divisor (or ones)
+    transform: str           # "none" | "chan_scale" | "hadamard"
+
+
+def _group_params(wblk: np.ndarray, bits: int):
+    """Min/max floor-quant params for one group block (gs, d_out)."""
+    wmin = np.minimum(wblk.min(axis=0), -1e-8)
+    wmax = np.maximum(wblk.max(axis=0), 1e-8)
+    scale = np.maximum((wmax - wmin) / float(2 ** bits), 1e-8)
+    zero = -wmin / scale
+    return scale.astype(np.float32), zero.astype(np.float32)
+
+
+def _quant_row(w: np.ndarray, s: np.ndarray, z: np.ndarray, bits: int):
+    q = np.clip(np.floor(w / s + z), 0, 2 ** bits - 1)
+    deq = s * (q - z + 0.5)
+    return q.astype(np.uint8), deq
+
+
+def gptq_quantize(w: np.ndarray, x: np.ndarray, bits: int, group_size: int,
+                  percdamp: float = 0.01) -> StaticQuantLinear:
+    """Quantize one linear with GPTQ.
+
+    w: (d_in, d_out) float32; x: (n_tokens, d_in) calibration activations.
+    """
+    w = np.array(w, dtype=np.float64)
+    d_in, d_out = w.shape
+    assert d_in % group_size == 0
+    n_groups = d_in // group_size
+
+    h = x.T.astype(np.float64) @ x.astype(np.float64)   # (d_in, d_in)
+    damp = percdamp * float(np.mean(np.diag(h)) + 1e-8)
+    h[np.diag_indices(d_in)] += damp
+
+    # Upper Cholesky factor of H^{-1}: the standard GPTQ trick.
+    hinv = np.linalg.inv(h)
+    # Symmetrise against numerical drift before Cholesky.
+    hinv = 0.5 * (hinv + hinv.T)
+    l = np.linalg.cholesky(hinv)
+    u = l.T            # hinv = l @ l.T ; we consume u rows top-down
+
+    codes = np.zeros((d_in, d_out), dtype=np.uint8)
+    scales = np.zeros((n_groups, d_out), dtype=np.float32)
+    zeros = np.zeros((n_groups, d_out), dtype=np.float32)
+
+    for g in range(n_groups):
+        lo, hi = g * group_size, (g + 1) * group_size
+        s, z = _group_params(w[lo:hi], bits)
+        scales[g], zeros[g] = s, z
+        for i in range(lo, hi):
+            d = u[i, i]
+            q, deq = _quant_row(w[i], s, z, bits)
+            codes[i] = q
+            err = (w[i] - deq) / d
+            if i + 1 < d_in:
+                w[i + 1:] -= np.outer(u[i, i + 1:], err)
+
+    return StaticQuantLinear(codes=codes, scale=scales, zero=zeros,
+                             bits=bits, group_size=group_size,
+                             act_scale=np.ones(d_in, np.float32),
+                             transform="none")
+
+
+def dequantize(rec: StaticQuantLinear) -> np.ndarray:
+    """Reconstruct the (transformed-space) weight matrix."""
+    d_in, d_out = rec.codes.shape
+    q = rec.codes.astype(np.float32).reshape(-1, rec.group_size, d_out)
+    deq = rec.scale[:, None, :] * (q - rec.zero[:, None, :] + 0.5)
+    return deq.reshape(d_in, d_out)
+
+
+def rtn_record(w: np.ndarray, bits: int, group_size: int) -> StaticQuantLinear:
+    """Plain round(floor)-to-nearest record, same container."""
+    d_in, d_out = w.shape
+    n_groups = d_in // group_size
+    codes = np.zeros((d_in, d_out), dtype=np.uint8)
+    scales = np.zeros((n_groups, d_out), dtype=np.float32)
+    zeros = np.zeros((n_groups, d_out), dtype=np.float32)
+    for g in range(n_groups):
+        lo, hi = g * group_size, (g + 1) * group_size
+        s, z = _group_params(np.asarray(w[lo:hi], np.float64), bits)
+        scales[g], zeros[g] = s, z
+        for i in range(lo, hi):
+            codes[i], _ = _quant_row(np.asarray(w[i], np.float64), s, z, bits)
+    return StaticQuantLinear(codes=codes, scale=scales, zero=zeros,
+                             bits=bits, group_size=group_size,
+                             act_scale=np.ones(d_in, np.float32),
+                             transform="none")

@@ -1,0 +1,146 @@
+"""MoBiSlice — many-in-one recursive residual quantization (paper §4.1, App. B).
+
+    R_1 = W
+    W_e = Q(R_e | Theta_q, b_e)        (floor-aligned quantizer)
+    R_{e+1} = R_e - W_e
+
+Slice 1 (the shared-expert MSB slice) uses the calibrated (s_1, z_1); every
+residual slice e >= 2 derives its parameters from the shared set:
+
+    s_{e+1} = s_e / 2^{b_e}        (App. B scale refinement)
+    z_e     = 2^{b_e - 1}          (centred residual zero point)
+
+so only ONE set of scales/zeros is stored — the paper's key storage/runtime
+advantage over AnyBCQ's per-precision scales.  A b-bit weight is
+reconstructed by summing the first k slices, b = sum b_e (Eq. 3).
+
+Note: §4.1 of the main text says the next scale divides by 2^{b_e - 1} while
+App. B (the authoritative formulation, Eq. 14) divides by 2^{b_e}; with
+centred dequantization only 2^{b_e} gives exact residual coverage
+(residual after a centred b-bit bin lies in [-s/2, s/2) = s/2^{b} * [-2^{b-1},
+2^{b-1})), so we follow App. B.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quantizer import (GroupQuantParams, calc_params, dequantize,
+                        group_view, flat_view, quantize, quantize_ste)
+
+
+class SlicedWeight(NamedTuple):
+    """MoBiSlice decomposition of one linear layer's weight."""
+    codes: List[jnp.ndarray]      # E x (d_in, d_out) int32, values < 2^slice_bits
+    base: GroupQuantParams        # (s_1, z_1); residual params are derived
+    slice_bits: int
+
+    @property
+    def n_slices(self) -> int:
+        return len(self.codes)
+
+
+def residual_params(base: GroupQuantParams, e: int,
+                    slice_bits: int) -> GroupQuantParams:
+    """Derived parameters of slice e (1-indexed; e=1 is the base slice)."""
+    if e == 1:
+        return base
+    s = base.scale / float(2 ** (slice_bits * (e - 1)))
+    z = jnp.full_like(base.zero, float(2 ** (slice_bits - 1)))
+    return GroupQuantParams(s, z, slice_bits, base.group_size)
+
+
+def decompose(w: jnp.ndarray, base: GroupQuantParams, n_slices: int,
+              slice_bits: int) -> SlicedWeight:
+    """Recursive residual quantization (Eq. 2)."""
+    codes: List[jnp.ndarray] = []
+    r = w
+    for e in range(1, n_slices + 1):
+        p = residual_params(base, e, slice_bits)
+        q = quantize(r, p)
+        codes.append(q)
+        r = r - dequantize(q, p)
+    return SlicedWeight(codes, base, slice_bits)
+
+
+def slice_deq(sw: SlicedWeight, e: int) -> jnp.ndarray:
+    """Dequantized contribution of slice e (1-indexed)."""
+    p = residual_params(sw.base, e, sw.slice_bits)
+    return dequantize(sw.codes[e - 1], p)
+
+
+def reconstruct(sw: SlicedWeight, k: int) -> jnp.ndarray:
+    """W^(b) = sum of the first k slices (Eq. 3); b = k * slice_bits."""
+    acc = slice_deq(sw, 1)
+    for e in range(2, k + 1):
+        acc = acc + slice_deq(sw, e)
+    return acc
+
+
+def reconstruct_masked(sw: SlicedWeight, mask) -> jnp.ndarray:
+    """Reconstruction from an arbitrary slice subset (Eq. 6 semantics).
+
+    mask: length-E boolean; mask[0] must be True (shared-expert slice).
+    """
+    assert mask[0], "slice 1 is the always-on shared expert"
+    acc = slice_deq(sw, 1)
+    for e in range(2, sw.n_slices + 1):
+        if mask[e - 1]:
+            acc = acc + slice_deq(sw, e)
+    return acc
+
+
+def decompose_ste(w: jnp.ndarray, base: GroupQuantParams, n_slices: int,
+                  slice_bits: int) -> List[jnp.ndarray]:
+    """Differentiable decomposition: per-slice dequantized contributions
+    with straight-through gradients w.r.t. (w, s_1, z_1).  Used during
+    stage-2 joint optimisation (Alg. 1)."""
+    outs: List[jnp.ndarray] = []
+    r = w
+    for e in range(1, n_slices + 1):
+        p = residual_params(base, e, slice_bits)
+        deq = quantize_ste(r, p)
+        outs.append(deq)
+        r = r - deq
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane packing (kernel interchange format, §4.3)
+# ---------------------------------------------------------------------------
+
+def pack_bitplanes(codes: np.ndarray, slice_bits: int) -> np.ndarray:
+    """Pack integer codes (d_in, d_out) into bit-major planes.
+
+    Returns uint64 array of shape (slice_bits, d_out, ceil(d_in/64)): plane p
+    holds bit p of every code, packed along the *input* dimension so a GEMV
+    kernel streams contiguous words per output channel.  Bit j of word w of
+    plane p = bit p of codes[w*64 + j, o].
+    """
+    codes = np.asarray(codes, dtype=np.uint64)
+    d_in, d_out = codes.shape
+    n_words = (d_in + 63) // 64
+    planes = np.zeros((slice_bits, d_out, n_words), dtype=np.uint64)
+    for p in range(slice_bits):
+        bits = ((codes >> np.uint64(p)) & np.uint64(1)).T  # (d_out, d_in)
+        padded = np.zeros((d_out, n_words * 64), dtype=np.uint64)
+        padded[:, :d_in] = bits
+        chunks = padded.reshape(d_out, n_words, 64)
+        shifts = np.arange(64, dtype=np.uint64)
+        planes[p] = np.sum(chunks << shifts[None, None, :], axis=2,
+                           dtype=np.uint64)
+    return planes
+
+
+def unpack_bitplanes(planes: np.ndarray, d_in: int) -> np.ndarray:
+    """Inverse of pack_bitplanes -> (d_in, d_out) integer codes."""
+    slice_bits, d_out, n_words = planes.shape
+    codes = np.zeros((d_out, n_words * 64), dtype=np.uint64)
+    shifts = np.arange(64, dtype=np.uint64)
+    for p in range(slice_bits):
+        bits = (planes[p][:, :, None] >> shifts[None, None, :]) & np.uint64(1)
+        codes |= bits.reshape(d_out, n_words * 64) << np.uint64(p)
+    return codes[:, :d_in].T.astype(np.int32)

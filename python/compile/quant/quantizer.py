@@ -1,0 +1,116 @@
+"""Floor-aligned group quantizer — paper Eq. (11)-(12), App. B.
+
+    x_int = clamp(floor(x / s + z), 0, 2^b - 1)
+    x_deq = s * (x_int - z + 0.5)
+
+The floor (not round) mapping plus the +0.5 centred dequantization is what
+makes bit-slice codes *nest*: dropping LSBs of the merged integer code is
+exactly quantization with a 2^p-coarser scale (App. B, Eq. 16-21).  All
+scales are per-(input-dim group, output channel): W has shape (d_in, d_out)
+and groups tile the d_in axis.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+class GroupQuantParams(NamedTuple):
+    """Per-group scale/zero.  Shapes: (n_groups, d_out)."""
+    scale: jnp.ndarray
+    zero: jnp.ndarray
+    bits: int
+    group_size: int
+
+
+def n_groups(d_in: int, group_size: int) -> int:
+    assert d_in % group_size == 0, (d_in, group_size)
+    return d_in // group_size
+
+
+def group_view(w: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """(d_in, d_out) -> (n_groups, group_size, d_out)."""
+    d_in, d_out = w.shape
+    return w.reshape(n_groups(d_in, group_size), group_size, d_out)
+
+
+def flat_view(wg: jnp.ndarray) -> jnp.ndarray:
+    g, gs, d_out = wg.shape
+    return wg.reshape(g * gs, d_out)
+
+
+def params_from_minmax(wmin: jnp.ndarray, wmax: jnp.ndarray, bits: int,
+                       group_size: int) -> GroupQuantParams:
+    """Scale/zero covering [wmin, wmax] with 2^b floor bins."""
+    levels = float(2 ** bits)
+    scale = jnp.maximum((wmax - wmin) / levels, EPS)
+    zero = -wmin / scale
+    return GroupQuantParams(scale, zero, bits, group_size)
+
+
+def calc_params(w: jnp.ndarray, bits: int, group_size: int,
+                clip_lo: jnp.ndarray = None,
+                clip_hi: jnp.ndarray = None) -> GroupQuantParams:
+    """Min/max (optionally clipped) calibration per group.
+
+    clip_lo/clip_hi in (0, 1]: learnable-weight-clipping factors applied to
+    the negative/positive extents (OmniQuant LWC).  Broadcast over groups.
+    """
+    wg = group_view(w, group_size)
+    wmin = jnp.min(wg, axis=1)       # (n_groups, d_out)
+    wmax = jnp.max(wg, axis=1)
+    if clip_lo is not None:
+        wmin = wmin * clip_lo
+    if clip_hi is not None:
+        wmax = wmax * clip_hi
+    wmin = jnp.minimum(wmin, -EPS)
+    wmax = jnp.maximum(wmax, EPS)
+    return params_from_minmax(wmin, wmax, bits, group_size)
+
+
+def quantize(w: jnp.ndarray, p: GroupQuantParams) -> jnp.ndarray:
+    """-> integer codes, shape (d_in, d_out), dtype int32."""
+    wg = group_view(w, p.group_size)
+    q = jnp.floor(wg / p.scale[:, None, :] + p.zero[:, None, :])
+    q = jnp.clip(q, 0, 2 ** p.bits - 1)
+    return flat_view(q).astype(jnp.int32)
+
+
+def dequantize(q: jnp.ndarray, p: GroupQuantParams) -> jnp.ndarray:
+    qg = group_view(q.astype(jnp.float32), p.group_size)
+    deq = p.scale[:, None, :] * (qg - p.zero[:, None, :] + 0.5)
+    return flat_view(deq)
+
+
+def quantize_ste(w: jnp.ndarray, p: GroupQuantParams) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient estimator.
+
+    Used by the gradient-based calibrators (OmniQuant-lite / MoBiQuant
+    stage 1 & 2) so that d(deq)/d(scale, zero, w) flows.
+    """
+    wg = group_view(w, p.group_size)
+    s = p.scale[:, None, :]
+    z = p.zero[:, None, :]
+    q_cont = wg / s + z
+    q_hard = jnp.clip(jnp.floor(q_cont), 0, 2 ** p.bits - 1)
+    # STE: forward uses q_hard, backward flows through clipped q_cont - 0.5
+    # (floor(x) ~ x - 0.5 in expectation).
+    q_ste = q_cont - 0.5 + jax.lax.stop_gradient(q_hard - (q_cont - 0.5))
+    deq = s * (q_ste - z + 0.5)
+    return flat_view(deq)
+
+
+def quant_error(w: jnp.ndarray, p: GroupQuantParams) -> jnp.ndarray:
+    return w - dequantize(quantize(w, p), p)
+
+
+def rtn(w: jnp.ndarray, bits: int, group_size: int
+        ) -> Tuple[jnp.ndarray, GroupQuantParams]:
+    """Round(floor)-to-nearest baseline: min/max params, no calibration."""
+    p = calc_params(w, bits, group_size)
+    return dequantize(quantize(w, p), p), p

@@ -1,0 +1,117 @@
+"""Rotation-based PTQ baselines: QuaRot-lite and SpinQuant-lite.
+
+QuaRot (ref. [27]) multiplies activations by an orthogonal (Hadamard)
+matrix and weights by its transpose, flattening outliers before scalar
+quantization:  y = (x H) (H^T W) = x W  exactly in FP, but HW is much
+friendlier to quantize.
+
+For d_in not a power of two we use a *block* Walsh-Hadamard transform on
+the largest power-of-two block size dividing d_in; the Rust engine applies
+the same block FWHT to activations at runtime (transform = "hadamard").
+
+SpinQuant-lite adds a searched diagonal +-1 sign vector D (H' = D H),
+picking the best of ``n_signs`` random draws by layer output error — a
+cheap stand-in for SpinQuant's learned rotations (ref. [14]).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .gptq import StaticQuantLinear, dequantize, rtn_record
+
+
+def hadamard_block_size(d: int, max_block: int = 64) -> int:
+    """Largest power of two <= max_block dividing d."""
+    b = 1
+    while b * 2 <= max_block and d % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def fwht(v: np.ndarray) -> np.ndarray:
+    """In-place-style fast Walsh-Hadamard transform along the last axis
+    (unnormalised)."""
+    v = np.array(v, dtype=np.float64)
+    n = v.shape[-1]
+    h = 1
+    while h < n:
+        v = v.reshape(*v.shape[:-1], n // (2 * h), 2, h)
+        a = v[..., 0, :].copy()
+        b = v[..., 1, :].copy()
+        v[..., 0, :] = a + b
+        v[..., 1, :] = a - b
+        v = v.reshape(*v.shape[:-3], n)
+        h *= 2
+    return v
+
+
+def block_hadamard(x: np.ndarray, block: int,
+                   signs: np.ndarray = None) -> np.ndarray:
+    """Apply a normalised block-FWHT along the last axis; optional
+    per-channel sign flips applied *before* the transform."""
+    d = x.shape[-1]
+    assert d % block == 0
+    if signs is not None:
+        x = x * signs
+    xb = np.asarray(x, np.float64).reshape(*x.shape[:-1], d // block, block)
+    yb = fwht(xb) / np.sqrt(block)
+    return yb.reshape(*x.shape)
+
+
+def quarot_quantize(w: np.ndarray, bits: int, group_size: int,
+                    block: int = None) -> StaticQuantLinear:
+    """Rotate W rows by the block Hadamard, then RTN-quantize.
+
+    Runtime contract: y = FWHT_block(x) @ deq(codes); act_scale stores the
+    signs (all +1 for plain QuaRot).
+    """
+    d_in = w.shape[0]
+    block = block or hadamard_block_size(d_in)
+    # x H corresponds to rotating the input axis of W by H^T = H (symmetric).
+    w_rot = block_hadamard(np.asarray(w, np.float64).T, block).T
+    rec = rtn_record(w_rot.astype(np.float32), bits, group_size)
+    return rec._replace(transform="hadamard",
+                        act_scale=np.ones(d_in, np.float32))
+
+
+def spinquant_quantize(w: np.ndarray, x: np.ndarray, bits: int,
+                       group_size: int, n_signs: int = 16,
+                       seed: int = 0) -> StaticQuantLinear:
+    """QuaRot + searched diagonal signs (SpinQuant-lite)."""
+    d_in = w.shape[0]
+    block = hadamard_block_size(d_in)
+    rng = np.random.default_rng(seed)
+    w64 = np.asarray(w, np.float64)
+    x64 = np.asarray(x, np.float64)
+    y_ref = x64 @ w64
+    best_err, best = np.inf, None
+    for trial in range(n_signs):
+        signs = (rng.integers(0, 2, size=d_in) * 2 - 1).astype(np.float64)
+        if trial == 0:
+            signs[:] = 1.0      # always include plain QuaRot
+        w_rot = block_hadamard((w64 * signs[:, None]).T, block).T
+        rec = rtn_record(w_rot.astype(np.float32), bits, group_size)
+        xq = block_hadamard(x64, block, signs=signs)
+        err = float(np.mean((xq @ dequantize(rec) - y_ref) ** 2))
+        if err < best_err:
+            best_err = err
+            best = rec._replace(transform="hadamard",
+                                act_scale=signs.astype(np.float32))
+    return best
+
+
+def apply_transform(rec: StaticQuantLinear, x: np.ndarray) -> np.ndarray:
+    """Apply the record's activation-side transform (python oracle for the
+    Rust engine's runtime path)."""
+    if rec.transform == "none":
+        return np.asarray(x, np.float64)
+    if rec.transform == "chan_scale":
+        return np.asarray(x, np.float64) / rec.act_scale.astype(np.float64)
+    if rec.transform == "hadamard":
+        block = hadamard_block_size(rec.codes.shape[0])
+        return block_hadamard(np.asarray(x, np.float64), block,
+                              signs=rec.act_scale.astype(np.float64))
+    raise ValueError(rec.transform)

@@ -1,0 +1,128 @@
+"""MoBiRoute — token-adaptive bit-slice router (paper §4.2).
+
+A per-linear 2-layer MLP scores each token for each *residual* slice
+(slice 1 is the always-on shared expert, Alg. 1):
+
+    S = R(X, Theta_r)                        (Eq. 4), S: (T, E-1)
+    G = sigmoid(tau(t) * S)                  (Eq. 5) annealed gate
+    AvgBits = (1/T) sum_i [b_1 + sum_j 1(G_ij > .5) * b_j]   (Eq. 8)
+    L_reg = (AvgBits - b(t)) * ||G||_1       (Eq. 7)
+
+At inference the gate hardens to 1(S - delta > 0) (Eq. 10); per-layer base
+thresholds come from score quantiles (App. C.2) and a *global* delta shift
+implements runtime elasticity.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .schedules import budget, gate_temperature
+
+
+class RouterParams(NamedTuple):
+    w1: jnp.ndarray   # (d_in, hidden)
+    b1: jnp.ndarray   # (hidden,)
+    w2: jnp.ndarray   # (hidden, n_residual)
+    b2: jnp.ndarray   # (n_residual,)
+
+
+def init_router(key: jax.Array, d_in: int, hidden: int,
+                n_residual: int) -> RouterParams:
+    """w2 starts at zero so S=0 (gate 0.5, maximal exploration)."""
+    k1, _ = jax.random.split(key)
+    return RouterParams(
+        w1=jax.random.normal(k1, (d_in, hidden)) * (1.0 / np.sqrt(d_in)),
+        b1=jnp.zeros((hidden,)),
+        w2=jnp.zeros((hidden, n_residual)),
+        b2=jnp.zeros((n_residual,)),
+    )
+
+
+def scores(rp: RouterParams, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., d_in) -> S: (..., n_residual).  Matches the Rust engine."""
+    h = jax.nn.relu(x @ rp.w1 + rp.b1)
+    return h @ rp.w2 + rp.b2
+
+
+def gate(s: jnp.ndarray, t: int, total: int) -> jnp.ndarray:
+    """Annealed sigmoid gate (Eq. 5)."""
+    tau = gate_temperature(t, total)
+    if np.isinf(tau):
+        return (s > 0).astype(s.dtype)
+    return jax.nn.sigmoid(tau * s)
+
+
+def gate_tau(s: jnp.ndarray, tau) -> jnp.ndarray:
+    """Gate with the temperature passed as a runtime scalar (jit-friendly:
+    avoids one recompilation per training step)."""
+    return jax.nn.sigmoid(tau * s)
+
+
+def hard_gate(s: jnp.ndarray, delta) -> jnp.ndarray:
+    """Inference-time binary mask 1(S - delta > 0) (Eq. 10)."""
+    return (s > delta).astype(s.dtype)
+
+
+def avg_bits(g: jnp.ndarray, base_bits: int, slice_bits: int) -> jnp.ndarray:
+    """Eq. 8 with the shared base slice counted for every token."""
+    active = (g > 0.5).astype(jnp.float32)
+    return base_bits + slice_bits * jnp.mean(jnp.sum(active, axis=-1))
+
+
+def reg_loss(g: jnp.ndarray, t: int, total: int, base_bits: int,
+             slice_bits: int, b_init: float, b_target: float,
+             kind: str = "log") -> jnp.ndarray:
+    """Budget-aware regularisation (Eq. 7).
+
+    The (AvgBits - b(t)) factor is treated as a constant multiplier (stop
+    gradient): it sets the *sign and strength* of the pressure on ||G||_1,
+    pruning when over budget and promoting slices when under.
+    """
+    b_t = budget(t, total, b_init, b_target, kind)
+    ab = jax.lax.stop_gradient(avg_bits(g, base_bits, slice_bits))
+    return (ab - b_t) * jnp.mean(jnp.abs(g))
+
+
+def reg_loss_bt(g: jnp.ndarray, b_t, base_bits: int,
+                slice_bits: int) -> jnp.ndarray:
+    """Eq. 7 with the scheduled budget b(t) passed as a runtime scalar."""
+    ab = jax.lax.stop_gradient(avg_bits(g, base_bits, slice_bits))
+    return (ab - b_t) * jnp.mean(jnp.abs(g))
+
+
+def score_quantiles(all_scores: np.ndarray, n_points: int = 129) -> np.ndarray:
+    """Pooled score quantile grid for layer-wise threshold calibration
+    (App. C.2).  Rust picks delta = quantile(1 - rho) for a target ratio."""
+    qs = np.linspace(0.0, 1.0, n_points)
+    return np.quantile(all_scores.reshape(-1), qs).astype(np.float32)
+
+
+def threshold_for_ratio(quantiles: np.ndarray, rho: float) -> float:
+    """delta such that ~rho of (token, slice) scores exceed it."""
+    rho = float(np.clip(rho, 0.0, 1.0))
+    pos = (1.0 - rho) * (len(quantiles) - 1)
+    lo = int(np.floor(pos))
+    hi = min(lo + 1, len(quantiles) - 1)
+    frac = pos - lo
+    return float(quantiles[lo] * (1 - frac) + quantiles[hi] * frac)
+
+
+def ratio_for_target_bits(target_bits: float, base_bits: int,
+                          slice_bits: int, n_residual: int) -> float:
+    """rho = (b_target - b_msb) / sum residual bits (App. C.2)."""
+    return float(np.clip(
+        (target_bits - base_bits) / (slice_bits * n_residual), 0.0, 1.0))
+
+
+def export_arrays(rp: RouterParams) -> Dict[str, np.ndarray]:
+    return {
+        "w1": np.asarray(rp.w1, np.float32),
+        "b1": np.asarray(rp.b1, np.float32),
+        "w2": np.asarray(rp.w2, np.float32),
+        "b2": np.asarray(rp.b2, np.float32),
+    }

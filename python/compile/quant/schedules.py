@@ -1,0 +1,48 @@
+"""Temperature / budget schedules (paper Eq. 5, Eq. 7; App. D.2).
+
+All schedules map training progress t in [1, L] to a value; the budget
+schedule decays b_init -> b_target, the temperature schedule grows 1 -> inf.
+The paper adopts the *logarithmic* budget schedule because it matches the
+log temperature annealing of the gate (App. D.2); we implement all four
+ablated variants for the Fig. 8 bench.
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def gate_temperature(t: int, total: int) -> float:
+    """tau(t) = ln(L) / (ln(L) - ln(t)); tau(1)=1, tau(L)=inf (Eq. 5)."""
+    t = max(1, min(t, total))
+    if t >= total:
+        return float("inf")
+    ln_l = math.log(max(total, 2))
+    return ln_l / (ln_l - math.log(t))
+
+
+def budget(t: int, total: int, b_init: float, b_target: float,
+           kind: str = "log") -> float:
+    """b(t) schedules: b_init -> b_target as t: 1 -> L (Eq. 7 + App. D.2)."""
+    t = max(1, min(t, total))
+    frac = _frac(t, total, kind)
+    return b_init - (b_init - b_target) * frac
+
+
+def _frac(t: int, total: int, kind: str) -> float:
+    x = t / total
+    if kind == "log":
+        # ln(t)/ln(L) — the paper's Eq. 7 form.
+        return math.log(t) / math.log(max(total, 2)) if t > 1 else 0.0
+    if kind == "linear":
+        return x
+    if kind == "cosine":
+        return 0.5 * (1.0 - math.cos(math.pi * x))
+    if kind == "exp":
+        # fast early decay, mirroring exp annealing in App. D.2.
+        k = 5.0
+        return (1.0 - math.exp(-k * x)) / (1.0 - math.exp(-k))
+    raise ValueError(f"unknown schedule {kind!r}")
+
+
+SCHEDULES = ("log", "linear", "cosine", "exp")

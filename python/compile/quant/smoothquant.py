@@ -1,0 +1,30 @@
+"""SmoothQuant baseline (ref. [13]).
+
+Migrates activation outliers into weights with a fixed-alpha per-channel
+smoothing factor:
+
+    s_j = max|x_j|^alpha / max|W_j,:|^(1-alpha),     alpha = 0.5
+
+then quantizes the smoothed weight W'[j,:] = s_j * W[j,:]; activations are
+divided by s at inference (same ``act_scale`` mechanism as AWQ).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .gptq import StaticQuantLinear, rtn_record
+
+
+def smooth_quantize(w: np.ndarray, x: np.ndarray, bits: int,
+                    group_size: int, alpha: float = 0.5
+                    ) -> StaticQuantLinear:
+    w = np.asarray(w, np.float64)
+    x = np.asarray(x, np.float64)
+    a_max = np.max(np.abs(x), axis=0) + 1e-8          # (d_in,)
+    w_max = np.max(np.abs(w), axis=1) + 1e-8          # (d_in,)
+    s = (a_max ** alpha) / (w_max ** (1.0 - alpha))
+    s = np.maximum(s / (np.median(s) + 1e-12), 1e-4)  # normalise median to 1
+    rec = rtn_record((w * s[:, None]).astype(np.float32), bits, group_size)
+    return rec._replace(act_scale=s.astype(np.float32),
+                        transform="chan_scale")

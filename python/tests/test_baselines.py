@@ -1,0 +1,102 @@
+"""Static-PTQ baseline calibrators: GPTQ, AWQ, SmoothQuant, rotations."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import awq, gptq, rotation, smoothquant
+
+
+def setup(seed, d_in=32, d_out=16, n_tok=128):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((d_in, d_out)) * 0.2).astype(np.float32)
+    x = rng.standard_normal((n_tok, d_in)).astype(np.float32)
+    # inject activation outlier channels (what AWQ/SmoothQuant exploit)
+    x[:, 3] *= 8.0
+    x[:, 11] *= 5.0
+    return w, x
+
+
+def out_err(w, x, rec):
+    y_ref = x.astype(np.float64) @ np.asarray(w, np.float64)
+    xt = rotation.apply_transform(rec, x)
+    y = xt @ gptq.dequantize(rec)
+    return float(np.mean((y - y_ref) ** 2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gptq_beats_rtn(seed):
+    w, x = setup(seed)
+    rtn = gptq.rtn_record(w, 3, 16)
+    gp = gptq.gptq_quantize(w, x, 3, 16)
+    assert out_err(w, x, gp) <= out_err(w, x, rtn) * 1.05
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_awq_beats_rtn_under_outliers(seed):
+    w, x = setup(seed)
+    rtn = gptq.rtn_record(w, 3, 16)
+    aw = awq.awq_quantize(w, x, 3, 16)
+    assert out_err(w, x, aw) <= out_err(w, x, rtn) * 1.01
+    assert aw.transform == "chan_scale"
+
+
+def test_smoothquant_produces_scales():
+    w, x = setup(1)
+    sq = smoothquant.smooth_quantize(w, x, 4, 16)
+    assert sq.transform == "chan_scale"
+    # outlier channel gets a larger divisor than median channel
+    assert sq.act_scale[3] > np.median(sq.act_scale)
+
+
+def test_rtn_codes_bits():
+    w, x = setup(2)
+    for bits in (2, 3, 4):
+        rec = gptq.rtn_record(w, bits, 16)
+        assert rec.codes.max() <= 2 ** bits - 1
+
+
+def test_fwht_involution_and_norm():
+    rng = np.random.default_rng(3)
+    v = rng.standard_normal(64)
+    h = rotation.block_hadamard(v, 32)
+    hh = rotation.block_hadamard(h, 32)
+    np.testing.assert_allclose(hh, v, atol=1e-9)
+    np.testing.assert_allclose(np.linalg.norm(h), np.linalg.norm(v),
+                               rtol=1e-9)
+
+
+def test_quarot_preserves_fp_output():
+    """(x H)(H^T W) == x W before quantization."""
+    w, x = setup(4)
+    block = rotation.hadamard_block_size(32)
+    w_rot = rotation.block_hadamard(np.asarray(w, np.float64).T, block).T
+    x_rot = rotation.block_hadamard(x, block)
+    np.testing.assert_allclose(x_rot @ w_rot,
+                               x.astype(np.float64) @ w, atol=1e-6)
+
+
+def test_quarot_flattens_outlier_weights():
+    rng = np.random.default_rng(5)
+    w = (rng.standard_normal((32, 16)) * 0.05).astype(np.float32)
+    w[7, :] = 3.0  # an outlier input row
+    rec = rotation.quarot_quantize(w, 3, 16)
+    deq = gptq.dequantize(rec)
+    # rotated-space max magnitude much smaller than the raw outlier
+    assert np.abs(deq).max() < 2.0
+
+
+def test_spinquant_at_least_quarot():
+    w, x = setup(6)
+    qr = rotation.quarot_quantize(w, 3, 16)
+    sp = rotation.spinquant_quantize(w, x, 3, 16, n_signs=8)
+    assert out_err(w, x, sp) <= out_err(w, x, qr) * 1.0 + 1e-9
+
+
+def test_awq_outlier_indices():
+    w, x = setup(7)
+    rec = awq.awq_quantize(w, x, 3, 16)
+    idx = awq.top_outlier_tokens(w, x, rec, 0.1)
+    assert len(idx) == 12  # 10% of 128 rounded down to >=1
+    assert len(set(idx.tolist())) == len(idx)

@@ -1,0 +1,80 @@
+"""MoBiSlice properties (paper §4.1, App. B Eq. 13-21)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import mobislice as M
+from compile.quant import quantizer as Q
+
+
+def setup(seed, d_in=64, d_out=8, gs=32, n_slices=4):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((d_in, d_out)) * 0.2, jnp.float32)
+    base = Q.calc_params(w, 2, gs)
+    return w, base, M.decompose(w, base, n_slices, 2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_error_shrinks_4x_per_slice(seed):
+    w, base, sw = setup(seed)
+    prev = np.inf
+    for k in range(1, 5):
+        err = float(jnp.max(jnp.abs(w - M.reconstruct(sw, k))))
+        assert err < prev * 0.51
+        prev = err
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_residual_zero_mean(seed):
+    """App. B Eq. 19: slice truncation error is ~zero-mean."""
+    w, base, sw = setup(seed, d_in=128, d_out=16)
+    r = np.asarray(w - M.reconstruct(sw, 2))
+    scale = float(np.mean(np.asarray(base.scale))) / 16  # s_3 level
+    assert abs(r.mean()) < scale
+
+
+def test_reconstruct_masked_subsets():
+    w, base, sw = setup(0)
+    full = M.reconstruct(sw, 4)
+    masked = M.reconstruct_masked(sw, [True, True, True, True])
+    np.testing.assert_allclose(np.asarray(full), np.asarray(masked))
+    # dropping slice 3 only removes its contribution
+    m2 = M.reconstruct_masked(sw, [True, True, False, True])
+    diff = np.asarray(full) - np.asarray(m2)
+    contrib = np.asarray(M.slice_deq(sw, 3))
+    np.testing.assert_allclose(diff, contrib, atol=1e-6)
+
+
+def test_residual_params_derivation():
+    _, base, _ = setup(1)
+    p2 = M.residual_params(base, 2, 2)
+    np.testing.assert_allclose(np.asarray(p2.scale),
+                               np.asarray(base.scale) / 4, rtol=1e-6)
+    assert float(p2.zero[0, 0]) == 2.0
+    p3 = M.residual_params(base, 3, 2)
+    np.testing.assert_allclose(np.asarray(p3.scale),
+                               np.asarray(base.scale) / 16, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 3]))
+def test_bitplane_pack_roundtrip(seed, bits):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2 ** bits,
+                         size=(64 * rng.integers(1, 4), 7)).astype(np.int32)
+    planes = M.pack_bitplanes(codes, bits)
+    back = M.unpack_bitplanes(planes, codes.shape[0])
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_truncation_equals_coarser_quant():
+    """App. B Eq. 16-18: dropping a residual slice == quantizing with the
+    2^b-coarser derived parameters (codes nest)."""
+    w, base, sw = setup(2)
+    # k=1 reconstruction == direct base quantization
+    direct = Q.dequantize(Q.quantize(w, base), base)
+    np.testing.assert_allclose(np.asarray(M.reconstruct(sw, 1)),
+                               np.asarray(direct), atol=1e-7)

@@ -1,0 +1,90 @@
+"""Model forward / pretrain-loop sanity (L2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.config import MODEL_ZOO, ModelConfig
+from compile import model as M
+
+CFG = ModelConfig(name="t", d_model=32, n_layers=2, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab_size=61)
+
+
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def test_forward_shapes():
+    p = params()
+    logits = M.forward(p, jnp.arange(10, dtype=jnp.int32) % 61, CFG)
+    assert logits.shape == (10, 61)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_causality():
+    """Changing a future token must not affect earlier logits."""
+    p = params()
+    t1 = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    t2 = jnp.asarray([1, 2, 3, 4, 60], jnp.int32)
+    l1 = M.forward(p, t1, CFG)
+    l2 = M.forward(p, t2, CFG)
+    np.testing.assert_allclose(np.asarray(l1[:4]), np.asarray(l2[:4]),
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[4] - l2[4]))) > 1e-4
+
+
+def test_gqa_variant_runs():
+    cfg = ModelConfig(name="g", d_model=32, n_layers=1, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=16)
+    p = M.init_params(cfg, jax.random.PRNGKey(1))
+    logits = M.forward(p, jnp.arange(6, dtype=jnp.int32) % 16, cfg)
+    assert logits.shape == (6, 16)
+
+
+def test_loss_decreases_with_training():
+    from compile.quant.calibrate import adam_init, adam_update
+    cfg = ModelConfig(name="t2", d_model=32, n_layers=1, n_heads=2,
+                      n_kv_heads=2, d_ff=64, vocab_size=11)
+    p = M.init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.integers(0, 11, size=(4, 17)), jnp.int32)
+    step = jax.jit(jax.value_and_grad(lambda p, t: M.loss_fn(p, t, cfg)))
+    opt = adam_init(p)
+    l0, _ = step(p, data)
+    for _ in range(30):
+        loss, g = step(p, data)
+        p, opt = adam_update(p, g, opt, 3e-3)
+    assert float(loss) < float(l0) * 0.8
+
+
+def test_linear_hook_intercepts_all():
+    p = params()
+    seen = set()
+
+    def hook(layer, name, x, w):
+        seen.add((layer, name))
+        return x @ w
+
+    M.forward(p, jnp.arange(4, dtype=jnp.int32), CFG, linear_fn=hook)
+    assert len(seen) == CFG.n_layers * 7
+
+
+def test_rope_tables_shift_property():
+    """RoPE relative-position property: tables at offset o equal rolled
+    tables."""
+    c0, s0 = M.rope_tables(8, 16, 1e4, offset=0)
+    c2, s2 = M.rope_tables(6, 16, 1e4, offset=2)
+    np.testing.assert_allclose(np.asarray(c0[2:8]), np.asarray(c2),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s0[2:8]), np.asarray(s2),
+                               atol=1e-6)
+
+
+def test_zoo_configs_consistent():
+    for name, cfg in MODEL_ZOO.items():
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.n_heads % cfg.n_kv_heads == 0, name
+        assert cfg.d_model % 32 == 0, name   # quant group/packing needs
+        assert cfg.d_ff % 32 == 0, name
+        assert cfg.n_params > 0

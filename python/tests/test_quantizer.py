@@ -1,0 +1,82 @@
+"""Floor-aligned quantizer properties (paper Eq. 11-12, App. B)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import quantizer as Q
+
+
+def rand_w(seed, d_in=32, d_out=8, scale=0.2):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((d_in, d_out)) * scale,
+                       jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 4]),
+       st.sampled_from([8, 16, 32]))
+def test_roundtrip_error_bounded(seed, bits, gs):
+    w = rand_w(seed)
+    p = Q.calc_params(w, bits, gs)
+    deq = Q.dequantize(Q.quantize(w, p), p)
+    # centred floor quantization: |err| <= s/2 within range (no clipping)
+    max_s = float(jnp.max(p.scale))
+    assert float(jnp.max(jnp.abs(w - deq))) <= max_s * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_codes_in_range(seed):
+    w = rand_w(seed)
+    for bits in (2, 4):
+        p = Q.calc_params(w, bits, 16)
+        q = np.asarray(Q.quantize(w, p))
+        assert q.min() >= 0 and q.max() <= 2 ** bits - 1
+
+
+def test_clipping_shrinks_range():
+    w = rand_w(1)
+    p_full = Q.calc_params(w, 2, 16)
+    p_clip = Q.calc_params(w, 2, 16,
+                           clip_lo=jnp.full((2, 8), 0.5),
+                           clip_hi=jnp.full((2, 8), 0.5))
+    assert float(jnp.max(p_clip.scale)) < float(jnp.max(p_full.scale))
+
+
+def test_ste_forward_matches_hard():
+    w = rand_w(2)
+    p = Q.calc_params(w, 2, 16)
+    hard = Q.dequantize(Q.quantize(w, p), p)
+    ste = Q.quantize_ste(w, p)
+    np.testing.assert_allclose(np.asarray(ste), np.asarray(hard),
+                               atol=1e-6)
+
+
+def test_ste_has_gradients():
+    import jax
+    w = rand_w(3)
+
+    def loss(clip_raw):
+        p = Q.calc_params(w, 2, 16,
+                          clip_lo=jax.nn.sigmoid(clip_raw),
+                          clip_hi=jax.nn.sigmoid(clip_raw))
+        return jnp.sum(Q.quantize_ste(w, p) ** 2)
+
+    g = jax.grad(loss)(jnp.full((2, 8), 2.0))
+    assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+def test_rtn_reduces_with_bits():
+    w = rand_w(4)
+    errs = []
+    for bits in (2, 3, 4, 6):
+        deq, _ = Q.rtn(w, bits, 16)
+        errs.append(float(jnp.mean((w - deq) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_groups_shape_guard():
+    with pytest.raises(AssertionError):
+        Q.n_groups(30, 16)

@@ -1,0 +1,133 @@
+//! App. D ablations over the router-variant bundles produced by
+//! `make ablations`:
+//!   Tab. 3  — calibration-dataset ablation (wiki/web/news/mix),
+//!             cross-evaluated on all three corpora + cloze accuracy.
+//!   Fig. 8  — budget-schedule ablation (log/linear/cosine/exp).
+//!   Fig. 9  — training target-bit ablation (2.5/3/3.5/4/5).
+//!   Fig. 10 — 4-bit activation quantization elasticity (App. E.4).
+
+use mobiquant::bench_support as bs;
+use mobiquant::data::{cloze, corpus, ppl};
+use mobiquant::mobiq::artifact::Bundle;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::weights::{BackendKind, LINEAR_NAMES};
+use mobiquant::model::Model;
+use mobiquant::util::bench::Suite;
+
+fn abl_bundle(tag: &str) -> Option<Bundle> {
+    let path = mobiquant::artifacts_dir()
+        .join("ablations")
+        .join(format!("tiny-s_{tag}.mobiq"));
+    if !path.exists() {
+        return None;
+    }
+    Bundle::load(path).ok()
+}
+
+fn main() {
+    let mut suite = Suite::new("ablations");
+    suite.header();
+    let windows = bs::eval_windows(5);
+    let dir = mobiquant::artifacts_dir();
+
+    // ------------------- Tab. 3: calibration dataset -------------------
+    let mut any = false;
+    for dom in ["wiki", "web", "news", "mix"] {
+        let Some(bundle) = abl_bundle(&format!("calib_{dom}")) else {
+            continue;
+        };
+        any = true;
+        let model = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+        let mut cells = Vec::new();
+        for eval_dom in ["wiki", "web", "news"] {
+            let toks = corpus::load_tokens(&dir, eval_dom,
+                                           corpus::Split::Valid).unwrap();
+            let r = ppl::evaluate(&model, &toks, Precision::elastic(3.0),
+                                  128, windows).unwrap();
+            cells.push((eval_dom.to_string(), r.ppl));
+        }
+        // downstream: cloze accuracy on wiki sentences
+        let text = corpus::load(&dir, "wiki", corpus::Split::Valid)
+            .unwrap();
+        let items = cloze::build_cloze(&text, 24, 3, 11);
+        let acc = cloze::eval_cloze(&model, &items,
+                                    Precision::elastic(4.0)).unwrap();
+        cells.push(("cloze_acc".to_string(), acc));
+        let named: Vec<(&str, f64)> = cells.iter()
+            .map(|(k, v)| (k.as_str(), *v)).collect();
+        suite.row(&format!("Tab3 calib={dom}"), &named);
+    }
+    if !any {
+        suite.note("ablation bundles missing; run `make ablations`");
+    }
+
+    // ------------------- Fig. 8: schedules ----------------------------
+    for sched in ["log", "linear", "cosine", "exp"] {
+        let Some(bundle) = abl_bundle(&format!("sched_{sched}")) else {
+            continue;
+        };
+        let model = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+        let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)
+            .unwrap();
+        let mut cells = Vec::new();
+        for target in [2.5, 3.0, 4.0, 6.0] {
+            let r = ppl::evaluate(&model, &toks,
+                                  Precision::elastic(target), 128,
+                                  windows).unwrap();
+            cells.push((format!("{target}"), r.ppl));
+        }
+        let named: Vec<(&str, f64)> = cells.iter()
+            .map(|(k, v)| (k.as_str(), *v)).collect();
+        suite.row(&format!("Fig8 sched={sched}"), &named);
+    }
+
+    // ------------------- Fig. 9: training target bits ------------------
+    for tb in ["2.5", "3.0", "3.5", "4.0", "5.0"] {
+        let Some(bundle) = abl_bundle(&format!("target_{tb}")) else {
+            continue;
+        };
+        let model = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+        let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)
+            .unwrap();
+        let mut cells = Vec::new();
+        for target in [2.5, 3.0, 4.0, 6.0] {
+            let r = ppl::evaluate(&model, &toks,
+                                  Precision::elastic(target), 128,
+                                  windows).unwrap();
+            cells.push((format!("{target}"), r.ppl));
+        }
+        let named: Vec<(&str, f64)> = cells.iter()
+            .map(|(k, v)| (k.as_str(), *v)).collect();
+        suite.row(&format!("Fig9 train_target={tb}"), &named);
+    }
+
+    // ------------------- Fig. 10: activation quantization --------------
+    if let Some(bundle) = bs::try_bundle("tiny-s") {
+        let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)
+            .unwrap();
+        let mut model = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+        for li in 0..model.cfg.n_layers {
+            for name in LINEAR_NAMES {
+                if let mobiquant::model::LinearBackend::Mobiq(m) =
+                    bs::linear_mut(&mut model, li, name)
+                {
+                    m.act_bits = Some(4);
+                }
+            }
+        }
+        let mut cells = Vec::new();
+        for target in [3.0, 4.0, 6.0, 8.0] {
+            let r = ppl::evaluate(&model, &toks,
+                                  Precision::elastic(target), 128,
+                                  windows).unwrap();
+            cells.push((format!("W{target}A4"), r.ppl));
+        }
+        let named: Vec<(&str, f64)> = cells.iter()
+            .map(|(k, v)| (k.as_str(), *v)).collect();
+        suite.row("Fig10 weight-elastic + A4", &named);
+    }
+    suite.note("paper shape: log/exp schedules best at low bits; 3.0 \
+                training target generalizes widest; W-elasticity \
+                survives A4 quantization");
+    suite.finish();
+}

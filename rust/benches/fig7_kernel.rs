@@ -1,0 +1,162 @@
+//! Fig. 7 — kernel evaluation: (left) end-to-end decode latency vs
+//! decode length against the FP comparator and an ABQ-LLM-style static
+//! low-bit kernel; (middle) latency breakdown (router / LUT-pack /
+//! bit-plane GEMV); (right) memory savings vs multi-precision deployment
+//! (the §5.2 "3.5x" claim).
+
+use mobiquant::bench_support as bs;
+use mobiquant::mobiq::engine::{Precision, Scratch};
+use mobiquant::mobiq::footprint::{FootprintInputs, LinearDims};
+use mobiquant::model::weights::{BackendKind, ModelConfig, LINEAR_NAMES};
+use mobiquant::model::transformer::DecodeStats;
+use mobiquant::model::Model;
+use mobiquant::util::bench::{black_box, Suite};
+use mobiquant::util::prng::Pcg;
+
+fn main() {
+    let mut suite = Suite::new("fig7_kernel");
+    suite.header();
+    let Some(bundle) = bs::try_bundle("tiny-m")
+        .or_else(|| bs::try_bundle("tiny-s")) else {
+        suite.note("no bundle");
+        suite.finish();
+        return;
+    };
+    let cfg = ModelConfig::from_bundle(&bundle).unwrap();
+
+    // ---------------- left: decode latency vs length ------------------
+    let fp = Model::load(&bundle, BackendKind::Fp32).unwrap();
+    let abq = Model::load(&bundle, BackendKind::MobiqDenseK(2)).unwrap();
+    let mobiq = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+    for len in [64usize, 128, 192] {
+        let mut cells = Vec::new();
+        for (name, model, prec) in [
+            ("FP32", &fp, Precision::Fixed(4)),
+            ("ABQ4b_dense", &abq, Precision::Fixed(2)),
+            ("MoBiQ@4b", &mobiq, Precision::elastic(4.0)),
+            ("MoBiQ@2.5b", &mobiq, Precision::elastic(2.5)),
+        ] {
+            let mut kv = model.new_kv();
+            let mut scratch = model.new_scratch();
+            let mut stats = DecodeStats::new(model.cfg.n_layers);
+            let t0 = std::time::Instant::now();
+            for &t in &[65u32, 32, 110, 101][..] {
+                let _ = t;
+            }
+            kv.reset();
+            for i in 0..len {
+                let tok = (65 + (i % 26)) as u32;
+                model.decode_step(tok, &mut kv, prec, &mut scratch,
+                                  &mut stats).unwrap();
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1000.0;
+            cells.push((name.to_string(), ms));
+        }
+        let named: Vec<(&str, f64)> = cells.iter()
+            .map(|(k, v)| (k.as_str(), *v)).collect();
+        suite.row(&format!("decode {len} tokens, total ms"), &named);
+    }
+
+    // ---------------- middle: latency breakdown -----------------------
+    // measured on the Mobiq linears directly: router score, LUT build
+    // ("packing"), bit-plane GEMV.
+    let mut rng = Pcg::new(3);
+    for target in [4.0f64, 8.0] {
+        let mut router_ns = 0f64;
+        let mut pack_ns = 0f64;
+        let mut gemv_ns = 0f64;
+        for li in 0..cfg.n_layers {
+            for name in LINEAR_NAMES {
+                let lin = match mobiq.layers[li].linear(name) {
+                    mobiquant::model::LinearBackend::Mobiq(m) => m,
+                    _ => continue,
+                };
+                let x = rng.normal_vec(lin.d_in, 1.0);
+                let mut scratch = Scratch::new(
+                    lin.d_in, lin.base.group_size, lin.router.hidden,
+                    cfg.n_slices);
+                let mut out = vec![0f32; lin.d_out];
+                let reps = 40;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    black_box(lin.route(&x, Precision::elastic(target),
+                                        &mut scratch));
+                }
+                router_ns += t0.elapsed().as_nanos() as f64 / reps as f64;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    scratch.lut.build(&x, lin.base.group_size);
+                }
+                pack_ns += t0.elapsed().as_nanos() as f64 / reps as f64;
+                let t0 = std::time::Instant::now();
+                for _ in 0..reps {
+                    mobiquant::mobiq::gemv::gemv_lut(
+                        &lin.slices, &lin.base, &scratch.lut,
+                        &scratch.mask, &mut out);
+                }
+                gemv_ns += t0.elapsed().as_nanos() as f64 / reps as f64;
+            }
+        }
+        let total = router_ns + pack_ns + gemv_ns;
+        suite.row(&format!("breakdown @target {target}b (frac)"), &[
+            ("router", router_ns / total),
+            ("pack_lut", pack_ns / total),
+            ("gemv", gemv_ns / total),
+            ("total_us_per_tok", total / 1000.0),
+        ]);
+    }
+
+    // ---------------- right: memory savings ---------------------------
+    let mut linears = Vec::new();
+    for _ in 0..cfg.n_layers {
+        for name in LINEAR_NAMES {
+            let (d_in, d_out) = cfg.linear_dims(name);
+            linears.push(LinearDims { d_in, d_out });
+        }
+    }
+    let fi = FootprintInputs {
+        linears,
+        group_size: cfg.group_size,
+        n_slices: cfg.n_slices,
+        slice_bits: cfg.slice_bits,
+        router_hidden: cfg.router_hidden,
+        fp_other_bytes: (2 * cfg.vocab_size * cfg.d_model
+            + (2 * cfg.n_layers + 1) * cfg.d_model) * 4,
+    };
+    let served = [2usize, 4, 6, 8];
+    suite.row("memory bytes", &[
+        ("fp16", fi.fp16_bytes() as f64),
+        ("multi_static", fi.multi_static_bytes(&served) as f64),
+        ("anybcq", fi.anybcq_bytes(&served) as f64),
+        ("mobiq", fi.mobiq_bytes() as f64),
+    ]);
+    suite.row("memory savings", &[
+        ("vs_multi_static", fi.savings_vs_multi(&served)),
+        ("router_frac",
+         fi.router_bytes() as f64 / fi.mobiq_bytes() as f64),
+    ]);
+    // paper-scale (LLaMA-2-7B dims) footprint for the headline number
+    let d = 4096;
+    let f = 11008;
+    let per: Vec<LinearDims> = vec![
+        LinearDims { d_in: d, d_out: d }, LinearDims { d_in: d, d_out: d },
+        LinearDims { d_in: d, d_out: d }, LinearDims { d_in: d, d_out: d },
+        LinearDims { d_in: d, d_out: f }, LinearDims { d_in: d, d_out: f },
+        LinearDims { d_in: f, d_out: d },
+    ];
+    let fi7b = FootprintInputs {
+        linears: (0..32).flat_map(|_| per.clone()).collect(),
+        group_size: 128,
+        n_slices: 4,
+        slice_bits: 2,
+        router_hidden: 16,
+        fp_other_bytes: 32000 * d * 4 * 2,
+    };
+    suite.row("7B-scale savings", &[
+        ("vs_multi_static", fi7b.savings_vs_multi(&served)),
+    ]);
+    suite.note("paper shape: low-bit decode beats FP, routing+packing \
+                overhead small and shrinking with precision, ~3x memory \
+                saving vs multi-precision deployment");
+    suite.finish();
+}

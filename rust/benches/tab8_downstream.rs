@@ -1,0 +1,56 @@
+//! Tab. 8 / Tab. 9 — downstream accuracy substitutes: likelihood-ranked
+//! cloze suite (zero-shot commonsense analogue) and templated-arithmetic
+//! exact match (GSM8K analogue), FP vs static 4-bit vs elastic MoBiQ.
+
+use mobiquant::bench_support as bs;
+use mobiquant::data::{cloze, corpus};
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::weights::BackendKind;
+use mobiquant::model::Model;
+use mobiquant::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("tab8_downstream");
+    suite.header();
+    let dir = mobiquant::artifacts_dir();
+    let Ok(text) = corpus::load(&dir, "wiki", corpus::Split::Valid) else {
+        suite.note("no corpus");
+        suite.finish();
+        return;
+    };
+    let n_items = bs::eval_windows(6) * 4;
+    let items = cloze::build_cloze(&text, n_items, 3, 42);
+    let arith = cloze::build_arith(n_items, 43);
+    suite.note(&format!("{} cloze items (3-way), {} arithmetic items",
+                        items.len(), arith.len()));
+
+    for mname in bs::models_available().iter().take(2) {
+        let Some(bundle) = bs::try_bundle(mname) else { continue };
+        let mut rows: Vec<(String, f64, f64)> = Vec::new();
+        let mut eval = |label: &str, model: &Model, prec: Precision,
+                        rows: &mut Vec<(String, f64, f64)>| {
+            let acc = cloze::eval_cloze(model, &items, prec).unwrap();
+            let am = cloze::eval_arith(model, &arith, prec).unwrap();
+            rows.push((label.to_string(), acc, am));
+        };
+        let fp = Model::load(&bundle, BackendKind::Fp32).unwrap();
+        eval("FP32", &fp, Precision::Fixed(4), &mut rows);
+        if bundle.static_methods().contains(&"omniquant4".to_string()) {
+            let m = Model::load(&bundle,
+                                BackendKind::Static("omniquant4".into()))
+                .unwrap();
+            eval("Omni4", &m, Precision::Fixed(4), &mut rows);
+        }
+        let mobiq = Model::load(&bundle, BackendKind::Mobiq).unwrap();
+        eval("MoBiQ@4", &mobiq, Precision::elastic(4.0), &mut rows);
+        eval("MoBiQ@3", &mobiq, Precision::elastic(3.0), &mut rows);
+
+        for (label, acc, am) in rows {
+            suite.row(&format!("{mname} {label}"),
+                      &[("cloze_acc", acc), ("arith_em", am)]);
+        }
+    }
+    suite.note("paper shape: elastic MoBiQ ~ static 4-bit on downstream \
+                tasks, close to FP");
+    suite.finish();
+}

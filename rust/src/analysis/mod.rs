@@ -1,0 +1,128 @@
+//! Outlier-migration and router analyses backing Figs. 1, 5, 6 and
+//! App. E.1/E.2.
+//!
+//! The central quantity is the per-token quantization error of one linear
+//! layer:  err_i = || x_i (W - W_q) ||^2  over probe activations x_i
+//! captured from the FP stream (Model::attn_inputs).  "Outlier migration"
+//! (paper §3) is the instability of the top-error token set across target
+//! bit-widths, measured by the overlap fraction of top-k sets.
+
+use crate::mobiq::engine::MobiqLinear;
+use crate::util::stats;
+
+/// Per-token error of a quantized weight vs FP: ||x (W - Wq)||^2.
+pub fn token_errors(w_fp: &[f32], w_q: &[f32], xs: &[Vec<f32>],
+                    d_in: usize, d_out: usize) -> Vec<f64> {
+    let diff: Vec<f32> = w_fp.iter().zip(w_q).map(|(a, b)| a - b).collect();
+    let mut out = Vec::with_capacity(xs.len());
+    let mut y = vec![0f32; d_out];
+    for x in xs {
+        crate::mobiq::gemv::matvec(&diff, x, &mut y, d_in, d_out);
+        out.push(y.iter().map(|&v| (v as f64).powi(2)).sum());
+    }
+    out
+}
+
+/// Indices of the top-`frac` tokens by error.
+pub fn top_outliers(errors: &[f64], frac: f64) -> Vec<usize> {
+    let k = ((errors.len() as f64 * frac).ceil() as usize).max(1);
+    let mut idx: Vec<usize> = (0..errors.len()).collect();
+    idx.sort_by(|&a, &b| errors[b].partial_cmp(&errors[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Overlap of top-outlier sets between two precisions — the App. E.1/E.2
+/// migration metric (41% on LLaMA, 16% on Mistral in the paper).
+pub fn outlier_overlap(err_a: &[f64], err_b: &[f64], frac: f64) -> f64 {
+    stats::overlap_fraction(&top_outliers(err_a, frac),
+                            &top_outliers(err_b, frac))
+}
+
+/// Fig. 5 (left): correlation between router scores (max over residual
+/// slices) and the per-token error *increment* when switching precision.
+pub fn router_error_correlation(lin: &MobiqLinear, xs: &[Vec<f32>],
+                                err_increment: &[f64]) -> f64 {
+    let scores: Vec<f64> = xs.iter()
+        .map(|x| {
+            lin.router.scores(x).iter().cloned().fold(f32::MIN, f32::max)
+                as f64
+        })
+        .collect();
+    stats::spearman(&scores, err_increment)
+}
+
+/// Distribution summary used by the figure benches.
+#[derive(Debug, Clone)]
+pub struct ErrorDist {
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    /// Tail mass: fraction of total error carried by the top 10% tokens
+    /// (high = strongly outlier-dominated).
+    pub top10_mass: f64,
+}
+
+pub fn summarize(errors: &[f64]) -> ErrorDist {
+    let total: f64 = errors.iter().sum();
+    let top = top_outliers(errors, 0.1);
+    let top_sum: f64 = top.iter().map(|&i| errors[i]).sum();
+    ErrorDist {
+        mean: stats::mean(errors),
+        p50: stats::percentile(errors, 50.0),
+        p90: stats::percentile(errors, 90.0),
+        p99: stats::percentile(errors, 99.0),
+        max: errors.iter().cloned().fold(f64::MIN, f64::max),
+        top10_mass: if total > 0.0 { top_sum / total } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    #[test]
+    fn zero_quant_error_when_equal() {
+        let w = vec![1.0f32; 8 * 4];
+        let xs = vec![vec![1.0f32; 8]; 3];
+        let e = token_errors(&w, &w, &xs, 8, 4);
+        assert!(e.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn top_outliers_orders() {
+        let e = vec![0.1, 5.0, 0.2, 3.0];
+        assert_eq!(top_outliers(&e, 0.5), vec![1, 3]);
+        assert_eq!(top_outliers(&e, 0.01), vec![1]);
+    }
+
+    #[test]
+    fn overlap_of_identical_errors_is_one() {
+        let e: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        assert_eq!(outlier_overlap(&e, &e, 0.1), 1.0);
+    }
+
+    #[test]
+    fn overlap_of_disjoint_outliers_is_zero() {
+        let mut a = vec![0f64; 100];
+        let mut b = vec![0f64; 100];
+        for i in 0..10 {
+            a[i] = 100.0;
+            b[99 - i] = 100.0;
+        }
+        assert_eq!(outlier_overlap(&a, &b, 0.1), 0.0);
+    }
+
+    #[test]
+    fn summary_tail_mass() {
+        let mut rng = Pcg::new(1);
+        let mut e: Vec<f64> = (0..100).map(|_| rng.f64()).collect();
+        e[0] = 1e6; // one dominant outlier
+        let s = summarize(&e);
+        assert!(s.top10_mass > 0.99);
+        assert!(s.max >= 1e6);
+    }
+}

@@ -1,0 +1,374 @@
+//! Baseline kernel implementations (see module docs in mod.rs).
+
+use crate::mobiq::bitplane::PackedSlice;
+use crate::mobiq::quantizer::{quantize, GroupParams};
+
+// ---------------------------------------------------------------------------
+// AnyPrecisionLLM-like: bit-planes + centroid table per (group, channel)
+// ---------------------------------------------------------------------------
+
+pub struct ApLinear {
+    /// Merged integer codes at max precision, packed per bit: planes[p]
+    /// over d_in, per output channel (same layout as PackedSlice).
+    pub planes: PackedSlice,
+    /// Centroid tables: (n_groups, d_out, 2^max_bits) dequantized values.
+    pub centroids: Vec<f32>,
+    pub max_bits: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub n_groups: usize,
+    pub group_size: usize,
+}
+
+impl ApLinear {
+    /// Build from dense weights with uniform codes (structurally faithful:
+    /// the overhead is the per-weight table gather, not the centroids'
+    /// values).
+    pub fn from_dense(w: &[f32], d_in: usize, d_out: usize,
+                      group_size: usize, max_bits: usize) -> ApLinear {
+        let p = GroupParams::from_minmax(w, d_in, d_out, max_bits as u32,
+                                         group_size);
+        let codes = quantize(w, &p);
+        let planes = PackedSlice::from_codes(&codes, d_in, d_out, max_bits);
+        let levels = 1usize << max_bits;
+        let n_groups = p.n_groups;
+        let mut centroids = vec![0f32; n_groups * d_out * levels];
+        for g in 0..n_groups {
+            for o in 0..d_out {
+                let (s, z) = p.at(g, o);
+                for c in 0..levels {
+                    centroids[(g * d_out + o) * levels + c] =
+                        s * (c as f32 - z + 0.5);
+                }
+            }
+        }
+        ApLinear { planes, centroids, max_bits, d_in, d_out, n_groups,
+                   group_size }
+    }
+
+    /// GEMV at `bits` effective precision: unpack the top `bits` planes
+    /// (bit-plane fetch, like ours) then dequantize each weight through
+    /// the centroid table — the AnyPrecisionLLM overhead.
+    pub fn gemv(&self, x: &[f32], bits: usize, out: &mut [f32]) {
+        let levels = 1usize << self.max_bits;
+        let drop = self.max_bits - bits.min(self.max_bits);
+        for o in 0..self.d_out {
+            let mut acc = 0f32;
+            for g in 0..self.n_groups {
+                let tab = &self.centroids[(g * self.d_out + o) * levels..];
+                for j in 0..self.group_size {
+                    let row = g * self.group_size + j;
+                    // gather the code bit-by-bit from the top planes
+                    let mut code = 0usize;
+                    for p in drop..self.max_bits {
+                        let w = self.planes.plane(p, o)[row / 64];
+                        code |= (((w >> (row % 64)) & 1) as usize) << p;
+                    }
+                    acc += tab[code] * x[row];
+                }
+            }
+            out[o] = acc;
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.planes.nbytes() + self.centroids.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AnyBCQ-like: binary planes with per-plane scale sets
+// ---------------------------------------------------------------------------
+
+pub struct AbcqLinear {
+    /// One binary (+-1) plane per bit of precision.
+    pub planes: Vec<PackedSlice>, // each slice_bits = 1
+    /// Per-plane scales: (n_planes, n_groups, d_out).
+    pub alphas: Vec<f32>,
+    pub n_planes: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub n_groups: usize,
+    pub group_size: usize,
+}
+
+impl AbcqLinear {
+    /// Greedy binary-coded quantization: plane p takes sign(residual),
+    /// alpha = mean |residual| per (group, channel).
+    pub fn from_dense(w: &[f32], d_in: usize, d_out: usize,
+                      group_size: usize, n_planes: usize) -> AbcqLinear {
+        let n_groups = d_in / group_size;
+        let mut resid = w.to_vec();
+        let mut planes = Vec::with_capacity(n_planes);
+        let mut alphas = vec![0f32; n_planes * n_groups * d_out];
+        for p in 0..n_planes {
+            let mut bits = vec![0u8; d_in * d_out];
+            for g in 0..n_groups {
+                for o in 0..d_out {
+                    let mut mean_abs = 0f32;
+                    for j in 0..group_size {
+                        mean_abs += resid[(g * group_size + j) * d_out + o]
+                            .abs();
+                    }
+                    mean_abs /= group_size as f32;
+                    alphas[(p * n_groups + g) * d_out + o] = mean_abs;
+                    for j in 0..group_size {
+                        let idx = (g * group_size + j) * d_out + o;
+                        let sign = if resid[idx] >= 0.0 { 1f32 } else { -1f32 };
+                        bits[idx] = (sign > 0.0) as u8;
+                        resid[idx] -= sign * mean_abs;
+                    }
+                }
+            }
+            planes.push(PackedSlice::from_codes(&bits, d_in, d_out, 1));
+        }
+        AbcqLinear { planes, alphas, n_planes, d_in, d_out, n_groups,
+                     group_size }
+    }
+
+    /// GEMV using the first `k` planes.  Per-plane scale multiply — the
+    /// AnyBCQ dequantization overhead (paper Fig. 3b).
+    pub fn gemv(&self, x: &[f32], k: usize, group_sums: &[f32],
+                out: &mut [f32]) {
+        let k = k.min(self.n_planes);
+        for o in 0..self.d_out {
+            let mut acc = 0f32;
+            for g in 0..self.n_groups {
+                let gsum = group_sums[g];
+                for p in 0..k {
+                    // masked sum over set bits (+1) vs unset (-1):
+                    // sum = 2*masked - gsum
+                    let plane = self.planes[p].plane(0, o);
+                    let mut masked = 0f32;
+                    let lo = g * self.group_size;
+                    let hi = lo + self.group_size;
+                    let mut row = lo;
+                    while row < hi {
+                        let word = plane[row / 64];
+                        let base_bit = row % 64;
+                        let span = (hi - row).min(64 - base_bit);
+                        let mut m = (word >> base_bit)
+                            & mask_lo(span);
+                        while m != 0 {
+                            masked += x[row + m.trailing_zeros() as usize];
+                            m &= m - 1;
+                        }
+                        row += span;
+                    }
+                    let alpha =
+                        self.alphas[(p * self.n_groups + g) * self.d_out + o];
+                    acc += alpha * (2.0 * masked - gsum);
+                }
+            }
+            out[o] = acc;
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.planes.iter().map(|p| p.nbytes()).sum::<usize>()
+            + self.alphas.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuIP#/QTIP-like vector quantization
+// ---------------------------------------------------------------------------
+
+pub struct VqLinear {
+    /// 8-bit code per 4-weight chunk along d_in, per output channel:
+    /// (d_out, d_in/4).
+    pub codes: Vec<u8>,
+    /// Codebook: (256, 4).
+    pub codebook: Vec<f32>,
+    /// Per-output scale.
+    pub scales: Vec<f32>,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl VqLinear {
+    /// K-means-free codebook: fixed E8-like lattice of 256 sign/magnitude
+    /// patterns; each chunk maps to its nearest entry.  Structurally
+    /// faithful (gather per 4 weights); fitting quality is secondary.
+    pub fn from_dense(w: &[f32], d_in: usize, d_out: usize) -> VqLinear {
+        assert_eq!(d_in % 4, 0);
+        // codebook: all sign patterns x 16 magnitude shapes
+        let mut codebook = vec![0f32; 256 * 4];
+        for i in 0..256 {
+            for j in 0..4 {
+                let sign = if (i >> j) & 1 == 1 { 1f32 } else { -1f32 };
+                let mag = 0.4 + 0.4 * (((i >> 4) & 0xF) as f32 / 15.0)
+                    * ((j % 2) as f32 + 1.0);
+                codebook[i * 4 + j] = sign * mag;
+            }
+        }
+        let mut codes = vec![0u8; d_out * d_in / 4];
+        let mut scales = vec![0f32; d_out];
+        for o in 0..d_out {
+            // per-output scale: rms of the column
+            let mut rms = 0f32;
+            for r in 0..d_in {
+                rms += w[r * d_out + o] * w[r * d_out + o];
+            }
+            let s = (rms / d_in as f32).sqrt().max(1e-8);
+            scales[o] = s;
+            for c in 0..d_in / 4 {
+                let chunk: Vec<f32> = (0..4)
+                    .map(|j| w[(c * 4 + j) * d_out + o] / s)
+                    .collect();
+                let mut best = (f32::INFINITY, 0usize);
+                for e in 0..256 {
+                    let mut d2 = 0f32;
+                    for j in 0..4 {
+                        let diff = chunk[j] - codebook[e * 4 + j];
+                        d2 += diff * diff;
+                    }
+                    if d2 < best.0 {
+                        best = (d2, e);
+                    }
+                }
+                codes[o * (d_in / 4) + c] = best.1 as u8;
+            }
+        }
+        VqLinear { codes, codebook, scales, d_in, d_out }
+    }
+
+    /// GEMV: codebook gather per 4 weights (the QuIP#/QTIP decode cost).
+    pub fn gemv(&self, x: &[f32], out: &mut [f32]) {
+        let chunks = self.d_in / 4;
+        for o in 0..self.d_out {
+            let mut acc = 0f32;
+            let row = &self.codes[o * chunks..(o + 1) * chunks];
+            for (c, &code) in row.iter().enumerate() {
+                let entry = &self.codebook[code as usize * 4..];
+                let xs = &x[c * 4..c * 4 + 4];
+                acc += entry[0] * xs[0] + entry[1] * xs[1]
+                    + entry[2] * xs[2] + entry[3] * xs[3];
+            }
+            out[o] = acc * self.scales[o];
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.codebook.len() * 4 + self.scales.len() * 4
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ABQ-LLM-like static low-bit dense kernel
+// ---------------------------------------------------------------------------
+
+pub struct AbqLinear {
+    pub weights: Vec<f32>, // dequantized at fixed bits
+    pub bits: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl AbqLinear {
+    pub fn from_dense(w: &[f32], d_in: usize, d_out: usize,
+                      group_size: usize, bits: usize) -> AbqLinear {
+        let p = GroupParams::from_minmax(w, d_in, d_out, bits as u32,
+                                         group_size);
+        let codes = quantize(w, &p);
+        let weights = crate::mobiq::quantizer::dequantize(&codes, &p);
+        AbqLinear { weights, bits, d_in, d_out }
+    }
+
+    pub fn gemv(&self, x: &[f32], out: &mut [f32]) {
+        crate::mobiq::gemv::matvec(&self.weights, x, out, self.d_in,
+                                   self.d_out);
+    }
+}
+
+#[inline]
+fn mask_lo(n: usize) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobiq::gemv::matvec;
+    use crate::util::prng::Pcg;
+
+    fn setup(seed: u64, d_in: usize, d_out: usize)
+             -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg::new(seed);
+        (rng.normal_vec(d_in * d_out, 0.2), rng.normal_vec(d_in, 1.0))
+    }
+
+    fn rel_err(y: &[f32], y_ref: &[f32]) -> f32 {
+        let num: f32 = y.iter().zip(y_ref)
+            .map(|(a, b)| (a - b) * (a - b)).sum();
+        let den: f32 = y_ref.iter().map(|b| b * b).sum();
+        (num / den.max(1e-12)).sqrt()
+    }
+
+    #[test]
+    fn ap_sim_accuracy_improves_with_bits() {
+        let (w, x) = setup(1, 64, 16);
+        let ap = ApLinear::from_dense(&w, 64, 16, 32, 8);
+        let mut y_ref = vec![0f32; 16];
+        matvec(&w, &x, &mut y_ref, 64, 16);
+        let mut prev = f32::INFINITY;
+        for bits in [2, 4, 8] {
+            let mut y = vec![0f32; 16];
+            ap.gemv(&x, bits, &mut y);
+            let e = rel_err(&y, &y_ref);
+            assert!(e < prev, "bits={bits}: {e} !< {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.02, "8-bit AP error {prev}");
+    }
+
+    #[test]
+    fn abcq_sim_accuracy_improves_with_planes() {
+        let (w, x) = setup(2, 64, 16);
+        let q = AbcqLinear::from_dense(&w, 64, 16, 32, 8);
+        let gsums: Vec<f32> = (0..2)
+            .map(|g| x[g * 32..(g + 1) * 32].iter().sum())
+            .collect();
+        let mut y_ref = vec![0f32; 16];
+        matvec(&w, &x, &mut y_ref, 64, 16);
+        let mut prev = f32::INFINITY;
+        for k in [1, 2, 4, 8] {
+            let mut y = vec![0f32; 16];
+            q.gemv(&x, k, &gsums, &mut y);
+            let e = rel_err(&y, &y_ref);
+            assert!(e < prev + 1e-6, "k={k}: {e} !< {prev}");
+            prev = e;
+        }
+        assert!(prev < 0.1, "8-plane BCQ error {prev}");
+    }
+
+    #[test]
+    fn vq_sim_roughly_reconstructs() {
+        let (w, x) = setup(3, 64, 16);
+        let vq = VqLinear::from_dense(&w, 64, 16);
+        let mut y_ref = vec![0f32; 16];
+        matvec(&w, &x, &mut y_ref, 64, 16);
+        let mut y = vec![0f32; 16];
+        vq.gemv(&x, &mut y);
+        // coarse 2-bit-equivalent quality: just require correlation
+        let c = crate::util::stats::pearson(
+            &y.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &y_ref.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!(c > 0.5, "vq corr {c}");
+    }
+
+    #[test]
+    fn abq_matches_rtn_dequant() {
+        let (w, x) = setup(4, 64, 16);
+        let abq = AbqLinear::from_dense(&w, 64, 16, 32, 4);
+        let mut y = vec![0f32; 16];
+        abq.gemv(&x, &mut y);
+        let mut y_ref = vec![0f32; 16];
+        matvec(&abq.weights, &x, &mut y_ref, 64, 16);
+        assert_eq!(y, y_ref);
+    }
+}

@@ -1,0 +1,20 @@
+//! Kernel simulators for the baseline systems compared in Tab. 1 and
+//! Fig. 7.  None of the baselines' CUDA kernels can run here; what the
+//! paper's comparison measures is each design's *characteristic overhead
+//! structure*, which these CPU kernels reproduce faithfully
+//! (DESIGN.md §2):
+//!
+//! * [`ap_sim`]   — AnyPrecisionLLM: bit-plane storage but **per-weight
+//!   centroid table lookups** (non-uniform codes) — one gather + FMA per
+//!   weight instead of per-group arithmetic.
+//! * [`abcq_sim`] — AnyBCQ: binary-coded planes with **per-slice scale
+//!   sets** — an extra scale load + multiply per plane, and E scale
+//!   arrays in memory.
+//! * [`vq_sim`]   — QuIP#/QTIP-style vector quantization: 4-wide codebook
+//!   entries, one table gather per 4 weights, fixed precision only.
+//! * [`abq_sim`]  — ABQ-LLM-style static low-bit kernel: dense dequant
+//!   GEMV at a fixed precision, loads every plane regardless of need.
+
+pub mod kernels;
+
+pub use kernels::{AbcqLinear, AbqLinear, ApLinear, VqLinear};

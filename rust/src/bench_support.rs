@@ -1,0 +1,149 @@
+//! Shared helpers for the bench harnesses (rust/benches/*.rs) — bundle
+//! loading with graceful skip, dense-model assembly from baseline
+//! kernels, and LWC re-quantization at unseen bit-widths (the paper's
+//! calibration/inference mismatch experiments).
+
+use anyhow::Result;
+
+use crate::mobiq::artifact::Bundle;
+use crate::mobiq::quantizer::GroupParams;
+use crate::mobiq::static_quant::StaticLinear;
+use crate::model::weights::{BackendKind, LinearBackend, LINEAR_NAMES};
+use crate::model::Model;
+
+/// Load a model bundle, or None (with a note) when artifacts are missing.
+pub fn try_bundle(name: &str) -> Option<Bundle> {
+    let path = crate::artifacts_dir().join(format!("{name}.mobiq"));
+    if !path.exists() {
+        println!("  SKIP {name}: {} missing (run `make artifacts`)",
+                 path.display());
+        return None;
+    }
+    match Bundle::load(&path) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            println!("  SKIP {name}: {e:#}");
+            None
+        }
+    }
+}
+
+pub fn models_available() -> Vec<String> {
+    let mut out = Vec::new();
+    for m in ["tiny-s", "tiny-m", "tiny-gqa", "tiny-l"] {
+        if crate::artifacts_dir().join(format!("{m}.mobiq")).exists() {
+            out.push(m.to_string());
+        }
+    }
+    out
+}
+
+/// Valid-set tokens for a domain.
+pub fn valid_tokens(domain: &str) -> Result<Vec<u32>> {
+    crate::data::corpus::load_tokens(&crate::artifacts_dir(), domain,
+                                     crate::data::corpus::Split::Valid)
+}
+
+/// Eval-budget knobs (override with MOBIQ_BENCH_WINDOWS).
+pub fn eval_windows(default: usize) -> usize {
+    std::env::var("MOBIQ_BENCH_WINDOWS").ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// FP weight matrix of one linear.
+pub fn fp_weight(bundle: &Bundle, layer: usize, name: &str)
+                 -> Result<(Vec<f32>, usize, usize)> {
+    let (shape, data) = bundle.f32(
+        &format!("fp.layers.{layer}.{name}"))?;
+    Ok((data.to_vec(), shape[0], shape[1]))
+}
+
+/// Build a model whose quantizable linears are replaced by dense weights
+/// produced per-linear by `f(layer, name, w_fp, d_in, d_out)`.
+pub fn dense_model_with(
+    bundle: &Bundle,
+    mut f: impl FnMut(usize, &str, &[f32], usize, usize) -> Vec<f32>,
+) -> Result<Model> {
+    let mut model = Model::load(bundle, BackendKind::Fp32)?;
+    for li in 0..model.cfg.n_layers {
+        for name in LINEAR_NAMES {
+            let (w, d_in, d_out) = fp_weight(bundle, li, name)?;
+            let new = f(li, name, &w, d_in, d_out);
+            assert_eq!(new.len(), w.len());
+            *linear_mut(&mut model, li, name) =
+                LinearBackend::Dense { w: new, d_in, d_out };
+        }
+    }
+    Ok(model)
+}
+
+pub fn linear_mut<'a>(model: &'a mut Model, layer: usize,
+                      name: &str) -> &'a mut LinearBackend {
+    let lw = &mut model.layers[layer];
+    match name {
+        "wq" => &mut lw.wq,
+        "wk" => &mut lw.wk,
+        "wv" => &mut lw.wv,
+        "wo" => &mut lw.wo,
+        "w_gate" => &mut lw.w_gate,
+        "w_up" => &mut lw.w_up,
+        "w_down" => &mut lw.w_down,
+        _ => panic!("unknown linear {name}"),
+    }
+}
+
+/// Re-quantize FP weights with another method's calibrated *range*
+/// (scale/zero) transferred to a different bit-width — the paper's
+/// "calibration bits != inference bits" mismatch (Fig. 1, Tab. 4-6).
+///
+/// Floor quantizer with range [lo, hi]: s_b = range / 2^b, z_b = -lo/s_b;
+/// so s_b' = s_b / 2^{b'-b}, z_b' = z_b * 2^{b'-b}.
+pub fn requantize_at(w_fp: &[f32], rec: &StaticLinear, new_bits: u32)
+                     -> Vec<f32> {
+    let p = &rec.params;
+    let shift = 2f32.powi(new_bits as i32 - p.bits as i32);
+    let p2 = GroupParams {
+        scale: p.scale.iter().map(|s| s / shift).collect(),
+        zero: p.zero.iter().map(|z| z * shift).collect(),
+        bits: new_bits,
+        ..p.clone()
+    };
+    // NOTE: for transformed methods (AWQ/SmoothQuant/QuaRot) the record's
+    // codes came from the transformed weight; we must re-quantize the
+    // transformed weight, which equals dequant at calib bits only up to
+    // quantization error.  Use the stored high-precision reconstruction:
+    // transformed w = act-transform applied on the fly at inference, so
+    // here we quantize the *stored transformed weight estimate*.
+    let w_src: Vec<f32> = if rec.transform
+        == crate::mobiq::static_quant::Transform::None
+    {
+        w_fp.to_vec()
+    } else {
+        // recover the transformed-space weight from the record itself at
+        // its native bits (best available estimate), then re-quantize.
+        rec.weights.clone()
+    };
+    let codes = crate::mobiq::quantizer::quantize(&w_src, &p2);
+    crate::mobiq::quantizer::dequantize(&codes, &p2)
+}
+
+/// Model with `method`'s calibration applied at `infer_bits` (mismatch
+/// experiment).  The activation transform of the method is preserved.
+pub fn mismatch_model(bundle: &Bundle, method: &str, infer_bits: u32)
+                      -> Result<Model> {
+    let mut model = Model::load(bundle,
+                                BackendKind::Static(method.to_string()))?;
+    for li in 0..model.cfg.n_layers {
+        for name in LINEAR_NAMES {
+            let (w_fp, _, _) = fp_weight(bundle, li, name)?;
+            let lin = linear_mut(&mut model, li, name);
+            if let LinearBackend::Static(rec) = lin {
+                let new_w = requantize_at(&w_fp, rec, infer_bits);
+                rec.weights = new_w;
+                rec.bits = infer_bits;
+            }
+        }
+    }
+    Ok(model)
+}

@@ -1,0 +1,119 @@
+//! Elastic precision controller.
+//!
+//! Maps a resource-pressure signal (plus queue backpressure) to the
+//! runtime precision knobs of Eq. 10: a target average bit-width and a
+//! global threshold shift delta.  Hysteresis prevents oscillation when
+//! the pressure hovers near a band edge — precision changes are free
+//! (no repacking), but PPL jitter is still undesirable.
+
+use crate::mobiq::engine::Precision;
+
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    pub min_bits: f64,
+    pub max_bits: f64,
+    /// Pressure weight of queue depth vs the external signal.
+    pub queue_weight: f64,
+    /// Minimum change in computed target before switching (hysteresis).
+    pub hysteresis_bits: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            min_bits: 2.0,
+            max_bits: 8.0,
+            queue_weight: 0.5,
+            hysteresis_bits: 0.45,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ElasticController {
+    cfg: ControllerConfig,
+    current_bits: f64,
+    switches: u64,
+}
+
+impl ElasticController {
+    pub fn new(cfg: ControllerConfig) -> ElasticController {
+        let start = cfg.max_bits;
+        ElasticController { cfg, current_bits: start, switches: 0 }
+    }
+
+    /// Update with external pressure and queue pressure, both in [0, 1].
+    /// Returns the precision to use for the next scheduling tick.
+    pub fn update(&mut self, external: f64, queue: f64) -> Precision {
+        let p = (external + self.cfg.queue_weight * queue)
+            .clamp(0.0, 1.0);
+        let raw = self.cfg.max_bits
+            - (self.cfg.max_bits - self.cfg.min_bits) * p;
+        if (raw - self.current_bits).abs() >= self.cfg.hysteresis_bits {
+            self.current_bits = raw;
+            self.switches += 1;
+        }
+        self.precision()
+    }
+
+    pub fn precision(&self) -> Precision {
+        Precision::elastic(self.current_bits)
+    }
+
+    pub fn target_bits(&self) -> f64 {
+        self.current_bits
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pressure_lowers_bits() {
+        let mut c = ElasticController::new(ControllerConfig::default());
+        let _ = c.update(0.0, 0.0);
+        let calm = c.target_bits();
+        let _ = c.update(1.0, 0.0);
+        let loaded = c.target_bits();
+        assert!(loaded < calm);
+        assert!((2.0..=8.0).contains(&loaded));
+        assert_eq!(calm, 8.0);
+        assert_eq!(loaded, 2.0);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_jitter() {
+        let mut c = ElasticController::new(ControllerConfig::default());
+        let _ = c.update(0.5, 0.0);
+        let s0 = c.switches();
+        // tiny oscillation around the same pressure: no switch
+        for p in [0.51, 0.49, 0.505, 0.495] {
+            let _ = c.update(p, 0.0);
+        }
+        assert_eq!(c.switches(), s0);
+        // large move: switch
+        let _ = c.update(1.0, 0.0);
+        assert_eq!(c.switches(), s0 + 1);
+    }
+
+    #[test]
+    fn queue_pressure_contributes() {
+        let mut a = ElasticController::new(ControllerConfig::default());
+        let mut b = ElasticController::new(ControllerConfig::default());
+        let _ = a.update(0.3, 0.0);
+        let _ = b.update(0.3, 1.0);
+        assert!(b.target_bits() < a.target_bits());
+    }
+
+    #[test]
+    fn clamped_to_band() {
+        let mut c = ElasticController::new(ControllerConfig::default());
+        let _ = c.update(5.0, 5.0); // silly inputs
+        assert!(c.target_bits() >= 2.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Serving metrics: counters + streaming latency histograms.
+
+use crate::util::stats;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub decode_latencies_ms: Vec<f64>,   // per generated token
+    pub request_latencies_ms: Vec<f64>,  // end-to-end
+    pub avg_bits_series: Vec<f64>,       // controller trace per tick
+    pub target_bits_series: Vec<f64>,
+    pub rejected: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&mut self, total_ms: f64, n_tokens: usize) {
+        self.requests_completed += 1;
+        self.tokens_generated += n_tokens as u64;
+        self.request_latencies_ms.push(total_ms);
+    }
+
+    pub fn record_token(&mut self, ms: f64) {
+        self.decode_latencies_ms.push(ms);
+    }
+
+    pub fn record_tick(&mut self, avg_bits: f64, target_bits: f64) {
+        self.avg_bits_series.push(avg_bits);
+        self.target_bits_series.push(target_bits);
+    }
+
+    pub fn p50_token_ms(&self) -> f64 {
+        stats::percentile(&self.decode_latencies_ms, 50.0)
+    }
+    pub fn p99_token_ms(&self) -> f64 {
+        stats::percentile(&self.decode_latencies_ms, 99.0)
+    }
+    pub fn mean_request_ms(&self) -> f64 {
+        stats::mean(&self.request_latencies_ms)
+    }
+
+    pub fn throughput_tokens_per_s(&self, wall_s: f64) -> f64 {
+        if wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / wall_s
+    }
+
+    pub fn summary(&self, wall_s: f64) -> String {
+        format!(
+            "requests={} tokens={} tput={:.1} tok/s p50_tok={:.2}ms \
+             p99_tok={:.2}ms mean_req={:.1}ms rejected={}",
+            self.requests_completed,
+            self.tokens_generated,
+            self.throughput_tokens_per_s(wall_s),
+            self.p50_token_ms(),
+            self.p99_token_ms(),
+            self.mean_request_ms(),
+            self.rejected,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut m = Metrics::default();
+        m.record_request(100.0, 10);
+        m.record_request(200.0, 20);
+        for i in 0..10 {
+            m.record_token(i as f64);
+        }
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.tokens_generated, 30);
+        assert_eq!(m.mean_request_ms(), 150.0);
+        assert!((m.p50_token_ms() - 4.5).abs() < 1e-9);
+        assert_eq!(m.throughput_tokens_per_s(3.0), 10.0);
+    }
+}

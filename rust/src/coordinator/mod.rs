@@ -1,0 +1,27 @@
+//! Elastic serving coordinator — the L3 system contribution.
+//!
+//! The paper motivates token-adaptive any-precision inference with edge
+//! deployments whose resources fluctuate at runtime (§1).  This module is
+//! the serving stack that turns MoBiQuant's threshold elasticity (Eq. 10)
+//! into a running system:
+//!
+//! * [`request`]    — request/response types and the submission API.
+//! * [`batcher`]    — admission queue + continuous batching.
+//! * [`controller`] — elastic precision controller: resource pressure +
+//!   queue depth -> (target bits, global delta), with hysteresis.
+//! * [`scheduler`]  — the decode loop: interleaves active sequences,
+//!   applies the controller's precision each tick, retires finished
+//!   sequences, admits new ones.
+//! * [`server`]     — owns the model + scheduler thread; public facade.
+//! * [`metrics`]    — latency/throughput/bits accounting.
+
+pub mod batcher;
+pub mod controller;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use controller::ElasticController;
+pub use request::{Request, RequestId, Response};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,48 @@
+//! Request/response types for the serving API.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub submitted: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Generated suffix only (excludes the prompt).
+    pub generated: Vec<u32>,
+    pub metrics: RequestMetrics,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub queue_ms: f64,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub total_ms: f64,
+    pub generated_tokens: usize,
+    /// Average effective weight bits over the request's routed linears.
+    pub avg_bits: f64,
+}
+
+impl Response {
+    pub fn text(&self) -> String {
+        crate::data::tokenizer::decode(&self.generated)
+    }
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        if self.metrics.decode_ms <= 0.0 {
+            return 0.0;
+        }
+        self.metrics.generated_tokens as f64
+            / (self.metrics.decode_ms / 1000.0)
+    }
+}

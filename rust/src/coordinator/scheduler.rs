@@ -1,0 +1,200 @@
+//! The decode scheduler: continuous batching with elastic precision.
+//!
+//! Each tick the scheduler (1) admits queued requests into free sequence
+//! slots, (2) asks the elastic controller for the tick's precision given
+//! external + queue pressure, (3) advances every active sequence by one
+//! token (chunked prefill first, then decode), and (4) retires finished
+//! sequences.  On this 1-core testbed sequences are advanced round-robin;
+//! the structure mirrors a vLLM-style continuous batcher.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Admission, Batcher};
+use super::controller::ElasticController;
+use super::metrics::Metrics;
+use super::request::{Request, RequestMetrics, Response};
+use crate::mobiq::engine::Precision;
+use crate::model::kvcache::SequenceKv;
+use crate::model::transformer::{argmax, DecodeScratch, DecodeStats};
+use crate::model::Model;
+
+/// Prompt tokens consumed per tick per sequence during prefill.
+const PREFILL_CHUNK: usize = 16;
+
+struct ActiveSeq {
+    req: Request,
+    kv: SequenceKv,
+    tokens: Vec<u32>,
+    prompt_len: usize,
+    fed: usize,          // how many tokens have entered the model
+    generated: usize,
+    stats: DecodeStats,
+    prefill_ms: f64,
+    decode_ms: f64,
+    admitted_at: Instant,
+}
+
+pub struct Scheduler<'m> {
+    pub model: &'m Model,
+    pub batcher: Batcher,
+    pub controller: ElasticController,
+    pub metrics: Metrics,
+    active: Vec<ActiveSeq>,
+    scratch: DecodeScratch,
+    started: Instant,
+}
+
+impl<'m> Scheduler<'m> {
+    pub fn new(model: &'m Model, batcher: Batcher,
+               controller: ElasticController) -> Scheduler<'m> {
+        Scheduler {
+            scratch: model.new_scratch(),
+            model,
+            batcher,
+            controller,
+            metrics: Metrics::default(),
+            active: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        if matches!(self.batcher.submit(req), Admission::Rejected) {
+            self.metrics.rejected += 1;
+        }
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.batcher.queued() == 0
+    }
+
+    /// One scheduling tick under the given external pressure.
+    /// Returns the number of model steps executed.
+    pub fn tick(&mut self, external_pressure: f64) -> Result<usize> {
+        // 1. admission
+        for req in self.batcher.admit(self.active.len()) {
+            let max_prompt = self.model.cfg.max_seq_len
+                .saturating_sub(req.max_new_tokens + 1);
+            let mut tokens = req.prompt.clone();
+            tokens.truncate(max_prompt.max(1));
+            self.active.push(ActiveSeq {
+                kv: self.model.new_kv(),
+                prompt_len: tokens.len(),
+                tokens,
+                fed: 0,
+                generated: 0,
+                stats: DecodeStats::new(self.model.cfg.n_layers),
+                prefill_ms: 0.0,
+                decode_ms: 0.0,
+                admitted_at: Instant::now(),
+                req,
+            });
+        }
+
+        // 2. precision for this tick
+        let precision = self.controller
+            .update(external_pressure, self.batcher.pressure());
+
+        // 3. advance sequences
+        let mut steps = 0usize;
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, seq) in self.active.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            if seq.fed < seq.prompt_len {
+                // chunked prefill
+                let end = (seq.fed + PREFILL_CHUNK).min(seq.prompt_len);
+                for j in seq.fed..end {
+                    self.model.decode_step(seq.tokens[j], &mut seq.kv,
+                                           precision, &mut self.scratch,
+                                           &mut seq.stats)?;
+                    steps += 1;
+                }
+                seq.fed = end;
+                seq.prefill_ms += t0.elapsed().as_secs_f64() * 1000.0;
+                if seq.fed == seq.prompt_len {
+                    // emit first generated token right after prefill
+                    let next = argmax(&self.scratch.logits) as u32;
+                    seq.tokens.push(next);
+                    seq.generated = 1;
+                }
+            } else {
+                // decode: feed the most recent token (fed points at it)
+                self.model.decode_step(seq.tokens[seq.fed], &mut seq.kv,
+                                       precision, &mut self.scratch,
+                                       &mut seq.stats)?;
+                seq.fed += 1;
+                steps += 1;
+                let next = argmax(&self.scratch.logits) as u32;
+                seq.tokens.push(next);
+                seq.generated += 1;
+                let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                seq.decode_ms += ms;
+                self.metrics.record_token(ms);
+            }
+            let kv_full = seq.kv.len() + 1 >= self.model.cfg.max_seq_len;
+            if seq.generated >= seq.req.max_new_tokens || kv_full {
+                finished.push(i);
+            }
+        }
+
+        // 4. retire
+        for &i in finished.iter().rev() {
+            let seq = self.active.swap_remove(i);
+            let total_ms =
+                seq.req.submitted.elapsed().as_secs_f64() * 1000.0;
+            let queue_ms =
+                (seq.admitted_at - seq.req.submitted).as_secs_f64() * 1000.0;
+            let prompt_len = seq.prompt_len;
+            let resp = Response {
+                id: seq.req.id,
+                generated: seq.tokens[prompt_len..].to_vec(),
+                tokens: seq.tokens,
+                metrics: RequestMetrics {
+                    queue_ms,
+                    prefill_ms: seq.prefill_ms,
+                    decode_ms: seq.decode_ms,
+                    total_ms,
+                    generated_tokens: seq.generated,
+                    avg_bits: seq.stats.avg_bits(),
+                },
+            };
+            self.metrics.record_request(total_ms, seq.generated);
+            let _ = seq.req.reply.send(resp); // receiver may have gone away
+        }
+
+        let avg_bits = if self.active.is_empty() {
+            self.controller.target_bits()
+        } else {
+            self.active.iter().map(|s| s.stats.avg_bits()).sum::<f64>()
+                / self.active.len() as f64
+        };
+        self.metrics.record_tick(avg_bits, self.controller.target_bits());
+        Ok(steps)
+    }
+
+    /// Drive until all submitted work completes.
+    pub fn run_to_completion(
+        &mut self,
+        pressure_at: impl Fn(f64) -> f64,
+    ) -> Result<()> {
+        while !self.idle() {
+            let t_ms = self.started.elapsed().as_secs_f64() * 1000.0;
+            self.tick(pressure_at(t_ms))?;
+        }
+        Ok(())
+    }
+
+    pub fn current_precision(&self) -> Precision {
+        self.controller.precision()
+    }
+
+    pub fn wall_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}

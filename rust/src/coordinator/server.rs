@@ -1,0 +1,144 @@
+//! Server facade: owns the model and runs the scheduler on a dedicated
+//! thread; clients submit prompts and receive responses over channels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::controller::{ControllerConfig, ElasticController};
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use super::scheduler::Scheduler;
+use crate::model::Model;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_active: usize,
+    pub max_queue: usize,
+    pub controller: ControllerConfig,
+    /// External resource pressure in [0, 1] sampled each tick via the
+    /// shared cell (set by the embedder, e.g. from a workload trace).
+    pub initial_pressure: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_active: 4,
+            max_queue: 64,
+            controller: ControllerConfig::default(),
+            initial_pressure: 0.0,
+        }
+    }
+}
+
+enum Msg {
+    Req(Request),
+    SetPressure(f64),
+    Shutdown(mpsc::Sender<Metrics>),
+}
+
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Takes ownership of the model; the scheduler thread drives it.
+    pub fn start(model: Model, cfg: ServerConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let handle = thread::Builder::new()
+            .name("mobiq-scheduler".into())
+            .spawn(move || Self::run(model, cfg, rx))
+            .expect("spawn scheduler");
+        Server {
+            tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            handle: Some(handle),
+        }
+    }
+
+    fn run(model: Model, cfg: ServerConfig, rx: mpsc::Receiver<Msg>) {
+        let batcher = Batcher::new(cfg.max_active, cfg.max_queue);
+        let controller = ElasticController::new(cfg.controller.clone());
+        let mut sched = Scheduler::new(&model, batcher, controller);
+        let mut pressure = cfg.initial_pressure;
+        loop {
+            // drain control/requests without blocking while busy
+            loop {
+                let msg = if sched.idle() {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return,
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(m) => m,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => return,
+                    }
+                };
+                match msg {
+                    Msg::Req(r) => sched.submit(r),
+                    Msg::SetPressure(p) => pressure = p,
+                    Msg::Shutdown(reply) => {
+                        let _ = reply.send(sched.metrics.clone());
+                        return;
+                    }
+                }
+            }
+            if let Err(e) = sched.tick(pressure) {
+                eprintln!("scheduler error: {e:#}");
+                return;
+            }
+        }
+    }
+
+    /// Submit a prompt; returns (id, receiver for the response).
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize)
+                  -> (RequestId, mpsc::Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        let _ = self.tx.send(Msg::Req(Request {
+            id,
+            prompt,
+            max_new_tokens,
+            submitted: Instant::now(),
+            reply: tx,
+        }));
+        (id, rx)
+    }
+
+    /// Update the external resource-pressure signal (0 = calm, 1 = starved).
+    pub fn set_pressure(&self, p: f64) {
+        let _ = self.tx.send(Msg::SetPressure(p));
+    }
+
+    /// Graceful shutdown; returns final metrics.
+    pub fn shutdown(mut self) -> Result<Metrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Shutdown(tx))
+            .map_err(|_| anyhow::anyhow!("scheduler already gone"))?;
+        let metrics = rx.recv()?;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        Ok(metrics)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let (tx, _rx) = mpsc::channel();
+            let _ = self.tx.send(Msg::Shutdown(tx));
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Synthetic downstream evaluation suites (Tab. 8 / Tab. 9 substitutes).
+//!
+//! * **Cloze suite** — zero-shot commonsense analogue: the model picks the
+//!   true continuation of a corpus sentence among distractors sampled from
+//!   other sentences, scored by likelihood (the same measurement as
+//!   BoolQ/PIQA/ARC accuracy via LM scoring).
+//! * **Arithmetic suite** — GSM8K analogue: templated sum/difference word
+//!   problems in the corpus style; exact-match of the greedy-decoded
+//!   answer digits.
+
+use anyhow::Result;
+
+use super::corpus::sentences;
+use super::ppl::continuation_logprob;
+use super::tokenizer::encode;
+use crate::mobiq::engine::Precision;
+use crate::model::transformer::DecodeStats;
+use crate::model::Model;
+use crate::util::prng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct ClozeItem {
+    pub prompt: String,
+    pub choices: Vec<String>, // choices[0] is correct
+}
+
+/// Build cloze items from corpus text: split each eligible sentence at a
+/// word boundary ~60% in; distractor completions come from other
+/// sentences' tails.
+pub fn build_cloze(text: &str, n_items: usize, n_choices: usize,
+                   seed: u64) -> Vec<ClozeItem> {
+    let sents: Vec<&str> = sentences(text);
+    let mut rng = Pcg::new(seed);
+    let mut items = Vec::new();
+    if sents.len() < n_choices + 1 {
+        return items;
+    }
+    let mut splits: Vec<(String, String)> = Vec::new();
+    for s in &sents {
+        let cut = (s.len() * 3 / 5).min(s.len() - 8);
+        // snap to a space so the continuation starts at a word boundary
+        if let Some(sp) = s[..cut].rfind(' ') {
+            if sp > 10 {
+                splits.push((s[..sp].to_string(), s[sp..].to_string()));
+            }
+        }
+    }
+    for _ in 0..n_items {
+        if splits.len() < n_choices + 1 {
+            break;
+        }
+        let i = rng.below(splits.len());
+        let (prompt, correct) = splits[i].clone();
+        let mut choices = vec![correct];
+        while choices.len() < n_choices {
+            let j = rng.below(splits.len());
+            if j != i && splits[j].1 != choices[0] {
+                choices.push(splits[j].1.clone());
+            }
+        }
+        items.push(ClozeItem { prompt, choices });
+    }
+    items
+}
+
+/// Accuracy of likelihood-ranked choice (choice 0 is gold).  Length-
+/// normalised log-prob, as standard for multiple-choice LM eval.
+pub fn eval_cloze(model: &Model, items: &[ClozeItem],
+                  precision: Precision) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in items {
+        let prompt = encode(&item.prompt);
+        let mut best = (f64::NEG_INFINITY, 0usize);
+        for (ci, choice) in item.choices.iter().enumerate() {
+            let cont = encode(choice);
+            let lp = continuation_logprob(model, &prompt, &cont,
+                                          precision)?
+                / cont.len().max(1) as f64;
+            if lp > best.0 {
+                best = (lp, ci);
+            }
+        }
+        if best.1 == 0 {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+#[derive(Debug, Clone)]
+pub struct ArithItem {
+    pub prompt: String,
+    pub answer: String,
+}
+
+/// Templated arithmetic word problems in the news-corpus register.
+pub fn build_arith(n_items: usize, seed: u64) -> Vec<ArithItem> {
+    let mut rng = Pcg::new(seed);
+    let goods = ["grain", "copper", "timber", "salt", "wool"];
+    (0..n_items)
+        .map(|_| {
+            let a = 2 + rng.below(8);
+            let b = 1 + rng.below(8);
+            let g = goods[rng.below(goods.len())];
+            let sum = a + b;
+            ArithItem {
+                prompt: format!(
+                    "The exchange sold {a} tons of {g} and then {b} more \
+                     tons. In total it sold "),
+                answer: format!("{sum}"),
+            }
+        })
+        .collect()
+}
+
+/// Exact-match accuracy of greedy decode on the answer digits.
+pub fn eval_arith(model: &Model, items: &[ArithItem],
+                  precision: Precision) -> Result<f64> {
+    let mut correct = 0usize;
+    for item in items {
+        let prompt = encode(&item.prompt);
+        let mut stats = DecodeStats::new(model.cfg.n_layers);
+        let out = model.generate(&prompt, item.answer.len() + 1,
+                                 precision, &mut stats)?;
+        let gen = super::tokenizer::decode(&out[prompt.len()..]);
+        if gen.trim_start().starts_with(&item.answer) {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "The ancient settlement was founded near the \
+        river and became a center of trade. Officials in Ostia reported \
+        that the reservoir would require forty million to restore. The \
+        fortified structure was completed during the medieval period and \
+        flourished. Early records describe the coastal province as \
+        devoted to navigation and weaving. Trading in copper closed up \
+        four points in Kessel yesterday evening.";
+
+    #[test]
+    fn cloze_items_wellformed() {
+        let items = build_cloze(TEXT, 8, 3, 42);
+        assert!(!items.is_empty());
+        for it in &items {
+            assert_eq!(it.choices.len(), 3);
+            assert!(it.prompt.len() >= 10);
+            // gold continuation differs from distractors
+            assert_ne!(it.choices[0], it.choices[1]);
+        }
+    }
+
+    #[test]
+    fn cloze_deterministic() {
+        let a = build_cloze(TEXT, 4, 2, 7);
+        let b = build_cloze(TEXT, 4, 2, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+
+    #[test]
+    fn arith_answers_correct() {
+        for it in build_arith(20, 3) {
+            // parse back the numbers from the prompt and check the answer
+            let nums: Vec<usize> = it.prompt
+                .split_whitespace()
+                .filter_map(|w| w.parse().ok())
+                .collect();
+            assert_eq!(nums.len(), 2);
+            assert_eq!(format!("{}", nums[0] + nums[1]), it.answer);
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Corpus loading.  The synthetic corpora (wiki/web/news — stand-ins for
+//! WikiText2/C4/PTB, DESIGN.md §2) are generated deterministically by
+//! python/compile/corpus.py at `make artifacts`; Rust reads the files so
+//! both languages see byte-identical data.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub const DOMAINS: [&str; 3] = ["wiki", "web", "news"];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+}
+
+impl Split {
+    fn name(self) -> &'static str {
+        match self {
+            Split::Train => "train",
+            Split::Valid => "valid",
+        }
+    }
+}
+
+pub fn load(artifacts: &Path, domain: &str, split: Split) -> Result<String> {
+    let path = artifacts
+        .join("corpus")
+        .join(format!("{domain}.{}.txt", split.name()));
+    std::fs::read_to_string(&path)
+        .with_context(|| format!("reading corpus {}", path.display()))
+}
+
+pub fn load_tokens(artifacts: &Path, domain: &str, split: Split)
+                   -> Result<Vec<u32>> {
+    Ok(super::tokenizer::encode(&load(artifacts, domain, split)?))
+}
+
+/// Split a token stream into non-overlapping (input, target) windows.
+pub fn windows(tokens: &[u32], window: usize, max_windows: usize)
+               -> Vec<(&[u32], &[u32])> {
+    let n = ((tokens.len().saturating_sub(1)) / window).min(max_windows);
+    (0..n)
+        .map(|i| {
+            let lo = i * window;
+            (&tokens[lo..lo + window], &tokens[lo + 1..lo + window + 1])
+        })
+        .collect()
+}
+
+/// Sentence segmentation for the cloze suite (period/newline boundaries).
+pub fn sentences(text: &str) -> Vec<&str> {
+    text.split(|c| c == '.' || c == '\n')
+        .map(str::trim)
+        .filter(|s| s.len() >= 20 && s.len() <= 240)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_shapes() {
+        let toks: Vec<u32> = (0..100).collect();
+        let w = windows(&toks, 10, 100);
+        assert_eq!(w.len(), 9);
+        assert_eq!(w[0].0, &toks[0..10]);
+        assert_eq!(w[0].1, &toks[1..11]);
+        let w = windows(&toks, 10, 3);
+        assert_eq!(w.len(), 3);
+    }
+
+    #[test]
+    fn sentences_filters_short() {
+        let s = sentences("Tiny. This sentence is long enough to keep \
+                           around for a test. x.\nAnother usable sentence \
+                           that is fine too");
+        assert_eq!(s.len(), 2);
+    }
+}

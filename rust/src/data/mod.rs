@@ -1,0 +1,7 @@
+//! Data pipeline: corpora, tokenization, evaluation suites, workloads.
+
+pub mod cloze;
+pub mod corpus;
+pub mod ppl;
+pub mod tokenizer;
+pub mod workload;

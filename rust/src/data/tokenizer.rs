@@ -1,0 +1,115 @@
+//! Byte-level tokenizer (vocab = 256), mirroring
+//! python/compile/corpus.py::tokenize, plus a small greedy-BPE trainer
+//! used by the workload generator to build prompt vocabularies.
+
+/// Byte-level encode: identity over UTF-8 bytes.
+pub fn encode(text: &str) -> Vec<u32> {
+    text.as_bytes().iter().map(|&b| b as u32).collect()
+}
+
+/// Decode byte tokens back to a (lossy) string.
+pub fn decode(tokens: &[u32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| t as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// A learned merge rule (a, b) -> new_id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Merge {
+    pub a: u32,
+    pub b: u32,
+    pub id: u32,
+}
+
+/// Greedy byte-pair-encoding trainer.  Not used by the model itself (the
+/// substitute family is byte-level like the paper's smallest settings),
+/// but the workload generator uses merges to sample realistic prompt
+/// boundaries, and it exercises the data substrate end to end.
+pub struct Bpe {
+    pub merges: Vec<Merge>,
+}
+
+impl Bpe {
+    pub fn train(text: &str, n_merges: usize) -> Bpe {
+        let mut toks = encode(text);
+        let mut merges = Vec::new();
+        let mut next_id = 256u32;
+        for _ in 0..n_merges {
+            let mut counts = std::collections::HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+            }
+            let Some((&(a, b), &n)) =
+                counts.iter().max_by_key(|(_, &n)| n)
+            else { break };
+            if n < 2 {
+                break;
+            }
+            merges.push(Merge { a, b, id: next_id });
+            toks = apply_merge(&toks, a, b, next_id);
+            next_id += 1;
+        }
+        Bpe { merges }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut toks = encode(text);
+        for m in &self.merges {
+            toks = apply_merge(&toks, m.a, m.b, m.id);
+        }
+        toks
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+}
+
+fn apply_merge(toks: &[u32], a: u32, b: u32, id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && toks[i] == a && toks[i + 1] == b {
+            out.push(id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let s = "hello, wörld!";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn bpe_learns_frequent_pair() {
+        let bpe = Bpe::train("ababababab", 1);
+        assert_eq!(bpe.merges.len(), 1);
+        let m = &bpe.merges[0];
+        assert_eq!((m.a, m.b), (b'a' as u32, b'b' as u32));
+        let enc = bpe.encode("abab");
+        assert_eq!(enc, vec![m.id, m.id]);
+    }
+
+    #[test]
+    fn bpe_stops_without_repeats() {
+        let bpe = Bpe::train("abcdefg", 10);
+        assert!(bpe.merges.is_empty());
+    }
+
+    #[test]
+    fn merge_does_not_chain_overlap() {
+        // "aaa" with merge (a,a): greedy left-to-right -> [id, a]
+        let toks = apply_merge(&[97, 97, 97], 97, 97, 256);
+        assert_eq!(toks, vec![256, 97]);
+    }
+}

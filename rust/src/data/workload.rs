@@ -1,0 +1,158 @@
+//! Serving workload generation: request traces with arrival times, prompt
+//! and generation lengths, plus a resource-pressure signal driving the
+//! elastic precision controller (the paper's "dynamic runtime latency and
+//! memory constraints" motivation, §1).
+
+use crate::util::prng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: u64,
+    /// Arrival offset from trace start, in milliseconds.
+    pub arrival_ms: f64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub n_requests: usize,
+    /// Mean arrival rate (requests per second), Poisson process.
+    pub rate_per_s: f64,
+    pub prompt_len: (usize, usize),   // uniform range
+    pub gen_len: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_requests: 32,
+            rate_per_s: 8.0,
+            prompt_len: (8, 48),
+            gen_len: (8, 32),
+            seed: 0,
+        }
+    }
+}
+
+/// Sample a Poisson-arrival request trace with prompts cut from corpus
+/// text.
+pub fn generate_trace(corpus_tokens: &[u32], cfg: &TraceConfig)
+                      -> Vec<RequestSpec> {
+    let mut rng = Pcg::new(cfg.seed);
+    let mut t_ms = 0f64;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        // exponential inter-arrival
+        let u = rng.f64().max(1e-12);
+        t_ms += -u.ln() / cfg.rate_per_s * 1000.0;
+        let plen = cfg.prompt_len.0
+            + rng.below(cfg.prompt_len.1 - cfg.prompt_len.0 + 1);
+        let glen = cfg.gen_len.0
+            + rng.below(cfg.gen_len.1 - cfg.gen_len.0 + 1);
+        let start = rng.below(corpus_tokens.len().saturating_sub(plen + 1));
+        out.push(RequestSpec {
+            id: id as u64,
+            arrival_ms: t_ms,
+            prompt: corpus_tokens[start..start + plen].to_vec(),
+            max_new_tokens: glen,
+        });
+    }
+    out
+}
+
+/// Piecewise resource-pressure signal in [0, 1]: 0 = abundant resources
+/// (serve high precision), 1 = contended (drop precision).  Emulates the
+/// edge-device contention scenario of §1.
+#[derive(Debug, Clone)]
+pub struct PressureSignal {
+    segments: Vec<(f64, f64)>, // (until_ms, pressure)
+}
+
+impl PressureSignal {
+    pub fn constant(p: f64) -> PressureSignal {
+        PressureSignal { segments: vec![(f64::INFINITY, p)] }
+    }
+
+    /// Three-phase trace: calm -> contended -> recovering.
+    pub fn phased(total_ms: f64) -> PressureSignal {
+        PressureSignal {
+            segments: vec![
+                (total_ms * 0.33, 0.1),
+                (total_ms * 0.66, 0.9),
+                (f64::INFINITY, 0.4),
+            ],
+        }
+    }
+
+    /// Sinusoidal oscillation (period_ms), amplitude in [lo, hi].
+    pub fn oscillating(period_ms: f64, lo: f64, hi: f64, steps: usize,
+                       total_ms: f64) -> PressureSignal {
+        let mut segments = Vec::new();
+        for i in 0..steps {
+            let t = total_ms * (i + 1) as f64 / steps as f64;
+            let phase = 2.0 * std::f64::consts::PI * t / period_ms;
+            let p = lo + (hi - lo) * 0.5 * (1.0 - phase.cos());
+            segments.push((t, p));
+        }
+        segments.push((f64::INFINITY, lo));
+        PressureSignal { segments }
+    }
+
+    pub fn at(&self, t_ms: f64) -> f64 {
+        for &(until, p) in &self.segments {
+            if t_ms < until {
+                return p;
+            }
+        }
+        self.segments.last().map(|&(_, p)| p).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let toks: Vec<u32> = (0..4096).map(|i| i % 256).collect();
+        let cfg = TraceConfig { n_requests: 16, ..Default::default() };
+        let tr = generate_trace(&toks, &cfg);
+        assert_eq!(tr.len(), 16);
+        for w in tr.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        for r in &tr {
+            assert!(r.prompt.len() >= cfg.prompt_len.0);
+            assert!(r.prompt.len() <= cfg.prompt_len.1);
+        }
+    }
+
+    #[test]
+    fn trace_deterministic() {
+        let toks: Vec<u32> = (0..2048).map(|i| i % 256).collect();
+        let cfg = TraceConfig::default();
+        let a = generate_trace(&toks, &cfg);
+        let b = generate_trace(&toks, &cfg);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a[3].prompt, b[3].prompt);
+    }
+
+    #[test]
+    fn pressure_phases() {
+        let p = PressureSignal::phased(300.0);
+        assert!(p.at(10.0) < 0.2);
+        assert!(p.at(150.0) > 0.8);
+        assert!((p.at(250.0) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pressure_oscillates_in_range() {
+        let p = PressureSignal::oscillating(100.0, 0.2, 0.8, 50, 500.0);
+        for i in 0..50 {
+            let v = p.at(i as f64 * 10.0);
+            assert!((0.19..=0.81).contains(&v), "{v}");
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! # MoBiQuant — token-adaptive any-precision LLM serving
+//!
+//! Rust reproduction of *"MoBiQuant: Mixture-of-Bits Quantization for
+//! Token-Adaptive Any-Precision LLM"* (2026).  Layer 3 of the three-layer
+//! stack (see DESIGN.md): the request path is pure Rust; Python/JAX/Pallas
+//! run once at build time (`make artifacts`) to pretrain, calibrate and
+//! AOT-lower the model.
+//!
+//! Module map:
+//! * [`util`] — substrates built from scratch for this environment
+//!   (JSON, CLI, PRNG + property testing, stats, thread pool, bench
+//!   harness).
+//! * [`mobiq`] — the paper's core: bit-plane packed MoBiSlice weights,
+//!   shared-scale shift-add GEMV kernels, MoBiRoute router inference,
+//!   elastic threshold control, static-PTQ baseline records.
+//! * [`model`] — native LLaMA-style transformer decode (KV cache, RoPE,
+//!   RMSNorm, SwiGLU) dispatching every linear through [`mobiq`].
+//! * [`data`] — corpora, byte tokenizer, perplexity / downstream evals,
+//!   serving workload traces.
+//! * [`baselines`] — kernel simulators for AnyPrecisionLLM, AnyBCQ,
+//!   QuIP#/QTIP-style VQ and ABQ-LLM comparisons (Tab. 1, Fig. 7).
+//! * [`runtime`] — PJRT client (xla crate) executing the AOT HLO modules.
+//! * [`coordinator`] — elastic serving: request queue, dynamic batcher,
+//!   precision controller, scheduler, metrics.
+//! * [`analysis`] — outlier-migration / router-correlation analyses
+//!   backing Figs. 1, 5, 6.
+
+pub mod analysis;
+pub mod baselines;
+pub mod bench_support;
+pub mod coordinator;
+pub mod data;
+pub mod mobiq;
+pub mod model;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts dir: `$MOBIQ_ARTIFACTS` or ./artifacts, walking up
+/// from the current dir so tests/benches work from any workspace subdir.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MOBIQ_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() || cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! MoBiQuant CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   info      — bundle inventory + memory footprint report
+//!   eval      — perplexity of a backend at a precision
+//!   generate  — greedy continuation of a prompt
+//!   serve     — drive the elastic server over a synthetic request trace
+//!   pjrt      — smoke the PJRT runtime against an AOT HLO module
+
+use anyhow::{Context, Result};
+use mobiquant::coordinator::{Server, ServerConfig};
+use mobiquant::data::{corpus, ppl, tokenizer, workload};
+use mobiquant::mobiq::artifact::Bundle;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::mobiq::footprint::{FootprintInputs, LinearDims};
+use mobiquant::model::transformer::DecodeStats;
+use mobiquant::model::weights::{BackendKind, ModelConfig, LINEAR_NAMES};
+use mobiquant::model::Model;
+use mobiquant::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["help", "verbose"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "info" => cmd_info(&args),
+        "eval" => cmd_eval(&args),
+        "generate" => cmd_generate(&args),
+        "serve" => cmd_serve(&args),
+        "pjrt" => cmd_pjrt(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "mobiquant — token-adaptive any-precision LLM serving\n\
+         \n\
+         USAGE: mobiquant <cmd> [--model tiny-m] [options]\n\
+         \n\
+         COMMANDS\n\
+         \x20 info                         bundle + footprint report\n\
+         \x20 eval      --backend mobiq|fp|<static> --bits B  perplexity\n\
+         \x20 generate  --prompt TEXT --tokens N --bits B\n\
+         \x20 serve     --requests N --rate R --pressure phased|calm|high\n\
+         \x20 pjrt      --variant fp|q2|q4|q6|q8   run AOT module\n"
+    );
+}
+
+fn load_bundle(args: &Args) -> Result<(Bundle, String)> {
+    let model = args.get_or("model", "tiny-m").to_string();
+    let dir = mobiquant::artifacts_dir();
+    let path = dir.join(format!("{model}.mobiq"));
+    let bundle = Bundle::load(&path)
+        .with_context(|| format!("run `make artifacts` first ({path:?})"))?;
+    Ok((bundle, model))
+}
+
+fn precision_from(args: &Args) -> Precision {
+    let bits = args.get_f64("bits", 4.0);
+    let delta = args.get_f64("delta", 0.0) as f32;
+    Precision::Elastic { target_bits: bits, delta }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (bundle, model) = load_bundle(args)?;
+    let cfg = ModelConfig::from_bundle(&bundle)?;
+    println!("model {model}: d={} layers={} heads={}/{} ff={} vocab={}",
+             cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.n_kv_heads,
+             cfg.d_ff, cfg.vocab_size);
+    println!("quant: E={} slices x {}b, group={}, router hidden={}",
+             cfg.n_slices, cfg.slice_bits, cfg.group_size,
+             cfg.router_hidden);
+    println!("static methods: {:?}", bundle.static_methods());
+    println!("tensors: {}", bundle.names().count());
+
+    let mut linears = Vec::new();
+    for _ in 0..cfg.n_layers {
+        for name in LINEAR_NAMES {
+            let (d_in, d_out) = cfg.linear_dims(name);
+            linears.push(LinearDims { d_in, d_out });
+        }
+    }
+    let fi = FootprintInputs {
+        linears,
+        group_size: cfg.group_size,
+        n_slices: cfg.n_slices,
+        slice_bits: cfg.slice_bits,
+        router_hidden: cfg.router_hidden,
+        fp_other_bytes: (2 * cfg.vocab_size * cfg.d_model
+            + (2 * cfg.n_layers + 1) * cfg.d_model) * 4,
+    };
+    let served = [2usize, 4, 6, 8];
+    println!("\nfootprint (served precisions {served:?}):");
+    println!("  fp16:          {:>12} B", fi.fp16_bytes());
+    println!("  multi-static:  {:>12} B", fi.multi_static_bytes(&served));
+    println!("  anybcq-like:   {:>12} B", fi.anybcq_bytes(&served));
+    println!("  mobiquant:     {:>12} B", fi.mobiq_bytes());
+    println!("  savings vs multi-static: {:.2}x",
+             fi.savings_vs_multi(&served));
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (bundle, model_name) = load_bundle(args)?;
+    let backend = args.get_or("backend", "mobiq");
+    let kind = match backend {
+        "fp" => BackendKind::Fp32,
+        "mobiq" => BackendKind::Mobiq,
+        other => BackendKind::Static(other.to_string()),
+    };
+    let model = Model::load(&bundle, kind)?;
+    let dir = mobiquant::artifacts_dir();
+    let domain = args.get_or("domain", "wiki");
+    let tokens = corpus::load_tokens(&dir, domain, corpus::Split::Valid)?;
+    let precision = precision_from(args);
+    let window = args.get_usize("window", 128);
+    let maxw = args.get_usize("max-windows", 24);
+    let res = ppl::evaluate(&model, &tokens, precision, window, maxw)?;
+    println!(
+        "{model_name} backend={backend} {:?}: ppl={:.4} avg_bits={:.2} \
+         ({} tokens, {domain} valid)",
+        precision, res.ppl, res.avg_bits, res.tokens
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let (bundle, _) = load_bundle(args)?;
+    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    let prompt_text = args.get_or(
+        "prompt", "The ancient settlement was founded near ");
+    let n = args.get_usize("tokens", 48);
+    let precision = precision_from(args);
+    let prompt = tokenizer::encode(prompt_text);
+    let mut stats = DecodeStats::new(model.cfg.n_layers);
+    let t0 = std::time::Instant::now();
+    let out = model.generate(&prompt, n, precision, &mut stats)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", tokenizer::decode(&out));
+    println!("\n[{} tokens in {:.2}s = {:.1} tok/s, avg bits {:.2}]",
+             out.len(), dt, out.len() as f64 / dt, stats.avg_bits());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (bundle, model_name) = load_bundle(args)?;
+    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    let dir = mobiquant::artifacts_dir();
+    let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)?;
+
+    let trace_cfg = workload::TraceConfig {
+        n_requests: args.get_usize("requests", 12),
+        rate_per_s: args.get_f64("rate", 6.0),
+        ..Default::default()
+    };
+    let trace = workload::generate_trace(&toks, &trace_cfg);
+    let pressure = match args.get_or("pressure", "phased") {
+        "calm" => workload::PressureSignal::constant(0.05),
+        "high" => workload::PressureSignal::constant(0.95),
+        _ => workload::PressureSignal::phased(4000.0),
+    };
+
+    println!("serving {} requests on {model_name} (elastic precision)",
+             trace.len());
+    let server = Server::start(model, ServerConfig::default());
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::new();
+    for spec in &trace {
+        // pace arrivals
+        let now_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        if spec.arrival_ms > now_ms {
+            std::thread::sleep(std::time::Duration::from_millis(
+                (spec.arrival_ms - now_ms) as u64));
+        }
+        server.set_pressure(
+            pressure.at(t0.elapsed().as_secs_f64() * 1000.0));
+        receivers.push(
+            server.submit(spec.prompt.clone(), spec.max_new_tokens));
+    }
+    for (id, rx) in receivers {
+        let resp = rx.recv()?;
+        println!(
+            "  req {id}: {} gen tokens, {:.0}ms total ({:.0}ms queue), \
+             {:.1} tok/s, avg {:.2} bits",
+            resp.metrics.generated_tokens, resp.metrics.total_ms,
+            resp.metrics.queue_ms, resp.decode_tokens_per_s(),
+            resp.metrics.avg_bits);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = server.shutdown()?;
+    println!("\n{}", metrics.summary(wall));
+    Ok(())
+}
+
+fn cmd_pjrt(args: &Args) -> Result<()> {
+    let (bundle, model_name) = load_bundle(args)?;
+    let cfg = ModelConfig::from_bundle(&bundle)?;
+    let variant = args.get_or("variant", "fp");
+    let dir = mobiquant::artifacts_dir();
+    let path = mobiquant::runtime::hlo_path(&dir, &model_name, variant);
+    let rt = mobiquant::runtime::PjrtRuntime::cpu()?;
+    println!("pjrt platform: {}", rt.platform());
+    let module = rt.load(&path)?;
+    let tokens = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)?;
+    let window = 128;
+    let ppl = mobiquant::runtime::ppl_via_pjrt(
+        &module, &tokens, window, cfg.vocab_size,
+        args.get_usize("max-windows", 8))?;
+    println!("{model_name} {variant} via PJRT: ppl={ppl:.4}");
+    println!("(cross-check with `mobiquant eval --backend fp`)");
+    Ok(())
+}

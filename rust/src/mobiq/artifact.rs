@@ -1,0 +1,257 @@
+//! `.mobiq` artifact bundle reader (writer: python/compile/export.py).
+//!
+//! Layout: `b"MOBIQ1\0\0" | u64 manifest_len | JSON manifest | blob`.
+//! The manifest's `tensors` directory maps names to dtype/shape/offset
+//! into the blob.  The whole bundle is loaded into memory once at startup;
+//! the request path only ever sees borrowed slices.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+const MAGIC: &[u8; 8] = b"MOBIQ1\x00\x00";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    U8,
+    I32,
+    U64,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "u8" => DType::U8,
+            "i32" => DType::I32,
+            "u64" => DType::U64,
+            other => bail!("unknown dtype {other}"),
+        })
+    }
+    pub fn size(self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::F32 | DType::I32 => 4,
+            DType::U64 => 8,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    U64(Vec<u64>),
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+    pub fn u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not u8")),
+        }
+    }
+    pub fn i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+    pub fn u64(&self) -> Result<&[u64]> {
+        match &self.data {
+            TensorData::U64(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not u64")),
+        }
+    }
+}
+
+pub struct Bundle {
+    pub manifest: Value,
+    tensors: BTreeMap<String, Tensor>,
+}
+
+impl Bundle {
+    pub fn load(path: impl AsRef<Path>) -> Result<Bundle> {
+        let path = path.as_ref();
+        let data = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&data)
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Bundle> {
+        if data.len() < 16 || &data[..8] != MAGIC {
+            bail!("not a .mobiq bundle (bad magic)");
+        }
+        let mlen = u64::from_le_bytes(data[8..16].try_into().unwrap()) as usize;
+        if data.len() < 16 + mlen {
+            bail!("truncated manifest");
+        }
+        let manifest_str = std::str::from_utf8(&data[16..16 + mlen])
+            .context("manifest utf-8")?;
+        let manifest = json::parse(manifest_str.trim_end())
+            .map_err(|e| anyhow!("manifest: {e}"))?;
+        let blob = &data[16 + mlen..];
+
+        let dir = manifest
+            .get("tensors")
+            .and_then(|t| t.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing tensors"))?;
+        let mut tensors = BTreeMap::new();
+        for (name, info) in dir {
+            let dtype = DType::from_str(
+                info.get("dtype").and_then(|v| v.as_str()).unwrap_or(""))?;
+            let shape: Vec<usize> = info
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let offset = info.get("offset").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing offset"))?;
+            let nbytes = info.get("nbytes").and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("{name}: missing nbytes"))?;
+            if offset + nbytes > blob.len() {
+                bail!("{name}: tensor out of bounds");
+            }
+            let n: usize = shape.iter().product();
+            if n * dtype.size() != nbytes {
+                bail!("{name}: shape/nbytes mismatch");
+            }
+            let raw = &blob[offset..offset + nbytes];
+            let data = match dtype {
+                DType::F32 => TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect()),
+                DType::U8 => TensorData::U8(raw.to_vec()),
+                DType::I32 => TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect()),
+                DType::U64 => TensorData::U64(
+                    raw.chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                        .collect()),
+            };
+            tensors.insert(name.clone(), Tensor { shape, data });
+        }
+        Ok(Bundle { manifest, tensors })
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name)
+            .ok_or_else(|| anyhow!("missing tensor {name}"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn f32(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let t = self.tensor(name)?;
+        Ok((&t.shape, t.f32()?))
+    }
+
+    /// Model config accessors ------------------------------------------------
+    pub fn cfg_usize(&self, section: &str, key: &str) -> Result<usize> {
+        self.manifest
+            .path(&[section, key])
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest missing {section}.{key}"))
+    }
+
+    pub fn cfg_f64(&self, section: &str, key: &str) -> Result<f64> {
+        self.manifest
+            .path(&[section, key])
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest missing {section}.{key}"))
+    }
+
+    /// Static-PTQ method keys present in this bundle (e.g. "gptq3").
+    pub fn static_methods(&self) -> Vec<String> {
+        self.manifest
+            .get("static_methods")
+            .and_then(|v| v.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_bundle() -> Vec<u8> {
+        // hand-assembled bundle: one f32 tensor [2,2] and one u8 [3]
+        let manifest = r#"{"model":{"d_model":4},"tensors":{
+            "a":{"dtype":"f32","shape":[2,2],"offset":0,"nbytes":16},
+            "b":{"dtype":"u8","shape":[3],"offset":16,"nbytes":3}}}"#;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        out.extend_from_slice(manifest.as_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&[7u8, 8, 9]);
+        out
+    }
+
+    #[test]
+    fn loads_tensors() {
+        let b = Bundle::from_bytes(&tiny_bundle()).unwrap();
+        let (shape, data) = b.f32("a").unwrap();
+        assert_eq!(shape, &[2, 2]);
+        assert_eq!(data, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.tensor("b").unwrap().u8().unwrap(), &[7, 8, 9]);
+        assert_eq!(b.cfg_usize("model", "d_model").unwrap(), 4);
+        assert!(b.tensor("zzz").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut data = tiny_bundle();
+        data[0] = b'X';
+        assert!(Bundle::from_bytes(&data).is_err());
+    }
+
+    #[test]
+    fn rejects_oob_tensor() {
+        let manifest = r#"{"tensors":{
+            "a":{"dtype":"f32","shape":[64],"offset":0,"nbytes":256}}}"#;
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+        out.extend_from_slice(manifest.as_bytes());
+        out.extend_from_slice(&[0u8; 8]); // far too short
+        assert!(Bundle::from_bytes(&out).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Bit-major (bit-plane) packed weight slices — the kernel interchange
+//! format of §4.3.  Layout matches python/compile/quant/mobislice.py
+//! `pack_bitplanes`: planes[p][o][w] is a u64 whose bit j is bit p of
+//! code[(w*64 + j), o] — packed along the *input* dimension so a GEMV
+//! kernel streams contiguous words per output channel.
+
+/// One bit-slice of one linear layer, packed as bit-planes.
+#[derive(Debug, Clone)]
+pub struct PackedSlice {
+    /// (slice_bits, d_out, n_words) row-major.
+    pub planes: Vec<u64>,
+    pub slice_bits: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub n_words: usize,
+}
+
+impl PackedSlice {
+    pub fn from_codes(codes: &[u8], d_in: usize, d_out: usize,
+                      slice_bits: usize) -> PackedSlice {
+        assert_eq!(codes.len(), d_in * d_out);
+        let n_words = (d_in + 63) / 64;
+        let mut planes = vec![0u64; slice_bits * d_out * n_words];
+        for row in 0..d_in {
+            let word = row / 64;
+            let bit = row % 64;
+            for o in 0..d_out {
+                let c = codes[row * d_out + o];
+                for p in 0..slice_bits {
+                    if (c >> p) & 1 == 1 {
+                        planes[(p * d_out + o) * n_words + word] |=
+                            1u64 << bit;
+                    }
+                }
+            }
+        }
+        PackedSlice { planes, slice_bits, d_in, d_out, n_words }
+    }
+
+    /// Raw plane words of (plane p, output channel o).
+    #[inline]
+    pub fn plane(&self, p: usize, o: usize) -> &[u64] {
+        let base = (p * self.d_out + o) * self.n_words;
+        &self.planes[base..base + self.n_words]
+    }
+
+    /// Load from the artifact tensor layout (slice_bits, d_out, n_words).
+    pub fn from_tensor(words: &[u64], shape: &[usize], d_in: usize)
+                       -> PackedSlice {
+        assert_eq!(shape.len(), 3);
+        let (slice_bits, d_out, n_words) = (shape[0], shape[1], shape[2]);
+        assert_eq!(words.len(), slice_bits * d_out * n_words);
+        assert!(n_words * 64 >= d_in);
+        PackedSlice { planes: words.to_vec(), slice_bits, d_in, d_out,
+                      n_words }
+    }
+
+    /// Unpack back to integer codes (d_in * d_out) — tests / slow path.
+    pub fn unpack(&self) -> Vec<u8> {
+        let mut codes = vec![0u8; self.d_in * self.d_out];
+        for o in 0..self.d_out {
+            for p in 0..self.slice_bits {
+                let plane = self.plane(p, o);
+                for row in 0..self.d_in {
+                    if (plane[row / 64] >> (row % 64)) & 1 == 1 {
+                        codes[row * self.d_out + o] |= 1 << p;
+                    }
+                }
+            }
+        }
+        codes
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.planes.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::property;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        property(10, 30, |rng, _| {
+            let d_in = 64 * (1 + rng.below(3));
+            let d_out = 1 + rng.below(20);
+            let bits = 1 + rng.below(3);
+            let codes: Vec<u8> = (0..d_in * d_out)
+                .map(|_| rng.below(1 << bits) as u8)
+                .collect();
+            let packed = PackedSlice::from_codes(&codes, d_in, d_out, bits);
+            assert_eq!(packed.unpack(), codes);
+        });
+    }
+
+    #[test]
+    fn pack_matches_reference_bit_positions() {
+        // code at row 65, col 2, value 0b10 -> plane 1, word 1, bit 1
+        let d_in = 128;
+        let d_out = 4;
+        let mut codes = vec![0u8; d_in * d_out];
+        codes[65 * d_out + 2] = 0b10;
+        let packed = PackedSlice::from_codes(&codes, d_in, d_out, 2);
+        assert_eq!(packed.plane(1, 2)[1], 1u64 << 1);
+        assert_eq!(packed.plane(0, 2)[1], 0);
+    }
+
+    #[test]
+    fn nonmultiple_of_64_padding() {
+        let d_in = 96; // 2 words, 32 bits padding
+        let d_out = 3;
+        let codes: Vec<u8> = (0..d_in * d_out).map(|i| (i % 4) as u8)
+            .collect();
+        let packed = PackedSlice::from_codes(&codes, d_in, d_out, 2);
+        assert_eq!(packed.n_words, 2);
+        assert_eq!(packed.unpack(), codes);
+        // padding bits must be zero
+        for o in 0..d_out {
+            for p in 0..2 {
+                assert_eq!(packed.plane(p, o)[1] >> 32, 0);
+            }
+        }
+    }
+}

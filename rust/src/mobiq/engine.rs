@@ -1,0 +1,353 @@
+//! MoBiQuant linear engine: bit-plane slices + router + thresholds glued
+//! into the object the transformer dispatches to on the request path.
+
+use anyhow::Result;
+
+use super::artifact::Bundle;
+use super::bitplane::PackedSlice;
+use super::gemv::{gemv_lut, TokenLut};
+use super::quantizer::GroupParams;
+use super::router::{hard_mask, mask_bits, ratio_for_target_bits,
+                    RouterMlp, ThresholdTable};
+
+/// Runtime precision policy for a forward pass.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    /// Use exactly the first k slices for every token (static reconstr.).
+    Fixed(usize),
+    /// Token-adaptive routing around a target average bit-width, with a
+    /// global delta shift (Eq. 10) for runtime elasticity.
+    Elastic { target_bits: f64, delta: f32 },
+}
+
+impl Precision {
+    pub fn elastic(target_bits: f64) -> Precision {
+        Precision::Elastic { target_bits, delta: 0.0 }
+    }
+}
+
+/// One quantized linear layer (weights only live as bit-planes).
+pub struct MobiqLinear {
+    pub slices: Vec<PackedSlice>,
+    pub base: GroupParams,
+    pub router: RouterMlp,
+    pub thresholds: ThresholdTable,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub slice_bits: usize,
+    pub act_bits: Option<u32>, // optional activation quantization (Fig. 10)
+}
+
+/// Reusable per-thread scratch for the decode loop (allocation-free).
+pub struct Scratch {
+    pub lut: TokenLut,
+    pub router_hidden: Vec<f32>,
+    pub scores: Vec<f32>,
+    pub mask: Vec<bool>,
+    pub xq: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(max_d_in: usize, group_size: usize, hidden: usize,
+               n_slices: usize) -> Scratch {
+        Scratch {
+            lut: TokenLut::new(max_d_in, group_size),
+            router_hidden: vec![0f32; hidden],
+            scores: vec![0f32; n_slices - 1],
+            mask: vec![false; n_slices],
+            xq: vec![0f32; max_d_in],
+        }
+    }
+}
+
+impl MobiqLinear {
+    pub fn from_bundle(bundle: &Bundle, layer: usize, name: &str,
+                       n_slices: usize, slice_bits: usize,
+                       group_size: usize) -> Result<MobiqLinear> {
+        let pre = format!("mobiq.layers.{layer}.{name}");
+        let (sshape, scale) = bundle.f32(&format!("{pre}.scale"))?;
+        let (_, zero) = bundle.f32(&format!("{pre}.zero"))?;
+        let n_groups = sshape[0];
+        let d_out = sshape[1];
+        let d_in = n_groups * group_size;
+        let mut slices = Vec::with_capacity(n_slices);
+        for e in 0..n_slices {
+            let t = bundle.tensor(&format!("{pre}.slice{e}.planes"))?;
+            slices.push(PackedSlice::from_tensor(t.u64()?, &t.shape, d_in));
+        }
+        let (w1s, w1) = bundle.f32(&format!("{pre}.router.w1"))?;
+        let hidden = w1s[1];
+        let (_, b1) = bundle.f32(&format!("{pre}.router.b1"))?;
+        let (w2s, w2) = bundle.f32(&format!("{pre}.router.w2"))?;
+        let n_residual = w2s[1];
+        let (_, b2) = bundle.f32(&format!("{pre}.router.b2"))?;
+        let (_, quant) = bundle.f32(&format!("{pre}.quantiles"))?;
+        Ok(MobiqLinear {
+            slices,
+            base: GroupParams {
+                scale: scale.to_vec(),
+                zero: zero.to_vec(),
+                n_groups,
+                d_out,
+                bits: slice_bits as u32,
+                group_size,
+            },
+            router: RouterMlp {
+                w1: w1.to_vec(), b1: b1.to_vec(),
+                w2: w2.to_vec(), b2: b2.to_vec(),
+                d_in, hidden, n_residual,
+            },
+            thresholds: ThresholdTable { quantiles: quant.to_vec() },
+            d_in, d_out,
+            slice_bits,
+            act_bits: None,
+        })
+    }
+
+    /// Decide the slice mask for one token under a precision policy.
+    /// Returns effective bits.  scratch.scores/mask are filled.
+    pub fn route(&self, x: &[f32], precision: Precision,
+                 scratch: &mut Scratch) -> usize {
+        match precision {
+            Precision::Fixed(k) => {
+                for (e, m) in scratch.mask.iter_mut().enumerate() {
+                    *m = e < k.max(1);
+                }
+                k.max(1) * self.slice_bits
+            }
+            Precision::Elastic { target_bits, delta } => {
+                let rho = ratio_for_target_bits(
+                    target_bits, self.slice_bits, self.slice_bits,
+                    self.router.n_residual);
+                let thr = self.thresholds.threshold_for_ratio(rho);
+                self.router.scores_into(
+                    x,
+                    &mut scratch.router_hidden,
+                    &mut scratch.scores,
+                );
+                hard_mask(&scratch.scores, thr, delta, &mut scratch.mask);
+                mask_bits(&scratch.mask, self.slice_bits)
+            }
+        }
+    }
+
+    /// Full token forward: route + LUT GEMV.  The caller has already
+    /// built scratch.lut for this x (shared across the layer's linears
+    /// when inputs coincide is NOT safe here since inputs differ; build
+    /// per linear input).  Returns effective bits used.
+    pub fn forward_token(&self, x: &[f32], precision: Precision,
+                         scratch: &mut Scratch, out: &mut [f32]) -> usize {
+        let bits = self.route(x, precision, scratch);
+        let x_eff: &[f32] = if let Some(ab) = self.act_bits {
+            quantize_activation(x, ab, &mut scratch.xq[..x.len()]);
+            // Rebuild the LUT on the quantized activation.
+            &scratch.xq[..x.len()]
+        } else {
+            x
+        };
+        scratch.lut.build(x_eff, self.base.group_size);
+        gemv_lut(&self.slices, &self.base, &scratch.lut, &scratch.mask,
+                 out);
+        bits
+    }
+
+    /// Batched forward with §4.3 token permutation: route every token,
+    /// group tokens with identical slice masks contiguously, and run the
+    /// GEMV group-by-group so each group's plane working set stays hot.
+    /// xs: (T * d_in) row-major; out: (T * d_out).  Returns total bits.
+    pub fn forward_batch(&self, xs: &[f32], precision: Precision,
+                         scratch: &mut Scratch, out: &mut [f32]) -> usize {
+        let t = xs.len() / self.d_in;
+        debug_assert_eq!(out.len(), t * self.d_out);
+        let mut masks: Vec<Vec<bool>> = Vec::with_capacity(t);
+        let mut total_bits = 0usize;
+        for i in 0..t {
+            let x = &xs[i * self.d_in..(i + 1) * self.d_in];
+            total_bits += self.route(x, precision, scratch);
+            masks.push(scratch.mask.clone());
+        }
+        let perm = crate::mobiq::gemv::permute_by_mask(&masks);
+        for &i in &perm {
+            let x = &xs[i * self.d_in..(i + 1) * self.d_in];
+            let x_eff: &[f32] = if let Some(ab) = self.act_bits {
+                quantize_activation(x, ab, &mut scratch.xq[..x.len()]);
+                &scratch.xq[..x.len()]
+            } else {
+                x
+            };
+            scratch.lut.build(x_eff, self.base.group_size);
+            crate::mobiq::gemv::gemv_lut(
+                &self.slices, &self.base, &scratch.lut, &masks[i],
+                &mut out[i * self.d_out..(i + 1) * self.d_out]);
+        }
+        total_bits
+    }
+
+    /// Packed weight bytes actually loaded for a mask (traffic model).
+    pub fn bytes_for_mask(&self, mask: &[bool]) -> usize {
+        mask.iter().zip(&self.slices)
+            .filter(|(&m, _)| m)
+            .map(|(_, s)| s.nbytes())
+            .sum()
+    }
+
+    pub fn nbytes_total(&self) -> usize {
+        self.slices.iter().map(|s| s.nbytes()).sum::<usize>()
+            + self.base.scale.len() * 8
+            + self.router.w1.len() * 4
+            + self.router.w2.len() * 4
+    }
+}
+
+/// Per-token dynamic activation quantization (App. E.4 / Fig. 10):
+/// symmetric min/max to `bits`, floor-aligned like the weights.
+pub fn quantize_activation(x: &[f32], bits: u32, out: &mut [f32]) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let lo = lo.min(-1e-8);
+    let hi = hi.max(1e-8);
+    let levels = (1u64 << bits) as f32;
+    let s = ((hi - lo) / levels).max(1e-12);
+    let z = -lo / s;
+    let maxq = levels - 1.0;
+    for (o, &v) in out.iter_mut().zip(x) {
+        let q = (v / s + z).floor().clamp(0.0, maxq);
+        *o = s * (q - z + 0.5);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobiq::quantizer::decompose;
+    use crate::util::prng::Pcg;
+
+    pub(crate) fn synth_linear(rng: &mut Pcg, d_in: usize, d_out: usize)
+                               -> MobiqLinear {
+        let gs = 32;
+        let w = rng.normal_vec(d_in * d_out, 0.2);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = decompose(&w, &base, 4);
+        let slices = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        MobiqLinear {
+            slices,
+            base,
+            router: RouterMlp {
+                w1: rng.normal_vec(d_in * 8, 0.2),
+                b1: vec![0.0; 8],
+                w2: rng.normal_vec(8 * 3, 0.2),
+                b2: vec![0.0; 3],
+                d_in, hidden: 8, n_residual: 3,
+            },
+            thresholds: ThresholdTable {
+                quantiles: (0..129).map(|i| (i as f32 - 64.0) / 64.0)
+                    .collect(),
+            },
+            d_in, d_out, slice_bits: 2, act_bits: None,
+        }
+    }
+
+    #[test]
+    fn fixed_precision_uses_k_slices() {
+        let mut rng = Pcg::new(1);
+        let lin = synth_linear(&mut rng, 64, 16);
+        let x = rng.normal_vec(64, 1.0);
+        let mut sc = Scratch::new(64, 32, 8, 4);
+        let mut out = vec![0f32; 16];
+        for k in 1..=4 {
+            let bits = lin.forward_token(&x, Precision::Fixed(k), &mut sc,
+                                         &mut out);
+            assert_eq!(bits, 2 * k);
+            assert_eq!(sc.mask.iter().filter(|&&m| m).count(), k);
+        }
+    }
+
+    #[test]
+    fn elastic_bits_monotone_in_target() {
+        let mut rng = Pcg::new(2);
+        let lin = synth_linear(&mut rng, 64, 16);
+        let mut sc = Scratch::new(64, 32, 8, 4);
+        let mut out = vec![0f32; 16];
+        let xs: Vec<Vec<f32>> = (0..64).map(|_| rng.normal_vec(64, 1.0))
+            .collect();
+        let mut prev = 0.0;
+        for target in [2.0, 4.0, 6.0, 8.0] {
+            let total: usize = xs.iter().map(|x| {
+                lin.forward_token(x, Precision::elastic(target), &mut sc,
+                                  &mut out)
+            }).sum();
+            let avg = total as f64 / xs.len() as f64;
+            assert!(avg + 1e-9 >= prev,
+                    "avg bits must rise with target: {avg} < {prev}");
+            prev = avg;
+        }
+    }
+
+    #[test]
+    fn delta_shift_prunes_slices() {
+        let mut rng = Pcg::new(3);
+        let lin = synth_linear(&mut rng, 64, 16);
+        let mut sc = Scratch::new(64, 32, 8, 4);
+        let x = rng.normal_vec(64, 1.0);
+        let p_lo = Precision::Elastic { target_bits: 6.0, delta: -10.0 };
+        let p_hi = Precision::Elastic { target_bits: 6.0, delta: 10.0 };
+        let b_all = lin.route(&x, p_lo, &mut sc);
+        assert_eq!(b_all, 8); // -inf threshold -> everything active
+        let b_none = lin.route(&x, p_hi, &mut sc);
+        assert_eq!(b_none, 2); // +inf threshold -> base slice only
+    }
+
+    #[test]
+    fn batched_forward_matches_per_token() {
+        let mut rng = Pcg::new(7);
+        let lin = synth_linear(&mut rng, 64, 16);
+        let mut sc = Scratch::new(64, 32, 8, 4);
+        let t = 9;
+        let xs: Vec<f32> = rng.normal_vec(64 * t, 1.0);
+        let prec = Precision::elastic(4.0);
+        let mut batched = vec![0f32; 16 * t];
+        let bits_b = lin.forward_batch(&xs, prec, &mut sc, &mut batched);
+        let mut single = vec![0f32; 16];
+        let mut bits_s = 0usize;
+        for i in 0..t {
+            bits_s += lin.forward_token(&xs[i * 64..(i + 1) * 64], prec,
+                                        &mut sc, &mut single);
+            for (a, b) in single.iter().zip(&batched[i * 16..(i + 1) * 16])
+            {
+                assert!((a - b).abs() < 1e-5,
+                        "token {i}: {a} vs {b}");
+            }
+        }
+        assert_eq!(bits_b, bits_s);
+    }
+
+    #[test]
+    fn act_quant_error_shrinks_with_bits() {
+        let mut rng = Pcg::new(4);
+        let x = rng.normal_vec(256, 1.0);
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 4, 8] {
+            let mut q = vec![0f32; 256];
+            quantize_activation(&x, bits, &mut q);
+            let err: f64 = x.iter().zip(&q)
+                .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            assert!(err < prev);
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn traffic_proportional_to_mask() {
+        let mut rng = Pcg::new(5);
+        let lin = synth_linear(&mut rng, 64, 16);
+        let b1 = lin.bytes_for_mask(&[true, false, false, false]);
+        let b4 = lin.bytes_for_mask(&[true, true, true, true]);
+        assert_eq!(b4, 4 * b1);
+    }
+}

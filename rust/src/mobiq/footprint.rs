@@ -1,0 +1,150 @@
+//! Memory footprint accounting — Fig. 7 (right) and the §5.2 "3.5x memory
+//! savings vs separate multi-precision deployment" claim.
+//!
+//! Deployment scenarios compared at equal *served precisions*
+//! {2, 4, 6, 8}-bit:
+//!
+//! * `multi_static`  — one statically packed model per precision, each
+//!   with its own scales (what a MatQuant/offline-repack deployment
+//!   stores).
+//! * `anybcq_like`   — single bit-plane model but per-precision scale
+//!   sets (AnyBCQ).
+//! * `mobiq`         — single bit-plane model, ONE shared scale set, plus
+//!   routers and threshold tables.
+//! * `fp16`          — the unquantized comparator.
+
+/// Per-linear dimensions needed for the accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearDims {
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct FootprintInputs {
+    pub linears: Vec<LinearDims>,
+    pub group_size: usize,
+    pub n_slices: usize,
+    pub slice_bits: usize,
+    pub router_hidden: usize,
+    /// Non-quantized residue: embeddings, norms, lm_head (bytes, fp32).
+    pub fp_other_bytes: usize,
+}
+
+impl FootprintInputs {
+    fn weights(&self) -> usize {
+        self.linears.iter().map(|l| l.d_in * l.d_out).sum()
+    }
+
+    fn scale_entries(&self) -> usize {
+        self.linears.iter()
+            .map(|l| (l.d_in / self.group_size) * l.d_out)
+            .sum()
+    }
+
+    pub fn fp16_bytes(&self) -> usize {
+        self.weights() * 2 + self.fp_other_bytes
+    }
+
+    /// One statically packed model at `bits` (codes + scale/zero f32).
+    pub fn static_bytes(&self, bits: usize) -> usize {
+        self.weights() * bits / 8 + self.scale_entries() * 8
+            + self.fp_other_bytes
+    }
+
+    /// Separate deployment of every served precision.
+    pub fn multi_static_bytes(&self, precisions: &[usize]) -> usize {
+        precisions.iter().map(|&b| self.static_bytes(b)).sum()
+    }
+
+    /// AnyBCQ-like: shared bit-planes but per-precision scales.
+    pub fn anybcq_bytes(&self, precisions: &[usize]) -> usize {
+        self.weights() * (self.n_slices * self.slice_bits) / 8
+            + self.scale_entries() * 8 * precisions.len()
+            + self.fp_other_bytes
+    }
+
+    pub fn router_bytes(&self) -> usize {
+        self.linears.iter()
+            .map(|l| {
+                4 * (l.d_in * self.router_hidden
+                    + self.router_hidden * (self.n_slices - 1)
+                    + self.router_hidden + (self.n_slices - 1))
+                    + 129 * 4 // threshold quantile grid
+            })
+            .sum()
+    }
+
+    /// MoBiQuant: all planes + ONE scale set + routers.
+    pub fn mobiq_bytes(&self) -> usize {
+        self.weights() * (self.n_slices * self.slice_bits) / 8
+            + self.scale_entries() * 8
+            + self.router_bytes()
+            + self.fp_other_bytes
+    }
+
+    /// Headline ratio: multi-precision deployment vs MoBiQuant.
+    pub fn savings_vs_multi(&self, precisions: &[usize]) -> f64 {
+        self.multi_static_bytes(precisions) as f64
+            / self.mobiq_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_scale_inputs() -> FootprintInputs {
+        // LLaMA-2-7B-like dims to sanity check against the paper's 3.5x
+        let d = 4096;
+        let f = 11008;
+        let per_layer = vec![
+            LinearDims { d_in: d, d_out: d },   // q
+            LinearDims { d_in: d, d_out: d },   // k
+            LinearDims { d_in: d, d_out: d },   // v
+            LinearDims { d_in: d, d_out: d },   // o
+            LinearDims { d_in: d, d_out: f },   // gate
+            LinearDims { d_in: d, d_out: f },   // up
+            LinearDims { d_in: f, d_out: d },   // down
+        ];
+        let linears: Vec<LinearDims> = (0..32)
+            .flat_map(|_| per_layer.clone())
+            .collect();
+        FootprintInputs {
+            linears,
+            group_size: 128,
+            n_slices: 4,
+            slice_bits: 2,
+            router_hidden: 16,
+            fp_other_bytes: 32000 * d * 4 * 2,
+        }
+    }
+
+    #[test]
+    fn savings_in_paper_ballpark() {
+        let fi = paper_scale_inputs();
+        let s = fi.savings_vs_multi(&[2, 4, 6, 8]);
+        // paper reports up to 3.5x; exact value depends on what the
+        // multi-deployment duplicates. Require the right order.
+        assert!(s > 2.0 && s < 4.0, "savings {s}");
+    }
+
+    #[test]
+    fn mobiq_smaller_than_fp16() {
+        let fi = paper_scale_inputs();
+        assert!(fi.mobiq_bytes() < fi.fp16_bytes());
+    }
+
+    #[test]
+    fn anybcq_larger_than_mobiq() {
+        let fi = paper_scale_inputs();
+        assert!(fi.anybcq_bytes(&[2, 4, 6, 8]) > fi.mobiq_bytes());
+    }
+
+    #[test]
+    fn router_overhead_small() {
+        let fi = paper_scale_inputs();
+        let frac = fi.router_bytes() as f64 / fi.mobiq_bytes() as f64;
+        assert!(frac < 0.05, "router overhead {frac}");
+    }
+}

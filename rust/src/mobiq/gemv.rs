@@ -1,0 +1,636 @@
+//! MoBiQuant GEMV kernels — the L3 hot path (§4.3 rethought for CPU).
+//!
+//! The paper's A100 kernel does BMMA directly on bit-planes with a single
+//! shared scale and shift-add across slices.  The CPU analogue:
+//!
+//! * **LUT bit-serial dot** (`gemv_lut`): per token, build 256-entry
+//!   masked-sum tables over every 8-activation chunk (cost 32·d_in adds,
+//!   amortised over all output channels, planes and slices); a plane's
+//!   masked sum is then 1 table lookup per byte of plane words — the
+//!   CPU equivalent of bit-plane BMMA.
+//! * **Shift-add shared scale**: residual slices accumulate with weights
+//!   4^-e into a single per-group partial, multiplied by the *one* stored
+//!   scale s1 (paper Fig. 3c).  AnyBCQ's per-slice scales cost an extra
+//!   multiply per slice (see baselines::abcq_sim).
+//! * **On-demand plane fetch**: inactive slices are never touched, so
+//!   memory traffic is proportional to the token's routed precision.
+//!
+//! `gemv_bitserial` (bit-iteration) and `dequant_gemv` (dense f32) are the
+//! perf baseline and the correctness oracle, respectively.
+
+use super::bitplane::PackedSlice;
+use super::quantizer::{dequantize, GroupParams};
+
+/// Per-token scratch: byte-chunk LUTs + group sums.  Reused across calls
+/// to keep the decode loop allocation-free.
+pub struct TokenLut {
+    /// (n_chunks, 256) masked partial sums of x over 8-wide chunks.
+    pub table: Vec<f32>,
+    /// (n_chunks*2, 16) masked sums over 4-wide chunks — 16x smaller,
+    /// stays cache-resident at large d_in (see EXPERIMENTS.md §Perf).
+    pub ntable: Vec<f32>,
+    /// Per-group sums of x (n_groups).
+    pub group_sums: Vec<f32>,
+    /// Chunks/groups of the activation most recently built (layers with
+    /// different d_in share one capacity-sized scratch).
+    pub n_chunks: usize,
+    pub d_in: usize,
+    /// Which table the last build() filled.
+    pub nibble: bool,
+}
+
+/// d_in at which the byte table (256 entries/chunk) stops fitting cache
+/// and the nibble table wins; tuned in the §Perf pass.
+const NIBBLE_THRESHOLD: usize = 2048;
+
+impl TokenLut {
+    /// `d_in` here is the *capacity*: the largest activation width any
+    /// linear will build into this scratch.  The table is padded to a
+    /// whole u64 word of chunks so the streaming kernel can read the
+    /// padding (always zero) without branching.
+    pub fn new(d_in: usize, group_size: usize) -> TokenLut {
+        assert_eq!(d_in % 8, 0);
+        let padded_chunks = (d_in + 63) / 64 * 8;
+        TokenLut {
+            table: vec![0f32; padded_chunks * 256],
+            ntable: vec![0f32; padded_chunks * 2 * 16],
+            group_sums: vec![0f32; (d_in + group_size - 1) / group_size],
+            n_chunks: d_in / 8,
+            d_in,
+            nibble: false,
+        }
+    }
+
+    /// Build tables for one token's activations (x.len() <= capacity).
+    pub fn build(&mut self, x: &[f32], group_size: usize) {
+        let padded = (x.len() + 63) / 64 * 8;
+        assert!(x.len() % 8 == 0 && padded * 256 <= self.table.len(),
+                "activation len {} exceeds LUT capacity", x.len());
+        self.d_in = x.len();
+        self.n_chunks = x.len() / 8;
+        // zero the padding chunks (may hold a previous, wider build)
+        self.nibble = x.len() >= NIBBLE_THRESHOLD;
+        if self.nibble {
+            self.ntable[self.n_chunks * 32..padded * 32].fill(0.0);
+            for c in 0..self.n_chunks * 2 {
+                let t = &mut self.ntable[c * 16..(c + 1) * 16];
+                let xs = &x[c * 4..c * 4 + 4];
+                t[0] = 0.0;
+                for b in 1usize..16 {
+                    t[b] = t[b & (b - 1)]
+                        + xs[b.trailing_zeros() as usize];
+                }
+            }
+        } else {
+            self.table[self.n_chunks * 256..padded * 256].fill(0.0);
+            for c in 0..self.n_chunks {
+                let t = &mut self.table[c * 256..(c + 1) * 256];
+                let xs = &x[c * 8..c * 8 + 8];
+                t[0] = 0.0;
+                for b in 1usize..256 {
+                    // dynamic programming: drop lowest set bit
+                    t[b] = t[b & (b - 1)]
+                        + xs[b.trailing_zeros() as usize];
+                }
+            }
+        }
+        let n_groups = x.len() / group_size;
+        for g in 0..n_groups {
+            self.group_sums[g] =
+                x[g * group_size..(g + 1) * group_size].iter().sum();
+        }
+    }
+
+    /// Masked sum of x over the set bits of `plane` (words along d_in),
+    /// restricted to group g (group_size must divide 8·words cleanly).
+    #[inline]
+    fn plane_group_sum(&self, plane: &[u64], g: usize, group_size: usize)
+                       -> f32 {
+        let c0 = g * group_size / 8;
+        let c1 = (g + 1) * group_size / 8;
+        let mut acc = 0f32;
+        for c in c0..c1 {
+            let byte = (plane[c / 8] >> ((c % 8) * 8)) & 0xFF;
+            acc += self.table[c * 256 + byte as usize];
+        }
+        acc
+    }
+}
+
+/// Residual shift-add weight for slice e: 2^{-bits·e} (shared-scale form).
+#[inline]
+fn slice_weight(e: usize, bits: u32) -> f32 {
+    1.0 / (1u64 << (bits as usize * e)) as f32
+}
+
+/// The MoBiQuant kernel: token-adaptive bit-sliced GEMV with shared
+/// scales.  `active[e]` selects slices (active[0] must be true).
+/// out: (d_out), overwritten.
+///
+/// Perf-tuned inner loop (EXPERIMENTS.md §Perf): per output channel the
+/// plane words stream once, each u64 is split into 8 LUT bytes walked
+/// with two independent accumulators per group quad (breaks the FP add
+/// dependency chain), and all indexing is hoisted out of the byte loop.
+pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
+                active: &[bool], out: &mut [f32]) {
+    let d_out = base.d_out;
+    let gs = base.group_size;
+    let n_groups = base.n_groups;
+    debug_assert!(active[0], "slice 0 is the shared expert");
+    debug_assert_eq!(out.len(), d_out);
+    debug_assert!(gs % 8 == 0);
+    let bytes_per_group = gs / 8;
+    let n_words = slices[0].n_words;
+    debug_assert!(n_groups <= 512, "group scratch cap");
+    // per-group accumulators of sum_e 4^-e (p0 + 2 p1) masked sums
+    let mut ga = [0f32; 512];
+
+    // sum over active residual slices of 4^-e * (2^{b-1} - 0.5)
+    let mut resid_c = 0f32;
+    for (e, &a) in active.iter().enumerate().skip(1) {
+        if a {
+            resid_c += slice_weight(e, base.bits)
+                * ((1u32 << (base.bits - 1)) as f32 - 0.5);
+        }
+    }
+
+    let table = &lut.table[..];
+    for o in 0..d_out {
+        ga[..n_groups].fill(0.0);
+        for (e, &is_active) in active.iter().enumerate() {
+            if !is_active {
+                continue;
+            }
+            let sl = &slices[e];
+            let we = slice_weight(e, base.bits);
+            let mut mult = we;
+            for p in 0..sl.slice_bits {
+                let plane = sl.plane(p, o);
+                if lut.nibble {
+                    // nibble-table path: 16x smaller LUT stays cache-
+                    // resident at large d_in.  bpg==4 only (gs 32).
+                    assert_eq!(bytes_per_group, 4,
+                               "nibble path requires group_size 32");
+                    let nt = &lut.ntable[..];
+                    for (w, &pw) in plane.iter().enumerate().take(n_words)
+                    {
+                        if pw == 0 {
+                            continue;
+                        }
+                        let c0 = w * 16 * 16;
+                        // SAFETY: ntable padded to whole words;
+                        // nibble < 16 by construction.
+                        unsafe {
+                            let mut q0 = 0f32;
+                            let mut q1 = 0f32;
+                            let mut q2 = 0f32;
+                            let mut q3 = 0f32;
+                            for j in 0..4 {
+                                q0 += *nt.get_unchecked(
+                                    c0 + j * 16
+                                        + ((pw >> (4 * j)) & 0xF) as usize);
+                                q1 += *nt.get_unchecked(
+                                    c0 + (4 + j) * 16
+                                        + ((pw >> (16 + 4 * j)) & 0xF)
+                                        as usize);
+                                q2 += *nt.get_unchecked(
+                                    c0 + (8 + j) * 16
+                                        + ((pw >> (32 + 4 * j)) & 0xF)
+                                        as usize);
+                                q3 += *nt.get_unchecked(
+                                    c0 + (12 + j) * 16
+                                        + ((pw >> (48 + 4 * j)) & 0xF)
+                                        as usize);
+                            }
+                            *ga.get_unchecked_mut(w * 2) +=
+                                mult * (q0 + q1);
+                            *ga.get_unchecked_mut(w * 2 + 1) +=
+                                mult * (q2 + q3);
+                        }
+                    }
+                } else if bytes_per_group == 4 {
+                    // hot configuration (group_size 32): two group-quads
+                    // per word, unrolled with independent accumulators.
+                    for (w, &pw) in plane.iter().enumerate().take(n_words)
+                    {
+                        if pw == 0 {
+                            continue; // zero word: all LUT hits are 0
+                        }
+                        let c0 = w * 8 * 256;
+                        // SAFETY: table is padded to whole words; byte
+                        // offsets < 256 by construction.
+                        unsafe {
+                            let q0 = *table.get_unchecked(
+                                c0 + (pw & 0xFF) as usize)
+                                + *table.get_unchecked(
+                                    c0 + 256 + ((pw >> 8) & 0xFF) as usize);
+                            let q1 = *table.get_unchecked(
+                                c0 + 512 + ((pw >> 16) & 0xFF) as usize)
+                                + *table.get_unchecked(
+                                    c0 + 768 + ((pw >> 24) & 0xFF) as usize);
+                            let q2 = *table.get_unchecked(
+                                c0 + 1024 + ((pw >> 32) & 0xFF) as usize)
+                                + *table.get_unchecked(
+                                    c0 + 1280 + ((pw >> 40) & 0xFF) as usize);
+                            let q3 = *table.get_unchecked(
+                                c0 + 1536 + ((pw >> 48) & 0xFF) as usize)
+                                + *table.get_unchecked(
+                                    c0 + 1792 + ((pw >> 56) & 0xFF) as usize);
+                            let g0 = ga.get_unchecked_mut(w * 2);
+                            *g0 += mult * (q0 + q1);
+                            let g1 = ga.get_unchecked_mut(w * 2 + 1);
+                            *g1 += mult * (q2 + q3);
+                        }
+                    }
+                } else {
+                    // generic path: acc/g/b persist across words so any
+                    // gs % 8 == 0 works.
+                    let mut g = 0usize;
+                    let mut b = 0usize;
+                    let mut acc = 0f32;
+                    for (w, &pw) in plane.iter().enumerate().take(n_words)
+                    {
+                        let mut word = pw;
+                        let chunk0 = w * 8;
+                        if word == 0 && b == 0 && bytes_per_group <= 8
+                            && 8 % bytes_per_group == 0
+                        {
+                            g += 8 / bytes_per_group;
+                            continue;
+                        }
+                        for i in 0..8 {
+                            let byte = (word & 0xFF) as usize;
+                            word >>= 8;
+                            // SAFETY: table padded to whole words.
+                            acc += unsafe {
+                                *table.get_unchecked(
+                                    (chunk0 + i) * 256 + byte)
+                            };
+                            b += 1;
+                            if b == bytes_per_group {
+                                ga[g] += mult * acc;
+                                acc = 0.0;
+                                b = 0;
+                                g += 1;
+                            }
+                        }
+                    }
+                }
+                mult *= 2.0;
+            }
+        }
+        let srow = &base.scale[..];
+        let zrow = &base.zero[..];
+        let mut acc = 0f32;
+        for g in 0..n_groups {
+            let s1 = srow[g * d_out + o];
+            let z1 = zrow[g * d_out + o];
+            let c = (z1 - 0.5 + resid_c) * lut.group_sums[g];
+            acc += s1 * (ga[g] - c);
+        }
+        out[o] = acc;
+    }
+}
+
+/// First-cut LUT kernel (per-group helper calls, checked indexing) —
+/// kept as the §Perf "before" comparator; see EXPERIMENTS.md §Perf.
+pub fn gemv_lut_simple(slices: &[PackedSlice], base: &GroupParams,
+                       lut: &TokenLut, active: &[bool], out: &mut [f32]) {
+    let d_out = base.d_out;
+    let gs = base.group_size;
+    let n_groups = base.n_groups;
+    let mut resid_c = 0f32;
+    for (e, &a) in active.iter().enumerate().skip(1) {
+        if a {
+            resid_c += slice_weight(e, base.bits)
+                * ((1u32 << (base.bits - 1)) as f32 - 0.5);
+        }
+    }
+    for o in 0..d_out {
+        let mut acc = 0f32;
+        for g in 0..n_groups {
+            let mut a = 0f32;
+            for (e, &is_active) in active.iter().enumerate() {
+                if !is_active {
+                    continue;
+                }
+                let sl = &slices[e];
+                let mut qdot = 0f32;
+                let mut mult = 1f32;
+                for p in 0..sl.slice_bits {
+                    qdot += mult
+                        * lut.plane_group_sum(sl.plane(p, o), g, gs);
+                    mult *= 2.0;
+                }
+                a += slice_weight(e, base.bits) * qdot;
+            }
+            let (s1, z1) = base.at(g, o);
+            let c = (z1 - 0.5 + resid_c) * lut.group_sums[g];
+            acc += s1 * (a - c);
+        }
+        out[o] = acc;
+    }
+}
+
+/// Bit-iteration baseline: same math, but masked sums walk set bits with
+/// trailing_zeros instead of byte LUTs.  Kept for the §Perf before/after.
+pub fn gemv_bitserial(slices: &[PackedSlice], base: &GroupParams,
+                      x: &[f32], group_sums: &[f32], active: &[bool],
+                      out: &mut [f32]) {
+    let d_out = base.d_out;
+    let gs = base.group_size;
+    let mut resid_c = 0f32;
+    for (e, &a) in active.iter().enumerate().skip(1) {
+        if a {
+            resid_c += slice_weight(e, base.bits)
+                * ((1u32 << (base.bits - 1)) as f32 - 0.5);
+        }
+    }
+    for o in 0..d_out {
+        let mut acc = 0f32;
+        for g in 0..base.n_groups {
+            let mut a = 0f32;
+            for (e, &is_active) in active.iter().enumerate() {
+                if !is_active {
+                    continue;
+                }
+                let sl = &slices[e];
+                let mut qdot = 0f32;
+                let mut mult = 1f32;
+                for p in 0..sl.slice_bits {
+                    let plane = sl.plane(p, o);
+                    let mut sum = 0f32;
+                    let lo = g * gs;
+                    let hi = (g + 1) * gs;
+                    let mut row = lo;
+                    while row < hi {
+                        let word = plane[row / 64];
+                        let base_bit = row % 64;
+                        let span = (hi - row).min(64 - base_bit);
+                        let mut m = (word >> base_bit)
+                            & mask_lo(span);
+                        while m != 0 {
+                            let b = m.trailing_zeros() as usize;
+                            sum += x[row + b];
+                            m &= m - 1;
+                        }
+                        row += span;
+                    }
+                    qdot += mult * sum;
+                    mult *= 2.0;
+                }
+                a += slice_weight(e, base.bits) * qdot;
+            }
+            let (s1, z1) = base.at(g, o);
+            acc += s1 * (a - (z1 - 0.5 + resid_c) * group_sums[g]);
+        }
+        out[o] = acc;
+    }
+}
+
+#[inline]
+fn mask_lo(n: usize) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// Correctness oracle: reconstruct the active slices' dense f32 weights
+/// and do a plain GEMV.  O(d_in·d_out) floats — also the "offline
+/// repacking" comparator (what MatQuant-style deployment would execute).
+pub fn dequant_gemv(slices: &[PackedSlice], base: &GroupParams, x: &[f32],
+                    active: &[bool], out: &mut [f32]) {
+    let d_in = slices[0].d_in;
+    let d_out = base.d_out;
+    let mut w = vec![0f32; d_in * d_out];
+    for (e, &is_active) in active.iter().enumerate() {
+        if !is_active {
+            continue;
+        }
+        let codes = slices[e].unpack();
+        let deq = dequantize(&codes, &base.residual(e));
+        for (wi, di) in w.iter_mut().zip(&deq) {
+            *wi += di;
+        }
+    }
+    matvec(&w, x, out, d_in, d_out);
+}
+
+/// Dense f32 GEMV helper: w is (d_in, d_out) row-major; y = x W.
+pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32], d_in: usize,
+              d_out: usize) {
+    out.fill(0.0);
+    for (row, &xv) in x.iter().enumerate().take(d_in) {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[row * d_out..(row + 1) * d_out];
+        for (o, wv) in wrow.iter().enumerate() {
+            out[o] += xv * wv;
+        }
+    }
+}
+
+/// Group tokens by identical slice masks — §4.3 token permutation.  The
+/// returned permutation makes same-precision tokens contiguous so the
+/// batched path streams each slice's planes once per token group.
+pub fn permute_by_mask(masks: &[Vec<bool>]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..masks.len()).collect();
+    let key = |m: &Vec<bool>| -> u32 {
+        m.iter().enumerate()
+            .fold(0u32, |acc, (i, &b)| acc | ((b as u32) << i))
+    };
+    idx.sort_by_key(|&i| key(&masks[i]));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{property, Pcg};
+
+    fn setup(rng: &mut Pcg, d_in: usize, d_out: usize, gs: usize)
+             -> (Vec<PackedSlice>, GroupParams) {
+        let w = rng.normal_vec(d_in * d_out, 0.2);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = super::super::quantizer::decompose(&w, &base, 4);
+        let slices = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        (slices, base)
+    }
+
+    #[test]
+    fn lut_matches_oracle() {
+        property(20, 15, |rng, _| {
+            let (d_in, d_out, gs) = (64, 24, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let x = rng.normal_vec(d_in, 1.0);
+            let mut active = vec![true, rng.bool(0.5), rng.bool(0.5),
+                                  rng.bool(0.5)];
+            active[0] = true;
+            let mut lut = TokenLut::new(d_in, gs);
+            lut.build(&x, gs);
+            let mut y = vec![0f32; d_out];
+            let mut y_ref = vec![0f32; d_out];
+            gemv_lut(&slices, &base, &lut, &active, &mut y);
+            dequant_gemv(&slices, &base, &x, &active, &mut y_ref);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 2e-3,
+                        "lut {} vs oracle {}", a, b);
+            }
+        });
+    }
+
+    #[test]
+    fn bitserial_matches_oracle() {
+        property(21, 10, |rng, _| {
+            let (d_in, d_out, gs) = (96, 16, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let x = rng.normal_vec(d_in, 1.0);
+            let active = vec![true, true, false, true];
+            let group_sums: Vec<f32> = (0..d_in / gs)
+                .map(|g| x[g * gs..(g + 1) * gs].iter().sum())
+                .collect();
+            let mut y = vec![0f32; d_out];
+            let mut y_ref = vec![0f32; d_out];
+            gemv_bitserial(&slices, &base, &x, &group_sums, &active,
+                           &mut y);
+            dequant_gemv(&slices, &base, &x, &active, &mut y_ref);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 2e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn more_slices_reduce_error() {
+        let mut rng = Pcg::new(5);
+        let (d_in, d_out, gs) = (64, 16, 32);
+        let w = rng.normal_vec(d_in * d_out, 0.2);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = super::super::quantizer::decompose(&w, &base, 4);
+        let slices: Vec<PackedSlice> = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        let x = rng.normal_vec(d_in, 1.0);
+        let mut y_fp = vec![0f32; d_out];
+        matvec(&w, &x, &mut y_fp, d_in, d_out);
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let mut prev = f64::INFINITY;
+        for k in 1..=4 {
+            let active: Vec<bool> = (0..4).map(|e| e < k).collect();
+            let mut y = vec![0f32; d_out];
+            gemv_lut(&slices, &base, &lut, &active, &mut y);
+            let err: f64 = y.iter().zip(&y_fp)
+                .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            assert!(err < prev, "k={}: {} !< {}", k, err, prev);
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn permutation_groups_masks() {
+        let masks = vec![
+            vec![true, false], vec![true, true], vec![true, false],
+            vec![true, true], vec![true, false],
+        ];
+        let perm = permute_by_mask(&masks);
+        // all equal masks contiguous
+        let keys: Vec<bool> = perm.iter().map(|&i| masks[i][1]).collect();
+        let first_true = keys.iter().position(|&b| b).unwrap();
+        assert!(keys[first_true..].iter().all(|&b| b));
+        // it is a permutation
+        let mut sorted = perm.clone();
+        sorted.sort();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nibble_path_matches_oracle() {
+        // d_in above NIBBLE_THRESHOLD exercises the nibble-table kernel
+        property(23, 3, |rng, _| {
+            let (d_in, d_out, gs) = (2048, 8, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let x = rng.normal_vec(d_in, 1.0);
+            let active = vec![true, true, false, true];
+            let mut lut = TokenLut::new(d_in, gs);
+            lut.build(&x, gs);
+            assert!(lut.nibble, "threshold should select nibble tables");
+            let mut y = vec![0f32; d_out];
+            let mut y_ref = vec![0f32; d_out];
+            gemv_lut(&slices, &base, &lut, &active, &mut y);
+            dequant_gemv(&slices, &base, &x, &active, &mut y_ref);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 2e-2, "nibble {} vs {}", a, b);
+            }
+        });
+    }
+
+    #[test]
+    fn lut_rebuild_smaller_then_larger() {
+        // shared scratch across linears of different widths must not
+        // leak stale table entries (regression test for the capacity
+        // refactor)
+        let mut rng = Pcg::new(8);
+        let gs = 32;
+        let (slices_big, base_big) = setup(&mut rng, 128, 8, gs);
+        let (slices_small, base_small) = setup(&mut rng, 64, 8, gs);
+        let mut lut = TokenLut::new(128, gs);
+        let x_big = rng.normal_vec(128, 1.0);
+        let x_small = rng.normal_vec(64, 1.0);
+        let active = vec![true, true, true, true];
+        let mut y = vec![0f32; 8];
+        let mut y_ref = vec![0f32; 8];
+        for _ in 0..3 {
+            lut.build(&x_big, gs);
+            gemv_lut(&slices_big, &base_big, &lut, &active, &mut y);
+            dequant_gemv(&slices_big, &base_big, &x_big, &active,
+                         &mut y_ref);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 2e-3);
+            }
+            lut.build(&x_small, gs);
+            gemv_lut(&slices_small, &base_small, &lut, &active, &mut y);
+            dequant_gemv(&slices_small, &base_small, &x_small, &active,
+                         &mut y_ref);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 2e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn lut_simple_matches_optimized() {
+        property(24, 10, |rng, _| {
+            let (d_in, d_out, gs) = (96, 12, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let x = rng.normal_vec(d_in, 1.0);
+            let active = vec![true, rng.bool(0.5), rng.bool(0.5), true];
+            let mut lut = TokenLut::new(d_in, gs);
+            lut.build(&x, gs);
+            let mut a = vec![0f32; d_out];
+            let mut b = vec![0f32; d_out];
+            gemv_lut(&slices, &base, &lut, &active, &mut a);
+            gemv_lut_simple(&slices, &base, &lut, &active, &mut b);
+            for (x1, x2) in a.iter().zip(&b) {
+                assert!((x1 - x2).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn lut_build_partial_sums() {
+        let mut lut = TokenLut::new(8, 8);
+        let x = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        lut.build(&x, 8);
+        // byte 0b10110001 selects x0 + x4 + x5 + x7 = 1+16+32+128
+        assert_eq!(lut.table[0b1011_0001], 177.0);
+        assert_eq!(lut.table[0], 0.0);
+        assert_eq!(lut.table[255], x.iter().sum::<f32>());
+        assert_eq!(lut.group_sums[0], 255.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's core library: MoBiSlice bit-plane weights, shared-scale
+//! shift-add GEMV kernels, MoBiRoute routing and elastic precision control.
+
+pub mod artifact;
+pub mod bitplane;
+pub mod engine;
+pub mod footprint;
+pub mod gemv;
+pub mod quantizer;
+pub mod router;
+pub mod static_quant;

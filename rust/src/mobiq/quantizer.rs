@@ -1,0 +1,235 @@
+//! Floor-aligned group quantizer — exact mirror of
+//! python/compile/quant/quantizer.py (paper Eq. 11-12, App. B):
+//!
+//! ```text
+//! q   = clamp(floor(x / s + z), 0, 2^b - 1)
+//! deq = s * (q - z + 0.5)
+//! ```
+//!
+//! Weights are (d_in, d_out) with y = x W; scales/zeros are per
+//! (input-group, output-channel), stored row-major (n_groups, d_out).
+
+/// Per-linear shared quantization parameters (the paper's single Theta_q).
+#[derive(Debug, Clone)]
+pub struct GroupParams {
+    pub scale: Vec<f32>, // (n_groups * d_out)
+    pub zero: Vec<f32>,  // (n_groups * d_out)
+    pub n_groups: usize,
+    pub d_out: usize,
+    pub bits: u32,
+    pub group_size: usize,
+}
+
+impl GroupParams {
+    #[inline]
+    pub fn at(&self, g: usize, o: usize) -> (f32, f32) {
+        let i = g * self.d_out + o;
+        (self.scale[i], self.zero[i])
+    }
+
+    /// Min/max calibration from a weight matrix (RTN-style).
+    pub fn from_minmax(w: &[f32], d_in: usize, d_out: usize, bits: u32,
+                       group_size: usize) -> GroupParams {
+        assert_eq!(w.len(), d_in * d_out);
+        assert_eq!(d_in % group_size, 0);
+        let n_groups = d_in / group_size;
+        let levels = (1u32 << bits) as f32;
+        let mut scale = vec![0f32; n_groups * d_out];
+        let mut zero = vec![0f32; n_groups * d_out];
+        for g in 0..n_groups {
+            for o in 0..d_out {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for j in 0..group_size {
+                    let v = w[(g * group_size + j) * d_out + o];
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let lo = lo.min(-1e-8);
+                let hi = hi.max(1e-8);
+                let s = ((hi - lo) / levels).max(1e-8);
+                scale[g * d_out + o] = s;
+                zero[g * d_out + o] = -lo / s;
+            }
+        }
+        GroupParams { scale, zero, n_groups, d_out, bits, group_size }
+    }
+
+    /// Derived parameters of slice e (0-based): s_e = s_1 / 2^{b e},
+    /// z_e = 2^{b-1} for e >= 1 (App. B Eq. 14).
+    pub fn residual(&self, e: usize) -> GroupParams {
+        if e == 0 {
+            return self.clone();
+        }
+        let div = (1u64 << (self.bits as usize * e)) as f32;
+        GroupParams {
+            scale: self.scale.iter().map(|s| s / div).collect(),
+            zero: vec![(1u32 << (self.bits - 1)) as f32;
+                       self.zero.len()],
+            ..self.clone()
+        }
+    }
+}
+
+/// Quantize one weight matrix -> integer codes (d_in * d_out).
+pub fn quantize(w: &[f32], p: &GroupParams) -> Vec<u8> {
+    let d_in = p.n_groups * p.group_size;
+    let maxq = ((1u32 << p.bits) - 1) as f32;
+    let mut q = vec![0u8; w.len()];
+    for g in 0..p.n_groups {
+        for j in 0..p.group_size {
+            let row = g * p.group_size + j;
+            for o in 0..p.d_out {
+                let (s, z) = p.at(g, o);
+                let v = (w[row * p.d_out + o] / s + z).floor()
+                    .clamp(0.0, maxq);
+                q[row * p.d_out + o] = v as u8;
+            }
+        }
+    }
+    debug_assert_eq!(d_in * p.d_out, w.len());
+    q
+}
+
+/// Dequantize integer codes -> f32 weights.
+pub fn dequantize(q: &[u8], p: &GroupParams) -> Vec<f32> {
+    let mut w = vec![0f32; q.len()];
+    for g in 0..p.n_groups {
+        for j in 0..p.group_size {
+            let row = g * p.group_size + j;
+            for o in 0..p.d_out {
+                let (s, z) = p.at(g, o);
+                w[row * p.d_out + o] =
+                    s * (q[row * p.d_out + o] as f32 - z + 0.5);
+            }
+        }
+    }
+    w
+}
+
+/// Recursive residual decomposition (paper Eq. 2): returns per-slice codes.
+pub fn decompose(w: &[f32], base: &GroupParams, n_slices: usize)
+                 -> Vec<Vec<u8>> {
+    let mut r = w.to_vec();
+    let mut out = Vec::with_capacity(n_slices);
+    for e in 0..n_slices {
+        let p = base.residual(e);
+        let q = quantize(&r, &p);
+        let deq = dequantize(&q, &p);
+        for (ri, di) in r.iter_mut().zip(&deq) {
+            *ri -= di;
+        }
+        out.push(q);
+    }
+    out
+}
+
+/// Reconstruct a weight matrix from the first k slices (Eq. 3).
+pub fn reconstruct(codes: &[Vec<u8>], base: &GroupParams, k: usize)
+                   -> Vec<f32> {
+    let mut w = vec![0f32; codes[0].len()];
+    for e in 0..k {
+        let p = base.residual(e);
+        let deq = dequantize(&codes[e], &p);
+        for (wi, di) in w.iter_mut().zip(&deq) {
+            *wi += di;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{property, Pcg};
+
+    fn rand_weight(rng: &mut Pcg, d_in: usize, d_out: usize) -> Vec<f32> {
+        rng.normal_vec(d_in * d_out, 0.1)
+    }
+
+    #[test]
+    fn dequant_in_range() {
+        property(1, 25, |rng, _| {
+            let (d_in, d_out, gs) = (32, 8, 16);
+            let w = rand_weight(rng, d_in, d_out);
+            let p = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+            let q = quantize(&w, &p);
+            let deq = dequantize(&q, &p);
+            for (wi, di) in w.iter().zip(&deq) {
+                // error bounded by one bin (plus clipping slack at edges)
+                assert!((wi - di).abs() <= p.scale.iter().cloned()
+                        .fold(0f32, f32::max) * 1.01 + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn residual_error_halves_per_slice() {
+        // Each extra 2-bit slice must shrink max error by ~4x (Eq. 21).
+        property(2, 10, |rng, _| {
+            let (d_in, d_out, gs) = (64, 16, 32);
+            let w = rand_weight(rng, d_in, d_out);
+            let p = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+            let codes = decompose(&w, &p, 4);
+            let mut prev = f64::INFINITY;
+            for k in 1..=4 {
+                let rec = reconstruct(&codes, &p, k);
+                let maxerr = w.iter().zip(&rec)
+                    .map(|(a, b)| (a - b).abs() as f64)
+                    .fold(0.0, f64::max);
+                assert!(maxerr < prev * 0.51,
+                        "k={} err {} prev {}", k, maxerr, prev);
+                prev = maxerr;
+            }
+        });
+    }
+
+    #[test]
+    fn residual_slice_never_clips() {
+        // After a centred b-bit bin, the residual fits exactly in the next
+        // slice's range (App. B coverage argument).
+        property(3, 10, |rng, _| {
+            let (d_in, d_out, gs) = (32, 8, 16);
+            let w = rand_weight(rng, d_in, d_out);
+            let p = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+            let p1 = p.residual(1);
+            let q0 = quantize(&w, &p);
+            let deq0 = dequantize(&q0, &p);
+            let r: Vec<f32> = w.iter().zip(&deq0).map(|(a, b)| a - b)
+                .collect();
+            // ignore rows that were clipped by slice 0 (outside range)
+            for g in 0..p.n_groups {
+                for j in 0..gs {
+                    let row = g * gs + j;
+                    for o in 0..d_out {
+                        let q = q0[row * d_out + o];
+                        if q == 0 || q == 3 {
+                            continue; // may be a clipped extreme
+                        }
+                        let (s1, z1) = p1.at(g, o);
+                        let v = (r[row * d_out + o] / s1 + z1).floor();
+                        assert!((0.0..4.0).contains(&v),
+                                "residual code {} out of range", v);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reconstruct_full_equals_sum() {
+        let mut rng = Pcg::new(9);
+        let w = rand_weight(&mut rng, 32, 4);
+        let p = GroupParams::from_minmax(&w, 32, 4, 2, 16);
+        let codes = decompose(&w, &p, 4);
+        let r4 = reconstruct(&codes, &p, 4);
+        let mut acc = vec![0f32; w.len()];
+        for e in 0..4 {
+            let deq = dequantize(&codes[e], &p.residual(e));
+            for (a, d) in acc.iter_mut().zip(&deq) {
+                *a += d;
+            }
+        }
+        assert_eq!(r4, acc);
+    }
+}

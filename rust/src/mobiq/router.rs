@@ -1,0 +1,194 @@
+//! MoBiRoute inference — per-linear 2-layer MLP scoring tokens for each
+//! residual slice (paper Eq. 4), hard threshold gating (Eq. 10), and the
+//! quantile-based layer threshold calibration of App. C.2.
+//!
+//! Runtime elasticity: each linear stores a pooled score-quantile grid
+//! collected at calibration time.  A target average bit-width maps to an
+//! activation ratio rho (App. C.2); the layer threshold is the
+//! (1 - rho)-quantile, shifted by a *global* delta for runtime control
+//! (Eq. 10).  Increasing delta lowers the effective precision and vice
+//! versa, with no repacking or extra scales.
+
+/// 2-layer MLP: relu(x W1 + b1) W2 + b2 — mirror of
+/// python/compile/quant/router.py::scores.
+#[derive(Debug, Clone)]
+pub struct RouterMlp {
+    pub w1: Vec<f32>, // (d_in, hidden) row-major
+    pub b1: Vec<f32>, // (hidden)
+    pub w2: Vec<f32>, // (hidden, n_residual)
+    pub b2: Vec<f32>, // (n_residual)
+    pub d_in: usize,
+    pub hidden: usize,
+    pub n_residual: usize,
+}
+
+impl RouterMlp {
+    /// Scores for one token; `scratch` must have length `hidden`.
+    pub fn scores_into(&self, x: &[f32], scratch: &mut [f32],
+                       out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(scratch.len(), self.hidden);
+        debug_assert_eq!(out.len(), self.n_residual);
+        scratch.copy_from_slice(&self.b1);
+        for (row, &xv) in x.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &self.w1[row * self.hidden..(row + 1) * self.hidden];
+            for (h, wv) in wrow.iter().enumerate() {
+                scratch[h] += xv * wv;
+            }
+        }
+        out.copy_from_slice(&self.b2);
+        for (h, &hv) in scratch.iter().enumerate() {
+            let a = hv.max(0.0); // relu
+            if a == 0.0 {
+                continue;
+            }
+            let wrow = &self.w2[h * self.n_residual
+                ..(h + 1) * self.n_residual];
+            for (o, wv) in wrow.iter().enumerate() {
+                out[o] += a * wv;
+            }
+        }
+    }
+
+    pub fn scores(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = vec![0f32; self.hidden];
+        let mut out = vec![0f32; self.n_residual];
+        self.scores_into(x, &mut scratch, &mut out);
+        out
+    }
+
+    /// FLOPs of one routed token (latency-breakdown accounting, Fig. 7).
+    pub fn flops(&self) -> usize {
+        2 * self.d_in * self.hidden + 2 * self.hidden * self.n_residual
+    }
+}
+
+/// Pooled score quantiles collected at calibration (App. C.2).
+#[derive(Debug, Clone)]
+pub struct ThresholdTable {
+    /// Monotone grid of len >= 2 covering quantiles 0..=1.
+    pub quantiles: Vec<f32>,
+}
+
+impl ThresholdTable {
+    /// rho = fraction of (token, slice) scores that should activate.
+    pub fn threshold_for_ratio(&self, rho: f64) -> f32 {
+        let rho = rho.clamp(0.0, 1.0);
+        let n = self.quantiles.len();
+        let pos = (1.0 - rho) * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = (lo + 1).min(n - 1);
+        let frac = (pos - lo as f64) as f32;
+        self.quantiles[lo] * (1.0 - frac) + self.quantiles[hi] * frac
+    }
+}
+
+/// rho for a target average bit-width (App. C.2):
+/// rho = (b_target - b_msb) / sum residual bits.
+pub fn ratio_for_target_bits(target_bits: f64, base_bits: usize,
+                             slice_bits: usize, n_residual: usize) -> f64 {
+    ((target_bits - base_bits as f64)
+        / (slice_bits * n_residual) as f64)
+        .clamp(0.0, 1.0)
+}
+
+/// Hard gate (Eq. 10): active_e = score_e > threshold + delta.
+/// `mask[0]` (shared expert) is always set; mask has n_residual+1 entries.
+pub fn hard_mask(scores: &[f32], threshold: f32, delta: f32,
+                 mask: &mut [bool]) {
+    mask[0] = true;
+    for (e, &s) in scores.iter().enumerate() {
+        mask[e + 1] = s - (threshold + delta) > 0.0;
+    }
+}
+
+/// Effective bits of a mask under uniform slice_bits.
+pub fn mask_bits(mask: &[bool], slice_bits: usize) -> usize {
+    mask.iter().filter(|&&b| b).count() * slice_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn mk_router(rng: &mut Pcg, d_in: usize, hidden: usize,
+                 nr: usize) -> RouterMlp {
+        RouterMlp {
+            w1: rng.normal_vec(d_in * hidden, 0.3),
+            b1: rng.normal_vec(hidden, 0.1),
+            w2: rng.normal_vec(hidden * nr, 0.3),
+            b2: rng.normal_vec(nr, 0.1),
+            d_in, hidden, n_residual: nr,
+        }
+    }
+
+    #[test]
+    fn mlp_matches_manual() {
+        let r = RouterMlp {
+            w1: vec![1.0, 0.0, 0.0, 1.0], // identity 2x2
+            b1: vec![0.0, -1.0],
+            w2: vec![1.0, 2.0],           // (2 hidden, 1 out)... row-major
+            b2: vec![0.5],
+            d_in: 2, hidden: 2, n_residual: 1,
+        };
+        // x = [2, 3]: h = relu([2, 2]) = [2, 2]; out = 2*1 + 2*2 + 0.5
+        let s = r.scores(&[2.0, 3.0]);
+        assert!((s[0] - 6.5).abs() < 1e-6);
+        // negative pre-activation is clamped
+        let s = r.scores(&[-5.0, 0.5]);
+        assert!((s[0] - 0.5).abs() < 1e-6); // both hidden units negative
+    }
+
+    #[test]
+    fn threshold_monotone_in_rho() {
+        let t = ThresholdTable {
+            quantiles: (0..129).map(|i| i as f32 * 0.01 - 0.5).collect(),
+        };
+        let mut prev = f32::INFINITY;
+        for rho in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let d = t.threshold_for_ratio(rho);
+            assert!(d <= prev, "threshold must fall as rho rises");
+            prev = d;
+        }
+        // rho=0 -> max quantile (nothing activates)
+        assert_eq!(t.threshold_for_ratio(0.0), 0.78);
+        assert_eq!(t.threshold_for_ratio(1.0), -0.5);
+    }
+
+    #[test]
+    fn ratio_mapping() {
+        // E=4, 2-bit slices: target 3 bits -> rho = 1/6
+        let r = ratio_for_target_bits(3.0, 2, 2, 3);
+        assert!((r - 1.0 / 6.0).abs() < 1e-9);
+        assert_eq!(ratio_for_target_bits(2.0, 2, 2, 3), 0.0);
+        assert_eq!(ratio_for_target_bits(8.0, 2, 2, 3), 1.0);
+        assert_eq!(ratio_for_target_bits(99.0, 2, 2, 3), 1.0);
+    }
+
+    #[test]
+    fn hard_mask_and_bits() {
+        let mut m = vec![false; 4];
+        hard_mask(&[0.5, -0.5, 0.1], 0.0, 0.0, &mut m);
+        assert_eq!(m, vec![true, true, false, true]);
+        assert_eq!(mask_bits(&m, 2), 6);
+        // raising delta prunes slices (Eq. 10 elasticity)
+        hard_mask(&[0.5, -0.5, 0.1], 0.0, 0.4, &mut m);
+        assert_eq!(m, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn scores_into_no_alloc_path_matches() {
+        let mut rng = Pcg::new(3);
+        let r = mk_router(&mut rng, 16, 8, 3);
+        let x = rng.normal_vec(16, 1.0);
+        let a = r.scores(&x);
+        let mut scratch = vec![0f32; 8];
+        let mut b = vec![0f32; 3];
+        r.scores_into(&x, &mut scratch, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,214 @@
+//! Static-PTQ baseline records (Tab. 2 / Fig. 1 / App. E comparators).
+//!
+//! One record per linear per (method, bits): integer codes + group
+//! scales/zeros + an activation-side transform:
+//!
+//! * `None`        — RTN / GPTQ / OmniQuant-lite
+//! * `ChanScale`   — AWQ / SmoothQuant (x'_j = x_j / s_j, weights folded)
+//! * `Hadamard`    — QuaRot-lite / SpinQuant-lite (x' = FWHT_block(D x))
+//!
+//! The fast Walsh-Hadamard transform runs on the activation at request
+//! time; the math is exactly the python oracle in quant/rotation.py.
+
+use anyhow::{bail, Result};
+
+use super::artifact::Bundle;
+use super::gemv::matvec;
+use super::quantizer::{dequantize, GroupParams};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transform {
+    None,
+    /// Per-channel divisor on the activation.
+    ChanScale(Vec<f32>),
+    /// Block FWHT with per-channel pre-signs (+-1) and block size.
+    Hadamard { signs: Vec<f32>, block: usize },
+}
+
+#[derive(Debug, Clone)]
+pub struct StaticLinear {
+    pub weights: Vec<f32>, // dequantized (d_in, d_out); hot path is dense
+    pub codes: Vec<u8>,
+    pub params: GroupParams,
+    pub transform: Transform,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub bits: u32,
+}
+
+impl StaticLinear {
+    pub fn from_bundle(bundle: &Bundle, method: &str, layer: usize,
+                       name: &str) -> Result<StaticLinear> {
+        let pre = format!("static.{method}.layers.{layer}.{name}");
+        let codes_t = bundle.tensor(&format!("{pre}.codes"))?;
+        let (d_in, d_out) = (codes_t.shape[0], codes_t.shape[1]);
+        let codes = codes_t.u8()?.to_vec();
+        let (sshape, scale) = bundle.f32(&format!("{pre}.scale"))?;
+        let (_, zero) = bundle.f32(&format!("{pre}.zero"))?;
+        let (_, act_scale) = bundle.f32(&format!("{pre}.act_scale"))?;
+        let n_groups = sshape[0];
+        let meta = bundle.manifest
+            .path(&["static_methods", method])
+            .ok_or_else(|| anyhow::anyhow!("no meta for {method}"))?;
+        let bits = meta.get("bits").and_then(|v| v.as_usize())
+            .unwrap_or(3) as u32;
+        let tf = meta.get("transform").and_then(|v| v.as_str())
+            .unwrap_or("none");
+        let transform = match tf {
+            "none" => Transform::None,
+            "chan_scale" => Transform::ChanScale(act_scale.to_vec()),
+            "hadamard" => Transform::Hadamard {
+                signs: act_scale.to_vec(),
+                block: hadamard_block_size(d_in, 64),
+            },
+            other => bail!("unknown transform {other}"),
+        };
+        let params = GroupParams {
+            scale: scale.to_vec(),
+            zero: zero.to_vec(),
+            n_groups,
+            d_out,
+            bits,
+            group_size: d_in / n_groups,
+        };
+        let weights = dequantize(&codes, &params);
+        Ok(StaticLinear { weights, codes, params, transform, d_in, d_out,
+                          bits })
+    }
+
+    /// y = transform(x) @ deq(codes); scratch must be d_in long.
+    pub fn forward(&self, x: &[f32], scratch: &mut [f32],
+                   out: &mut [f32]) {
+        apply_transform(&self.transform, x, scratch);
+        matvec(&self.weights, scratch, out, self.d_in, self.d_out);
+    }
+
+    pub fn nbytes_packed(&self) -> usize {
+        // codes at `bits` per weight + scales/zeros
+        self.codes.len() * self.bits as usize / 8
+            + self.params.scale.len() * 8
+    }
+}
+
+/// Largest power of two <= max_block dividing d (mirror of rotation.py).
+pub fn hadamard_block_size(d: usize, max_block: usize) -> usize {
+    let mut b = 1;
+    while b * 2 <= max_block && d % (b * 2) == 0 {
+        b *= 2;
+    }
+    b
+}
+
+/// Normalised in-place FWHT over blocks of `block` along x.
+pub fn block_fwht(x: &mut [f32], block: usize) {
+    debug_assert_eq!(x.len() % block, 0);
+    let norm = 1.0 / (block as f32).sqrt();
+    for chunk in x.chunks_exact_mut(block) {
+        let mut h = 1;
+        while h < block {
+            let mut i = 0;
+            while i < block {
+                for j in i..i + h {
+                    let a = chunk[j];
+                    let b = chunk[j + h];
+                    chunk[j] = a + b;
+                    chunk[j + h] = a - b;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+        for v in chunk.iter_mut() {
+            *v *= norm;
+        }
+    }
+}
+
+pub fn apply_transform(t: &Transform, x: &[f32], out: &mut [f32]) {
+    out.copy_from_slice(x);
+    match t {
+        Transform::None => {}
+        Transform::ChanScale(s) => {
+            for (o, sv) in out.iter_mut().zip(s) {
+                *o /= sv;
+            }
+        }
+        Transform::Hadamard { signs, block } => {
+            for (o, sg) in out.iter_mut().zip(signs) {
+                *o *= sg;
+            }
+            block_fwht(out, *block);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::{property, Pcg};
+
+    #[test]
+    fn fwht_is_orthonormal() {
+        property(31, 20, |rng, _| {
+            let block = [2, 4, 8, 16, 32][rng.below(5)];
+            let n = block * (1 + rng.below(3));
+            let x = rng.normal_vec(n, 1.0);
+            let mut y = x.clone();
+            block_fwht(&mut y, block);
+            // norm preserved
+            let nx: f32 = x.iter().map(|v| v * v).sum();
+            let ny: f32 = y.iter().map(|v| v * v).sum();
+            assert!((nx - ny).abs() < 1e-3 * nx.max(1.0));
+            // involution: H(Hx) = x for normalised Hadamard
+            block_fwht(&mut y, block);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn fwht_matches_matrix_h2() {
+        let mut x = vec![3.0, 5.0];
+        block_fwht(&mut x, 2);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((x[0] - 8.0 * s).abs() < 1e-6);
+        assert!((x[1] + 2.0 * s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chan_scale_transform() {
+        let t = Transform::ChanScale(vec![2.0, 4.0]);
+        let mut out = vec![0.0; 2];
+        apply_transform(&t, &[8.0, 8.0], &mut out);
+        assert_eq!(out, vec![4.0, 2.0]);
+    }
+
+    #[test]
+    fn rotation_preserves_linear_output() {
+        // (x H)(H^T W) == x W: quantization-free invariance check.
+        let mut rng = Pcg::new(4);
+        let (d_in, d_out, block) = (16, 6, 16);
+        let w = rng.normal_vec(d_in * d_out, 0.5);
+        let x = rng.normal_vec(d_in, 1.0);
+        // rotate W rows: each column of W transformed by FWHT
+        let mut w_rot = vec![0f32; d_in * d_out];
+        for o in 0..d_out {
+            let mut col: Vec<f32> = (0..d_in).map(|r| w[r * d_out + o])
+                .collect();
+            block_fwht(&mut col, block);
+            for r in 0..d_in {
+                w_rot[r * d_out + o] = col[r];
+            }
+        }
+        let mut xr = x.clone();
+        block_fwht(&mut xr, block);
+        let mut y1 = vec![0f32; d_out];
+        let mut y2 = vec![0f32; d_out];
+        matvec(&w, &x, &mut y1, d_in, d_out);
+        matvec(&w_rot, &xr, &mut y2, d_in, d_out);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-sequence KV cache with slab allocation.
+//!
+//! The coordinator serves many concurrent sequences; each gets a cache
+//! slot sized to max_seq_len.  The manager tracks allocation so the
+//! scheduler can apply backpressure when memory runs out (Fig. 7-style
+//! memory accounting feeds from here too).
+
+/// KV tensors of one sequence: (max_seq, n_kv_heads * head_dim) each.
+pub struct KvCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+    pub width: usize,
+    pub max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(max_seq: usize, width: usize) -> KvCache {
+        KvCache {
+            k: vec![0f32; max_seq * width],
+            v: vec![0f32; max_seq * width],
+            len: 0,
+            width,
+            max_seq,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Append one position's K/V rows; returns the position index.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> usize {
+        assert!(self.len < self.max_seq, "kv cache overflow");
+        let pos = self.len;
+        self.k[pos * self.width..(pos + 1) * self.width]
+            .copy_from_slice(k_row);
+        self.v[pos * self.width..(pos + 1) * self.width]
+            .copy_from_slice(v_row);
+        self.len += 1;
+        pos
+    }
+
+    #[inline]
+    pub fn k_at(&self, pos: usize) -> &[f32] {
+        &self.k[pos * self.width..(pos + 1) * self.width]
+    }
+
+    #[inline]
+    pub fn v_at(&self, pos: usize) -> &[f32] {
+        &self.v[pos * self.width..(pos + 1) * self.width]
+    }
+
+    pub fn nbytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// All layers' caches for one sequence.
+pub struct SequenceKv {
+    pub layers: Vec<KvCache>,
+}
+
+impl SequenceKv {
+    pub fn new(n_layers: usize, max_seq: usize, width: usize) -> SequenceKv {
+        SequenceKv {
+            layers: (0..n_layers).map(|_| KvCache::new(max_seq, width))
+                .collect(),
+        }
+    }
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|c| c.len).unwrap_or(0)
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn reset(&mut self) {
+        for c in &mut self.layers {
+            c.reset();
+        }
+    }
+    pub fn nbytes(&self) -> usize {
+        self.layers.iter().map(|c| c.nbytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read() {
+        let mut c = KvCache::new(4, 2);
+        assert_eq!(c.push(&[1.0, 2.0], &[3.0, 4.0]), 0);
+        assert_eq!(c.push(&[5.0, 6.0], &[7.0, 8.0]), 1);
+        assert_eq!(c.k_at(0), &[1.0, 2.0]);
+        assert_eq!(c.v_at(1), &[7.0, 8.0]);
+        assert_eq!(c.len, 2);
+        c.reset();
+        assert_eq!(c.len, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 1);
+        c.push(&[0.0], &[0.0]);
+        c.push(&[0.0], &[0.0]);
+    }
+
+    #[test]
+    fn sequence_kv_sizes() {
+        let s = SequenceKv::new(3, 8, 4);
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.nbytes(), 3 * 2 * 8 * 4 * 4);
+    }
+}

@@ -1,0 +1,12 @@
+//! Native LLaMA-style transformer decode — the L3 request path.
+//!
+//! Mirrors python/compile/model.py exactly (RMSNorm, interleaved-pair
+//! RoPE, optional GQA, SwiGLU); golden vectors exported in the bundle pin
+//! the two implementations together (rust/tests/integration.rs).
+
+pub mod kvcache;
+pub mod transformer;
+pub mod weights;
+
+pub use transformer::{DecodeStats, Model};
+pub use weights::{LinearBackend, ModelConfig};

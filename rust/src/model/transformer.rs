@@ -1,0 +1,494 @@
+//! Single-token decode transformer with KV cache — the request path.
+
+use anyhow::Result;
+
+use super::kvcache::SequenceKv;
+use super::weights::{load_fp_dense, load_linear, BackendKind,
+                     LayerWeights, LinearBackend, ModelConfig,
+                     LINEAR_NAMES};
+use crate::mobiq::artifact::Bundle;
+use crate::mobiq::engine::{Precision, Scratch};
+
+/// Aggregate decode statistics (Fig. 6 / Fig. 7 accounting).
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    pub tokens: u64,
+    pub linear_calls: u64,
+    pub total_bits: u64,
+    /// Histogram over effective bits per routed linear call, indexed by
+    /// k = bits / slice_bits (bin 0 unused).
+    pub bits_hist: Vec<u64>,
+    /// Per (layer, linear) bit sums for block-level analysis.
+    pub per_linear_bits: Vec<u64>,
+    pub per_linear_calls: Vec<u64>,
+}
+
+impl DecodeStats {
+    pub fn new(n_layers: usize) -> DecodeStats {
+        DecodeStats {
+            bits_hist: vec![0; 16],
+            per_linear_bits: vec![0; n_layers * LINEAR_NAMES.len()],
+            per_linear_calls: vec![0; n_layers * LINEAR_NAMES.len()],
+            ..Default::default()
+        }
+    }
+
+    pub fn avg_bits(&self) -> f64 {
+        if self.linear_calls == 0 {
+            return 0.0;
+        }
+        self.total_bits as f64 / self.linear_calls as f64
+    }
+
+    pub fn block_avg_bits(&self, layer: usize, lin: usize) -> f64 {
+        let i = layer * LINEAR_NAMES.len() + lin;
+        if self.per_linear_calls[i] == 0 {
+            return 0.0;
+        }
+        self.per_linear_bits[i] as f64 / self.per_linear_calls[i] as f64
+    }
+
+    fn record(&mut self, layer: usize, lin: usize, bits: usize,
+              slice_bits: usize) {
+        self.linear_calls += 1;
+        self.total_bits += bits as u64;
+        let k = (bits / slice_bits.max(1)).min(self.bits_hist.len() - 1);
+        self.bits_hist[k] += 1;
+        let i = layer * LINEAR_NAMES.len() + lin;
+        self.per_linear_bits[i] += bits as u64;
+        self.per_linear_calls[i] += 1;
+    }
+}
+
+/// Decode scratch buffers (allocation-free steady state).
+pub struct DecodeScratch {
+    pub x: Vec<f32>,
+    pub xn: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub ctx: Vec<f32>,
+    pub attn_out: Vec<f32>,
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    pub ff: Vec<f32>,
+    pub mlp_out: Vec<f32>,
+    pub scores: Vec<f32>,
+    pub logits: Vec<f32>,
+    /// staging copies so linear inputs and outputs can alias disjoint
+    /// scratch fields without allocating in the decode loop (§Perf)
+    pub stage: Vec<f32>,
+    pub engine: Scratch,
+}
+
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub embed: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: LinearBackend,
+}
+
+impl Model {
+    /// Load with a uniform backend kind for all quantizable linears.
+    pub fn load(bundle: &Bundle, kind: BackendKind) -> Result<Model> {
+        let cfg = ModelConfig::from_bundle(bundle)?;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let lin = |name: &str| load_linear(bundle, &cfg, li, name, &kind);
+            layers.push(LayerWeights {
+                attn_norm: bundle
+                    .f32(&format!("fp.layers.{li}.attn_norm"))?.1.to_vec(),
+                mlp_norm: bundle
+                    .f32(&format!("fp.layers.{li}.mlp_norm"))?.1.to_vec(),
+                wq: lin("wq")?,
+                wk: lin("wk")?,
+                wv: lin("wv")?,
+                wo: lin("wo")?,
+                w_gate: lin("w_gate")?,
+                w_up: lin("w_up")?,
+                w_down: lin("w_down")?,
+            });
+        }
+        Ok(Model {
+            embed: bundle.f32("fp.embed")?.1.to_vec(),
+            final_norm: bundle.f32("fp.final_norm")?.1.to_vec(),
+            lm_head: load_fp_dense(bundle, "fp.lm_head")?,
+            cfg,
+            layers,
+        })
+    }
+
+    pub fn new_scratch(&self) -> DecodeScratch {
+        let c = &self.cfg;
+        let dkv = c.n_kv_heads * c.head_dim();
+        DecodeScratch {
+            x: vec![0f32; c.d_model],
+            xn: vec![0f32; c.d_model.max(c.d_ff)],
+            q: vec![0f32; c.d_model],
+            k: vec![0f32; dkv],
+            v: vec![0f32; dkv],
+            ctx: vec![0f32; c.d_model],
+            attn_out: vec![0f32; c.d_model],
+            gate: vec![0f32; c.d_ff],
+            up: vec![0f32; c.d_ff],
+            ff: vec![0f32; c.d_ff],
+            mlp_out: vec![0f32; c.d_model],
+            scores: vec![0f32; c.max_seq_len],
+            logits: vec![0f32; c.vocab_size],
+            stage: vec![0f32; c.d_model.max(c.d_ff)],
+            engine: Scratch::new(c.d_model.max(c.d_ff), c.group_size,
+                                 c.router_hidden, c.n_slices),
+        }
+    }
+
+    pub fn new_kv(&self) -> SequenceKv {
+        SequenceKv::new(self.cfg.n_layers, self.cfg.max_seq_len,
+                        self.cfg.n_kv_heads * self.cfg.head_dim())
+    }
+
+    /// Decode one token at position kv.len(); returns logits in
+    /// `scratch.logits` and records routing stats.
+    pub fn decode_step(&self, token: u32, kv: &mut SequenceKv,
+                       precision: Precision, scratch: &mut DecodeScratch,
+                       stats: &mut DecodeStats) -> Result<()> {
+        let c = &self.cfg;
+        let d = c.d_model;
+        let hd = c.head_dim();
+        let pos = kv.len();
+        anyhow::ensure!(pos < c.max_seq_len, "sequence too long");
+        anyhow::ensure!((token as usize) < c.vocab_size, "token oob");
+        scratch.x.copy_from_slice(
+            &self.embed[token as usize * d..(token as usize + 1) * d]);
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            rmsnorm(&scratch.x, &lw.attn_norm, c.norm_eps,
+                    &mut scratch.xn[..d]);
+            let xn = &scratch.xn[..d];
+            let run =
+                |name: &str, x: &[f32], out: &mut [f32],
+                 eng: &mut Scratch| {
+                    self.layers[li].linear(name)
+                        .forward_token(x, precision, eng, out)
+                };
+            let b = run("wq", xn, &mut scratch.q, &mut scratch.engine);
+            stats.record(li, 0, b, c.slice_bits);
+            let b = run("wk", xn, &mut scratch.k, &mut scratch.engine);
+            stats.record(li, 1, b, c.slice_bits);
+            let b = run("wv", xn, &mut scratch.v, &mut scratch.engine);
+            stats.record(li, 2, b, c.slice_bits);
+
+            rope(&mut scratch.q, pos, hd, c.rope_theta);
+            rope(&mut scratch.k, pos, hd, c.rope_theta);
+            kv.layers[li].push(&scratch.k, &scratch.v);
+
+            attention_step(&scratch.q, &kv.layers[li], c, pos,
+                           &mut scratch.scores, &mut scratch.ctx);
+            scratch.stage[..d].copy_from_slice(&scratch.ctx);
+            let b = run("wo", &scratch.stage[..d], &mut scratch.attn_out,
+                        &mut scratch.engine);
+            stats.record(li, 3, b, c.slice_bits);
+            for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
+                *xi += ai;
+            }
+
+            // ---- mlp ----
+            rmsnorm(&scratch.x, &lw.mlp_norm, c.norm_eps,
+                    &mut scratch.xn[..d]);
+            scratch.stage[..d].copy_from_slice(&scratch.xn[..d]);
+            let b = run("w_gate", &scratch.stage[..d], &mut scratch.gate,
+                        &mut scratch.engine);
+            stats.record(li, 4, b, c.slice_bits);
+            let b = run("w_up", &scratch.stage[..d], &mut scratch.up,
+                        &mut scratch.engine);
+            stats.record(li, 5, b, c.slice_bits);
+            for (f, (g, u)) in scratch.ff.iter_mut()
+                .zip(scratch.gate.iter().zip(&scratch.up)) {
+                *f = silu(*g) * u;
+            }
+            let ff = c.d_ff;
+            scratch.stage[..ff].copy_from_slice(&scratch.ff);
+            let b = run("w_down", &scratch.stage[..ff],
+                        &mut scratch.mlp_out, &mut scratch.engine);
+            stats.record(li, 6, b, c.slice_bits);
+            for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp_out) {
+                *xi += mi;
+            }
+        }
+        stats.tokens += 1;
+
+        rmsnorm(&scratch.x, &self.final_norm, c.norm_eps,
+                &mut scratch.xn[..d]);
+        scratch.stage[..d].copy_from_slice(&scratch.xn[..d]);
+        // split borrow: stage is read-only input, logits the output
+        let (stage, logits) = (&scratch.stage[..d], &mut scratch.logits);
+        self.lm_head.forward_token(stage, precision, &mut scratch.engine,
+                                   logits);
+        Ok(())
+    }
+
+    /// Full-sequence forward; returns (T, vocab) logits row-major.
+    /// Used by the PPL evaluator and the golden-vector parity tests.
+    pub fn forward_logits(&self, tokens: &[u32], precision: Precision)
+                          -> Result<Vec<f32>> {
+        let mut kv = self.new_kv();
+        let mut scratch = self.new_scratch();
+        let mut stats = DecodeStats::new(self.cfg.n_layers);
+        let mut out = Vec::with_capacity(tokens.len()
+            * self.cfg.vocab_size);
+        for &t in tokens {
+            self.decode_step(t, &mut kv, precision, &mut scratch,
+                             &mut stats)?;
+            out.extend_from_slice(&scratch.logits);
+        }
+        Ok(out)
+    }
+
+    /// FP-stream activations feeding layer `layer`'s attention linears
+    /// (rmsnorm'd block inputs) for each token — the probe used by the
+    /// outlier-migration analyses (Figs. 1, 5; App. E.1/E.2).
+    pub fn attn_inputs(&self, tokens: &[u32], layer: usize,
+                       precision: Precision) -> Result<Vec<Vec<f32>>> {
+        let mut kv = self.new_kv();
+        let mut scratch = self.new_scratch();
+        let mut stats = DecodeStats::new(self.cfg.n_layers);
+        let d = self.cfg.d_model;
+        let mut out = Vec::with_capacity(tokens.len());
+        for &t in tokens {
+            if kv.len() + 1 >= self.cfg.max_seq_len {
+                kv.reset(); // probe in ctx-length windows
+            }
+            self.decode_step_capture(t, &mut kv, precision, &mut scratch,
+                                     &mut stats, layer)?;
+            out.push(scratch.xn[..d].to_vec());
+        }
+        Ok(out)
+    }
+
+    /// decode_step variant that leaves layer `capture_layer`'s attn-norm
+    /// input in scratch.xn at return.  Used by [`Model::attn_inputs`].
+    fn decode_step_capture(&self, token: u32, kv: &mut SequenceKv,
+                           precision: Precision,
+                           scratch: &mut DecodeScratch,
+                           stats: &mut DecodeStats,
+                           capture_layer: usize) -> Result<()> {
+        // plain decode, then recompute the captured norm input
+        let c = &self.cfg;
+        let d = c.d_model;
+        let pos = kv.len();
+        // replicate the residual stream up to capture_layer
+        scratch.x.copy_from_slice(
+            &self.embed[token as usize * d..(token as usize + 1) * d]);
+        let mut captured = vec![0f32; d];
+        for (li, lw) in self.layers.iter().enumerate() {
+            rmsnorm(&scratch.x, &lw.attn_norm, c.norm_eps,
+                    &mut scratch.xn[..d]);
+            if li == capture_layer {
+                captured.copy_from_slice(&scratch.xn[..d]);
+            }
+            let xn = scratch.xn[..d].to_vec();
+            let mut eng = &mut scratch.engine;
+            lw.wq.forward_token(&xn, precision, eng, &mut scratch.q);
+            lw.wk.forward_token(&xn, precision, eng, &mut scratch.k);
+            lw.wv.forward_token(&xn, precision, eng, &mut scratch.v);
+            eng = &mut scratch.engine;
+            rope(&mut scratch.q, pos, c.head_dim(), c.rope_theta);
+            rope(&mut scratch.k, pos, c.head_dim(), c.rope_theta);
+            kv.layers[li].push(&scratch.k, &scratch.v);
+            attention_step(&scratch.q, &kv.layers[li], c, pos,
+                           &mut scratch.scores, &mut scratch.ctx);
+            let ctx = scratch.ctx.clone();
+            lw.wo.forward_token(&ctx, precision, eng, &mut scratch.attn_out);
+            for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
+                *xi += ai;
+            }
+            rmsnorm(&scratch.x, &lw.mlp_norm, c.norm_eps,
+                    &mut scratch.xn[..d]);
+            let xn2 = scratch.xn[..d].to_vec();
+            lw.w_gate.forward_token(&xn2, precision, eng, &mut scratch.gate);
+            lw.w_up.forward_token(&xn2, precision, eng, &mut scratch.up);
+            for (f, (g, u)) in scratch.ff.iter_mut()
+                .zip(scratch.gate.iter().zip(&scratch.up)) {
+                *f = silu(*g) * u;
+            }
+            let ffin = scratch.ff.clone();
+            lw.w_down.forward_token(&ffin, precision, eng,
+                                    &mut scratch.mlp_out);
+            for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp_out) {
+                *xi += mi;
+            }
+        }
+        stats.tokens += 1;
+        scratch.xn[..d].copy_from_slice(&captured);
+        Ok(())
+    }
+
+    /// Greedy-sample continuation of a prompt (used by examples/serving).
+    pub fn generate(&self, prompt: &[u32], n_new: usize,
+                    precision: Precision, stats: &mut DecodeStats)
+                    -> Result<Vec<u32>> {
+        let mut kv = self.new_kv();
+        let mut scratch = self.new_scratch();
+        let mut toks = prompt.to_vec();
+        for i in 0..prompt.len() + n_new - 1 {
+            let t = toks[i.min(toks.len() - 1)];
+            self.decode_step(t, &mut kv, precision, &mut scratch, stats)?;
+            if i + 1 >= prompt.len() {
+                let next = argmax(&scratch.logits) as u32;
+                toks.push(next);
+            }
+        }
+        Ok(toks)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// math helpers (mirror python/compile/model.py)
+// ---------------------------------------------------------------------------
+
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * r * wi;
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Interleaved-pair RoPE over heads laid out contiguously in `v`.
+pub fn rope(v: &mut [f32], pos: usize, head_dim: usize, theta: f32) {
+    let half = head_dim / 2;
+    let n_heads = v.len() / head_dim;
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let freq = 1.0 / theta.powf(i as f32 / half as f32);
+            let ang = pos as f32 * freq;
+            let (s, c) = ang.sin_cos();
+            let a = v[base + 2 * i];
+            let b = v[base + 2 * i + 1];
+            v[base + 2 * i] = a * c - b * s;
+            v[base + 2 * i + 1] = a * s + b * c;
+        }
+    }
+}
+
+/// One-position causal attention over the cache (GQA-aware).
+pub fn attention_step(q: &[f32], cache: &super::kvcache::KvCache,
+                      cfg: &ModelConfig, pos: usize, scores: &mut [f32],
+                      ctx: &mut [f32]) {
+    let hd = cfg.head_dim();
+    let rep = cfg.n_heads / cfg.n_kv_heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    ctx.fill(0.0);
+    for h in 0..cfg.n_heads {
+        let kvh = h / rep;
+        let qh = &q[h * hd..(h + 1) * hd];
+        // scores
+        let mut maxs = f32::NEG_INFINITY;
+        for p in 0..=pos {
+            let krow = cache.k_at(p);
+            let kh = &krow[kvh * hd..(kvh + 1) * hd];
+            let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
+            scores[p] = dot * scale;
+            maxs = maxs.max(scores[p]);
+        }
+        // softmax
+        let mut denom = 0f32;
+        for s in scores[..=pos].iter_mut() {
+            *s = (*s - maxs).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        // weighted sum of V
+        let out = &mut ctx[h * hd..(h + 1) * hd];
+        for p in 0..=pos {
+            let w = scores[p] * inv;
+            if w < 1e-8 {
+                continue;
+            }
+            let vrow = cache.v_at(p);
+            let vh = &vrow[kvh * hd..(kvh + 1) * hd];
+            for (o, vv) in out.iter_mut().zip(vh) {
+                *o += w * vv;
+            }
+        }
+    }
+}
+
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit() {
+        let x = vec![3.0, 4.0];
+        let w = vec![1.0, 1.0];
+        let mut out = vec![0.0; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        // rms = sqrt(12.5); out = x / rms
+        let rms = 12.5f32.sqrt();
+        assert!((out[0] - 3.0 / rms).abs() < 1e-6);
+        assert!((out[1] - 4.0 / rms).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_identity() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        let orig = v.clone();
+        rope(&mut v, 0, 4, 10000.0);
+        assert_eq!(v, orig); // angle 0 at pos 0
+        rope(&mut v, 7, 4, 10000.0);
+        let n0: f32 = orig.iter().map(|x| x * x).sum();
+        let n1: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+        assert_ne!(v, orig);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-9);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn attention_uniform_values() {
+        // all K identical -> uniform weights -> ctx = mean of V
+        let cfg = ModelConfig {
+            name: "t".into(), vocab_size: 4, d_model: 4, n_layers: 1,
+            n_heads: 1, n_kv_heads: 1, d_ff: 4, max_seq_len: 8,
+            rope_theta: 1e4, norm_eps: 1e-5, n_slices: 4, slice_bits: 2,
+            group_size: 4, router_hidden: 4,
+        };
+        let mut cache = super::super::kvcache::KvCache::new(8, 4);
+        cache.push(&[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0, 0.0, 0.0]);
+        cache.push(&[1.0, 0.0, 0.0, 0.0], &[3.0, 0.0, 0.0, 0.0]);
+        let q = vec![1.0, 0.0, 0.0, 0.0];
+        let mut scores = vec![0f32; 8];
+        let mut ctx = vec![0f32; 4];
+        attention_step(&q, &cache, &cfg, 1, &mut scores, &mut ctx);
+        assert!((ctx[0] - 2.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,193 @@
+//! Model configuration + weight loading from a `.mobiq` bundle.
+
+use anyhow::{anyhow, Result};
+
+use crate::mobiq::artifact::Bundle;
+use crate::mobiq::engine::{MobiqLinear, Precision, Scratch};
+use crate::mobiq::gemv::matvec;
+use crate::mobiq::static_quant::StaticLinear;
+
+pub const LINEAR_NAMES: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq_len: usize,
+    pub rope_theta: f32,
+    pub norm_eps: f32,
+    // quant config
+    pub n_slices: usize,
+    pub slice_bits: usize,
+    pub group_size: usize,
+    pub router_hidden: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_bundle(b: &Bundle) -> Result<ModelConfig> {
+        let m = |k: &str| b.cfg_usize("model", k);
+        let q = |k: &str| b.cfg_usize("quant", k);
+        Ok(ModelConfig {
+            name: b.manifest.path(&["model", "name"])
+                .and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+            vocab_size: m("vocab_size")?,
+            d_model: m("d_model")?,
+            n_layers: m("n_layers")?,
+            n_heads: m("n_heads")?,
+            n_kv_heads: m("n_kv_heads")?,
+            d_ff: m("d_ff")?,
+            max_seq_len: m("max_seq_len")?,
+            rope_theta: b.cfg_f64("model", "rope_theta")? as f32,
+            norm_eps: b.cfg_f64("model", "norm_eps")? as f32,
+            n_slices: q("n_slices")?,
+            slice_bits: q("slice_bits")?,
+            group_size: q("group_size")?,
+            router_hidden: q("router_hidden")?,
+        })
+    }
+
+    pub fn linear_dims(&self, name: &str) -> (usize, usize) {
+        let d = self.d_model;
+        let dkv = self.n_kv_heads * self.head_dim();
+        match name {
+            "wq" | "wo" => (d, d),
+            "wk" | "wv" => (d, dkv),
+            "w_gate" | "w_up" => (d, self.d_ff),
+            "w_down" => (self.d_ff, d),
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+/// A linear layer's runtime backend.
+pub enum LinearBackend {
+    /// Dense f32 (the FP16-comparator path; also used for lm_head).
+    Dense { w: Vec<f32>, d_in: usize, d_out: usize },
+    /// Token-adaptive MoBiSlice (the paper's method).
+    Mobiq(MobiqLinear),
+    /// Static-PTQ baseline record.
+    Static(StaticLinear),
+}
+
+impl LinearBackend {
+    /// Forward one token; returns effective weight bits used.
+    pub fn forward_token(&self, x: &[f32], precision: Precision,
+                         scratch: &mut Scratch, out: &mut [f32]) -> usize {
+        match self {
+            LinearBackend::Dense { w, d_in, d_out } => {
+                matvec(w, x, out, *d_in, *d_out);
+                16 // fp16-equivalent comparator
+            }
+            LinearBackend::Mobiq(m) => {
+                m.forward_token(x, precision, scratch, out)
+            }
+            LinearBackend::Static(s) => {
+                s.forward(x, &mut scratch.xq[..s.d_in], out);
+                s.bits as usize
+            }
+        }
+    }
+
+    /// Router-only step (for latency breakdown measurements).
+    pub fn route_only(&self, x: &[f32], precision: Precision,
+                      scratch: &mut Scratch) -> usize {
+        match self {
+            LinearBackend::Mobiq(m) => m.route(x, precision, scratch),
+            LinearBackend::Dense { .. } => 16,
+            LinearBackend::Static(s) => s.bits as usize,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            LinearBackend::Dense { d_in, d_out, .. } => (*d_in, *d_out),
+            LinearBackend::Mobiq(m) => (m.d_in, m.d_out),
+            LinearBackend::Static(s) => (s.d_in, s.d_out),
+        }
+    }
+}
+
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: LinearBackend,
+    pub wk: LinearBackend,
+    pub wv: LinearBackend,
+    pub wo: LinearBackend,
+    pub w_gate: LinearBackend,
+    pub w_up: LinearBackend,
+    pub w_down: LinearBackend,
+}
+
+impl LayerWeights {
+    pub fn linear(&self, name: &str) -> &LinearBackend {
+        match name {
+            "wq" => &self.wq,
+            "wk" => &self.wk,
+            "wv" => &self.wv,
+            "wo" => &self.wo,
+            "w_gate" => &self.w_gate,
+            "w_up" => &self.w_up,
+            "w_down" => &self.w_down,
+            _ => panic!("unknown linear {name}"),
+        }
+    }
+}
+
+/// Which backend to build for the quantizable linears.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackendKind {
+    Fp32,
+    Mobiq,
+    /// Static method key present in the bundle, e.g. "gptq3".
+    Static(String),
+    /// Fixed-k dense reconstruction from MoBiSlice (offline-repack
+    /// comparator): dense f32 of sum of first k slices.
+    MobiqDenseK(usize),
+}
+
+pub fn load_fp_dense(b: &Bundle, name: &str) -> Result<LinearBackend> {
+    let (shape, data) = b.f32(name)?;
+    if shape.len() != 2 {
+        return Err(anyhow!("{name}: expected 2-d"));
+    }
+    Ok(LinearBackend::Dense {
+        w: data.to_vec(),
+        d_in: shape[0],
+        d_out: shape[1],
+    })
+}
+
+pub fn load_linear(b: &Bundle, cfg: &ModelConfig, layer: usize, name: &str,
+                   kind: &BackendKind) -> Result<LinearBackend> {
+    match kind {
+        BackendKind::Fp32 => {
+            load_fp_dense(b, &format!("fp.layers.{layer}.{name}"))
+        }
+        BackendKind::Mobiq => Ok(LinearBackend::Mobiq(
+            MobiqLinear::from_bundle(b, layer, name, cfg.n_slices,
+                                     cfg.slice_bits, cfg.group_size)?)),
+        BackendKind::Static(method) => Ok(LinearBackend::Static(
+            StaticLinear::from_bundle(b, method, layer, name)?)),
+        BackendKind::MobiqDenseK(k) => {
+            let m = MobiqLinear::from_bundle(b, layer, name, cfg.n_slices,
+                                             cfg.slice_bits,
+                                             cfg.group_size)?;
+            let codes: Vec<Vec<u8>> =
+                m.slices.iter().map(|s| s.unpack()).collect();
+            let w = crate::mobiq::quantizer::reconstruct(
+                &codes, &m.base, (*k).min(cfg.n_slices));
+            Ok(LinearBackend::Dense { w, d_in: m.d_in, d_out: m.d_out })
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Bench harness (criterion is not vendored; `cargo bench` uses
+//! `harness = false` targets built on this module).
+//!
+//! Pattern per paper table/figure:
+//!
+//! ```ignore
+//! let mut suite = Suite::new("tab1_endtoend");
+//! suite.bench("mobiq_2bit", || decode_row());   // timed
+//! suite.row("PPL", &[("2bit", 10.9), ...]);     // computed metric rows
+//! suite.finish();                               // prints + writes JSON
+//! ```
+//!
+//! Timing uses warmup + fixed-duration sampling with median / MAD
+//! reporting, which is robust on a noisy shared 1-core box.
+
+use std::time::{Duration, Instant};
+
+use super::json::{arr, num, obj, s, to_string, Value};
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+pub struct Suite {
+    pub name: String,
+    pub warmup: Duration,
+    pub measure: Duration,
+    results: Vec<BenchResult>,
+    rows: Vec<(String, Vec<(String, f64)>)>,
+    notes: Vec<String>,
+    started: Instant,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Self {
+        let fast = std::env::var("MOBIQ_BENCH_FAST").is_ok();
+        Suite {
+            name: name.to_string(),
+            warmup: if fast { Duration::from_millis(50) }
+                    else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) }
+                     else { Duration::from_millis(1200) },
+            results: Vec::new(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Time a closure; returns median ns/iter.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        // warmup + calibrate iters per sample
+        let w0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while w0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        // target ~2ms per sample
+        let iters = ((2e6 / per_iter).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure || samples.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+            if samples.len() > 5000 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: stats::median(&samples),
+            mean_ns: stats::mean(&samples),
+            p10_ns: stats::percentile(&samples, 10.0),
+            p90_ns: stats::percentile(&samples, 90.0),
+            samples: samples.len(),
+            iters_per_sample: iters,
+        };
+        let med = res.median_ns;
+        println!(
+            "  {:40} {:>12.1} ns/iter  (p10 {:.1}, p90 {:.1}, n={} x{})",
+            name, med, res.p10_ns, res.p90_ns, res.samples, iters
+        );
+        self.results.push(res);
+        med
+    }
+
+    /// Record a computed (non-timed) metric row, e.g. PPL per bit-width.
+    pub fn row(&mut self, label: &str, cells: &[(&str, f64)]) {
+        println!("  {:28} {}", label,
+                 cells.iter().map(|(k, v)| format!("{}={:.4}", k, v))
+                      .collect::<Vec<_>>().join("  "));
+        self.rows.push((
+            label.to_string(),
+            cells.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    pub fn note(&mut self, text: &str) {
+        println!("  # {}", text);
+        self.notes.push(text.to_string());
+    }
+
+    pub fn header(&self) {
+        println!("\n== {} ==", self.name);
+    }
+
+    /// Print summary and write `target/bench_reports/<name>.json`.
+    pub fn finish(&self) {
+        let results: Vec<Value> = self.results.iter().map(|r| {
+            obj(vec![
+                ("name", s(&r.name)),
+                ("median_ns", num(r.median_ns)),
+                ("mean_ns", num(r.mean_ns)),
+                ("p10_ns", num(r.p10_ns)),
+                ("p90_ns", num(r.p90_ns)),
+                ("samples", num(r.samples as f64)),
+            ])
+        }).collect();
+        let rows: Vec<Value> = self.rows.iter().map(|(label, cells)| {
+            obj(vec![
+                ("label", s(label)),
+                ("cells", arr(cells.iter().map(|(k, v)| {
+                    obj(vec![("k", s(k)), ("v", num(*v))])
+                }).collect())),
+            ])
+        }).collect();
+        let report = obj(vec![
+            ("suite", s(&self.name)),
+            ("elapsed_s", num(self.started.elapsed().as_secs_f64())),
+            ("timings", arr(results)),
+            ("rows", arr(rows)),
+            ("notes", arr(self.notes.iter().map(|n| s(n)).collect())),
+        ]);
+        let dir = std::path::Path::new("target/bench_reports");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.name));
+        if let Err(e) = std::fs::write(&path, to_string(&report)) {
+            eprintln!("warn: could not write {}: {}", path.display(), e);
+        }
+        println!("== {} done in {:.1}s ==\n", self.name,
+                 self.started.elapsed().as_secs_f64());
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("MOBIQ_BENCH_FAST", "1");
+        let mut suite = Suite::new("selftest");
+        let ns = suite.bench("noop_loop", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(ns > 0.0 && ns < 1e7);
+    }
+
+    #[test]
+    fn rows_recorded() {
+        let mut suite = Suite::new("selftest_rows");
+        suite.row("ppl", &[("3bit", 6.07), ("4bit", 5.82)]);
+        assert_eq!(suite.rows.len(), 1);
+    }
+}

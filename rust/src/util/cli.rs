@@ -1,0 +1,93 @@
+//! Tiny CLI argument parser (clap is not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>,
+                 known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = mk(&["serve", "--port", "8080", "--mode=elastic",
+                     "--verbose", "extra"]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("elastic"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("port", 0), 8080);
+    }
+
+    #[test]
+    fn unknown_trailing_flag() {
+        let a = mk(&["--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch (no external crates beyond
+//! `xla`/`anyhow` are vendored in this environment).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,148 @@
+//! Fixed-size thread pool with scoped parallel-for (tokio/rayon are not
+//! vendored; the coordinator and the slice-parallel kernel path use this).
+//!
+//! The pool holds worker threads fed by an mpsc channel of boxed jobs.
+//! `scope_chunks` provides the rayon-like "split a slice into chunks and
+//! join" pattern used by the batched GEMV path (the CPU analogue of the
+//! paper's CUDA-stream slice overlap).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("mobiq-worker-{}", i))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to the machine (cores - 0, min 1).
+    pub fn default_for_machine() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool alive");
+    }
+
+    /// Run `f(chunk_index)` for each index in 0..n, blocking until all
+    /// complete.  `f` must be Sync; indices are distributed dynamically.
+    /// Uses std::thread::scope (joins on exit), so no extra
+    /// synchronisation is needed beyond the work counter.
+    pub fn parallel_for(&self, n: usize, f: impl Fn(usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        if self.size == 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let counter = AtomicUsize::new(0);
+        thread::scope(|scope| {
+            for _ in 0..self.size.min(n) {
+                let counter = &counter;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(i);
+                });
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..64 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..64 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0))
+            .collect();
+        pool.parallel_for(100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_empty() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn drop_joins() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| {});
+        drop(pool); // must not hang
+    }
+}

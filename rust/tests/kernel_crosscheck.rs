@@ -1,0 +1,113 @@
+//! L1 <-> L3 cross-check: the AOT-lowered Pallas kernel module
+//! (tiny-s_kernel.hlo.txt) executed through PJRT must agree with the Rust
+//! engine's own dequant-GEMV math on identical inputs.
+//!
+//! This closes the loop across all three layers: the Pallas kernel (L1)
+//! was pinned to the pure-jnp ref by pytest; here the same semantics are
+//! pinned to the Rust kernels (L3) through the PJRT runtime.
+
+use mobiquant::mobiq::quantizer::GroupParams;
+use mobiquant::runtime::{literal_f32, literal_i32, PjrtRuntime};
+use mobiquant::util::prng::Pcg;
+
+/// Unpack the Pallas kernel's int32 plane layout (E, B, K/32, N):
+/// bit j of word w of plane p == bit p of codes[(w*32 + j), o].
+fn unpack_i32_planes(planes: &[i32], e: usize, slice_bits: usize,
+                     n_words: usize, n: usize) -> Vec<Vec<u8>> {
+    let k = n_words * 32;
+    let mut out = vec![vec![0u8; k * n]; e];
+    for (idx, &word) in planes.iter().enumerate() {
+        let w = word as u32;
+        let o = idx % n;
+        let wi = (idx / n) % n_words;
+        let p = (idx / (n * n_words)) % slice_bits;
+        let ei = idx / (n * n_words * slice_bits);
+        for j in 0..32 {
+            if (w >> j) & 1 == 1 {
+                out[ei][(wi * 32 + j) * n + o] |= 1 << p;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn pallas_kernel_matches_rust_engine() {
+    let dir = mobiquant::artifacts_dir();
+    let path = mobiquant::runtime::hlo_path(&dir, "tiny-s", "kernel");
+    if !path.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)",
+                  path.display());
+        return;
+    }
+    // kernel module shapes (see aot.py::lower_model_hlos): tiny-s d=96
+    let (t, k, n) = (16usize, 96usize, 96usize);
+    let (e, sb, gs) = (4usize, 2usize, 32usize);
+    let n_words = k / 32;
+
+    let mut rng = Pcg::new(99);
+    let x: Vec<f32> = rng.normal_vec(t * k, 1.0);
+    let planes: Vec<i32> = (0..e * sb * n_words * n)
+        .map(|_| rng.next_u32() as i32)
+        .collect();
+    let scale: Vec<f32> = (0..(k / gs) * n)
+        .map(|_| rng.range_f32(0.01, 0.2))
+        .collect();
+    let zero: Vec<f32> = (0..(k / gs) * n)
+        .map(|_| rng.range_f32(0.0, 4.0))
+        .collect();
+    let mut mask = vec![0f32; t * e];
+    for ti in 0..t {
+        mask[ti * e] = 1.0;
+        for ei in 1..e {
+            mask[ti * e + ei] = rng.bool(0.5) as u32 as f32;
+        }
+    }
+
+    // --- PJRT execution of the Pallas kernel ---
+    let rt = PjrtRuntime::cpu().expect("pjrt client");
+    let module = rt.load(&path).expect("kernel module");
+    let y_pjrt = module.run_f32(&[
+        literal_f32(&x, &[t, k]).unwrap(),
+        literal_i32(&planes, &[e, sb, n_words, n]).unwrap(),
+        literal_f32(&scale, &[k / gs, n]).unwrap(),
+        literal_f32(&zero, &[k / gs, n]).unwrap(),
+        literal_f32(&mask, &[t, e]).unwrap(),
+    ]).expect("kernel run");
+    assert_eq!(y_pjrt.len(), t * n);
+
+    // --- Rust reference: dequant + dense matvec per token ---
+    let base = GroupParams {
+        scale: scale.clone(),
+        zero: zero.clone(),
+        n_groups: k / gs,
+        d_out: n,
+        bits: sb as u32,
+        group_size: gs,
+    };
+    let codes = unpack_i32_planes(&planes, e, sb, n_words, n);
+    let mut y_ref = vec![0f32; t * n];
+    for ti in 0..t {
+        let xt = &x[ti * k..(ti + 1) * k];
+        let mut acc = vec![0f32; n];
+        for ei in 0..e {
+            if mask[ti * e + ei] == 0.0 {
+                continue;
+            }
+            let deq = mobiquant::mobiq::quantizer::dequantize(
+                &codes[ei], &base.residual(ei));
+            let mut y = vec![0f32; n];
+            mobiquant::mobiq::gemv::matvec(&deq, xt, &mut y, k, n);
+            for (a, b) in acc.iter_mut().zip(&y) {
+                *a += b;
+            }
+        }
+        y_ref[ti * n..(ti + 1) * n].copy_from_slice(&acc);
+    }
+
+    let max_diff = y_pjrt.iter().zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3,
+            "Pallas kernel (PJRT) vs Rust engine: max diff {max_diff}");
+}
