@@ -1,0 +1,82 @@
+//! §Perf — batched weight-stationary prefill study (EXPERIMENTS.md
+//! §Perf).
+//!
+//! Compares three hot paths at production-like dims, T tokens per block:
+//!   * per-token `gemv_lut` (the decode kernel run T times — streams
+//!     every active plane word T times),
+//!   * `gemm_lut_batch` (weight-stationary: T LUT blocks built up
+//!     front, each plane word streamed once per mask group),
+//!   * the same batched kernel with the `ThreadPool` d_out-parallel
+//!     wrapper (`--threads` path).
+//!
+//! Reports tokens/s, batched/parallel speedups and effective
+//! plane-bandwidth; writes `target/bench_reports/BENCH_prefill.json`.
+
+use std::sync::Arc;
+
+use mobiquant::bench_support::synth_mobiq_linear;
+use mobiquant::mobiq::engine::{Precision, Scratch};
+use mobiquant::util::bench::{black_box, Suite};
+use mobiquant::util::prng::Pcg;
+use mobiquant::util::threadpool::{default_threads, ThreadPool};
+
+fn main() {
+    let mut suite = Suite::new("BENCH_prefill");
+    suite.header();
+    let mut rng = Pcg::new(7);
+    let pool = Arc::new(ThreadPool::new(default_threads()));
+    suite.note(&format!("parallel rows use {} worker threads",
+                        pool.size()));
+    // Fixed(2): uniform 4-bit masks -> one mask group, the common
+    // prefill shape; routing cost excluded from the comparison.
+    let prec = Precision::Fixed(2);
+
+    for (d_in, d_out) in [(1024usize, 1024usize), (4096, 4096)] {
+        let lin = synth_mobiq_linear(&mut rng, d_in, d_out);
+        let plane_bytes =
+            lin.bytes_for_mask(&[true, true, false, false]) as f64;
+        for t in [1usize, 8, 32, 128] {
+            let xs = rng.normal_vec(d_in * t, 1.0);
+            let mut out = vec![0f32; d_out * t];
+            let tag = format!("{d_in}x{d_out} T={t}");
+
+            let mut sc = Scratch::new(d_in, 32, 8, 4);
+            let ns_tok = suite.bench(&format!("{tag} per-token"), || {
+                for i in 0..t {
+                    lin.forward_token(&xs[i * d_in..(i + 1) * d_in], prec,
+                                      &mut sc,
+                                      &mut out[i * d_out..(i + 1) * d_out]);
+                }
+                black_box(out[0]);
+            });
+            let ns_batch = suite.bench(&format!("{tag} batched"), || {
+                lin.forward_batch(&xs, prec, &mut sc, &mut out);
+                black_box(out[0]);
+            });
+            let mut scp = Scratch::new(d_in, 32, 8, 4)
+                .with_pool(Arc::clone(&pool));
+            let ns_par = suite.bench(
+                &format!("{tag} batched+parallel"), || {
+                    lin.forward_batch(&xs, prec, &mut scp, &mut out);
+                    black_box(out[0]);
+                });
+
+            let toks = t as f64;
+            suite.row(&format!("{tag} summary"), &[
+                ("tok_s_pertoken", toks / (ns_tok * 1e-9)),
+                ("tok_s_batched", toks / (ns_batch * 1e-9)),
+                ("tok_s_parallel", toks / (ns_par * 1e-9)),
+                ("batched_speedup", ns_tok / ns_batch),
+                ("parallel_speedup", ns_tok / ns_par),
+                // active plane bytes resolved per wall second; the
+                // batched kernel streams them once per mask group, so
+                // effective bandwidth scales ~T-fold over per-token
+                ("plane_GBps_eff", plane_bytes * toks / ns_batch),
+            ]);
+        }
+    }
+    suite.note("targets: batched >= 3x per-token tokens/s at T=32 \
+                d=4096; parallel adds further on >= 4 cores \
+                (EXPERIMENTS.md §Perf)");
+    suite.finish();
+}

@@ -6,10 +6,15 @@
 use anyhow::Result;
 
 use crate::mobiq::artifact::Bundle;
-use crate::mobiq::quantizer::GroupParams;
+use crate::mobiq::bitplane::PackedSlice;
+use crate::mobiq::engine::MobiqLinear;
+use crate::mobiq::quantizer::{decompose, GroupParams};
+use crate::mobiq::router::{RouterMlp, ThresholdTable};
 use crate::mobiq::static_quant::StaticLinear;
-use crate::model::weights::{BackendKind, LinearBackend, LINEAR_NAMES};
+use crate::model::weights::{BackendKind, LayerWeights, LinearBackend,
+                            ModelConfig, LINEAR_NAMES};
 use crate::model::Model;
+use crate::util::prng::Pcg;
 
 /// Load a model bundle, or None (with a note) when artifacts are missing.
 pub fn try_bundle(name: &str) -> Option<Bundle> {
@@ -36,6 +41,98 @@ pub fn models_available() -> Vec<String> {
         }
     }
     out
+}
+
+/// Synthetic MobiqLinear over random weights (group_size 32, 4 slices
+/// of 2 bits, linear-grid thresholds) — lets benches and integration
+/// tests exercise the full router + kernel path without the artifact
+/// bundle.  Deterministic in the rng state.
+pub fn synth_mobiq_linear(rng: &mut Pcg, d_in: usize,
+                          d_out: usize) -> MobiqLinear {
+    let gs = 32;
+    let hidden = 8;
+    let w = rng.normal_vec(d_in * d_out, 0.2);
+    let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+    let codes = decompose(&w, &base, 4);
+    let slices = codes.iter()
+        .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+        .collect();
+    MobiqLinear {
+        slices,
+        base,
+        router: RouterMlp {
+            w1: rng.normal_vec(d_in * hidden, 0.2),
+            b1: vec![0.0; hidden],
+            w2: rng.normal_vec(hidden * 3, 0.2),
+            b2: vec![0.0; 3],
+            d_in,
+            hidden,
+            n_residual: 3,
+        },
+        thresholds: ThresholdTable {
+            quantiles: (0..129).map(|i| (i as f32 - 64.0) / 64.0)
+                .collect(),
+        },
+        d_in,
+        d_out,
+        slice_bits: 2,
+        act_bits: None,
+    }
+}
+
+/// Small synthetic end-to-end model (Mobiq linears + dense lm_head)
+/// for tests that must run without `make artifacts`.  Two calls with
+/// the same seed build bit-identical models.
+pub fn synth_model(seed: u64) -> Model {
+    let cfg = ModelConfig {
+        name: "synth".into(),
+        vocab_size: 256,
+        d_model: 64,
+        n_layers: 2,
+        n_heads: 4,
+        n_kv_heads: 2,
+        d_ff: 128,
+        max_seq_len: 128,
+        rope_theta: 1e4,
+        norm_eps: 1e-5,
+        n_slices: 4,
+        slice_bits: 2,
+        group_size: 32,
+        router_hidden: 8,
+    };
+    let mut rng = Pcg::new(seed);
+    let embed = rng.normal_vec(cfg.vocab_size * cfg.d_model, 0.5);
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for _ in 0..cfg.n_layers {
+        let mut lin = |name: &str| {
+            let (di, dn) = cfg.linear_dims(name);
+            LinearBackend::Mobiq(synth_mobiq_linear(&mut rng, di, dn))
+        };
+        layers.push(LayerWeights {
+            attn_norm: vec![1.0; cfg.d_model],
+            mlp_norm: vec![1.0; cfg.d_model],
+            wq: lin("wq"),
+            wk: lin("wk"),
+            wv: lin("wv"),
+            wo: lin("wo"),
+            w_gate: lin("w_gate"),
+            w_up: lin("w_up"),
+            w_down: lin("w_down"),
+        });
+    }
+    let lm_head = LinearBackend::Dense {
+        w: rng.normal_vec(cfg.d_model * cfg.vocab_size, 0.2),
+        d_in: cfg.d_model,
+        d_out: cfg.vocab_size,
+    };
+    Model {
+        embed,
+        final_norm: vec![1.0; cfg.d_model],
+        lm_head,
+        layers,
+        cfg,
+        pool: None,
+    }
 }
 
 /// Valid-set tokens for a domain.

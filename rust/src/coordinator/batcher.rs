@@ -4,6 +4,11 @@
 //! (bounded by `max_active` and the KV budget).  The invariants checked
 //! by the property tests: no request is lost or duplicated, admission
 //! order is FIFO, and the active count never exceeds the cap.
+//!
+//! The batcher also owns the tick batching policy the scheduler
+//! executes: how many prompt tokens a sequence prefills per tick, and
+//! how many sequences a coalesced decode step may fuse into one batched
+//! kernel call.
 
 use std::collections::VecDeque;
 
@@ -13,6 +18,12 @@ pub struct Batcher {
     queue: VecDeque<Request>,
     pub max_active: usize,
     pub max_queue: usize,
+    /// Prompt tokens fed per tick per sequence during chunked prefill —
+    /// each chunk is one whole-block batched kernel call.
+    pub prefill_chunk: usize,
+    /// Cap on sequences coalesced into one batched decode call; bounds
+    /// the kernel's per-token LUT scratch (one TokenLut block each).
+    pub max_decode_batch: usize,
     admitted: u64,
     rejected: u64,
 }
@@ -28,9 +39,19 @@ impl Batcher {
             queue: VecDeque::new(),
             max_active,
             max_queue,
+            prefill_chunk: 16,
+            max_decode_batch: 32,
             admitted: 0,
             rejected: 0,
         }
+    }
+
+    /// Override the tick batching policy (values are clamped to >= 1).
+    pub fn with_chunking(mut self, prefill_chunk: usize,
+                         max_decode_batch: usize) -> Batcher {
+        self.prefill_chunk = prefill_chunk.max(1);
+        self.max_decode_batch = max_decode_batch.max(1);
+        self
     }
 
     pub fn submit(&mut self, req: Request) -> Admission {

@@ -3,9 +3,12 @@
 //! Each tick the scheduler (1) admits queued requests into free sequence
 //! slots, (2) asks the elastic controller for the tick's precision given
 //! external + queue pressure, (3) advances every active sequence by one
-//! token (chunked prefill first, then decode), and (4) retires finished
-//! sequences.  On this 1-core testbed sequences are advanced round-robin;
-//! the structure mirrors a vLLM-style continuous batcher.
+//! token — prefilling sequences consume a whole prompt chunk through one
+//! batched kernel call, and all decoding sequences are **coalesced into
+//! one batched call per layer** (`Model::decode_batch`) so plane words
+//! stream once per mask group instead of once per sequence — and
+//! (4) retires finished sequences.  The structure mirrors a vLLM-style
+//! continuous batcher.
 
 use std::time::Instant;
 
@@ -17,11 +20,9 @@ use super::metrics::Metrics;
 use super::request::{Request, RequestMetrics, Response};
 use crate::mobiq::engine::Precision;
 use crate::model::kvcache::SequenceKv;
-use crate::model::transformer::{argmax, DecodeScratch, DecodeStats};
+use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
+                                DecodeStats};
 use crate::model::Model;
-
-/// Prompt tokens consumed per tick per sequence during prefill.
-const PREFILL_CHUNK: usize = 16;
 
 struct ActiveSeq {
     req: Request,
@@ -101,42 +102,78 @@ impl<'m> Scheduler<'m> {
         let precision = self.controller
             .update(external_pressure, self.batcher.pressure());
 
-        // 3. advance sequences
+        // 3. advance sequences: prefill chunks first (one batched call
+        // per chunk), then one coalesced decode step across every
+        // sequence that was already past prefill at tick start.
+        let model = self.model;
         let mut steps = 0usize;
-        let mut finished: Vec<usize> = Vec::new();
-        for (i, seq) in self.active.iter_mut().enumerate() {
+        let decode_ready: Vec<bool> = self.active.iter()
+            .map(|s| s.fed >= s.prompt_len)
+            .collect();
+        let prefill_chunk = self.batcher.prefill_chunk;
+
+        // 3a. chunked prefill — a whole prompt chunk per tick through
+        // the weight-stationary kernel instead of per-token decodes.
+        for (seq, &ready) in self.active.iter_mut().zip(&decode_ready) {
+            if ready {
+                continue;
+            }
             let t0 = Instant::now();
-            if seq.fed < seq.prompt_len {
-                // chunked prefill
-                let end = (seq.fed + PREFILL_CHUNK).min(seq.prompt_len);
-                for j in seq.fed..end {
-                    self.model.decode_step(seq.tokens[j], &mut seq.kv,
-                                           precision, &mut self.scratch,
-                                           &mut seq.stats)?;
-                    steps += 1;
-                }
-                seq.fed = end;
-                seq.prefill_ms += t0.elapsed().as_secs_f64() * 1000.0;
-                if seq.fed == seq.prompt_len {
-                    // emit first generated token right after prefill
-                    let next = argmax(&self.scratch.logits) as u32;
-                    seq.tokens.push(next);
-                    seq.generated = 1;
-                }
-            } else {
-                // decode: feed the most recent token (fed points at it)
-                self.model.decode_step(seq.tokens[seq.fed], &mut seq.kv,
-                                       precision, &mut self.scratch,
-                                       &mut seq.stats)?;
-                seq.fed += 1;
-                steps += 1;
+            let end = (seq.fed + prefill_chunk).min(seq.prompt_len);
+            model.prefill(&seq.tokens[seq.fed..end], &mut seq.kv,
+                          precision, &mut self.scratch, &mut seq.stats)?;
+            steps += end - seq.fed;
+            seq.fed = end;
+            seq.prefill_ms += t0.elapsed().as_secs_f64() * 1000.0;
+            if seq.fed == seq.prompt_len {
+                // emit first generated token right after prefill
                 let next = argmax(&self.scratch.logits) as u32;
                 seq.tokens.push(next);
+                seq.generated = 1;
+            }
+        }
+
+        // 3b. coalesced decode: fuse ready sequences (up to
+        // max_decode_batch per group) into one batched call per layer.
+        let vocab = model.cfg.vocab_size;
+        let cap = self.batcher.max_decode_batch;
+        let mut ready: Vec<&mut ActiveSeq> = self.active.iter_mut()
+            .zip(&decode_ready)
+            .filter_map(|(s, &r)| if r { Some(s) } else { None })
+            .collect();
+        for group in ready.chunks_mut(cap) {
+            let t0 = Instant::now();
+            {
+                let mut slots: Vec<DecodeSlot> = group.iter_mut()
+                    .map(|seq| DecodeSlot {
+                        token: seq.tokens[seq.fed],
+                        kv: &mut seq.kv,
+                        stats: &mut seq.stats,
+                    })
+                    .collect();
+                model.decode_batch(&mut slots, precision,
+                                   &mut self.scratch)?;
+            }
+            // per-token latency attribution: the batch advanced every
+            // member one token in one wall interval
+            let ms = t0.elapsed().as_secs_f64() * 1000.0
+                / group.len() as f64;
+            for (row, seq) in group.iter_mut().enumerate() {
+                let lo = row * vocab;
+                let next = argmax(
+                    &self.scratch.block.logits[lo..lo + vocab]) as u32;
+                seq.fed += 1;
+                seq.tokens.push(next);
                 seq.generated += 1;
-                let ms = t0.elapsed().as_secs_f64() * 1000.0;
                 seq.decode_ms += ms;
                 self.metrics.record_token(ms);
+                steps += 1;
             }
+        }
+        drop(ready);
+
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, seq) in self.active.iter().enumerate() {
             let kv_full = seq.kv.len() + 1 >= self.model.cfg.max_seq_len;
             if seq.generated >= seq.req.max_new_tokens || kv_full {
                 finished.push(i);

@@ -20,6 +20,11 @@ use crate::model::Model;
 pub struct ServerConfig {
     pub max_active: usize,
     pub max_queue: usize,
+    /// Prompt tokens prefetched per tick per sequence (one batched
+    /// kernel call per chunk).
+    pub prefill_chunk: usize,
+    /// Cap on sequences fused into one coalesced decode call.
+    pub max_decode_batch: usize,
     pub controller: ControllerConfig,
     /// External resource pressure in [0, 1] sampled each tick via the
     /// shared cell (set by the embedder, e.g. from a workload trace).
@@ -31,6 +36,8 @@ impl Default for ServerConfig {
         ServerConfig {
             max_active: 4,
             max_queue: 64,
+            prefill_chunk: 16,
+            max_decode_batch: 32,
             controller: ControllerConfig::default(),
             initial_pressure: 0.0,
         }
@@ -65,7 +72,8 @@ impl Server {
     }
 
     fn run(model: Model, cfg: ServerConfig, rx: mpsc::Receiver<Msg>) {
-        let batcher = Batcher::new(cfg.max_active, cfg.max_queue);
+        let batcher = Batcher::new(cfg.max_active, cfg.max_queue)
+            .with_chunking(cfg.prefill_chunk, cfg.max_decode_batch);
         let controller = ElasticController::new(cfg.controller.clone());
         let mut sched = Scheduler::new(&model, batcher, controller);
         let mut pressure = cfg.initial_pressure;

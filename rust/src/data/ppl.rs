@@ -27,13 +27,18 @@ pub fn evaluate(model: &Model, tokens: &[u32], precision: Precision,
     let mut scratch = model.new_scratch();
     let n = ((tokens.len().saturating_sub(1)) / window).min(max_windows);
     anyhow::ensure!(n > 0, "not enough tokens for one window");
+    let vocab = model.cfg.vocab_size;
+    let mut win_logits: Vec<f32> = Vec::with_capacity(window * vocab);
     for i in 0..n {
         let chunk = &tokens[i * window..i * window + window + 1];
         kv.reset();
-        for (j, &t) in chunk[..window].iter().enumerate() {
-            model.decode_step(t, &mut kv, precision, &mut scratch,
-                              &mut stats)?;
-            total_nll += nll_of(&scratch.logits, chunk[j + 1]);
+        win_logits.clear();
+        // one batched weight-stationary pass over the whole window
+        model.prefill_logits(&chunk[..window], &mut kv, precision,
+                             &mut scratch, &mut stats, &mut win_logits)?;
+        for j in 0..window {
+            total_nll += nll_of(&win_logits[j * vocab..(j + 1) * vocab],
+                                chunk[j + 1]);
             count += 1;
         }
     }

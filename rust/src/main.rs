@@ -7,6 +7,8 @@
 //!   serve     — drive the elastic server over a synthetic request trace
 //!   pjrt      — smoke the PJRT runtime against an AOT HLO module
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 use mobiquant::coordinator::{Server, ServerConfig};
 use mobiquant::data::{corpus, ppl, tokenizer, workload};
@@ -17,6 +19,7 @@ use mobiquant::model::transformer::DecodeStats;
 use mobiquant::model::weights::{BackendKind, ModelConfig, LINEAR_NAMES};
 use mobiquant::model::Model;
 use mobiquant::util::cli::Args;
+use mobiquant::util::threadpool::{default_threads, ThreadPool};
 
 fn main() {
     let args = Args::from_env(&["help", "verbose"]);
@@ -49,8 +52,22 @@ fn print_help() {
          \x20 eval      --backend mobiq|fp|<static> --bits B  perplexity\n\
          \x20 generate  --prompt TEXT --tokens N --bits B\n\
          \x20 serve     --requests N --rate R --pressure phased|calm|high\n\
-         \x20 pjrt      --variant fp|q2|q4|q6|q8   run AOT module\n"
+         \x20 pjrt      --variant fp|q2|q4|q6|q8   run AOT module\n\
+         \n\
+         OPTIONS\n\
+         \x20 --threads N   kernel worker threads for eval/generate/serve\n\
+         \x20               (default: cores - 1; 1 disables parallelism)\n"
     );
+}
+
+/// Attach the shared kernel worker pool per `--threads` (default:
+/// `cores - 1`, see `ThreadPool::default_for_machine`).  A value of 1
+/// keeps the serial kernels.
+fn attach_pool(model: &mut Model, args: &Args) {
+    let n = args.get_usize("threads", default_threads());
+    if n > 1 {
+        model.set_pool(Arc::new(ThreadPool::new(n)));
+    }
 }
 
 fn load_bundle(args: &Args) -> Result<(Bundle, String)> {
@@ -115,7 +132,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
         "mobiq" => BackendKind::Mobiq,
         other => BackendKind::Static(other.to_string()),
     };
-    let model = Model::load(&bundle, kind)?;
+    let mut model = Model::load(&bundle, kind)?;
+    attach_pool(&mut model, args);
     let dir = mobiquant::artifacts_dir();
     let domain = args.get_or("domain", "wiki");
     let tokens = corpus::load_tokens(&dir, domain, corpus::Split::Valid)?;
@@ -133,7 +151,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let (bundle, _) = load_bundle(args)?;
-    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    let mut model = Model::load(&bundle, BackendKind::Mobiq)?;
+    attach_pool(&mut model, args);
     let prompt_text = args.get_or(
         "prompt", "The ancient settlement was founded near ");
     let n = args.get_usize("tokens", 48);
@@ -151,7 +170,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let (bundle, model_name) = load_bundle(args)?;
-    let model = Model::load(&bundle, BackendKind::Mobiq)?;
+    let mut model = Model::load(&bundle, BackendKind::Mobiq)?;
+    attach_pool(&mut model, args);
     let dir = mobiquant::artifacts_dir();
     let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)?;
 

@@ -1,14 +1,18 @@
 //! MoBiQuant linear engine: bit-plane slices + router + thresholds glued
 //! into the object the transformer dispatches to on the request path.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::artifact::Bundle;
 use super::bitplane::PackedSlice;
-use super::gemv::{gemv_lut, TokenLut};
+use super::gemv::{gemm_lut_batch, gemm_lut_batch_parallel, gemv_lut,
+                  gemv_lut_parallel, BatchLut, TokenLut};
 use super::quantizer::GroupParams;
 use super::router::{hard_mask, mask_bits, ratio_for_target_bits,
                     RouterMlp, ThresholdTable};
+use crate::util::threadpool::ThreadPool;
 
 /// Runtime precision policy for a forward pass.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -41,10 +45,16 @@ pub struct MobiqLinear {
 /// Reusable per-thread scratch for the decode loop (allocation-free).
 pub struct Scratch {
     pub lut: TokenLut,
+    /// Per-token table blocks for the batched weight-stationary kernel
+    /// (grows lazily to the largest batch seen).
+    pub batch: BatchLut,
     pub router_hidden: Vec<f32>,
     pub scores: Vec<f32>,
     pub mask: Vec<bool>,
     pub xq: Vec<f32>,
+    /// Shared kernel worker pool, plumbed down from the model/runtime.
+    /// None or a size-1 pool selects the serial kernels.
+    pub pool: Option<Arc<ThreadPool>>,
 }
 
 impl Scratch {
@@ -52,11 +62,19 @@ impl Scratch {
                n_slices: usize) -> Scratch {
         Scratch {
             lut: TokenLut::new(max_d_in, group_size),
+            batch: BatchLut::new(max_d_in, group_size),
             router_hidden: vec![0f32; hidden],
             scores: vec![0f32; n_slices - 1],
             mask: vec![false; n_slices],
             xq: vec![0f32; max_d_in],
+            pool: None,
         }
+    }
+
+    /// Attach the shared worker pool the kernel paths should use.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Scratch {
+        self.pool = Some(pool);
+        self
     }
 }
 
@@ -146,39 +164,51 @@ impl MobiqLinear {
             x
         };
         scratch.lut.build(x_eff, self.base.group_size);
-        gemv_lut(&self.slices, &self.base, &scratch.lut, &scratch.mask,
-                 out);
+        match scratch.pool.clone() {
+            Some(pool) if pool.size() > 1 => {
+                gemv_lut_parallel(&self.slices, &self.base, &scratch.lut,
+                                  &scratch.mask, &pool, out)
+            }
+            _ => gemv_lut(&self.slices, &self.base, &scratch.lut,
+                          &scratch.mask, out),
+        }
         bits
     }
 
-    /// Batched forward with §4.3 token permutation: route every token,
-    /// group tokens with identical slice masks contiguously, and run the
-    /// GEMV group-by-group so each group's plane working set stays hot.
-    /// xs: (T * d_in) row-major; out: (T * d_out).  Returns total bits.
+    /// Batched forward through the weight-stationary kernel: route every
+    /// token, build all T LUT table blocks up front, then stream each
+    /// plane word once per same-mask token group (§4.3 token
+    /// permutation) — and in parallel over d_out chunks when a pool is
+    /// attached.  xs: (T * d_in) row-major; out: (T * d_out).  Per-token
+    /// effective bits land in `scratch.batch.bits`; returns their sum.
     pub fn forward_batch(&self, xs: &[f32], precision: Precision,
                          scratch: &mut Scratch, out: &mut [f32]) -> usize {
         let t = xs.len() / self.d_in;
         debug_assert_eq!(out.len(), t * self.d_out);
-        let mut masks: Vec<Vec<bool>> = Vec::with_capacity(t);
+        scratch.batch.ensure_tokens(t);
+        scratch.batch.bits.clear();
         let mut total_bits = 0usize;
         for i in 0..t {
             let x = &xs[i * self.d_in..(i + 1) * self.d_in];
-            total_bits += self.route(x, precision, scratch);
-            masks.push(scratch.mask.clone());
-        }
-        let perm = crate::mobiq::gemv::permute_by_mask(&masks);
-        for &i in &perm {
-            let x = &xs[i * self.d_in..(i + 1) * self.d_in];
+            let bits = self.route(x, precision, scratch);
+            total_bits += bits;
+            scratch.batch.bits.push(bits);
+            scratch.batch.set_mask(i, &scratch.mask);
             let x_eff: &[f32] = if let Some(ab) = self.act_bits {
                 quantize_activation(x, ab, &mut scratch.xq[..x.len()]);
                 &scratch.xq[..x.len()]
             } else {
                 x
             };
-            scratch.lut.build(x_eff, self.base.group_size);
-            crate::mobiq::gemv::gemv_lut(
-                &self.slices, &self.base, &scratch.lut, &masks[i],
-                &mut out[i * self.d_out..(i + 1) * self.d_out]);
+            scratch.batch.build_token(i, x_eff, self.base.group_size);
+        }
+        match scratch.pool.clone() {
+            Some(pool) if pool.size() > 1 => {
+                gemm_lut_batch_parallel(&self.slices, &self.base,
+                                        &scratch.batch, t, &pool, out)
+            }
+            _ => gemm_lut_batch(&self.slices, &self.base, &scratch.batch,
+                                t, out),
         }
         total_bits
     }

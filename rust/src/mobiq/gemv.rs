@@ -20,6 +20,15 @@
 
 use super::bitplane::PackedSlice;
 use super::quantizer::{dequantize, GroupParams};
+use crate::util::threadpool::ThreadPool;
+
+/// Raw output pointer wrapper so `parallel_for` workers (and the
+/// batched kernel's per-token writebacks) can write disjoint cells of
+/// one output buffer.  Soundness argument at each use site: every
+/// worker/group owns a disjoint (token, o) index set.
+struct SharedOut(*mut f32);
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
 
 /// Per-token scratch: byte-chunk LUTs + group sums.  Reused across calls
 /// to keep the decode loop allocation-free.
@@ -62,12 +71,18 @@ impl TokenLut {
     }
 
     /// Build tables for one token's activations (x.len() <= capacity).
+    /// Group sums are accumulated inside the chunk loop — the full-mask
+    /// entry of each chunk (t[255] / t[15]) is that chunk's total, so the
+    /// activation is read exactly once per build instead of a second
+    /// scalar-sum pass per group.
     pub fn build(&mut self, x: &[f32], group_size: usize) {
         let padded = (x.len() + 63) / 64 * 8;
         assert!(x.len() % 8 == 0 && padded * 256 <= self.table.len(),
                 "activation len {} exceeds LUT capacity", x.len());
         self.d_in = x.len();
         self.n_chunks = x.len() / 8;
+        let n_groups = x.len() / group_size;
+        self.group_sums[..n_groups].fill(0.0);
         // zero the padding chunks (may hold a previous, wider build)
         self.nibble = x.len() >= NIBBLE_THRESHOLD;
         if self.nibble {
@@ -79,6 +94,11 @@ impl TokenLut {
                 for b in 1usize..16 {
                     t[b] = t[b & (b - 1)]
                         + xs[b.trailing_zeros() as usize];
+                }
+                // t[15] = the 4-wide chunk total
+                let g = c * 4 / group_size;
+                if g < n_groups {
+                    self.group_sums[g] += t[15];
                 }
             }
         } else {
@@ -92,12 +112,12 @@ impl TokenLut {
                     t[b] = t[b & (b - 1)]
                         + xs[b.trailing_zeros() as usize];
                 }
+                // t[255] = the 8-wide chunk total
+                let g = c * 8 / group_size;
+                if g < n_groups {
+                    self.group_sums[g] += t[255];
+                }
             }
-        }
-        let n_groups = x.len() / group_size;
-        for g in 0..n_groups {
-            self.group_sums[g] =
-                x[g * group_size..(g + 1) * group_size].iter().sum();
         }
     }
 
@@ -133,15 +153,59 @@ fn slice_weight(e: usize, bits: u32) -> f32 {
 /// dependency chain), and all indexing is hoisted out of the byte loop.
 pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
                 active: &[bool], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), base.d_out);
+    gemv_lut_range(slices, base, lut, active, 0, base.d_out, out);
+}
+
+/// d_out below which the scoped-spawn cost of `parallel_for` eats the
+/// win; tuned alongside NIBBLE_THRESHOLD (EXPERIMENTS.md §Perf).
+const PARALLEL_MIN_DOUT: usize = 512;
+
+/// `gemv_lut` parallelised over contiguous d_out chunks.  Falls back to
+/// the serial kernel for size-1 pools or small layers where the fork
+/// overhead dominates.
+pub fn gemv_lut_parallel(slices: &[PackedSlice], base: &GroupParams,
+                         lut: &TokenLut, active: &[bool],
+                         pool: &ThreadPool, out: &mut [f32]) {
+    let d_out = base.d_out;
+    debug_assert_eq!(out.len(), d_out);
+    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT {
+        return gemv_lut(slices, base, lut, active, out);
+    }
+    let n_chunks = pool.size();
+    let chunk = (d_out + n_chunks - 1) / n_chunks;
+    let optr = SharedOut(out.as_mut_ptr());
+    pool.parallel_for(n_chunks, |ci| {
+        let o0 = ci * chunk;
+        let o1 = ((ci + 1) * chunk).min(d_out);
+        if o0 >= o1 {
+            return;
+        }
+        // SAFETY: chunks cover disjoint o-ranges of `out`, so each
+        // worker materialises &mut only over its own cells.
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(o0), o1 - o0)
+        };
+        gemv_lut_range(slices, base, lut, active, o0, o1, rows);
+    });
+}
+
+/// Output-channel range core of [`gemv_lut`]: computes channels
+/// `o0..o1` into `out` (len o1-o0).  The parallel wrappers partition
+/// d_out across workers with this.
+fn gemv_lut_range(slices: &[PackedSlice], base: &GroupParams,
+                  lut: &TokenLut, active: &[bool], o0: usize, o1: usize,
+                  out: &mut [f32]) {
     let d_out = base.d_out;
     let gs = base.group_size;
     let n_groups = base.n_groups;
     debug_assert!(active[0], "slice 0 is the shared expert");
-    debug_assert_eq!(out.len(), d_out);
+    debug_assert_eq!(out.len(), o1 - o0);
     debug_assert!(gs % 8 == 0);
     let bytes_per_group = gs / 8;
     let n_words = slices[0].n_words;
-    debug_assert!(n_groups <= 512, "group scratch cap");
+    debug_assert!(n_groups <= 512 && n_words * 2 <= 512,
+                  "group scratch cap");
     // per-group accumulators of sum_e 4^-e (p0 + 2 p1) masked sums
     let mut ga = [0f32; 512];
 
@@ -155,8 +219,10 @@ pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
     }
 
     let table = &lut.table[..];
-    for o in 0..d_out {
-        ga[..n_groups].fill(0.0);
+    for o in o0..o1 {
+        // padding words spill into ga[n_groups..2*n_words] with zero
+        // contributions; clear them too so they cannot overflow
+        ga[..n_groups.max(2 * n_words)].fill(0.0);
         for (e, &is_active) in active.iter().enumerate() {
             if !is_active {
                 continue;
@@ -288,7 +354,7 @@ pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
             let c = (z1 - 0.5 + resid_c) * lut.group_sums[g];
             acc += s1 * (ga[g] - c);
         }
-        out[o] = acc;
+        out[o - o0] = acc;
     }
 }
 
@@ -444,6 +510,289 @@ pub fn permute_by_mask(masks: &[Vec<bool>]) -> Vec<usize> {
     };
     idx.sort_by_key(|&i| key(&masks[i]));
     idx
+}
+
+/// Runs of identical masks after the §4.3 permutation: each returned
+/// group lists original token indices sharing one routed slice mask.
+pub fn mask_groups(masks: &[Vec<bool>]) -> Vec<Vec<usize>> {
+    let perm = permute_by_mask(masks);
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for &i in &perm {
+        match groups.last_mut() {
+            Some(grp) if masks[grp[0]] == masks[i] => grp.push(i),
+            _ => groups.push(vec![i]),
+        }
+    }
+    groups
+}
+
+/// Batched weight-stationary scratch: one [`TokenLut`] table block,
+/// routed slice mask and effective-bits record per token of a prefill /
+/// coalesced-decode batch.  Blocks grow lazily to the largest batch seen
+/// so the steady-state serving loop stays allocation-free.
+pub struct BatchLut {
+    pub luts: Vec<TokenLut>,
+    pub masks: Vec<Vec<bool>>,
+    /// Effective routed bits per token of the last forward_batch call.
+    pub bits: Vec<usize>,
+    d_in_cap: usize,
+    group_size: usize,
+}
+
+impl BatchLut {
+    pub fn new(d_in_cap: usize, group_size: usize) -> BatchLut {
+        BatchLut {
+            luts: Vec::new(),
+            masks: Vec::new(),
+            bits: Vec::new(),
+            d_in_cap,
+            group_size,
+        }
+    }
+
+    /// Make room for a batch of `t` tokens (allocates only on growth).
+    pub fn ensure_tokens(&mut self, t: usize) {
+        while self.luts.len() < t {
+            self.luts.push(TokenLut::new(self.d_in_cap, self.group_size));
+            self.masks.push(Vec::new());
+        }
+    }
+
+    /// Build token `i`'s LUT tables for activations `x`.
+    pub fn build_token(&mut self, i: usize, x: &[f32],
+                       group_size: usize) {
+        self.luts[i].build(x, group_size);
+    }
+
+    /// Record token `i`'s routed slice mask.
+    pub fn set_mask(&mut self, i: usize, mask: &[bool]) {
+        self.masks[i].clear();
+        self.masks[i].extend_from_slice(mask);
+    }
+}
+
+/// The batched MoBiQuant kernel: §4.3 token permutation made
+/// weight-stationary.  Tokens are grouped by identical routed slice
+/// masks ([`mask_groups`]); within a group every plane word is streamed
+/// **once** and resolved against all member tokens' LUT tables, so the
+/// per-layer plane traffic drops from `O(T · plane_bytes)` to
+/// `O(plane_bytes)` per mask group while the per-token math stays
+/// bit-identical to [`gemv_lut`].
+///
+/// `batch` must hold built tables and masks for tokens `0..t`;
+/// `out` is (t, d_out) row-major in the original token order.
+pub fn gemm_lut_batch(slices: &[PackedSlice], base: &GroupParams,
+                      batch: &BatchLut, t: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), t * base.d_out);
+    if t == 0 {
+        return;
+    }
+    let groups = mask_groups(&batch.masks[..t]);
+    let optr = SharedOut(out.as_mut_ptr());
+    for g in &groups {
+        gemm_lut_group(slices, base, batch, g, 0, base.d_out, &optr);
+    }
+}
+
+/// [`gemm_lut_batch`] parallelised over contiguous d_out chunks with
+/// `ThreadPool::parallel_for`; every worker walks all mask groups over
+/// its own output-channel range, so plane words still stream once per
+/// (group, worker) and writes stay disjoint.
+pub fn gemm_lut_batch_parallel(slices: &[PackedSlice],
+                               base: &GroupParams, batch: &BatchLut,
+                               t: usize, pool: &ThreadPool,
+                               out: &mut [f32]) {
+    let d_out = base.d_out;
+    debug_assert_eq!(out.len(), t * d_out);
+    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT {
+        return gemm_lut_batch(slices, base, batch, t, out);
+    }
+    if t == 0 {
+        return;
+    }
+    let groups = mask_groups(&batch.masks[..t]);
+    let n_chunks = pool.size();
+    let chunk = (d_out + n_chunks - 1) / n_chunks;
+    let optr = SharedOut(out.as_mut_ptr());
+    let groups = &groups;
+    pool.parallel_for(n_chunks, |ci| {
+        let o0 = ci * chunk;
+        let o1 = ((ci + 1) * chunk).min(d_out);
+        if o0 >= o1 {
+            return;
+        }
+        for g in groups {
+            gemm_lut_group(slices, base, batch, g, o0, o1, &optr);
+        }
+    });
+}
+
+/// Weight-stationary core over one same-mask token group and one
+/// output-channel range.  Writes out[tok * d_out + o] for o in o0..o1,
+/// tok in `toks` — a disjoint cell set per (group, range) invocation.
+fn gemm_lut_group(slices: &[PackedSlice], base: &GroupParams,
+                  batch: &BatchLut, toks: &[usize], o0: usize, o1: usize,
+                  out: &SharedOut) {
+    let active = &batch.masks[toks[0]][..];
+    let d_out = base.d_out;
+    let gs = base.group_size;
+    let n_groups = base.n_groups;
+    debug_assert!(active[0], "slice 0 is the shared expert");
+    debug_assert!(gs % 8 == 0);
+    let bytes_per_group = gs / 8;
+    let n_words = slices[0].n_words;
+    let nt = toks.len();
+
+    let nibble = batch.luts[toks[0]].nibble;
+    debug_assert!(toks.iter().all(|&i| batch.luts[i].nibble == nibble),
+                  "one batch = one activation width = one table regime");
+
+    // Only the group_size-32 layouts have a weight-stationary inner
+    // loop; other (cold) group sizes fall back to per-token range GEMVs
+    // — same numerics, per-token plane traffic.
+    if bytes_per_group != 4 {
+        assert!(!nibble, "nibble path requires group_size 32");
+        for &ti in toks {
+            // SAFETY: each token's (row, o0..o1) cells are disjoint.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(
+                    out.0.add(ti * d_out + o0), o1 - o0)
+            };
+            gemv_lut_range(slices, base, &batch.luts[ti], active, o0, o1,
+                           row);
+        }
+        return;
+    }
+
+    // sum over active residual slices of 4^-e * (2^{b-1} - 0.5)
+    let mut resid_c = 0f32;
+    for (e, &a) in active.iter().enumerate().skip(1) {
+        if a {
+            resid_c += slice_weight(e, base.bits)
+                * ((1u32 << (base.bits - 1)) as f32 - 0.5);
+        }
+    }
+
+    // per-(token, group) accumulators, token-major; padding words spill
+    // zero contributions into gstride > n_groups cells.  Heap-allocated
+    // (unlike the per-token kernel's stack array) because nt*gstride can
+    // reach 32K floats and each parallel worker needs its own copy; one
+    // malloc per (group, worker) call is noise next to the plane stream.
+    let gstride = n_groups.max(2 * n_words);
+    let mut ga = vec![0f32; nt * gstride];
+    for o in o0..o1 {
+        ga.fill(0.0);
+        for (e, &is_active) in active.iter().enumerate() {
+            if !is_active {
+                continue;
+            }
+            let sl = &slices[e];
+            let we = slice_weight(e, base.bits);
+            let mut mult = we;
+            for p in 0..sl.slice_bits {
+                let plane = sl.plane(p, o);
+                if nibble {
+                    for (w, &pw) in plane.iter().enumerate().take(n_words)
+                    {
+                        if pw == 0 {
+                            continue; // zero word: all LUT hits are 0
+                        }
+                        let c0 = w * 16 * 16;
+                        // split the word into 16 nibbles once, reused by
+                        // every token in the group (weight-stationary)
+                        let mut nib = [0usize; 16];
+                        for (j, n) in nib.iter_mut().enumerate() {
+                            *n = ((pw >> (4 * j)) & 0xF) as usize;
+                        }
+                        for (k, &ti) in toks.iter().enumerate() {
+                            let ntab = &batch.luts[ti].ntable[..];
+                            let gb = k * gstride + w * 2;
+                            // SAFETY: ntable padded to whole words;
+                            // nibble < 16 by construction.
+                            unsafe {
+                                let mut q0 = 0f32;
+                                let mut q1 = 0f32;
+                                let mut q2 = 0f32;
+                                let mut q3 = 0f32;
+                                for j in 0..4 {
+                                    q0 += *ntab.get_unchecked(
+                                        c0 + j * 16 + nib[j]);
+                                    q1 += *ntab.get_unchecked(
+                                        c0 + (4 + j) * 16 + nib[4 + j]);
+                                    q2 += *ntab.get_unchecked(
+                                        c0 + (8 + j) * 16 + nib[8 + j]);
+                                    q3 += *ntab.get_unchecked(
+                                        c0 + (12 + j) * 16 + nib[12 + j]);
+                                }
+                                *ga.get_unchecked_mut(gb) +=
+                                    mult * (q0 + q1);
+                                *ga.get_unchecked_mut(gb + 1) +=
+                                    mult * (q2 + q3);
+                            }
+                        }
+                    }
+                } else {
+                    for (w, &pw) in plane.iter().enumerate().take(n_words)
+                    {
+                        if pw == 0 {
+                            continue;
+                        }
+                        let c0 = w * 8 * 256;
+                        let mut by = [0usize; 8];
+                        for (j, b) in by.iter_mut().enumerate() {
+                            *b = ((pw >> (8 * j)) & 0xFF) as usize;
+                        }
+                        for (k, &ti) in toks.iter().enumerate() {
+                            let table = &batch.luts[ti].table[..];
+                            let gb = k * gstride + w * 2;
+                            // SAFETY: table padded to whole words; byte
+                            // offsets < 256 by construction.
+                            unsafe {
+                                let q0 = *table.get_unchecked(c0 + by[0])
+                                    + *table.get_unchecked(
+                                        c0 + 256 + by[1]);
+                                let q1 = *table.get_unchecked(
+                                    c0 + 512 + by[2])
+                                    + *table.get_unchecked(
+                                        c0 + 768 + by[3]);
+                                let q2 = *table.get_unchecked(
+                                    c0 + 1024 + by[4])
+                                    + *table.get_unchecked(
+                                        c0 + 1280 + by[5]);
+                                let q3 = *table.get_unchecked(
+                                    c0 + 1536 + by[6])
+                                    + *table.get_unchecked(
+                                        c0 + 1792 + by[7]);
+                                *ga.get_unchecked_mut(gb) +=
+                                    mult * (q0 + q1);
+                                *ga.get_unchecked_mut(gb + 1) +=
+                                    mult * (q2 + q3);
+                            }
+                        }
+                    }
+                }
+                mult *= 2.0;
+            }
+        }
+        // shared-scale writeback, one row cell per token
+        let srow = &base.scale[..];
+        let zrow = &base.zero[..];
+        for (k, &ti) in toks.iter().enumerate() {
+            let gsums = &batch.luts[ti].group_sums[..];
+            let mut acc = 0f32;
+            for g in 0..n_groups {
+                let s1 = srow[g * d_out + o];
+                let z1 = zrow[g * d_out + o];
+                let c = (z1 - 0.5 + resid_c) * gsums[g];
+                acc += s1 * (ga[k * gstride + g] - c);
+            }
+            // SAFETY: (ti, o) cells are disjoint across groups and
+            // output-channel ranges.
+            unsafe {
+                *out.0.add(ti * d_out + o) = acc;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -620,6 +969,93 @@ mod tests {
                 assert!((x1 - x2).abs() < 1e-3);
             }
         });
+    }
+
+    /// Random per-token masks (slice 0 always on) + built BatchLut.
+    fn setup_batch(rng: &mut Pcg, d_in: usize, gs: usize, t: usize,
+                   xs: &[f32]) -> BatchLut {
+        let mut batch = BatchLut::new(d_in, gs);
+        batch.ensure_tokens(t);
+        for i in 0..t {
+            let mask = vec![true, rng.bool(0.5), rng.bool(0.5),
+                            rng.bool(0.5)];
+            batch.set_mask(i, &mask);
+            batch.build_token(i, &xs[i * d_in..(i + 1) * d_in], gs);
+        }
+        batch
+    }
+
+    #[test]
+    fn batch_matches_per_token_kernel() {
+        // the weight-stationary kernel must be bit-identical to gemv_lut
+        // on the fast (group_size 32) path
+        property(30, 8, |rng, _| {
+            let (d_in, d_out, gs) = (96, 24, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let t = 1 + rng.below(9); // ragged T, including T=1
+            let xs = rng.normal_vec(d_in * t, 1.0);
+            let batch = setup_batch(rng, d_in, gs, t, &xs);
+            let mut out = vec![0f32; t * d_out];
+            gemm_lut_batch(&slices, &base, &batch, t, &mut out);
+            let mut lut = TokenLut::new(d_in, gs);
+            let mut y = vec![0f32; d_out];
+            for i in 0..t {
+                lut.build(&xs[i * d_in..(i + 1) * d_in], gs);
+                gemv_lut(&slices, &base, &lut, &batch.masks[i], &mut y);
+                assert_eq!(&out[i * d_out..(i + 1) * d_out], &y[..],
+                           "token {i} diverged from per-token kernel");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_parallel_matches_serial() {
+        let mut rng = Pcg::new(31);
+        let (d_in, d_out, gs) = (64, 600, 32); // d_out > PARALLEL_MIN_DOUT
+        let (slices, base) = setup(&mut rng, d_in, d_out, gs);
+        let t = 5;
+        let xs = rng.normal_vec(d_in * t, 1.0);
+        let batch = setup_batch(&mut rng, d_in, gs, t, &xs);
+        let mut serial = vec![0f32; t * d_out];
+        let mut par = vec![0f32; t * d_out];
+        gemm_lut_batch(&slices, &base, &batch, t, &mut serial);
+        let pool = ThreadPool::new(3);
+        gemm_lut_batch_parallel(&slices, &base, &batch, t, &pool,
+                                &mut par);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn gemv_parallel_matches_serial() {
+        let mut rng = Pcg::new(32);
+        let (d_in, d_out, gs) = (64, 640, 32);
+        let (slices, base) = setup(&mut rng, d_in, d_out, gs);
+        let x = rng.normal_vec(d_in, 1.0);
+        let active = vec![true, true, false, true];
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let mut serial = vec![0f32; d_out];
+        let mut par = vec![0f32; d_out];
+        gemv_lut(&slices, &base, &lut, &active, &mut serial);
+        let pool = ThreadPool::new(4);
+        gemv_lut_parallel(&slices, &base, &lut, &active, &pool, &mut par);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn mask_groups_partition_tokens() {
+        let masks = vec![
+            vec![true, false], vec![true, true], vec![true, false],
+            vec![true, true], vec![true, false],
+        ];
+        let groups = mask_groups(&masks);
+        assert_eq!(groups.len(), 2);
+        let mut all: Vec<usize> = groups.concat();
+        all.sort();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        for g in &groups {
+            assert!(g.iter().all(|&i| masks[i] == masks[g[0]]));
+        }
     }
 
     #[test]

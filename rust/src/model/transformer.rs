@@ -1,4 +1,8 @@
-//! Single-token decode transformer with KV cache — the request path.
+//! Transformer request path: single-token decode with KV cache, plus the
+//! batched block forwards (whole-prompt prefill, coalesced multi-sequence
+//! decode) that feed the weight-stationary LUT-GEMM kernel.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -8,6 +12,7 @@ use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LINEAR_NAMES};
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{Precision, Scratch};
+use crate::util::threadpool::ThreadPool;
 
 /// Aggregate decode statistics (Fig. 6 / Fig. 7 accounting).
 #[derive(Debug, Clone, Default)]
@@ -79,6 +84,76 @@ pub struct DecodeScratch {
     /// scratch fields without allocating in the decode loop (§Perf)
     pub stage: Vec<f32>,
     pub engine: Scratch,
+    /// Multi-token buffers for the batched forwards (prefill, coalesced
+    /// decode); grow to the largest block seen, then stay put.
+    pub block: BlockScratch,
+}
+
+/// Grow-on-demand activation buffers for the batched forward paths:
+/// whole-prompt prefill and the coordinator's coalesced decode step.
+/// All tensors are (T, dim) row-major over the block's tokens.
+#[derive(Default)]
+pub struct BlockScratch {
+    pub xs: Vec<f32>,
+    pub xn: Vec<f32>,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub ctx: Vec<f32>,
+    pub attn_out: Vec<f32>,
+    pub gate: Vec<f32>,
+    pub up: Vec<f32>,
+    pub ff: Vec<f32>,
+    pub mlp_out: Vec<f32>,
+    /// (T, vocab) lm_head output of the last batched call that asked
+    /// for per-token logits (decode_batch leaves its rows here).
+    pub logits: Vec<f32>,
+}
+
+impl BlockScratch {
+    fn ensure(&mut self, t: usize, d: usize, dkv: usize, d_ff: usize,
+              vocab: usize) {
+        grow(&mut self.xs, t * d);
+        grow(&mut self.xn, t * d);
+        grow(&mut self.q, t * d);
+        grow(&mut self.k, t * dkv);
+        grow(&mut self.v, t * dkv);
+        grow(&mut self.ctx, t * d);
+        grow(&mut self.attn_out, t * d);
+        grow(&mut self.gate, t * d_ff);
+        grow(&mut self.up, t * d_ff);
+        grow(&mut self.ff, t * d_ff);
+        grow(&mut self.mlp_out, t * d);
+        grow(&mut self.logits, t * vocab);
+    }
+}
+
+fn grow(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+/// Largest token block one batched pass materialises LUT tables for:
+/// `BatchLut` keeps one capacity-sized `TokenLut` per block token, so
+/// this caps that grow-only scratch while leaving enough tokens per
+/// pass to amortize plane traffic (which saturates well before 64).
+pub const MAX_PREFILL_BLOCK: usize = 64;
+
+/// One active sequence's slot in a coalesced decode step: the token to
+/// feed, its own KV cache and its own routing-stats accumulator.
+pub struct DecodeSlot<'a> {
+    pub token: u32,
+    pub kv: &'a mut SequenceKv,
+    pub stats: &'a mut DecodeStats,
+}
+
+/// Record one batched linear's per-token effective bits.
+fn record_block(stats: &mut DecodeStats, bits: &[usize], layer: usize,
+                lin: usize, slice_bits: usize) {
+    for &b in bits {
+        stats.record(layer, lin, b, slice_bits);
+    }
 }
 
 pub struct Model {
@@ -87,6 +162,9 @@ pub struct Model {
     pub layers: Vec<LayerWeights>,
     pub final_norm: Vec<f32>,
     pub lm_head: LinearBackend,
+    /// Shared kernel worker pool; scratches from [`Model::new_scratch`]
+    /// inherit it so the d_out-parallel kernel paths engage.
+    pub pool: Option<Arc<ThreadPool>>,
 }
 
 impl Model {
@@ -116,12 +194,24 @@ impl Model {
             lm_head: load_fp_dense(bundle, "fp.lm_head")?,
             cfg,
             layers,
+            pool: None,
         })
+    }
+
+    /// Attach a shared kernel worker pool (e.g. from the `--threads`
+    /// CLI flag); subsequently created scratches inherit it.
+    pub fn set_pool(&mut self, pool: Arc<ThreadPool>) {
+        self.pool = Some(pool);
     }
 
     pub fn new_scratch(&self) -> DecodeScratch {
         let c = &self.cfg;
         let dkv = c.n_kv_heads * c.head_dim();
+        let mut engine = Scratch::new(c.d_model.max(c.d_ff), c.group_size,
+                                      c.router_hidden, c.n_slices);
+        if let Some(p) = &self.pool {
+            engine = engine.with_pool(Arc::clone(p));
+        }
         DecodeScratch {
             x: vec![0f32; c.d_model],
             xn: vec![0f32; c.d_model.max(c.d_ff)],
@@ -137,8 +227,8 @@ impl Model {
             scores: vec![0f32; c.max_seq_len],
             logits: vec![0f32; c.vocab_size],
             stage: vec![0f32; c.d_model.max(c.d_ff)],
-            engine: Scratch::new(c.d_model.max(c.d_ff), c.group_size,
-                                 c.router_hidden, c.n_slices),
+            engine,
+            block: BlockScratch::default(),
         }
     }
 
@@ -228,6 +318,307 @@ impl Model {
         Ok(())
     }
 
+    /// Batched block forward core shared by prefill, the PPL evaluator
+    /// and the probe capture: feeds `tokens` (one sequence, positions
+    /// `kv.len()..`) through every layer with **one batched
+    /// weight-stationary kernel call per linear**, so each plane word
+    /// streams once per mask group instead of once per token.
+    ///
+    /// * `all_logits: Some(out)` appends every token's logits row to
+    ///   `out` and mirrors the last row into `scratch.logits`.
+    /// * `all_logits: None` runs the lm_head for the last token only
+    ///   (the decode loop discards the others anyway).
+    /// * `capture: Some((layer, rows))` pushes each token's attn-norm
+    ///   input at `layer` (the Fig. 1/5 probe) and skips the lm_head.
+    fn prefill_inner(&self, tokens: &[u32], kv: &mut SequenceKv,
+                     precision: Precision, scratch: &mut DecodeScratch,
+                     stats: &mut DecodeStats,
+                     mut all_logits: Option<&mut Vec<f32>>,
+                     mut capture: Option<(usize, &mut Vec<Vec<f32>>)>)
+                     -> Result<()> {
+        let c = &self.cfg;
+        let t = tokens.len();
+        if t == 0 {
+            return Ok(());
+        }
+        let d = c.d_model;
+        let hd = c.head_dim();
+        let dkv = c.n_kv_heads * hd;
+        let d_ff = c.d_ff;
+        let pos0 = kv.len();
+        anyhow::ensure!(pos0 + t <= c.max_seq_len, "sequence too long");
+        for &tok in tokens {
+            anyhow::ensure!((tok as usize) < c.vocab_size, "token oob");
+        }
+        let need_logits = all_logits.is_some();
+        scratch.block.ensure(t, d, dkv, d_ff,
+                             if need_logits { c.vocab_size } else { 0 });
+        let bb = &mut scratch.block;
+        for (i, &tok) in tokens.iter().enumerate() {
+            bb.xs[i * d..(i + 1) * d].copy_from_slice(
+                &self.embed[tok as usize * d..(tok as usize + 1) * d]);
+        }
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            for i in 0..t {
+                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.attn_norm,
+                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+            }
+            if let Some((cl, rows)) = capture.as_mut() {
+                if *cl == li {
+                    for i in 0..t {
+                        rows.push(bb.xn[i * d..(i + 1) * d].to_vec());
+                    }
+                }
+            }
+            lw.wq.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.q[..t * d]);
+            record_block(stats, &scratch.engine.batch.bits, li, 0,
+                         c.slice_bits);
+            lw.wk.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.k[..t * dkv]);
+            record_block(stats, &scratch.engine.batch.bits, li, 1,
+                         c.slice_bits);
+            lw.wv.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.v[..t * dkv]);
+            record_block(stats, &scratch.engine.batch.bits, li, 2,
+                         c.slice_bits);
+            // causal attention stays sequential in position: token i's
+            // K/V rows are in the cache before token i attends.
+            for i in 0..t {
+                let pos = pos0 + i;
+                rope(&mut bb.q[i * d..(i + 1) * d], pos, hd, c.rope_theta);
+                rope(&mut bb.k[i * dkv..(i + 1) * dkv], pos, hd,
+                     c.rope_theta);
+                kv.layers[li].push(&bb.k[i * dkv..(i + 1) * dkv],
+                                   &bb.v[i * dkv..(i + 1) * dkv]);
+                attention_step(&bb.q[i * d..(i + 1) * d], &kv.layers[li],
+                               c, pos, &mut scratch.scores,
+                               &mut bb.ctx[i * d..(i + 1) * d]);
+            }
+            lw.wo.forward_batch(&bb.ctx[..t * d], precision,
+                                &mut scratch.engine,
+                                &mut bb.attn_out[..t * d]);
+            record_block(stats, &scratch.engine.batch.bits, li, 3,
+                         c.slice_bits);
+            for (xi, ai) in bb.xs[..t * d].iter_mut()
+                .zip(&bb.attn_out[..t * d]) {
+                *xi += ai;
+            }
+
+            // ---- mlp ----
+            for i in 0..t {
+                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.mlp_norm,
+                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+            }
+            lw.w_gate.forward_batch(&bb.xn[..t * d], precision,
+                                    &mut scratch.engine,
+                                    &mut bb.gate[..t * d_ff]);
+            record_block(stats, &scratch.engine.batch.bits, li, 4,
+                         c.slice_bits);
+            lw.w_up.forward_batch(&bb.xn[..t * d], precision,
+                                  &mut scratch.engine,
+                                  &mut bb.up[..t * d_ff]);
+            record_block(stats, &scratch.engine.batch.bits, li, 5,
+                         c.slice_bits);
+            for (f, (g, u)) in bb.ff[..t * d_ff].iter_mut()
+                .zip(bb.gate[..t * d_ff].iter().zip(&bb.up[..t * d_ff])) {
+                *f = silu(*g) * u;
+            }
+            lw.w_down.forward_batch(&bb.ff[..t * d_ff], precision,
+                                    &mut scratch.engine,
+                                    &mut bb.mlp_out[..t * d]);
+            record_block(stats, &scratch.engine.batch.bits, li, 6,
+                         c.slice_bits);
+            for (xi, mi) in bb.xs[..t * d].iter_mut()
+                .zip(&bb.mlp_out[..t * d]) {
+                *xi += mi;
+            }
+        }
+        stats.tokens += t as u64;
+        if capture.is_some() {
+            return Ok(());
+        }
+
+        if need_logits {
+            for i in 0..t {
+                rmsnorm(&bb.xs[i * d..(i + 1) * d], &self.final_norm,
+                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+            }
+            let v = c.vocab_size;
+            self.lm_head.forward_batch(&bb.xn[..t * d], precision,
+                                       &mut scratch.engine,
+                                       &mut bb.logits[..t * v]);
+            if let Some(out) = all_logits.as_mut() {
+                out.extend_from_slice(&bb.logits[..t * v]);
+            }
+            scratch.logits.copy_from_slice(&bb.logits[(t - 1) * v..t * v]);
+        } else {
+            rmsnorm(&bb.xs[(t - 1) * d..t * d], &self.final_norm,
+                    c.norm_eps, &mut bb.xn[..d]);
+            let (xn, logits) = (&bb.xn[..d], &mut scratch.logits);
+            self.lm_head.forward_token(xn, precision, &mut scratch.engine,
+                                       logits);
+        }
+        Ok(())
+    }
+
+    /// Prefill a whole prompt block starting at position `kv.len()`.
+    /// The block's last-token logits are left in `scratch.logits`; the
+    /// lm_head is skipped for earlier tokens (the decode loop discards
+    /// them anyway).
+    pub fn prefill(&self, tokens: &[u32], kv: &mut SequenceKv,
+                   precision: Precision, scratch: &mut DecodeScratch,
+                   stats: &mut DecodeStats) -> Result<()> {
+        for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
+            self.prefill_inner(chunk, kv, precision, scratch, stats,
+                               None, None)?;
+        }
+        Ok(())
+    }
+
+    /// Prefill that also appends every token's logits row ((T, vocab)
+    /// row-major) to `out` — the batched replacement for per-token
+    /// decode in the PPL evaluator and golden-vector parity tests.
+    pub fn prefill_logits(&self, tokens: &[u32], kv: &mut SequenceKv,
+                          precision: Precision,
+                          scratch: &mut DecodeScratch,
+                          stats: &mut DecodeStats, out: &mut Vec<f32>)
+                          -> Result<()> {
+        for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
+            self.prefill_inner(chunk, kv, precision, scratch, stats,
+                               Some(out), None)?;
+        }
+        Ok(())
+    }
+
+    /// Advance several sequences by one token each through **one
+    /// batched kernel call per linear** — the coordinator's coalesced
+    /// decode step.  Each slot keeps its own KV cache, position and
+    /// stats; per-slot logits rows land in `scratch.block.logits`
+    /// ((n_slots, vocab) row-major, slot order).
+    pub fn decode_batch(&self, slots: &mut [DecodeSlot],
+                        precision: Precision,
+                        scratch: &mut DecodeScratch) -> Result<()> {
+        let c = &self.cfg;
+        let t = slots.len();
+        if t == 0 {
+            return Ok(());
+        }
+        let d = c.d_model;
+        let hd = c.head_dim();
+        let dkv = c.n_kv_heads * hd;
+        let d_ff = c.d_ff;
+        for s in slots.iter() {
+            anyhow::ensure!(s.kv.len() < c.max_seq_len,
+                            "sequence too long");
+            anyhow::ensure!((s.token as usize) < c.vocab_size,
+                            "token oob");
+        }
+        scratch.block.ensure(t, d, dkv, d_ff, c.vocab_size);
+        let bb = &mut scratch.block;
+        for (i, s) in slots.iter().enumerate() {
+            let tok = s.token as usize;
+            bb.xs[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
+        }
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            for i in 0..t {
+                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.attn_norm,
+                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+            }
+            lw.wq.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.q[..t * d]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 0, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            lw.wk.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.k[..t * dkv]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 1, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            lw.wv.forward_batch(&bb.xn[..t * d], precision,
+                                &mut scratch.engine, &mut bb.v[..t * dkv]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 2, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            for (i, s) in slots.iter_mut().enumerate() {
+                let pos = s.kv.len();
+                rope(&mut bb.q[i * d..(i + 1) * d], pos, hd, c.rope_theta);
+                rope(&mut bb.k[i * dkv..(i + 1) * dkv], pos, hd,
+                     c.rope_theta);
+                s.kv.layers[li].push(&bb.k[i * dkv..(i + 1) * dkv],
+                                     &bb.v[i * dkv..(i + 1) * dkv]);
+                attention_step(&bb.q[i * d..(i + 1) * d], &s.kv.layers[li],
+                               c, pos, &mut scratch.scores,
+                               &mut bb.ctx[i * d..(i + 1) * d]);
+            }
+            lw.wo.forward_batch(&bb.ctx[..t * d], precision,
+                                &mut scratch.engine,
+                                &mut bb.attn_out[..t * d]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 3, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            for (xi, ai) in bb.xs[..t * d].iter_mut()
+                .zip(&bb.attn_out[..t * d]) {
+                *xi += ai;
+            }
+
+            for i in 0..t {
+                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.mlp_norm,
+                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+            }
+            lw.w_gate.forward_batch(&bb.xn[..t * d], precision,
+                                    &mut scratch.engine,
+                                    &mut bb.gate[..t * d_ff]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 4, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            lw.w_up.forward_batch(&bb.xn[..t * d], precision,
+                                  &mut scratch.engine,
+                                  &mut bb.up[..t * d_ff]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 5, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            for (f, (g, u)) in bb.ff[..t * d_ff].iter_mut()
+                .zip(bb.gate[..t * d_ff].iter().zip(&bb.up[..t * d_ff])) {
+                *f = silu(*g) * u;
+            }
+            lw.w_down.forward_batch(&bb.ff[..t * d_ff], precision,
+                                    &mut scratch.engine,
+                                    &mut bb.mlp_out[..t * d]);
+            for (i, s) in slots.iter_mut().enumerate() {
+                s.stats.record(li, 6, scratch.engine.batch.bits[i],
+                               c.slice_bits);
+            }
+            for (xi, mi) in bb.xs[..t * d].iter_mut()
+                .zip(&bb.mlp_out[..t * d]) {
+                *xi += mi;
+            }
+        }
+        for s in slots.iter_mut() {
+            s.stats.tokens += 1;
+        }
+
+        for i in 0..t {
+            rmsnorm(&bb.xs[i * d..(i + 1) * d], &self.final_norm,
+                    c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
+        }
+        let v = c.vocab_size;
+        self.lm_head.forward_batch(&bb.xn[..t * d], precision,
+                                   &mut scratch.engine,
+                                   &mut bb.logits[..t * v]);
+        Ok(())
+    }
+
     /// Full-sequence forward; returns (T, vocab) logits row-major.
     /// Used by the PPL evaluator and the golden-vector parity tests.
     pub fn forward_logits(&self, tokens: &[u32], precision: Precision)
@@ -237,107 +628,51 @@ impl Model {
         let mut stats = DecodeStats::new(self.cfg.n_layers);
         let mut out = Vec::with_capacity(tokens.len()
             * self.cfg.vocab_size);
-        for &t in tokens {
-            self.decode_step(t, &mut kv, precision, &mut scratch,
-                             &mut stats)?;
-            out.extend_from_slice(&scratch.logits);
-        }
+        self.prefill_logits(tokens, &mut kv, precision, &mut scratch,
+                            &mut stats, &mut out)?;
         Ok(out)
     }
 
     /// FP-stream activations feeding layer `layer`'s attention linears
     /// (rmsnorm'd block inputs) for each token — the probe used by the
-    /// outlier-migration analyses (Figs. 1, 5; App. E.1/E.2).
+    /// outlier-migration analyses (Figs. 1, 5; App. E.1/E.2).  Probes
+    /// run in ctx-length windows through the batched prefill.
     pub fn attn_inputs(&self, tokens: &[u32], layer: usize,
                        precision: Precision) -> Result<Vec<Vec<f32>>> {
         let mut kv = self.new_kv();
         let mut scratch = self.new_scratch();
         let mut stats = DecodeStats::new(self.cfg.n_layers);
-        let d = self.cfg.d_model;
         let mut out = Vec::with_capacity(tokens.len());
-        for &t in tokens {
-            if kv.len() + 1 >= self.cfg.max_seq_len {
-                kv.reset(); // probe in ctx-length windows
+        let win = self.cfg.max_seq_len.saturating_sub(1).max(1);
+        for window in tokens.chunks(win) {
+            kv.reset();
+            for chunk in window.chunks(MAX_PREFILL_BLOCK) {
+                self.prefill_inner(chunk, &mut kv, precision,
+                                   &mut scratch, &mut stats, None,
+                                   Some((layer, &mut out)))?;
             }
-            self.decode_step_capture(t, &mut kv, precision, &mut scratch,
-                                     &mut stats, layer)?;
-            out.push(scratch.xn[..d].to_vec());
         }
         Ok(out)
     }
 
-    /// decode_step variant that leaves layer `capture_layer`'s attn-norm
-    /// input in scratch.xn at return.  Used by [`Model::attn_inputs`].
-    fn decode_step_capture(&self, token: u32, kv: &mut SequenceKv,
-                           precision: Precision,
-                           scratch: &mut DecodeScratch,
-                           stats: &mut DecodeStats,
-                           capture_layer: usize) -> Result<()> {
-        // plain decode, then recompute the captured norm input
-        let c = &self.cfg;
-        let d = c.d_model;
-        let pos = kv.len();
-        // replicate the residual stream up to capture_layer
-        scratch.x.copy_from_slice(
-            &self.embed[token as usize * d..(token as usize + 1) * d]);
-        let mut captured = vec![0f32; d];
-        for (li, lw) in self.layers.iter().enumerate() {
-            rmsnorm(&scratch.x, &lw.attn_norm, c.norm_eps,
-                    &mut scratch.xn[..d]);
-            if li == capture_layer {
-                captured.copy_from_slice(&scratch.xn[..d]);
-            }
-            let xn = scratch.xn[..d].to_vec();
-            let mut eng = &mut scratch.engine;
-            lw.wq.forward_token(&xn, precision, eng, &mut scratch.q);
-            lw.wk.forward_token(&xn, precision, eng, &mut scratch.k);
-            lw.wv.forward_token(&xn, precision, eng, &mut scratch.v);
-            eng = &mut scratch.engine;
-            rope(&mut scratch.q, pos, c.head_dim(), c.rope_theta);
-            rope(&mut scratch.k, pos, c.head_dim(), c.rope_theta);
-            kv.layers[li].push(&scratch.k, &scratch.v);
-            attention_step(&scratch.q, &kv.layers[li], c, pos,
-                           &mut scratch.scores, &mut scratch.ctx);
-            let ctx = scratch.ctx.clone();
-            lw.wo.forward_token(&ctx, precision, eng, &mut scratch.attn_out);
-            for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
-                *xi += ai;
-            }
-            rmsnorm(&scratch.x, &lw.mlp_norm, c.norm_eps,
-                    &mut scratch.xn[..d]);
-            let xn2 = scratch.xn[..d].to_vec();
-            lw.w_gate.forward_token(&xn2, precision, eng, &mut scratch.gate);
-            lw.w_up.forward_token(&xn2, precision, eng, &mut scratch.up);
-            for (f, (g, u)) in scratch.ff.iter_mut()
-                .zip(scratch.gate.iter().zip(&scratch.up)) {
-                *f = silu(*g) * u;
-            }
-            let ffin = scratch.ff.clone();
-            lw.w_down.forward_token(&ffin, precision, eng,
-                                    &mut scratch.mlp_out);
-            for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp_out) {
-                *xi += mi;
-            }
-        }
-        stats.tokens += 1;
-        scratch.xn[..d].copy_from_slice(&captured);
-        Ok(())
-    }
-
-    /// Greedy-sample continuation of a prompt (used by examples/serving).
+    /// Greedy-sample continuation of a prompt (used by examples/serving):
+    /// batched prefill over the whole prompt, then per-token decode.
     pub fn generate(&self, prompt: &[u32], n_new: usize,
                     precision: Precision, stats: &mut DecodeStats)
                     -> Result<Vec<u32>> {
         let mut kv = self.new_kv();
         let mut scratch = self.new_scratch();
         let mut toks = prompt.to_vec();
-        for i in 0..prompt.len() + n_new - 1 {
-            let t = toks[i.min(toks.len() - 1)];
-            self.decode_step(t, &mut kv, precision, &mut scratch, stats)?;
-            if i + 1 >= prompt.len() {
-                let next = argmax(&scratch.logits) as u32;
-                toks.push(next);
-            }
+        if n_new == 0 || prompt.is_empty() {
+            return Ok(toks);
+        }
+        self.prefill(prompt, &mut kv, precision, &mut scratch, stats)?;
+        toks.push(argmax(&scratch.logits) as u32);
+        for _ in 1..n_new {
+            let last = *toks.last().unwrap();
+            self.decode_step(last, &mut kv, precision, &mut scratch,
+                             stats)?;
+            toks.push(argmax(&scratch.logits) as u32);
         }
         Ok(toks)
     }

@@ -98,6 +98,41 @@ impl LinearBackend {
         }
     }
 
+    /// Forward a (T, d_in) row-major block; the quantized backend runs
+    /// the batched weight-stationary kernel.  Per-token effective bits
+    /// are left in `scratch.batch.bits` (all backends fill it so the
+    /// caller can record stats uniformly); returns their sum.
+    pub fn forward_batch(&self, xs: &[f32], precision: Precision,
+                         scratch: &mut Scratch, out: &mut [f32]) -> usize {
+        match self {
+            LinearBackend::Dense { w, d_in, d_out } => {
+                let (di, dn) = (*d_in, *d_out);
+                let t = xs.len() / di;
+                scratch.batch.bits.clear();
+                for i in 0..t {
+                    matvec(w, &xs[i * di..(i + 1) * di],
+                           &mut out[i * dn..(i + 1) * dn], di, dn);
+                    scratch.batch.bits.push(16);
+                }
+                16 * t
+            }
+            LinearBackend::Mobiq(m) => {
+                m.forward_batch(xs, precision, scratch, out)
+            }
+            LinearBackend::Static(s) => {
+                let t = xs.len() / s.d_in;
+                scratch.batch.bits.clear();
+                for i in 0..t {
+                    s.forward(&xs[i * s.d_in..(i + 1) * s.d_in],
+                              &mut scratch.xq[..s.d_in],
+                              &mut out[i * s.d_out..(i + 1) * s.d_out]);
+                    scratch.batch.bits.push(s.bits as usize);
+                }
+                s.bits as usize * t
+            }
+        }
+    }
+
     /// Router-only step (for latency breakdown measurements).
     pub fn route_only(&self, x: &[f32], precision: Precision,
                       scratch: &mut Scratch) -> usize {

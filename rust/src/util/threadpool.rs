@@ -1,51 +1,72 @@
 //! Fixed-size thread pool with scoped parallel-for (tokio/rayon are not
-//! vendored; the coordinator and the slice-parallel kernel path use this).
+//! vendored; the coordinator and the d_out-parallel kernel paths use
+//! this).
 //!
-//! The pool holds worker threads fed by an mpsc channel of boxed jobs.
-//! `scope_chunks` provides the rayon-like "split a slice into chunks and
-//! join" pattern used by the batched GEMV path (the CPU analogue of the
-//! paper's CUDA-stream slice overlap).
+//! Two execution modes with different lifetime needs:
+//!
+//! * `execute` — fire-and-forget `'static` jobs on persistent workers
+//!   fed by an mpsc channel.  Workers spawn lazily on first use, so
+//!   pools that only ever run `parallel_for` (the kernel paths) never
+//!   carry idle threads.
+//! * `parallel_for` — the rayon-like "split an index range and join"
+//!   pattern that `gemv_lut_parallel` / `gemm_lut_batch_parallel` use
+//!   to chunk output channels (the CPU analogue of the paper's
+//!   CUDA-stream slice overlap).  It uses `thread::scope` fork-join so
+//!   the closure can borrow the caller's stack (LUTs, plane slices)
+//!   without `'static` laundering, and worker panics propagate safely.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+struct Workers {
+    tx: mpsc::Sender<Job>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
 pub struct ThreadPool {
-    tx: Option<mpsc::Sender<Job>>,
-    workers: Vec<thread::JoinHandle<()>>,
+    workers: OnceLock<Workers>,
     size: usize,
 }
 
 impl ThreadPool {
     pub fn new(size: usize) -> Self {
-        let size = size.max(1);
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..size)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                thread::Builder::new()
-                    .name(format!("mobiq-worker-{}", i))
-                    .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker")
-            })
-            .collect();
-        ThreadPool { tx: Some(tx), workers, size }
+        ThreadPool { workers: OnceLock::new(), size: size.max(1) }
     }
 
-    /// Pool sized to the machine (cores - 0, min 1).
+    /// Persistent `execute` workers, spawned on first use.
+    fn workers(&self) -> &Workers {
+        self.workers.get_or_init(|| {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let rx = Arc::new(Mutex::new(rx));
+            let handles = (0..self.size)
+                .map(|i| {
+                    let rx = Arc::clone(&rx);
+                    thread::Builder::new()
+                        .name(format!("mobiq-worker-{}", i))
+                        .spawn(move || loop {
+                            let job = { rx.lock().unwrap().recv() };
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break,
+                            }
+                        })
+                        .expect("spawn worker")
+                })
+                .collect();
+            Workers { tx, handles }
+        })
+    }
+
+    /// Pool sized to the machine: `cores - 1` (min 1).  One core is
+    /// deliberately left free so the coordinator's scheduler thread (and
+    /// the OS) are not preempted by kernel workers — a fully-subscribed
+    /// pool makes tick latency spike under load for no throughput gain.
     pub fn default_for_machine() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        ThreadPool::new(n)
+        ThreadPool::new(default_threads())
     }
 
     pub fn size(&self) -> usize {
@@ -53,7 +74,7 @@ impl ThreadPool {
     }
 
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.as_ref().unwrap().send(Box::new(job)).expect("pool alive");
+        self.workers().tx.send(Box::new(job)).expect("pool alive");
     }
 
     /// Run `f(chunk_index)` for each index in 0..n, blocking until all
@@ -87,11 +108,21 @@ impl ThreadPool {
     }
 }
 
+/// Worker count [`ThreadPool::default_for_machine`] uses: cores - 1,
+/// min 1 (see the rationale there).  Exposed so CLI defaulting can show
+/// the number without building a pool.
+pub fn default_threads() -> usize {
+    let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    n.saturating_sub(1).max(1)
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        if let Some(w) = self.workers.take() {
+            drop(w.tx); // closes the channel; workers drain and exit
+            for h in w.handles {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -137,6 +168,17 @@ mod tests {
     fn parallel_for_empty() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn default_leaves_a_core_free() {
+        let n = default_threads();
+        assert!(n >= 1);
+        let cores = thread::available_parallelism()
+            .map(|n| n.get()).unwrap_or(1);
+        if cores > 1 {
+            assert_eq!(n, cores - 1);
+        }
     }
 
     #[test]

@@ -31,6 +31,60 @@ fn unpack_i32_planes(planes: &[i32], e: usize, slice_bits: usize,
     out
 }
 
+/// The batched weight-stationary kernel must match the dequant-GEMV
+/// oracle bit-for-token across mixed per-token slice masks, ragged T
+/// (including T=1), and both LUT regimes: d_in 512 builds byte tables,
+/// d_in 2048 sits at NIBBLE_THRESHOLD and builds nibble tables.
+#[test]
+fn batched_kernel_matches_dequant_oracle() {
+    use mobiquant::mobiq::bitplane::PackedSlice;
+    use mobiquant::mobiq::gemv::{dequant_gemv, gemm_lut_batch, BatchLut};
+    use mobiquant::mobiq::quantizer::decompose;
+
+    let gs = 32;
+    for &(d_in, d_out, nibble, tol) in &[
+        (512usize, 24usize, false, 1e-2f32),
+        (2048, 8, true, 2e-2),
+    ] {
+        let mut rng = Pcg::new(41 + d_in as u64);
+        let w = rng.normal_vec(d_in * d_out, 0.2);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = decompose(&w, &base, 4);
+        let slices: Vec<PackedSlice> = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        for &t in &[1usize, 3, 6] {
+            let xs = rng.normal_vec(d_in * t, 1.0);
+            let mut batch = BatchLut::new(d_in, gs);
+            batch.ensure_tokens(t);
+            for i in 0..t {
+                // mixed routed masks; slice 0 (shared expert) always on
+                let mask = vec![true, rng.bool(0.5), rng.bool(0.5),
+                                rng.bool(0.5)];
+                batch.set_mask(i, &mask);
+                batch.build_token(i, &xs[i * d_in..(i + 1) * d_in], gs);
+            }
+            assert_eq!(batch.luts[0].nibble, nibble,
+                       "d_in {d_in} must exercise the {} regime",
+                       if nibble { "nibble" } else { "byte" });
+            let mut out = vec![0f32; t * d_out];
+            gemm_lut_batch(&slices, &base, &batch, t, &mut out);
+            let mut y_ref = vec![0f32; d_out];
+            for i in 0..t {
+                dequant_gemv(&slices, &base,
+                             &xs[i * d_in..(i + 1) * d_in],
+                             &batch.masks[i], &mut y_ref);
+                for (o, (a, b)) in out[i * d_out..(i + 1) * d_out].iter()
+                    .zip(&y_ref).enumerate() {
+                    assert!((a - b).abs() < tol,
+                            "d_in {d_in} T={t} token {i} out[{o}]: \
+                             batched {a} vs oracle {b}");
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn pallas_kernel_matches_rust_engine() {
     let dir = mobiquant::artifacts_dir();
