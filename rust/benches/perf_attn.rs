@@ -1,0 +1,147 @@
+//! §Perf §Attention — tiled head-parallel online-softmax attention
+//! study (EXPERIMENTS.md §Perf §Attention).
+//!
+//! Compares three kernels over the head-major KV cache at serving-like
+//! shapes, sweeping context length x head/GQA configs:
+//!   * `attention_step` — the scalar oracle: head-serial, two-pass
+//!     softmax, one query position per call (the pre-refactor hot
+//!     path, called T times per block),
+//!   * `attention_block` serial — whole query block in one pass,
+//!     position tiles streamed once and reused by every query,
+//!     online softmax (no full score buffer),
+//!   * `attention_block` + `ThreadPool` — the same kernel with heads
+//!     split over contiguous worker chunks.
+//!
+//! Two shapes per (config, ctx): a prefill block (T = min(64, ctx)
+//! queries ending at ctx) and a single-query decode step at position
+//! ctx - 1.  Writes `target/bench_reports/BENCH_attn.json`.
+
+use std::sync::Arc;
+
+use mobiquant::model::attention::{attention_block, attention_step,
+                                  AttnScratch};
+use mobiquant::model::kvcache::KvCache;
+use mobiquant::model::weights::ModelConfig;
+use mobiquant::util::bench::{black_box, Suite};
+use mobiquant::util::prng::Pcg;
+use mobiquant::util::threadpool::{default_threads, ThreadPool};
+
+fn attn_cfg(n_heads: usize, n_kv_heads: usize, hd: usize,
+            ctx: usize) -> ModelConfig {
+    ModelConfig {
+        name: "bench".into(),
+        vocab_size: 16,
+        d_model: n_heads * hd,
+        n_layers: 1,
+        n_heads,
+        n_kv_heads,
+        d_ff: 16,
+        max_seq_len: ctx,
+        rope_theta: 1e4,
+        norm_eps: 1e-5,
+        n_slices: 4,
+        slice_bits: 2,
+        group_size: 32,
+        router_hidden: 8,
+    }
+}
+
+fn main() {
+    let mut suite = Suite::new("BENCH_attn");
+    suite.header();
+    let mut rng = Pcg::new(17);
+    let pool = Arc::new(ThreadPool::new(default_threads()));
+    suite.note(&format!("parallel rows use {} worker threads",
+                        pool.size()));
+    let hd = 64usize;
+
+    for &(tag, n_heads, n_kv) in &[("mha-8h", 8usize, 8usize),
+                                   ("gqa-8h-2kv", 8, 2),
+                                   ("gqa-32h-8kv", 32, 8)] {
+        let d = n_heads * hd;
+        let w = n_kv * hd;
+        for &ctx in &[64usize, 256, 1024] {
+            let cfg = attn_cfg(n_heads, n_kv, hd, ctx);
+            let mut cache = KvCache::new(ctx, n_kv, hd);
+            for _ in 0..ctx {
+                let k = rng.normal_vec(w, 1.0);
+                let v = rng.normal_vec(w, 1.0);
+                cache.push(&k, &v);
+            }
+            let mut scores = vec![0f32; ctx];
+            let mut sc = AttnScratch::new();
+
+            // -- prefill block: T queries ending at ctx --
+            let t = 64usize.min(ctx);
+            let pos0 = ctx - t;
+            let q = rng.normal_vec(t * d, 1.0);
+            let mut out = vec![0f32; t * d];
+            let label = format!("{tag} ctx={ctx} T={t}");
+            let ns_scalar = suite.bench(&format!("{label} scalar"), || {
+                for i in 0..t {
+                    attention_step(&q[i * d..(i + 1) * d], &cache, &cfg,
+                                   pos0 + i, &mut scores,
+                                   &mut out[i * d..(i + 1) * d]);
+                }
+                black_box(out[0]);
+            });
+            let ns_tiled = suite.bench(&format!("{label} tiled"), || {
+                attention_block(&cfg, &q, &cache, pos0, t, &mut sc,
+                                None, &mut out);
+                black_box(out[0]);
+            });
+            let ns_par = suite.bench(
+                &format!("{label} tiled+parallel"), || {
+                    attention_block(&cfg, &q, &cache, pos0, t, &mut sc,
+                                    Some(&pool), &mut out);
+                    black_box(out[0]);
+                });
+            let toks = t as f64;
+            suite.row(&format!("{label} summary"), &[
+                ("tok_s_scalar", toks / (ns_scalar * 1e-9)),
+                ("tok_s_tiled", toks / (ns_tiled * 1e-9)),
+                ("tok_s_parallel", toks / (ns_par * 1e-9)),
+                ("tiled_speedup", ns_scalar / ns_tiled),
+                ("parallel_speedup", ns_scalar / ns_par),
+            ]);
+
+            // -- decode step: one query at position ctx - 1 --
+            let pos = ctx - 1;
+            let q1 = rng.normal_vec(d, 1.0);
+            let mut out1 = vec![0f32; d];
+            let dlabel = format!("{tag} ctx={ctx} decode");
+            let ns_dscalar =
+                suite.bench(&format!("{dlabel} scalar"), || {
+                    attention_step(&q1, &cache, &cfg, pos, &mut scores,
+                                   &mut out1);
+                    black_box(out1[0]);
+                });
+            let ns_dtiled = suite.bench(&format!("{dlabel} tiled"), || {
+                attention_block(&cfg, &q1, &cache, pos, 1, &mut sc,
+                                None, &mut out1);
+                black_box(out1[0]);
+            });
+            // parallel row only differs from tiled once the work gate
+            // (ATTN_PARALLEL_MIN_WORK) opens — it doubles as a gate
+            // tuning probe
+            let ns_dpar = suite.bench(
+                &format!("{dlabel} tiled+parallel"), || {
+                    attention_block(&cfg, &q1, &cache, pos, 1, &mut sc,
+                                    Some(&pool), &mut out1);
+                    black_box(out1[0]);
+                });
+            suite.row(&format!("{dlabel} summary"), &[
+                ("ns_scalar", ns_dscalar),
+                ("ns_tiled", ns_dtiled),
+                ("ns_parallel", ns_dpar),
+                ("decode_tiled_speedup", ns_dscalar / ns_dtiled),
+                ("decode_parallel_speedup", ns_dscalar / ns_dpar),
+            ]);
+        }
+    }
+    suite.note("targets: tiled+parallel >= 2x scalar tokens/s at \
+                ctx=1024 on every head config; tiled (serial) alone \
+                should already win from K/V tile reuse across the \
+                query block (EXPERIMENTS.md §Perf §Attention)");
+    suite.finish();
+}

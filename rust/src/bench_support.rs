@@ -84,15 +84,27 @@ pub fn synth_mobiq_linear(rng: &mut Pcg, d_in: usize,
 /// for tests that must run without `make artifacts`.  Two calls with
 /// the same seed build bit-identical models.
 pub fn synth_model(seed: u64) -> Model {
+    synth_model_shaped(seed, 4, 2, 128)
+}
+
+/// [`synth_model`] with an explicit attention shape: `n_heads` query
+/// heads over `n_kv_heads` KV heads (GQA when they differ; head_dim
+/// stays 16) and a chosen context budget.  Lets parity tests sweep GQA
+/// configs and sequences past one prefill block without the artifact
+/// bundle.  Same seed + same shape => bit-identical models.
+pub fn synth_model_shaped(seed: u64, n_heads: usize, n_kv_heads: usize,
+                          max_seq_len: usize) -> Model {
+    assert!(n_heads % n_kv_heads.max(1) == 0,
+            "GQA needs n_kv_heads | n_heads");
     let cfg = ModelConfig {
         name: "synth".into(),
         vocab_size: 256,
-        d_model: 64,
+        d_model: 16 * n_heads,
         n_layers: 2,
-        n_heads: 4,
-        n_kv_heads: 2,
+        n_heads,
+        n_kv_heads,
         d_ff: 128,
-        max_seq_len: 128,
+        max_seq_len,
         rope_theta: 1e4,
         norm_eps: 1e-5,
         n_slices: 4,

@@ -50,8 +50,14 @@ pub struct Scheduler<'m> {
 impl<'m> Scheduler<'m> {
     pub fn new(model: &'m Model, batcher: Batcher,
                controller: ElasticController) -> Scheduler<'m> {
+        let mut scratch = model.new_scratch();
+        // Pre-warm the RoPE sin/cos tables over the whole context
+        // budget: the cache grows on demand, but growing it mid-tick
+        // would show up as a latency blip on whichever request first
+        // reaches a new position.  One-off cost at server start.
+        scratch.rope.ensure(model.cfg.max_seq_len);
         Scheduler {
-            scratch: model.new_scratch(),
+            scratch,
             model,
             batcher,
             controller,

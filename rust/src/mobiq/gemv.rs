@@ -20,15 +20,13 @@
 
 use super::bitplane::PackedSlice;
 use super::quantizer::{dequantize, GroupParams};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
-/// Raw output pointer wrapper so `parallel_for` workers (and the
-/// batched kernel's per-token writebacks) can write disjoint cells of
-/// one output buffer.  Soundness argument at each use site: every
-/// worker/group owns a disjoint (token, o) index set.
-struct SharedOut(*mut f32);
-unsafe impl Send for SharedOut {}
-unsafe impl Sync for SharedOut {}
+/// Raw output pointer so workers (and the batched kernel's per-token
+/// writebacks) can write disjoint cells of one output buffer.
+/// Soundness argument at each use site: every worker/group owns a
+/// disjoint (token, o) index set.
+type SharedOut = SharedMut<f32>;
 
 /// Per-token scratch: byte-chunk LUTs + group sums.  Reused across calls
 /// to keep the decode loop allocation-free.
@@ -172,17 +170,11 @@ pub fn gemv_lut_parallel(slices: &[PackedSlice], base: &GroupParams,
     if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT {
         return gemv_lut(slices, base, lut, active, out);
     }
-    let n_chunks = pool.size();
-    let chunk = (d_out + n_chunks - 1) / n_chunks;
     let optr = SharedOut(out.as_mut_ptr());
-    pool.parallel_for(n_chunks, |ci| {
-        let o0 = ci * chunk;
-        let o1 = ((ci + 1) * chunk).min(d_out);
-        if o0 >= o1 {
-            return;
-        }
-        // SAFETY: chunks cover disjoint o-ranges of `out`, so each
-        // worker materialises &mut only over its own cells.
+    pool.parallel_chunks(d_out, |o0, o1| {
+        // SAFETY: parallel_chunks hands out disjoint o-ranges of
+        // `out`, so each worker materialises &mut only over its own
+        // cells.
         let rows = unsafe {
             std::slice::from_raw_parts_mut(optr.0.add(o0), o1 - o0)
         };
@@ -595,7 +587,7 @@ pub fn gemm_lut_batch(slices: &[PackedSlice], base: &GroupParams,
 }
 
 /// [`gemm_lut_batch`] parallelised over contiguous d_out chunks with
-/// `ThreadPool::parallel_for`; every worker walks all mask groups over
+/// `ThreadPool::parallel_chunks`; every worker walks all mask groups over
 /// its own output-channel range, so plane words still stream once per
 /// (group, worker) and writes stay disjoint.
 pub fn gemm_lut_batch_parallel(slices: &[PackedSlice],
@@ -611,16 +603,9 @@ pub fn gemm_lut_batch_parallel(slices: &[PackedSlice],
         return;
     }
     let groups = mask_groups(&batch.masks[..t]);
-    let n_chunks = pool.size();
-    let chunk = (d_out + n_chunks - 1) / n_chunks;
     let optr = SharedOut(out.as_mut_ptr());
     let groups = &groups;
-    pool.parallel_for(n_chunks, |ci| {
-        let o0 = ci * chunk;
-        let o1 = ((ci + 1) * chunk).min(d_out);
-        if o0 >= o1 {
-            return;
-        }
+    pool.parallel_chunks(d_out, |o0, o1| {
         for g in groups {
             gemm_lut_group(slices, base, batch, g, o0, o1, &optr);
         }

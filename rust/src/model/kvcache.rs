@@ -1,54 +1,121 @@
-//! Per-sequence KV cache with slab allocation.
+//! Per-sequence KV cache with head-major slab allocation.
 //!
 //! The coordinator serves many concurrent sequences; each gets a cache
 //! slot sized to max_seq_len.  The manager tracks allocation so the
 //! scheduler can apply backpressure when memory runs out (Fig. 7-style
 //! memory accounting feeds from here too).
+//!
+//! Layout: `[kv_head][pos][head_dim]` slabs (head-major), not the
+//! position-major `[pos][kv_head * head_dim]` rows a naive append
+//! would suggest.  The attention kernel walks one head's keys/values
+//! over *many* positions (`model/attention.rs`), so head-major keeps
+//! its score and value loops streaming contiguous memory; the layout
+//! cost is paid once, as a strided scatter when a block of fresh K/V
+//! rows lands (the fused RoPE writer `attention::append_kv_block`, or
+//! `push` on the scalar-oracle path).
 
-/// KV tensors of one sequence: (max_seq, n_kv_heads * head_dim) each.
+/// KV tensors of one sequence, one layer:
+/// `(n_kv_heads, max_seq, head_dim)` slabs for K and V.
 pub struct KvCache {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
     pub len: usize,
-    pub width: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
     pub max_seq: usize,
 }
 
 impl KvCache {
-    pub fn new(max_seq: usize, width: usize) -> KvCache {
+    pub fn new(max_seq: usize, n_kv_heads: usize,
+               head_dim: usize) -> KvCache {
         KvCache {
-            k: vec![0f32; max_seq * width],
-            v: vec![0f32; max_seq * width],
+            k: vec![0f32; n_kv_heads * max_seq * head_dim],
+            v: vec![0f32; n_kv_heads * max_seq * head_dim],
             len: 0,
-            width,
+            n_kv_heads,
+            head_dim,
             max_seq,
         }
+    }
+
+    /// Row width of one position across all kv heads.
+    pub fn width(&self) -> usize {
+        self.n_kv_heads * self.head_dim
     }
 
     pub fn reset(&mut self) {
         self.len = 0;
     }
 
-    /// Append one position's K/V rows; returns the position index.
-    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> usize {
-        assert!(self.len < self.max_seq, "kv cache overflow");
+    /// Claim `t` fresh positions; returns the first.  Callers write the
+    /// claimed rows through the `*_row_mut` accessors (or the block
+    /// writers below) — this is what lets the prefill path land QKV
+    /// results in the slab directly instead of staging row copies.
+    pub fn reserve(&mut self, t: usize) -> usize {
+        assert!(self.len + t <= self.max_seq, "kv cache overflow");
         let pos = self.len;
-        self.k[pos * self.width..(pos + 1) * self.width]
-            .copy_from_slice(k_row);
-        self.v[pos * self.width..(pos + 1) * self.width]
-            .copy_from_slice(v_row);
-        self.len += 1;
+        self.len += t;
+        pos
+    }
+
+    /// Append one position's head-interleaved `(n_kv_heads * head_dim)`
+    /// K/V rows (the scalar-oracle path); returns the position index.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> usize {
+        let hd = self.head_dim;
+        debug_assert_eq!(k_row.len(), self.width());
+        debug_assert_eq!(v_row.len(), self.width());
+        let pos = self.reserve(1);
+        for h in 0..self.n_kv_heads {
+            let base = self.slab_off(h, pos);
+            self.k[base..base + hd]
+                .copy_from_slice(&k_row[h * hd..(h + 1) * hd]);
+            self.v[base..base + hd]
+                .copy_from_slice(&v_row[h * hd..(h + 1) * hd]);
+        }
         pos
     }
 
     #[inline]
-    pub fn k_at(&self, pos: usize) -> &[f32] {
-        &self.k[pos * self.width..(pos + 1) * self.width]
+    fn slab_off(&self, h: usize, pos: usize) -> usize {
+        (h * self.max_seq + pos) * self.head_dim
+    }
+
+    /// Head `h`'s contiguous `(len, head_dim)` key slab.
+    #[inline]
+    pub fn k_head(&self, h: usize) -> &[f32] {
+        let lo = h * self.max_seq * self.head_dim;
+        &self.k[lo..lo + self.len * self.head_dim]
+    }
+
+    /// Head `h`'s contiguous `(len, head_dim)` value slab.
+    #[inline]
+    pub fn v_head(&self, h: usize) -> &[f32] {
+        let lo = h * self.max_seq * self.head_dim;
+        &self.v[lo..lo + self.len * self.head_dim]
     }
 
     #[inline]
-    pub fn v_at(&self, pos: usize) -> &[f32] {
-        &self.v[pos * self.width..(pos + 1) * self.width]
+    pub fn k_head_at(&self, h: usize, pos: usize) -> &[f32] {
+        let lo = self.slab_off(h, pos);
+        &self.k[lo..lo + self.head_dim]
+    }
+
+    #[inline]
+    pub fn v_head_at(&self, h: usize, pos: usize) -> &[f32] {
+        let lo = self.slab_off(h, pos);
+        &self.v[lo..lo + self.head_dim]
+    }
+
+    #[inline]
+    pub fn k_head_row_mut(&mut self, h: usize, pos: usize) -> &mut [f32] {
+        let lo = self.slab_off(h, pos);
+        &mut self.k[lo..lo + self.head_dim]
+    }
+
+    #[inline]
+    pub fn v_head_row_mut(&mut self, h: usize, pos: usize) -> &mut [f32] {
+        let lo = self.slab_off(h, pos);
+        &mut self.v[lo..lo + self.head_dim]
     }
 
     pub fn nbytes(&self) -> usize {
@@ -62,9 +129,11 @@ pub struct SequenceKv {
 }
 
 impl SequenceKv {
-    pub fn new(n_layers: usize, max_seq: usize, width: usize) -> SequenceKv {
+    pub fn new(n_layers: usize, max_seq: usize, n_kv_heads: usize,
+               head_dim: usize) -> SequenceKv {
         SequenceKv {
-            layers: (0..n_layers).map(|_| KvCache::new(max_seq, width))
+            layers: (0..n_layers)
+                .map(|_| KvCache::new(max_seq, n_kv_heads, head_dim))
                 .collect(),
         }
     }
@@ -90,27 +159,50 @@ mod tests {
 
     #[test]
     fn push_and_read() {
-        let mut c = KvCache::new(4, 2);
+        let mut c = KvCache::new(4, 1, 2);
         assert_eq!(c.push(&[1.0, 2.0], &[3.0, 4.0]), 0);
         assert_eq!(c.push(&[5.0, 6.0], &[7.0, 8.0]), 1);
-        assert_eq!(c.k_at(0), &[1.0, 2.0]);
-        assert_eq!(c.v_at(1), &[7.0, 8.0]);
+        assert_eq!(c.k_head_at(0, 0), &[1.0, 2.0]);
+        assert_eq!(c.v_head_at(0, 1), &[7.0, 8.0]);
+        assert_eq!(c.k_head(0), &[1.0, 2.0, 5.0, 6.0]);
         assert_eq!(c.len, 2);
         c.reset();
         assert_eq!(c.len, 0);
     }
 
     #[test]
+    fn head_major_scatter() {
+        // 2 kv heads x head_dim 2: interleaved rows land in per-head
+        // slabs, contiguous over positions.
+        let mut c = KvCache::new(3, 2, 2);
+        c.push(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        c.push(&[10.0, 20.0, 30.0, 40.0], &[50.0, 60.0, 70.0, 80.0]);
+        assert_eq!(c.k_head(0), &[1.0, 2.0, 10.0, 20.0]);
+        assert_eq!(c.k_head(1), &[3.0, 4.0, 30.0, 40.0]);
+        assert_eq!(c.v_head(0), &[5.0, 6.0, 50.0, 60.0]);
+        assert_eq!(c.v_head(1), &[7.0, 8.0, 70.0, 80.0]);
+    }
+
+    #[test]
+    fn reserve_claims_positions() {
+        let mut c = KvCache::new(6, 1, 2);
+        assert_eq!(c.reserve(4), 0);
+        assert_eq!(c.len, 4);
+        assert_eq!(c.reserve(2), 4);
+        assert_eq!(c.len, 6);
+    }
+
+    #[test]
     #[should_panic(expected = "overflow")]
     fn overflow_panics() {
-        let mut c = KvCache::new(1, 1);
+        let mut c = KvCache::new(1, 1, 1);
         c.push(&[0.0], &[0.0]);
         c.push(&[0.0], &[0.0]);
     }
 
     #[test]
     fn sequence_kv_sizes() {
-        let s = SequenceKv::new(3, 8, 4);
+        let s = SequenceKv::new(3, 8, 2, 2);
         assert_eq!(s.len(), 0);
         assert_eq!(s.nbytes(), 3 * 2 * 8 * 4 * 4);
     }

@@ -4,6 +4,7 @@
 //! RoPE, optional GQA, SwiGLU); golden vectors exported in the bundle pin
 //! the two implementations together (rust/tests/integration.rs).
 
+pub mod attention;
 pub mod kvcache;
 pub mod transformer;
 pub mod weights;

@@ -1,11 +1,19 @@
 //! Transformer request path: single-token decode with KV cache, plus the
 //! batched block forwards (whole-prompt prefill, coalesced multi-sequence
 //! decode) that feed the weight-stationary LUT-GEMM kernel.
+//!
+//! Attention runs through the blocked online-softmax subsystem in
+//! `model/attention.rs`: RoPE angles come from cached tables, fresh K/V
+//! rows land in the head-major cache slab in one fused rotate+scatter
+//! pass, and a whole block's queries stream the cache in L1-sized tiles
+//! (head-parallel on the shared `ThreadPool`).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::attention::{append_kv_block, attention_block, AttnScratch,
+                       RopeCache};
 use super::kvcache::SequenceKv;
 use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LayerWeights, LinearBackend, ModelConfig,
@@ -13,6 +21,10 @@ use super::weights::{load_fp_dense, load_linear, BackendKind,
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{Precision, Scratch};
 use crate::util::threadpool::ThreadPool;
+
+// Re-exported so existing call sites (benches, analysis probes) keep
+// their `transformer::` paths after the attention split.
+pub use super::attention::{attention_step, rope};
 
 /// Aggregate decode statistics (Fig. 6 / Fig. 7 accounting).
 #[derive(Debug, Clone, Default)]
@@ -78,12 +90,17 @@ pub struct DecodeScratch {
     pub up: Vec<f32>,
     pub ff: Vec<f32>,
     pub mlp_out: Vec<f32>,
-    pub scores: Vec<f32>,
     pub logits: Vec<f32>,
     /// staging copies so linear inputs and outputs can alias disjoint
     /// scratch fields without allocating in the decode loop (§Perf)
     pub stage: Vec<f32>,
     pub engine: Scratch,
+    /// Cached RoPE tables (inverse frequencies once per model shape,
+    /// sin/cos rows grown on demand) — no transcendentals in the token
+    /// loop.
+    pub rope: RopeCache,
+    /// Per-head online-softmax state for the tiled attention kernel.
+    pub attn: AttnScratch,
     /// Multi-token buffers for the batched forwards (prefill, coalesced
     /// decode); grow to the largest block seen, then stay put.
     pub block: BlockScratch,
@@ -156,6 +173,15 @@ fn record_block(stats: &mut DecodeStats, bits: &[usize], layer: usize,
     }
 }
 
+/// Record one batched linear's effective bits into each slot's own
+/// stats accumulator (slot i routed the batch's i-th token).
+fn record_slots(slots: &mut [DecodeSlot], bits: &[usize], layer: usize,
+                lin: usize, slice_bits: usize) {
+    for (s, &b) in slots.iter_mut().zip(bits) {
+        s.stats.record(layer, lin, b, slice_bits);
+    }
+}
+
 pub struct Model {
     pub cfg: ModelConfig,
     pub embed: Vec<f32>,
@@ -206,7 +232,7 @@ impl Model {
 
     pub fn new_scratch(&self) -> DecodeScratch {
         let c = &self.cfg;
-        let dkv = c.n_kv_heads * c.head_dim();
+        let dkv = c.kv_dim();
         let mut engine = Scratch::new(c.d_model.max(c.d_ff), c.group_size,
                                       c.router_hidden, c.n_slices);
         if let Some(p) = &self.pool {
@@ -224,17 +250,18 @@ impl Model {
             up: vec![0f32; c.d_ff],
             ff: vec![0f32; c.d_ff],
             mlp_out: vec![0f32; c.d_model],
-            scores: vec![0f32; c.max_seq_len],
             logits: vec![0f32; c.vocab_size],
             stage: vec![0f32; c.d_model.max(c.d_ff)],
             engine,
+            rope: RopeCache::new(c.head_dim(), c.rope_theta),
+            attn: AttnScratch::new(),
             block: BlockScratch::default(),
         }
     }
 
     pub fn new_kv(&self) -> SequenceKv {
         SequenceKv::new(self.cfg.n_layers, self.cfg.max_seq_len,
-                        self.cfg.n_kv_heads * self.cfg.head_dim())
+                        self.cfg.n_kv_heads, self.cfg.head_dim())
     }
 
     /// Decode one token at position kv.len(); returns logits in
@@ -244,12 +271,13 @@ impl Model {
                        stats: &mut DecodeStats) -> Result<()> {
         let c = &self.cfg;
         let d = c.d_model;
-        let hd = c.head_dim();
         let pos = kv.len();
         anyhow::ensure!(pos < c.max_seq_len, "sequence too long");
         anyhow::ensure!((token as usize) < c.vocab_size, "token oob");
         scratch.x.copy_from_slice(
             &self.embed[token as usize * d..(token as usize + 1) * d]);
+        scratch.rope.ensure(pos + 1);
+        let pool = self.pool.as_deref();
 
         for (li, lw) in self.layers.iter().enumerate() {
             // ---- attention ----
@@ -269,12 +297,11 @@ impl Model {
             let b = run("wv", xn, &mut scratch.v, &mut scratch.engine);
             stats.record(li, 2, b, c.slice_bits);
 
-            rope(&mut scratch.q, pos, hd, c.rope_theta);
-            rope(&mut scratch.k, pos, hd, c.rope_theta);
-            kv.layers[li].push(&scratch.k, &scratch.v);
-
-            attention_step(&scratch.q, &kv.layers[li], c, pos,
-                           &mut scratch.scores, &mut scratch.ctx);
+            scratch.rope.apply(&mut scratch.q, pos);
+            append_kv_block(&mut kv.layers[li], &scratch.rope,
+                            &scratch.k, &scratch.v, 1);
+            attention_block(c, &scratch.q, &kv.layers[li], pos, 1,
+                            &mut scratch.attn, pool, &mut scratch.ctx);
             scratch.stage[..d].copy_from_slice(&scratch.ctx);
             let b = run("wo", &scratch.stage[..d], &mut scratch.attn_out,
                         &mut scratch.engine);
@@ -342,8 +369,7 @@ impl Model {
             return Ok(());
         }
         let d = c.d_model;
-        let hd = c.head_dim();
-        let dkv = c.n_kv_heads * hd;
+        let dkv = c.kv_dim();
         let d_ff = c.d_ff;
         let pos0 = kv.len();
         anyhow::ensure!(pos0 + t <= c.max_seq_len, "sequence too long");
@@ -353,6 +379,8 @@ impl Model {
         let need_logits = all_logits.is_some();
         scratch.block.ensure(t, d, dkv, d_ff,
                              if need_logits { c.vocab_size } else { 0 });
+        scratch.rope.ensure(pos0 + t);
+        let pool = self.pool.as_deref();
         let bb = &mut scratch.block;
         for (i, &tok) in tokens.iter().enumerate() {
             bb.xs[i * d..(i + 1) * d].copy_from_slice(
@@ -384,19 +412,20 @@ impl Model {
                                 &mut scratch.engine, &mut bb.v[..t * dkv]);
             record_block(stats, &scratch.engine.batch.bits, li, 2,
                          c.slice_bits);
-            // causal attention stays sequential in position: token i's
-            // K/V rows are in the cache before token i attends.
+            // RoPE from the cached tables, then land the whole block's
+            // K/V in the head-major cache slab (fused rotate+scatter),
+            // then one tiled attention pass over all t queries —
+            // causality is masked inside the kernel instead of being
+            // sequenced through per-position pushes.
             for i in 0..t {
-                let pos = pos0 + i;
-                rope(&mut bb.q[i * d..(i + 1) * d], pos, hd, c.rope_theta);
-                rope(&mut bb.k[i * dkv..(i + 1) * dkv], pos, hd,
-                     c.rope_theta);
-                kv.layers[li].push(&bb.k[i * dkv..(i + 1) * dkv],
-                                   &bb.v[i * dkv..(i + 1) * dkv]);
-                attention_step(&bb.q[i * d..(i + 1) * d], &kv.layers[li],
-                               c, pos, &mut scratch.scores,
-                               &mut bb.ctx[i * d..(i + 1) * d]);
+                scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d],
+                                   pos0 + i);
             }
+            append_kv_block(&mut kv.layers[li], &scratch.rope,
+                            &bb.k[..t * dkv], &bb.v[..t * dkv], t);
+            attention_block(c, &bb.q[..t * d], &kv.layers[li], pos0, t,
+                            &mut scratch.attn, pool,
+                            &mut bb.ctx[..t * d]);
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
                                 &mut scratch.engine,
                                 &mut bb.attn_out[..t * d]);
@@ -507,16 +536,19 @@ impl Model {
             return Ok(());
         }
         let d = c.d_model;
-        let hd = c.head_dim();
-        let dkv = c.n_kv_heads * hd;
+        let dkv = c.kv_dim();
         let d_ff = c.d_ff;
+        let mut max_pos = 0usize;
         for s in slots.iter() {
             anyhow::ensure!(s.kv.len() < c.max_seq_len,
                             "sequence too long");
             anyhow::ensure!((s.token as usize) < c.vocab_size,
                             "token oob");
+            max_pos = max_pos.max(s.kv.len());
         }
         scratch.block.ensure(t, d, dkv, d_ff, c.vocab_size);
+        scratch.rope.ensure(max_pos + 1);
+        let pool = self.pool.as_deref();
         let bb = &mut scratch.block;
         for (i, s) in slots.iter().enumerate() {
             let tok = s.token as usize;
@@ -531,40 +563,37 @@ impl Model {
             }
             lw.wq.forward_batch(&bb.xn[..t * d], precision,
                                 &mut scratch.engine, &mut bb.q[..t * d]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 0, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 0,
+                         c.slice_bits);
             lw.wk.forward_batch(&bb.xn[..t * d], precision,
                                 &mut scratch.engine, &mut bb.k[..t * dkv]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 1, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 1,
+                         c.slice_bits);
             lw.wv.forward_batch(&bb.xn[..t * d], precision,
                                 &mut scratch.engine, &mut bb.v[..t * dkv]);
+            record_slots(slots, &scratch.engine.batch.bits, li, 2,
+                         c.slice_bits);
             for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 2, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
-            for (i, s) in slots.iter_mut().enumerate() {
-                let pos = s.kv.len();
-                rope(&mut bb.q[i * d..(i + 1) * d], pos, hd, c.rope_theta);
-                rope(&mut bb.k[i * dkv..(i + 1) * dkv], pos, hd,
-                     c.rope_theta);
-                s.kv.layers[li].push(&bb.k[i * dkv..(i + 1) * dkv],
-                                     &bb.v[i * dkv..(i + 1) * dkv]);
-                attention_step(&bb.q[i * d..(i + 1) * d], &s.kv.layers[li],
-                               c, pos, &mut scratch.scores,
-                               &mut bb.ctx[i * d..(i + 1) * d]);
+                // the slot's position at this layer is the layer's own
+                // cache length (SequenceKv::len() reads layer 0, whose
+                // row for this token has already landed once li > 0 —
+                // using it here shifted RoPE by one position and
+                // attended over an uninitialised row for layers >= 1)
+                let pos = s.kv.layers[li].len;
+                scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d], pos);
+                append_kv_block(&mut s.kv.layers[li], &scratch.rope,
+                                &bb.k[i * dkv..(i + 1) * dkv],
+                                &bb.v[i * dkv..(i + 1) * dkv], 1);
+                attention_block(c, &bb.q[i * d..(i + 1) * d],
+                                &s.kv.layers[li], pos, 1,
+                                &mut scratch.attn, pool,
+                                &mut bb.ctx[i * d..(i + 1) * d]);
             }
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
                                 &mut scratch.engine,
                                 &mut bb.attn_out[..t * d]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 3, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 3,
+                         c.slice_bits);
             for (xi, ai) in bb.xs[..t * d].iter_mut()
                 .zip(&bb.attn_out[..t * d]) {
                 *xi += ai;
@@ -577,17 +606,13 @@ impl Model {
             lw.w_gate.forward_batch(&bb.xn[..t * d], precision,
                                     &mut scratch.engine,
                                     &mut bb.gate[..t * d_ff]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 4, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 4,
+                         c.slice_bits);
             lw.w_up.forward_batch(&bb.xn[..t * d], precision,
                                   &mut scratch.engine,
                                   &mut bb.up[..t * d_ff]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 5, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 5,
+                         c.slice_bits);
             for (f, (g, u)) in bb.ff[..t * d_ff].iter_mut()
                 .zip(bb.gate[..t * d_ff].iter().zip(&bb.up[..t * d_ff])) {
                 *f = silu(*g) * u;
@@ -595,10 +620,8 @@ impl Model {
             lw.w_down.forward_batch(&bb.ff[..t * d_ff], precision,
                                     &mut scratch.engine,
                                     &mut bb.mlp_out[..t * d]);
-            for (i, s) in slots.iter_mut().enumerate() {
-                s.stats.record(li, 6, scratch.engine.batch.bits[i],
-                               c.slice_bits);
-            }
+            record_slots(slots, &scratch.engine.batch.bits, li, 6,
+                         c.slice_bits);
             for (xi, mi) in bb.xs[..t * d].iter_mut()
                 .zip(&bb.mlp_out[..t * d]) {
                 *xi += mi;
@@ -695,67 +718,6 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Interleaved-pair RoPE over heads laid out contiguously in `v`.
-pub fn rope(v: &mut [f32], pos: usize, head_dim: usize, theta: f32) {
-    let half = head_dim / 2;
-    let n_heads = v.len() / head_dim;
-    for h in 0..n_heads {
-        let base = h * head_dim;
-        for i in 0..half {
-            let freq = 1.0 / theta.powf(i as f32 / half as f32);
-            let ang = pos as f32 * freq;
-            let (s, c) = ang.sin_cos();
-            let a = v[base + 2 * i];
-            let b = v[base + 2 * i + 1];
-            v[base + 2 * i] = a * c - b * s;
-            v[base + 2 * i + 1] = a * s + b * c;
-        }
-    }
-}
-
-/// One-position causal attention over the cache (GQA-aware).
-pub fn attention_step(q: &[f32], cache: &super::kvcache::KvCache,
-                      cfg: &ModelConfig, pos: usize, scores: &mut [f32],
-                      ctx: &mut [f32]) {
-    let hd = cfg.head_dim();
-    let rep = cfg.n_heads / cfg.n_kv_heads;
-    let scale = 1.0 / (hd as f32).sqrt();
-    ctx.fill(0.0);
-    for h in 0..cfg.n_heads {
-        let kvh = h / rep;
-        let qh = &q[h * hd..(h + 1) * hd];
-        // scores
-        let mut maxs = f32::NEG_INFINITY;
-        for p in 0..=pos {
-            let krow = cache.k_at(p);
-            let kh = &krow[kvh * hd..(kvh + 1) * hd];
-            let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
-            scores[p] = dot * scale;
-            maxs = maxs.max(scores[p]);
-        }
-        // softmax
-        let mut denom = 0f32;
-        for s in scores[..=pos].iter_mut() {
-            *s = (*s - maxs).exp();
-            denom += *s;
-        }
-        let inv = 1.0 / denom;
-        // weighted sum of V
-        let out = &mut ctx[h * hd..(h + 1) * hd];
-        for p in 0..=pos {
-            let w = scores[p] * inv;
-            if w < 1e-8 {
-                continue;
-            }
-            let vrow = cache.v_at(p);
-            let vh = &vrow[kvh * hd..(kvh + 1) * hd];
-            for (o, vv) in out.iter_mut().zip(vh) {
-                *o += w * vv;
-            }
-        }
-    }
-}
-
 pub fn argmax(v: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in v.iter().enumerate() {
@@ -806,24 +768,5 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
         assert_eq!(argmax(&[2.0]), 0);
-    }
-
-    #[test]
-    fn attention_uniform_values() {
-        // all K identical -> uniform weights -> ctx = mean of V
-        let cfg = ModelConfig {
-            name: "t".into(), vocab_size: 4, d_model: 4, n_layers: 1,
-            n_heads: 1, n_kv_heads: 1, d_ff: 4, max_seq_len: 8,
-            rope_theta: 1e4, norm_eps: 1e-5, n_slices: 4, slice_bits: 2,
-            group_size: 4, router_hidden: 4,
-        };
-        let mut cache = super::super::kvcache::KvCache::new(8, 4);
-        cache.push(&[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0, 0.0, 0.0]);
-        cache.push(&[1.0, 0.0, 0.0, 0.0], &[3.0, 0.0, 0.0, 0.0]);
-        let q = vec![1.0, 0.0, 0.0, 0.0];
-        let mut scores = vec![0f32; 8];
-        let mut ctx = vec![0f32; 4];
-        attention_step(&q, &cache, &cfg, 1, &mut scores, &mut ctx);
-        assert!((ctx[0] - 2.0).abs() < 1e-5);
     }
 }

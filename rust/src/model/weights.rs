@@ -34,6 +34,11 @@ impl ModelConfig {
         self.d_model / self.n_heads
     }
 
+    /// Width of one position's K (or V) row across all kv heads.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
     pub fn from_bundle(b: &Bundle) -> Result<ModelConfig> {
         let m = |k: &str| b.cfg_usize("model", k);
         let q = |k: &str| b.cfg_usize("quant", k);
@@ -58,7 +63,7 @@ impl ModelConfig {
 
     pub fn linear_dims(&self, name: &str) -> (usize, usize) {
         let d = self.d_model;
-        let dkv = self.n_kv_heads * self.head_dim();
+        let dkv = self.kv_dim();
         match name {
             "wq" | "wo" => (d, d),
             "wk" | "wv" => (d, dkv),

@@ -22,6 +22,16 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Raw mutable-pointer wrapper so fork-join workers can write disjoint
+/// cells/ranges of one shared buffer (the kernel wrappers in
+/// `mobiq/gemv.rs` and the attention kernel both partition an output
+/// across workers this way).  Carrying it across threads is only sound
+/// when every worker touches a disjoint index set — state the argument
+/// at each use site.
+pub struct SharedMut<T>(pub *mut T);
+unsafe impl<T: Send> Send for SharedMut<T> {}
+unsafe impl<T: Send> Sync for SharedMut<T> {}
+
 struct Workers {
     tx: mpsc::Sender<Job>,
     handles: Vec<thread::JoinHandle<()>>,
@@ -75,6 +85,28 @@ impl ThreadPool {
 
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
         self.workers().tx.send(Box::new(job)).expect("pool alive");
+    }
+
+    /// Partition `0..n` into at most `size` contiguous ranges and run
+    /// `f(start, end)` for each, blocking until all complete.  The
+    /// contiguity matters for locality-sensitive work: the attention
+    /// kernel hands each worker a run of adjacent heads so GQA head
+    /// groups sharing a KV slab stay on one worker's warm cache, and
+    /// the kernel wrappers carve contiguous output-channel ranges.
+    pub fn parallel_chunks(&self, n: usize,
+                           f: impl Fn(usize, usize) + Sync) {
+        if n == 0 {
+            return;
+        }
+        let n_chunks = self.size.min(n);
+        let chunk = (n + n_chunks - 1) / n_chunks;
+        self.parallel_for(n_chunks, |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(n);
+            if lo < hi {
+                f(lo, hi);
+            }
+        });
     }
 
     /// Run `f(chunk_index)` for each index in 0..n, blocking until all
@@ -168,6 +200,26 @@ mod tests {
     fn parallel_for_empty() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_chunks_cover_exactly_once() {
+        for (workers, n) in [(1usize, 5usize), (3, 7), (4, 4), (8, 3)] {
+            let pool = ThreadPool::new(workers);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0))
+                .collect();
+            pool.parallel_chunks(n, |lo, hi| {
+                assert!(lo < hi && hi <= n);
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1,
+                           "workers={workers} n={n} index {i}");
+            }
+        }
+        ThreadPool::new(2).parallel_chunks(0, |_, _| panic!("no work"));
     }
 
     #[test]

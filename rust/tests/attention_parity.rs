@@ -1,0 +1,195 @@
+//! Tiled attention vs scalar oracle, and block-prefill vs per-token
+//! decode parity at prefill chunk boundaries.  All on synthetic
+//! models/caches, so no `make artifacts` is needed.
+//!
+//! Tolerances are 1e-4 absolute: the tiled kernel's online softmax
+//! reorders FP accumulation relative to the two-pass oracle, so the
+//! results are equal only up to rounding.
+
+use mobiquant::bench_support::{synth_model, synth_model_shaped};
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::attention::{attention_block, attention_step,
+                                  AttnScratch};
+use mobiquant::model::kvcache::KvCache;
+use mobiquant::model::transformer::{DecodeStats, MAX_PREFILL_BLOCK};
+use mobiquant::model::weights::ModelConfig;
+use mobiquant::util::prng::Pcg;
+use mobiquant::util::threadpool::ThreadPool;
+
+const TOL: f32 = 1e-4;
+
+fn attn_cfg(n_heads: usize, n_kv_heads: usize, hd: usize,
+            max_seq: usize) -> ModelConfig {
+    ModelConfig {
+        name: "parity".into(),
+        vocab_size: 16,
+        d_model: n_heads * hd,
+        n_layers: 1,
+        n_heads,
+        n_kv_heads,
+        d_ff: 16,
+        max_seq_len: max_seq,
+        rope_theta: 1e4,
+        norm_eps: 1e-5,
+        n_slices: 4,
+        slice_bits: 2,
+        group_size: 32,
+        router_hidden: 8,
+    }
+}
+
+fn filled_cache(rng: &mut Pcg, n_kv: usize, hd: usize,
+                positions: usize) -> KvCache {
+    let mut cache = KvCache::new(positions, n_kv, hd);
+    let w = n_kv * hd;
+    for _ in 0..positions {
+        let k = rng.normal_vec(w, 1.0);
+        let v = rng.normal_vec(w, 1.0);
+        cache.push(&k, &v);
+    }
+    cache
+}
+
+/// Oracle ctx rows for queries `pos0..pos0 + t` (one scalar
+/// `attention_step` per query position).
+fn oracle_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
+                pos0: usize, t: usize) -> Vec<f32> {
+    let d = cfg.d_model;
+    let mut scores = vec![0f32; cfg.max_seq_len];
+    let mut want = vec![0f32; t * d];
+    for i in 0..t {
+        attention_step(&q[i * d..(i + 1) * d], cache, cfg, pos0 + i,
+                       &mut scores, &mut want[i * d..(i + 1) * d]);
+    }
+    want
+}
+
+/// Tiled kernel (serial and head-parallel) vs the scalar oracle across
+/// MHA and GQA head configs, tile-boundary-straddling contexts, and
+/// block sizes from single-query decode up to a full prefill block.
+#[test]
+fn tiled_matches_scalar_oracle_across_gqa() {
+    let pool = ThreadPool::new(3);
+    let hd = 16usize;
+    for &(n_heads, n_kv) in &[(4usize, 4usize), (4, 2), (8, 2), (8, 1)] {
+        let max_seq = 256; // crosses several ATTN_TILE boundaries
+        let cfg = attn_cfg(n_heads, n_kv, hd, max_seq);
+        let d = cfg.d_model;
+        let mut rng = Pcg::new(100 + n_heads as u64 * 10 + n_kv as u64);
+        let cache = filled_cache(&mut rng, n_kv, hd, max_seq);
+        // the last two shapes clear ATTN_PARALLEL_MIN_WORK (t*(pos0+t)
+        // *hd >= 2^17), so every head config exercises the pooled path
+        // too, not just the serial fallback
+        for &(pos0, t) in &[(0usize, 1usize), (0, 33), (255, 1),
+                            (100, 57), (192, 64)] {
+            if pos0 + t > max_seq {
+                continue;
+            }
+            let q = rng.normal_vec(t * d, 1.0);
+            let want = oracle_block(&cfg, &q, &cache, pos0, t);
+
+            let mut got = vec![0f32; t * d];
+            let mut sc = AttnScratch::new();
+            attention_block(&cfg, &q, &cache, pos0, t, &mut sc, None,
+                            &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < TOL,
+                        "{n_heads}h/{n_kv}kv pos0={pos0} t={t} serial \
+                         ctx[{i}]: tiled {a} vs oracle {b}");
+            }
+
+            let mut got_p = vec![0f32; t * d];
+            attention_block(&cfg, &q, &cache, pos0, t, &mut sc,
+                            Some(&pool), &mut got_p);
+            // threading must not change results at all: head order
+            // inside each worker is fixed and heads are independent
+            assert_eq!(got, got_p,
+                       "{n_heads}h/{n_kv}kv pos0={pos0} t={t}: \
+                        parallel diverged from serial");
+        }
+    }
+}
+
+/// Above the parallel work gate, the pooled path must engage and stay
+/// bit-identical to serial (big enough block to clear
+/// ATTN_PARALLEL_MIN_WORK).
+#[test]
+fn parallel_path_bit_identical_on_large_blocks() {
+    let pool = ThreadPool::new(4);
+    let (n_heads, n_kv, hd, max_seq) = (8usize, 2usize, 16usize, 256);
+    let cfg = attn_cfg(n_heads, n_kv, hd, max_seq);
+    let d = cfg.d_model;
+    let mut rng = Pcg::new(2024);
+    let cache = filled_cache(&mut rng, n_kv, hd, max_seq);
+    let (pos0, t) = (max_seq - 64, 64usize);
+    let q = rng.normal_vec(t * d, 1.0);
+
+    let mut serial = vec![0f32; t * d];
+    let mut sc = AttnScratch::new();
+    attention_block(&cfg, &q, &cache, pos0, t, &mut sc, None,
+                    &mut serial);
+    let mut parallel = vec![0f32; t * d];
+    attention_block(&cfg, &q, &cache, pos0, t, &mut sc, Some(&pool),
+                    &mut parallel);
+    assert_eq!(serial, parallel);
+
+    let want = oracle_block(&cfg, &q, &cache, pos0, t);
+    for (i, (a, b)) in serial.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < TOL, "ctx[{i}]: {a} vs oracle {b}");
+    }
+}
+
+fn per_token_logits(model: &mobiquant::model::Model, tokens: &[u32],
+                    prec: Precision) -> Vec<f32> {
+    let mut kv = model.new_kv();
+    let mut scratch = model.new_scratch();
+    let mut stats = DecodeStats::new(model.cfg.n_layers);
+    let mut out = Vec::with_capacity(tokens.len()
+        * model.cfg.vocab_size);
+    for &tok in tokens {
+        model.decode_step(tok, &mut kv, prec, &mut scratch, &mut stats)
+            .unwrap();
+        out.extend_from_slice(&scratch.logits);
+    }
+    out
+}
+
+fn check_block_vs_per_token(model: &mobiquant::model::Model,
+                            n_tokens: usize, label: &str) {
+    let tokens: Vec<u32> = (0..n_tokens)
+        .map(|i| ((i * 7 + 3) % model.cfg.vocab_size) as u32)
+        .collect();
+    let prec = Precision::Fixed(2);
+    let block = model.forward_logits(&tokens, prec).unwrap();
+    let per_tok = per_token_logits(model, &tokens, prec);
+    assert_eq!(block.len(), per_tok.len());
+    for (i, (a, b)) in block.iter().zip(&per_tok).enumerate() {
+        assert!((a - b).abs() < TOL,
+                "{label}: logits[{i}] block {a} vs per-token {b}");
+    }
+}
+
+/// Prefill chunk boundaries: block-prefill logits must match per-token
+/// decode right below, at, and past the MAX_PREFILL_BLOCK chunking
+/// seam (T = 63 / 64 / 129).
+#[test]
+fn prefill_chunk_boundary_parity() {
+    let model = synth_model_shaped(7, 4, 2, 160);
+    for t in [MAX_PREFILL_BLOCK - 1, MAX_PREFILL_BLOCK,
+              2 * MAX_PREFILL_BLOCK + 1] {
+        check_block_vs_per_token(&model, t, &format!("T={t}"));
+    }
+}
+
+/// End-to-end GQA sweep (n_kv_heads < n_heads included) on the default
+/// synthetic model shape and two others; block length crosses one
+/// attention tile boundary.
+#[test]
+fn gqa_model_block_vs_per_token_parity() {
+    check_block_vs_per_token(&synth_model(11), 40, "default 4h/2kv");
+    for &(n_heads, n_kv) in &[(4usize, 4usize), (8, 2)] {
+        let model = synth_model_shaped(23, n_heads, n_kv, 128);
+        check_block_vs_per_token(&model, 40,
+                                 &format!("{n_heads}h/{n_kv}kv"));
+    }
+}
