@@ -56,6 +56,12 @@ impl<'m> Scheduler<'m> {
         // would show up as a latency blip on whichever request first
         // reaches a new position.  One-off cost at server start.
         scratch.rope.ensure(model.cfg.max_seq_len);
+        // Same for the fork-join workers: they normally spawn lazily
+        // on the first parallel dispatch, which would charge thread
+        // creation to the first request's tick.
+        if let Some(pool) = &model.pool {
+            pool.warm();
+        }
         Scheduler {
             scratch,
             model,

@@ -19,11 +19,27 @@
 //!   serving workload traces.
 //! * [`baselines`] — kernel simulators for AnyPrecisionLLM, AnyBCQ,
 //!   QuIP#/QTIP-style VQ and ABQ-LLM comparisons (Tab. 1, Fig. 7).
-//! * [`runtime`] — PJRT client (xla crate) executing the AOT HLO modules.
+//! * [`runtime`] — PJRT client (xla crate) executing the AOT HLO
+//!   modules; API-compatible stub unless built with `--features pjrt`.
 //! * [`coordinator`] — elastic serving: request queue, dynamic batcher,
 //!   precision controller, scheduler, metrics.
 //! * [`analysis`] — outlier-migration / router-correlation analyses
 //!   backing Figs. 1, 5, 6.
+
+// Deliberate idiom of this codebase that clippy's style lints dislike:
+// index-loop kernels (explicit o/g/w indices mirror the paper's math),
+// many-argument kernel entry points, and scratch types whose `new` is
+// not `Default` on purpose.  Correctness lints stay on — CI runs
+// `cargo clippy -- -D warnings`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil,
+    clippy::new_without_default,
+    clippy::len_without_is_empty,
+    clippy::many_single_char_names,
+    clippy::type_complexity
+)]
 
 pub mod analysis;
 pub mod baselines;

@@ -7,6 +7,9 @@
 //!   serve     — drive the elastic server over a synthetic request trace
 //!   pjrt      — smoke the PJRT runtime against an AOT HLO module
 
+// Same style-lint stance as lib.rs (CI runs clippy with -D warnings).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 use std::sync::Arc;
 
 use anyhow::{Context, Result};

@@ -155,13 +155,18 @@ pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
     gemv_lut_range(slices, base, lut, active, 0, base.d_out, out);
 }
 
-/// d_out below which the scoped-spawn cost of `parallel_for` eats the
-/// win; tuned alongside NIBBLE_THRESHOLD (EXPERIMENTS.md §Perf).
-const PARALLEL_MIN_DOUT: usize = 512;
+/// d_out below which the fork-join dispatch cost of `parallel_chunks`
+/// eats the win.  Re-derived for the persistent pool (EXPERIMENTS.md
+/// §Runtime): a dispatch now costs a condvar wake + join (~2 µs, was
+/// tens of µs of scoped thread spawns), so the break-even moved from
+/// ~512 output channels down to ~128 — each worker still keeps enough
+/// contiguous channels for the plane stream to amortize.
+pub const PARALLEL_MIN_DOUT: usize = 128;
 
-/// `gemv_lut` parallelised over contiguous d_out chunks.  Falls back to
-/// the serial kernel for size-1 pools or small layers where the fork
-/// overhead dominates.
+/// `gemv_lut` parallelised over contiguous d_out chunks on the
+/// persistent fork-join pool.  Falls back to the serial kernel for
+/// size-1 pools or small layers where even the cheap dispatch
+/// dominates.
 pub fn gemv_lut_parallel(slices: &[PackedSlice], base: &GroupParams,
                          lut: &TokenLut, active: &[bool],
                          pool: &ThreadPool, out: &mut [f32]) {

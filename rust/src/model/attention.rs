@@ -20,6 +20,10 @@
 //!   contiguous head chunks on the shared [`ThreadPool`].  Each K/V tile
 //!   is streamed from the head-major slab once and reused by every query
 //!   whose causal range covers it.
+//! * [`attention_cross_slots`] — the coalesced decode tick's attention:
+//!   every slot's single query in one fork-join dispatch over the
+//!   flattened `slot x head` grid (same per-head kernel, so cross-slot
+//!   results are bit-identical to the per-slot loop it replaces).
 //!
 //! Determinism note: position tiles are anchored at absolute position 0
 //! (`[0, TILE)`, `[TILE, 2*TILE)`, ...), independent of where a block
@@ -38,13 +42,15 @@ use crate::util::threadpool::{SharedMut, ThreadPool};
 /// whole query block (<= MAX_PREFILL_BLOCK) reuses it.
 pub const ATTN_TILE: usize = 32;
 
-/// Minimum `(query, key) pair x head_dim` volume before the scoped
-/// fork/join of `parallel_chunks` is worth paying.  `thread::scope`
-/// spawns fresh OS threads per call (tens of microseconds), so the
-/// gate is deliberately high: prefill blocks clear it from ctx ~128 up
-/// while single-query decode stays serial until multi-thousand-token
-/// contexts (hd 64: ctx >= 2048).
-pub const ATTN_PARALLEL_MIN_WORK: usize = 1 << 17;
+/// Minimum `(query, key) pair x head_dim` volume before the fork-join
+/// dispatch of `parallel_chunks` is worth paying.  Re-derived for the
+/// persistent pool (EXPERIMENTS.md §Runtime): a dispatch costs a
+/// condvar wake + join (~2 µs, was tens of µs of scoped spawns), so
+/// the gate dropped 8x from `1 << 17`.  Prefill blocks now clear it
+/// from ctx ~16 up, and single-query decode goes head-parallel from
+/// ctx >= 256 at head_dim 64 (was >= 2048) — which is also what lets
+/// the cross-slot decode dispatch engage at serving batch sizes.
+pub const ATTN_PARALLEL_MIN_WORK: usize = 1 << 14;
 
 // ---------------------------------------------------------------------------
 // RoPE cache
@@ -278,7 +284,7 @@ pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
 
     let work = t * (pos0 + t) * hd;
     let parallel = n_heads > 1 && work >= ATTN_PARALLEL_MIN_WORK
-        && pool.map_or(false, |p| p.size() > 1);
+        && pool.is_some_and(|p| p.size() > 1);
     let cptr = SharedCtx(ctx.as_mut_ptr());
     if !parallel {
         for (h, hs) in scratch.heads[..n_heads].iter_mut().enumerate() {
@@ -298,6 +304,76 @@ pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
                       &cptr);
         }
     });
+}
+
+/// Single-token attention for a whole batch of decode slots in one
+/// fork-join dispatch: the work range is the flattened
+/// `slot x head` grid, so the coalesced decode tick is no longer
+/// serialized per sequence (the last per-sequence stage after PR 1/2).
+///
+/// * `q` — `(n_slots, n_heads * head_dim)` row-major, RoPE applied;
+///   slot `i`'s query sits at its cache's last position
+///   (`caches[i].len - 1`, K/V already appended).
+/// * `caches` — each slot's own KV cache for this layer; lengths may
+///   differ per slot (ragged contexts).
+/// * `ctx` — `(n_slots, n_heads * head_dim)` output.
+///
+/// Per (slot, head) the math runs through the same [`attn_head`] as
+/// the per-slot path, in the same order — cross-slot execution is
+/// bit-identical to calling [`attention_block`] slot by slot, which
+/// `tests/parallel_parity.rs` pins.  Slot-major flattening keeps one
+/// slot's heads contiguous so a worker's chunk re-reads that slot's
+/// KV slabs from warm cache.
+pub fn attention_cross_slots(cfg: &ModelConfig, q: &[f32],
+                             caches: &[&KvCache],
+                             scratch: &mut AttnScratch,
+                             pool: Option<&ThreadPool>,
+                             ctx: &mut [f32]) {
+    let n_slots = caches.len();
+    if n_slots == 0 {
+        return;
+    }
+    let hd = cfg.head_dim();
+    let n_heads = cfg.n_heads;
+    let rep = n_heads / cfg.n_kv_heads;
+    let d = n_heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert!(q.len() >= n_slots * d && ctx.len() >= n_slots * d);
+    scratch.ensure(n_slots * n_heads, 1, hd);
+
+    // total (query, key) x head_dim volume across the whole batch —
+    // the same per-head formula attention_block gates on (slot i alone
+    // contributes t*(pos0+t)*hd = len_i*hd), so per-slot and
+    // cross-slot dispatch open at consistent shapes
+    let total_positions: usize = caches.iter().map(|c| c.len).sum();
+    let work = hd * total_positions;
+    let parallel = n_slots * n_heads > 1
+        && work >= ATTN_PARALLEL_MIN_WORK
+        && pool.is_some_and(|p| p.size() > 1);
+    let cptr = SharedCtx(ctx.as_mut_ptr());
+    let hptr = SharedHeads(scratch.heads.as_mut_ptr());
+    let run_range = |lo: usize, hi: usize| {
+        for idx in lo..hi {
+            let (slot, h) = (idx / n_heads, idx % n_heads);
+            let cache = caches[slot];
+            debug_assert!(cache.len >= 1, "slot K/V not appended yet");
+            let pos0 = cache.len - 1;
+            // SAFETY: disjoint (slot, head) index ranges — this
+            // worker is the only one touching heads[idx] and the
+            // (slot, h) span of ctx (attn_head writes only its own
+            // head_dim span of row `slot`).
+            let hs = unsafe { &mut *hptr.0.add(idx) };
+            let qrow = &q[slot * d..(slot + 1) * d];
+            let crow = SharedCtx(unsafe { cptr.0.add(slot * d) });
+            attn_head(qrow, cache, h, h / rep, hd, d, scale, pos0, 1,
+                      hs, &crow);
+        }
+    };
+    if !parallel {
+        run_range(0, n_slots * n_heads);
+        return;
+    }
+    pool.unwrap().parallel_chunks(n_slots * n_heads, run_range);
 }
 
 /// One head's tiled online-softmax pass over all t queries.

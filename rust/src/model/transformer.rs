@@ -6,21 +6,26 @@
 //! `model/attention.rs`: RoPE angles come from cached tables, fresh K/V
 //! rows land in the head-major cache slab in one fused rotate+scatter
 //! pass, and a whole block's queries stream the cache in L1-sized tiles
-//! (head-parallel on the shared `ThreadPool`).
+//! (head-parallel on the shared `ThreadPool`; the coalesced decode tick
+//! dispatches all slots' attention as one cross-slot `slot x head`
+//! range).  The remaining elementwise stages — embedding gather,
+//! per-token rmsnorm, SwiGLU combine, residual adds — run blockwise
+//! over token chunks on the same persistent fork-join pool (see the
+//! "Block-parallel elementwise stages" section below).
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::attention::{append_kv_block, attention_block, AttnScratch,
-                       RopeCache};
-use super::kvcache::SequenceKv;
+use super::attention::{append_kv_block, attention_block,
+                       attention_cross_slots, AttnScratch, RopeCache};
+use super::kvcache::{KvCache, SequenceKv};
 use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LayerWeights, LinearBackend, ModelConfig,
                      LINEAR_NAMES};
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{Precision, Scratch};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{SharedMut, ThreadPool};
 
 // Re-exported so existing call sites (benches, analysis probes) keep
 // their `transformer::` paths after the attention split.
@@ -125,6 +130,9 @@ pub struct BlockScratch {
     /// (T, vocab) lm_head output of the last batched call that asked
     /// for per-token logits (decode_batch leaves its rows here).
     pub logits: Vec<f32>,
+    /// Per-token ids staged for the embedding gather (decode_batch
+    /// collects slot tokens here so the gather can run blockwise).
+    pub ids: Vec<u32>,
 }
 
 impl BlockScratch {
@@ -180,6 +188,102 @@ fn record_slots(slots: &mut [DecodeSlot], bits: &[usize], layer: usize,
     for (s, &b) in slots.iter_mut().zip(bits) {
         s.stats.record(layer, lin, b, slice_bits);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Block-parallel elementwise stages
+// ---------------------------------------------------------------------------
+//
+// After PR 1 (batched linears) and PR 2 (tiled attention), the Amdahl
+// remainder of a block forward was these per-token loops: the embedding
+// gather, the rmsnorm passes, the SwiGLU gate*up combine and the
+// residual adds.  With the persistent fork-join pool a dispatch costs
+// ~2 µs, so they are worth chunking over tokens too.  Every helper
+// runs the exact same per-token math in the same order as its serial
+// loop — workers only partition *which rows* they touch — so
+// parallel == serial stays bit-identical (`tests/parallel_parity.rs`).
+
+/// Minimum f32 element count (t x row width) in a blockwise
+/// elementwise pass before the fork-join dispatch pays for itself:
+/// ~2 µs of dispatch vs ~1 elem/ns of streaming elementwise math, with
+/// a 4x margin (EXPERIMENTS.md §Runtime).
+pub const ELEMENTWISE_PARALLEL_MIN: usize = 1 << 13;
+
+/// One scaffold for every block helper: run `body(i, row)` for each
+/// token row `i in 0..t` (`row` = the `width`-wide &mut slice of `out`
+/// at row i), chunked over the pool when `t * width` clears the gate
+/// (serial otherwise — tiny blocks, size-1 pools, t == 1).  The gate
+/// check and the unsafe row partitioning live only here.
+fn par_rows(t: usize, width: usize, pool: Option<&ThreadPool>,
+            out: &mut [f32], body: impl Fn(usize, &mut [f32]) + Sync) {
+    debug_assert!(out.len() >= t * width);
+    let parallel = pool.filter(|p| {
+        p.size() > 1 && t > 1 && t * width >= ELEMENTWISE_PARALLEL_MIN
+    });
+    let Some(p) = parallel else {
+        for (i, row) in out[..t * width].chunks_exact_mut(width)
+            .enumerate() {
+            body(i, row);
+        }
+        return;
+    };
+    let optr = SharedMut(out.as_mut_ptr());
+    p.parallel_chunks(t, |lo, hi| {
+        // SAFETY: parallel_chunks hands out disjoint token ranges, so
+        // each worker materialises &mut only over its own rows of
+        // `out`, which the caller exclusively borrows.
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(lo * width),
+                                           (hi - lo) * width)
+        };
+        for (i, row) in (lo..hi).zip(rows.chunks_exact_mut(width)) {
+            body(i, row);
+        }
+    });
+}
+
+/// Per-token [`rmsnorm`] over a `(t, d)` block, token-parallel.
+fn rmsnorm_block(xs: &[f32], w: &[f32], eps: f32, t: usize, d: usize,
+                 pool: Option<&ThreadPool>, out: &mut [f32]) {
+    debug_assert!(xs.len() >= t * d);
+    par_rows(t, d, pool, out, |i, row| {
+        rmsnorm(&xs[i * d..(i + 1) * d], w, eps, row);
+    });
+}
+
+/// Residual add `acc[..t*d] += delta[..t*d]`, token-parallel.
+fn add_block(acc: &mut [f32], delta: &[f32], t: usize, d: usize,
+             pool: Option<&ThreadPool>) {
+    debug_assert!(delta.len() >= t * d);
+    par_rows(t, d, pool, acc, |i, row| {
+        for (a, b) in row.iter_mut().zip(&delta[i * d..(i + 1) * d]) {
+            *a += b;
+        }
+    });
+}
+
+/// SwiGLU combine `ff = silu(gate) * up` over a `(t, d_ff)` block,
+/// token-parallel.
+fn swiglu_block(gate: &[f32], up: &[f32], t: usize, d_ff: usize,
+                pool: Option<&ThreadPool>, ff: &mut [f32]) {
+    debug_assert!(gate.len() >= t * d_ff && up.len() >= t * d_ff);
+    par_rows(t, d_ff, pool, ff, |i, row| {
+        let lo = i * d_ff;
+        for (f, (g, u)) in row.iter_mut()
+            .zip(gate[lo..lo + d_ff].iter().zip(&up[lo..lo + d_ff])) {
+            *f = silu(*g) * u;
+        }
+    });
+}
+
+/// Embedding-row gather `out[i] = embed[ids[i]]`, token-parallel.
+/// Callers have already validated `ids` against the vocab.
+fn gather_embed_block(embed: &[f32], ids: &[u32], d: usize,
+                      pool: Option<&ThreadPool>, out: &mut [f32]) {
+    par_rows(ids.len(), d, pool, out, |i, row| {
+        let e = ids[i] as usize * d;
+        row.copy_from_slice(&embed[e..e + d]);
+    });
 }
 
 pub struct Model {
@@ -382,17 +486,13 @@ impl Model {
         scratch.rope.ensure(pos0 + t);
         let pool = self.pool.as_deref();
         let bb = &mut scratch.block;
-        for (i, &tok) in tokens.iter().enumerate() {
-            bb.xs[i * d..(i + 1) * d].copy_from_slice(
-                &self.embed[tok as usize * d..(tok as usize + 1) * d]);
-        }
+        gather_embed_block(&self.embed, tokens, d, pool,
+                           &mut bb.xs[..t * d]);
 
         for (li, lw) in self.layers.iter().enumerate() {
             // ---- attention ----
-            for i in 0..t {
-                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.attn_norm,
-                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-            }
+            rmsnorm_block(&bb.xs[..t * d], &lw.attn_norm, c.norm_eps, t,
+                          d, pool, &mut bb.xn[..t * d]);
             if let Some((cl, rows)) = capture.as_mut() {
                 if *cl == li {
                     for i in 0..t {
@@ -431,16 +531,11 @@ impl Model {
                                 &mut bb.attn_out[..t * d]);
             record_block(stats, &scratch.engine.batch.bits, li, 3,
                          c.slice_bits);
-            for (xi, ai) in bb.xs[..t * d].iter_mut()
-                .zip(&bb.attn_out[..t * d]) {
-                *xi += ai;
-            }
+            add_block(&mut bb.xs, &bb.attn_out, t, d, pool);
 
             // ---- mlp ----
-            for i in 0..t {
-                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.mlp_norm,
-                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-            }
+            rmsnorm_block(&bb.xs[..t * d], &lw.mlp_norm, c.norm_eps, t,
+                          d, pool, &mut bb.xn[..t * d]);
             lw.w_gate.forward_batch(&bb.xn[..t * d], precision,
                                     &mut scratch.engine,
                                     &mut bb.gate[..t * d_ff]);
@@ -451,19 +546,13 @@ impl Model {
                                   &mut bb.up[..t * d_ff]);
             record_block(stats, &scratch.engine.batch.bits, li, 5,
                          c.slice_bits);
-            for (f, (g, u)) in bb.ff[..t * d_ff].iter_mut()
-                .zip(bb.gate[..t * d_ff].iter().zip(&bb.up[..t * d_ff])) {
-                *f = silu(*g) * u;
-            }
+            swiglu_block(&bb.gate, &bb.up, t, d_ff, pool, &mut bb.ff);
             lw.w_down.forward_batch(&bb.ff[..t * d_ff], precision,
                                     &mut scratch.engine,
                                     &mut bb.mlp_out[..t * d]);
             record_block(stats, &scratch.engine.batch.bits, li, 6,
                          c.slice_bits);
-            for (xi, mi) in bb.xs[..t * d].iter_mut()
-                .zip(&bb.mlp_out[..t * d]) {
-                *xi += mi;
-            }
+            add_block(&mut bb.xs, &bb.mlp_out, t, d, pool);
         }
         stats.tokens += t as u64;
         if capture.is_some() {
@@ -471,10 +560,8 @@ impl Model {
         }
 
         if need_logits {
-            for i in 0..t {
-                rmsnorm(&bb.xs[i * d..(i + 1) * d], &self.final_norm,
-                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-            }
+            rmsnorm_block(&bb.xs[..t * d], &self.final_norm, c.norm_eps,
+                          t, d, pool, &mut bb.xn[..t * d]);
             let v = c.vocab_size;
             self.lm_head.forward_batch(&bb.xn[..t * d], precision,
                                        &mut scratch.engine,
@@ -523,10 +610,12 @@ impl Model {
     }
 
     /// Advance several sequences by one token each through **one
-    /// batched kernel call per linear** — the coordinator's coalesced
-    /// decode step.  Each slot keeps its own KV cache, position and
-    /// stats; per-slot logits rows land in `scratch.block.logits`
-    /// ((n_slots, vocab) row-major, slot order).
+    /// batched kernel call per linear and one cross-slot attention
+    /// dispatch per layer** — the coordinator's coalesced decode step
+    /// with no per-sequence serialization left.  Each slot keeps its
+    /// own KV cache, position and stats; per-slot logits rows land in
+    /// `scratch.block.logits` ((n_slots, vocab) row-major, slot
+    /// order).
     pub fn decode_batch(&self, slots: &mut [DecodeSlot],
                         precision: Precision,
                         scratch: &mut DecodeScratch) -> Result<()> {
@@ -550,17 +639,14 @@ impl Model {
         scratch.rope.ensure(max_pos + 1);
         let pool = self.pool.as_deref();
         let bb = &mut scratch.block;
-        for (i, s) in slots.iter().enumerate() {
-            let tok = s.token as usize;
-            bb.xs[i * d..(i + 1) * d]
-                .copy_from_slice(&self.embed[tok * d..(tok + 1) * d]);
-        }
+        bb.ids.clear();
+        bb.ids.extend(slots.iter().map(|s| s.token));
+        gather_embed_block(&self.embed, &bb.ids, d, pool,
+                           &mut bb.xs[..t * d]);
 
         for (li, lw) in self.layers.iter().enumerate() {
-            for i in 0..t {
-                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.attn_norm,
-                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-            }
+            rmsnorm_block(&bb.xs[..t * d], &lw.attn_norm, c.norm_eps, t,
+                          d, pool, &mut bb.xn[..t * d]);
             lw.wq.forward_batch(&bb.xn[..t * d], precision,
                                 &mut scratch.engine, &mut bb.q[..t * d]);
             record_slots(slots, &scratch.engine.batch.bits, li, 0,
@@ -573,36 +659,42 @@ impl Model {
                                 &mut scratch.engine, &mut bb.v[..t * dkv]);
             record_slots(slots, &scratch.engine.batch.bits, li, 2,
                          c.slice_bits);
+            // Land every slot's fresh K/V first (serial: one RoPE'd
+            // row per slot), then run attention for the whole batch in
+            // ONE cross-slot fork-join dispatch over the flattened
+            // slot x head grid — the last per-sequence serialization
+            // in the coalesced tick.  The slot's position at this
+            // layer is the layer's own cache length (SequenceKv::len()
+            // reads layer 0, whose row for this token has already
+            // landed once li > 0 — using it here shifted RoPE by one
+            // position and attended over an uninitialised row for
+            // layers >= 1).
             for (i, s) in slots.iter_mut().enumerate() {
-                // the slot's position at this layer is the layer's own
-                // cache length (SequenceKv::len() reads layer 0, whose
-                // row for this token has already landed once li > 0 —
-                // using it here shifted RoPE by one position and
-                // attended over an uninitialised row for layers >= 1)
                 let pos = s.kv.layers[li].len;
                 scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d], pos);
                 append_kv_block(&mut s.kv.layers[li], &scratch.rope,
                                 &bb.k[i * dkv..(i + 1) * dkv],
                                 &bb.v[i * dkv..(i + 1) * dkv], 1);
-                attention_block(c, &bb.q[i * d..(i + 1) * d],
-                                &s.kv.layers[li], pos, 1,
-                                &mut scratch.attn, pool,
-                                &mut bb.ctx[i * d..(i + 1) * d]);
             }
+            // t <= max_decode_batch pointers, rebuilt per layer: the
+            // Vec cannot be recycled across iterations because its
+            // element lifetime would pin the slot borrow across the
+            // next layer's `slots.iter_mut()` phase.
+            let caches: Vec<&KvCache> = slots.iter()
+                .map(|s| &s.kv.layers[li])
+                .collect();
+            attention_cross_slots(c, &bb.q[..t * d], &caches,
+                                  &mut scratch.attn, pool,
+                                  &mut bb.ctx[..t * d]);
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
                                 &mut scratch.engine,
                                 &mut bb.attn_out[..t * d]);
             record_slots(slots, &scratch.engine.batch.bits, li, 3,
                          c.slice_bits);
-            for (xi, ai) in bb.xs[..t * d].iter_mut()
-                .zip(&bb.attn_out[..t * d]) {
-                *xi += ai;
-            }
+            add_block(&mut bb.xs, &bb.attn_out, t, d, pool);
 
-            for i in 0..t {
-                rmsnorm(&bb.xs[i * d..(i + 1) * d], &lw.mlp_norm,
-                        c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-            }
+            rmsnorm_block(&bb.xs[..t * d], &lw.mlp_norm, c.norm_eps, t,
+                          d, pool, &mut bb.xn[..t * d]);
             lw.w_gate.forward_batch(&bb.xn[..t * d], precision,
                                     &mut scratch.engine,
                                     &mut bb.gate[..t * d_ff]);
@@ -613,28 +705,20 @@ impl Model {
                                   &mut bb.up[..t * d_ff]);
             record_slots(slots, &scratch.engine.batch.bits, li, 5,
                          c.slice_bits);
-            for (f, (g, u)) in bb.ff[..t * d_ff].iter_mut()
-                .zip(bb.gate[..t * d_ff].iter().zip(&bb.up[..t * d_ff])) {
-                *f = silu(*g) * u;
-            }
+            swiglu_block(&bb.gate, &bb.up, t, d_ff, pool, &mut bb.ff);
             lw.w_down.forward_batch(&bb.ff[..t * d_ff], precision,
                                     &mut scratch.engine,
                                     &mut bb.mlp_out[..t * d]);
             record_slots(slots, &scratch.engine.batch.bits, li, 6,
                          c.slice_bits);
-            for (xi, mi) in bb.xs[..t * d].iter_mut()
-                .zip(&bb.mlp_out[..t * d]) {
-                *xi += mi;
-            }
+            add_block(&mut bb.xs, &bb.mlp_out, t, d, pool);
         }
         for s in slots.iter_mut() {
             s.stats.tokens += 1;
         }
 
-        for i in 0..t {
-            rmsnorm(&bb.xs[i * d..(i + 1) * d], &self.final_norm,
-                    c.norm_eps, &mut bb.xn[i * d..(i + 1) * d]);
-        }
+        rmsnorm_block(&bb.xs[..t * d], &self.final_norm, c.norm_eps, t,
+                      d, pool, &mut bb.xn[..t * d]);
         let v = c.vocab_size;
         self.lm_head.forward_batch(&bb.xn[..t * d], precision,
                                    &mut scratch.engine,
@@ -768,5 +852,67 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    /// Shapes big enough that `par_rows` engages the pool: the block
+    /// helpers must be bit-identical to their serial loops.
+    #[test]
+    fn elementwise_blocks_parallel_match_serial() {
+        use crate::util::prng::Pcg;
+        let pool = ThreadPool::new(3);
+        let (t, d) = (64usize, 256usize); // t*d = 16384 > gate
+        assert!(t * d >= ELEMENTWISE_PARALLEL_MIN);
+        let mut rng = Pcg::new(41);
+        let xs = rng.normal_vec(t * d, 1.0);
+        let w = rng.normal_vec(d, 0.3);
+
+        let mut serial = vec![0f32; t * d];
+        rmsnorm_block(&xs, &w, 1e-5, t, d, None, &mut serial);
+        let mut par = vec![0f32; t * d];
+        rmsnorm_block(&xs, &w, 1e-5, t, d, Some(&pool), &mut par);
+        assert_eq!(serial, par, "rmsnorm_block");
+
+        let delta = rng.normal_vec(t * d, 1.0);
+        let mut acc_s = xs.clone();
+        add_block(&mut acc_s, &delta, t, d, None);
+        let mut acc_p = xs.clone();
+        add_block(&mut acc_p, &delta, t, d, Some(&pool));
+        assert_eq!(acc_s, acc_p, "add_block");
+
+        let gate = rng.normal_vec(t * d, 1.0);
+        let up = rng.normal_vec(t * d, 1.0);
+        let mut ff_s = vec![0f32; t * d];
+        swiglu_block(&gate, &up, t, d, None, &mut ff_s);
+        let mut ff_p = vec![0f32; t * d];
+        swiglu_block(&gate, &up, t, d, Some(&pool), &mut ff_p);
+        assert_eq!(ff_s, ff_p, "swiglu_block");
+
+        let vocab = 32usize;
+        let embed = rng.normal_vec(vocab * d, 0.5);
+        let ids: Vec<u32> = (0..t).map(|i| ((i * 13 + 5) % vocab) as u32)
+            .collect();
+        let mut e_s = vec![0f32; t * d];
+        gather_embed_block(&embed, &ids, d, None, &mut e_s);
+        let mut e_p = vec![0f32; t * d];
+        gather_embed_block(&embed, &ids, d, Some(&pool), &mut e_p);
+        assert_eq!(e_s, e_p, "gather_embed_block");
+    }
+
+    /// Below the gate (or on size-1 pools) the helpers must take the
+    /// serial path and still produce correct results.
+    #[test]
+    fn elementwise_blocks_small_and_serial_pools() {
+        let pool1 = ThreadPool::new(1);
+        let (t, d) = (2usize, 8usize);
+        let xs: Vec<f32> = (0..t * d).map(|i| i as f32 * 0.1).collect();
+        let w = vec![1.0f32; d];
+        let mut a = vec![0f32; t * d];
+        rmsnorm_block(&xs, &w, 1e-5, t, d, Some(&pool1), &mut a);
+        let mut b = vec![0f32; t * d];
+        for i in 0..t {
+            rmsnorm(&xs[i * d..(i + 1) * d], &w, 1e-5,
+                    &mut b[i * d..(i + 1) * d]);
+        }
+        assert_eq!(a, b);
     }
 }

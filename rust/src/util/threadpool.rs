@@ -1,39 +1,150 @@
-//! Fixed-size thread pool with scoped parallel-for (tokio/rayon are not
-//! vendored; the coordinator and the d_out-parallel kernel paths use
-//! this).
+//! Persistent fork-join runtime (tokio/rayon are not vendored; the
+//! coordinator and every parallel kernel/elementwise path dispatch
+//! through this).
 //!
-//! Two execution modes with different lifetime needs:
+//! Earlier revisions ran `parallel_for` on `thread::scope`, spawning
+//! fresh OS threads per call: tens of microseconds of fork/join that
+//! forced the kernel/attention parallel gates (`PARALLEL_MIN_DOUT`,
+//! `ATTN_PARALLEL_MIN_WORK`) high and left the per-token elementwise
+//! stages serial.  Now the pool's long-lived workers park on a
+//! condvar/epoch protocol and execute borrowed-closure range jobs
+//! directly, so a fork-join dispatch costs one wake + one join
+//! (single-digit microseconds) regardless of pool size.
 //!
-//! * `execute` — fire-and-forget `'static` jobs on persistent workers
-//!   fed by an mpsc channel.  Workers spawn lazily on first use, so
-//!   pools that only ever run `parallel_for` (the kernel paths) never
-//!   carry idle threads.
-//! * `parallel_for` — the rayon-like "split an index range and join"
-//!   pattern that `gemv_lut_parallel` / `gemm_lut_batch_parallel` use
-//!   to chunk output channels (the CPU analogue of the paper's
-//!   CUDA-stream slice overlap).  It uses `thread::scope` fork-join so
-//!   the closure can borrow the caller's stack (LUTs, plane slices)
-//!   without `'static` laundering, and worker panics propagate safely.
+//! Two execution modes share the same workers:
+//!
+//! * `parallel_for` / `parallel_chunks` — the rayon-like "split an
+//!   index range and join" pattern.  The caller publishes a
+//!   type-erased pointer to its stack closure, participates in the
+//!   range itself, and blocks on a per-job latch until every claimed
+//!   index has finished — which is exactly what makes the lifetime
+//!   laundering sound (see [`ForkJob`]).  Worker panics are captured
+//!   per job and re-thrown at the join point on the calling thread.
+//! * `execute` — fire-and-forget `'static` jobs on the same workers
+//!   (queued behind any in-flight range work).  Send failures surface
+//!   as a recoverable [`PoolClosed`] error instead of panicking, and
+//!   job panics are captured and re-thrown when the pool drops.
+//!
+//! Workers spawn lazily on first use, so pools that are only ever
+//! constructed (e.g. size-1 CLI runs) never carry idle threads.  A
+//! pool of size N runs fork-join ranges at parallelism N: the caller
+//! plus N-1 parked workers.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn std::any::Any + Send + 'static>;
 
 /// Raw mutable-pointer wrapper so fork-join workers can write disjoint
 /// cells/ranges of one shared buffer (the kernel wrappers in
-/// `mobiq/gemv.rs` and the attention kernel both partition an output
-/// across workers this way).  Carrying it across threads is only sound
-/// when every worker touches a disjoint index set — state the argument
-/// at each use site.
+/// `mobiq/gemv.rs`, the attention kernel and the block elementwise
+/// helpers all partition an output across workers this way).  Carrying
+/// it across threads is only sound when every worker touches a disjoint
+/// index set — state the argument at each use site.
 pub struct SharedMut<T>(pub *mut T);
 unsafe impl<T: Send> Send for SharedMut<T> {}
 unsafe impl<T: Send> Sync for SharedMut<T> {}
 
+/// Error returned by [`ThreadPool::execute`] when the pool has begun
+/// shutting down and can no longer accept jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolClosed;
+
+impl std::fmt::Display for PoolClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "thread pool is shut down")
+    }
+}
+
+impl std::error::Error for PoolClosed {}
+
+/// One published fork-join range job.
+///
+/// `func` is a type-erased pointer to a closure borrowed from the
+/// *caller's stack*.  The lifetime laundering is sound because of the
+/// claim/latch protocol:
+///
+/// * every index of `0..n` must be claimed (via `next`) before
+///   `remaining` can reach 0, and `remaining` is only decremented
+///   after the claimed index's call returns (or panics);
+/// * the caller blocks on the `done` latch until `remaining == 0`, so
+///   the closure cannot be executing on any thread once `parallel_for`
+///   returns;
+/// * a worker that still holds an `Arc<ForkJob>` *after* the caller
+///   returned can only observe `next >= n` — it never dereferences
+///   the (now dangling) `func` pointer again.
+struct ForkJob {
+    func: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    /// Next unclaimed index (dynamic distribution).
+    next: AtomicUsize,
+    /// Indices claimed-and-finished still outstanding; the job is
+    /// complete when this hits 0.  AcqRel so one worker's writes are
+    /// visible to whichever thread observes the final decrement.
+    remaining: AtomicUsize,
+    /// First panic captured from any index (re-thrown at the join).
+    panic: Mutex<Option<PanicPayload>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `func` is only dereferenced under the claim protocol above,
+// and the closure it points to is `Sync` (shared-called from many
+// threads) — the raw pointer itself is what prevents the auto-impls.
+unsafe impl Send for ForkJob {}
+unsafe impl Sync for ForkJob {}
+
+impl ForkJob {
+    /// Claim and run range indices until the range is exhausted.
+    /// Called by the publishing thread and by any worker that woke for
+    /// this job's epoch.
+    fn run(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // SAFETY: i < n, so the caller is still latched and the
+            // borrowed closure is alive (see the struct invariant).
+            let f = unsafe { &*self.func };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                slot.get_or_insert(p);
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Shared worker-visible state, guarded by one mutex: the fire-and-
+/// forget queue, the current fork-job slot + epoch, and shutdown.
+struct PoolState {
+    queue: VecDeque<Job>,
+    /// Bumped once per published fork job; workers compare against a
+    /// thread-local copy so a job is joined at most once per worker.
+    epoch: u64,
+    fork: Option<Arc<ForkJob>>,
+    shutdown: bool,
+    /// First panic captured from a fire-and-forget `execute` job
+    /// (re-thrown when the pool drops; range-job panics re-throw at
+    /// their join point instead).
+    exec_panic: Option<PanicPayload>,
+}
+
+struct Inner {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
 struct Workers {
-    tx: mpsc::Sender<Job>,
+    inner: Arc<Inner>,
     handles: Vec<thread::JoinHandle<()>>,
 }
 
@@ -47,34 +158,51 @@ impl ThreadPool {
         ThreadPool { workers: OnceLock::new(), size: size.max(1) }
     }
 
-    /// Persistent `execute` workers, spawned on first use.
+    /// Persistent parked workers, spawned on first use.  A size-N pool
+    /// keeps N-1 workers (the fork-join caller is the N-th lane); a
+    /// size-1 pool still gets one worker so `execute` jobs have
+    /// somewhere to run (its fork-join path is inline/serial).
     fn workers(&self) -> &Workers {
         self.workers.get_or_init(|| {
-            let (tx, rx) = mpsc::channel::<Job>();
-            let rx = Arc::new(Mutex::new(rx));
-            let handles = (0..self.size)
+            let inner = Arc::new(Inner {
+                state: Mutex::new(PoolState {
+                    queue: VecDeque::new(),
+                    epoch: 0,
+                    fork: None,
+                    shutdown: false,
+                    exec_panic: None,
+                }),
+                work_cv: Condvar::new(),
+            });
+            let n_workers = self.size.saturating_sub(1).max(1);
+            let handles = (0..n_workers)
                 .map(|i| {
-                    let rx = Arc::clone(&rx);
+                    let inner = Arc::clone(&inner);
                     thread::Builder::new()
                         .name(format!("mobiq-worker-{}", i))
-                        .spawn(move || loop {
-                            let job = { rx.lock().unwrap().recv() };
-                            match job {
-                                Ok(job) => job(),
-                                Err(_) => break,
-                            }
-                        })
+                        .spawn(move || worker_loop(&inner))
                         .expect("spawn worker")
                 })
                 .collect();
-            Workers { tx, handles }
+            Workers { inner, handles }
         })
+    }
+
+    /// Eagerly spawn the persistent workers (normally lazy).  The
+    /// coordinator calls this at server start so the first tick does
+    /// not pay thread creation inside a latency-sensitive dispatch.
+    pub fn warm(&self) {
+        if self.size > 1 {
+            self.workers();
+        }
     }
 
     /// Pool sized to the machine: `cores - 1` (min 1).  One core is
     /// deliberately left free so the coordinator's scheduler thread (and
     /// the OS) are not preempted by kernel workers — a fully-subscribed
     /// pool makes tick latency spike under load for no throughput gain.
+    /// (The fork-join caller counts as one of the `size` lanes, so a
+    /// dispatch never runs more than `size` bodies concurrently.)
     pub fn default_for_machine() -> Self {
         ThreadPool::new(default_threads())
     }
@@ -83,8 +211,22 @@ impl ThreadPool {
         self.size
     }
 
-    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.workers().tx.send(Box::new(job)).expect("pool alive");
+    /// Queue a fire-and-forget `'static` job on the persistent workers.
+    /// Jobs run behind any in-flight fork-join range work.  Returns
+    /// [`PoolClosed`] (instead of panicking) if the pool is shutting
+    /// down; a panicking job is captured and re-thrown when the pool
+    /// drops, and never kills its worker.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static)
+                   -> Result<(), PoolClosed> {
+        let w = self.workers();
+        let mut st = w.inner.state.lock().unwrap();
+        if st.shutdown {
+            return Err(PoolClosed);
+        }
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        w.inner.work_cv.notify_one();
+        Ok(())
     }
 
     /// Partition `0..n` into at most `size` contiguous ranges and run
@@ -109,10 +251,19 @@ impl ThreadPool {
         });
     }
 
-    /// Run `f(chunk_index)` for each index in 0..n, blocking until all
-    /// complete.  `f` must be Sync; indices are distributed dynamically.
-    /// Uses std::thread::scope (joins on exit), so no extra
-    /// synchronisation is needed beyond the work counter.
+    /// Run `f(i)` for each index in 0..n, blocking until all complete.
+    /// `f` must be Sync; indices are distributed dynamically.  The
+    /// calling thread participates in the range (so a size-N pool runs
+    /// at parallelism N: caller + N-1 parked workers), then blocks on
+    /// the job's latch; a panic in any body is re-thrown here after the
+    /// join, with the workers surviving.
+    ///
+    /// Concurrent `parallel_for` calls from different threads are safe:
+    /// the later publication wins the fork slot and the earlier job is
+    /// simply completed by its own caller (each job's completion is
+    /// tracked independently).  A nested call from inside a body is
+    /// likewise safe and degrades to (mostly) inline execution, since
+    /// busy workers only look for new jobs between range items.
     pub fn parallel_for(&self, n: usize, f: impl Fn(usize) + Sync) {
         if n == 0 {
             return;
@@ -123,20 +274,84 @@ impl ThreadPool {
             }
             return;
         }
-        let counter = AtomicUsize::new(0);
-        thread::scope(|scope| {
-            for _ in 0..self.size.min(n) {
-                let counter = &counter;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let i = counter.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    f(i);
-                });
-            }
+        let w = self.workers();
+        // Type-erase and lifetime-launder the borrowed closure.
+        // SAFETY: the ForkJob claim/latch protocol guarantees no thread
+        // dereferences `func` after this frame returns (see ForkJob).
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        let func: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(fref) };
+        let job = Arc::new(ForkJob {
+            func,
+            n,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
         });
+        {
+            let mut st = w.inner.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.fork = Some(Arc::clone(&job));
+            drop(st);
+            w.inner.work_cv.notify_all();
+        }
+        // The caller is one of the lanes.
+        job.run();
+        // Join barrier: wait until every claimed index has finished.
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        // Hygiene: drop the state's reference to the (now-complete)
+        // job so its dangling closure pointer does not outlive this
+        // call inside the pool.  A racing later publication may have
+        // replaced the slot already — only clear our own job.
+        {
+            let mut st = w.inner.state.lock().unwrap();
+            if st.fork.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+                st.fork = None;
+            }
+        }
+        let payload = job.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+/// Body of each persistent worker: join any newly published fork-job
+/// epoch first (range work is the latency-critical hot path), then
+/// drain fire-and-forget jobs, otherwise park on the condvar.
+fn worker_loop(inner: &Inner) {
+    let mut seen_epoch = 0u64;
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.epoch != seen_epoch {
+            seen_epoch = st.epoch;
+            if let Some(job) = st.fork.clone() {
+                drop(st);
+                job.run();
+                st = inner.state.lock().unwrap();
+            }
+            continue;
+        }
+        if let Some(job) = st.queue.pop_front() {
+            drop(st);
+            if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                let mut st2 = inner.state.lock().unwrap();
+                st2.exec_panic.get_or_insert(p);
+            }
+            st = inner.state.lock().unwrap();
+            continue;
+        }
+        if st.shutdown {
+            break;
+        }
+        st = inner.work_cv.wait(st).unwrap();
     }
 }
 
@@ -150,11 +365,28 @@ pub fn default_threads() -> usize {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        if let Some(w) = self.workers.take() {
-            drop(w.tx); // closes the channel; workers drain and exit
-            for h in w.handles {
-                let _ = h.join();
+        let Some(w) = self.workers.take() else { return };
+        {
+            let mut st = w.inner.state.lock().unwrap();
+            st.shutdown = true;
+            drop(st);
+            w.inner.work_cv.notify_all();
+        }
+        let mut worker_panic: Option<PanicPayload> = None;
+        for h in w.handles {
+            if let Err(p) = h.join() {
+                worker_panic.get_or_insert(p);
             }
+        }
+        let exec_panic = w.inner.state.lock().unwrap().exec_panic.take();
+        // Propagate instead of swallowing: a worker that died outside
+        // the catch (should be impossible) outranks a captured job
+        // panic.  Never double-panic if we are already unwinding.
+        if thread::panicking() {
+            return;
+        }
+        if let Some(p) = worker_panic.or(exec_panic) {
+            resume_unwind(p);
         }
     }
 }
@@ -163,6 +395,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::mpsc;
 
     #[test]
     fn executes_jobs() {
@@ -175,7 +408,7 @@ mod tests {
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
                 tx.send(()).unwrap();
-            });
+            }).unwrap();
         }
         for _ in 0..64 {
             rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
@@ -193,6 +426,25 @@ mod tests {
         });
         for h in &hits {
             assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn parallel_for_reuses_workers_across_calls() {
+        // many successive dispatches on one pool: every range covered
+        // exactly once each time (epoch protocol, no stale joins)
+        let pool = ThreadPool::new(4);
+        for round in 0..200usize {
+            let n = 1 + (round % 17);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0))
+                .collect();
+            pool.parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1,
+                           "round {round} index {i}");
+            }
         }
     }
 
@@ -223,6 +475,87 @@ mod tests {
     }
 
     #[test]
+    fn panic_propagates_at_join_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(32, |i| {
+                if i == 7 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        assert!(r.is_err(), "body panic must re-throw at the join");
+        // workers survived the panic: the pool still dispatches
+        let hits: Vec<AtomicU64> = (0..16).map(|_| AtomicU64::new(0))
+            .collect();
+        pool.parallel_for(16, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+        let (tx, rx) = mpsc::channel();
+        pool.execute(move || tx.send(()).unwrap()).unwrap();
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn reentrant_execute_from_parallel_body() {
+        // a range body may queue fire-and-forget jobs on the same pool
+        // without deadlocking (the body holds no pool locks)
+        let pool = Arc::new(ThreadPool::new(3));
+        let (tx, rx) = mpsc::channel::<usize>();
+        {
+            let pool2 = Arc::clone(&pool);
+            // Sender is Send but not Sync on all supported toolchains;
+            // park it behind a Mutex so the Fn + Sync body can clone it
+            let tx = Mutex::new(tx.clone());
+            pool.parallel_for(8, move |i| {
+                let tx = tx.lock().unwrap().clone();
+                pool2.execute(move || tx.send(i).unwrap()).unwrap();
+            });
+        }
+        drop(tx);
+        let mut got: Vec<usize> = (0..8)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(5))
+                .unwrap())
+            .collect();
+        got.sort();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_parallel_for_completes() {
+        // an inner dispatch from inside a body must not deadlock; it
+        // degrades toward inline execution while workers are busy
+        let pool = ThreadPool::new(3);
+        let total = AtomicU64::new(0);
+        pool.parallel_for(4, |_| {
+            pool.parallel_for(4, |_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn execute_job_panic_propagates_on_drop() {
+        let r = std::panic::catch_unwind(|| {
+            let pool = ThreadPool::new(2);
+            let (tx, rx) = mpsc::channel();
+            pool.execute(move || {
+                tx.send(()).unwrap();
+                panic!("exec boom");
+            }).unwrap();
+            // make sure the job ran before the drop
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            drop(pool);
+        });
+        assert!(r.is_err(),
+                "captured execute-job panic must re-throw at Drop");
+    }
+
+    #[test]
     fn default_leaves_a_core_free() {
         let n = default_threads();
         assert!(n >= 1);
@@ -236,7 +569,21 @@ mod tests {
     #[test]
     fn drop_joins() {
         let pool = ThreadPool::new(2);
-        pool.execute(|| {});
+        pool.execute(|| {}).unwrap();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn warm_then_dispatch() {
+        let pool = ThreadPool::new(3);
+        pool.warm();
+        let hits: Vec<AtomicU64> = (0..10).map(|_| AtomicU64::new(0))
+            .collect();
+        pool.parallel_for(10, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
     }
 }

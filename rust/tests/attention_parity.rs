@@ -77,8 +77,8 @@ fn tiled_matches_scalar_oracle_across_gqa() {
         let d = cfg.d_model;
         let mut rng = Pcg::new(100 + n_heads as u64 * 10 + n_kv as u64);
         let cache = filled_cache(&mut rng, n_kv, hd, max_seq);
-        // the last two shapes clear ATTN_PARALLEL_MIN_WORK (t*(pos0+t)
-        // *hd >= 2^17), so every head config exercises the pooled path
+        // the larger shapes clear ATTN_PARALLEL_MIN_WORK (t*(pos0+t)
+        // *hd >= 2^14), so every head config exercises the pooled path
         // too, not just the serial fallback
         for &(pos0, t) in &[(0usize, 1usize), (0, 33), (255, 1),
                             (100, 57), (192, 64)] {

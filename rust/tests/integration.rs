@@ -143,6 +143,10 @@ fn serving_end_to_end() {
 #[test]
 fn pjrt_fp_module_matches_native() {
     let Some(b) = bundle() else { return };
+    if !mobiquant::runtime::PjrtRuntime::available() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return;
+    }
     let dir = mobiquant::artifacts_dir();
     let path = mobiquant::runtime::hlo_path(&dir, "tiny-s", "fp");
     if !path.exists() {
@@ -170,6 +174,10 @@ fn pjrt_fp_module_matches_native() {
 #[test]
 fn pjrt_quantized_modules_eval() {
     let Some(_b) = bundle() else { return };
+    if !mobiquant::runtime::PjrtRuntime::available() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return;
+    }
     let dir = mobiquant::artifacts_dir();
     let rt = mobiquant::runtime::PjrtRuntime::cpu().unwrap();
     let toks = corpus::load_tokens(&dir, "wiki", corpus::Split::Valid)

@@ -87,6 +87,10 @@ fn batched_kernel_matches_dequant_oracle() {
 
 #[test]
 fn pallas_kernel_matches_rust_engine() {
+    if !PjrtRuntime::available() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return;
+    }
     let dir = mobiquant::artifacts_dir();
     let path = mobiquant::runtime::hlo_path(&dir, "tiny-s", "kernel");
     if !path.exists() {
