@@ -174,18 +174,20 @@ fn dual_model_ppl(a: &Model, b: &Model,
                   -> f64 {
     let mut total = 0f64;
     let mut count = 0usize;
-    let mut kv = a.new_kv();
+    // a and b share a config, so one arena serves whichever model the
+    // position routing picks
+    let (mut arena, seq) = a.new_kv();
     let mut scratch = a.new_scratch();
     let mut stats = mobiquant::model::DecodeStats::new(a.cfg.n_layers);
     let n = ((tokens.len() - 1) / window).min(max_windows);
     for i in 0..n {
         let chunk = &tokens[i * window..i * window + window + 1];
-        kv.reset();
+        arena.reset_seq(seq);
         for (j, &t) in chunk[..window].iter().enumerate() {
             let global = i * window + j;
             let m = if b_positions.contains(&global) { b } else { a };
-            m.decode_step(t, &mut kv, Precision::Fixed(4), &mut scratch,
-                          &mut stats).unwrap();
+            m.decode_step(t, &mut arena, seq, Precision::Fixed(4),
+                          &mut scratch, &mut stats).unwrap();
             total += ppl::nll_of(&scratch.logits, chunk[j + 1]);
             count += 1;
         }

@@ -26,12 +26,12 @@ fn main() {
         for target in [3.0, 4.0, 5.0] {
             // drive decode while collecting routing stats
             let mut stats = DecodeStats::new(model.cfg.n_layers);
-            let mut kv = model.new_kv();
+            let (mut arena, seq) = model.new_kv();
             let mut scratch = model.new_scratch();
             for i in 0..windows {
-                kv.reset();
+                arena.reset_seq(seq);
                 for &t in &toks[i * 128..(i + 1) * 128] {
-                    model.decode_step(t, &mut kv,
+                    model.decode_step(t, &mut arena, seq,
                                       Precision::elastic(target),
                                       &mut scratch, &mut stats).unwrap();
                 }

@@ -36,18 +36,18 @@ fn main() {
             ("MoBiQ@4b", &mobiq, Precision::elastic(4.0)),
             ("MoBiQ@2.5b", &mobiq, Precision::elastic(2.5)),
         ] {
-            let mut kv = model.new_kv();
+            let (mut arena, seq) = model.new_kv();
             let mut scratch = model.new_scratch();
             let mut stats = DecodeStats::new(model.cfg.n_layers);
             let t0 = std::time::Instant::now();
             for &t in &[65u32, 32, 110, 101][..] {
                 let _ = t;
             }
-            kv.reset();
+            arena.reset_seq(seq);
             for i in 0..len {
                 let tok = (65 + (i % 26)) as u32;
-                model.decode_step(tok, &mut kv, prec, &mut scratch,
-                                  &mut stats).unwrap();
+                model.decode_step(tok, &mut arena, seq, prec,
+                                  &mut scratch, &mut stats).unwrap();
             }
             let ms = t0.elapsed().as_secs_f64() * 1000.0;
             cells.push((name.to_string(), ms));

@@ -217,7 +217,7 @@ fn main() {
         // end-to-end decode throughput for MoBiQuant (the deployable path)
         let mobiq = Model::load(&bundle, BackendKind::Mobiq).unwrap();
         for bits in [2.0, 3.0, 4.0] {
-            let mut kv = mobiq.new_kv();
+            let (mut arena, seq) = mobiq.new_kv();
             let mut scratch = mobiq.new_scratch();
             let mut stats = mobiquant::model::DecodeStats::new(
                 mobiq.cfg.n_layers);
@@ -225,10 +225,10 @@ fn main() {
             let ns = suite.bench(
                 &format!("{mname} mobiq e2e decode @{bits}b"), || {
                     if pos + 1 >= mobiq.cfg.max_seq_len {
-                        kv.reset();
+                        arena.reset_seq(seq);
                         pos = 0;
                     }
-                    mobiq.decode_step(65, &mut kv,
+                    mobiq.decode_step(65, &mut arena, seq,
                                       Precision::elastic(bits),
                                       &mut scratch, &mut stats).unwrap();
                     pos += 1;

@@ -1,14 +1,16 @@
 //! Admission queue + continuous batching.
 //!
 //! Requests park in a FIFO until the scheduler has a free sequence slot
-//! (bounded by `max_active` and the KV budget).  The invariants checked
+//! (bounded by `max_active`) AND enough free KV pages for the
+//! request's worst-case context (page-based backpressure over the
+//! paged arena — see [`Batcher::admit_with`]).  The invariants checked
 //! by the property tests: no request is lost or duplicated, admission
 //! order is FIFO, and the active count never exceeds the cap.
 //!
 //! The batcher also owns the tick batching policy the scheduler
-//! executes: how many prompt tokens a sequence prefills per tick, and
-//! how many sequences a coalesced decode step may fuse into one batched
-//! kernel call.
+//! executes: how many prompt tokens a sequence prefills per tick, how
+//! many sequences a coalesced decode step may fuse into one batched
+//! kernel call, and the arena's page budget.
 
 use std::collections::VecDeque;
 
@@ -24,8 +26,15 @@ pub struct Batcher {
     /// Cap on sequences coalesced into one batched decode call; bounds
     /// the kernel's per-token LUT scratch (one TokenLut block each).
     pub max_decode_batch: usize,
+    /// KV arena capacity in pages.  `None` sizes the arena so every
+    /// `max_active` slot can reach full context (no page pressure —
+    /// the pre-arena behaviour); `Some(p)` lets the deployment commit
+    /// less memory than the worst case and queue requests when pages
+    /// run short.
+    pub kv_page_budget: Option<usize>,
     admitted: u64,
     rejected: u64,
+    deferred: u64,
 }
 
 pub enum Admission {
@@ -41,8 +50,10 @@ impl Batcher {
             max_queue,
             prefill_chunk: 16,
             max_decode_batch: 32,
+            kv_page_budget: None,
             admitted: 0,
             rejected: 0,
+            deferred: 0,
         }
     }
 
@@ -51,6 +62,12 @@ impl Batcher {
                          max_decode_batch: usize) -> Batcher {
         self.prefill_chunk = prefill_chunk.max(1);
         self.max_decode_batch = max_decode_batch.max(1);
+        self
+    }
+
+    /// Commit an explicit KV page budget (see `kv_page_budget`).
+    pub fn with_kv_budget(mut self, pages: usize) -> Batcher {
+        self.kv_page_budget = Some(pages.max(1));
         self
     }
 
@@ -63,14 +80,31 @@ impl Batcher {
         Admission::Queued
     }
 
-    /// Pop as many requests as fit beside `n_active` running sequences.
+    /// Pop as many requests as fit beside `n_active` running sequences
+    /// (slot cap only — no page accounting).
     pub fn admit(&mut self, n_active: usize) -> Vec<Request> {
+        self.admit_with(n_active, usize::MAX, |_| 0)
+    }
+
+    /// Pop requests that fit beside `n_active` running sequences AND
+    /// whose worst-case KV page needs (computed by `need`, which may
+    /// discount shared-prefix pages) fit in `free_pages`.  Admission
+    /// stays strictly FIFO: the first queued request that does not fit
+    /// blocks the queue — later, smaller requests are not admitted
+    /// around it (no starvation), and the deferral is counted.
+    pub fn admit_with(&mut self, n_active: usize, mut free_pages: usize,
+                      mut need: impl FnMut(&Request) -> usize)
+                      -> Vec<Request> {
         let mut out = Vec::new();
         while n_active + out.len() < self.max_active {
-            match self.queue.pop_front() {
-                Some(r) => out.push(r),
-                None => break,
+            let Some(front) = self.queue.front() else { break };
+            let pages = need(front);
+            if pages > free_pages {
+                self.deferred += 1;
+                break;
             }
+            free_pages -= pages;
+            out.push(self.queue.pop_front().unwrap());
         }
         self.admitted += out.len() as u64;
         out
@@ -80,12 +114,34 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// The request next in line for admission, if any.
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
+    /// Remove the queue head without admitting it — the scheduler uses
+    /// this to reject a request whose worst-case KV pages exceed the
+    /// whole arena (it could never run and would deadlock the FIFO).
+    pub fn drop_head(&mut self) -> Option<Request> {
+        let r = self.queue.pop_front();
+        if r.is_some() {
+            self.rejected += 1;
+        }
+        r
+    }
+
     pub fn queued_ids(&self) -> Vec<RequestId> {
         self.queue.iter().map(|r| r.id).collect()
     }
 
     pub fn counts(&self) -> (u64, u64) {
         (self.admitted, self.rejected)
+    }
+
+    /// Times admission stopped because the queue head's worst-case KV
+    /// pages did not fit the arena's free pages.
+    pub fn deferred(&self) -> u64 {
+        self.deferred
     }
 
     /// Queue pressure in [0, 1] — feeds the elastic controller.
@@ -145,6 +201,28 @@ mod tests {
         }
         assert_eq!(rejected, 3);
         assert_eq!(b.counts().1, 3);
+    }
+
+    #[test]
+    fn paged_admission_defers_fifo() {
+        let mut b = Batcher::new(8, 100);
+        let mut _rxs = Vec::new();
+        for id in 0..3 {
+            let (r, rx) = mk_req(id);
+            _rxs.push(rx);
+            b.submit(r);
+        }
+        // each request "needs" 4 pages; 9 free pages admit only two
+        let got = b.admit_with(0, 9, |_| 4);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1]);
+        assert_eq!(b.queued(), 1, "third request must stay queued");
+        assert_eq!(b.deferred(), 1);
+        // pages freed (retire) -> the blocked head admits
+        let got = b.admit_with(2, 4, |_| 4);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![2]);
+        assert_eq!(b.queued(), 0);
     }
 
     #[test]

@@ -11,6 +11,26 @@ pub struct Metrics {
     pub avg_bits_series: Vec<f64>,       // controller trace per tick
     pub target_bits_series: Vec<f64>,
     pub rejected: u64,
+    // -- paged KV arena accounting (Fig. 7-style memory view) --------
+    /// Arena page budget.
+    pub kv_pages_capacity: usize,
+    /// Pages mapped at the last tick.
+    pub kv_pages_resident: usize,
+    /// High-water mark of mapped pages over the run.
+    pub kv_pages_resident_peak: usize,
+    /// Bytes of one KV page (both sides), for report scaling.
+    pub kv_page_bytes: usize,
+    /// Admissions satisfied (partly) from the shared-prefix cache.
+    pub prefix_hits: u64,
+    /// Admissions that found no usable shared prefix.
+    pub prefix_misses: u64,
+    /// Prompt tokens whose prefill was skipped via shared pages.
+    pub prefix_tokens_reused: u64,
+    /// Prefix-cache entries dropped (LRU / page pressure).
+    pub prefix_evictions: u64,
+    /// Times admission stalled because the queue head's worst-case
+    /// pages did not fit (page backpressure, not slot pressure).
+    pub admissions_deferred: u64,
 }
 
 impl Metrics {
@@ -27,6 +47,25 @@ impl Metrics {
     pub fn record_tick(&mut self, avg_bits: f64, target_bits: f64) {
         self.avg_bits_series.push(avg_bits);
         self.target_bits_series.push(target_bits);
+    }
+
+    /// Snapshot the arena's page occupancy (called once per tick).
+    pub fn record_kv(&mut self, capacity: usize, resident: usize,
+                     peak: usize, page_bytes: usize) {
+        self.kv_pages_capacity = capacity;
+        self.kv_pages_resident = resident;
+        self.kv_pages_resident_peak = peak;
+        self.kv_page_bytes = page_bytes;
+    }
+
+    /// Fraction of admissions that reused a shared prompt prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        stats::rate(self.prefix_hits, self.prefix_hits
+            + self.prefix_misses)
+    }
+
+    pub fn kv_peak_bytes(&self) -> usize {
+        self.kv_pages_resident_peak * self.kv_page_bytes
     }
 
     pub fn p50_token_ms(&self) -> f64 {
@@ -49,7 +88,9 @@ impl Metrics {
     pub fn summary(&self, wall_s: f64) -> String {
         format!(
             "requests={} tokens={} tput={:.1} tok/s p50_tok={:.2}ms \
-             p99_tok={:.2}ms mean_req={:.1}ms rejected={}",
+             p99_tok={:.2}ms mean_req={:.1}ms rejected={} \
+             kv_pages_peak={}/{} prefix_hit_rate={:.2} \
+             prefix_tokens_reused={} deferred={}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tokens_per_s(wall_s),
@@ -57,6 +98,11 @@ impl Metrics {
             self.p99_token_ms(),
             self.mean_request_ms(),
             self.rejected,
+            self.kv_pages_resident_peak,
+            self.kv_pages_capacity,
+            self.prefix_hit_rate(),
+            self.prefix_tokens_reused,
+            self.admissions_deferred,
         )
     }
 }

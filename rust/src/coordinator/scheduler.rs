@@ -1,14 +1,31 @@
-//! The decode scheduler: continuous batching with elastic precision.
+//! The decode scheduler: continuous batching with elastic precision
+//! over the process-wide paged KV arena.
 //!
-//! Each tick the scheduler (1) admits queued requests into free sequence
-//! slots, (2) asks the elastic controller for the tick's precision given
-//! external + queue pressure, (3) advances every active sequence by one
-//! token — prefilling sequences consume a whole prompt chunk through one
-//! batched kernel call, and all decoding sequences are **coalesced into
-//! one batched call per layer** (`Model::decode_batch`) so plane words
-//! stream once per mask group instead of once per sequence — and
-//! (4) retires finished sequences.  The structure mirrors a vLLM-style
-//! continuous batcher.
+//! Each tick the scheduler (1) picks the tick's precision from the
+//! elastic controller, (2) admits queued requests against *real free
+//! page counts* (worst-case pages for prompt + generation headroom,
+//! discounted by any shared prompt prefix found in the prefix cache —
+//! not worst-case bytes as the eager slab era did), (3) advances every
+//! active sequence by one token — prefilling sequences consume a whole
+//! prompt chunk through one batched kernel call, and all decoding
+//! sequences are **coalesced into one batched call per layer**
+//! (`Model::decode_batch`) — and (4) retires finished sequences,
+//! returning their pages to the arena's free list.  The structure
+//! mirrors a vLLM-style continuous batcher with paged attention.
+//!
+//! ## Prefix sharing
+//!
+//! The "million users, one system prompt" scenario: when a sequence
+//! finishes prefill at a single precision, its page-aligned prompt
+//! prefix is parked in a small LRU cache (a forked arena handle keeps
+//! the pages alive).  A later request whose prompt starts with a
+//! cached prefix *at the same precision* forks those pages instead of
+//! recomputing them — prefill skips the shared tokens entirely, and
+//! the arena's refcounts/COW keep writers isolated.  KV content is a
+//! pure function of (token prefix, precision, weights), so shared
+//! pages are bit-identical to recomputed ones.  At least one prompt
+//! token is always re-fed so the last-token logits that seed the first
+//! generated token exist.
 
 use std::time::Instant;
 
@@ -19,22 +36,57 @@ use super::controller::ElasticController;
 use super::metrics::Metrics;
 use super::request::{Request, RequestMetrics, Response};
 use crate::mobiq::engine::Precision;
-use crate::model::kvcache::SequenceKv;
+use crate::model::kvcache::{KvArena, KvHandle, KV_PAGE};
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
                                 DecodeStats};
 use crate::model::Model;
 
+/// Max parked shared-prefix entries; the LRU entry is evicted on
+/// insertion past this, or one per tick under page backpressure.
+const PREFIX_CACHE_MAX: usize = 16;
+
 struct ActiveSeq {
     req: Request,
-    kv: SequenceKv,
+    seq: KvHandle,
     tokens: Vec<u32>,
     prompt_len: usize,
-    fed: usize,          // how many tokens have entered the model
+    /// Tokens that have entered the model; starts at the shared-prefix
+    /// length when admission attached cached pages.
+    fed: usize,
     generated: usize,
+    /// Worst-case pages reserved at admission (minus the shared
+    /// discount); with `pages_at_admission` this bounds what the
+    /// sequence may still allocate.
+    reserved_pages: usize,
+    pages_at_admission: usize,
+    /// Precision every prefill chunk ran at so far; entries are only
+    /// registered in the prefix cache when this stayed uniform.
+    prefill_prec: Option<Precision>,
+    prefill_uniform: bool,
+    registered: bool,
     stats: DecodeStats,
     prefill_ms: f64,
     decode_ms: f64,
     admitted_at: Instant,
+}
+
+impl ActiveSeq {
+    /// Pages this sequence may still claim from the arena (its
+    /// admission reservation minus what it has already allocated).
+    fn reserved_remaining(&self, arena: &KvArena) -> usize {
+        let grown = arena.seq_pages(self.seq)
+            .saturating_sub(self.pages_at_admission);
+        self.reserved_pages.saturating_sub(grown)
+    }
+}
+
+/// One parked shared prompt prefix: `handle` is a cache-owned arena
+/// sequence whose pages hold the KV of `tokens` at `precision`.
+struct PrefixEntry {
+    tokens: Vec<u32>,
+    precision: Precision,
+    handle: KvHandle,
+    last_used: u64,
 }
 
 pub struct Scheduler<'m> {
@@ -42,9 +94,47 @@ pub struct Scheduler<'m> {
     pub batcher: Batcher,
     pub controller: ElasticController,
     pub metrics: Metrics,
+    /// The process-wide paged KV pool all sequences live in.
+    pub arena: KvArena,
     active: Vec<ActiveSeq>,
+    prefix: Vec<PrefixEntry>,
     scratch: DecodeScratch,
     started: Instant,
+    ticks: u64,
+}
+
+/// Worst-case pages a request needs: its (truncated) prompt plus full
+/// generation headroom, across all layers.
+fn worst_pages(arena: &KvArena, prompt_len: usize,
+               max_new: usize) -> usize {
+    arena.seq_worst_pages(prompt_len + max_new)
+}
+
+/// Longest usable shared prefix of `prompt` in the cache at this
+/// precision: returns `(entry index, shared token count)`.  Capped at
+/// `prompt.len() - 1` (one token must be re-fed for its logits) and
+/// gated at one full page (shorter shares are not worth a fork+COW).
+fn best_prefix(entries: &[PrefixEntry], prompt: &[u32],
+               precision: Precision) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, e) in entries.iter().enumerate() {
+        if e.precision != precision {
+            continue;
+        }
+        let cap = prompt.len().saturating_sub(1).min(e.tokens.len());
+        let mut n = 0usize;
+        while n < cap && prompt[n] == e.tokens[n] {
+            n += 1;
+        }
+        let better = match best {
+            None => true,
+            Some((_, bn)) => bn < n,
+        };
+        if n >= KV_PAGE && better {
+            best = Some((i, n));
+        }
+    }
+    best
 }
 
 impl<'m> Scheduler<'m> {
@@ -62,14 +152,24 @@ impl<'m> Scheduler<'m> {
         if let Some(pool) = &model.pool {
             pool.warm();
         }
+        // The arena: an explicit page budget commits less memory than
+        // the worst case (admission queues when pages run short);
+        // otherwise size it so every slot can reach full context.
+        let arena = match batcher.kv_page_budget {
+            Some(pages) => model.new_arena_with_pages(pages),
+            None => model.new_arena(batcher.max_active),
+        };
         Scheduler {
             scratch,
             model,
             batcher,
             controller,
             metrics: Metrics::default(),
+            arena,
             active: Vec::new(),
+            prefix: Vec::new(),
             started: Instant::now(),
+            ticks: 0,
         }
     }
 
@@ -87,20 +187,124 @@ impl<'m> Scheduler<'m> {
         self.active.is_empty() && self.batcher.queued() == 0
     }
 
+    /// Drop the least-recently-used prefix entry, returning its pages.
+    fn evict_lru_prefix(&mut self) {
+        let Some(i) = self.prefix.iter().enumerate()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let e = self.prefix.swap_remove(i);
+        self.arena.free_seq(e.handle);
+        self.metrics.prefix_evictions += 1;
+    }
+
     /// One scheduling tick under the given external pressure.
     /// Returns the number of model steps executed.
     pub fn tick(&mut self, external_pressure: f64) -> Result<usize> {
-        // 1. admission
-        for req in self.batcher.admit(self.active.len()) {
-            let max_prompt = self.model.cfg.max_seq_len
-                .saturating_sub(req.max_new_tokens + 1);
+        self.ticks += 1;
+
+        // 1. precision for this tick — decided up front so admission
+        // can match prefix-cache entries against it
+        let precision = self.controller
+            .update(external_pressure, self.batcher.pressure());
+
+        // 2. admission against real free pages: each queued request
+        // needs its worst-case pages minus any full pages a cached
+        // shared prefix provides; pages other active sequences have
+        // reserved but not yet allocated are held back
+        let max_seq = self.model.cfg.max_seq_len;
+        let n_layers = self.model.cfg.n_layers;
+        let max_prompt = move |req: &Request| {
+            max_seq.saturating_sub(req.max_new_tokens + 1).max(1)
+                .min(req.prompt.len())
+        };
+        // requests that could never run — empty prompt (no token to
+        // seed generation) or a worst case exceeding the whole arena —
+        // are rejected up front instead of deadlocking the FIFO behind
+        // them (the dropped reply sender surfaces as a disconnect)
+        let capacity = self.arena.capacity_pages();
+        while let Some(front) = self.batcher.peek() {
+            let impossible = front.prompt.is_empty() || {
+                let plen = max_prompt(front);
+                worst_pages(&self.arena, plen, front.max_new_tokens)
+                    > capacity
+            };
+            if !impossible {
+                break;
+            }
+            let _ = self.batcher.drop_head();
+            self.metrics.rejected += 1;
+        }
+        let held: usize = self.active.iter()
+            .map(|s| s.reserved_remaining(&self.arena))
+            .sum();
+        let avail = self.arena.free_pages().saturating_sub(held);
+        let deferred_before = self.batcher.deferred();
+        // prefix matches are recorded here by the accounting closure
+        // (one scan per request) and reused for the fork below — the
+        // cache must not change in between, which is why eviction
+        // waits until after the admitted loop
+        let mut hits: Vec<Option<(usize, usize)>> = Vec::new();
+        let admitted = {
+            let arena = &self.arena;
+            let prefix = &self.prefix;
+            let n_active = self.active.len();
+            self.batcher.admit_with(n_active, avail, |req| {
+                let plen = max_prompt(req);
+                let worst = worst_pages(arena, plen, req.max_new_tokens);
+                let hit = best_prefix(prefix, &req.prompt[..plen],
+                                      precision);
+                hits.push(hit);
+                // only full shared pages are free; a shared partial
+                // page may still cost its COW copy, which `worst`
+                // already counts
+                let shared = hit.map_or(0, |(_, n)| n);
+                worst.saturating_sub(n_layers * (shared / KV_PAGE))
+            })
+        };
+        // the closure also ran once for a deferred head, if any
+        hits.truncate(admitted.len());
+        let page_blocked =
+            self.batcher.deferred() > deferred_before;
+        self.metrics.admissions_deferred +=
+            self.batcher.deferred() - deferred_before;
+
+        for (req, hit) in admitted.into_iter().zip(hits) {
+            let plen = max_prompt(&req);
             let mut tokens = req.prompt.clone();
-            tokens.truncate(max_prompt.max(1));
+            tokens.truncate(plen);
+            let worst = worst_pages(&self.arena, plen,
+                                    req.max_new_tokens);
+            // attach the shared prefix (fork = refcount bump, no copy)
+            let (seq, shared, reserved) = match hit {
+                Some((i, n)) => {
+                    self.prefix[i].last_used = self.ticks;
+                    let h = self.arena
+                        .fork_prefix(self.prefix[i].handle, n);
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_tokens_reused += n as u64;
+                    let discount = self.model.cfg.n_layers
+                        * (n / KV_PAGE);
+                    (h, n, worst.saturating_sub(discount))
+                }
+                None => {
+                    self.metrics.prefix_misses += 1;
+                    (self.arena.alloc_seq(), 0, worst)
+                }
+            };
+            let pages_at_admission = self.arena.seq_pages(seq);
             self.active.push(ActiveSeq {
-                kv: self.model.new_kv(),
+                seq,
                 prompt_len: tokens.len(),
+                fed: shared,
+                reserved_pages: reserved,
+                pages_at_admission,
+                prefill_prec: (shared > 0).then_some(precision),
+                prefill_uniform: true,
+                registered: false,
                 tokens,
-                fed: 0,
                 generated: 0,
                 stats: DecodeStats::new(self.model.cfg.n_layers),
                 prefill_ms: 0.0,
@@ -109,10 +313,13 @@ impl<'m> Scheduler<'m> {
                 req,
             });
         }
-
-        // 2. precision for this tick
-        let precision = self.controller
-            .update(external_pressure, self.batcher.pressure());
+        // under page pressure, reclaim cache pages one entry per tick
+        // — after the admitted forks, so a just-matched entry cannot
+        // disappear between its page accounting and its fork (evicting
+        // a forked entry is harmless: the fork holds its own refs)
+        if page_blocked && !self.prefix.is_empty() {
+            self.evict_lru_prefix();
+        }
 
         // 3. advance sequences: prefill chunks first (one batched call
         // per chunk), then one coalesced decode step across every
@@ -132,8 +339,14 @@ impl<'m> Scheduler<'m> {
             }
             let t0 = Instant::now();
             let end = (seq.fed + prefill_chunk).min(seq.prompt_len);
-            model.prefill(&seq.tokens[seq.fed..end], &mut seq.kv,
-                          precision, &mut self.scratch, &mut seq.stats)?;
+            model.prefill(&seq.tokens[seq.fed..end], &mut self.arena,
+                          seq.seq, precision, &mut self.scratch,
+                          &mut seq.stats)?;
+            match seq.prefill_prec {
+                None => seq.prefill_prec = Some(precision),
+                Some(p) if p != precision => seq.prefill_uniform = false,
+                _ => {}
+            }
             steps += end - seq.fed;
             seq.fed = end;
             seq.prefill_ms += t0.elapsed().as_secs_f64() * 1000.0;
@@ -145,10 +358,56 @@ impl<'m> Scheduler<'m> {
             }
         }
 
-        // 3b. coalesced decode: fuse ready sequences (up to
+        // 3b. register freshly completed, uniform-precision prompts in
+        // the prefix cache (page-aligned prefix; the fork only bumps
+        // refcounts).  Registration is what turns the *next* identical
+        // prompt into a page-table copy instead of a recompute.
+        for i in 0..self.active.len() {
+            let (attempt, worth, aligned, prec) = {
+                let s = &self.active[i];
+                let aligned = (s.prompt_len / KV_PAGE) * KV_PAGE;
+                (s.fed == s.prompt_len && !s.registered,
+                 s.prefill_uniform && aligned >= KV_PAGE,
+                 aligned,
+                 s.prefill_prec)
+            };
+            if !attempt {
+                continue;
+            }
+            // one registration attempt per sequence, made the tick its
+            // prefill completes
+            self.active[i].registered = true;
+            if !worth {
+                continue;
+            }
+            let Some(prec) = prec else { continue };
+            let cand = &self.active[i].tokens[..aligned];
+            let covered = self.prefix.iter().any(|e| {
+                e.precision == prec && e.tokens.len() >= aligned
+                    && e.tokens[..aligned] == *cand
+            });
+            if covered {
+                continue;
+            }
+            if self.prefix.len() >= PREFIX_CACHE_MAX {
+                self.evict_lru_prefix();
+            }
+            let cand = self.active[i].tokens[..aligned].to_vec();
+            let handle = self.arena
+                .fork_prefix(self.active[i].seq, aligned);
+            self.prefix.push(PrefixEntry {
+                tokens: cand,
+                precision: prec,
+                handle,
+                last_used: self.ticks,
+            });
+        }
+
+        // 3c. coalesced decode: fuse ready sequences (up to
         // max_decode_batch per group) into one batched call per layer.
         let vocab = model.cfg.vocab_size;
         let cap = self.batcher.max_decode_batch;
+        let arena = &mut self.arena;
         let mut ready: Vec<&mut ActiveSeq> = self.active.iter_mut()
             .zip(&decode_ready)
             .filter_map(|(s, &r)| if r { Some(s) } else { None })
@@ -159,11 +418,11 @@ impl<'m> Scheduler<'m> {
                 let mut slots: Vec<DecodeSlot> = group.iter_mut()
                     .map(|seq| DecodeSlot {
                         token: seq.tokens[seq.fed],
-                        kv: &mut seq.kv,
+                        seq: seq.seq,
                         stats: &mut seq.stats,
                     })
                     .collect();
-                model.decode_batch(&mut slots, precision,
+                model.decode_batch(&mut slots, arena, precision,
                                    &mut self.scratch)?;
             }
             // per-token latency attribution: the batch advanced every
@@ -186,15 +445,18 @@ impl<'m> Scheduler<'m> {
 
         let mut finished: Vec<usize> = Vec::new();
         for (i, seq) in self.active.iter().enumerate() {
-            let kv_full = seq.kv.len() + 1 >= self.model.cfg.max_seq_len;
+            let kv_full = self.arena.seq_len(seq.seq) + 1
+                >= self.model.cfg.max_seq_len;
             if seq.generated >= seq.req.max_new_tokens || kv_full {
                 finished.push(i);
             }
         }
 
-        // 4. retire
+        // 4. retire: pages go back to the free list (minus any still
+        // shared with the prefix cache or forked siblings)
         for &i in finished.iter().rev() {
             let seq = self.active.swap_remove(i);
+            self.arena.free_seq(seq.seq);
             let total_ms =
                 seq.req.submitted.elapsed().as_secs_f64() * 1000.0;
             let queue_ms =
@@ -224,6 +486,10 @@ impl<'m> Scheduler<'m> {
                 / self.active.len() as f64
         };
         self.metrics.record_tick(avg_bits, self.controller.target_bits());
+        self.metrics.record_kv(self.arena.capacity_pages(),
+                               self.arena.resident_pages(),
+                               self.arena.peak_resident_pages(),
+                               self.arena.page_bytes());
         Ok(steps)
     }
 

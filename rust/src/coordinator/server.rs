@@ -25,6 +25,10 @@ pub struct ServerConfig {
     pub prefill_chunk: usize,
     /// Cap on sequences fused into one coalesced decode call.
     pub max_decode_batch: usize,
+    /// KV arena page budget.  `None` = worst case for `max_active`
+    /// full-context sequences (no page pressure); `Some(p)` commits
+    /// less memory and queues requests when pages run short.
+    pub kv_page_budget: Option<usize>,
     pub controller: ControllerConfig,
     /// External resource pressure in [0, 1] sampled each tick via the
     /// shared cell (set by the embedder, e.g. from a workload trace).
@@ -38,6 +42,7 @@ impl Default for ServerConfig {
             max_queue: 64,
             prefill_chunk: 16,
             max_decode_batch: 32,
+            kv_page_budget: None,
             controller: ControllerConfig::default(),
             initial_pressure: 0.0,
         }
@@ -72,8 +77,11 @@ impl Server {
     }
 
     fn run(model: Model, cfg: ServerConfig, rx: mpsc::Receiver<Msg>) {
-        let batcher = Batcher::new(cfg.max_active, cfg.max_queue)
+        let mut batcher = Batcher::new(cfg.max_active, cfg.max_queue)
             .with_chunking(cfg.prefill_chunk, cfg.max_decode_batch);
+        if let Some(pages) = cfg.kv_page_budget {
+            batcher = batcher.with_kv_budget(pages);
+        }
         let controller = ElasticController::new(cfg.controller.clone());
         let mut sched = Scheduler::new(&model, batcher, controller);
         let mut pressure = cfg.initial_pressure;

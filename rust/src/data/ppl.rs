@@ -23,7 +23,7 @@ pub fn evaluate(model: &Model, tokens: &[u32], precision: Precision,
     let mut total_nll = 0f64;
     let mut count = 0usize;
     let mut stats = DecodeStats::new(model.cfg.n_layers);
-    let mut kv = model.new_kv();
+    let (mut arena, seq) = model.new_kv();
     let mut scratch = model.new_scratch();
     let n = ((tokens.len().saturating_sub(1)) / window).min(max_windows);
     anyhow::ensure!(n > 0, "not enough tokens for one window");
@@ -31,11 +31,12 @@ pub fn evaluate(model: &Model, tokens: &[u32], precision: Precision,
     let mut win_logits: Vec<f32> = Vec::with_capacity(window * vocab);
     for i in 0..n {
         let chunk = &tokens[i * window..i * window + window + 1];
-        kv.reset();
+        arena.reset_seq(seq);
         win_logits.clear();
         // one batched weight-stationary pass over the whole window
-        model.prefill_logits(&chunk[..window], &mut kv, precision,
-                             &mut scratch, &mut stats, &mut win_logits)?;
+        model.prefill_logits(&chunk[..window], &mut arena, seq,
+                             precision, &mut scratch, &mut stats,
+                             &mut win_logits)?;
         for j in 0..window {
             total_nll += nll_of(&win_logits[j * vocab..(j + 1) * vocab],
                                 chunk[j + 1]);
@@ -64,13 +65,13 @@ pub fn nll_of(logits: &[f32], target: u32) -> f64 {
 /// scoring).  Returns sum log p(cont | prompt).
 pub fn continuation_logprob(model: &Model, prompt: &[u32], cont: &[u32],
                             precision: Precision) -> Result<f64> {
-    let mut kv = model.new_kv();
+    let (mut arena, seq) = model.new_kv();
     let mut scratch = model.new_scratch();
     let mut stats = DecodeStats::new(model.cfg.n_layers);
     let mut lp = 0f64;
     let all: Vec<u32> = prompt.iter().chain(cont).cloned().collect();
     for (i, &t) in all[..all.len() - 1].iter().enumerate() {
-        model.decode_step(t, &mut kv, precision, &mut scratch,
+        model.decode_step(t, &mut arena, seq, precision, &mut scratch,
                           &mut stats)?;
         if i + 1 >= prompt.len() {
             lp -= nll_of(&scratch.logits, all[i + 1]);

@@ -90,6 +90,80 @@ impl FootprintInputs {
     }
 }
 
+// ---------------------------------------------------------------------------
+// KV memory accounting (paged arena vs eager slabs)
+// ---------------------------------------------------------------------------
+
+/// Fig. 7-style serving-side KV accounting: what the eager per-slot
+/// slab deployment resident-allocates vs the paged arena
+/// (`model::kvcache::KvArena`), including shared-prefix dedup.  The
+/// arena reports *measured* resident pages at runtime
+/// (`coordinator::metrics`); this struct is the analytic counterpart
+/// used by reports and the `perf_kv` bench.
+#[derive(Debug, Clone, Copy)]
+pub struct KvFootprint {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq_len: usize,
+    /// Positions per page (`model::kvcache::KV_PAGE` at runtime).
+    pub kv_page: usize,
+}
+
+impl KvFootprint {
+    /// Bytes of one KV page (K + V sides, f32).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.n_kv_heads * self.kv_page * self.head_dim * 4
+    }
+
+    /// What one eager slab slot always allocates: full context for
+    /// every layer regardless of actual sequence length.
+    pub fn slab_bytes_per_seq(&self) -> usize {
+        self.n_layers * 2 * self.n_kv_heads * self.max_seq_len
+            * self.head_dim * 4
+    }
+
+    /// Eager deployment for `n_seqs` concurrent slots.
+    pub fn eager_bytes(&self, n_seqs: usize) -> usize {
+        n_seqs * self.slab_bytes_per_seq()
+    }
+
+    /// Pages one sequence of `len` positions maps per layer.
+    pub fn pages_for(&self, len: usize) -> usize {
+        (len + self.kv_page - 1) / self.kv_page
+    }
+
+    /// Paged-arena resident bytes for independent sequences of the
+    /// given lengths (no sharing).
+    pub fn paged_bytes(&self, seq_lens: &[usize]) -> usize {
+        seq_lens.iter()
+            .map(|&l| self.n_layers * self.pages_for(l)
+                 * self.page_bytes())
+            .sum()
+    }
+
+    /// Paged-arena resident bytes when every sequence shares one
+    /// `shared_len`-token prompt prefix (stored once) and keeps only
+    /// its own tail pages.
+    pub fn paged_bytes_shared(&self, shared_len: usize,
+                              tail_lens: &[usize]) -> usize {
+        let shared = self.n_layers * self.pages_for(shared_len)
+            * self.page_bytes();
+        let tails: usize = tail_lens.iter()
+            .map(|&l| self.n_layers * self.pages_for(l)
+                 * self.page_bytes())
+            .sum();
+        shared + tails
+    }
+
+    /// Headline ratio: eager slabs vs paged residency for the given
+    /// actual sequence lengths.
+    pub fn savings_vs_eager(&self, seq_lens: &[usize]) -> f64 {
+        self.eager_bytes(seq_lens.len()) as f64
+            / self.paged_bytes(seq_lens).max(1) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +220,47 @@ mod tests {
         let fi = paper_scale_inputs();
         let frac = fi.router_bytes() as f64 / fi.mobiq_bytes() as f64;
         assert!(frac < 0.05, "router overhead {frac}");
+    }
+
+    fn kv_fp() -> KvFootprint {
+        KvFootprint {
+            n_layers: 2,
+            n_kv_heads: 2,
+            head_dim: 16,
+            max_seq_len: 512,
+            kv_page: 64,
+        }
+    }
+
+    #[test]
+    fn paged_short_sequences_beat_eager_4x() {
+        // the ISSUE acceptance shape: 32 short sequences, each well
+        // under one-quarter of max context
+        let fp = kv_fp();
+        let lens = [64usize; 32]; // one page per layer each
+        let s = fp.savings_vs_eager(&lens);
+        assert!(s >= 4.0, "paged savings {s} < 4x for short seqs");
+        // and exact: 512/64 = 8x fewer pages than full-context slabs
+        assert!((s - 8.0).abs() < 1e-9, "expected exactly 8x, got {s}");
+    }
+
+    #[test]
+    fn paged_full_context_matches_eager() {
+        // at full context the arena pays the same bytes as the slab
+        let fp = kv_fp();
+        let lens = [fp.max_seq_len; 4];
+        assert_eq!(fp.paged_bytes(&lens), fp.eager_bytes(4));
+    }
+
+    #[test]
+    fn shared_prefix_stores_once() {
+        let fp = kv_fp();
+        // 8 sequences share a 256-token prompt, 64-token tails each
+        let unshared = fp.paged_bytes(&[320usize; 8]);
+        let shared = fp.paged_bytes_shared(256, &[64usize; 8]);
+        assert!(shared < unshared);
+        // 8x(4+1) pages/layer vs (4 + 8x1)
+        assert_eq!(unshared / fp.page_bytes() / fp.n_layers, 40);
+        assert_eq!(shared / fp.page_bytes() / fp.n_layers, 12);
     }
 }

@@ -33,7 +33,7 @@
 //! to each other.  Against the scalar oracle the result differs only by
 //! FP reordering (the parity tests use a 1e-4 tolerance).
 
-use super::kvcache::KvCache;
+use super::kvcache::{KvCache, KvSource, KV_PAGE};
 use super::weights::ModelConfig;
 use crate::util::threadpool::{SharedMut, ThreadPool};
 
@@ -41,6 +41,13 @@ use crate::util::threadpool::{SharedMut, ThreadPool};
 /// 8 KB of K plus 8 KB of V per tile — comfortably L1-resident while a
 /// whole query block (<= MAX_PREFILL_BLOCK) reuses it.
 pub const ATTN_TILE: usize = 32;
+
+// Tiles are anchored at absolute multiples of ATTN_TILE, so this is
+// what guarantees a tile never straddles a KV page: every `k_run`/
+// `v_run` the kernel requests resolves to one contiguous span whether
+// the source is a slab or a paged arena view.
+const _: () = assert!(KV_PAGE % ATTN_TILE == 0,
+                      "KV pages must hold whole attention tiles");
 
 /// Minimum `(query, key) pair x head_dim` volume before the fork-join
 /// dispatch of `parallel_chunks` is worth paying.  Re-derived for the
@@ -257,19 +264,21 @@ type SharedHeads = SharedMut<HeadScratch>;
 ///
 /// * `q` — `(t, n_heads * head_dim)` row-major, RoPE already applied;
 ///   query row `i` sits at absolute position `pos0 + i`.
-/// * `cache` — the layer's head-major KV cache, already holding the
-///   block's own K/V (`append_kv_block` first), i.e.
-///   `cache.len >= pos0 + t`.  Causality is enforced by masking: query
-///   `i` only consumes positions `0..=pos0 + i`.
+/// * `cache` — any [`KvSource`] (slab cache or paged arena view) for
+///   this layer, already holding the block's own K/V (append first),
+///   i.e. `cache.len() >= pos0 + t`.  Causality is enforced by
+///   masking: query `i` only consumes positions `0..=pos0 + i`.
 /// * `ctx` — `(t, n_heads * head_dim)` output.
 ///
 /// Work is split over contiguous head chunks (heads sharing a GQA kv
 /// head are adjacent, so a chunk re-reads each K/V slab from warm
 /// cache) when `pool` is present and the block is big enough.
 #[allow(clippy::too_many_arguments)]
-pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
-                       pos0: usize, t: usize, scratch: &mut AttnScratch,
-                       pool: Option<&ThreadPool>, ctx: &mut [f32]) {
+pub fn attention_block<S: KvSource>(cfg: &ModelConfig, q: &[f32],
+                                    cache: &S, pos0: usize, t: usize,
+                                    scratch: &mut AttnScratch,
+                                    pool: Option<&ThreadPool>,
+                                    ctx: &mut [f32]) {
     if t == 0 {
         return;
     }
@@ -279,7 +288,7 @@ pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
     let d = n_heads * hd;
     let scale = 1.0 / (hd as f32).sqrt();
     debug_assert!(q.len() >= t * d && ctx.len() >= t * d);
-    debug_assert!(cache.len >= pos0 + t, "block K/V not in cache yet");
+    debug_assert!(cache.len() >= pos0 + t, "block K/V not in cache yet");
     scratch.ensure(n_heads, t, hd);
 
     let work = t * (pos0 + t) * hd;
@@ -313,9 +322,10 @@ pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
 ///
 /// * `q` — `(n_slots, n_heads * head_dim)` row-major, RoPE applied;
 ///   slot `i`'s query sits at its cache's last position
-///   (`caches[i].len - 1`, K/V already appended).
-/// * `caches` — each slot's own KV cache for this layer; lengths may
-///   differ per slot (ragged contexts).
+///   (`caches[i].len() - 1`, K/V already appended).
+/// * `caches` — each slot's own [`KvSource`] for this layer (the
+///   coalesced decode tick passes one paged arena view per slot);
+///   lengths may differ per slot (ragged contexts).
 /// * `ctx` — `(n_slots, n_heads * head_dim)` output.
 ///
 /// Per (slot, head) the math runs through the same [`attn_head`] as
@@ -323,12 +333,12 @@ pub fn attention_block(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
 /// bit-identical to calling [`attention_block`] slot by slot, which
 /// `tests/parallel_parity.rs` pins.  Slot-major flattening keeps one
 /// slot's heads contiguous so a worker's chunk re-reads that slot's
-/// KV slabs from warm cache.
-pub fn attention_cross_slots(cfg: &ModelConfig, q: &[f32],
-                             caches: &[&KvCache],
-                             scratch: &mut AttnScratch,
-                             pool: Option<&ThreadPool>,
-                             ctx: &mut [f32]) {
+/// KV pages from warm cache.
+pub fn attention_cross_slots<S: KvSource>(cfg: &ModelConfig, q: &[f32],
+                                          caches: &[S],
+                                          scratch: &mut AttnScratch,
+                                          pool: Option<&ThreadPool>,
+                                          ctx: &mut [f32]) {
     let n_slots = caches.len();
     if n_slots == 0 {
         return;
@@ -345,7 +355,7 @@ pub fn attention_cross_slots(cfg: &ModelConfig, q: &[f32],
     // the same per-head formula attention_block gates on (slot i alone
     // contributes t*(pos0+t)*hd = len_i*hd), so per-slot and
     // cross-slot dispatch open at consistent shapes
-    let total_positions: usize = caches.iter().map(|c| c.len).sum();
+    let total_positions: usize = caches.iter().map(|c| c.len()).sum();
     let work = hd * total_positions;
     let parallel = n_slots * n_heads > 1
         && work >= ATTN_PARALLEL_MIN_WORK
@@ -355,9 +365,9 @@ pub fn attention_cross_slots(cfg: &ModelConfig, q: &[f32],
     let run_range = |lo: usize, hi: usize| {
         for idx in lo..hi {
             let (slot, h) = (idx / n_heads, idx % n_heads);
-            let cache = caches[slot];
-            debug_assert!(cache.len >= 1, "slot K/V not appended yet");
-            let pos0 = cache.len - 1;
+            let cache = &caches[slot];
+            debug_assert!(cache.len() >= 1, "slot K/V not appended yet");
+            let pos0 = cache.len() - 1;
             // SAFETY: disjoint (slot, head) index ranges — this
             // worker is the only one touching heads[idx] and the
             // (slot, h) span of ctx (attn_head writes only its own
@@ -377,12 +387,18 @@ pub fn attention_cross_slots(cfg: &ModelConfig, q: &[f32],
 }
 
 /// One head's tiled online-softmax pass over all t queries.
+///
+/// Generic over [`KvSource`]: each tile's K (then V) rows are fetched
+/// as one contiguous `k_run`/`v_run` — tiles are anchored at absolute
+/// multiples of `ATTN_TILE` and `KV_PAGE % ATTN_TILE == 0`, so a run
+/// never straddles a page and the inner loops stream the exact same
+/// contiguous memory over a paged arena view as over the slab oracle
+/// (bit-identical results; pinned by `tests/kv_arena.rs`).
 #[allow(clippy::too_many_arguments)]
-fn attn_head(q: &[f32], cache: &KvCache, h: usize, kvh: usize,
-             hd: usize, d: usize, scale: f32, pos0: usize, t: usize,
-             hs: &mut HeadScratch, ctx: &SharedCtx) {
-    let ks = cache.k_head(kvh);
-    let vs = cache.v_head(kvh);
+fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
+                          hd: usize, d: usize, scale: f32, pos0: usize,
+                          t: usize, hs: &mut HeadScratch,
+                          ctx: &SharedCtx) {
     let HeadScratch { m, l, acc, s } = hs;
     m[..t].fill(f32::NEG_INFINITY);
     l[..t].fill(0.0);
@@ -395,12 +411,13 @@ fn attn_head(q: &[f32], cache: &KvCache, h: usize, kvh: usize,
         // first query whose causal range reaches this tile
         let i0 = p0.saturating_sub(pos0);
         for i in i0..t {
-            // query i sees positions 0..=pos0 + i
+            // query i sees positions 0..=pos0 + i (limit > p0 always:
+            // for i >= i0, pos0 + i + 1 >= p0 + 1)
             let limit = (pos0 + i + 1).min(p1);
             let qh = &q[i * d + h * hd..i * d + (h + 1) * hd];
             // scores for the visible part of the tile
             let mut tmax = f32::NEG_INFINITY;
-            for (j, kr) in ks[p0 * hd..limit * hd].chunks_exact(hd)
+            for (j, kr) in cache.k_run(kvh, p0, limit).chunks_exact(hd)
                 .enumerate() {
                 let mut dot = 0f32;
                 for (a, b) in qh.iter().zip(kr) {
@@ -422,7 +439,7 @@ fn attn_head(q: &[f32], cache: &KvCache, h: usize, kvh: usize,
                 }
             }
             let mut li = l[i];
-            for (j, vr) in vs[p0 * hd..limit * hd].chunks_exact(hd)
+            for (j, vr) in cache.v_run(kvh, p0, limit).chunks_exact(hd)
                 .enumerate() {
                 let w = (s[j] - m_new).exp();
                 li += w;
@@ -457,8 +474,11 @@ fn attn_head(q: &[f32], cache: &KvCache, h: usize, kvh: usize,
 /// One-position causal attention over the cache (GQA-aware) — the
 /// scalar oracle the tiled kernel is pinned against
 /// (`tests/attention_parity.rs`).  Two-pass softmax, head-serial.
-pub fn attention_step(q: &[f32], cache: &KvCache, cfg: &ModelConfig,
-                      pos: usize, scores: &mut [f32], ctx: &mut [f32]) {
+/// Generic over [`KvSource`] like the tiled kernel; single-position
+/// runs never straddle a page, so any source works.
+pub fn attention_step<S: KvSource>(q: &[f32], cache: &S,
+                                   cfg: &ModelConfig, pos: usize,
+                                   scores: &mut [f32], ctx: &mut [f32]) {
     let hd = cfg.head_dim();
     let rep = cfg.n_heads / cfg.n_kv_heads;
     let scale = 1.0 / (hd as f32).sqrt();
@@ -466,11 +486,10 @@ pub fn attention_step(q: &[f32], cache: &KvCache, cfg: &ModelConfig,
     for h in 0..cfg.n_heads {
         let kvh = h / rep;
         let qh = &q[h * hd..(h + 1) * hd];
-        let ks = cache.k_head(kvh);
         // scores
         let mut maxs = f32::NEG_INFINITY;
         for p in 0..=pos {
-            let kh = &ks[p * hd..(p + 1) * hd];
+            let kh = cache.k_run(kvh, p, p + 1);
             let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
             scores[p] = dot * scale;
             maxs = maxs.max(scores[p]);
@@ -486,11 +505,10 @@ pub fn attention_step(q: &[f32], cache: &KvCache, cfg: &ModelConfig,
         // its exact softmax weight (the old `w < 1e-8` skip both
         // mispredicted in the innermost loop and made the output
         // subtly non-softmax)
-        let vs = cache.v_head(kvh);
         let out = &mut ctx[h * hd..(h + 1) * hd];
         for p in 0..=pos {
             let w = scores[p] * inv;
-            let vh = &vs[p * hd..(p + 1) * hd];
+            let vh = cache.v_run(kvh, p, p + 1);
             for (o, vv) in out.iter_mut().zip(vh) {
                 *o += w * vv;
             }

@@ -1,21 +1,72 @@
-//! Per-sequence KV cache with head-major slab allocation.
+//! KV storage: the process-wide paged arena (serving path) and the
+//! contiguous per-sequence slab (oracle/test path).
 //!
-//! The coordinator serves many concurrent sequences; each gets a cache
-//! slot sized to max_seq_len.  The manager tracks allocation so the
-//! scheduler can apply backpressure when memory runs out (Fig. 7-style
-//! memory accounting feeds from here too).
+//! Until PR 4 every sequence slot eagerly allocated
+//! `n_layers x 2 x n_kv_heads x max_seq_len x head_dim` floats up
+//! front, so KV memory was budgeted for worst-case context even for a
+//! 30-token request, and admission had to assume the worst case.  The
+//! [`KvArena`] replaces those slabs with one vLLM-style pool of
+//! fixed-size pages ([`KV_PAGE`] positions each):
 //!
-//! Layout: `[kv_head][pos][head_dim]` slabs (head-major), not the
-//! position-major `[pos][kv_head * head_dim]` rows a naive append
-//! would suggest.  The attention kernel walks one head's keys/values
-//! over *many* positions (`model/attention.rs`), so head-major keeps
-//! its score and value loops streaming contiguous memory; the layout
-//! cost is paid once, as a strided scatter when a block of fresh K/V
-//! rows lands (the fused RoPE writer `attention::append_kv_block`, or
-//! `push` on the scalar-oracle path).
+//! * each sequence x layer holds a page table ([`LayerTable`]) instead
+//!   of a slab, and pages are allocated lazily as positions are
+//!   appended — resident bytes track actual context, not `max_seq_len`;
+//! * pages are refcounted, so a detected shared prompt prefix maps the
+//!   same physical pages into many sequences ([`KvArena::fork_prefix`]);
+//!   the first append into a shared partial page copies it
+//!   (copy-on-write), full shared pages are never copied;
+//! * the free list makes retire-then-readmit reuse pages without
+//!   touching the allocator, and the scheduler admits against real
+//!   free-page counts (`coordinator/scheduler.rs`).
+//!
+//! Page layout: within a page, `[kv_head][pos_in_page][head_dim]` —
+//! the same head-major order as the slab, so one head's K (or V) rows
+//! for any run of positions inside a page are contiguous.  [`KV_PAGE`]
+//! is a multiple of the attention kernel's `ATTN_TILE`, so a position
+//! tile never straddles a page and the flash-style tile math streams
+//! the exact same contiguous rows it streamed over the slab — the two
+//! storages are bit-identical under the kernel (pinned by tests).
+//!
+//! The [`KvSource`] trait is the read interface the attention kernels
+//! stream through; both [`KvCache`] (slab) and [`KvLayerView`] (one
+//! sequence x layer of the arena) implement it.
 
-/// KV tensors of one sequence, one layer:
-/// `(n_kv_heads, max_seq, head_dim)` slabs for K and V.
+use super::attention::RopeCache;
+
+/// Positions per KV page.  A multiple of `attention::ATTN_TILE` (32)
+/// so tiles never straddle a page; at head_dim 64 one page side is
+/// 16 KB per kv head.
+pub const KV_PAGE: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Read interface shared by slab and paged storage
+// ---------------------------------------------------------------------------
+
+/// Read access to one sequence x layer of K/V, in head-major runs.
+/// The attention kernels are generic over this, so the tiled
+/// online-softmax math is literally the same code over the slab oracle
+/// and the paged arena.
+pub trait KvSource: Sync {
+    /// Number of positions stored.
+    fn len(&self) -> usize;
+    /// Contiguous K rows for positions `[p0, p1)` of kv head `h`.
+    /// For paged sources the range must not straddle a page boundary;
+    /// `ATTN_TILE`-aligned tiles always satisfy this because
+    /// `KV_PAGE % ATTN_TILE == 0`.
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32];
+    /// Contiguous V rows for positions `[p0, p1)` of kv head `h`.
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32];
+}
+
+// ---------------------------------------------------------------------------
+// Slab cache (oracle / kernel-test path)
+// ---------------------------------------------------------------------------
+
+/// KV tensors of one sequence, one layer, as contiguous
+/// `(n_kv_heads, max_seq, head_dim)` slabs for K and V.  This is the
+/// eager layout the arena replaced on the serving path; it stays as
+/// the parity oracle the paged views are pinned against, and as the
+/// simplest harness for kernel tests/benches.
 pub struct KvCache {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
@@ -48,9 +99,8 @@ impl KvCache {
     }
 
     /// Claim `t` fresh positions; returns the first.  Callers write the
-    /// claimed rows through the `*_row_mut` accessors (or the block
-    /// writers below) — this is what lets the prefill path land QKV
-    /// results in the slab directly instead of staging row copies.
+    /// claimed rows through the `*_row_mut` accessors — this is what
+    /// lets block writers land results in the slab directly.
     pub fn reserve(&mut self, t: usize) -> usize {
         assert!(self.len + t <= self.max_seq, "kv cache overflow");
         let pos = self.len;
@@ -123,33 +173,467 @@ impl KvCache {
     }
 }
 
-/// All layers' caches for one sequence.
-pub struct SequenceKv {
-    pub layers: Vec<KvCache>,
+impl KvSource for KvCache {
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+        debug_assert!(p0 < p1 && p1 <= self.len);
+        let lo = self.slab_off(h, p0);
+        &self.k[lo..lo + (p1 - p0) * self.head_dim]
+    }
+
+    #[inline]
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+        debug_assert!(p0 < p1 && p1 <= self.len);
+        let lo = self.slab_off(h, p0);
+        &self.v[lo..lo + (p1 - p0) * self.head_dim]
+    }
 }
 
-impl SequenceKv {
+// ---------------------------------------------------------------------------
+// Paged arena
+// ---------------------------------------------------------------------------
+
+/// Opaque handle to one sequence's KV state inside a [`KvArena`].
+/// Obtained from [`KvArena::alloc_seq`] / [`KvArena::fork_prefix`];
+/// invalid after [`KvArena::free_seq`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvHandle(u32);
+
+impl KvHandle {
+    #[inline]
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Error returned when an append needs more pages than the arena has
+/// free.  The scheduler's admission accounting is sized so this never
+/// fires mid-flight; hitting it means the caller over-admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfPages {
+    pub needed: usize,
+    pub free: usize,
+}
+
+impl std::fmt::Display for OutOfPages {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv arena out of pages: need {} but only {} free",
+               self.needed, self.free)
+    }
+}
+
+impl std::error::Error for OutOfPages {}
+
+/// Page table of one sequence x layer: physical page ids covering
+/// positions `[0, len)`.  Invariant: `pages.len() == ceil(len / KV_PAGE)`
+/// between appends (the final page may be partially filled).
+#[derive(Debug, Clone, Default)]
+pub struct LayerTable {
+    pages: Vec<u32>,
+    len: usize,
+}
+
+struct SeqState {
+    layers: Vec<LayerTable>,
+}
+
+/// Process-wide paged KV pool: all sequences' K/V for all layers live
+/// in one pair of page-granular slabs, with refcounted pages, a free
+/// list, lazy allocation and copy-on-write (see module docs).
+pub struct KvArena {
+    n_layers: usize,
+    n_kv_heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    /// Floats per page per side: `n_kv_heads * KV_PAGE * head_dim`.
+    page_elems: usize,
+    /// Page `p`'s data is `[p * page_elems, (p + 1) * page_elems)`.
+    /// The backing grows lazily with the page high-water mark (the
+    /// free list hands out low ids first), so process RSS tracks peak
+    /// *used* pages, not the worst-case budget.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+    peak_resident: usize,
+    seqs: Vec<Option<SeqState>>,
+    free_seqs: Vec<usize>,
+}
+
+impl KvArena {
     pub fn new(n_layers: usize, max_seq: usize, n_kv_heads: usize,
-               head_dim: usize) -> SequenceKv {
-        SequenceKv {
-            layers: (0..n_layers)
-                .map(|_| KvCache::new(max_seq, n_kv_heads, head_dim))
-                .collect(),
+               head_dim: usize, capacity_pages: usize) -> KvArena {
+        let page_elems = n_kv_heads * KV_PAGE * head_dim;
+        KvArena {
+            n_layers,
+            n_kv_heads,
+            head_dim,
+            max_seq,
+            page_elems,
+            k: Vec::new(),
+            v: Vec::new(),
+            refcount: vec![0; capacity_pages],
+            // pop() hands out low page ids first, so the lazily grown
+            // backing slabs stay dense
+            free: (0..capacity_pages as u32).rev().collect(),
+            peak_resident: 0,
+            seqs: Vec::new(),
+            free_seqs: Vec::new(),
         }
     }
-    pub fn len(&self) -> usize {
-        self.layers.first().map(|c| c.len).unwrap_or(0)
+
+    /// Pages needed to hold `positions` KV rows of one layer.
+    pub fn pages_for(positions: usize) -> usize {
+        (positions + KV_PAGE - 1) / KV_PAGE
     }
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+
+    /// Worst-case pages a sequence reaching `positions` total context
+    /// needs across all layers (what eager slab allocation always paid
+    /// at `positions = max_seq_len`).
+    pub fn seq_worst_pages(&self, positions: usize) -> usize {
+        self.n_layers * Self::pages_for(positions.min(self.max_seq))
     }
-    pub fn reset(&mut self) {
-        for c in &mut self.layers {
-            c.reset();
+
+    pub fn capacity_pages(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Pages currently mapped by at least one sequence.
+    pub fn resident_pages(&self) -> usize {
+        self.capacity_pages() - self.free.len()
+    }
+
+    pub fn peak_resident_pages(&self) -> usize {
+        self.peak_resident
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Bytes of one page (K + V sides).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.page_elems * 4
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_pages() * self.page_bytes()
+    }
+
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_resident * self.page_bytes()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Park a sequence state in a (possibly recycled) handle slot.
+    fn insert_seq(&mut self, state: SeqState) -> KvHandle {
+        let idx = match self.free_seqs.pop() {
+            Some(i) => {
+                self.seqs[i] = Some(state);
+                i
+            }
+            None => {
+                self.seqs.push(Some(state));
+                self.seqs.len() - 1
+            }
+        };
+        KvHandle(idx as u32)
+    }
+
+    /// Allocate an empty sequence (no pages yet — pages are claimed
+    /// lazily as positions are appended).
+    pub fn alloc_seq(&mut self) -> KvHandle {
+        let state = SeqState {
+            layers: vec![LayerTable::default(); self.n_layers],
+        };
+        self.insert_seq(state)
+    }
+
+    /// Fork a new sequence sharing `src`'s first `len` positions: page
+    /// tables are cloned up to `ceil(len / KV_PAGE)` entries with every
+    /// shared page's refcount bumped — no K/V bytes are copied.  A
+    /// partially filled shared tail page is copied lazily on the fork's
+    /// (or the source's) first append into it (COW).  `len` must not
+    /// exceed `src`'s current length on any layer.
+    pub fn fork_prefix(&mut self, src: KvHandle, len: usize) -> KvHandle {
+        let n_pages = Self::pages_for(len);
+        let mut layers = Vec::with_capacity(self.n_layers);
+        {
+            let s = self.seqs[src.idx()].as_ref().expect("stale handle");
+            for t in &s.layers {
+                assert!(t.len >= len, "fork_prefix past source length");
+                layers.push(LayerTable {
+                    pages: t.pages[..n_pages].to_vec(),
+                    len,
+                });
+            }
+        }
+        for t in &layers {
+            for &p in &t.pages {
+                self.refcount[p as usize] += 1;
+            }
+        }
+        self.insert_seq(SeqState { layers })
+    }
+
+    /// Fork sharing the source's whole current length.
+    pub fn fork_seq(&mut self, src: KvHandle) -> KvHandle {
+        let len = self.seq_len(src);
+        self.fork_prefix(src, len)
+    }
+
+    /// Drop all of a sequence's pages (refcounts decremented, pages
+    /// with no remaining owner return to the free list) and recycle the
+    /// handle slot.  The handle must not be used afterwards.
+    pub fn free_seq(&mut self, h: KvHandle) {
+        let state = self.seqs[h.idx()].take().expect("double free_seq");
+        for t in &state.layers {
+            for &p in &t.pages {
+                self.decref(p);
+            }
+        }
+        self.free_seqs.push(h.idx());
+    }
+
+    /// Drop a sequence's pages but keep the handle alive at length 0
+    /// (the window-reset idiom of the PPL evaluator and probes).
+    pub fn reset_seq(&mut self, h: KvHandle) {
+        let mut tables = Vec::new();
+        {
+            let s = self.seqs[h.idx()].as_mut().expect("stale handle");
+            for t in &mut s.layers {
+                tables.push(std::mem::take(&mut t.pages));
+                t.len = 0;
+            }
+        }
+        for pages in tables {
+            for p in pages {
+                self.decref(p);
+            }
         }
     }
-    pub fn nbytes(&self) -> usize {
-        self.layers.iter().map(|c| c.nbytes()).sum()
+
+    /// Sequence length (layer 0; all layers agree between forward
+    /// calls — they only diverge transiently inside a layer loop).
+    pub fn seq_len(&self, h: KvHandle) -> usize {
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers[0].len
+    }
+
+    /// Length of one layer's table (differs from [`Self::seq_len`]
+    /// only mid-tick, while a layer loop appends layer by layer).
+    pub fn layer_len(&self, h: KvHandle, layer: usize) -> usize {
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers[layer].len
+    }
+
+    /// Total pages mapped by this sequence across all layers (shared
+    /// pages count once per mapping — this is the table size, not
+    /// exclusive ownership).
+    pub fn seq_pages(&self, h: KvHandle) -> usize {
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers.iter().map(|t| t.pages.len()).sum()
+    }
+
+    /// Read view of one sequence x layer for the attention kernels.
+    pub fn layer(&self, h: KvHandle, layer: usize) -> KvLayerView<'_> {
+        let t = &self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers[layer];
+        KvLayerView {
+            k: &self.k,
+            v: &self.v,
+            pages: &t.pages,
+            len: t.len,
+            head_dim: self.head_dim,
+            page_elems: self.page_elems,
+        }
+    }
+
+    /// Append a `(t, n_kv_heads * head_dim)` row-major K/V block to one
+    /// sequence x layer, applying RoPE to the K rows from the cached
+    /// tables while scattering into the head-major page layout — the
+    /// paged equivalent of `attention::append_kv_block`, with identical
+    /// per-row math (each row's rotation uses the same table rows, so
+    /// the stored floats are bit-identical to the slab's).  Claims
+    /// fresh pages as position `len` crosses page boundaries and
+    /// copies a shared partial tail page before the first write into
+    /// it (COW).  Returns the first appended position; the caller must
+    /// have `rope.ensure(pos0 + t)`d.
+    pub fn append_kv_block(&mut self, h: KvHandle, layer: usize,
+                           rope: &RopeCache, k_block: &[f32],
+                           v_block: &[f32], t: usize)
+                           -> Result<usize, OutOfPages> {
+        let hd = self.head_dim;
+        let half = hd / 2;
+        let w = self.n_kv_heads * hd;
+        debug_assert!(k_block.len() >= t * w && v_block.len() >= t * w);
+        let pos0 = self.layer_len(h, layer);
+        assert!(pos0 + t <= self.max_seq, "kv arena sequence overflow");
+        if t == 0 {
+            return Ok(pos0);
+        }
+        self.ensure_tail_pages(h, layer, pos0, t)?;
+
+        // Touched page ids, copied out so the table borrow does not
+        // pin `self` while we write the page slabs.
+        let first = pos0 / KV_PAGE;
+        let n_touched = Self::pages_for(pos0 + t) - first;
+        let pages: Vec<u32> = {
+            let s = self.seqs[h.idx()].as_ref().expect("stale handle");
+            s.layers[layer].pages[first..first + n_touched].to_vec()
+        };
+        for i in 0..t {
+            let pos = pos0 + i;
+            let page = pages[pos / KV_PAGE - first] as usize;
+            let off = pos % KV_PAGE;
+            debug_assert_eq!(self.refcount[page], 1,
+                             "append into a shared page (COW missed)");
+            let (cos, sin) = rope.row(pos);
+            for head in 0..self.n_kv_heads {
+                let base = page * self.page_elems
+                    + (head * KV_PAGE + off) * hd;
+                let src = &k_block[i * w + head * hd..][..hd];
+                let dst = &mut self.k[base..base + hd];
+                for j in 0..half {
+                    let (a, b) = (src[2 * j], src[2 * j + 1]);
+                    dst[2 * j] = a * cos[j] - b * sin[j];
+                    dst[2 * j + 1] = a * sin[j] + b * cos[j];
+                }
+                let vsrc = &v_block[i * w + head * hd..][..hd];
+                self.v[base..base + hd].copy_from_slice(vsrc);
+            }
+        }
+        self.seqs[h.idx()].as_mut().expect("stale handle")
+            .layers[layer].len = pos0 + t;
+        Ok(pos0)
+    }
+
+    /// Make positions `[pos0, pos0 + t)` writable: COW a shared
+    /// partial tail page, then claim fresh pages to cover the range.
+    /// Page availability is checked up front so a failure leaves the
+    /// table untouched (no half-grown state).
+    fn ensure_tail_pages(&mut self, h: KvHandle, layer: usize,
+                         pos0: usize, t: usize) -> Result<(), OutOfPages> {
+        let need_pages = Self::pages_for(pos0 + t);
+        let (have, tail_page) = {
+            let tbl = &self.seqs[h.idx()].as_ref().expect("stale handle")
+                .layers[layer];
+            debug_assert_eq!(tbl.pages.len(), Self::pages_for(pos0));
+            let tail = if pos0 % KV_PAGE != 0 {
+                Some(tbl.pages[pos0 / KV_PAGE])
+            } else {
+                None
+            };
+            (tbl.pages.len(), tail)
+        };
+        let cow = tail_page
+            .is_some_and(|p| self.refcount[p as usize] > 1);
+        let fresh_needed = (need_pages - have) + cow as usize;
+        if self.free.len() < fresh_needed {
+            return Err(OutOfPages {
+                needed: fresh_needed,
+                free: self.free.len(),
+            });
+        }
+        if cow {
+            let old = tail_page.unwrap();
+            let fresh = self.alloc_page();
+            self.copy_page_prefix(old, fresh, pos0 % KV_PAGE);
+            self.refcount[old as usize] -= 1;
+            self.seqs[h.idx()].as_mut().expect("stale handle")
+                .layers[layer].pages[pos0 / KV_PAGE] = fresh;
+        }
+        for _ in have..need_pages {
+            let p = self.alloc_page();
+            self.seqs[h.idx()].as_mut().expect("stale handle")
+                .layers[layer].pages.push(p);
+        }
+        Ok(())
+    }
+
+    /// Pop a free page (caller has already checked availability) with
+    /// refcount 1, growing the backing slabs to cover it if this page
+    /// id has never been touched before.
+    fn alloc_page(&mut self) -> u32 {
+        let p = self.free.pop().expect("alloc_page past free check");
+        debug_assert_eq!(self.refcount[p as usize], 0);
+        self.refcount[p as usize] = 1;
+        let end = (p as usize + 1) * self.page_elems;
+        if self.k.len() < end {
+            self.k.resize(end, 0.0);
+            self.v.resize(end, 0.0);
+        }
+        self.peak_resident = self.peak_resident.max(self.resident_pages());
+        p
+    }
+
+    fn decref(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        debug_assert!(*rc > 0, "decref of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Copy the first `rows` positions of every head from page `src`
+    /// to page `dst` (the COW body).
+    fn copy_page_prefix(&mut self, src: u32, dst: u32, rows: usize) {
+        let hd = self.head_dim;
+        for head in 0..self.n_kv_heads {
+            let s = src as usize * self.page_elems + head * KV_PAGE * hd;
+            let d = dst as usize * self.page_elems + head * KV_PAGE * hd;
+            self.k.copy_within(s..s + rows * hd, d);
+            self.v.copy_within(s..s + rows * hd, d);
+        }
+    }
+}
+
+/// Read view of one sequence x layer of a [`KvArena`]: resolves page
+/// tables so the attention kernels see contiguous head-major runs.
+pub struct KvLayerView<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    pages: &'a [u32],
+    len: usize,
+    head_dim: usize,
+    page_elems: usize,
+}
+
+impl KvSource for KvLayerView<'_> {
+    #[inline]
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+        debug_assert!(p0 < p1 && p1 <= self.len);
+        debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
+                         "K run straddles a page");
+        let page = self.pages[p0 / KV_PAGE] as usize;
+        let lo = page * self.page_elems
+            + (h * KV_PAGE + p0 % KV_PAGE) * self.head_dim;
+        &self.k[lo..lo + (p1 - p0) * self.head_dim]
+    }
+
+    #[inline]
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+        debug_assert!(p0 < p1 && p1 <= self.len);
+        debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
+                         "V run straddles a page");
+        let page = self.pages[p0 / KV_PAGE] as usize;
+        let lo = page * self.page_elems
+            + (h * KV_PAGE + p0 % KV_PAGE) * self.head_dim;
+        &self.v[lo..lo + (p1 - p0) * self.head_dim]
     }
 }
 
@@ -166,6 +650,8 @@ mod tests {
         assert_eq!(c.v_head_at(0, 1), &[7.0, 8.0]);
         assert_eq!(c.k_head(0), &[1.0, 2.0, 5.0, 6.0]);
         assert_eq!(c.len, 2);
+        assert_eq!(c.k_run(0, 0, 2), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(c.v_run(0, 1, 2), &[7.0, 8.0]);
         c.reset();
         assert_eq!(c.len, 0);
     }
@@ -200,10 +686,166 @@ mod tests {
         c.push(&[0.0], &[0.0]);
     }
 
+    // -- arena ------------------------------------------------------------
+
+    /// 1 layer, 1 kv head, head_dim 2 arena with a tiny page budget.
+    fn small_arena(cap_pages: usize) -> KvArena {
+        KvArena::new(1, 4 * KV_PAGE, 1, 2, cap_pages)
+    }
+
+    fn ident_rope() -> RopeCache {
+        // theta irrelevant for these tests; positions must be ensured
+        let mut r = RopeCache::new(2, 1e4);
+        r.ensure(4 * KV_PAGE);
+        r
+    }
+
+    /// Append `t` constant rows (value tagging the call) to `h`.
+    fn fill(a: &mut KvArena, rope: &RopeCache, h: KvHandle, t: usize,
+            val: f32) -> Result<usize, OutOfPages> {
+        let k: Vec<f32> = vec![val; t * 2];
+        let v: Vec<f32> = vec![val + 0.5; t * 2];
+        a.append_kv_block(h, 0, rope, &k, &v, t)
+    }
+
     #[test]
-    fn sequence_kv_sizes() {
-        let s = SequenceKv::new(3, 8, 2, 2);
-        assert_eq!(s.len(), 0);
-        assert_eq!(s.nbytes(), 3 * 2 * 8 * 4 * 4);
+    fn lazy_alloc_and_free_list_reuse() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        assert_eq!(a.resident_pages(), 0, "no eager pages");
+        fill(&mut a, &rope, h, KV_PAGE + 1, 1.0).unwrap();
+        assert_eq!(a.resident_pages(), 2);
+        assert_eq!(a.seq_len(h), KV_PAGE + 1);
+        a.free_seq(h);
+        assert_eq!(a.resident_pages(), 0, "retire frees pages");
+        // readmit: pages come from the free list, peak unchanged
+        let h2 = a.alloc_seq();
+        fill(&mut a, &rope, h2, 2 * KV_PAGE, 2.0).unwrap();
+        assert_eq!(a.resident_pages(), 2);
+        assert_eq!(a.peak_resident_pages(), 2);
+    }
+
+    #[test]
+    fn out_of_pages_is_clean() {
+        let mut a = small_arena(1);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, KV_PAGE, 1.0).unwrap();
+        let before = a.seq_len(h);
+        let err = fill(&mut a, &rope, h, 1, 2.0).unwrap_err();
+        assert_eq!(err, OutOfPages { needed: 1, free: 0 });
+        assert_eq!(a.seq_len(h), before, "failed append must not grow");
+        // freeing recovers the budget
+        a.free_seq(h);
+        let h2 = a.alloc_seq();
+        fill(&mut a, &rope, h2, 3, 3.0).unwrap();
+        assert_eq!(a.seq_len(h2), 3);
+    }
+
+    #[test]
+    fn fork_shares_pages_and_cow_splits() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        // 1.5 pages: one full shared page + one shared partial page
+        let t0 = KV_PAGE + KV_PAGE / 2;
+        fill(&mut a, &rope, h, t0, 1.0).unwrap();
+        assert_eq!(a.resident_pages(), 2);
+
+        let f = a.fork_prefix(h, t0);
+        assert_eq!(a.seq_len(f), t0);
+        assert_eq!(a.resident_pages(), 2, "fork copies no pages");
+        // both views read the same bytes
+        let want: Vec<f32> = a.layer(h, 0).k_run(0, 0, KV_PAGE).to_vec();
+        assert_eq!(a.layer(f, 0).k_run(0, 0, KV_PAGE), &want[..]);
+
+        // appending to the fork COWs only the partial page
+        fill(&mut a, &rope, f, 1, 9.0).unwrap();
+        assert_eq!(a.resident_pages(), 3, "COW copies one page");
+        // source rows are untouched, fork kept the shared prefix
+        let src_tail = a.layer(h, 0)
+            .k_run(0, KV_PAGE, t0).to_vec();
+        let fork_tail = a.layer(f, 0)
+            .k_run(0, KV_PAGE, t0).to_vec();
+        assert_eq!(src_tail, fork_tail,
+                   "COW must preserve the shared rows");
+        assert_eq!(a.seq_len(f), t0 + 1);
+        assert_eq!(a.seq_len(h), t0);
+
+        // freeing the source releases only its exclusive claim on the
+        // still-shared full page
+        a.free_seq(h);
+        assert_eq!(a.resident_pages(), 2);
+        a.free_seq(f);
+        assert_eq!(a.resident_pages(), 0);
+    }
+
+    #[test]
+    fn source_append_after_fork_also_cows() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 10, 1.0).unwrap();
+        let f = a.fork_prefix(h, 10);
+        // the *source* appends first: it must COW too (the fork holds
+        // a reference to the partial page)
+        fill(&mut a, &rope, h, 1, 5.0).unwrap();
+        assert_eq!(a.resident_pages(), 2);
+        let hv = a.layer(h, 0).k_run(0, 0, 10).to_vec();
+        let fv = a.layer(f, 0).k_run(0, 0, 10).to_vec();
+        assert_eq!(hv, fv, "shared prefix must survive source COW");
+        assert_eq!(a.seq_len(f), 10);
+    }
+
+    #[test]
+    fn reset_seq_keeps_handle() {
+        let mut a = small_arena(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 5, 1.0).unwrap();
+        a.reset_seq(h);
+        assert_eq!(a.seq_len(h), 0);
+        assert_eq!(a.resident_pages(), 0);
+        fill(&mut a, &rope, h, 3, 2.0).unwrap();
+        assert_eq!(a.seq_len(h), 3);
+    }
+
+    #[test]
+    fn paged_view_matches_slab_append() {
+        // identical K/V blocks through the slab writer and the arena:
+        // every head-major run must be bit-identical
+        use crate::util::prng::Pcg;
+        let (n_kv, hd) = (2usize, 4usize);
+        let t = KV_PAGE + 17; // crosses a page boundary
+        let mut rng = Pcg::new(77);
+        let w = n_kv * hd;
+        let k_block = rng.normal_vec(t * w, 1.0);
+        let v_block = rng.normal_vec(t * w, 1.0);
+        let mut rope = RopeCache::new(hd, 1e4);
+        rope.ensure(t);
+
+        let mut slab = KvCache::new(2 * KV_PAGE, n_kv, hd);
+        super::super::attention::append_kv_block(
+            &mut slab, &rope, &k_block, &v_block, t);
+
+        let mut a = KvArena::new(1, 2 * KV_PAGE, n_kv, hd, 4);
+        let h = a.alloc_seq();
+        a.append_kv_block(h, 0, &rope, &k_block, &v_block, t).unwrap();
+        let view = a.layer(h, 0);
+        assert_eq!(view.len(), t);
+        for head in 0..n_kv {
+            let mut p = 0usize;
+            while p < t {
+                let end = (p + KV_PAGE).min(t);
+                assert_eq!(view.k_run(head, p, end),
+                           slab.k_run(head, p, end),
+                           "K head {head} run [{p}, {end})");
+                assert_eq!(view.v_run(head, p, end),
+                           slab.v_run(head, p, end),
+                           "V head {head} run [{p}, {end})");
+                p = end;
+            }
+        }
     }
 }

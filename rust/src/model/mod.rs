@@ -9,5 +9,6 @@ pub mod kvcache;
 pub mod transformer;
 pub mod weights;
 
+pub use kvcache::{KvArena, KvHandle, KvSource, KV_PAGE};
 pub use transformer::{DecodeStats, Model};
 pub use weights::{LinearBackend, ModelConfig};

@@ -2,9 +2,15 @@
 //! batched block forwards (whole-prompt prefill, coalesced multi-sequence
 //! decode) that feed the weight-stationary LUT-GEMM kernel.
 //!
+//! KV state lives in the process-wide paged [`KvArena`]
+//! (`model/kvcache.rs`): every forward entry point takes the arena
+//! plus a sequence handle, pages are claimed lazily as positions are
+//! appended, and shared prompt prefixes map the same physical pages
+//! into many sequences (the scheduler's prefix cache drives this).
+//!
 //! Attention runs through the blocked online-softmax subsystem in
 //! `model/attention.rs`: RoPE angles come from cached tables, fresh K/V
-//! rows land in the head-major cache slab in one fused rotate+scatter
+//! rows land in the head-major arena pages in one fused rotate+scatter
 //! pass, and a whole block's queries stream the cache in L1-sized tiles
 //! (head-parallel on the shared `ThreadPool`; the coalesced decode tick
 //! dispatches all slots' attention as one cross-slot `slot x head`
@@ -17,9 +23,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::attention::{append_kv_block, attention_block,
-                       attention_cross_slots, AttnScratch, RopeCache};
-use super::kvcache::{KvCache, SequenceKv};
+use super::attention::{attention_block, attention_cross_slots,
+                       AttnScratch, RopeCache};
+use super::kvcache::{KvArena, KvHandle, KV_PAGE};
 use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LayerWeights, LinearBackend, ModelConfig,
                      LINEAR_NAMES};
@@ -166,10 +172,12 @@ fn grow(v: &mut Vec<f32>, n: usize) {
 pub const MAX_PREFILL_BLOCK: usize = 64;
 
 /// One active sequence's slot in a coalesced decode step: the token to
-/// feed, its own KV cache and its own routing-stats accumulator.
+/// feed, its KV arena handle and its own routing-stats accumulator.
+/// All slots of one `decode_batch` call share the arena the caller
+/// passes alongside.
 pub struct DecodeSlot<'a> {
     pub token: u32,
-    pub kv: &'a mut SequenceKv,
+    pub seq: KvHandle,
     pub stats: &'a mut DecodeStats,
 }
 
@@ -363,19 +371,44 @@ impl Model {
         }
     }
 
-    pub fn new_kv(&self) -> SequenceKv {
-        SequenceKv::new(self.cfg.n_layers, self.cfg.max_seq_len,
-                        self.cfg.n_kv_heads, self.cfg.head_dim())
+    /// Paged KV arena sized so `n_seqs` sequences can each reach the
+    /// full `max_seq_len` context — the conservative budget.  Serving
+    /// deployments pass a smaller explicit page budget through
+    /// [`Model::new_arena_with_pages`] and let the scheduler's
+    /// admission backpressure enforce it.
+    pub fn new_arena(&self, n_seqs: usize) -> KvArena {
+        let c = &self.cfg;
+        let pages = n_seqs.max(1) * c.n_layers
+            * ((c.max_seq_len + KV_PAGE - 1) / KV_PAGE);
+        self.new_arena_with_pages(pages)
     }
 
-    /// Decode one token at position kv.len(); returns logits in
-    /// `scratch.logits` and records routing stats.
-    pub fn decode_step(&self, token: u32, kv: &mut SequenceKv,
-                       precision: Precision, scratch: &mut DecodeScratch,
+    /// Paged KV arena with an explicit page budget (global across
+    /// layers and sequences).
+    pub fn new_arena_with_pages(&self, capacity_pages: usize) -> KvArena {
+        let c = &self.cfg;
+        KvArena::new(c.n_layers, c.max_seq_len, c.n_kv_heads,
+                     c.head_dim(), capacity_pages)
+    }
+
+    /// Single-sequence convenience: a one-sequence arena plus its
+    /// allocated handle (what the eager `SequenceKv` slab used to be;
+    /// pages are still claimed lazily as the sequence grows).
+    pub fn new_kv(&self) -> (KvArena, KvHandle) {
+        let mut arena = self.new_arena(1);
+        let seq = arena.alloc_seq();
+        (arena, seq)
+    }
+
+    /// Decode one token at position `arena.seq_len(seq)`; returns
+    /// logits in `scratch.logits` and records routing stats.
+    pub fn decode_step(&self, token: u32, arena: &mut KvArena,
+                       seq: KvHandle, precision: Precision,
+                       scratch: &mut DecodeScratch,
                        stats: &mut DecodeStats) -> Result<()> {
         let c = &self.cfg;
         let d = c.d_model;
-        let pos = kv.len();
+        let pos = arena.seq_len(seq);
         anyhow::ensure!(pos < c.max_seq_len, "sequence too long");
         anyhow::ensure!((token as usize) < c.vocab_size, "token oob");
         scratch.x.copy_from_slice(
@@ -402,9 +435,10 @@ impl Model {
             stats.record(li, 2, b, c.slice_bits);
 
             scratch.rope.apply(&mut scratch.q, pos);
-            append_kv_block(&mut kv.layers[li], &scratch.rope,
-                            &scratch.k, &scratch.v, 1);
-            attention_block(c, &scratch.q, &kv.layers[li], pos, 1,
+            arena.append_kv_block(seq, li, &scratch.rope, &scratch.k,
+                                  &scratch.v, 1)?;
+            let view = arena.layer(seq, li);
+            attention_block(c, &scratch.q, &view, pos, 1,
                             &mut scratch.attn, pool, &mut scratch.ctx);
             scratch.stage[..d].copy_from_slice(&scratch.ctx);
             let b = run("wo", &scratch.stage[..d], &mut scratch.attn_out,
@@ -461,8 +495,9 @@ impl Model {
     ///   (the decode loop discards the others anyway).
     /// * `capture: Some((layer, rows))` pushes each token's attn-norm
     ///   input at `layer` (the Fig. 1/5 probe) and skips the lm_head.
-    fn prefill_inner(&self, tokens: &[u32], kv: &mut SequenceKv,
-                     precision: Precision, scratch: &mut DecodeScratch,
+    fn prefill_inner(&self, tokens: &[u32], arena: &mut KvArena,
+                     seq: KvHandle, precision: Precision,
+                     scratch: &mut DecodeScratch,
                      stats: &mut DecodeStats,
                      mut all_logits: Option<&mut Vec<f32>>,
                      mut capture: Option<(usize, &mut Vec<Vec<f32>>)>)
@@ -475,7 +510,7 @@ impl Model {
         let d = c.d_model;
         let dkv = c.kv_dim();
         let d_ff = c.d_ff;
-        let pos0 = kv.len();
+        let pos0 = arena.seq_len(seq);
         anyhow::ensure!(pos0 + t <= c.max_seq_len, "sequence too long");
         for &tok in tokens {
             anyhow::ensure!((tok as usize) < c.vocab_size, "token oob");
@@ -513,17 +548,20 @@ impl Model {
             record_block(stats, &scratch.engine.batch.bits, li, 2,
                          c.slice_bits);
             // RoPE from the cached tables, then land the whole block's
-            // K/V in the head-major cache slab (fused rotate+scatter),
-            // then one tiled attention pass over all t queries —
-            // causality is masked inside the kernel instead of being
-            // sequenced through per-position pushes.
+            // K/V in the head-major arena pages (fused rotate+scatter,
+            // COW/page claims inside), then one tiled attention pass
+            // over all t queries — causality is masked inside the
+            // kernel instead of being sequenced through per-position
+            // pushes.
             for i in 0..t {
                 scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d],
                                    pos0 + i);
             }
-            append_kv_block(&mut kv.layers[li], &scratch.rope,
-                            &bb.k[..t * dkv], &bb.v[..t * dkv], t);
-            attention_block(c, &bb.q[..t * d], &kv.layers[li], pos0, t,
+            arena.append_kv_block(seq, li, &scratch.rope,
+                                  &bb.k[..t * dkv], &bb.v[..t * dkv],
+                                  t)?;
+            let view = arena.layer(seq, li);
+            attention_block(c, &bb.q[..t * d], &view, pos0, t,
                             &mut scratch.attn, pool,
                             &mut bb.ctx[..t * d]);
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
@@ -580,16 +618,17 @@ impl Model {
         Ok(())
     }
 
-    /// Prefill a whole prompt block starting at position `kv.len()`.
-    /// The block's last-token logits are left in `scratch.logits`; the
-    /// lm_head is skipped for earlier tokens (the decode loop discards
-    /// them anyway).
-    pub fn prefill(&self, tokens: &[u32], kv: &mut SequenceKv,
-                   precision: Precision, scratch: &mut DecodeScratch,
+    /// Prefill a whole prompt block starting at position
+    /// `arena.seq_len(seq)`.  The block's last-token logits are left
+    /// in `scratch.logits`; the lm_head is skipped for earlier tokens
+    /// (the decode loop discards them anyway).
+    pub fn prefill(&self, tokens: &[u32], arena: &mut KvArena,
+                   seq: KvHandle, precision: Precision,
+                   scratch: &mut DecodeScratch,
                    stats: &mut DecodeStats) -> Result<()> {
         for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
-            self.prefill_inner(chunk, kv, precision, scratch, stats,
-                               None, None)?;
+            self.prefill_inner(chunk, arena, seq, precision, scratch,
+                               stats, None, None)?;
         }
         Ok(())
     }
@@ -597,14 +636,14 @@ impl Model {
     /// Prefill that also appends every token's logits row ((T, vocab)
     /// row-major) to `out` — the batched replacement for per-token
     /// decode in the PPL evaluator and golden-vector parity tests.
-    pub fn prefill_logits(&self, tokens: &[u32], kv: &mut SequenceKv,
-                          precision: Precision,
+    pub fn prefill_logits(&self, tokens: &[u32], arena: &mut KvArena,
+                          seq: KvHandle, precision: Precision,
                           scratch: &mut DecodeScratch,
                           stats: &mut DecodeStats, out: &mut Vec<f32>)
                           -> Result<()> {
         for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
-            self.prefill_inner(chunk, kv, precision, scratch, stats,
-                               Some(out), None)?;
+            self.prefill_inner(chunk, arena, seq, precision, scratch,
+                               stats, Some(out), None)?;
         }
         Ok(())
     }
@@ -612,12 +651,12 @@ impl Model {
     /// Advance several sequences by one token each through **one
     /// batched kernel call per linear and one cross-slot attention
     /// dispatch per layer** — the coordinator's coalesced decode step
-    /// with no per-sequence serialization left.  Each slot keeps its
-    /// own KV cache, position and stats; per-slot logits rows land in
-    /// `scratch.block.logits` ((n_slots, vocab) row-major, slot
-    /// order).
+    /// with no per-sequence serialization left.  All slots live in the
+    /// shared paged `arena`; each keeps its own handle, position and
+    /// stats.  Per-slot logits rows land in `scratch.block.logits`
+    /// ((n_slots, vocab) row-major, slot order).
     pub fn decode_batch(&self, slots: &mut [DecodeSlot],
-                        precision: Precision,
+                        arena: &mut KvArena, precision: Precision,
                         scratch: &mut DecodeScratch) -> Result<()> {
         let c = &self.cfg;
         let t = slots.len();
@@ -629,11 +668,11 @@ impl Model {
         let d_ff = c.d_ff;
         let mut max_pos = 0usize;
         for s in slots.iter() {
-            anyhow::ensure!(s.kv.len() < c.max_seq_len,
-                            "sequence too long");
+            let len = arena.seq_len(s.seq);
+            anyhow::ensure!(len < c.max_seq_len, "sequence too long");
             anyhow::ensure!((s.token as usize) < c.vocab_size,
                             "token oob");
-            max_pos = max_pos.max(s.kv.len());
+            max_pos = max_pos.max(len);
         }
         scratch.block.ensure(t, d, dkv, d_ff, c.vocab_size);
         scratch.rope.ensure(max_pos + 1);
@@ -664,28 +703,28 @@ impl Model {
             // ONE cross-slot fork-join dispatch over the flattened
             // slot x head grid — the last per-sequence serialization
             // in the coalesced tick.  The slot's position at this
-            // layer is the layer's own cache length (SequenceKv::len()
-            // reads layer 0, whose row for this token has already
-            // landed once li > 0 — using it here shifted RoPE by one
-            // position and attended over an uninitialised row for
-            // layers >= 1).
-            for (i, s) in slots.iter_mut().enumerate() {
-                let pos = s.kv.layers[li].len;
+            // layer is the layer's own table length (seq_len() reads
+            // layer 0, whose row for this token has already landed
+            // once li > 0 — using it here shifted RoPE by one position
+            // and attended over an uninitialised row for layers >= 1).
+            for (i, s) in slots.iter().enumerate() {
+                let pos = arena.layer_len(s.seq, li);
                 scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d], pos);
-                append_kv_block(&mut s.kv.layers[li], &scratch.rope,
-                                &bb.k[i * dkv..(i + 1) * dkv],
-                                &bb.v[i * dkv..(i + 1) * dkv], 1);
+                arena.append_kv_block(s.seq, li, &scratch.rope,
+                                      &bb.k[i * dkv..(i + 1) * dkv],
+                                      &bb.v[i * dkv..(i + 1) * dkv],
+                                      1)?;
             }
-            // t <= max_decode_batch pointers, rebuilt per layer: the
-            // Vec cannot be recycled across iterations because its
-            // element lifetime would pin the slot borrow across the
-            // next layer's `slots.iter_mut()` phase.
-            let caches: Vec<&KvCache> = slots.iter()
-                .map(|s| &s.kv.layers[li])
+            // t <= max_decode_batch page-table views, rebuilt per
+            // layer (they borrow the arena, which the append phase
+            // above needs mutably).
+            let views: Vec<_> = slots.iter()
+                .map(|s| arena.layer(s.seq, li))
                 .collect();
-            attention_cross_slots(c, &bb.q[..t * d], &caches,
+            attention_cross_slots(c, &bb.q[..t * d], &views,
                                   &mut scratch.attn, pool,
                                   &mut bb.ctx[..t * d]);
+            drop(views);
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
                                 &mut scratch.engine,
                                 &mut bb.attn_out[..t * d]);
@@ -730,13 +769,13 @@ impl Model {
     /// Used by the PPL evaluator and the golden-vector parity tests.
     pub fn forward_logits(&self, tokens: &[u32], precision: Precision)
                           -> Result<Vec<f32>> {
-        let mut kv = self.new_kv();
+        let (mut arena, seq) = self.new_kv();
         let mut scratch = self.new_scratch();
         let mut stats = DecodeStats::new(self.cfg.n_layers);
         let mut out = Vec::with_capacity(tokens.len()
             * self.cfg.vocab_size);
-        self.prefill_logits(tokens, &mut kv, precision, &mut scratch,
-                            &mut stats, &mut out)?;
+        self.prefill_logits(tokens, &mut arena, seq, precision,
+                            &mut scratch, &mut stats, &mut out)?;
         Ok(out)
     }
 
@@ -746,15 +785,15 @@ impl Model {
     /// run in ctx-length windows through the batched prefill.
     pub fn attn_inputs(&self, tokens: &[u32], layer: usize,
                        precision: Precision) -> Result<Vec<Vec<f32>>> {
-        let mut kv = self.new_kv();
+        let (mut arena, seq) = self.new_kv();
         let mut scratch = self.new_scratch();
         let mut stats = DecodeStats::new(self.cfg.n_layers);
         let mut out = Vec::with_capacity(tokens.len());
         let win = self.cfg.max_seq_len.saturating_sub(1).max(1);
         for window in tokens.chunks(win) {
-            kv.reset();
+            arena.reset_seq(seq);
             for chunk in window.chunks(MAX_PREFILL_BLOCK) {
-                self.prefill_inner(chunk, &mut kv, precision,
+                self.prefill_inner(chunk, &mut arena, seq, precision,
                                    &mut scratch, &mut stats, None,
                                    Some((layer, &mut out)))?;
             }
@@ -767,18 +806,19 @@ impl Model {
     pub fn generate(&self, prompt: &[u32], n_new: usize,
                     precision: Precision, stats: &mut DecodeStats)
                     -> Result<Vec<u32>> {
-        let mut kv = self.new_kv();
+        let (mut arena, seq) = self.new_kv();
         let mut scratch = self.new_scratch();
         let mut toks = prompt.to_vec();
         if n_new == 0 || prompt.is_empty() {
             return Ok(toks);
         }
-        self.prefill(prompt, &mut kv, precision, &mut scratch, stats)?;
+        self.prefill(prompt, &mut arena, seq, precision, &mut scratch,
+                     stats)?;
         toks.push(argmax(&scratch.logits) as u32);
         for _ in 1..n_new {
             let last = *toks.last().unwrap();
-            self.decode_step(last, &mut kv, precision, &mut scratch,
-                             stats)?;
+            self.decode_step(last, &mut arena, seq, precision,
+                             &mut scratch, stats)?;
             toks.push(argmax(&scratch.logits) as u32);
         }
         Ok(toks)

@@ -100,6 +100,16 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     h
 }
 
+/// Counter ratio guarded against an empty denominator (hit rates,
+/// skip fractions — e.g. the KV prefix-cache hit rate in
+/// `coordinator::metrics` and the Fig. 7 memory accounting).
+pub fn rate(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        return 0.0;
+    }
+    num as f64 / den as f64
+}
+
 /// Overlap fraction between two index sets (outlier-migration metric,
 /// App. E.1/E.2: "top outlier tokens overlap by only 41% / 16%").
 pub fn overlap_fraction(a: &[usize], b: &[usize]) -> f64 {
@@ -145,6 +155,12 @@ mod tests {
     fn overlap() {
         assert_eq!(overlap_fraction(&[1, 2, 3, 4], &[3, 4, 5, 6]), 0.5);
         assert_eq!(overlap_fraction(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn rate_guards_zero() {
+        assert_eq!(rate(0, 0), 0.0);
+        assert_eq!(rate(3, 4), 0.75);
     }
 
     #[test]

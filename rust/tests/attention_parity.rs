@@ -141,13 +141,14 @@ fn parallel_path_bit_identical_on_large_blocks() {
 
 fn per_token_logits(model: &mobiquant::model::Model, tokens: &[u32],
                     prec: Precision) -> Vec<f32> {
-    let mut kv = model.new_kv();
+    let (mut arena, seq) = model.new_kv();
     let mut scratch = model.new_scratch();
     let mut stats = DecodeStats::new(model.cfg.n_layers);
     let mut out = Vec::with_capacity(tokens.len()
         * model.cfg.vocab_size);
     for &tok in tokens {
-        model.decode_step(tok, &mut kv, prec, &mut scratch, &mut stats)
+        model.decode_step(tok, &mut arena, seq, prec, &mut scratch,
+                          &mut stats)
             .unwrap();
         out.extend_from_slice(&scratch.logits);
     }

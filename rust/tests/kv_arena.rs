@@ -1,0 +1,302 @@
+//! Paged KV arena parity + lifecycle, against the slab oracle and the
+//! serving stack.  All on synthetic models/caches, so no
+//! `make artifacts` is needed.
+//!
+//! The parity bar (ISSUE 4): forwards over the arena must be
+//! bit-identical to the slab oracle under the same kernel, including
+//! sequences spanning page boundaries (T = 63/64/65/129) and COW forks
+//! mid-page; the scheduler must queue (not panic) when the arena runs
+//! out of pages, and retire must make those pages reusable.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use mobiquant::bench_support::synth_model_shaped;
+use mobiquant::coordinator::batcher::Batcher;
+use mobiquant::coordinator::controller::{ControllerConfig,
+                                         ElasticController};
+use mobiquant::coordinator::request::{Request, Response};
+use mobiquant::coordinator::scheduler::Scheduler;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::attention::{append_kv_block, attention_block,
+                                  AttnScratch, RopeCache};
+use mobiquant::model::kvcache::KvCache;
+use mobiquant::model::transformer::DecodeStats;
+use mobiquant::model::weights::ModelConfig;
+use mobiquant::model::{KvArena, KV_PAGE};
+use mobiquant::util::prng::Pcg;
+
+const TOL: f32 = 1e-4;
+
+fn attn_cfg(n_heads: usize, n_kv_heads: usize, hd: usize,
+            max_seq: usize) -> ModelConfig {
+    ModelConfig {
+        name: "arena".into(),
+        vocab_size: 16,
+        d_model: n_heads * hd,
+        n_layers: 1,
+        n_heads,
+        n_kv_heads,
+        d_ff: 16,
+        max_seq_len: max_seq,
+        rope_theta: 1e4,
+        norm_eps: 1e-5,
+        n_slices: 4,
+        slice_bits: 2,
+        group_size: 32,
+        router_hidden: 8,
+    }
+}
+
+/// The core storage-parity pin: identical K/V blocks appended to the
+/// contiguous slab and to the paged arena (in uneven chunks that cross
+/// page boundaries), then the *same* tiled kernel over both — outputs
+/// must be exactly equal, at lengths straddling 1 and 2 page seams.
+#[test]
+fn arena_attention_bit_identical_to_slab_oracle() {
+    let (n_heads, n_kv, hd) = (4usize, 2usize, 16usize);
+    let max_seq = 3 * KV_PAGE;
+    let cfg = attn_cfg(n_heads, n_kv, hd, max_seq);
+    let d = cfg.d_model;
+    let w = n_kv * hd;
+    for &t in &[63usize, 64, 65, 129] {
+        let mut rng = Pcg::new(300 + t as u64);
+        let k_block = rng.normal_vec(t * w, 1.0);
+        let v_block = rng.normal_vec(t * w, 1.0);
+        let mut rope = RopeCache::new(hd, cfg.rope_theta);
+        rope.ensure(t);
+
+        let mut slab = KvCache::new(max_seq, n_kv, hd);
+        let mut arena = KvArena::new(1, max_seq, n_kv, hd, 4);
+        let seq = arena.alloc_seq();
+        // uneven appends so arena page claims land mid-block
+        let mut fed = 0usize;
+        for chunk in [50usize, 31, 64, 64] {
+            let n = chunk.min(t - fed);
+            if n == 0 {
+                break;
+            }
+            let lo = fed * w;
+            append_kv_block(&mut slab, &rope,
+                            &k_block[lo..(fed + n) * w],
+                            &v_block[lo..(fed + n) * w], n);
+            arena.append_kv_block(seq, 0, &rope,
+                                  &k_block[lo..(fed + n) * w],
+                                  &v_block[lo..(fed + n) * w], n)
+                .unwrap();
+            fed += n;
+        }
+        assert_eq!(fed, t);
+        assert_eq!(arena.seq_len(seq), t);
+
+        let mut sc = AttnScratch::new();
+        // whole-block prefill shape
+        let q = rng.normal_vec(t * d, 1.0);
+        let mut out_slab = vec![0f32; t * d];
+        attention_block(&cfg, &q, &slab, 0, t, &mut sc, None,
+                        &mut out_slab);
+        let mut out_arena = vec![0f32; t * d];
+        let view = arena.layer(seq, 0);
+        attention_block(&cfg, &q, &view, 0, t, &mut sc, None,
+                        &mut out_arena);
+        assert_eq!(out_slab, out_arena,
+                   "T={t}: paged attention diverged from the slab");
+
+        // single-query decode shape at the last position
+        let q1 = rng.normal_vec(d, 1.0);
+        let mut d_slab = vec![0f32; d];
+        attention_block(&cfg, &q1, &slab, t - 1, 1, &mut sc, None,
+                        &mut d_slab);
+        let mut d_arena = vec![0f32; d];
+        let view = arena.layer(seq, 0);
+        attention_block(&cfg, &q1, &view, t - 1, 1, &mut sc, None,
+                        &mut d_arena);
+        assert_eq!(d_slab, d_arena, "T={t}: decode shape diverged");
+    }
+}
+
+/// Arena-backed `forward_logits` (block prefill) vs per-token
+/// `decode_step` right below / at / past page seams.
+#[test]
+fn arena_forward_parity_at_page_boundaries() {
+    let model = synth_model_shaped(7, 4, 2, 160);
+    let prec = Precision::Fixed(2);
+    for &t in &[KV_PAGE - 1, KV_PAGE, KV_PAGE + 1, 2 * KV_PAGE + 1] {
+        let tokens: Vec<u32> = (0..t)
+            .map(|i| ((i * 7 + 3) % model.cfg.vocab_size) as u32)
+            .collect();
+        let block = model.forward_logits(&tokens, prec).unwrap();
+
+        let (mut arena, seq) = model.new_kv();
+        let mut scratch = model.new_scratch();
+        let mut stats = DecodeStats::new(model.cfg.n_layers);
+        let mut per_tok = Vec::new();
+        for &tok in &tokens {
+            model.decode_step(tok, &mut arena, seq, prec, &mut scratch,
+                              &mut stats).unwrap();
+            per_tok.extend_from_slice(&scratch.logits);
+        }
+        assert_eq!(block.len(), per_tok.len());
+        for (i, (a, b)) in block.iter().zip(&per_tok).enumerate() {
+            assert!((a - b).abs() < TOL,
+                    "T={t} logits[{i}]: block {a} vs per-token {b}");
+        }
+    }
+}
+
+/// COW fork mid-page: a fork sharing 100 positions (1.5 pages) and its
+/// source, fed the same continuation, must produce bit-identical
+/// logits — and both must equal a cold sequence fed the full stream
+/// (same kernels, same positions, so exactly equal, not just close).
+#[test]
+fn cow_fork_mid_page_parity() {
+    let model = synth_model_shaped(95, 4, 2, 256);
+    let prec = Precision::Fixed(2);
+    let mut arena = model.new_arena(4);
+    let mut scratch = model.new_scratch();
+    let tok = |i: usize| ((i * 5 + 11) % model.cfg.vocab_size) as u32;
+    let shared = 100usize; // mid-page: 1 full page + 36 rows
+    let cont: Vec<u32> = (0..20).map(|i| tok(1000 + i)).collect();
+
+    let a = arena.alloc_seq();
+    let mut sa = DecodeStats::new(model.cfg.n_layers);
+    for i in 0..shared {
+        model.decode_step(tok(i), &mut arena, a, prec, &mut scratch,
+                          &mut sa).unwrap();
+    }
+    let resident_before = arena.resident_pages();
+    let b = arena.fork_prefix(a, shared);
+    assert_eq!(arena.resident_pages(), resident_before,
+               "fork must not copy pages");
+    assert_eq!(arena.seq_len(b), shared);
+
+    // source first (COWs the shared partial page), then the fork
+    let mut la = Vec::new();
+    for &tk in &cont {
+        model.decode_step(tk, &mut arena, a, prec, &mut scratch,
+                          &mut sa).unwrap();
+        la.extend_from_slice(&scratch.logits);
+    }
+    let mut sb = DecodeStats::new(model.cfg.n_layers);
+    let mut lb = Vec::new();
+    for &tk in &cont {
+        model.decode_step(tk, &mut arena, b, prec, &mut scratch,
+                          &mut sb).unwrap();
+        lb.extend_from_slice(&scratch.logits);
+    }
+    assert_eq!(la, lb, "fork diverged from source after COW");
+
+    // cold recompute of the full stream
+    let c = arena.alloc_seq();
+    let mut sc = DecodeStats::new(model.cfg.n_layers);
+    let mut lc = Vec::new();
+    for i in 0..shared {
+        model.decode_step(tok(i), &mut arena, c, prec, &mut scratch,
+                          &mut sc).unwrap();
+    }
+    for &tk in &cont {
+        model.decode_step(tk, &mut arena, c, prec, &mut scratch,
+                          &mut sc).unwrap();
+        lc.extend_from_slice(&scratch.logits);
+    }
+    assert_eq!(la, lc, "shared-page path diverged from cold recompute");
+
+    // lifecycle: freeing all three returns every page
+    arena.free_seq(a);
+    arena.free_seq(b);
+    arena.free_seq(c);
+    assert_eq!(arena.resident_pages(), 0);
+}
+
+fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize)
+          -> (Request, mpsc::Receiver<Response>) {
+    let (tx, rx) = mpsc::channel();
+    (Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        submitted: Instant::now(),
+        reply: tx,
+    }, rx)
+}
+
+fn fixed_controller() -> ElasticController {
+    ElasticController::new(ControllerConfig {
+        min_bits: 4.0,
+        max_bits: 4.0,
+        ..ControllerConfig::default()
+    })
+}
+
+/// Out-of-pages admission backpressure: with a 3-page budget and
+/// 2-page requests, only one sequence runs at a time; the others queue
+/// (no panic), retire frees their pages, and everyone completes.
+#[test]
+fn out_of_pages_queues_and_retire_readmits() {
+    let model = synth_model_shaped(93, 4, 2, 128);
+    assert_eq!(model.cfg.n_layers, 2);
+    let batcher = Batcher::new(4, 16).with_kv_budget(3);
+    let mut sched = Scheduler::new(&model, batcher, fixed_controller());
+    let mut rxs = Vec::new();
+    for id in 0..3u64 {
+        // distinct 40-token prompts, 4 new tokens: worst case is
+        // 2 layers x 1 page = 2 pages per request
+        let prompt: Vec<u32> = (0..40)
+            .map(|i| ((i * 3 + 7 * id as usize) % 256) as u32)
+            .collect();
+        let (req, rx) = mk_req(id, prompt, 4);
+        sched.submit(req);
+        rxs.push(rx);
+    }
+    sched.tick(0.0).unwrap();
+    assert_eq!(sched.n_active(), 1,
+               "page budget must gate admission to one sequence");
+    assert_eq!(sched.batcher.queued(), 2);
+    assert!(sched.batcher.deferred() > 0,
+            "blocked admissions must be counted, not panicked");
+
+    sched.run_to_completion(|_| 0.0).unwrap();
+    for rx in rxs {
+        let resp = rx.try_recv().expect("every queued request finishes");
+        assert_eq!(resp.metrics.generated_tokens, 4);
+    }
+    assert_eq!(sched.metrics.requests_completed, 3);
+    assert!(sched.metrics.admissions_deferred > 0);
+    assert!(sched.arena.peak_resident_pages() <= 3,
+            "budget must bound peak residency");
+    assert_eq!(sched.arena.resident_pages(), 0,
+               "retire must return all pages (no prefix cache here: \
+                prompts are shorter than one page)");
+}
+
+/// Shared-prefix serving: a second identical prompt forks the cached
+/// prefix pages instead of recomputing them — same output tokens, one
+/// cache hit, one page-aligned prefix worth of prefill skipped.
+#[test]
+fn prefix_sharing_matches_cold_run() {
+    let model = synth_model_shaped(91, 4, 2, 256);
+    let batcher = Batcher::new(2, 16);
+    let mut sched = Scheduler::new(&model, batcher, fixed_controller());
+    let prompt: Vec<u32> = (0..80)
+        .map(|i| ((i * 7 + 3) % 256) as u32)
+        .collect();
+
+    let (r1, rx1) = mk_req(0, prompt.clone(), 6);
+    sched.submit(r1);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    let cold = rx1.try_recv().expect("cold response");
+    assert_eq!(sched.metrics.prefix_hits, 0);
+    assert_eq!(sched.metrics.prefix_misses, 1);
+
+    let (r2, rx2) = mk_req(1, prompt.clone(), 6);
+    sched.submit(r2);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    let warm = rx2.try_recv().expect("warm response");
+
+    assert_eq!(warm.tokens, cold.tokens,
+               "shared-prefix decode must match the cold run exactly");
+    assert_eq!(sched.metrics.prefix_hits, 1);
+    // 80-token prompt -> one full page (64) is shareable
+    assert_eq!(sched.metrics.prefix_tokens_reused, KV_PAGE as u64);
+    assert!(sched.metrics.prefix_hit_rate() > 0.49);
+}

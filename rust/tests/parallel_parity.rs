@@ -85,20 +85,20 @@ fn cross_slot_decode_matches_per_slot_oracle() {
         let mut want_tokens: Vec<Vec<u32>> = Vec::new();
         let mut want_logits: Vec<Vec<f32>> = Vec::new();
         for prompt in &prompts {
-            let mut kv = oracle_model.new_kv();
+            let (mut arena, seq) = oracle_model.new_kv();
             let mut scratch = oracle_model.new_scratch();
             let mut stats = DecodeStats::new(oracle_model.cfg.n_layers);
             let mut toks = Vec::new();
             let mut logits = Vec::new();
             for &tok in prompt {
-                oracle_model.decode_step(tok, &mut kv, prec,
+                oracle_model.decode_step(tok, &mut arena, seq, prec,
                                          &mut scratch, &mut stats)
                     .unwrap();
             }
             let mut last = argmax(&scratch.logits) as u32;
             toks.push(last);
             for _ in 1..=n_new {
-                oracle_model.decode_step(last, &mut kv, prec,
+                oracle_model.decode_step(last, &mut arena, seq, prec,
                                          &mut scratch, &mut stats)
                     .unwrap();
                 logits.extend_from_slice(&scratch.logits);
@@ -110,10 +110,12 @@ fn cross_slot_decode_matches_per_slot_oracle() {
         }
 
         // subject: all slots coalesced through decode_batch on the
-        // pooled model (prefill via per-token decode so both paths
-        // enter decode with identical KV content)
+        // pooled model, all in ONE shared paged arena (prefill via
+        // per-token decode so both paths enter decode with identical
+        // KV content)
         let mut scratch = model.new_scratch();
-        let mut kvs: Vec<_> = (0..n_slots).map(|_| model.new_kv())
+        let mut arena = model.new_arena(n_slots);
+        let seqs: Vec<_> = (0..n_slots).map(|_| arena.alloc_seq())
             .collect();
         let mut stats: Vec<DecodeStats> = (0..n_slots)
             .map(|_| DecodeStats::new(model.cfg.n_layers))
@@ -121,8 +123,8 @@ fn cross_slot_decode_matches_per_slot_oracle() {
         let mut next: Vec<u32> = Vec::new();
         for (s, prompt) in prompts.iter().enumerate() {
             for &tok in prompt {
-                model.decode_step(tok, &mut kvs[s], prec, &mut scratch,
-                                  &mut stats[s]).unwrap();
+                model.decode_step(tok, &mut arena, seqs[s], prec,
+                                  &mut scratch, &mut stats[s]).unwrap();
             }
             next.push(argmax(&scratch.logits) as u32);
         }
@@ -132,11 +134,13 @@ fn cross_slot_decode_matches_per_slot_oracle() {
         for step in 0..n_new {
             {
                 let mut slots: Vec<DecodeSlot> = Vec::new();
-                for ((kv, st), &tok) in kvs.iter_mut()
+                for ((&seq, st), &tok) in seqs.iter()
                     .zip(stats.iter_mut()).zip(&next) {
-                    slots.push(DecodeSlot { token: tok, kv, stats: st });
+                    slots.push(DecodeSlot { token: tok, seq,
+                                            stats: st });
                 }
-                model.decode_batch(&mut slots, prec, &mut scratch)
+                model.decode_batch(&mut slots, &mut arena, prec,
+                                   &mut scratch)
                     .unwrap();
             }
             for s in 0..n_slots {
