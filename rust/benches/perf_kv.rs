@@ -1,108 +1,193 @@
-//! §Perf §KV-Arena — paged KV arena study (EXPERIMENTS.md §KV-Arena).
+//! §Perf §KV-Arena §KV-Quant — paged KV arena study (EXPERIMENTS.md).
 //!
-//! Three questions, all on the synthetic model (no `make artifacts`):
+//! Questions, all on the synthetic model (no `make artifacts`):
 //!
-//! 1. **Decode throughput over the arena** at 1 / 8 / 32 coalesced
-//!    slots — the paged page-table walk must not cost the coalesced
-//!    tick anything measurable vs the old per-slot slabs (the tile
-//!    inner loops are unchanged; only the run base pointer differs).
-//! 2. **Resident KV memory** at the same slot counts: measured arena
-//!    residency vs what the eager slab deployment
-//!    (`KvFootprint::eager_bytes`) would have committed — the
-//!    ISSUE's >= 4x claim for short sequences.
-//! 3. **Shared-prefix prefill**: a 512-token shared prompt attached
+//! 1. **Decode throughput over the arena** at f32 / i8 / u4 page
+//!    storage and ctx ∈ {256, 1024, 4096} — quantized pages stream
+//!    4x/8x fewer cache bytes through the attention tiles (dequant is
+//!    fused into the dot product, scale hoisted per tile), so
+//!    long-context decode should never be slower and gets faster as
+//!    the KV stream stops fitting in cache.
+//! 2. **Resident KV memory** at 1 / 8 / 32 slots x each precision:
+//!    measured arena residency vs the eager f32 slab deployment
+//!    (`KvFootprint::eager_bytes`) and vs the f32 arena — the ISSUE's
+//!    >= 4x (i8) / 8x (u4) residency reduction at equal slot count.
+//! 3. **Admission under a fixed budget**: the scheduler, given the
+//!    same `kv_page_budget`, must admit >= 4x the slots when requests
+//!    store KV at i8 (byte-accurate worst-case reservation).
+//! 4. **Shared-prefix prefill**: a 512-token shared prompt attached
 //!    from the prefix pages + a 32-token unique tail, vs cold-filling
-//!    all 544 tokens — the "million users, one system prompt" path
-//!    (>= 90% of prefill work skipped by construction: 512/544).
+//!    all 544 tokens — the "million users, one system prompt" path.
 //!
 //! Writes `target/bench_reports/BENCH_kv.json`.
 
-use mobiquant::bench_support::synth_model_shaped;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use mobiquant::bench_support::{kv_footprint, synth_model_shaped};
+use mobiquant::coordinator::batcher::Batcher;
+use mobiquant::coordinator::controller::{ControllerConfig,
+                                         ElasticController};
+use mobiquant::coordinator::request::Request;
+use mobiquant::coordinator::scheduler::Scheduler;
 use mobiquant::mobiq::engine::Precision;
-use mobiquant::mobiq::footprint::KvFootprint;
 use mobiquant::model::transformer::{DecodeSlot, DecodeStats};
-use mobiquant::model::KV_PAGE;
+use mobiquant::model::{KvPrecision, KV_PAGE};
 use mobiquant::util::bench::{black_box, Suite};
+
+const KV_PRECS: [KvPrecision; 3] =
+    [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4];
 
 fn main() {
     let mut suite = Suite::new("BENCH_kv");
     suite.header();
     let prec = Precision::Fixed(2);
 
-    // one model shape for the whole study: 4h/2kv, head_dim 16,
-    // 2 layers, ctx budget 1024 (so the shared 512-token prompt fits
-    // with a tail and generation headroom)
+    // one model shape for the residency/prefix studies: 4h/2kv,
+    // head_dim 16, 2 layers, ctx budget 1024 (so the shared 512-token
+    // prompt fits with a tail and generation headroom)
     let model = synth_model_shaped(201, 4, 2, 1024);
     let cfg = &model.cfg;
-    let fp = KvFootprint {
-        n_layers: cfg.n_layers,
-        n_kv_heads: cfg.n_kv_heads,
-        head_dim: cfg.head_dim(),
-        max_seq_len: cfg.max_seq_len,
-        kv_page: KV_PAGE,
-    };
+    let fp = kv_footprint(cfg);
 
-    // ---------------- decode throughput + residency vs slots ---------
+    // ---------------- residency vs slots x precision ------------------
     let prompt_len = 48usize; // short sequences: under one page
-    for &n_slots in &[1usize, 8, 32] {
-        let mut arena = model.new_arena(n_slots);
-        let mut scratch = model.new_scratch();
-        let seqs: Vec<_> = (0..n_slots).map(|_| arena.alloc_seq())
-            .collect();
-        let mut stats: Vec<DecodeStats> = (0..n_slots)
-            .map(|_| DecodeStats::new(cfg.n_layers))
-            .collect();
-        let prompts: Vec<Vec<u32>> = (0..n_slots)
-            .map(|s| (0..prompt_len)
-                .map(|i| ((i * 5 + 7 * s + 2) % 256) as u32)
-                .collect())
-            .collect();
-        let mut dstats = DecodeStats::new(cfg.n_layers);
-        for (s, p) in prompts.iter().enumerate() {
-            model.prefill(p, &mut arena, seqs[s], prec, &mut scratch,
-                          &mut dstats).unwrap();
+    for &kvp in &KV_PRECS {
+        for &n_slots in &[1usize, 8, 32] {
+            let mut arena = model.new_arena(n_slots);
+            let mut scratch = model.new_scratch();
+            let seqs: Vec<_> = (0..n_slots)
+                .map(|_| arena.alloc_seq_at(kvp))
+                .collect();
+            let mut dstats = DecodeStats::new(cfg.n_layers);
+            for (s, &seq) in seqs.iter().enumerate() {
+                let p: Vec<u32> = (0..prompt_len)
+                    .map(|i| ((i * 5 + 7 * s + 2) % 256) as u32)
+                    .collect();
+                model.prefill(&p, &mut arena, seq, prec, &mut scratch,
+                              &mut dstats).unwrap();
+            }
+            // measured arena residency vs the eager f32 slab
+            // deployment AND vs the f32 arena at the same slot count
+            // (the ISSUE >= 4x/8x claims)
+            let resident = arena.resident_bytes();
+            let eager = fp.eager_bytes(n_slots);
+            let lens = vec![prompt_len; n_slots];
+            let f32_arena = fp.paged_bytes(&lens);
+            // acceptance bars, asserted so regenerated rows can never
+            // silently regress: >= 4x vs eager slabs, and exactly the
+            // storage ratio vs an f32 arena (4x i8 / 8x u4)
+            assert!(eager >= 4 * resident,
+                    "{} {n_slots} slots: eager {eager} < 4x resident \
+                     {resident}", kvp.label());
+            assert_eq!(resident * fp.page_bytes()
+                           / fp.page_bytes_at(kvp),
+                       f32_arena,
+                       "{} {n_slots} slots: measured residency is not \
+                        the exact storage ratio", kvp.label());
+            suite.row(&format!("kv memory {} {n_slots} slots @len \
+                                {prompt_len}", kvp.label()),
+                      &[
+                ("arena_resident_bytes", resident as f64),
+                ("eager_slab_bytes", eager as f64),
+                ("eager_over_arena",
+                 eager as f64 / resident.max(1) as f64),
+                ("f32_arena_over_arena",
+                 f32_arena as f64 / resident.max(1) as f64),
+            ]);
         }
-        // memory: measured arena residency vs the eager slab
-        // deployment at the same slot count (the ISSUE >= 4x claim)
-        let resident = arena.resident_bytes();
-        let eager = fp.eager_bytes(n_slots);
-        suite.row(&format!("kv memory {n_slots} slots @len {prompt_len}"),
-                  &[
-            ("arena_resident_bytes", resident as f64),
-            ("eager_slab_bytes", eager as f64),
-            ("eager_over_arena", eager as f64 / resident.max(1) as f64),
-        ]);
+    }
 
-        let mut len = prompt_len;
-        let ns = suite.bench(
-            &format!("decode_batch {n_slots} slots"), || {
-                if len + 1 >= cfg.max_seq_len {
-                    for (s, p) in prompts.iter().enumerate() {
-                        arena.reset_seq(seqs[s]);
-                        model.prefill(p, &mut arena, seqs[s], prec,
-                                      &mut scratch, &mut dstats)
+    // ---------------- decode tok/s vs ctx x precision -----------------
+    // taller ctx budget so the 4096 point exists; decode advances one
+    // token per tick from the prefilled context
+    let tall = synth_model_shaped(202, 4, 2, 4352);
+    let tcfg = &tall.cfg;
+    for &kvp in &KV_PRECS {
+        for &ctx in &[256usize, 1024, 4096] {
+            let mut arena = tall.new_arena(1);
+            let mut scratch = tall.new_scratch();
+            let seq = arena.alloc_seq_at(kvp);
+            let mut dstats = DecodeStats::new(tcfg.n_layers);
+            let prompt: Vec<u32> = (0..ctx)
+                .map(|i| ((i * 5 + 2) % 256) as u32)
+                .collect();
+            tall.prefill(&prompt, &mut arena, seq, prec, &mut scratch,
+                         &mut dstats).unwrap();
+            let mut stats = DecodeStats::new(tcfg.n_layers);
+            let ns = suite.bench(
+                &format!("decode {} ctx {ctx}", kvp.label()), || {
+                    if arena.seq_len(seq) + 1 >= tcfg.max_seq_len {
+                        arena.reset_seq(seq);
+                        tall.prefill(&prompt, &mut arena, seq, prec,
+                                     &mut scratch, &mut dstats)
                             .unwrap();
                     }
-                    len = prompt_len;
-                }
-                let mut slots: Vec<DecodeSlot> = seqs.iter()
-                    .zip(stats.iter_mut())
-                    .map(|(&seq, st)| DecodeSlot {
+                    let mut slots = [DecodeSlot {
                         token: 65,
                         seq,
-                        stats: st,
-                    })
-                    .collect();
-                model.decode_batch(&mut slots, &mut arena, prec,
-                                   &mut scratch).unwrap();
-                len += 1;
-                black_box(scratch.block.logits[0]);
+                        stats: &mut stats,
+                    }];
+                    tall.decode_batch(&mut slots, &mut arena, prec,
+                                      &mut scratch).unwrap();
+                    black_box(scratch.block.logits[0]);
+                });
+            suite.row(&format!("decode {} ctx {ctx} summary",
+                               kvp.label()),
+                      &[
+                ("ns_per_tok", ns),
+                ("tok_s", 1.0 / (ns * 1e-9)),
+                ("resident_bytes", arena.resident_bytes() as f64),
+            ]);
+        }
+    }
+
+    // ---------------- scheduler admission under a fixed budget --------
+    // worst case per request: prompt 48 + max_new 16 = 1 page/layer =
+    // 2 pages at f32; a 4-page budget admits 2 f32 slots, 8 i8 slots,
+    // 16 u4 slots — byte-accurate reservation converts storage savings
+    // straight into concurrency
+    let mut admitted_by_prec = Vec::new();
+    for &kvp in &KV_PRECS {
+        let batcher = Batcher::new(64, 64).with_kv_budget(4);
+        let controller = ElasticController::new(ControllerConfig {
+            min_bits: 4.0,
+            max_bits: 4.0,
+            ..ControllerConfig::default()
+        });
+        let mut sched = Scheduler::new(&model, batcher, controller);
+        let mut rxs = Vec::new();
+        for id in 0..32u64 {
+            let (tx, rx) = mpsc::channel();
+            sched.submit(Request {
+                id,
+                prompt: (0..prompt_len)
+                    .map(|i| ((i * 3 + id as usize) % 256) as u32)
+                    .collect(),
+                max_new_tokens: 16,
+                kv_precision: kvp,
+                submitted: Instant::now(),
+                reply: tx,
             });
-        suite.row(&format!("decode {n_slots} slots summary"), &[
-            ("ns_per_tick", ns),
-            ("tok_s", n_slots as f64 / (ns * 1e-9)),
+            rxs.push(rx);
+        }
+        sched.tick(0.0).unwrap();
+        admitted_by_prec.push(sched.n_active());
+        suite.row(&format!("admission {} under 4-page budget",
+                           kvp.label()),
+                  &[
+            ("slots_admitted", sched.n_active() as f64),
+            ("queued", sched.batcher.queued() as f64),
         ]);
     }
+    // asserted acceptance bar: byte-accurate reservation converts the
+    // 4x/8x storage savings into >= 4x/8x admitted slots
+    assert!(admitted_by_prec[1] >= 4 * admitted_by_prec[0],
+            "i8 admitted {} < 4x f32's {}", admitted_by_prec[1],
+            admitted_by_prec[0]);
+    assert!(admitted_by_prec[2] >= 8 * admitted_by_prec[0],
+            "u4 admitted {} < 8x f32's {}", admitted_by_prec[2],
+            admitted_by_prec[0]);
 
     // ---------------- shared-prefix vs cold prefill -------------------
     let shared_len = 8 * KV_PAGE; // 512 tokens, page-aligned
@@ -146,11 +231,13 @@ fn main() {
     ]);
 
     suite.note(&format!(
-        "targets: eager_over_arena >= 4x at 32 short slots (exact \
-         ratio = max_seq/pages: {}/{} pages); prefill_skip_fraction \
-         {:.3} >= 0.9 by construction; cold_over_shared should \
-         approach the linear-work ratio (attention over the shared \
-         ctx is still paid by the tail)",
+        "targets: eager_over_arena >= 4x at 32 short f32 slots (exact \
+         ratio = max_seq/pages: {}/{} pages) and 4x/8x more for i8/u4 \
+         (f32_arena_over_arena is exactly 4/8 — scales are side \
+         metadata); admission: i8 admits >= 4x the f32 slots under \
+         the same 4-page budget; decode tok/s must not regress vs f32 \
+         at any ctx; prefill_skip_fraction {:.3} >= 0.9 by \
+         construction",
         cfg.max_seq_len / KV_PAGE,
         (prompt_len + KV_PAGE - 1) / KV_PAGE,
         shared_len as f64 / total as f64));

@@ -6,6 +6,7 @@
 use anyhow::Result;
 
 use crate::mobiq::artifact::Bundle;
+use crate::mobiq::footprint::KvFootprint;
 use crate::mobiq::bitplane::PackedSlice;
 use crate::mobiq::engine::MobiqLinear;
 use crate::mobiq::quantizer::{decompose, GroupParams};
@@ -144,6 +145,19 @@ pub fn synth_model_shaped(seed: u64, n_heads: usize, n_kv_heads: usize,
         layers,
         cfg,
         pool: None,
+    }
+}
+
+/// [`KvFootprint`] matching a model's shape — the analytic counterpart
+/// the KV benches and reports compare measured arena residency
+/// against.
+pub fn kv_footprint(cfg: &ModelConfig) -> KvFootprint {
+    KvFootprint {
+        n_layers: cfg.n_layers,
+        n_kv_heads: cfg.n_kv_heads,
+        head_dim: cfg.head_dim(),
+        max_seq_len: cfg.max_seq_len,
+        kv_page: crate::model::KV_PAGE,
     }
 }
 

@@ -1,9 +1,11 @@
 //! Admission queue + continuous batching.
 //!
 //! Requests park in a FIFO until the scheduler has a free sequence slot
-//! (bounded by `max_active`) AND enough free KV pages for the
-//! request's worst-case context (page-based backpressure over the
-//! paged arena — see [`Batcher::admit_with`]).  The invariants checked
+//! (bounded by `max_active`) AND enough free KV budget for the
+//! request's worst-case context (byte-accurate backpressure over the
+//! paged arena — a request whose KV stores at i8 needs a quarter of an
+//! f32 request's bytes; see [`Batcher::admit_with`]).  The invariants
+//! checked
 //! by the property tests: no request is lost or duplicated, admission
 //! order is FIFO, and the active count never exceeds the cap.
 //!
@@ -26,11 +28,12 @@ pub struct Batcher {
     /// Cap on sequences coalesced into one batched decode call; bounds
     /// the kernel's per-token LUT scratch (one TokenLut block each).
     pub max_decode_batch: usize,
-    /// KV arena capacity in pages.  `None` sizes the arena so every
-    /// `max_active` slot can reach full context (no page pressure —
-    /// the pre-arena behaviour); `Some(p)` lets the deployment commit
-    /// less memory than the worst case and queue requests when pages
-    /// run short.
+    /// KV arena capacity in **f32-page equivalents** (the byte budget
+    /// is this many f32 pages; quantized pages draw proportionally
+    /// less of it).  `None` sizes the arena so every `max_active` slot
+    /// can reach full context (no page pressure — the pre-arena
+    /// behaviour); `Some(p)` lets the deployment commit less memory
+    /// than the worst case and queue requests when bytes run short.
     pub kv_page_budget: Option<usize>,
     admitted: u64,
     rejected: u64,
@@ -81,29 +84,32 @@ impl Batcher {
     }
 
     /// Pop as many requests as fit beside `n_active` running sequences
-    /// (slot cap only — no page accounting).
+    /// (slot cap only — no budget accounting).
     pub fn admit(&mut self, n_active: usize) -> Vec<Request> {
         self.admit_with(n_active, usize::MAX, |_| 0)
     }
 
     /// Pop requests that fit beside `n_active` running sequences AND
-    /// whose worst-case KV page needs (computed by `need`, which may
-    /// discount shared-prefix pages) fit in `free_pages`.  Admission
-    /// stays strictly FIFO: the first queued request that does not fit
-    /// blocks the queue — later, smaller requests are not admitted
-    /// around it (no starvation), and the deferral is counted.
-    pub fn admit_with(&mut self, n_active: usize, mut free_pages: usize,
+    /// whose worst-case KV budget needs (computed by `need` — bytes on
+    /// the serving path, accounting for the request's KV storage
+    /// precision and any shared-prefix discount) fit in `free_budget`.
+    /// Admission stays strictly FIFO: the first queued request that
+    /// does not fit blocks the queue — later, smaller requests are not
+    /// admitted around it (no starvation), and the deferral is
+    /// counted.
+    pub fn admit_with(&mut self, n_active: usize,
+                      mut free_budget: usize,
                       mut need: impl FnMut(&Request) -> usize)
                       -> Vec<Request> {
         let mut out = Vec::new();
         while n_active + out.len() < self.max_active {
             let Some(front) = self.queue.front() else { break };
-            let pages = need(front);
-            if pages > free_pages {
+            let cost = need(front);
+            if cost > free_budget {
                 self.deferred += 1;
                 break;
             }
-            free_pages -= pages;
+            free_budget -= cost;
             out.push(self.queue.pop_front().unwrap());
         }
         self.admitted += out.len() as u64;
@@ -120,7 +126,7 @@ impl Batcher {
     }
 
     /// Remove the queue head without admitting it — the scheduler uses
-    /// this to reject a request whose worst-case KV pages exceed the
+    /// this to reject a request whose worst-case KV bytes exceed the
     /// whole arena (it could never run and would deadlock the FIFO).
     pub fn drop_head(&mut self) -> Option<Request> {
         let r = self.queue.pop_front();
@@ -139,7 +145,7 @@ impl Batcher {
     }
 
     /// Times admission stopped because the queue head's worst-case KV
-    /// pages did not fit the arena's free pages.
+    /// bytes did not fit the arena's free budget.
     pub fn deferred(&self) -> u64 {
         self.deferred
     }
@@ -163,6 +169,7 @@ mod tests {
             id,
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
+            kv_precision: crate::model::kvcache::KvPrecision::F32,
             submitted: Instant::now(),
             reply: tx,
         }, rx)

@@ -1,5 +1,6 @@
 //! Serving metrics: counters + streaming latency histograms.
 
+use crate::model::kvcache::{KvArena, KvPrecision};
 use crate::util::stats;
 
 #[derive(Debug, Default, Clone)]
@@ -12,14 +13,29 @@ pub struct Metrics {
     pub target_bits_series: Vec<f64>,
     pub rejected: u64,
     // -- paged KV arena accounting (Fig. 7-style memory view) --------
-    /// Arena page budget.
+    /// Arena budget in f32-page equivalents.
     pub kv_pages_capacity: usize,
-    /// Pages mapped at the last tick.
+    /// Pages mapped at the last tick (count across precisions; pages
+    /// of different precisions are different sizes — byte-accurate
+    /// numbers are below).
     pub kv_pages_resident: usize,
     /// High-water mark of mapped pages over the run.
     pub kv_pages_resident_peak: usize,
-    /// Bytes of one KV page (both sides), for report scaling.
+    /// Bytes of one f32 KV page (both sides), for report scaling.
     pub kv_page_bytes: usize,
+    /// Arena byte budget.
+    pub kv_bytes_capacity: usize,
+    /// Data bytes mapped at the last tick.
+    pub kv_bytes_resident: usize,
+    /// High-water mark of mapped bytes over the run.
+    pub kv_bytes_resident_peak: usize,
+    /// Resident page counts per storage precision at the last tick.
+    pub kv_pages_f32: usize,
+    pub kv_pages_i8: usize,
+    pub kv_pages_u4: usize,
+    /// Bytes the resident quantized pages save vs storing them at f32
+    /// (4x for i8 pages, 8x for i4).
+    pub kv_bytes_saved_vs_f32: usize,
     /// Admissions satisfied (partly) from the shared-prefix cache.
     pub prefix_hits: u64,
     /// Admissions that found no usable shared prefix.
@@ -49,13 +65,20 @@ impl Metrics {
         self.target_bits_series.push(target_bits);
     }
 
-    /// Snapshot the arena's page occupancy (called once per tick).
-    pub fn record_kv(&mut self, capacity: usize, resident: usize,
-                     peak: usize, page_bytes: usize) {
-        self.kv_pages_capacity = capacity;
-        self.kv_pages_resident = resident;
-        self.kv_pages_resident_peak = peak;
-        self.kv_page_bytes = page_bytes;
+    /// Snapshot the arena's page and byte occupancy (called once per
+    /// tick).
+    pub fn record_kv(&mut self, arena: &KvArena) {
+        self.kv_pages_capacity = arena.capacity_pages();
+        self.kv_pages_resident = arena.resident_pages();
+        self.kv_pages_resident_peak = arena.peak_resident_pages();
+        self.kv_page_bytes = arena.page_bytes();
+        self.kv_bytes_capacity = arena.capacity_bytes();
+        self.kv_bytes_resident = arena.resident_bytes();
+        self.kv_bytes_resident_peak = arena.peak_resident_bytes();
+        self.kv_pages_f32 = arena.resident_pages_at(KvPrecision::F32);
+        self.kv_pages_i8 = arena.resident_pages_at(KvPrecision::Int8);
+        self.kv_pages_u4 = arena.resident_pages_at(KvPrecision::Int4);
+        self.kv_bytes_saved_vs_f32 = arena.bytes_saved_vs_f32();
     }
 
     /// Fraction of admissions that reused a shared prompt prefix.
@@ -64,8 +87,10 @@ impl Metrics {
             + self.prefix_misses)
     }
 
+    /// Peak resident KV bytes (measured — quantized pages count at
+    /// their real size, not the f32-page estimate).
     pub fn kv_peak_bytes(&self) -> usize {
-        self.kv_pages_resident_peak * self.kv_page_bytes
+        self.kv_bytes_resident_peak
     }
 
     pub fn p50_token_ms(&self) -> f64 {
@@ -89,8 +114,9 @@ impl Metrics {
         format!(
             "requests={} tokens={} tput={:.1} tok/s p50_tok={:.2}ms \
              p99_tok={:.2}ms mean_req={:.1}ms rejected={} \
-             kv_pages_peak={}/{} prefix_hit_rate={:.2} \
-             prefix_tokens_reused={} deferred={}",
+             kv_pages_peak={}/{} kv_bytes_peak={}/{} \
+             kv_pages_f32/i8/u4={}/{}/{} kv_saved_vs_f32={}B \
+             prefix_hit_rate={:.2} prefix_tokens_reused={} deferred={}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tokens_per_s(wall_s),
@@ -100,6 +126,12 @@ impl Metrics {
             self.rejected,
             self.kv_pages_resident_peak,
             self.kv_pages_capacity,
+            self.kv_bytes_resident_peak,
+            self.kv_bytes_capacity,
+            self.kv_pages_f32,
+            self.kv_pages_i8,
+            self.kv_pages_u4,
+            self.kv_bytes_saved_vs_f32,
             self.prefix_hit_rate(),
             self.prefix_tokens_reused,
             self.admissions_deferred,

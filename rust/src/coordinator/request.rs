@@ -3,6 +3,8 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
+use crate::model::kvcache::KvPrecision;
+
 pub type RequestId = u64;
 
 #[derive(Debug)]
@@ -10,6 +12,11 @@ pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<u32>,
     pub max_new_tokens: usize,
+    /// Storage precision of this sequence's KV pages — an i8 request
+    /// reserves a quarter of an f32 request's bytes at admission (and
+    /// only matches prefix-cache entries written at i8).  Defaults to
+    /// `ServerConfig::kv_precision` when submitted through the server.
+    pub kv_precision: KvPrecision,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Response>,
 }

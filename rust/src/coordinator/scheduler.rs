@@ -3,9 +3,10 @@
 //!
 //! Each tick the scheduler (1) picks the tick's precision from the
 //! elastic controller, (2) admits queued requests against *real free
-//! page counts* (worst-case pages for prompt + generation headroom,
-//! discounted by any shared prompt prefix found in the prefix cache —
-//! not worst-case bytes as the eager slab era did), (3) advances every
+//! byte counts* (worst-case bytes for prompt + generation headroom at
+//! the request's KV storage precision — an i8 request reserves a
+//! quarter of an f32 one — discounted by any shared prompt prefix
+//! found in the prefix cache), (3) advances every
 //! active sequence by one token — prefilling sequences consume a whole
 //! prompt chunk through one batched kernel call, and all decoding
 //! sequences are **coalesced into one batched call per layer**
@@ -19,11 +20,14 @@
 //! finishes prefill at a single precision, its page-aligned prompt
 //! prefix is parked in a small LRU cache (a forked arena handle keeps
 //! the pages alive).  A later request whose prompt starts with a
-//! cached prefix *at the same precision* forks those pages instead of
-//! recomputing them — prefill skips the shared tokens entirely, and
-//! the arena's refcounts/COW keep writers isolated.  KV content is a
-//! pure function of (token prefix, precision, weights), so shared
-//! pages are bit-identical to recomputed ones.  At least one prompt
+//! cached prefix *at the same weight precision AND the same KV storage
+//! precision* forks those pages instead of recomputing them — prefill
+//! skips the shared tokens entirely, and the arena's refcounts/COW
+//! keep writers isolated.  KV content is a pure function of (token
+//! prefix, weight precision, KV storage precision, weights), so shared
+//! pages are bit-identical to recomputed ones; a cached f32-page
+//! prefix must never be forked into an i8 sequence (or vice versa) —
+//! the pools do not even share page-id spaces.  At least one prompt
 //! token is always re-fed so the last-token logits that seed the first
 //! generated token exist.
 
@@ -36,7 +40,7 @@ use super::controller::ElasticController;
 use super::metrics::Metrics;
 use super::request::{Request, RequestMetrics, Response};
 use crate::mobiq::engine::Precision;
-use crate::model::kvcache::{KvArena, KvHandle, KV_PAGE};
+use crate::model::kvcache::{KvArena, KvHandle, KvPrecision, KV_PAGE};
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
                                 DecodeStats};
 use crate::model::Model;
@@ -54,11 +58,14 @@ struct ActiveSeq {
     /// length when admission attached cached pages.
     fed: usize,
     generated: usize,
-    /// Worst-case pages reserved at admission (minus the shared
-    /// discount); with `pages_at_admission` this bounds what the
+    /// Storage precision of this sequence's KV pages (from the
+    /// request).
+    kv_prec: KvPrecision,
+    /// Worst-case budget bytes reserved at admission (minus the shared
+    /// discount); with `bytes_at_admission` this bounds what the
     /// sequence may still allocate.
-    reserved_pages: usize,
-    pages_at_admission: usize,
+    reserved_bytes: usize,
+    bytes_at_admission: usize,
     /// Precision every prefill chunk ran at so far; entries are only
     /// registered in the prefix cache when this stayed uniform.
     prefill_prec: Option<Precision>,
@@ -71,20 +78,24 @@ struct ActiveSeq {
 }
 
 impl ActiveSeq {
-    /// Pages this sequence may still claim from the arena (its
+    /// Budget bytes this sequence may still claim from the arena (its
     /// admission reservation minus what it has already allocated).
     fn reserved_remaining(&self, arena: &KvArena) -> usize {
-        let grown = arena.seq_pages(self.seq)
-            .saturating_sub(self.pages_at_admission);
-        self.reserved_pages.saturating_sub(grown)
+        let grown = arena.seq_bytes(self.seq)
+            .saturating_sub(self.bytes_at_admission);
+        self.reserved_bytes.saturating_sub(grown)
     }
 }
 
 /// One parked shared prompt prefix: `handle` is a cache-owned arena
-/// sequence whose pages hold the KV of `tokens` at `precision`.
+/// sequence whose pages hold the KV of `tokens` computed at weight
+/// precision `precision` and stored at `kv_prec` — both are part of
+/// the match key, since pages of different storage precisions hold
+/// different bytes in different pools.
 struct PrefixEntry {
     tokens: Vec<u32>,
     precision: Precision,
+    kv_prec: KvPrecision,
     handle: KvHandle,
     last_used: u64,
 }
@@ -103,22 +114,25 @@ pub struct Scheduler<'m> {
     ticks: u64,
 }
 
-/// Worst-case pages a request needs: its (truncated) prompt plus full
-/// generation headroom, across all layers.
-fn worst_pages(arena: &KvArena, prompt_len: usize,
-               max_new: usize) -> usize {
-    arena.seq_worst_pages(prompt_len + max_new)
+/// Worst-case budget bytes a request needs: its (truncated) prompt
+/// plus full generation headroom, across all layers, at its KV
+/// storage precision.
+fn worst_bytes(arena: &KvArena, prompt_len: usize, max_new: usize,
+               kv_prec: KvPrecision) -> usize {
+    arena.seq_worst_bytes(prompt_len + max_new, kv_prec)
 }
 
 /// Longest usable shared prefix of `prompt` in the cache at this
-/// precision: returns `(entry index, shared token count)`.  Capped at
-/// `prompt.len() - 1` (one token must be re-fed for its logits) and
-/// gated at one full page (shorter shares are not worth a fork+COW).
+/// (weight precision, KV storage precision) pair: returns
+/// `(entry index, shared token count)`.  Capped at `prompt.len() - 1`
+/// (one token must be re-fed for its logits) and gated at one full
+/// page (shorter shares are not worth a fork+COW).
 fn best_prefix(entries: &[PrefixEntry], prompt: &[u32],
-               precision: Precision) -> Option<(usize, usize)> {
+               precision: Precision, kv_prec: KvPrecision)
+               -> Option<(usize, usize)> {
     let mut best: Option<(usize, usize)> = None;
     for (i, e) in entries.iter().enumerate() {
-        if e.precision != precision {
+        if e.precision != precision || e.kv_prec != kv_prec {
             continue;
         }
         let cap = prompt.len().saturating_sub(1).min(e.tokens.len());
@@ -210,10 +224,11 @@ impl<'m> Scheduler<'m> {
         let precision = self.controller
             .update(external_pressure, self.batcher.pressure());
 
-        // 2. admission against real free pages: each queued request
-        // needs its worst-case pages minus any full pages a cached
-        // shared prefix provides; pages other active sequences have
-        // reserved but not yet allocated are held back
+        // 2. admission against real free bytes: each queued request
+        // needs its worst-case bytes (at its KV storage precision)
+        // minus any full pages a cached shared prefix provides; bytes
+        // other active sequences have reserved but not yet allocated
+        // are held back
         let max_seq = self.model.cfg.max_seq_len;
         let n_layers = self.model.cfg.n_layers;
         let max_prompt = move |req: &Request| {
@@ -224,12 +239,12 @@ impl<'m> Scheduler<'m> {
         // seed generation) or a worst case exceeding the whole arena —
         // are rejected up front instead of deadlocking the FIFO behind
         // them (the dropped reply sender surfaces as a disconnect)
-        let capacity = self.arena.capacity_pages();
+        let capacity = self.arena.capacity_bytes();
         while let Some(front) = self.batcher.peek() {
             let impossible = front.prompt.is_empty() || {
                 let plen = max_prompt(front);
-                worst_pages(&self.arena, plen, front.max_new_tokens)
-                    > capacity
+                worst_bytes(&self.arena, plen, front.max_new_tokens,
+                            front.kv_precision) > capacity
             };
             if !impossible {
                 break;
@@ -240,7 +255,7 @@ impl<'m> Scheduler<'m> {
         let held: usize = self.active.iter()
             .map(|s| s.reserved_remaining(&self.arena))
             .sum();
-        let avail = self.arena.free_pages().saturating_sub(held);
+        let avail = self.arena.free_bytes().saturating_sub(held);
         let deferred_before = self.batcher.deferred();
         // prefix matches are recorded here by the accounting closure
         // (one scan per request) and reused for the fork below — the
@@ -253,15 +268,19 @@ impl<'m> Scheduler<'m> {
             let n_active = self.active.len();
             self.batcher.admit_with(n_active, avail, |req| {
                 let plen = max_prompt(req);
-                let worst = worst_pages(arena, plen, req.max_new_tokens);
+                let worst = worst_bytes(arena, plen,
+                                        req.max_new_tokens,
+                                        req.kv_precision);
                 let hit = best_prefix(prefix, &req.prompt[..plen],
-                                      precision);
+                                      precision, req.kv_precision);
                 hits.push(hit);
                 // only full shared pages are free; a shared partial
                 // page may still cost its COW copy, which `worst`
                 // already counts
                 let shared = hit.map_or(0, |(_, n)| n);
-                worst.saturating_sub(n_layers * (shared / KV_PAGE))
+                let discount = n_layers * (shared / KV_PAGE)
+                    * arena.page_bytes_at(req.kv_precision);
+                worst.saturating_sub(discount)
             })
         };
         // the closure also ran once for a deferred head, if any
@@ -273,34 +292,41 @@ impl<'m> Scheduler<'m> {
 
         for (req, hit) in admitted.into_iter().zip(hits) {
             let plen = max_prompt(&req);
+            let kv_prec = req.kv_precision;
             let mut tokens = req.prompt.clone();
             tokens.truncate(plen);
-            let worst = worst_pages(&self.arena, plen,
-                                    req.max_new_tokens);
-            // attach the shared prefix (fork = refcount bump, no copy)
+            let worst = worst_bytes(&self.arena, plen,
+                                    req.max_new_tokens, kv_prec);
+            // attach the shared prefix (fork = refcount bump, no copy;
+            // best_prefix only matched entries at this KV storage
+            // precision, so the fork lands in the right pool)
             let (seq, shared, reserved) = match hit {
                 Some((i, n)) => {
                     self.prefix[i].last_used = self.ticks;
+                    debug_assert_eq!(self.prefix[i].kv_prec, kv_prec,
+                                     "prefix hit across KV precisions");
                     let h = self.arena
                         .fork_prefix(self.prefix[i].handle, n);
                     self.metrics.prefix_hits += 1;
                     self.metrics.prefix_tokens_reused += n as u64;
                     let discount = self.model.cfg.n_layers
-                        * (n / KV_PAGE);
+                        * (n / KV_PAGE)
+                        * self.arena.page_bytes_at(kv_prec);
                     (h, n, worst.saturating_sub(discount))
                 }
                 None => {
                     self.metrics.prefix_misses += 1;
-                    (self.arena.alloc_seq(), 0, worst)
+                    (self.arena.alloc_seq_at(kv_prec), 0, worst)
                 }
             };
-            let pages_at_admission = self.arena.seq_pages(seq);
+            let bytes_at_admission = self.arena.seq_bytes(seq);
             self.active.push(ActiveSeq {
                 seq,
                 prompt_len: tokens.len(),
                 fed: shared,
-                reserved_pages: reserved,
-                pages_at_admission,
+                kv_prec,
+                reserved_bytes: reserved,
+                bytes_at_admission,
                 prefill_prec: (shared > 0).then_some(precision),
                 prefill_uniform: true,
                 registered: false,
@@ -363,13 +389,14 @@ impl<'m> Scheduler<'m> {
         // refcounts).  Registration is what turns the *next* identical
         // prompt into a page-table copy instead of a recompute.
         for i in 0..self.active.len() {
-            let (attempt, worth, aligned, prec) = {
+            let (attempt, worth, aligned, prec, kv_prec) = {
                 let s = &self.active[i];
                 let aligned = (s.prompt_len / KV_PAGE) * KV_PAGE;
                 (s.fed == s.prompt_len && !s.registered,
                  s.prefill_uniform && aligned >= KV_PAGE,
                  aligned,
-                 s.prefill_prec)
+                 s.prefill_prec,
+                 s.kv_prec)
             };
             if !attempt {
                 continue;
@@ -382,8 +409,12 @@ impl<'m> Scheduler<'m> {
             }
             let Some(prec) = prec else { continue };
             let cand = &self.active[i].tokens[..aligned];
+            // the same token prefix at a different KV storage
+            // precision is a different entry: its pages hold different
+            // bytes in a different pool
             let covered = self.prefix.iter().any(|e| {
-                e.precision == prec && e.tokens.len() >= aligned
+                e.precision == prec && e.kv_prec == kv_prec
+                    && e.tokens.len() >= aligned
                     && e.tokens[..aligned] == *cand
             });
             if covered {
@@ -398,6 +429,7 @@ impl<'m> Scheduler<'m> {
             self.prefix.push(PrefixEntry {
                 tokens: cand,
                 precision: prec,
+                kv_prec,
                 handle,
                 last_used: self.ticks,
             });
@@ -486,10 +518,7 @@ impl<'m> Scheduler<'m> {
                 / self.active.len() as f64
         };
         self.metrics.record_tick(avg_bits, self.controller.target_bits());
-        self.metrics.record_kv(self.arena.capacity_pages(),
-                               self.arena.resident_pages(),
-                               self.arena.peak_resident_pages(),
-                               self.arena.page_bytes());
+        self.metrics.record_kv(&self.arena);
         Ok(steps)
     }
 

@@ -14,6 +14,7 @@ use super::controller::{ControllerConfig, ElasticController};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::Scheduler;
+use crate::model::kvcache::KvPrecision;
 use crate::model::Model;
 
 #[derive(Debug, Clone)]
@@ -25,10 +26,16 @@ pub struct ServerConfig {
     pub prefill_chunk: usize,
     /// Cap on sequences fused into one coalesced decode call.
     pub max_decode_batch: usize,
-    /// KV arena page budget.  `None` = worst case for `max_active`
-    /// full-context sequences (no page pressure); `Some(p)` commits
-    /// less memory and queues requests when pages run short.
+    /// KV arena budget in f32-page equivalents.  `None` = worst case
+    /// for `max_active` full-context sequences (no page pressure);
+    /// `Some(p)` commits less memory and queues requests when bytes
+    /// run short.  Quantized pages draw proportionally less of the
+    /// budget, so an i8 deployment admits ~4x the sequences under the
+    /// same number.
     pub kv_page_budget: Option<usize>,
+    /// Default storage precision of admitted sequences' KV pages
+    /// (requests submitted via [`Server::submit_at`] override it).
+    pub kv_precision: KvPrecision,
     pub controller: ControllerConfig,
     /// External resource pressure in [0, 1] sampled each tick via the
     /// shared cell (set by the embedder, e.g. from a workload trace).
@@ -43,6 +50,7 @@ impl Default for ServerConfig {
             prefill_chunk: 16,
             max_decode_batch: 32,
             kv_page_budget: None,
+            kv_precision: KvPrecision::F32,
             controller: ControllerConfig::default(),
             initial_pressure: 0.0,
         }
@@ -59,12 +67,14 @@ pub struct Server {
     tx: mpsc::Sender<Msg>,
     next_id: Arc<AtomicU64>,
     handle: Option<thread::JoinHandle<()>>,
+    kv_precision: KvPrecision,
 }
 
 impl Server {
     /// Takes ownership of the model; the scheduler thread drives it.
     pub fn start(model: Model, cfg: ServerConfig) -> Server {
         let (tx, rx) = mpsc::channel::<Msg>();
+        let kv_precision = cfg.kv_precision;
         let handle = thread::Builder::new()
             .name("mobiq-scheduler".into())
             .spawn(move || Self::run(model, cfg, rx))
@@ -73,6 +83,7 @@ impl Server {
             tx,
             next_id: Arc::new(AtomicU64::new(0)),
             handle: Some(handle),
+            kv_precision,
         }
     }
 
@@ -116,15 +127,27 @@ impl Server {
         }
     }
 
-    /// Submit a prompt; returns (id, receiver for the response).
+    /// Submit a prompt at the server's default KV storage precision;
+    /// returns (id, receiver for the response).
     pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize)
                   -> (RequestId, mpsc::Receiver<Response>) {
+        self.submit_at(prompt, max_new_tokens, self.kv_precision)
+    }
+
+    /// Submit a prompt with an explicit per-request KV storage
+    /// precision (the elastic analogue for the cache: a latency-
+    /// tolerant request can run its KV at i8/i4 and draw a fraction of
+    /// the arena budget).
+    pub fn submit_at(&self, prompt: Vec<u32>, max_new_tokens: usize,
+                     kv_precision: KvPrecision)
+                     -> (RequestId, mpsc::Receiver<Response>) {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = mpsc::channel();
         let _ = self.tx.send(Msg::Req(Request {
             id,
             prompt,
             max_new_tokens,
+            kv_precision,
             submitted: Instant::now(),
             reply: tx,
         }));

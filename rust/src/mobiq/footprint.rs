@@ -13,6 +13,8 @@
 //!   routers and threshold tables.
 //! * `fp16`          — the unquantized comparator.
 
+use crate::model::kvcache::KvPrecision;
+
 /// Per-linear dimensions needed for the accounting.
 #[derive(Debug, Clone, Copy)]
 pub struct LinearDims {
@@ -96,10 +98,11 @@ impl FootprintInputs {
 
 /// Fig. 7-style serving-side KV accounting: what the eager per-slot
 /// slab deployment resident-allocates vs the paged arena
-/// (`model::kvcache::KvArena`), including shared-prefix dedup.  The
-/// arena reports *measured* resident pages at runtime
-/// (`coordinator::metrics`); this struct is the analytic counterpart
-/// used by reports and the `perf_kv` bench.
+/// (`model::kvcache::KvArena`), including shared-prefix dedup and
+/// quantized page storage ([`KvPrecision`]: i8 pages are 4x smaller
+/// than f32, bit-packed i4 8x).  The arena reports *measured* resident
+/// bytes at runtime (`coordinator::metrics`); this struct is the
+/// analytic counterpart used by reports and the `perf_kv` bench.
 #[derive(Debug, Clone, Copy)]
 pub struct KvFootprint {
     pub n_layers: usize,
@@ -113,7 +116,15 @@ pub struct KvFootprint {
 impl KvFootprint {
     /// Bytes of one KV page (K + V sides, f32).
     pub fn page_bytes(&self) -> usize {
-        2 * self.n_kv_heads * self.kv_page * self.head_dim * 4
+        self.page_bytes_at(KvPrecision::F32)
+    }
+
+    /// Bytes of one KV page stored at a given precision (per-page-head
+    /// scales are O(pages) side metadata, uncounted — matching the
+    /// arena's budget accounting).
+    pub fn page_bytes_at(&self, prec: KvPrecision) -> usize {
+        2 * self.n_kv_heads * self.kv_page
+            * prec.row_bytes(self.head_dim)
     }
 
     /// What one eager slab slot always allocates: full context for
@@ -136,9 +147,16 @@ impl KvFootprint {
     /// Paged-arena resident bytes for independent sequences of the
     /// given lengths (no sharing).
     pub fn paged_bytes(&self, seq_lens: &[usize]) -> usize {
+        self.paged_bytes_at(KvPrecision::F32, seq_lens)
+    }
+
+    /// Paged-arena resident bytes with every sequence's pages stored
+    /// at `prec`.
+    pub fn paged_bytes_at(&self, prec: KvPrecision,
+                          seq_lens: &[usize]) -> usize {
         seq_lens.iter()
             .map(|&l| self.n_layers * self.pages_for(l)
-                 * self.page_bytes())
+                 * self.page_bytes_at(prec))
             .sum()
     }
 
@@ -161,6 +179,20 @@ impl KvFootprint {
     pub fn savings_vs_eager(&self, seq_lens: &[usize]) -> f64 {
         self.eager_bytes(seq_lens.len()) as f64
             / self.paged_bytes(seq_lens).max(1) as f64
+    }
+
+    /// Eager f32 slabs vs paged residency at a storage precision —
+    /// the paging and quantization savings compose multiplicatively.
+    pub fn savings_vs_eager_at(&self, prec: KvPrecision,
+                               seq_lens: &[usize]) -> f64 {
+        self.eager_bytes(seq_lens.len()) as f64
+            / self.paged_bytes_at(prec, seq_lens).max(1) as f64
+    }
+
+    /// Steady-state residency ratio of f32 pages over `prec` pages at
+    /// equal context — the ISSUE's 4x (i8) / 8x (i4) KV rows.
+    pub fn savings_vs_f32_pages(&self, prec: KvPrecision) -> f64 {
+        self.page_bytes() as f64 / self.page_bytes_at(prec) as f64
     }
 }
 
@@ -250,6 +282,34 @@ mod tests {
         let fp = kv_fp();
         let lens = [fp.max_seq_len; 4];
         assert_eq!(fp.paged_bytes(&lens), fp.eager_bytes(4));
+    }
+
+    #[test]
+    fn quantized_page_ratios_exact() {
+        // the ISSUE's 4x/8x KV rows: i8 pages are exactly a quarter of
+        // f32 pages, bit-packed i4 exactly an eighth
+        let fp = kv_fp();
+        assert_eq!(fp.page_bytes_at(KvPrecision::Int8) * 4,
+                   fp.page_bytes());
+        assert_eq!(fp.page_bytes_at(KvPrecision::Int4) * 8,
+                   fp.page_bytes());
+        assert_eq!(fp.savings_vs_f32_pages(KvPrecision::Int8), 4.0);
+        assert_eq!(fp.savings_vs_f32_pages(KvPrecision::Int4), 8.0);
+    }
+
+    #[test]
+    fn paging_and_quantization_compose() {
+        // short sequences: 8x from paging (512/64) times 4x (i8) or
+        // 8x (i4) from storage — Fig. 7 parity for the serving side
+        let fp = kv_fp();
+        let lens = [64usize; 32];
+        let s8 = fp.savings_vs_eager_at(KvPrecision::Int8, &lens);
+        assert!((s8 - 32.0).abs() < 1e-9, "i8 savings {s8}");
+        let s4 = fp.savings_vs_eager_at(KvPrecision::Int4, &lens);
+        assert!((s4 - 64.0).abs() < 1e-9, "i4 savings {s4}");
+        // f32 variant delegates to the original path
+        assert_eq!(fp.paged_bytes_at(KvPrecision::F32, &lens),
+                   fp.paged_bytes(&lens));
     }
 
     #[test]

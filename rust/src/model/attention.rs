@@ -25,6 +25,14 @@
 //!   flattened `slot x head` grid (same per-head kernel, so cross-slot
 //!   results are bit-identical to the per-slot loop it replaces).
 //!
+//! Since PR 5 the kernels also consume **quantized KV pages**
+//! (`kvcache::KvPrecision`): a tile's `k_run`/`v_run` may come back as
+//! int8 or packed int4 codes plus one absmax scale, and dequantization
+//! is fused into the dot product / weighted accumulate with the scale
+//! hoisted out of the `head_dim` inner loop (tiles never straddle a
+//! page, so the scale is uniform per tile).  The f32 paths are
+//! untouched — bit-identical to the pre-quantization kernel.
+//!
 //! Determinism note: position tiles are anchored at absolute position 0
 //! (`[0, TILE)`, `[TILE, 2*TILE)`, ...), independent of where a block
 //! starts.  A query at absolute position P therefore accumulates its
@@ -33,7 +41,7 @@
 //! to each other.  Against the scalar oracle the result differs only by
 //! FP reordering (the parity tests use a 1e-4 tolerance).
 
-use super::kvcache::{KvCache, KvSource, KV_PAGE};
+use super::kvcache::{u4_code, KvCache, KvRun, KvSource, KV_PAGE};
 use super::weights::ModelConfig;
 use crate::util::threadpool::{SharedMut, ThreadPool};
 
@@ -45,7 +53,10 @@ pub const ATTN_TILE: usize = 32;
 // Tiles are anchored at absolute multiples of ATTN_TILE, so this is
 // what guarantees a tile never straddles a KV page: every `k_run`/
 // `v_run` the kernel requests resolves to one contiguous span whether
-// the source is a slab or a paged arena view.
+// the source is a slab or a paged arena view.  For quantized pages it
+// also guarantees the run's absmax scale is uniform over the tile —
+// the dequant multiply hoists out of the inner loop (one multiply per
+// position, none per element).
 const _: () = assert!(KV_PAGE % ATTN_TILE == 0,
                       "KV pages must hold whole attention tiles");
 
@@ -393,7 +404,17 @@ pub fn attention_cross_slots<S: KvSource>(cfg: &ModelConfig, q: &[f32],
 /// multiples of `ATTN_TILE` and `KV_PAGE % ATTN_TILE == 0`, so a run
 /// never straddles a page and the inner loops stream the exact same
 /// contiguous memory over a paged arena view as over the slab oracle
-/// (bit-identical results; pinned by `tests/kv_arena.rs`).
+/// (bit-identical results for f32 pages; pinned by
+/// `tests/kv_arena.rs`).
+///
+/// Quantized runs dequantize **inside the dot product**: the run's
+/// absmax step is uniform over the tile (one page, one head, one
+/// side), so the K side accumulates `q . k_int` in f32 and applies
+/// `k_step * softmax_scale` once per position, and the V side folds
+/// `v_step` into the per-position softmax weight before the
+/// `head_dim`-wide accumulate — no scratch dequant buffers, no extra
+/// pass over the cache, and the streamed bytes shrink 4x (i8) / 8x
+/// (i4).
 #[allow(clippy::too_many_arguments)]
 fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
                           hd: usize, d: usize, scale: f32, pos0: usize,
@@ -417,15 +438,45 @@ fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
             let qh = &q[i * d + h * hd..i * d + (h + 1) * hd];
             // scores for the visible part of the tile
             let mut tmax = f32::NEG_INFINITY;
-            for (j, kr) in cache.k_run(kvh, p0, limit).chunks_exact(hd)
-                .enumerate() {
-                let mut dot = 0f32;
-                for (a, b) in qh.iter().zip(kr) {
-                    dot += a * b;
+            match cache.k_run(kvh, p0, limit) {
+                KvRun::F32(run) => {
+                    for (j, kr) in run.chunks_exact(hd).enumerate() {
+                        let mut dot = 0f32;
+                        for (a, b) in qh.iter().zip(kr) {
+                            dot += a * b;
+                        }
+                        let sc = dot * scale;
+                        s[j] = sc;
+                        tmax = tmax.max(sc);
+                    }
                 }
-                let sc = dot * scale;
-                s[j] = sc;
-                tmax = tmax.max(sc);
+                KvRun::I8 { data, scale: kstep } => {
+                    // page-uniform step folded into the softmax scale:
+                    // one multiply per position, none per element
+                    let ks = kstep * scale;
+                    for (j, kr) in data.chunks_exact(hd).enumerate() {
+                        let mut dot = 0f32;
+                        for (a, &b) in qh.iter().zip(kr) {
+                            dot += a * b as f32;
+                        }
+                        let sc = dot * ks;
+                        s[j] = sc;
+                        tmax = tmax.max(sc);
+                    }
+                }
+                KvRun::U4 { data, scale: kstep } => {
+                    let ks = kstep * scale;
+                    for (j, kr) in data.chunks_exact(hd / 2)
+                        .enumerate() {
+                        let mut dot = 0f32;
+                        for (e, a) in qh.iter().enumerate() {
+                            dot += a * u4_code(kr, e) as f32;
+                        }
+                        let sc = dot * ks;
+                        s[j] = sc;
+                        tmax = tmax.max(sc);
+                    }
+                }
             }
             // online-softmax rescale (coef = 0 on the first tile since
             // m starts at -inf, leaving the zeroed state untouched)
@@ -439,12 +490,39 @@ fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
                 }
             }
             let mut li = l[i];
-            for (j, vr) in cache.v_run(kvh, p0, limit).chunks_exact(hd)
-                .enumerate() {
-                let w = (s[j] - m_new).exp();
-                li += w;
-                for (a, vv) in acc_i.iter_mut().zip(vr) {
-                    *a += w * vv;
+            match cache.v_run(kvh, p0, limit) {
+                KvRun::F32(run) => {
+                    for (j, vr) in run.chunks_exact(hd).enumerate() {
+                        let w = (s[j] - m_new).exp();
+                        li += w;
+                        for (a, vv) in acc_i.iter_mut().zip(vr) {
+                            *a += w * vv;
+                        }
+                    }
+                }
+                KvRun::I8 { data, scale: vstep } => {
+                    for (j, vr) in data.chunks_exact(hd).enumerate() {
+                        let w = (s[j] - m_new).exp();
+                        li += w;
+                        // the denominator uses the true weight; the
+                        // dequant step rides the weight into the
+                        // accumulate (one multiply per position)
+                        let wv = w * vstep;
+                        for (a, &vv) in acc_i.iter_mut().zip(vr) {
+                            *a += wv * vv as f32;
+                        }
+                    }
+                }
+                KvRun::U4 { data, scale: vstep } => {
+                    for (j, vr) in data.chunks_exact(hd / 2)
+                        .enumerate() {
+                        let w = (s[j] - m_new).exp();
+                        li += w;
+                        let wv = w * vstep;
+                        for (e, a) in acc_i.iter_mut().enumerate() {
+                            *a += wv * u4_code(vr, e) as f32;
+                        }
+                    }
                 }
             }
             l[i] = li;
@@ -471,11 +549,67 @@ fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
 // Scalar oracle
 // ---------------------------------------------------------------------------
 
+/// Dot of a query row with row `j` of a run, dequant step applied —
+/// the scalar-oracle helper (the tiled kernel writes the match around
+/// its tile loops instead).  For f32 runs the expression is the exact
+/// sum the pre-quantization oracle computed.
+#[inline]
+fn run_dot(qh: &[f32], run: &KvRun<'_>, j: usize, hd: usize) -> f32 {
+    match run {
+        KvRun::F32(r) => {
+            let row = &r[j * hd..(j + 1) * hd];
+            qh.iter().zip(row).map(|(a, b)| a * b).sum()
+        }
+        KvRun::I8 { data, scale } => {
+            let row = &data[j * hd..(j + 1) * hd];
+            let dot: f32 = qh.iter().zip(row)
+                .map(|(a, &b)| a * b as f32).sum();
+            dot * scale
+        }
+        KvRun::U4 { data, scale } => {
+            let row = &data[j * (hd / 2)..(j + 1) * (hd / 2)];
+            let dot: f32 = qh.iter().enumerate()
+                .map(|(e, a)| a * u4_code(row, e) as f32).sum();
+            dot * scale
+        }
+    }
+}
+
+/// `out += w * row_j(run)` with the dequant step folded into `w` —
+/// the V-side scalar-oracle helper.
+#[inline]
+fn run_axpy(out: &mut [f32], w: f32, run: &KvRun<'_>, j: usize,
+            hd: usize) {
+    match run {
+        KvRun::F32(r) => {
+            let row = &r[j * hd..(j + 1) * hd];
+            for (o, vv) in out.iter_mut().zip(row) {
+                *o += w * vv;
+            }
+        }
+        KvRun::I8 { data, scale } => {
+            let row = &data[j * hd..(j + 1) * hd];
+            let wv = w * scale;
+            for (o, &vv) in out.iter_mut().zip(row) {
+                *o += wv * vv as f32;
+            }
+        }
+        KvRun::U4 { data, scale } => {
+            let row = &data[j * (hd / 2)..(j + 1) * (hd / 2)];
+            let wv = w * scale;
+            for (e, o) in out.iter_mut().enumerate() {
+                *o += wv * u4_code(row, e) as f32;
+            }
+        }
+    }
+}
+
 /// One-position causal attention over the cache (GQA-aware) — the
 /// scalar oracle the tiled kernel is pinned against
 /// (`tests/attention_parity.rs`).  Two-pass softmax, head-serial.
 /// Generic over [`KvSource`] like the tiled kernel; single-position
-/// runs never straddle a page, so any source works.
+/// runs never straddle a page, so any source (and any storage
+/// precision) works.
 pub fn attention_step<S: KvSource>(q: &[f32], cache: &S,
                                    cfg: &ModelConfig, pos: usize,
                                    scores: &mut [f32], ctx: &mut [f32]) {
@@ -490,7 +624,7 @@ pub fn attention_step<S: KvSource>(q: &[f32], cache: &S,
         let mut maxs = f32::NEG_INFINITY;
         for p in 0..=pos {
             let kh = cache.k_run(kvh, p, p + 1);
-            let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
+            let dot = run_dot(qh, &kh, 0, hd);
             scores[p] = dot * scale;
             maxs = maxs.max(scores[p]);
         }
@@ -509,9 +643,7 @@ pub fn attention_step<S: KvSource>(q: &[f32], cache: &S,
         for p in 0..=pos {
             let w = scores[p] * inv;
             let vh = cache.v_run(kvh, p, p + 1);
-            for (o, vv) in out.iter_mut().zip(vh) {
-                *o += w * vv;
-            }
+            run_axpy(out, w, &vh, 0, hd);
         }
     }
 }

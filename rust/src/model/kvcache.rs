@@ -17,45 +17,188 @@
 //!   (copy-on-write), full shared pages are never copied;
 //! * the free list makes retire-then-readmit reuse pages without
 //!   touching the allocator, and the scheduler admits against real
-//!   free-page counts (`coordinator/scheduler.rs`).
+//!   free-byte counts (`coordinator/scheduler.rs`).
+//!
+//! ## Precision-tagged pages (PR 5)
+//!
+//! At serving scale the KV cache — not the weights — dominates resident
+//! bytes and decode memory bandwidth, so pages now come in three
+//! storage precisions ([`KvPrecision`]): the original f32 slabs, int8
+//! (4x smaller) and bit-packed int4 (8x smaller).  Each sequence picks
+//! its precision at [`KvArena::alloc_seq_at`] time (plumbed from
+//! `ServerConfig` / per-request) and every page it maps lives in that
+//! precision's pool.  Quantization is symmetric absmax with **one scale
+//! per (page, kv head, side)**: `x ~= code * step` where
+//! `step = absmax / qmax` (qmax 127 for i8, 7 for i4).  The scale is
+//! updated incrementally on append — when a fresh row's absmax exceeds
+//! the page's current range, the page-head's existing codes are
+//! re-coded to the wider step (a pure integer rescale over at most
+//! `KV_PAGE` rows) before the new rows land.  Quantization happens at
+//! scatter time, fused with the K-side RoPE rotation — no staging
+//! buffer ever holds a dequantized page.
+//!
+//! The **byte budget** replaces the page budget: a quantized page costs
+//! proportionally less of the arena's capacity, so an i8 deployment
+//! admits ~4x the sequences under the same `kv_page_budget`
+//! (expressed in f32-page equivalents).  Per-page-head scales live in
+//! their own side tables — like the page tables themselves they are
+//! O(pages) metadata, not counted against the data budget.
 //!
 //! Page layout: within a page, `[kv_head][pos_in_page][head_dim]` —
 //! the same head-major order as the slab, so one head's K (or V) rows
-//! for any run of positions inside a page are contiguous.  [`KV_PAGE`]
-//! is a multiple of the attention kernel's `ATTN_TILE`, so a position
-//! tile never straddles a page and the flash-style tile math streams
-//! the exact same contiguous rows it streamed over the slab — the two
-//! storages are bit-identical under the kernel (pinned by tests).
+//! for any run of positions inside a page are contiguous (int4 packs
+//! two codes per byte, low nibble first, so a row is `head_dim / 2`
+//! bytes).  [`KV_PAGE`] is a multiple of the attention kernel's
+//! `ATTN_TILE`, so a position tile never straddles a page: a tile's
+//! rows always share one page and therefore **one scale**, which is
+//! what lets the kernels fuse dequantization into the dot product with
+//! the scale hoisted out of the inner loop (`model/attention.rs`).
 //!
 //! The [`KvSource`] trait is the read interface the attention kernels
-//! stream through; both [`KvCache`] (slab) and [`KvLayerView`] (one
-//! sequence x layer of the arena) implement it.
+//! stream through; runs come back as [`KvRun`] — an f32 slice, or a
+//! quantized slice + its page-uniform scale.  Both [`KvCache`] (slab)
+//! and [`KvLayerView`] (one sequence x layer of the arena) implement
+//! it; the f32 paged path is bit-identical to the slab under the same
+//! kernel (pinned by tests).
 
 use super::attention::RopeCache;
 
 /// Positions per KV page.  A multiple of `attention::ATTN_TILE` (32)
 /// so tiles never straddle a page; at head_dim 64 one page side is
-/// 16 KB per kv head.
+/// 16 KB per kv head at f32, 4 KB at i8, 2 KB at i4.
 pub const KV_PAGE: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Storage precision
+// ---------------------------------------------------------------------------
+
+/// Storage precision of one sequence's KV pages.  Chosen per sequence
+/// at allocation (`ServerConfig::kv_precision` / per-request); all of a
+/// sequence's pages, across all layers, share it — forks inherit it,
+/// so shared pages are always read at the precision they were written.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvPrecision {
+    /// Exact f32 rows — the oracle path and the default.
+    #[default]
+    F32,
+    /// Symmetric int8, one absmax scale per (page, kv head, side): 4x
+    /// smaller than f32 at ~0.4% absmax-relative rounding error.
+    Int8,
+    /// Bit-packed int4 (two codes per byte): 8x smaller, ~7% step.
+    Int4,
+}
+
+impl KvPrecision {
+    /// Storage bytes of one position x head row (one side).
+    pub fn row_bytes(self, head_dim: usize) -> usize {
+        match self {
+            KvPrecision::F32 => head_dim * 4,
+            KvPrecision::Int8 => head_dim,
+            KvPrecision::Int4 => head_dim / 2,
+        }
+    }
+
+    /// Bytes of one page's K + V data.  Per-page-head scales are
+    /// O(pages) side metadata (like the page tables) and not counted.
+    pub fn page_bytes(self, n_kv_heads: usize, head_dim: usize) -> usize {
+        2 * n_kv_heads * KV_PAGE * self.row_bytes(head_dim)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KvPrecision::F32 => "f32",
+            KvPrecision::Int8 => "i8",
+            KvPrecision::Int4 => "u4",
+        }
+    }
+}
+
+/// Decode code `i` of a bit-packed int4 run (low nibble first).
+#[inline]
+pub fn u4_code(data: &[u8], i: usize) -> i8 {
+    let nib = (data[i >> 1] >> ((i & 1) * 4)) & 0xF;
+    // sign-extend the 4-bit two's-complement nibble
+    ((nib << 4) as i8) >> 4
+}
 
 // ---------------------------------------------------------------------------
 // Read interface shared by slab and paged storage
 // ---------------------------------------------------------------------------
 
+/// One contiguous head-major run of K or V rows, in whatever precision
+/// the backing pages store.  Quantized runs carry the page-uniform
+/// dequant step (`x ~= code * scale`); because `KV_PAGE % ATTN_TILE ==
+/// 0` a kernel tile always resolves to exactly one run with exactly
+/// one scale, so the kernels hoist it out of their inner loops.
+#[derive(Debug, Clone, Copy)]
+pub enum KvRun<'a> {
+    /// `positions x head_dim` floats.
+    F32(&'a [f32]),
+    /// `positions x head_dim` symmetric int8 codes.
+    I8 { data: &'a [i8], scale: f32 },
+    /// `positions x head_dim / 2` bytes of packed int4 codes (two per
+    /// byte, low nibble first).
+    U4 { data: &'a [u8], scale: f32 },
+}
+
+impl<'a> KvRun<'a> {
+    /// The f32 slice of an exact run; panics on quantized storage
+    /// (oracle/test accessor — kernels match on the variant instead).
+    pub fn as_f32(&self) -> &'a [f32] {
+        match *self {
+            KvRun::F32(s) => s,
+            _ => panic!("KvRun::as_f32 on a quantized run"),
+        }
+    }
+
+    /// Dequant step of the run (1.0 for exact f32).
+    pub fn scale(&self) -> f32 {
+        match self {
+            KvRun::F32(_) => 1.0,
+            KvRun::I8 { scale, .. } | KvRun::U4 { scale, .. } => *scale,
+        }
+    }
+
+    /// Number of positions in the run.
+    pub fn positions(&self, head_dim: usize) -> usize {
+        match self {
+            KvRun::F32(s) => s.len() / head_dim,
+            KvRun::I8 { data, .. } => data.len() / head_dim,
+            KvRun::U4 { data, .. } => 2 * data.len() / head_dim,
+        }
+    }
+
+    /// Dequantized copy (tests/diagnostics; the kernels fuse dequant
+    /// into their tiles instead of materialising this).
+    pub fn dequant(&self, head_dim: usize) -> Vec<f32> {
+        match self {
+            KvRun::F32(s) => s.to_vec(),
+            KvRun::I8 { data, scale } => {
+                data.iter().map(|&c| c as f32 * scale).collect()
+            }
+            KvRun::U4 { data, scale } => {
+                let n = self.positions(head_dim) * head_dim;
+                (0..n).map(|i| u4_code(data, i) as f32 * scale).collect()
+            }
+        }
+    }
+}
+
 /// Read access to one sequence x layer of K/V, in head-major runs.
 /// The attention kernels are generic over this, so the tiled
 /// online-softmax math is literally the same code over the slab oracle
-/// and the paged arena.
+/// and the paged arena, at every storage precision.
 pub trait KvSource: Sync {
     /// Number of positions stored.
     fn len(&self) -> usize;
     /// Contiguous K rows for positions `[p0, p1)` of kv head `h`.
     /// For paged sources the range must not straddle a page boundary;
     /// `ATTN_TILE`-aligned tiles always satisfy this because
-    /// `KV_PAGE % ATTN_TILE == 0`.
-    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32];
+    /// `KV_PAGE % ATTN_TILE == 0` — which also makes the returned
+    /// run's scale uniform over the tile.
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_>;
     /// Contiguous V rows for positions `[p0, p1)` of kv head `h`.
-    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32];
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_>;
 }
 
 // ---------------------------------------------------------------------------
@@ -63,10 +206,10 @@ pub trait KvSource: Sync {
 // ---------------------------------------------------------------------------
 
 /// KV tensors of one sequence, one layer, as contiguous
-/// `(n_kv_heads, max_seq, head_dim)` slabs for K and V.  This is the
-/// eager layout the arena replaced on the serving path; it stays as
-/// the parity oracle the paged views are pinned against, and as the
-/// simplest harness for kernel tests/benches.
+/// `(n_kv_heads, max_seq, head_dim)` f32 slabs for K and V.  This is
+/// the eager layout the arena replaced on the serving path; it stays as
+/// the exactness oracle the paged views (quantized ones included) are
+/// pinned against, and as the simplest harness for kernel tests/benches.
 pub struct KvCache {
     pub k: Vec<f32>,
     pub v: Vec<f32>,
@@ -180,17 +323,237 @@ impl KvSource for KvCache {
     }
 
     #[inline]
-    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_> {
         debug_assert!(p0 < p1 && p1 <= self.len);
         let lo = self.slab_off(h, p0);
-        &self.k[lo..lo + (p1 - p0) * self.head_dim]
+        KvRun::F32(&self.k[lo..lo + (p1 - p0) * self.head_dim])
     }
 
     #[inline]
-    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_> {
         debug_assert!(p0 < p1 && p1 <= self.len);
         let lo = self.slab_off(h, p0);
-        &self.v[lo..lo + (p1 - p0) * self.head_dim]
+        KvRun::F32(&self.v[lo..lo + (p1 - p0) * self.head_dim])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized page storage
+// ---------------------------------------------------------------------------
+
+/// Element-level codec of one quantized pool: how rows quantize into
+/// the backing element type and how existing codes re-code when a
+/// page's absmax range widens.
+trait QuantStore: Copy + Default {
+    const QMAX: f32;
+    /// Storage elements of one `head_dim` row.
+    fn row_elems(head_dim: usize) -> usize;
+    /// Quantize one f32 row into `dst` (`row_elems` long) with step
+    /// `step` (`step == 0` stores zeros — an all-zero page-head).
+    fn store_row(dst: &mut [Self], src: &[f32], step: f32);
+    /// Re-code `data` in place from step `old` to step `new >= old`
+    /// (pure integer rescale; no float round-trip through the rows).
+    fn rescale(data: &mut [Self], old: f32, new: f32);
+}
+
+#[inline]
+fn qcode(x: f32, step: f32, qmax: f32) -> f32 {
+    if step == 0.0 {
+        return 0.0;
+    }
+    (x / step).round().clamp(-qmax, qmax)
+}
+
+impl QuantStore for i8 {
+    const QMAX: f32 = 127.0;
+
+    fn row_elems(head_dim: usize) -> usize {
+        head_dim
+    }
+
+    fn store_row(dst: &mut [i8], src: &[f32], step: f32) {
+        for (d, &x) in dst.iter_mut().zip(src) {
+            *d = qcode(x, step, Self::QMAX) as i8;
+        }
+    }
+
+    fn rescale(data: &mut [i8], old: f32, new: f32) {
+        let r = old / new;
+        for d in data.iter_mut() {
+            *d = (*d as f32 * r).round()
+                .clamp(-Self::QMAX, Self::QMAX) as i8;
+        }
+    }
+}
+
+impl QuantStore for u8 {
+    const QMAX: f32 = 7.0;
+
+    fn row_elems(head_dim: usize) -> usize {
+        head_dim / 2
+    }
+
+    fn store_row(dst: &mut [u8], src: &[f32], step: f32) {
+        for (d, pair) in dst.iter_mut().zip(src.chunks_exact(2)) {
+            let lo = qcode(pair[0], step, Self::QMAX) as i8 as u8 & 0xF;
+            let hi = qcode(pair[1], step, Self::QMAX) as i8 as u8 & 0xF;
+            *d = lo | (hi << 4);
+        }
+    }
+
+    fn rescale(data: &mut [u8], old: f32, new: f32) {
+        let r = old / new;
+        for d in data.iter_mut() {
+            let lo = (((((*d << 4) as i8) >> 4) as f32) * r).round()
+                .clamp(-Self::QMAX, Self::QMAX) as i8 as u8 & 0xF;
+            let hi = (((((*d & 0xF0) as i8) >> 4) as f32) * r).round()
+                .clamp(-Self::QMAX, Self::QMAX) as i8 as u8 & 0xF;
+            *d = lo | (hi << 4);
+        }
+    }
+}
+
+/// One precision's page pool: K/V data slabs indexed by page id, the
+/// per-page-head scales (empty for f32), refcounts and the free list.
+/// Page ids are pool-local; a sequence's tables always resolve in its
+/// own precision's pool.
+#[derive(Default)]
+struct PagePool<T: Copy + Default> {
+    /// Page `p`'s per-side data is `[p * page_elems, (p+1) * page_elems)`.
+    /// The backing grows lazily with the page high-water mark (the free
+    /// list hands freed ids back first), so process RSS tracks peak
+    /// *used* pages, not the byte budget.
+    k: Vec<T>,
+    v: Vec<T>,
+    /// `(page, kv_head)` absmax steps per side; empty in the f32 pool.
+    k_scale: Vec<f32>,
+    v_scale: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<u32>,
+}
+
+impl<T: Copy + Default> PagePool<T> {
+    /// Pages currently mapped by at least one sequence.
+    fn resident(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    /// Claim a page with refcount 1, growing the backing (and the
+    /// scale tables when `scale_elems > 0`) if the id is fresh.
+    fn alloc(&mut self, page_elems: usize, scale_elems: usize) -> u32 {
+        let p = match self.free.pop() {
+            Some(p) => p,
+            None => {
+                self.refcount.push(0);
+                (self.refcount.len() - 1) as u32
+            }
+        };
+        debug_assert_eq!(self.refcount[p as usize], 0);
+        self.refcount[p as usize] = 1;
+        let end = (p as usize + 1) * page_elems;
+        if self.k.len() < end {
+            self.k.resize(end, T::default());
+            self.v.resize(end, T::default());
+        }
+        let send = (p as usize + 1) * scale_elems;
+        if scale_elems > 0 && self.k_scale.len() < send {
+            self.k_scale.resize(send, 0.0);
+            self.v_scale.resize(send, 0.0);
+        }
+        p
+    }
+
+    /// Decrement a page's refcount; returns true when it became free.
+    fn decref(&mut self, page: u32) -> bool {
+        let rc = &mut self.refcount[page as usize];
+        debug_assert!(*rc > 0, "decref of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            // a freed quantized page's scales reset with it: the next
+            // owner starts from an empty absmax range
+            let n_kv = if self.k_scale.is_empty() {
+                0
+            } else {
+                self.k_scale.len() / self.refcount.len()
+            };
+            for s in 0..n_kv {
+                self.k_scale[page as usize * n_kv + s] = 0.0;
+                self.v_scale[page as usize * n_kv + s] = 0.0;
+            }
+            self.free.push(page);
+            return true;
+        }
+        false
+    }
+
+    /// Copy the first `rows` positions of every head from page `src`
+    /// to page `dst` (the COW body), scales included — the copy reads
+    /// back at exactly the bytes the source wrote.
+    fn copy_page_prefix(&mut self, src: u32, dst: u32, rows: usize,
+                        n_kv: usize, row_elems: usize) {
+        let cap = KV_PAGE * row_elems;
+        for head in 0..n_kv {
+            let s = src as usize * n_kv * cap + head * cap;
+            let d = dst as usize * n_kv * cap + head * cap;
+            self.k.copy_within(s..s + rows * row_elems, d);
+            self.v.copy_within(s..s + rows * row_elems, d);
+        }
+        if !self.k_scale.is_empty() {
+            let s = src as usize * n_kv;
+            let d = dst as usize * n_kv;
+            self.k_scale.copy_within(s..s + n_kv, d);
+            self.v_scale.copy_within(s..s + n_kv, d);
+        }
+    }
+}
+
+/// Widening hysteresis: when a fresh row outgrows a page-head's step,
+/// the new step is at least this multiple of the old one.  Each
+/// re-code of a row adds at most half its (then-current) step of
+/// error, and with every widening multiplying the step by >= 3/2 the
+/// accumulated error forms a geometric series bounded by
+/// `0.5 * step_final * sum_k (2/3)^k = 1.5 * step_final` — the bound
+/// the round-trip tests pin — no matter how many times single-token
+/// decode appends push the running absmax record up.  The cost is a
+/// step inflated at most 1.5x past the true absmax, well inside the
+/// i8 attention tolerance.
+const SCALE_GROW: f32 = 1.5;
+
+/// Quantize `n` source rows (`src[i * stride..][..head_dim]` — the
+/// RoPE'd staging scratch for the K side, the strided linear output
+/// for V) into one page-head starting at row `off0`, widening the
+/// page's absmax step first if the fresh rows exceed it (existing
+/// codes re-code in place — the page is exclusively owned, COW ran).
+#[allow(clippy::too_many_arguments)]
+fn quant_append_side<T: QuantStore>(data: &mut [T], scale: &mut f32,
+                                    head_base: usize, off0: usize,
+                                    src: &[f32], stride: usize,
+                                    n: usize, head_dim: usize) {
+    let re = T::row_elems(head_dim);
+    let mut amax = 0f32;
+    for i in 0..n {
+        for &x in &src[i * stride..i * stride + head_dim] {
+            amax = amax.max(x.abs());
+        }
+    }
+    let need = amax / T::QMAX;
+    let mut step = *scale;
+    if need > step {
+        let new = if step > 0.0 {
+            need.max(SCALE_GROW * step)
+        } else {
+            need
+        };
+        if step > 0.0 && off0 > 0 {
+            T::rescale(&mut data[head_base..head_base + off0 * re],
+                       step, new);
+        }
+        *scale = new;
+        step = new;
+    }
+    for i in 0..n {
+        T::store_row(&mut data[head_base + (off0 + i) * re..][..re],
+                     &src[i * stride..i * stride + head_dim], step);
     }
 }
 
@@ -211,27 +574,29 @@ impl KvHandle {
     }
 }
 
-/// Error returned when an append needs more pages than the arena has
-/// free.  The scheduler's admission accounting is sized so this never
-/// fires mid-flight; hitting it means the caller over-admitted.
+/// Error returned when an append needs more bytes than the arena's
+/// budget has free.  The scheduler's admission accounting is sized so
+/// this never fires mid-flight; hitting it means the caller
+/// over-admitted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OutOfPages {
-    pub needed: usize,
-    pub free: usize,
+    pub needed_bytes: usize,
+    pub free_bytes: usize,
 }
 
 impl std::fmt::Display for OutOfPages {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "kv arena out of pages: need {} but only {} free",
-               self.needed, self.free)
+        write!(f, "kv arena out of memory: need {} bytes but only {} \
+                   free", self.needed_bytes, self.free_bytes)
     }
 }
 
 impl std::error::Error for OutOfPages {}
 
-/// Page table of one sequence x layer: physical page ids covering
-/// positions `[0, len)`.  Invariant: `pages.len() == ceil(len / KV_PAGE)`
-/// between appends (the final page may be partially filled).
+/// Page table of one sequence x layer: pool-local physical page ids
+/// covering positions `[0, len)`.  Invariant: `pages.len() ==
+/// ceil(len / KV_PAGE)` between appends (the final page may be
+/// partially filled).
 #[derive(Debug, Clone, Default)]
 pub struct LayerTable {
     pages: Vec<u32>,
@@ -240,50 +605,58 @@ pub struct LayerTable {
 
 struct SeqState {
     layers: Vec<LayerTable>,
+    prec: KvPrecision,
 }
 
 /// Process-wide paged KV pool: all sequences' K/V for all layers live
-/// in one pair of page-granular slabs, with refcounted pages, a free
-/// list, lazy allocation and copy-on-write (see module docs).
+/// in per-precision page pools under one byte budget, with refcounted
+/// pages, free lists, lazy allocation and copy-on-write (see module
+/// docs).
 pub struct KvArena {
     n_layers: usize,
     n_kv_heads: usize,
     head_dim: usize,
     max_seq: usize,
-    /// Floats per page per side: `n_kv_heads * KV_PAGE * head_dim`.
-    page_elems: usize,
-    /// Page `p`'s data is `[p * page_elems, (p + 1) * page_elems)`.
-    /// The backing grows lazily with the page high-water mark (the
-    /// free list hands out low ids first), so process RSS tracks peak
-    /// *used* pages, not the worst-case budget.
-    k: Vec<f32>,
-    v: Vec<f32>,
-    refcount: Vec<u32>,
-    free: Vec<u32>,
-    peak_resident: usize,
+    pool_f32: PagePool<f32>,
+    pool_i8: PagePool<i8>,
+    pool_u4: PagePool<u8>,
+    /// Data-byte budget shared by the three pools; constructed from an
+    /// f32-page-equivalent count so existing deployments keep their
+    /// numbers, but quantized pages draw proportionally less of it.
+    budget_bytes: usize,
+    used_bytes: usize,
+    peak_bytes: usize,
+    peak_pages: usize,
     seqs: Vec<Option<SeqState>>,
     free_seqs: Vec<usize>,
+    /// Staging row scratch for quantized appends (rope'd K rows, then
+    /// gathered V rows); grow-only, reused across calls.
+    rot: Vec<f32>,
 }
 
 impl KvArena {
+    /// `capacity_pages` is the budget in **f32-page equivalents**: the
+    /// byte budget is `capacity_pages * page_bytes_at(F32)`, of which
+    /// an i8 page consumes a quarter and an i4 page an eighth.
     pub fn new(n_layers: usize, max_seq: usize, n_kv_heads: usize,
                head_dim: usize, capacity_pages: usize) -> KvArena {
-        let page_elems = n_kv_heads * KV_PAGE * head_dim;
+        let budget_bytes = capacity_pages
+            * KvPrecision::F32.page_bytes(n_kv_heads, head_dim);
         KvArena {
             n_layers,
             n_kv_heads,
             head_dim,
             max_seq,
-            page_elems,
-            k: Vec::new(),
-            v: Vec::new(),
-            refcount: vec![0; capacity_pages],
-            // pop() hands out low page ids first, so the lazily grown
-            // backing slabs stay dense
-            free: (0..capacity_pages as u32).rev().collect(),
-            peak_resident: 0,
+            pool_f32: PagePool::default(),
+            pool_i8: PagePool::default(),
+            pool_u4: PagePool::default(),
+            budget_bytes,
+            used_bytes: 0,
+            peak_bytes: 0,
+            peak_pages: 0,
             seqs: Vec::new(),
             free_seqs: Vec::new(),
+            rot: Vec::new(),
         }
     }
 
@@ -299,34 +672,73 @@ impl KvArena {
         self.n_layers * Self::pages_for(positions.min(self.max_seq))
     }
 
-    pub fn capacity_pages(&self) -> usize {
-        self.refcount.len()
+    /// Worst-case budget bytes the same sequence needs at a given
+    /// storage precision — what admission reserves.
+    pub fn seq_worst_bytes(&self, positions: usize,
+                           prec: KvPrecision) -> usize {
+        self.seq_worst_pages(positions) * self.page_bytes_at(prec)
     }
 
-    /// Pages currently mapped by at least one sequence.
+    /// Budget capacity in f32-page equivalents.
+    pub fn capacity_pages(&self) -> usize {
+        self.budget_bytes / self.page_bytes()
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Pages currently mapped by at least one sequence (count across
+    /// all precisions — pages of different precisions are different
+    /// sizes; byte-accurate numbers come from [`Self::resident_bytes`]).
     pub fn resident_pages(&self) -> usize {
-        self.capacity_pages() - self.free.len()
+        self.pool_f32.resident() + self.pool_i8.resident()
+            + self.pool_u4.resident()
+    }
+
+    /// Resident pages of one precision's pool.
+    pub fn resident_pages_at(&self, prec: KvPrecision) -> usize {
+        match prec {
+            KvPrecision::F32 => self.pool_f32.resident(),
+            KvPrecision::Int8 => self.pool_i8.resident(),
+            KvPrecision::Int4 => self.pool_u4.resident(),
+        }
     }
 
     pub fn peak_resident_pages(&self) -> usize {
-        self.peak_resident
+        self.peak_pages
     }
 
-    pub fn free_pages(&self) -> usize {
-        self.free.len()
+    pub fn free_bytes(&self) -> usize {
+        self.budget_bytes - self.used_bytes
     }
 
-    /// Bytes of one page (K + V sides).
+    /// Bytes of one f32 page (K + V sides) — the budget's unit.
     pub fn page_bytes(&self) -> usize {
-        2 * self.page_elems * 4
+        self.page_bytes_at(KvPrecision::F32)
+    }
+
+    /// Bytes of one page at a given storage precision.
+    pub fn page_bytes_at(&self, prec: KvPrecision) -> usize {
+        prec.page_bytes(self.n_kv_heads, self.head_dim)
     }
 
     pub fn resident_bytes(&self) -> usize {
-        self.resident_pages() * self.page_bytes()
+        self.used_bytes
     }
 
     pub fn peak_resident_bytes(&self) -> usize {
-        self.peak_resident * self.page_bytes()
+        self.peak_bytes
+    }
+
+    /// Budget bytes the resident quantized pages would additionally
+    /// consume if they were stored at f32 — the headline KV savings.
+    pub fn bytes_saved_vs_f32(&self) -> usize {
+        let pb = self.page_bytes();
+        self.pool_i8.resident()
+            * (pb - self.page_bytes_at(KvPrecision::Int8))
+            + self.pool_u4.resident()
+                * (pb - self.page_bytes_at(KvPrecision::Int4))
     }
 
     pub fn max_seq(&self) -> usize {
@@ -348,25 +760,41 @@ impl KvArena {
         KvHandle(idx as u32)
     }
 
-    /// Allocate an empty sequence (no pages yet — pages are claimed
-    /// lazily as positions are appended).
+    /// Allocate an empty f32 sequence (no pages yet — pages are
+    /// claimed lazily as positions are appended).
     pub fn alloc_seq(&mut self) -> KvHandle {
+        self.alloc_seq_at(KvPrecision::F32)
+    }
+
+    /// Allocate an empty sequence whose pages will live in `prec`'s
+    /// pool.  All layers share the precision; forks inherit it.
+    pub fn alloc_seq_at(&mut self, prec: KvPrecision) -> KvHandle {
+        assert!(prec != KvPrecision::Int4 || self.head_dim % 2 == 0,
+                "int4 KV needs an even head_dim");
         let state = SeqState {
             layers: vec![LayerTable::default(); self.n_layers],
+            prec,
         };
         self.insert_seq(state)
     }
 
+    /// Storage precision of a sequence's pages.
+    pub fn seq_precision(&self, h: KvHandle) -> KvPrecision {
+        self.seqs[h.idx()].as_ref().expect("stale handle").prec
+    }
+
     /// Fork a new sequence sharing `src`'s first `len` positions: page
     /// tables are cloned up to `ceil(len / KV_PAGE)` entries with every
-    /// shared page's refcount bumped — no K/V bytes are copied.  A
-    /// partially filled shared tail page is copied lazily on the fork's
-    /// (or the source's) first append into it (COW).  `len` must not
-    /// exceed `src`'s current length on any layer.
+    /// shared page's refcount bumped — no K/V bytes are copied, and the
+    /// fork reads the pages at the precision they were written (it
+    /// inherits `src`'s).  A partially filled shared tail page is
+    /// copied lazily on the fork's (or the source's) first append into
+    /// it (COW).  `len` must not exceed `src`'s current length on any
+    /// layer.
     pub fn fork_prefix(&mut self, src: KvHandle, len: usize) -> KvHandle {
         let n_pages = Self::pages_for(len);
         let mut layers = Vec::with_capacity(self.n_layers);
-        {
+        let prec = {
             let s = self.seqs[src.idx()].as_ref().expect("stale handle");
             for t in &s.layers {
                 assert!(t.len >= len, "fork_prefix past source length");
@@ -375,13 +803,14 @@ impl KvArena {
                     len,
                 });
             }
-        }
+            s.prec
+        };
         for t in &layers {
             for &p in &t.pages {
-                self.refcount[p as usize] += 1;
+                self.refcount_mut(prec)[p as usize] += 1;
             }
         }
-        self.insert_seq(SeqState { layers })
+        self.insert_seq(SeqState { layers, prec })
     }
 
     /// Fork sharing the source's whole current length.
@@ -390,14 +819,69 @@ impl KvArena {
         self.fork_prefix(src, len)
     }
 
+    fn refcount_mut(&mut self, prec: KvPrecision) -> &mut Vec<u32> {
+        match prec {
+            KvPrecision::F32 => &mut self.pool_f32.refcount,
+            KvPrecision::Int8 => &mut self.pool_i8.refcount,
+            KvPrecision::Int4 => &mut self.pool_u4.refcount,
+        }
+    }
+
+    /// Decref one page of `prec`'s pool, returning its bytes to the
+    /// budget when the last owner dropped it.
+    fn decref_at(&mut self, prec: KvPrecision, page: u32) {
+        let freed = match prec {
+            KvPrecision::F32 => self.pool_f32.decref(page),
+            KvPrecision::Int8 => self.pool_i8.decref(page),
+            KvPrecision::Int4 => self.pool_u4.decref(page),
+        };
+        if freed {
+            self.used_bytes -= self.page_bytes_at(prec);
+        }
+    }
+
+    /// Claim one page of `prec`'s pool (caller has already checked the
+    /// byte budget) and charge its bytes.
+    fn alloc_page_at(&mut self, prec: KvPrecision) -> u32 {
+        let pb = self.page_bytes_at(prec);
+        debug_assert!(self.used_bytes + pb <= self.budget_bytes,
+                      "alloc_page past budget check");
+        let (page_elems, scale_elems) = self.pool_geom(prec);
+        let p = match prec {
+            KvPrecision::F32 => self.pool_f32.alloc(page_elems, 0),
+            KvPrecision::Int8 => {
+                self.pool_i8.alloc(page_elems, scale_elems)
+            }
+            KvPrecision::Int4 => {
+                self.pool_u4.alloc(page_elems, scale_elems)
+            }
+        };
+        self.used_bytes += pb;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.peak_pages = self.peak_pages.max(self.resident_pages());
+        p
+    }
+
+    /// (per-side storage elements, per-side scale entries) of one page
+    /// in `prec`'s pool.
+    fn pool_geom(&self, prec: KvPrecision) -> (usize, usize) {
+        let re = match prec {
+            KvPrecision::F32 => self.head_dim,
+            KvPrecision::Int8 => self.head_dim,
+            KvPrecision::Int4 => self.head_dim / 2,
+        };
+        (self.n_kv_heads * KV_PAGE * re, self.n_kv_heads)
+    }
+
     /// Drop all of a sequence's pages (refcounts decremented, pages
-    /// with no remaining owner return to the free list) and recycle the
-    /// handle slot.  The handle must not be used afterwards.
+    /// with no remaining owner return to the free list and the budget)
+    /// and recycle the handle slot.  The handle must not be used
+    /// afterwards.
     pub fn free_seq(&mut self, h: KvHandle) {
         let state = self.seqs[h.idx()].take().expect("double free_seq");
         for t in &state.layers {
             for &p in &t.pages {
-                self.decref(p);
+                self.decref_at(state.prec, p);
             }
         }
         self.free_seqs.push(h.idx());
@@ -407,16 +891,17 @@ impl KvArena {
     /// (the window-reset idiom of the PPL evaluator and probes).
     pub fn reset_seq(&mut self, h: KvHandle) {
         let mut tables = Vec::new();
-        {
+        let prec = {
             let s = self.seqs[h.idx()].as_mut().expect("stale handle");
             for t in &mut s.layers {
                 tables.push(std::mem::take(&mut t.pages));
                 t.len = 0;
             }
-        }
+            s.prec
+        };
         for pages in tables {
             for p in pages {
-                self.decref(p);
+                self.decref_at(prec, p);
             }
         }
     }
@@ -443,17 +928,41 @@ impl KvArena {
             .layers.iter().map(|t| t.pages.len()).sum()
     }
 
+    /// Budget bytes this sequence's mapped pages occupy at its storage
+    /// precision (shared pages count once per mapping, like
+    /// [`Self::seq_pages`]).
+    pub fn seq_bytes(&self, h: KvHandle) -> usize {
+        self.seq_pages(h) * self.page_bytes_at(self.seq_precision(h))
+    }
+
     /// Read view of one sequence x layer for the attention kernels.
     pub fn layer(&self, h: KvHandle, layer: usize) -> KvLayerView<'_> {
-        let t = &self.seqs[h.idx()].as_ref().expect("stale handle")
-            .layers[layer];
+        let s = self.seqs[h.idx()].as_ref().expect("stale handle");
+        let t = &s.layers[layer];
+        let store = match s.prec {
+            KvPrecision::F32 => ViewStore::F32 {
+                k: &self.pool_f32.k,
+                v: &self.pool_f32.v,
+            },
+            KvPrecision::Int8 => ViewStore::I8 {
+                k: &self.pool_i8.k,
+                v: &self.pool_i8.v,
+                ks: &self.pool_i8.k_scale,
+                vs: &self.pool_i8.v_scale,
+            },
+            KvPrecision::Int4 => ViewStore::U4 {
+                k: &self.pool_u4.k,
+                v: &self.pool_u4.v,
+                ks: &self.pool_u4.k_scale,
+                vs: &self.pool_u4.v_scale,
+            },
+        };
         KvLayerView {
-            k: &self.k,
-            v: &self.v,
             pages: &t.pages,
             len: t.len,
             head_dim: self.head_dim,
-            page_elems: self.page_elems,
+            n_kv_heads: self.n_kv_heads,
+            store,
         }
     }
 
@@ -461,18 +970,19 @@ impl KvArena {
     /// sequence x layer, applying RoPE to the K rows from the cached
     /// tables while scattering into the head-major page layout — the
     /// paged equivalent of `attention::append_kv_block`, with identical
-    /// per-row math (each row's rotation uses the same table rows, so
-    /// the stored floats are bit-identical to the slab's).  Claims
-    /// fresh pages as position `len` crosses page boundaries and
-    /// copies a shared partial tail page before the first write into
-    /// it (COW).  Returns the first appended position; the caller must
-    /// have `rope.ensure(pos0 + t)`d.
+    /// per-row rotation math (an f32 sequence stores floats
+    /// bit-identical to the slab's; a quantized sequence quantizes the
+    /// same rotated rows at scatter time, so the page codes are the
+    /// nearest representable values of exactly what the slab holds).
+    /// Claims fresh pages as position `len` crosses page boundaries
+    /// and copies a shared partial tail page before the first write
+    /// into it (COW).  Returns the first appended position; the caller
+    /// must have `rope.ensure(pos0 + t)`d.
     pub fn append_kv_block(&mut self, h: KvHandle, layer: usize,
                            rope: &RopeCache, k_block: &[f32],
                            v_block: &[f32], t: usize)
                            -> Result<usize, OutOfPages> {
         let hd = self.head_dim;
-        let half = hd / 2;
         let w = self.n_kv_heads * hd;
         debug_assert!(k_block.len() >= t * w && v_block.len() >= t * w);
         let pos0 = self.layer_len(h, layer);
@@ -486,29 +996,29 @@ impl KvArena {
         // pin `self` while we write the page slabs.
         let first = pos0 / KV_PAGE;
         let n_touched = Self::pages_for(pos0 + t) - first;
-        let pages: Vec<u32> = {
+        let (pages, prec): (Vec<u32>, KvPrecision) = {
             let s = self.seqs[h.idx()].as_ref().expect("stale handle");
-            s.layers[layer].pages[first..first + n_touched].to_vec()
+            (s.layers[layer].pages[first..first + n_touched].to_vec(),
+             s.prec)
         };
-        for i in 0..t {
-            let pos = pos0 + i;
-            let page = pages[pos / KV_PAGE - first] as usize;
-            let off = pos % KV_PAGE;
-            debug_assert_eq!(self.refcount[page], 1,
-                             "append into a shared page (COW missed)");
-            let (cos, sin) = rope.row(pos);
-            for head in 0..self.n_kv_heads {
-                let base = page * self.page_elems
-                    + (head * KV_PAGE + off) * hd;
-                let src = &k_block[i * w + head * hd..][..hd];
-                let dst = &mut self.k[base..base + hd];
-                for j in 0..half {
-                    let (a, b) = (src[2 * j], src[2 * j + 1]);
-                    dst[2 * j] = a * cos[j] - b * sin[j];
-                    dst[2 * j + 1] = a * sin[j] + b * cos[j];
-                }
-                let vsrc = &v_block[i * w + head * hd..][..hd];
-                self.v[base..base + hd].copy_from_slice(vsrc);
+        match prec {
+            KvPrecision::F32 => {
+                self.append_f32(&pages, first, pos0, t, rope, k_block,
+                                v_block);
+            }
+            KvPrecision::Int8 => {
+                let KvArena { pool_i8, rot, n_kv_heads, head_dim, .. } =
+                    self;
+                append_quant(pool_i8, *n_kv_heads, *head_dim, rot,
+                             &pages, first, pos0, t, rope, k_block,
+                             v_block);
+            }
+            KvPrecision::Int4 => {
+                let KvArena { pool_u4, rot, n_kv_heads, head_dim, .. } =
+                    self;
+                append_quant(pool_u4, *n_kv_heads, *head_dim, rot,
+                             &pages, first, pos0, t, rope, k_block,
+                             v_block);
             }
         }
         self.seqs[h.idx()].as_mut().expect("stale handle")
@@ -516,96 +1026,237 @@ impl KvArena {
         Ok(pos0)
     }
 
+    /// The exact f32 scatter (unchanged from the pre-quantization
+    /// arena: fused RoPE rotate + head-major page write, bit-identical
+    /// to the slab writer).
+    fn append_f32(&mut self, pages: &[u32], first: usize, pos0: usize,
+                  t: usize, rope: &RopeCache, k_block: &[f32],
+                  v_block: &[f32]) {
+        let hd = self.head_dim;
+        let half = hd / 2;
+        let w = self.n_kv_heads * hd;
+        let page_elems = self.n_kv_heads * KV_PAGE * hd;
+        for i in 0..t {
+            let pos = pos0 + i;
+            let page = pages[pos / KV_PAGE - first] as usize;
+            let off = pos % KV_PAGE;
+            debug_assert_eq!(self.pool_f32.refcount[page], 1,
+                             "append into a shared page (COW missed)");
+            let (cos, sin) = rope.row(pos);
+            for head in 0..self.n_kv_heads {
+                let base = page * page_elems
+                    + (head * KV_PAGE + off) * hd;
+                let src = &k_block[i * w + head * hd..][..hd];
+                let dst = &mut self.pool_f32.k[base..base + hd];
+                for j in 0..half {
+                    let (a, b) = (src[2 * j], src[2 * j + 1]);
+                    dst[2 * j] = a * cos[j] - b * sin[j];
+                    dst[2 * j + 1] = a * sin[j] + b * cos[j];
+                }
+                let vsrc = &v_block[i * w + head * hd..][..hd];
+                self.pool_f32.v[base..base + hd].copy_from_slice(vsrc);
+            }
+        }
+    }
+
     /// Make positions `[pos0, pos0 + t)` writable: COW a shared
     /// partial tail page, then claim fresh pages to cover the range.
-    /// Page availability is checked up front so a failure leaves the
+    /// Byte availability is checked up front so a failure leaves the
     /// table untouched (no half-grown state).
     fn ensure_tail_pages(&mut self, h: KvHandle, layer: usize,
                          pos0: usize, t: usize) -> Result<(), OutOfPages> {
         let need_pages = Self::pages_for(pos0 + t);
-        let (have, tail_page) = {
-            let tbl = &self.seqs[h.idx()].as_ref().expect("stale handle")
-                .layers[layer];
+        let (have, tail_page, prec) = {
+            let s = self.seqs[h.idx()].as_ref().expect("stale handle");
+            let tbl = &s.layers[layer];
             debug_assert_eq!(tbl.pages.len(), Self::pages_for(pos0));
             let tail = if pos0 % KV_PAGE != 0 {
                 Some(tbl.pages[pos0 / KV_PAGE])
             } else {
                 None
             };
-            (tbl.pages.len(), tail)
+            (tbl.pages.len(), tail, s.prec)
+        };
+        let refcounts = match prec {
+            KvPrecision::F32 => &self.pool_f32.refcount,
+            KvPrecision::Int8 => &self.pool_i8.refcount,
+            KvPrecision::Int4 => &self.pool_u4.refcount,
         };
         let cow = tail_page
-            .is_some_and(|p| self.refcount[p as usize] > 1);
+            .is_some_and(|p| refcounts[p as usize] > 1);
         let fresh_needed = (need_pages - have) + cow as usize;
-        if self.free.len() < fresh_needed {
+        let need_bytes = fresh_needed * self.page_bytes_at(prec);
+        if self.free_bytes() < need_bytes {
             return Err(OutOfPages {
-                needed: fresh_needed,
-                free: self.free.len(),
+                needed_bytes: need_bytes,
+                free_bytes: self.free_bytes(),
             });
         }
         if cow {
             let old = tail_page.unwrap();
-            let fresh = self.alloc_page();
-            self.copy_page_prefix(old, fresh, pos0 % KV_PAGE);
-            self.refcount[old as usize] -= 1;
+            let fresh = self.alloc_page_at(prec);
+            let rows = pos0 % KV_PAGE;
+            let n_kv = self.n_kv_heads;
+            match prec {
+                KvPrecision::F32 => self.pool_f32
+                    .copy_page_prefix(old, fresh, rows, n_kv,
+                                      self.head_dim),
+                KvPrecision::Int8 => self.pool_i8
+                    .copy_page_prefix(old, fresh, rows, n_kv,
+                                      self.head_dim),
+                KvPrecision::Int4 => self.pool_u4
+                    .copy_page_prefix(old, fresh, rows, n_kv,
+                                      self.head_dim / 2),
+            }
+            // shared: the other owners keep the old page's bytes
+            self.refcount_mut(prec)[old as usize] -= 1;
             self.seqs[h.idx()].as_mut().expect("stale handle")
                 .layers[layer].pages[pos0 / KV_PAGE] = fresh;
         }
         for _ in have..need_pages {
-            let p = self.alloc_page();
+            let p = self.alloc_page_at(prec);
             self.seqs[h.idx()].as_mut().expect("stale handle")
                 .layers[layer].pages.push(p);
         }
         Ok(())
     }
+}
 
-    /// Pop a free page (caller has already checked availability) with
-    /// refcount 1, growing the backing slabs to cover it if this page
-    /// id has never been touched before.
-    fn alloc_page(&mut self) -> u32 {
-        let p = self.free.pop().expect("alloc_page past free check");
-        debug_assert_eq!(self.refcount[p as usize], 0);
-        self.refcount[p as usize] = 1;
-        let end = (p as usize + 1) * self.page_elems;
-        if self.k.len() < end {
-            self.k.resize(end, 0.0);
-            self.v.resize(end, 0.0);
+/// Quantized scatter shared by the i8 and i4 pools: per touched page
+/// and kv head, stage the portion's rows (RoPE-rotating the K side —
+/// the same rotation the f32 path applies), widen the page-head scale
+/// if the fresh rows exceed it, and quantize in place.  One pass over
+/// the block, no dequant buffers.
+#[allow(clippy::too_many_arguments)]
+fn append_quant<T: QuantStore>(pool: &mut PagePool<T>, n_kv: usize,
+                               hd: usize, rot: &mut Vec<f32>,
+                               pages: &[u32], first: usize, pos0: usize,
+                               t: usize, rope: &RopeCache,
+                               k_block: &[f32], v_block: &[f32]) {
+    let half = hd / 2;
+    let w = n_kv * hd;
+    let re = T::row_elems(hd);
+    let page_elems = n_kv * KV_PAGE * re;
+    let scales_per_page = n_kv;
+    let mut p = pos0;
+    while p < pos0 + t {
+        let pidx = p / KV_PAGE;
+        let hi = ((pidx + 1) * KV_PAGE).min(pos0 + t);
+        let page = pages[pidx - first] as usize;
+        let off0 = p % KV_PAGE;
+        let n = hi - p;
+        debug_assert_eq!(pool.refcount[page], 1,
+                         "append into a shared page (COW missed)");
+        if rot.len() < n * hd {
+            rot.resize(n * hd, 0.0);
         }
-        self.peak_resident = self.peak_resident.max(self.resident_pages());
-        p
-    }
-
-    fn decref(&mut self, page: u32) {
-        let rc = &mut self.refcount[page as usize];
-        debug_assert!(*rc > 0, "decref of a free page");
-        *rc -= 1;
-        if *rc == 0 {
-            self.free.push(page);
+        for head in 0..n_kv {
+            let head_base = page * page_elems + head * KV_PAGE * re;
+            let sidx = page * scales_per_page + head;
+            // K: rotate the portion's rows into the staging scratch
+            for i in 0..n {
+                let pos = p + i;
+                let (cos, sin) = rope.row(pos);
+                let src = &k_block[(pos - pos0) * w + head * hd..][..hd];
+                let dst = &mut rot[i * hd..(i + 1) * hd];
+                for j in 0..half {
+                    let (a, b) = (src[2 * j], src[2 * j + 1]);
+                    dst[2 * j] = a * cos[j] - b * sin[j];
+                    dst[2 * j + 1] = a * sin[j] + b * cos[j];
+                }
+            }
+            quant_append_side::<T>(&mut pool.k, &mut pool.k_scale[sidx],
+                                   head_base, off0, rot, hd, n, hd);
+            // V needs no rotation, so it quantizes straight from the
+            // strided linear output — no staging copy
+            quant_append_side::<T>(&mut pool.v, &mut pool.v_scale[sidx],
+                                   head_base, off0,
+                                   &v_block[(p - pos0) * w + head * hd..],
+                                   w, n, hd);
         }
-    }
-
-    /// Copy the first `rows` positions of every head from page `src`
-    /// to page `dst` (the COW body).
-    fn copy_page_prefix(&mut self, src: u32, dst: u32, rows: usize) {
-        let hd = self.head_dim;
-        for head in 0..self.n_kv_heads {
-            let s = src as usize * self.page_elems + head * KV_PAGE * hd;
-            let d = dst as usize * self.page_elems + head * KV_PAGE * hd;
-            self.k.copy_within(s..s + rows * hd, d);
-            self.v.copy_within(s..s + rows * hd, d);
-        }
+        p = hi;
     }
 }
 
 /// Read view of one sequence x layer of a [`KvArena`]: resolves page
-/// tables so the attention kernels see contiguous head-major runs.
+/// tables so the attention kernels see contiguous head-major runs, at
+/// whatever precision the sequence's pages store.
 pub struct KvLayerView<'a> {
-    k: &'a [f32],
-    v: &'a [f32],
     pages: &'a [u32],
     len: usize,
     head_dim: usize,
-    page_elems: usize,
+    n_kv_heads: usize,
+    store: ViewStore<'a>,
+}
+
+enum ViewStore<'a> {
+    F32 {
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+    I8 {
+        k: &'a [i8],
+        v: &'a [i8],
+        ks: &'a [f32],
+        vs: &'a [f32],
+    },
+    U4 {
+        k: &'a [u8],
+        v: &'a [u8],
+        ks: &'a [f32],
+        vs: &'a [f32],
+    },
+}
+
+impl KvLayerView<'_> {
+    /// Storage precision of the viewed pages.
+    pub fn precision(&self) -> KvPrecision {
+        match self.store {
+            ViewStore::F32 { .. } => KvPrecision::F32,
+            ViewStore::I8 { .. } => KvPrecision::Int8,
+            ViewStore::U4 { .. } => KvPrecision::Int4,
+        }
+    }
+
+    #[inline]
+    fn run(&self, side_k: bool, h: usize, p0: usize, p1: usize)
+           -> KvRun<'_> {
+        debug_assert!(p0 < p1 && p1 <= self.len);
+        debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
+                         "KV run straddles a page");
+        let page = self.pages[p0 / KV_PAGE] as usize;
+        let off = p0 % KV_PAGE;
+        let n = p1 - p0;
+        let hd = self.head_dim;
+        let sidx = page * self.n_kv_heads + h;
+        match &self.store {
+            ViewStore::F32 { k, v } => {
+                let pe = self.n_kv_heads * KV_PAGE * hd;
+                let lo = page * pe + (h * KV_PAGE + off) * hd;
+                let side = if side_k { k } else { v };
+                KvRun::F32(&side[lo..lo + n * hd])
+            }
+            ViewStore::I8 { k, v, ks, vs } => {
+                let pe = self.n_kv_heads * KV_PAGE * hd;
+                let lo = page * pe + (h * KV_PAGE + off) * hd;
+                let (side, sc) = if side_k { (k, ks) } else { (v, vs) };
+                KvRun::I8 {
+                    data: &side[lo..lo + n * hd],
+                    scale: sc[sidx],
+                }
+            }
+            ViewStore::U4 { k, v, ks, vs } => {
+                let re = hd / 2;
+                let pe = self.n_kv_heads * KV_PAGE * re;
+                let lo = page * pe + (h * KV_PAGE + off) * re;
+                let (side, sc) = if side_k { (k, ks) } else { (v, vs) };
+                KvRun::U4 {
+                    data: &side[lo..lo + n * re],
+                    scale: sc[sidx],
+                }
+            }
+        }
+    }
 }
 
 impl KvSource for KvLayerView<'_> {
@@ -615,25 +1266,13 @@ impl KvSource for KvLayerView<'_> {
     }
 
     #[inline]
-    fn k_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
-        debug_assert!(p0 < p1 && p1 <= self.len);
-        debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
-                         "K run straddles a page");
-        let page = self.pages[p0 / KV_PAGE] as usize;
-        let lo = page * self.page_elems
-            + (h * KV_PAGE + p0 % KV_PAGE) * self.head_dim;
-        &self.k[lo..lo + (p1 - p0) * self.head_dim]
+    fn k_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_> {
+        self.run(true, h, p0, p1)
     }
 
     #[inline]
-    fn v_run(&self, h: usize, p0: usize, p1: usize) -> &[f32] {
-        debug_assert!(p0 < p1 && p1 <= self.len);
-        debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
-                         "V run straddles a page");
-        let page = self.pages[p0 / KV_PAGE] as usize;
-        let lo = page * self.page_elems
-            + (h * KV_PAGE + p0 % KV_PAGE) * self.head_dim;
-        &self.v[lo..lo + (p1 - p0) * self.head_dim]
+    fn v_run(&self, h: usize, p0: usize, p1: usize) -> KvRun<'_> {
+        self.run(false, h, p0, p1)
     }
 }
 
@@ -650,8 +1289,8 @@ mod tests {
         assert_eq!(c.v_head_at(0, 1), &[7.0, 8.0]);
         assert_eq!(c.k_head(0), &[1.0, 2.0, 5.0, 6.0]);
         assert_eq!(c.len, 2);
-        assert_eq!(c.k_run(0, 0, 2), &[1.0, 2.0, 5.0, 6.0]);
-        assert_eq!(c.v_run(0, 1, 2), &[7.0, 8.0]);
+        assert_eq!(c.k_run(0, 0, 2).as_f32(), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(c.v_run(0, 1, 2).as_f32(), &[7.0, 8.0]);
         c.reset();
         assert_eq!(c.len, 0);
     }
@@ -686,9 +1325,51 @@ mod tests {
         c.push(&[0.0], &[0.0]);
     }
 
-    // -- arena ------------------------------------------------------------
+    // -- quantizer codec ---------------------------------------------------
 
-    /// 1 layer, 1 kv head, head_dim 2 arena with a tiny page budget.
+    #[test]
+    fn u4_pack_unpack_roundtrip() {
+        // every int4 code survives pack -> unpack
+        let vals: Vec<f32> = (-7..=7).map(|v| v as f32).collect();
+        let mut src = vals.clone();
+        src.push(0.0); // even length for pairing
+        let mut dst = vec![0u8; src.len() / 2];
+        u8::store_row(&mut dst, &src, 1.0);
+        for (i, &want) in src.iter().enumerate() {
+            assert_eq!(u4_code(&dst, i) as f32, want, "code {i}");
+        }
+    }
+
+    #[test]
+    fn i8_store_row_rounds_and_clamps() {
+        let src = [0.0f32, 0.6, -0.6, 200.0, -200.0];
+        let mut dst = [0i8; 5];
+        i8::store_row(&mut dst, &src, 1.0);
+        assert_eq!(dst, [0, 1, -1, 127, -127]);
+        // step 0 stores zeros (an all-zero page-head)
+        i8::store_row(&mut dst, &src, 0.0);
+        assert_eq!(dst, [0i8; 5]);
+    }
+
+    #[test]
+    fn rescale_recodes_to_wider_step() {
+        let mut d = [100i8, -50, 127];
+        i8::rescale(&mut d, 0.5, 1.0);
+        assert_eq!(d, [50, -25, 64]);
+        let src = [3.0f32, -7.0, 1.0, 0.0];
+        let mut p = vec![0u8; 2];
+        u8::store_row(&mut p, &src, 1.0);
+        u8::rescale(&mut p, 1.0, 2.0);
+        assert_eq!(u4_code(&p, 0), 2); // round(3 * 0.5)
+        assert_eq!(u4_code(&p, 1), -4); // round(-3.5)
+        assert_eq!(u4_code(&p, 2), 1); // round(0.5) = 1 (away from 0)
+        assert_eq!(u4_code(&p, 3), 0);
+    }
+
+    // -- arena -------------------------------------------------------------
+
+    /// 1 layer, 1 kv head, head_dim 2 arena with a tiny page budget
+    /// (`cap_pages` f32-page equivalents).
     fn small_arena(cap_pages: usize) -> KvArena {
         KvArena::new(1, 4 * KV_PAGE, 1, 2, cap_pages)
     }
@@ -714,16 +1395,20 @@ mod tests {
         let rope = ident_rope();
         let h = a.alloc_seq();
         assert_eq!(a.resident_pages(), 0, "no eager pages");
+        assert_eq!(a.resident_bytes(), 0);
         fill(&mut a, &rope, h, KV_PAGE + 1, 1.0).unwrap();
         assert_eq!(a.resident_pages(), 2);
+        assert_eq!(a.resident_bytes(), 2 * a.page_bytes());
         assert_eq!(a.seq_len(h), KV_PAGE + 1);
         a.free_seq(h);
         assert_eq!(a.resident_pages(), 0, "retire frees pages");
+        assert_eq!(a.resident_bytes(), 0);
         // readmit: pages come from the free list, peak unchanged
         let h2 = a.alloc_seq();
         fill(&mut a, &rope, h2, 2 * KV_PAGE, 2.0).unwrap();
         assert_eq!(a.resident_pages(), 2);
         assert_eq!(a.peak_resident_pages(), 2);
+        assert_eq!(a.peak_resident_bytes(), 2 * a.page_bytes());
     }
 
     #[test]
@@ -734,13 +1419,49 @@ mod tests {
         fill(&mut a, &rope, h, KV_PAGE, 1.0).unwrap();
         let before = a.seq_len(h);
         let err = fill(&mut a, &rope, h, 1, 2.0).unwrap_err();
-        assert_eq!(err, OutOfPages { needed: 1, free: 0 });
+        assert_eq!(err, OutOfPages {
+            needed_bytes: a.page_bytes(),
+            free_bytes: 0,
+        });
         assert_eq!(a.seq_len(h), before, "failed append must not grow");
         // freeing recovers the budget
         a.free_seq(h);
         let h2 = a.alloc_seq();
         fill(&mut a, &rope, h2, 3, 3.0).unwrap();
         assert_eq!(a.seq_len(h2), 3);
+    }
+
+    #[test]
+    fn byte_budget_admits_4x_i8_pages() {
+        // the same one-f32-page budget holds four i8 pages (or a
+        // 5th append fails with byte-accurate numbers)
+        let mut a = small_arena(1);
+        let rope = ident_rope();
+        let h = a.alloc_seq_at(KvPrecision::Int8);
+        assert_eq!(a.seq_precision(h), KvPrecision::Int8);
+        fill(&mut a, &rope, h, 4 * KV_PAGE, 1.0).unwrap();
+        assert_eq!(a.resident_pages(), 4);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int8), 4);
+        assert_eq!(a.resident_bytes(), a.capacity_bytes());
+        assert_eq!(a.bytes_saved_vs_f32(),
+                   4 * (a.page_bytes()
+                        - a.page_bytes_at(KvPrecision::Int8)));
+        let err = {
+            // one more position needs a 5th page
+            let h2 = a.alloc_seq_at(KvPrecision::Int8);
+            fill(&mut a, &rope, h2, 1, 1.0).unwrap_err()
+        };
+        assert_eq!(err.needed_bytes, a.page_bytes_at(KvPrecision::Int8));
+        assert_eq!(err.free_bytes, 0);
+    }
+
+    #[test]
+    fn int4_pages_are_8x_smaller() {
+        let a = small_arena(1);
+        assert_eq!(a.page_bytes_at(KvPrecision::Int4) * 8,
+                   a.page_bytes());
+        assert_eq!(a.page_bytes_at(KvPrecision::Int8) * 4,
+                   a.page_bytes());
     }
 
     #[test]
@@ -757,17 +1478,18 @@ mod tests {
         assert_eq!(a.seq_len(f), t0);
         assert_eq!(a.resident_pages(), 2, "fork copies no pages");
         // both views read the same bytes
-        let want: Vec<f32> = a.layer(h, 0).k_run(0, 0, KV_PAGE).to_vec();
-        assert_eq!(a.layer(f, 0).k_run(0, 0, KV_PAGE), &want[..]);
+        let want = a.layer(h, 0).k_run(0, 0, KV_PAGE).as_f32().to_vec();
+        assert_eq!(a.layer(f, 0).k_run(0, 0, KV_PAGE).as_f32(),
+                   &want[..]);
 
         // appending to the fork COWs only the partial page
         fill(&mut a, &rope, f, 1, 9.0).unwrap();
         assert_eq!(a.resident_pages(), 3, "COW copies one page");
         // source rows are untouched, fork kept the shared prefix
         let src_tail = a.layer(h, 0)
-            .k_run(0, KV_PAGE, t0).to_vec();
+            .k_run(0, KV_PAGE, t0).as_f32().to_vec();
         let fork_tail = a.layer(f, 0)
-            .k_run(0, KV_PAGE, t0).to_vec();
+            .k_run(0, KV_PAGE, t0).as_f32().to_vec();
         assert_eq!(src_tail, fork_tail,
                    "COW must preserve the shared rows");
         assert_eq!(a.seq_len(f), t0 + 1);
@@ -792,8 +1514,8 @@ mod tests {
         // a reference to the partial page)
         fill(&mut a, &rope, h, 1, 5.0).unwrap();
         assert_eq!(a.resident_pages(), 2);
-        let hv = a.layer(h, 0).k_run(0, 0, 10).to_vec();
-        let fv = a.layer(f, 0).k_run(0, 0, 10).to_vec();
+        let hv = a.layer(h, 0).k_run(0, 0, 10).as_f32().to_vec();
+        let fv = a.layer(f, 0).k_run(0, 0, 10).as_f32().to_vec();
         assert_eq!(hv, fv, "shared prefix must survive source COW");
         assert_eq!(a.seq_len(f), 10);
     }
@@ -838,14 +1560,110 @@ mod tests {
             let mut p = 0usize;
             while p < t {
                 let end = (p + KV_PAGE).min(t);
-                assert_eq!(view.k_run(head, p, end),
-                           slab.k_run(head, p, end),
+                assert_eq!(view.k_run(head, p, end).as_f32(),
+                           slab.k_run(head, p, end).as_f32(),
                            "K head {head} run [{p}, {end})");
-                assert_eq!(view.v_run(head, p, end),
-                           slab.v_run(head, p, end),
+                assert_eq!(view.v_run(head, p, end).as_f32(),
+                           slab.v_run(head, p, end).as_f32(),
                            "V head {head} run [{p}, {end})");
                 p = end;
             }
         }
+    }
+
+    #[test]
+    fn quantized_view_dequant_tracks_slab() {
+        // same blocks through the slab and an i8 arena: dequantized
+        // runs stay within the absmax step bound of the exact rows
+        use crate::util::prng::Pcg;
+        let (n_kv, hd) = (2usize, 4usize);
+        let t = KV_PAGE + 9;
+        let mut rng = Pcg::new(78);
+        let w = n_kv * hd;
+        let k_block = rng.normal_vec(t * w, 1.0);
+        let v_block = rng.normal_vec(t * w, 1.0);
+        let mut rope = RopeCache::new(hd, 1e4);
+        rope.ensure(t);
+
+        let mut slab = KvCache::new(2 * KV_PAGE, n_kv, hd);
+        super::super::attention::append_kv_block(
+            &mut slab, &rope, &k_block, &v_block, t);
+
+        let mut a = KvArena::new(1, 2 * KV_PAGE, n_kv, hd, 4);
+        let h = a.alloc_seq_at(KvPrecision::Int8);
+        a.append_kv_block(h, 0, &rope, &k_block, &v_block, t).unwrap();
+        let view = a.layer(h, 0);
+        assert_eq!(view.precision(), KvPrecision::Int8);
+        for head in 0..n_kv {
+            let mut p = 0usize;
+            while p < t {
+                let end = (p + KV_PAGE).min(t);
+                let run = view.k_run(head, p, end);
+                let deq = run.dequant(hd);
+                let exact = slab.k_run(head, p, end).as_f32();
+                // 1.5 steps: the SCALE_GROW hysteresis bounds the
+                // geometric re-code error series at 1.5 * step_final
+                let tol = 1.5 * run.scale();
+                for (i, (a, b)) in deq.iter().zip(exact).enumerate() {
+                    assert!((a - b).abs() <= tol,
+                            "K head {head} elem {i}: {a} vs {b} \
+                             (tol {tol})");
+                }
+                p = end;
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_scale_growth_recodes_page() {
+        // small rows first, then a large row into the same page: the
+        // early rows must re-code to the wider step and stay accurate
+        let mut a = small_arena(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq_at(KvPrecision::Int8);
+        fill(&mut a, &rope, h, 4, 0.5).unwrap();
+        fill(&mut a, &rope, h, 1, 100.0).unwrap();
+        let view = a.layer(h, 0);
+        let run = view.v_run(0, 0, 5);
+        let deq = run.dequant(2);
+        // V rows are constant val + 0.5 (no RoPE on V)
+        let tol = 1.5 * run.scale();
+        for &x in &deq[..8] {
+            assert!((x - 1.0).abs() <= tol,
+                    "early row {x} drifted past {tol} after re-code");
+        }
+        for &x in &deq[8..10] {
+            assert!((x - 100.5).abs() <= tol);
+        }
+    }
+
+    #[test]
+    fn mixed_precision_pools_are_disjoint() {
+        // one arena, three sequences at three precisions: per-pool
+        // residency is tracked separately and freeing one leaves the
+        // others' bytes untouched
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let hf = a.alloc_seq();
+        let h8 = a.alloc_seq_at(KvPrecision::Int8);
+        let h4 = a.alloc_seq_at(KvPrecision::Int4);
+        fill(&mut a, &rope, hf, 3, 1.0).unwrap();
+        fill(&mut a, &rope, h8, 3, 2.0).unwrap();
+        fill(&mut a, &rope, h4, 3, 4.0).unwrap();
+        assert_eq!(a.resident_pages_at(KvPrecision::F32), 1);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int8), 1);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int4), 1);
+        let want_bytes = a.page_bytes()
+            + a.page_bytes_at(KvPrecision::Int8)
+            + a.page_bytes_at(KvPrecision::Int4);
+        assert_eq!(a.resident_bytes(), want_bytes);
+        let f32_rows = a.layer(hf, 0).k_run(0, 0, 3).as_f32().to_vec();
+        a.free_seq(h8);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int8), 0);
+        assert_eq!(a.layer(hf, 0).k_run(0, 0, 3).as_f32(),
+                   &f32_rows[..],
+                   "freeing the i8 pool must not disturb f32 pages");
+        assert_eq!(a.resident_bytes(),
+                   want_bytes - a.page_bytes_at(KvPrecision::Int8));
     }
 }

@@ -9,6 +9,7 @@ pub mod kvcache;
 pub mod transformer;
 pub mod weights;
 
-pub use kvcache::{KvArena, KvHandle, KvSource, KV_PAGE};
+pub use kvcache::{KvArena, KvHandle, KvPrecision, KvRun, KvSource,
+                  KV_PAGE};
 pub use transformer::{DecodeStats, Model};
 pub use weights::{LinearBackend, ModelConfig};

@@ -25,7 +25,7 @@ use anyhow::Result;
 
 use super::attention::{attention_block, attention_cross_slots,
                        AttnScratch, RopeCache};
-use super::kvcache::{KvArena, KvHandle, KV_PAGE};
+use super::kvcache::{KvArena, KvHandle, KvPrecision, KV_PAGE};
 use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LayerWeights, LinearBackend, ModelConfig,
                      LINEAR_NAMES};
@@ -395,8 +395,17 @@ impl Model {
     /// allocated handle (what the eager `SequenceKv` slab used to be;
     /// pages are still claimed lazily as the sequence grows).
     pub fn new_kv(&self) -> (KvArena, KvHandle) {
+        self.new_kv_at(KvPrecision::F32)
+    }
+
+    /// [`Model::new_kv`] with the sequence's KV pages stored at a
+    /// chosen precision — the arena quantizes K/V rows at scatter time
+    /// (fused with the K-side RoPE rotation) and the attention kernels
+    /// dequantize inside their tiles, so every forward entry point
+    /// works unchanged over quantized pages.
+    pub fn new_kv_at(&self, prec: KvPrecision) -> (KvArena, KvHandle) {
         let mut arena = self.new_arena(1);
-        let seq = arena.alloc_seq();
+        let seq = arena.alloc_seq_at(prec);
         (arena, seq)
     }
 

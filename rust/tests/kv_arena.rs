@@ -7,6 +7,14 @@
 //! sequences spanning page boundaries (T = 63/64/65/129) and COW forks
 //! mid-page; the scheduler must queue (not panic) when the arena runs
 //! out of pages, and retire must make those pages reusable.
+//!
+//! The quantized bar (ISSUE 5): i8 paged attention stays within 1e-2
+//! relative error of the f32 slab oracle across GQA configs and page
+//! seams (u4 within a looser bound); tile-read round-trips stay within
+//! the absmax step; COW on a shared quantized partial page preserves
+//! the source's scales and bytes; mixed-precision arenas never alias;
+//! and the prefix cache never forks pages across KV storage
+//! precisions.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -23,7 +31,7 @@ use mobiquant::model::attention::{append_kv_block, attention_block,
 use mobiquant::model::kvcache::KvCache;
 use mobiquant::model::transformer::DecodeStats;
 use mobiquant::model::weights::ModelConfig;
-use mobiquant::model::{KvArena, KV_PAGE};
+use mobiquant::model::{KvArena, KvPrecision, KV_PAGE};
 use mobiquant::util::prng::Pcg;
 
 const TOL: f32 = 1e-4;
@@ -210,11 +218,17 @@ fn cow_fork_mid_page_parity() {
 
 fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize)
           -> (Request, mpsc::Receiver<Response>) {
+    mk_req_at(id, prompt, max_new, KvPrecision::F32)
+}
+
+fn mk_req_at(id: u64, prompt: Vec<u32>, max_new: usize,
+             kv: KvPrecision) -> (Request, mpsc::Receiver<Response>) {
     let (tx, rx) = mpsc::channel();
     (Request {
         id,
         prompt,
         max_new_tokens: max_new,
+        kv_precision: kv,
         submitted: Instant::now(),
         reply: tx,
     }, rx)
@@ -299,4 +313,337 @@ fn prefix_sharing_matches_cold_run() {
     // 80-token prompt -> one full page (64) is shareable
     assert_eq!(sched.metrics.prefix_tokens_reused, KV_PAGE as u64);
     assert!(sched.metrics.prefix_hit_rate() > 0.49);
+}
+
+// ---------------------------------------------------------------------------
+// Quantized KV pages (ISSUE 5)
+// ---------------------------------------------------------------------------
+
+/// Relative error of `got` vs the oracle `want`, normalised by the
+/// oracle's largest magnitude (guarded for all-zero oracles).
+fn rel_err(got: &[f32], want: &[f32]) -> f32 {
+    let mut max_err = 0f32;
+    let mut max_abs = 0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_err = max_err.max((a - b).abs());
+        max_abs = max_abs.max(b.abs());
+    }
+    max_err / max_abs.max(1e-6)
+}
+
+/// Append the same random K/V stream (uneven chunks crossing page
+/// seams) to a slab and to an arena sequence at `kvp`; returns both.
+fn paired_fill(cfg: &ModelConfig, t: usize, seed: u64,
+               kvp: KvPrecision) -> (KvCache, KvArena,
+                                     mobiquant::model::KvHandle) {
+    let hd = cfg.head_dim();
+    let n_kv = cfg.n_kv_heads;
+    let w = n_kv * hd;
+    let mut rng = Pcg::new(seed);
+    let k_block = rng.normal_vec(t * w, 1.0);
+    let v_block = rng.normal_vec(t * w, 1.0);
+    let mut rope = RopeCache::new(hd, cfg.rope_theta);
+    rope.ensure(t);
+
+    let mut slab = KvCache::new(cfg.max_seq_len, n_kv, hd);
+    let mut arena = KvArena::new(1, cfg.max_seq_len, n_kv, hd, 8);
+    let seq = arena.alloc_seq_at(kvp);
+    let mut fed = 0usize;
+    for chunk in [50usize, 31, 64, 64] {
+        let n = chunk.min(t - fed);
+        if n == 0 {
+            break;
+        }
+        let lo = fed * w;
+        append_kv_block(&mut slab, &rope, &k_block[lo..(fed + n) * w],
+                        &v_block[lo..(fed + n) * w], n);
+        arena.append_kv_block(seq, 0, &rope,
+                              &k_block[lo..(fed + n) * w],
+                              &v_block[lo..(fed + n) * w], n)
+            .unwrap();
+        fed += n;
+    }
+    assert_eq!(fed, t);
+    (slab, arena, seq)
+}
+
+/// Quantized append -> tile-read round-trip at page seams: every
+/// dequantized element stays within 1.5 absmax steps of the exact slab
+/// row — the bound the `SCALE_GROW` widening hysteresis guarantees no
+/// matter how many times the page's range grew.
+#[test]
+fn quantized_roundtrip_error_bound_at_page_seams() {
+    let cfg = attn_cfg(4, 2, 16, 3 * KV_PAGE);
+    for &kvp in &[KvPrecision::Int8, KvPrecision::Int4] {
+        for &t in &[63usize, 64, 65, 129] {
+            let (slab, arena, seq) =
+                paired_fill(&cfg, t, 500 + t as u64, kvp);
+            let view = arena.layer(seq, 0);
+            for head in 0..cfg.n_kv_heads {
+                let mut p = 0usize;
+                while p < t {
+                    let end = (p + KV_PAGE).min(t);
+                    for side_k in [true, false] {
+                        let (run, exact) = if side_k {
+                            (view.k_run(head, p, end),
+                             slab.k_run(head, p, end).as_f32())
+                        } else {
+                            (view.v_run(head, p, end),
+                             slab.v_run(head, p, end).as_f32())
+                        };
+                        let deq = run.dequant(cfg.head_dim());
+                        let tol = 1.5 * run.scale();
+                        for (i, (a, b)) in
+                            deq.iter().zip(exact).enumerate() {
+                            assert!((a - b).abs() <= tol,
+                                    "{} T={t} head {head} run [{p}, \
+                                     {end}) elem {i}: {a} vs {b} \
+                                     (tol {tol})", kvp.label());
+                        }
+                    }
+                    p = end;
+                }
+            }
+        }
+    }
+}
+
+/// Quantized paged attention vs the f32 slab oracle across GQA shapes
+/// (incl. n_kv < n_heads), prefill + decode shapes and page-seam
+/// lengths: i8 within 1e-2 relative error, u4 within 0.3.  The f32
+/// paged path stays bit-identical (pinned above by
+/// `arena_attention_bit_identical_to_slab_oracle`).
+#[test]
+fn quantized_attention_tracks_slab_oracle() {
+    for &(n_heads, n_kv) in &[(4usize, 2usize), (4, 4), (8, 2)] {
+        let cfg = attn_cfg(n_heads, n_kv, 16, 3 * KV_PAGE);
+        let d = cfg.d_model;
+        for &t in &[63usize, 64, 65, 129] {
+            let mut rng = Pcg::new(700 + t as u64 + n_heads as u64);
+            let q = rng.normal_vec(t * d, 1.0);
+            let q1 = rng.normal_vec(d, 1.0);
+
+            // oracle: the same kernel over the exact f32 slab
+            let (slab, _, _) =
+                paired_fill(&cfg, t, 600 + t as u64, KvPrecision::F32);
+            let mut sc = AttnScratch::new();
+            let mut want = vec![0f32; t * d];
+            attention_block(&cfg, &q, &slab, 0, t, &mut sc, None,
+                            &mut want);
+            let mut want1 = vec![0f32; d];
+            attention_block(&cfg, &q1, &slab, t - 1, 1, &mut sc, None,
+                            &mut want1);
+
+            for &(kvp, tol) in &[(KvPrecision::Int8, 1e-2f32),
+                                 (KvPrecision::Int4, 0.3)] {
+                let (_, arena, seq) =
+                    paired_fill(&cfg, t, 600 + t as u64, kvp);
+                let view = arena.layer(seq, 0);
+                // whole-block prefill shape
+                let mut got = vec![0f32; t * d];
+                attention_block(&cfg, &q, &view, 0, t, &mut sc, None,
+                                &mut got);
+                let e = rel_err(&got, &want);
+                assert!(e <= tol,
+                        "{} {n_heads}h/{n_kv}kv T={t} prefill rel err \
+                         {e} > {tol}", kvp.label());
+                // single-query decode shape at the last position
+                let mut got1 = vec![0f32; d];
+                attention_block(&cfg, &q1, &view, t - 1, 1, &mut sc,
+                                None, &mut got1);
+                let e1 = rel_err(&got1, &want1);
+                assert!(e1 <= tol,
+                        "{} {n_heads}h/{n_kv}kv T={t} decode rel err \
+                         {e1} > {tol}", kvp.label());
+            }
+        }
+    }
+}
+
+/// COW on a shared quantized partial page: the fork's append (with an
+/// absmax spike that forces a re-code on its copy) must leave the
+/// source's bytes AND scales untouched.
+#[test]
+fn quantized_cow_preserves_source_scales_and_bytes() {
+    let (n_kv, hd) = (2usize, 4usize);
+    let max_seq = 4 * KV_PAGE;
+    let t0 = KV_PAGE + KV_PAGE / 2; // one full + one partial page
+    let w = n_kv * hd;
+    let mut rng = Pcg::new(41);
+    let k_block = rng.normal_vec(t0 * w, 1.0);
+    let v_block = rng.normal_vec(t0 * w, 1.0);
+    let mut rope = RopeCache::new(hd, 1e4);
+    rope.ensure(max_seq);
+
+    let mut arena = KvArena::new(1, max_seq, n_kv, hd, 8);
+    let src = arena.alloc_seq_at(KvPrecision::Int8);
+    arena.append_kv_block(src, 0, &rope, &k_block, &v_block, t0)
+        .unwrap();
+    let resident = arena.resident_pages();
+    assert_eq!(resident, 2);
+
+    // snapshot the source's dequantized rows and scales
+    let snap_k: Vec<Vec<f32>> = (0..n_kv)
+        .map(|h| arena.layer(src, 0).k_run(h, KV_PAGE, t0).dequant(hd))
+        .collect();
+    let snap_scale: Vec<f32> = (0..n_kv)
+        .map(|h| arena.layer(src, 0).k_run(h, KV_PAGE, t0).scale())
+        .collect();
+
+    let fork = arena.fork_prefix(src, t0);
+    assert_eq!(arena.resident_pages(), resident,
+               "fork must not copy pages");
+    // a huge appended row forces the fork's COW'd page to re-code
+    let spike_k = vec![50.0f32; w];
+    let spike_v = vec![-50.0f32; w];
+    arena.append_kv_block(fork, 0, &rope, &spike_k, &spike_v, 1)
+        .unwrap();
+    assert_eq!(arena.resident_pages(), resident + 1,
+               "COW copies exactly one page");
+
+    for h in 0..n_kv {
+        let run = arena.layer(src, 0).k_run(h, KV_PAGE, t0);
+        assert_eq!(run.scale(), snap_scale[h],
+                   "head {h}: source scale changed by the fork's COW");
+        assert_eq!(run.dequant(hd), snap_k[h],
+                   "head {h}: source bytes changed by the fork's COW");
+        // the fork's copy now holds a wider scale than the source
+        let frun = arena.layer(fork, 0).k_run(h, KV_PAGE, t0 + 1);
+        assert!(frun.scale() > snap_scale[h],
+                "head {h}: fork page must have re-coded to the spike");
+    }
+}
+
+/// Mixed-precision arenas end-to-end: an f32 sequence and an i8
+/// sequence decoding side by side in one arena — the f32 sequence's
+/// logits must be bit-identical to an f32-only run (no slab aliasing,
+/// no cross-pool interference), and per-pool residency adds up.
+#[test]
+fn mixed_precision_arena_forward_isolation() {
+    let model = synth_model_shaped(97, 4, 2, 256);
+    let prec = Precision::Fixed(2);
+    let toks: Vec<u32> = (0..80)
+        .map(|i| ((i * 11 + 5) % 256) as u32)
+        .collect();
+
+    // f32-only baseline
+    let (mut arena_a, seq_a) = model.new_kv();
+    let mut scratch = model.new_scratch();
+    let mut sa = DecodeStats::new(model.cfg.n_layers);
+    let mut base = Vec::new();
+    for &tk in &toks {
+        model.decode_step(tk, &mut arena_a, seq_a, prec, &mut scratch,
+                          &mut sa).unwrap();
+        base.extend_from_slice(&scratch.logits);
+    }
+
+    // mixed arena: interleave an f32 and an i8 sequence
+    let mut arena = model.new_arena(2);
+    let f = arena.alloc_seq_at(KvPrecision::F32);
+    let q = arena.alloc_seq_at(KvPrecision::Int8);
+    let mut sf = DecodeStats::new(model.cfg.n_layers);
+    let mut sq = DecodeStats::new(model.cfg.n_layers);
+    let mut mixed = Vec::new();
+    for &tk in &toks {
+        model.decode_step(tk, &mut arena, q, prec, &mut scratch,
+                          &mut sq).unwrap();
+        model.decode_step(tk, &mut arena, f, prec, &mut scratch,
+                          &mut sf).unwrap();
+        mixed.extend_from_slice(&scratch.logits);
+    }
+    assert_eq!(mixed, base,
+               "an i8 neighbour must not perturb f32 decode at all");
+    assert_eq!(arena.resident_pages_at(KvPrecision::F32),
+               model.cfg.n_layers * (80usize.div_ceil(KV_PAGE)));
+    assert_eq!(arena.resident_pages_at(KvPrecision::Int8),
+               model.cfg.n_layers * (80usize.div_ceil(KV_PAGE)));
+    assert_eq!(arena.resident_bytes(),
+               arena.resident_pages_at(KvPrecision::F32)
+                   * arena.page_bytes()
+               + arena.resident_pages_at(KvPrecision::Int8)
+                   * arena.page_bytes_at(KvPrecision::Int8));
+}
+
+/// Regression (ISSUE 5 satellite): the prefix-cache key includes the
+/// KV storage precision — a cached f32-page prefix must never be
+/// forked into an i8 sequence (and an i8 prefix must hit a later i8
+/// request).
+#[test]
+fn prefix_cache_keys_on_kv_precision() {
+    let model = synth_model_shaped(91, 4, 2, 256);
+    let batcher = Batcher::new(2, 16);
+    let mut sched = Scheduler::new(&model, batcher, fixed_controller());
+    let prompt: Vec<u32> = (0..80)
+        .map(|i| ((i * 7 + 3) % 256) as u32)
+        .collect();
+
+    // 1: f32 run registers an f32 prefix
+    let (r1, rx1) = mk_req(0, prompt.clone(), 6);
+    sched.submit(r1);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    rx1.try_recv().expect("f32 response");
+    assert_eq!(sched.metrics.prefix_misses, 1);
+
+    // 2: identical prompt at i8 must MISS (different storage bytes,
+    // different pool) and register its own i8 entry
+    let (r2, rx2) = mk_req_at(1, prompt.clone(), 6, KvPrecision::Int8);
+    sched.submit(r2);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    rx2.try_recv().expect("i8 response");
+    assert_eq!(sched.metrics.prefix_hits, 0,
+               "an f32 prefix must never serve an i8 request");
+    assert_eq!(sched.metrics.prefix_misses, 2);
+
+    // 3: a second i8 request now hits the i8 entry...
+    let (r3, rx3) = mk_req_at(2, prompt.clone(), 6, KvPrecision::Int8);
+    sched.submit(r3);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    let warm = rx3.try_recv().expect("warm i8 response");
+    assert_eq!(sched.metrics.prefix_hits, 1);
+    assert_eq!(sched.metrics.prefix_tokens_reused, KV_PAGE as u64);
+
+    // ...and a third f32 request still hits the f32 entry
+    let (r4, rx4) = mk_req(3, prompt.clone(), 6);
+    sched.submit(r4);
+    sched.run_to_completion(|_| 0.0).unwrap();
+    let warm_f32 = rx4.try_recv().expect("warm f32 response");
+    assert_eq!(sched.metrics.prefix_hits, 2);
+    // same-precision shared pages reproduce the cold outputs exactly
+    assert_eq!(warm_f32.tokens.len(), warm.tokens.len());
+}
+
+/// Byte-accurate admission: under the same page budget, i8 requests
+/// admit 4x the slots of f32 requests (the scheduler's reservation is
+/// in bytes at the request's storage precision).
+#[test]
+fn i8_admits_4x_slots_under_equal_budget() {
+    let model = synth_model_shaped(93, 4, 2, 128);
+    let prompt_of = |id: u64| -> Vec<u32> {
+        (0..40).map(|i| ((i * 3 + 7 * id as usize) % 256) as u32)
+            .collect()
+    };
+    // worst case per request: 2 layers x 1 page = 2 f32 pages
+    let mut admitted = Vec::new();
+    for &kvp in &[KvPrecision::F32, KvPrecision::Int8] {
+        let batcher = Batcher::new(16, 32).with_kv_budget(4);
+        let mut sched = Scheduler::new(&model, batcher,
+                                       fixed_controller());
+        let mut rxs = Vec::new();
+        for id in 0..12u64 {
+            let (req, rx) = mk_req_at(id, prompt_of(id), 4, kvp);
+            sched.submit(req);
+            rxs.push(rx);
+        }
+        sched.tick(0.0).unwrap();
+        admitted.push(sched.n_active());
+        // everyone still completes eventually
+        sched.run_to_completion(|_| 0.0).unwrap();
+        for rx in rxs {
+            rx.try_recv().expect("queued request must finish");
+        }
+        assert_eq!(sched.arena.resident_bytes(), 0,
+                   "retire must return all bytes");
+    }
+    assert_eq!(admitted[0], 2, "f32: 4-page budget / 2 pages each");
+    assert_eq!(admitted[1], 8, "i8 must admit 4x the f32 slots");
 }
