@@ -58,7 +58,7 @@ fn main() {
             let (w_fp, d_in, d_out) = bs::fp_weight(&bundle, probe, "wq")
                 .unwrap();
             let w3 = match m_3bit.layers[probe].linear("wq") {
-                mobiquant::model::LinearBackend::Static(s) =>
+                Ok(mobiquant::model::LinearBackend::Static(s)) =>
                     s.weights.clone(),
                 _ => unreachable!(),
             };
@@ -102,7 +102,7 @@ fn main() {
             let m4 = Model::load(&bundle, BackendKind::Static(k4))
                 .unwrap();
             let get_w = |m: &Model| match m.layers[probe].linear("wq") {
-                mobiquant::model::LinearBackend::Static(s) =>
+                Ok(mobiquant::model::LinearBackend::Static(s)) =>
                     s.weights.clone(),
                 _ => unreachable!(),
             };

@@ -33,7 +33,7 @@ fn main() {
 
             // error increment when dropping 4-bit -> 2-bit (MoBiSlice)
             let lin = match mobiq.layers[probe].linear("wq") {
-                mobiquant::model::LinearBackend::Mobiq(m) => m,
+                Ok(mobiquant::model::LinearBackend::Mobiq(m)) => m,
                 _ => unreachable!(),
             };
             let codes: Vec<Vec<u8>> = lin.slices.iter()
@@ -62,7 +62,7 @@ fn main() {
         let xs = fpm.attn_inputs(&toks[..n_probe], probe,
                                  Precision::Fixed(4)).unwrap();
         let lin = match mobiq.layers[probe].linear("wq") {
-            mobiquant::model::LinearBackend::Mobiq(m) => m,
+            Ok(mobiquant::model::LinearBackend::Mobiq(m)) => m,
             _ => unreachable!(),
         };
         let mut scratch = mobiquant::mobiq::engine::Scratch::new(

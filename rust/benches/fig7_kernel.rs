@@ -68,7 +68,7 @@ fn main() {
         for li in 0..cfg.n_layers {
             for name in LINEAR_NAMES {
                 let lin = match mobiq.layers[li].linear(name) {
-                    mobiquant::model::LinearBackend::Mobiq(m) => m,
+                    Ok(mobiquant::model::LinearBackend::Mobiq(m)) => m,
                     _ => continue,
                 };
                 let x = rng.normal_vec(lin.d_in, 1.0);
@@ -110,7 +110,7 @@ fn main() {
     let mut linears = Vec::new();
     for _ in 0..cfg.n_layers {
         for name in LINEAR_NAMES {
-            let (d_in, d_out) = cfg.linear_dims(name);
+            let (d_in, d_out) = cfg.linear_dims(name).unwrap();
             linears.push(LinearDims { d_in, d_out });
         }
     }

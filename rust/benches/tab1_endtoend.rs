@@ -188,8 +188,8 @@ fn main() {
                         for (li, lw) in mobiq.layers.iter().enumerate() {
                             let _ = li;
                             for name in LINEAR_NAMES {
-                                if let mobiquant::model::LinearBackend::
-                                    Mobiq(m) = lw.linear(name)
+                                if let Ok(mobiquant::model::LinearBackend::
+                                    Mobiq(m)) = lw.linear(name)
                                 {
                                     let x = &xs[0][..m.d_in.min(
                                         xs[0].len())];

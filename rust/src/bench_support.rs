@@ -118,7 +118,7 @@ pub fn synth_model_shaped(seed: u64, n_heads: usize, n_kv_heads: usize,
     let mut layers = Vec::with_capacity(cfg.n_layers);
     for _ in 0..cfg.n_layers {
         let mut lin = |name: &str| {
-            let (di, dn) = cfg.linear_dims(name);
+            let (di, dn) = cfg.linear_dims(name).unwrap();
             LinearBackend::Mobiq(synth_mobiq_linear(&mut rng, di, dn))
         };
         layers.push(LayerWeights {

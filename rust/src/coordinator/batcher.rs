@@ -16,10 +16,15 @@
 
 use std::collections::VecDeque;
 
-use super::request::{Request, RequestId};
+use super::request::{PreemptedSeq, Request, RequestId};
 
 pub struct Batcher {
     queue: VecDeque<Request>,
+    /// Sequences evicted by the pressure ladder, waiting to re-prefill.
+    /// Strictly ahead of `queue` at admission time (a preempted request
+    /// was already admitted once — letting newcomers starve it would
+    /// turn preemption into a drop).
+    resume: VecDeque<PreemptedSeq>,
     pub max_active: usize,
     pub max_queue: usize,
     /// Prompt tokens fed per tick per sequence during chunked prefill —
@@ -49,6 +54,7 @@ impl Batcher {
     pub fn new(max_active: usize, max_queue: usize) -> Batcher {
         Batcher {
             queue: VecDeque::new(),
+            resume: VecDeque::new(),
             max_active,
             max_queue,
             prefill_chunk: 16,
@@ -120,6 +126,25 @@ impl Batcher {
         self.queue.len()
     }
 
+    /// Park a preempted sequence for a later resume.
+    pub fn park(&mut self, p: PreemptedSeq) {
+        self.resume.push_back(p);
+    }
+
+    /// The preempted sequence next in line to resume, if any.
+    pub fn peek_resume(&self) -> Option<&PreemptedSeq> {
+        self.resume.front()
+    }
+
+    pub fn pop_resume(&mut self) -> Option<PreemptedSeq> {
+        self.resume.pop_front()
+    }
+
+    /// Preempted sequences waiting to resume.
+    pub fn parked(&self) -> usize {
+        self.resume.len()
+    }
+
     /// The request next in line for admission, if any.
     pub fn peek(&self) -> Option<&Request> {
         self.queue.front()
@@ -151,8 +176,10 @@ impl Batcher {
     }
 
     /// Queue pressure in [0, 1] — feeds the elastic controller.
+    /// Parked (preempted) sequences count: they are queued work too.
     pub fn pressure(&self) -> f64 {
-        self.queue.len() as f64 / self.max_queue.max(1) as f64
+        (self.queue.len() + self.resume.len()) as f64
+            / self.max_queue.max(1) as f64
     }
 }
 

@@ -14,6 +14,10 @@ pub struct ControllerConfig {
     pub max_bits: f64,
     /// Pressure weight of queue depth vs the external signal.
     pub queue_weight: f64,
+    /// Pressure weight of KV arena occupancy — couples the weight-bits
+    /// loop to the memory ladder: a full arena pulls weight precision
+    /// down too, shortening residency (fewer high-bit decode ticks).
+    pub memory_weight: f64,
     /// Minimum change in computed target before switching (hysteresis).
     pub hysteresis_bits: f64,
 }
@@ -24,6 +28,7 @@ impl Default for ControllerConfig {
             min_bits: 2.0,
             max_bits: 8.0,
             queue_weight: 0.5,
+            memory_weight: 0.25,
             hysteresis_bits: 0.45,
         }
     }
@@ -45,7 +50,15 @@ impl ElasticController {
     /// Update with external pressure and queue pressure, both in [0, 1].
     /// Returns the precision to use for the next scheduling tick.
     pub fn update(&mut self, external: f64, queue: f64) -> Precision {
-        let p = (external + self.cfg.queue_weight * queue)
+        self.update_with_memory(external, queue, 0.0)
+    }
+
+    /// [`update`](Self::update) with an additional KV-occupancy term
+    /// (the scheduler feeds the arena's resident/capacity ratio).
+    pub fn update_with_memory(&mut self, external: f64, queue: f64,
+                              memory: f64) -> Precision {
+        let p = (external + self.cfg.queue_weight * queue
+                 + self.cfg.memory_weight * memory)
             .clamp(0.0, 1.0);
         let raw = self.cfg.max_bits
             - (self.cfg.max_bits - self.cfg.min_bits) * p;
@@ -107,6 +120,15 @@ mod tests {
         let mut b = ElasticController::new(ControllerConfig::default());
         let _ = a.update(0.3, 0.0);
         let _ = b.update(0.3, 1.0);
+        assert!(b.target_bits() < a.target_bits());
+    }
+
+    #[test]
+    fn memory_pressure_contributes() {
+        let mut a = ElasticController::new(ControllerConfig::default());
+        let mut b = ElasticController::new(ControllerConfig::default());
+        let _ = a.update_with_memory(0.3, 0.0, 0.0);
+        let _ = b.update_with_memory(0.3, 0.0, 1.0);
         assert!(b.target_bits() < a.target_bits());
     }
 

@@ -47,6 +47,26 @@ pub struct Metrics {
     /// Times admission stalled because the queue head's worst-case
     /// pages did not fit (page backpressure, not slot pressure).
     pub admissions_deferred: u64,
+    // -- pressure-ladder accounting (closed-loop elastic control) ----
+    /// Ticks spent in each pressure band (calm/moderate/high/critical).
+    pub pressure_ticks: [u64; 4],
+    /// Admissions whose KV precision was degraded below the request's
+    /// ask by the pressure floor.
+    pub admissions_degraded: u64,
+    /// Requant sweeps that converted at least one resident tail page.
+    pub requant_events: u64,
+    /// Pages converted in place across all requant sweeps.
+    pub requant_pages: u64,
+    /// Arena bytes released by in-place requantization.
+    pub requant_bytes_freed: u64,
+    /// Sequences evicted mid-flight by the Critical rung (each is
+    /// parked and later resumed — never dropped).
+    pub preemptions: u64,
+    /// Preempted sequences re-admitted for their resume prefill.
+    pub resumes: u64,
+    /// Mid-tick `OutOfPages` faults the degradation ladder absorbed
+    /// (none of these escaped `Scheduler::run`).
+    pub oom_recoveries: u64,
 }
 
 impl Metrics {
@@ -79,6 +99,13 @@ impl Metrics {
         self.kv_pages_i8 = arena.resident_pages_at(KvPrecision::Int8);
         self.kv_pages_u4 = arena.resident_pages_at(KvPrecision::Int4);
         self.kv_bytes_saved_vs_f32 = arena.bytes_saved_vs_f32();
+    }
+
+    /// Count a tick spent in a pressure band.
+    pub fn record_pressure(&mut self, band: usize) {
+        if let Some(t) = self.pressure_ticks.get_mut(band) {
+            *t += 1;
+        }
     }
 
     /// Fraction of admissions that reused a shared prompt prefix.
@@ -116,7 +143,9 @@ impl Metrics {
              p99_tok={:.2}ms mean_req={:.1}ms rejected={} \
              kv_pages_peak={}/{} kv_bytes_peak={}/{} \
              kv_pages_f32/i8/u4={}/{}/{} kv_saved_vs_f32={}B \
-             prefix_hit_rate={:.2} prefix_tokens_reused={} deferred={}",
+             prefix_hit_rate={:.2} prefix_tokens_reused={} deferred={} \
+             pressure_ticks={:?} degraded={} requant={}ev/{}pg/{}B \
+             preempt={}/{} oom_recovered={}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tokens_per_s(wall_s),
@@ -135,6 +164,14 @@ impl Metrics {
             self.prefix_hit_rate(),
             self.prefix_tokens_reused,
             self.admissions_deferred,
+            self.pressure_ticks,
+            self.admissions_degraded,
+            self.requant_events,
+            self.requant_pages,
+            self.requant_bytes_freed,
+            self.preemptions,
+            self.resumes,
+            self.oom_recoveries,
         )
     }
 }

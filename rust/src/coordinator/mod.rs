@@ -9,6 +9,9 @@
 //! * [`batcher`]    — admission queue + continuous batching.
 //! * [`controller`] — elastic precision controller: resource pressure +
 //!   queue depth -> (target bits, global delta), with hysteresis.
+//! * [`pressure`]   — memory-pressure degradation ladder: arena
+//!   occupancy -> admission precision floors, in-place KV tail
+//!   requantization, youngest-sequence preemption.
 //! * [`scheduler`]  — the decode loop: interleaves active sequences,
 //!   applies the controller's precision each tick, retires finished
 //!   sequences, admits new ones.
@@ -18,10 +21,12 @@
 pub mod batcher;
 pub mod controller;
 pub mod metrics;
+pub mod pressure;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use controller::ElasticController;
+pub use pressure::{PressureConfig, PressureController, PressureLevel};
 pub use request::{Request, RequestId, Response};
 pub use server::{Server, ServerConfig};

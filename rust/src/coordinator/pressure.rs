@@ -1,0 +1,246 @@
+//! Memory-pressure controller: the degradation ladder's policy half.
+//!
+//! [`ElasticController`](super::controller::ElasticController) turns
+//! resource pressure into *weight* bits; this module turns live KV
+//! arena occupancy into *cache* actions, so the scheduler never
+//! hard-fails on memory.  Occupancy maps to a band, and each band
+//! unlocks one more rung of the ladder:
+//!
+//! * **Calm** — nothing; admissions keep their requested KV precision.
+//! * **Moderate** — new admissions are floored to i8 KV storage (the
+//!   admission-time knob PR 5 built; resident sequences untouched).
+//! * **High** — admissions floor to i4 AND resident sequences'
+//!   exclusively-owned tail pages are requantized in place
+//!   (f32→i8; see [`KvArena::requant_seq_tail`]
+//!   (crate::model::kvcache::KvArena::requant_seq_tail)).
+//! * **Critical** — requant target drops to i4 and the scheduler may
+//!   preempt the youngest sequence, parking its tokens for a later
+//!   re-prefill.
+//!
+//! Escalation is immediate (pressure is dangerous), de-escalation is
+//! hysteretic: the controller only steps down once occupancy falls
+//! `hysteresis` *below* the band's entry threshold, so a sequence
+//! retiring and its successor admitting do not make the ladder
+//! oscillate between rungs tick over tick.
+
+use crate::model::kvcache::KvPrecision;
+
+/// Occupancy thresholds (fractions of the arena byte budget) at which
+/// each band engages, plus the de-escalation hysteresis margin.
+#[derive(Debug, Clone)]
+pub struct PressureConfig {
+    /// Occupancy at which admissions degrade to i8.
+    pub moderate: f64,
+    /// Occupancy at which resident tails requantize (and admissions
+    /// degrade to i4).
+    pub high: f64,
+    /// Occupancy at which the scheduler may preempt.
+    pub critical: f64,
+    /// De-escalation margin: step down only when occupancy drops this
+    /// far below the current band's entry threshold.
+    pub hysteresis: f64,
+}
+
+impl Default for PressureConfig {
+    fn default() -> Self {
+        PressureConfig {
+            moderate: 0.70,
+            high: 0.85,
+            critical: 0.97,
+            hysteresis: 0.05,
+        }
+    }
+}
+
+/// The ladder's rungs, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum PressureLevel {
+    #[default]
+    Calm,
+    Moderate,
+    High,
+    Critical,
+}
+
+impl PressureLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            PressureLevel::Calm => "calm",
+            PressureLevel::Moderate => "moderate",
+            PressureLevel::High => "high",
+            PressureLevel::Critical => "critical",
+        }
+    }
+
+    /// Index into per-band counters (0..4).
+    pub fn index(self) -> usize {
+        match self {
+            PressureLevel::Calm => 0,
+            PressureLevel::Moderate => 1,
+            PressureLevel::High => 2,
+            PressureLevel::Critical => 3,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct PressureController {
+    cfg: PressureConfig,
+    level: PressureLevel,
+    escalations: u64,
+}
+
+impl PressureController {
+    pub fn new(cfg: PressureConfig) -> PressureController {
+        PressureController {
+            cfg,
+            level: PressureLevel::Calm,
+            escalations: 0,
+        }
+    }
+
+    /// Entry threshold of a band (Calm has none).
+    fn entry(&self, level: PressureLevel) -> f64 {
+        match level {
+            PressureLevel::Calm => 0.0,
+            PressureLevel::Moderate => self.cfg.moderate,
+            PressureLevel::High => self.cfg.high,
+            PressureLevel::Critical => self.cfg.critical,
+        }
+    }
+
+    /// Band the raw occupancy lands in, ignoring hysteresis.
+    fn raw_level(&self, occupancy: f64) -> PressureLevel {
+        if occupancy >= self.cfg.critical {
+            PressureLevel::Critical
+        } else if occupancy >= self.cfg.high {
+            PressureLevel::High
+        } else if occupancy >= self.cfg.moderate {
+            PressureLevel::Moderate
+        } else {
+            PressureLevel::Calm
+        }
+    }
+
+    /// Feed the tick's arena occupancy (resident/capacity bytes, in
+    /// [0, 1]); returns the band to act on this tick.  Escalation is
+    /// immediate; de-escalation waits until occupancy clears the
+    /// current band's entry threshold by `hysteresis`.
+    pub fn update(&mut self, occupancy: f64) -> PressureLevel {
+        let raw = self.raw_level(occupancy);
+        if raw > self.level {
+            self.level = raw;
+            self.escalations += 1;
+        } else if raw < self.level {
+            let release = self.entry(self.level) - self.cfg.hysteresis;
+            if occupancy < release {
+                self.level = raw;
+            }
+        }
+        self.level
+    }
+
+    pub fn level(&self) -> PressureLevel {
+        self.level
+    }
+
+    pub fn escalations(&self) -> u64 {
+        self.escalations
+    }
+
+    pub fn config(&self) -> &PressureConfig {
+        &self.cfg
+    }
+
+    /// Admission-time KV storage floor for the current band: the
+    /// request keeps what it asked for unless the band demands
+    /// something cheaper (a request that already asked for i4 is never
+    /// *upgraded*).
+    pub fn admission_precision(&self, requested: KvPrecision)
+                               -> KvPrecision {
+        let floor = match self.level {
+            PressureLevel::Calm => KvPrecision::F32,
+            PressureLevel::Moderate => KvPrecision::Int8,
+            PressureLevel::High | PressureLevel::Critical => {
+                KvPrecision::Int4
+            }
+        };
+        if floor.rank() > requested.rank() {
+            floor
+        } else {
+            requested
+        }
+    }
+
+    /// In-place requant target for resident sequences' tails, if the
+    /// band calls for one.
+    pub fn requant_target(&self) -> Option<KvPrecision> {
+        match self.level {
+            PressureLevel::High => Some(KvPrecision::Int8),
+            PressureLevel::Critical => Some(KvPrecision::Int4),
+            _ => None,
+        }
+    }
+
+    /// Whether the band permits preempting the youngest sequence.
+    pub fn should_preempt(&self) -> bool {
+        self.level == PressureLevel::Critical
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_map_to_levels() {
+        let mut c = PressureController::new(PressureConfig::default());
+        assert_eq!(c.update(0.10), PressureLevel::Calm);
+        assert_eq!(c.update(0.72), PressureLevel::Moderate);
+        assert_eq!(c.update(0.90), PressureLevel::High);
+        assert_eq!(c.update(0.99), PressureLevel::Critical);
+    }
+
+    #[test]
+    fn deescalation_needs_hysteresis_margin() {
+        let mut c = PressureController::new(PressureConfig::default());
+        assert_eq!(c.update(0.90), PressureLevel::High);
+        // just below the entry threshold: still High (hysteresis)
+        assert_eq!(c.update(0.83), PressureLevel::High);
+        // clears entry - hysteresis = 0.80: steps down
+        assert_eq!(c.update(0.78), PressureLevel::Moderate);
+        // all the way down only once below moderate - hysteresis
+        assert_eq!(c.update(0.66), PressureLevel::Moderate);
+        assert_eq!(c.update(0.60), PressureLevel::Calm);
+        assert_eq!(c.escalations(), 1);
+    }
+
+    #[test]
+    fn admission_floor_never_upgrades() {
+        let mut c = PressureController::new(PressureConfig::default());
+        let _ = c.update(0.72); // Moderate -> i8 floor
+        assert_eq!(c.admission_precision(KvPrecision::F32),
+                   KvPrecision::Int8);
+        assert_eq!(c.admission_precision(KvPrecision::Int4),
+                   KvPrecision::Int4);
+        let _ = c.update(0.99); // Critical -> i4 floor
+        assert_eq!(c.admission_precision(KvPrecision::F32),
+                   KvPrecision::Int4);
+        assert_eq!(c.admission_precision(KvPrecision::Int8),
+                   KvPrecision::Int4);
+    }
+
+    #[test]
+    fn ladder_actions_per_band() {
+        let mut c = PressureController::new(PressureConfig::default());
+        let _ = c.update(0.1);
+        assert_eq!(c.requant_target(), None);
+        assert!(!c.should_preempt());
+        let _ = c.update(0.86);
+        assert_eq!(c.requant_target(), Some(KvPrecision::Int8));
+        assert!(!c.should_preempt());
+        let _ = c.update(0.99);
+        assert_eq!(c.requant_target(), Some(KvPrecision::Int4));
+        assert!(c.should_preempt());
+    }
+}

@@ -4,6 +4,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::model::kvcache::KvPrecision;
+use crate::model::transformer::DecodeStats;
 
 pub type RequestId = u64;
 
@@ -19,6 +20,34 @@ pub struct Request {
     pub kv_precision: KvPrecision,
     pub submitted: Instant,
     pub reply: mpsc::Sender<Response>,
+}
+
+/// A sequence evicted mid-flight by the pressure ladder's Critical
+/// rung: its arena pages are released and everything needed to finish
+/// the request later is parked here.  `tokens` holds the prompt *plus
+/// every token generated so far* — decoding is greedy (argmax, no
+/// sampling state), so KV content is a pure function of the token
+/// prefix and re-prefilling `tokens` reproduces exactly the logits the
+/// preempted decode would have seen next.  That is the preempt→resume
+/// parity guarantee `tests/pressure.rs` pins.
+#[derive(Debug)]
+pub struct PreemptedSeq {
+    pub req: Request,
+    /// Prompt + generated-so-far (the resume re-prefill input).
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    /// Tokens already generated (counts against `max_new_tokens`).
+    pub generated: usize,
+    /// KV storage precision the request *asked* for; the resume
+    /// admission re-applies the pressure floor freshly, so a sequence
+    /// preempted under Critical is not pinned to i4 forever.
+    pub kv_prec: KvPrecision,
+    /// Routing stats carried across the gap so the final response
+    /// reports bits over the whole request, not just the resumed half.
+    pub stats: DecodeStats,
+    pub prefill_ms: f64,
+    pub decode_ms: f64,
+    pub admitted_at: Instant,
 }
 
 #[derive(Debug, Clone)]

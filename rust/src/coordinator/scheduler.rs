@@ -1,18 +1,33 @@
 //! The decode scheduler: continuous batching with elastic precision
 //! over the process-wide paged KV arena.
 //!
-//! Each tick the scheduler (1) picks the tick's precision from the
-//! elastic controller, (2) admits queued requests against *real free
-//! byte counts* (worst-case bytes for prompt + generation headroom at
-//! the request's KV storage precision — an i8 request reserves a
-//! quarter of an f32 one — discounted by any shared prompt prefix
-//! found in the prefix cache), (3) advances every
-//! active sequence by one token — prefilling sequences consume a whole
-//! prompt chunk through one batched kernel call, and all decoding
-//! sequences are **coalesced into one batched call per layer**
-//! (`Model::decode_batch`) — and (4) retires finished sequences,
-//! returning their pages to the arena's free list.  The structure
-//! mirrors a vLLM-style continuous batcher with paged attention.
+//! Each tick the scheduler (1) reads arena occupancy into the pressure
+//! ladder and picks the tick's weight precision from the elastic
+//! controller, (2) admits queued requests against *real free byte
+//! counts* (worst-case bytes for prompt + generation headroom at the
+//! request's KV storage precision — an i8 request reserves a quarter
+//! of an f32 one — discounted by any shared prompt prefix found in the
+//! prefix cache), (3) advances every active sequence by one token —
+//! prefilling sequences consume a whole prompt chunk through one
+//! batched kernel call, and all decoding sequences are **coalesced
+//! into one batched call per layer** (`Model::decode_batch`) — and
+//! (4) retires finished sequences, returning their pages to the
+//! arena's free list.  The structure mirrors a vLLM-style continuous
+//! batcher with paged attention.
+//!
+//! ## Pressure ladder
+//!
+//! Memory pressure never hard-fails a tick.  The
+//! [`PressureController`] maps occupancy bands to rungs: Moderate
+//! floors new admissions to i8 KV storage, High additionally
+//! requantizes resident sequences' exclusively-owned tail pages in
+//! place (f32→i8) and reclaims prefix-cache pages, Critical drops the
+//! requant target to i4 and preempts the youngest sequence — its
+//! tokens park in the batcher's resume queue and re-prefill later
+//! (greedy decoding makes the resumed completion bit-identical to an
+//! uninterrupted run).  A mid-tick `OutOfPages` fault walks the same
+//! rungs via [`Scheduler::tick`]'s recovery loop instead of
+//! propagating out of `run_to_completion`.
 //!
 //! ## Prefix sharing
 //!
@@ -38,9 +53,12 @@ use anyhow::Result;
 use super::batcher::{Admission, Batcher};
 use super::controller::ElasticController;
 use super::metrics::Metrics;
-use super::request::{Request, RequestMetrics, Response};
+use super::pressure::{PressureConfig, PressureController, PressureLevel};
+use super::request::{PreemptedSeq, Request, RequestId, RequestMetrics,
+                     Response};
 use crate::mobiq::engine::Precision;
-use crate::model::kvcache::{KvArena, KvHandle, KvPrecision, KV_PAGE};
+use crate::model::kvcache::{KvArena, KvHandle, KvPrecision, OutOfPages,
+                            KV_PAGE};
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
                                 DecodeStats};
 use crate::model::Model;
@@ -49,17 +67,28 @@ use crate::model::Model;
 /// insertion past this, or one per tick under page backpressure.
 const PREFIX_CACHE_MAX: usize = 16;
 
+/// Mid-tick `OutOfPages` recovery attempts that may use the gentle
+/// rungs (prefix eviction, tail requant) before recovery goes straight
+/// to preemption.  Bounds the retry loop: each gentle rung either
+/// frees bytes or reports it cannot, and each preemption shrinks the
+/// active set.
+const MAX_OOM_GENTLE: u32 = 8;
+
 struct ActiveSeq {
     req: Request,
     seq: KvHandle,
     tokens: Vec<u32>,
     prompt_len: usize,
+    /// Tokens to feed before decode starts: the (truncated) prompt on
+    /// a fresh admission, prompt + generated-so-far on a resume from
+    /// preemption (the re-prefill reproduces the parked decode state).
+    prefill_len: usize,
     /// Tokens that have entered the model; starts at the shared-prefix
     /// length when admission attached cached pages.
     fed: usize,
     generated: usize,
-    /// Storage precision of this sequence's KV pages (from the
-    /// request).
+    /// Storage precision of this sequence's KV *appends* (requant can
+    /// lower it mid-flight; already-written shared pages keep theirs).
     kv_prec: KvPrecision,
     /// Worst-case budget bytes reserved at admission (minus the shared
     /// discount); with `bytes_at_admission` this bounds what the
@@ -71,6 +100,10 @@ struct ActiveSeq {
     prefill_prec: Option<Precision>,
     prefill_uniform: bool,
     registered: bool,
+    /// Admission order (monotone across the run) — "youngest" for
+    /// preemption is the max of these, so the sequence that loses its
+    /// pages is the one with the least sunk prefill/decode work.
+    admit_ord: u64,
     stats: DecodeStats,
     prefill_ms: f64,
     decode_ms: f64,
@@ -109,9 +142,11 @@ pub struct Scheduler<'m> {
     pub arena: KvArena,
     active: Vec<ActiveSeq>,
     prefix: Vec<PrefixEntry>,
+    pressure: PressureController,
     scratch: DecodeScratch,
     started: Instant,
     ticks: u64,
+    admit_counter: u64,
 }
 
 /// Worst-case budget bytes a request needs: its (truncated) prompt
@@ -182,9 +217,17 @@ impl<'m> Scheduler<'m> {
             arena,
             active: Vec::new(),
             prefix: Vec::new(),
+            pressure: PressureController::new(PressureConfig::default()),
             started: Instant::now(),
             ticks: 0,
+            admit_counter: 0,
         }
+    }
+
+    /// Override the pressure ladder's occupancy bands.
+    pub fn with_pressure(mut self, cfg: PressureConfig) -> Scheduler<'m> {
+        self.pressure = PressureController::new(cfg);
+        self
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -197,8 +240,14 @@ impl<'m> Scheduler<'m> {
         self.active.len()
     }
 
+    /// The pressure band acted on at the last tick.
+    pub fn pressure_level(&self) -> PressureLevel {
+        self.pressure.level()
+    }
+
     pub fn idle(&self) -> bool {
         self.active.is_empty() && self.batcher.queued() == 0
+            && self.batcher.parked() == 0
     }
 
     /// Drop the least-recently-used prefix entry, returning its pages.
@@ -214,15 +263,193 @@ impl<'m> Scheduler<'m> {
         self.metrics.prefix_evictions += 1;
     }
 
+    fn index_of(&self, id: RequestId) -> Option<usize> {
+        self.active.iter().position(|s| s.req.id == id)
+    }
+
+    /// Youngest (most recently admitted) active sequence, optionally
+    /// excluding one request — the preemption victim choice: it has
+    /// the least sunk work to recompute.
+    fn youngest_active(&self, protect: Option<RequestId>)
+                       -> Option<usize> {
+        self.active.iter().enumerate()
+            .filter(|(_, s)| Some(s.req.id) != protect)
+            .max_by_key(|(_, s)| s.admit_ord)
+            .map(|(i, _)| i)
+    }
+
+    fn seq_finished(&self, s: &ActiveSeq) -> bool {
+        let kv_full = self.arena.seq_len(s.seq) + 1
+            >= self.model.cfg.max_seq_len;
+        s.generated >= s.req.max_new_tokens || kv_full
+    }
+
+    /// Retire one sequence: free its pages, assemble and send the
+    /// response, record request metrics.
+    fn retire_at(&mut self, i: usize) {
+        let seq = self.active.swap_remove(i);
+        self.arena.free_seq(seq.seq);
+        let total_ms =
+            seq.req.submitted.elapsed().as_secs_f64() * 1000.0;
+        let queue_ms =
+            (seq.admitted_at - seq.req.submitted).as_secs_f64() * 1000.0;
+        let prompt_len = seq.prompt_len;
+        let resp = Response {
+            id: seq.req.id,
+            generated: seq.tokens[prompt_len..].to_vec(),
+            tokens: seq.tokens,
+            metrics: RequestMetrics {
+                queue_ms,
+                prefill_ms: seq.prefill_ms,
+                decode_ms: seq.decode_ms,
+                total_ms,
+                generated_tokens: seq.generated,
+                avg_bits: seq.stats.avg_bits(),
+            },
+        };
+        self.metrics.record_request(total_ms, seq.generated);
+        let _ = seq.req.reply.send(resp); // receiver may have gone away
+    }
+
+    /// Evict sequence `i` from the arena and park its tokens for a
+    /// later resume.  A sequence that already finished generating is
+    /// retired instead — parking it would make the resume prefill push
+    /// one argmax token past what an unpressured run produces.
+    fn preempt(&mut self, i: usize) {
+        if self.seq_finished(&self.active[i]) {
+            self.retire_at(i);
+            return;
+        }
+        let s = self.active.swap_remove(i);
+        self.arena.free_seq(s.seq);
+        self.metrics.preemptions += 1;
+        // park the *ask* precision, not the possibly-degraded one: the
+        // resume admission re-applies whatever floor holds then
+        self.batcher.park(PreemptedSeq {
+            tokens: s.tokens,
+            prompt_len: s.prompt_len,
+            generated: s.generated,
+            kv_prec: s.req.kv_precision,
+            stats: s.stats,
+            prefill_ms: s.prefill_ms,
+            decode_ms: s.decode_ms,
+            admitted_at: s.admitted_at,
+            req: s.req,
+        });
+    }
+
+    /// Requantize every resident sequence stored costlier than
+    /// `target` (exclusively-owned tail pages convert in place; shared
+    /// prefix pages keep their precision until COW).  Returns pages
+    /// converted.
+    fn requant_active(&mut self, target: KvPrecision) -> usize {
+        let max_seq = self.model.cfg.max_seq_len;
+        let mut pages = 0usize;
+        let mut bytes = 0usize;
+        for i in 0..self.active.len() {
+            if self.active[i].kv_prec.rank() >= target.rank() {
+                continue;
+            }
+            let h = self.active[i].seq;
+            let sum = self.arena.requant_seq_tail(h, target);
+            pages += sum.pages;
+            bytes += sum.bytes_freed;
+            let s = &mut self.active[i];
+            s.kv_prec = target;
+            // requantized pages are foreign to any prefix entry keyed
+            // on the original storage precision — never register them
+            s.registered = true;
+            // re-baseline the admission reservation at the cheaper
+            // rate (conservative: worst case from scratch at `target`)
+            let final_len = (s.prompt_len + s.req.max_new_tokens)
+                .min(max_seq);
+            s.reserved_bytes =
+                self.arena.seq_worst_bytes(final_len, target);
+            s.bytes_at_admission = self.arena.seq_bytes(h);
+        }
+        if pages > 0 {
+            self.metrics.requant_events += 1;
+            self.metrics.requant_pages += pages as u64;
+            self.metrics.requant_bytes_freed += bytes as u64;
+        }
+        pages
+    }
+
+    /// Walk the degradation ladder after a mid-tick `OutOfPages`
+    /// fault.  Returns true when the caller should retry the failed
+    /// operation; false means the faulting request itself was parked
+    /// (the operation is abandoned — the request resumes later, it is
+    /// never dropped).
+    ///
+    /// A synthetic failpoint fault reports the arena's *real* free
+    /// bytes, which already cover the need — gentle rungs cannot
+    /// satisfy a denial that is not about bytes, so those faults go
+    /// straight to preemption (this is also what lets the parity test
+    /// preempt without perturbing other residents).
+    fn recover_oom(&mut self, oom: &OutOfPages,
+                   protect: Option<RequestId>, attempt: u32) -> bool {
+        self.metrics.oom_recoveries += 1;
+        let real_shortage = oom.free_bytes < oom.needed_bytes;
+        if real_shortage && attempt <= MAX_OOM_GENTLE {
+            if !self.prefix.is_empty() {
+                self.evict_lru_prefix();
+                return true;
+            }
+            for target in [KvPrecision::Int8, KvPrecision::Int4] {
+                if self.requant_active(target) > 0 {
+                    return true;
+                }
+            }
+        }
+        if let Some(i) = self.youngest_active(protect) {
+            self.preempt(i);
+            return true;
+        }
+        // only the faulting sequence remains: park it too and tell the
+        // caller to abandon the operation
+        if let Some(id) = protect {
+            if let Some(i) = self.index_of(id) {
+                self.preempt(i);
+            }
+        }
+        false
+    }
+
     /// One scheduling tick under the given external pressure.
     /// Returns the number of model steps executed.
     pub fn tick(&mut self, external_pressure: f64) -> Result<usize> {
         self.ticks += 1;
 
-        // 1. precision for this tick — decided up front so admission
-        // can match prefix-cache entries against it
-        let precision = self.controller
-            .update(external_pressure, self.batcher.pressure());
+        // 1. pressure bands from *actual* occupancy at tick start
+        // (reservations are admission holdback, not resident bytes),
+        // then the tick's weight precision with the memory term
+        // coupled in — decided up front so admission can match
+        // prefix-cache entries against it
+        let capacity = self.arena.capacity_bytes();
+        let occupancy = if capacity == 0 {
+            0.0
+        } else {
+            self.arena.resident_bytes() as f64 / capacity as f64
+        };
+        let band = self.pressure.update(occupancy);
+        self.metrics.record_pressure(band.index());
+        let precision = self.controller.update_with_memory(
+            external_pressure, self.batcher.pressure(), occupancy);
+
+        // 1b. ladder rungs acting on resident state, before admission:
+        // reclaim cache pages, requantize resident tails, and under
+        // Critical preempt the youngest sequence
+        if band >= PressureLevel::High && !self.prefix.is_empty() {
+            self.evict_lru_prefix();
+        }
+        if let Some(target) = self.pressure.requant_target() {
+            self.requant_active(target);
+        }
+        if self.pressure.should_preempt() && self.active.len() > 1 {
+            if let Some(i) = self.youngest_active(None) {
+                self.preempt(i);
+            }
+        }
 
         // 2. admission against real free bytes: each queued request
         // needs its worst-case bytes (at its KV storage precision)
@@ -238,8 +465,10 @@ impl<'m> Scheduler<'m> {
         // requests that could never run — empty prompt (no token to
         // seed generation) or a worst case exceeding the whole arena —
         // are rejected up front instead of deadlocking the FIFO behind
-        // them (the dropped reply sender surfaces as a disconnect)
-        let capacity = self.arena.capacity_bytes();
+        // them (the dropped reply sender surfaces as a disconnect).
+        // Impossibility is judged at the *requested* precision: the
+        // pressure floor is transient and must not decide a permanent
+        // rejection.
         while let Some(front) = self.batcher.peek() {
             let impossible = front.prompt.is_empty() || {
                 let plen = max_prompt(front);
@@ -252,6 +481,62 @@ impl<'m> Scheduler<'m> {
             let _ = self.batcher.drop_head();
             self.metrics.rejected += 1;
         }
+
+        // 2a. resume preempted sequences first — strictly ahead of the
+        // FIFO: they were already admitted once, and letting newcomers
+        // starve them would turn preemption into a drop
+        while self.active.len() < self.batcher.max_active {
+            let (eff, worst) = {
+                let Some(p) = self.batcher.peek_resume() else { break };
+                let eff = self.pressure.admission_precision(p.kv_prec);
+                let left =
+                    p.req.max_new_tokens.saturating_sub(p.generated);
+                let total = (p.tokens.len() + left).min(max_seq);
+                (eff, self.arena.seq_worst_bytes(total, eff))
+            };
+            let held: usize = self.active.iter()
+                .map(|s| s.reserved_remaining(&self.arena))
+                .sum();
+            let avail = self.arena.free_bytes().saturating_sub(held);
+            // starvation guard: with an empty active set the resume
+            // always goes — the ladder absorbs any mid-flight
+            // shortfall, whereas waiting for a budget that never
+            // frees would wedge the queue
+            if !self.active.is_empty() && worst > avail {
+                break;
+            }
+            let p = self.batcher.pop_resume().unwrap();
+            if eff.rank() > p.kv_prec.rank() {
+                self.metrics.admissions_degraded += 1;
+            }
+            let seq = self.arena.alloc_seq_at(eff);
+            self.metrics.resumes += 1;
+            self.admit_counter += 1;
+            self.active.push(ActiveSeq {
+                seq,
+                prompt_len: p.prompt_len,
+                // re-prefill the whole parked state: prompt plus every
+                // token generated before preemption (greedy decoding
+                // makes this reproduce the parked logits exactly)
+                prefill_len: p.tokens.len(),
+                fed: 0,
+                kv_prec: eff,
+                reserved_bytes: worst,
+                bytes_at_admission: 0,
+                prefill_prec: None,
+                prefill_uniform: false,
+                registered: true,
+                admit_ord: self.admit_counter,
+                tokens: p.tokens,
+                generated: p.generated,
+                stats: p.stats,
+                prefill_ms: p.prefill_ms,
+                decode_ms: p.decode_ms,
+                admitted_at: p.admitted_at,
+                req: p.req,
+            });
+        }
+
         let held: usize = self.active.iter()
             .map(|s| s.reserved_remaining(&self.arena))
             .sum();
@@ -261,25 +546,32 @@ impl<'m> Scheduler<'m> {
         // (one scan per request) and reused for the fork below — the
         // cache must not change in between, which is why eviction
         // waits until after the admitted loop
-        let mut hits: Vec<Option<(usize, usize)>> = Vec::new();
-        let admitted = {
+        let mut hits: Vec<(Option<(usize, usize)>, KvPrecision)> =
+            Vec::new();
+        let admitted = if self.batcher.parked() > 0 {
+            // a deferred resume blocks newcomers (strict priority)
+            Vec::new()
+        } else {
             let arena = &self.arena;
             let prefix = &self.prefix;
+            let pressure = &self.pressure;
             let n_active = self.active.len();
             self.batcher.admit_with(n_active, avail, |req| {
                 let plen = max_prompt(req);
+                // pressure floors the admission's KV storage precision
+                let eff =
+                    pressure.admission_precision(req.kv_precision);
                 let worst = worst_bytes(arena, plen,
-                                        req.max_new_tokens,
-                                        req.kv_precision);
+                                        req.max_new_tokens, eff);
                 let hit = best_prefix(prefix, &req.prompt[..plen],
-                                      precision, req.kv_precision);
-                hits.push(hit);
+                                      precision, eff);
+                hits.push((hit, eff));
                 // only full shared pages are free; a shared partial
                 // page may still cost its COW copy, which `worst`
                 // already counts
                 let shared = hit.map_or(0, |(_, n)| n);
                 let discount = n_layers * (shared / KV_PAGE)
-                    * arena.page_bytes_at(req.kv_precision);
+                    * arena.page_bytes_at(eff);
                 worst.saturating_sub(discount)
             })
         };
@@ -290,9 +582,11 @@ impl<'m> Scheduler<'m> {
         self.metrics.admissions_deferred +=
             self.batcher.deferred() - deferred_before;
 
-        for (req, hit) in admitted.into_iter().zip(hits) {
+        for (req, (hit, kv_prec)) in admitted.into_iter().zip(hits) {
             let plen = max_prompt(&req);
-            let kv_prec = req.kv_precision;
+            if kv_prec.rank() > req.kv_precision.rank() {
+                self.metrics.admissions_degraded += 1;
+            }
             let mut tokens = req.prompt.clone();
             tokens.truncate(plen);
             let worst = worst_bytes(&self.arena, plen,
@@ -320,9 +614,11 @@ impl<'m> Scheduler<'m> {
                 }
             };
             let bytes_at_admission = self.arena.seq_bytes(seq);
+            self.admit_counter += 1;
             self.active.push(ActiveSeq {
                 seq,
                 prompt_len: tokens.len(),
+                prefill_len: tokens.len(),
                 fed: shared,
                 kv_prec,
                 reserved_bytes: reserved,
@@ -330,6 +626,7 @@ impl<'m> Scheduler<'m> {
                 prefill_prec: (shared > 0).then_some(precision),
                 prefill_uniform: true,
                 registered: false,
+                admit_ord: self.admit_counter,
                 tokens,
                 generated: 0,
                 stats: DecodeStats::new(self.model.cfg.n_layers),
@@ -350,37 +647,79 @@ impl<'m> Scheduler<'m> {
         // 3. advance sequences: prefill chunks first (one batched call
         // per chunk), then one coalesced decode step across every
         // sequence that was already past prefill at tick start.
+        // Membership is snapshotted by request id — OOM recovery may
+        // preempt (remove) sequences mid-phase, so indices are
+        // re-resolved per attempt and missing members are skipped.
         let model = self.model;
         let mut steps = 0usize;
-        let decode_ready: Vec<bool> = self.active.iter()
-            .map(|s| s.fed >= s.prompt_len)
+        let prefill_ids: Vec<RequestId> = self.active.iter()
+            .filter(|s| s.fed < s.prefill_len)
+            .map(|s| s.req.id)
+            .collect();
+        let decode_ids: Vec<RequestId> = self.active.iter()
+            .filter(|s| s.fed >= s.prefill_len)
+            .map(|s| s.req.id)
             .collect();
         let prefill_chunk = self.batcher.prefill_chunk;
 
         // 3a. chunked prefill — a whole prompt chunk per tick through
         // the weight-stationary kernel instead of per-token decodes.
-        for (seq, &ready) in self.active.iter_mut().zip(&decode_ready) {
-            if ready {
-                continue;
-            }
-            let t0 = Instant::now();
-            let end = (seq.fed + prefill_chunk).min(seq.prompt_len);
-            model.prefill(&seq.tokens[seq.fed..end], &mut self.arena,
-                          seq.seq, precision, &mut self.scratch,
-                          &mut seq.stats)?;
-            match seq.prefill_prec {
-                None => seq.prefill_prec = Some(precision),
-                Some(p) if p != precision => seq.prefill_uniform = false,
-                _ => {}
-            }
-            steps += end - seq.fed;
-            seq.fed = end;
-            seq.prefill_ms += t0.elapsed().as_secs_f64() * 1000.0;
-            if seq.fed == seq.prompt_len {
-                // emit first generated token right after prefill
-                let next = argmax(&self.scratch.logits) as u32;
-                seq.tokens.push(next);
-                seq.generated = 1;
+        // On OutOfPages: roll the sequence back to its pre-chunk
+        // length (layers diverge transiently mid-chunk), walk the
+        // ladder, retry.
+        for id in prefill_ids {
+            let mut attempt = 0u32;
+            loop {
+                let Some(idx) = self.index_of(id) else { break };
+                let len0 = self.arena.seq_len(self.active[idx].seq);
+                let t0 = Instant::now();
+                let fed_before = self.active[idx].fed;
+                let end = (fed_before + prefill_chunk)
+                    .min(self.active[idx].prefill_len);
+                let res = {
+                    let s = &mut self.active[idx];
+                    model.prefill(&s.tokens[s.fed..end],
+                                  &mut self.arena, s.seq, precision,
+                                  &mut self.scratch, &mut s.stats)
+                };
+                match res {
+                    Ok(()) => {
+                        let s = &mut self.active[idx];
+                        match s.prefill_prec {
+                            None => s.prefill_prec = Some(precision),
+                            Some(p) if p != precision => {
+                                s.prefill_uniform = false;
+                            }
+                            _ => {}
+                        }
+                        s.fed = end;
+                        s.prefill_ms +=
+                            t0.elapsed().as_secs_f64() * 1000.0;
+                        steps += end - fed_before;
+                        if s.fed == s.prefill_len {
+                            // emit the next token right after prefill
+                            // (on a resume this is the token the
+                            // preempted decode would have produced)
+                            let next =
+                                argmax(&self.scratch.logits) as u32;
+                            s.tokens.push(next);
+                            s.generated += 1;
+                        }
+                        break;
+                    }
+                    Err(e) => match e.downcast::<OutOfPages>() {
+                        Ok(oom) => {
+                            let h = self.active[idx].seq;
+                            self.arena.truncate_seq(h, len0);
+                            attempt += 1;
+                            if !self.recover_oom(&oom, Some(id),
+                                                 attempt) {
+                                break;
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    },
+                }
             }
         }
 
@@ -392,7 +731,7 @@ impl<'m> Scheduler<'m> {
             let (attempt, worth, aligned, prec, kv_prec) = {
                 let s = &self.active[i];
                 let aligned = (s.prompt_len / KV_PAGE) * KV_PAGE;
-                (s.fed == s.prompt_len && !s.registered,
+                (s.fed == s.prefill_len && !s.registered,
                  s.prefill_uniform && aligned >= KV_PAGE,
                  aligned,
                  s.prefill_prec,
@@ -437,78 +776,97 @@ impl<'m> Scheduler<'m> {
 
         // 3c. coalesced decode: fuse ready sequences (up to
         // max_decode_batch per group) into one batched call per layer.
+        // On OutOfPages: roll every member back one appended position,
+        // walk the ladder, retry with the surviving members.
         let vocab = model.cfg.vocab_size;
         let cap = self.batcher.max_decode_batch;
-        let arena = &mut self.arena;
-        let mut ready: Vec<&mut ActiveSeq> = self.active.iter_mut()
-            .zip(&decode_ready)
-            .filter_map(|(s, &r)| if r { Some(s) } else { None })
-            .collect();
-        for group in ready.chunks_mut(cap) {
-            let t0 = Instant::now();
-            {
-                let mut slots: Vec<DecodeSlot> = group.iter_mut()
-                    .map(|seq| DecodeSlot {
-                        token: seq.tokens[seq.fed],
-                        seq: seq.seq,
-                        stats: &mut seq.stats,
+        for group in decode_ids.chunks(cap) {
+            let mut attempt = 0u32;
+            loop {
+                let members: Vec<usize> = group.iter()
+                    .filter_map(|id| self.index_of(*id))
+                    .collect();
+                if members.is_empty() {
+                    break;
+                }
+                let len0: Vec<(KvHandle, usize)> = members.iter()
+                    .map(|&i| {
+                        let h = self.active[i].seq;
+                        (h, self.arena.seq_len(h))
                     })
                     .collect();
-                model.decode_batch(&mut slots, arena, precision,
-                                   &mut self.scratch)?;
-            }
-            // per-token latency attribution: the batch advanced every
-            // member one token in one wall interval
-            let ms = t0.elapsed().as_secs_f64() * 1000.0
-                / group.len() as f64;
-            for (row, seq) in group.iter_mut().enumerate() {
-                let lo = row * vocab;
-                let next = argmax(
-                    &self.scratch.block.logits[lo..lo + vocab]) as u32;
-                seq.fed += 1;
-                seq.tokens.push(next);
-                seq.generated += 1;
-                seq.decode_ms += ms;
-                self.metrics.record_token(ms);
-                steps += 1;
-            }
-        }
-        drop(ready);
-
-        let mut finished: Vec<usize> = Vec::new();
-        for (i, seq) in self.active.iter().enumerate() {
-            let kv_full = self.arena.seq_len(seq.seq) + 1
-                >= self.model.cfg.max_seq_len;
-            if seq.generated >= seq.req.max_new_tokens || kv_full {
-                finished.push(i);
+                // stats move out so DecodeSlot can hold &mut into them
+                // while the member list indexes self.active
+                let mut stats: Vec<DecodeStats> = members.iter()
+                    .map(|&i| {
+                        std::mem::take(&mut self.active[i].stats)
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                let res = {
+                    let active = &self.active;
+                    let mut slots: Vec<DecodeSlot> = members.iter()
+                        .zip(stats.iter_mut())
+                        .map(|(&i, st)| DecodeSlot {
+                            token: active[i].tokens[active[i].fed],
+                            seq: active[i].seq,
+                            stats: st,
+                        })
+                        .collect();
+                    model.decode_batch(&mut slots, &mut self.arena,
+                                       precision, &mut self.scratch)
+                };
+                for (&i, st) in members.iter().zip(stats) {
+                    self.active[i].stats = st;
+                }
+                match res {
+                    Ok(()) => {
+                        // per-token latency attribution: the batch
+                        // advanced every member one token in one wall
+                        // interval
+                        let ms = t0.elapsed().as_secs_f64() * 1000.0
+                            / members.len() as f64;
+                        for (row, &i) in members.iter().enumerate() {
+                            let lo = row * vocab;
+                            let next = argmax(
+                                &self.scratch.block.logits
+                                    [lo..lo + vocab]) as u32;
+                            let s = &mut self.active[i];
+                            s.fed += 1;
+                            s.tokens.push(next);
+                            s.generated += 1;
+                            s.decode_ms += ms;
+                            self.metrics.record_token(ms);
+                            steps += 1;
+                        }
+                        break;
+                    }
+                    Err(e) => match e.downcast::<OutOfPages>() {
+                        Ok(oom) => {
+                            for &(h, l) in &len0 {
+                                self.arena.truncate_seq(h, l);
+                            }
+                            attempt += 1;
+                            if !self.recover_oom(&oom, None, attempt) {
+                                break;
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    },
+                }
             }
         }
 
         // 4. retire: pages go back to the free list (minus any still
         // shared with the prefix cache or forked siblings)
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, seq) in self.active.iter().enumerate() {
+            if self.seq_finished(seq) {
+                finished.push(i);
+            }
+        }
         for &i in finished.iter().rev() {
-            let seq = self.active.swap_remove(i);
-            self.arena.free_seq(seq.seq);
-            let total_ms =
-                seq.req.submitted.elapsed().as_secs_f64() * 1000.0;
-            let queue_ms =
-                (seq.admitted_at - seq.req.submitted).as_secs_f64() * 1000.0;
-            let prompt_len = seq.prompt_len;
-            let resp = Response {
-                id: seq.req.id,
-                generated: seq.tokens[prompt_len..].to_vec(),
-                tokens: seq.tokens,
-                metrics: RequestMetrics {
-                    queue_ms,
-                    prefill_ms: seq.prefill_ms,
-                    decode_ms: seq.decode_ms,
-                    total_ms,
-                    generated_tokens: seq.generated,
-                    avg_bits: seq.stats.avg_bits(),
-                },
-            };
-            self.metrics.record_request(total_ms, seq.generated);
-            let _ = seq.req.reply.send(resp); // receiver may have gone away
+            self.retire_at(i);
         }
 
         let avg_bits = if self.active.is_empty() {

@@ -12,6 +12,7 @@ use anyhow::Result;
 use super::batcher::Batcher;
 use super::controller::{ControllerConfig, ElasticController};
 use super::metrics::Metrics;
+use super::pressure::PressureConfig;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::Scheduler;
 use crate::model::kvcache::KvPrecision;
@@ -37,6 +38,9 @@ pub struct ServerConfig {
     /// (requests submitted via [`Server::submit_at`] override it).
     pub kv_precision: KvPrecision,
     pub controller: ControllerConfig,
+    /// Occupancy bands of the memory-pressure degradation ladder
+    /// (admission floors, in-place tail requant, preemption).
+    pub pressure: PressureConfig,
     /// External resource pressure in [0, 1] sampled each tick via the
     /// shared cell (set by the embedder, e.g. from a workload trace).
     pub initial_pressure: f64,
@@ -52,6 +56,7 @@ impl Default for ServerConfig {
             kv_page_budget: None,
             kv_precision: KvPrecision::F32,
             controller: ControllerConfig::default(),
+            pressure: PressureConfig::default(),
             initial_pressure: 0.0,
         }
     }
@@ -94,7 +99,8 @@ impl Server {
             batcher = batcher.with_kv_budget(pages);
         }
         let controller = ElasticController::new(cfg.controller.clone());
-        let mut sched = Scheduler::new(&model, batcher, controller);
+        let mut sched = Scheduler::new(&model, batcher, controller)
+            .with_pressure(cfg.pressure.clone());
         let mut pressure = cfg.initial_pressure;
         loop {
             // drain control/requests without blocking while busy

@@ -103,7 +103,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     let mut linears = Vec::new();
     for _ in 0..cfg.n_layers {
         for name in LINEAR_NAMES {
-            let (d_in, d_out) = cfg.linear_dims(name);
+            let (d_in, d_out) = cfg.linear_dims(name)?;
             linears.push(LinearDims { d_in, d_out });
         }
     }

@@ -26,8 +26,11 @@
 //! storage precisions ([`KvPrecision`]): the original f32 slabs, int8
 //! (4x smaller) and bit-packed int4 (8x smaller).  Each sequence picks
 //! its precision at [`KvArena::alloc_seq_at`] time (plumbed from
-//! `ServerConfig` / per-request) and every page it maps lives in that
-//! precision's pool.  Quantization is symmetric absmax with **one scale
+//! `ServerConfig` / per-request) and fresh pages land in that
+//! precision's pool; since PR 6 tables tag the precision per *page*,
+//! because [`KvArena::requant_seq_tail`] converts exclusively-owned
+//! pages down the ladder in place under memory pressure while shared
+//! prefix pages keep the precision their other owners expect.  Quantization is symmetric absmax with **one scale
 //! per (page, kv head, side)**: `x ~= code * step` where
 //! `step = absmax / qmax` (qmax 127 for i8, 7 for i4).  The scale is
 //! updated incrementally on append — when a fresh row's absmax exceeds
@@ -72,10 +75,12 @@ pub const KV_PAGE: usize = 64;
 // Storage precision
 // ---------------------------------------------------------------------------
 
-/// Storage precision of one sequence's KV pages.  Chosen per sequence
-/// at allocation (`ServerConfig::kv_precision` / per-request); all of a
-/// sequence's pages, across all layers, share it — forks inherit it,
-/// so shared pages are always read at the precision they were written.
+/// Storage precision of KV pages.  Chosen per sequence at allocation
+/// (`ServerConfig::kv_precision` / per-request) and inherited by
+/// forks; online requantization ([`KvArena::requant_seq_tail`]) can
+/// later move a sequence's exclusively-owned pages down the ladder, so
+/// tables track the precision per page and shared pages are always
+/// read at the precision they were written.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum KvPrecision {
     /// Exact f32 rows — the oracle path and the default.
@@ -111,6 +116,27 @@ impl KvPrecision {
             KvPrecision::Int4 => "u4",
         }
     }
+
+    /// Coarseness rank along the degradation ladder: f32 < i8 < u4.
+    /// Online requantization only ever moves pages to a higher rank
+    /// (lossy, irreversible without recompute), so ladder logic
+    /// compares ranks instead of enumerating pairs.
+    pub fn rank(self) -> u8 {
+        match self {
+            KvPrecision::F32 => 0,
+            KvPrecision::Int8 => 1,
+            KvPrecision::Int4 => 2,
+        }
+    }
+
+    /// The next coarser precision down the ladder (None at the bottom).
+    pub fn degrade(self) -> Option<KvPrecision> {
+        match self {
+            KvPrecision::F32 => Some(KvPrecision::Int8),
+            KvPrecision::Int8 => Some(KvPrecision::Int4),
+            KvPrecision::Int4 => None,
+        }
+    }
 }
 
 /// Decode code `i` of a bit-packed int4 run (low nibble first).
@@ -142,12 +168,14 @@ pub enum KvRun<'a> {
 }
 
 impl<'a> KvRun<'a> {
-    /// The f32 slice of an exact run; panics on quantized storage
+    /// The f32 slice of an exact run, `None` on quantized storage
     /// (oracle/test accessor — kernels match on the variant instead).
-    pub fn as_f32(&self) -> &'a [f32] {
+    /// Non-panicking so a routing bug surfaces as a handleable error,
+    /// not a tick abort.
+    pub fn as_f32(&self) -> Option<&'a [f32]> {
         match *self {
-            KvRun::F32(s) => s,
-            _ => panic!("KvRun::as_f32 on a quantized run"),
+            KvRun::F32(s) => Some(s),
+            _ => None,
         }
     }
 
@@ -593,18 +621,33 @@ impl std::fmt::Display for OutOfPages {
 
 impl std::error::Error for OutOfPages {}
 
-/// Page table of one sequence x layer: pool-local physical page ids
-/// covering positions `[0, len)`.  Invariant: `pages.len() ==
+/// One page-table entry: a pool-local page id tagged with the pool it
+/// lives in.  Until PR 6 a whole sequence shared one precision; online
+/// requantization ([`KvArena::requant_seq_tail`]) now converts
+/// exclusively owned pages down the ladder in place, so a table can
+/// mix precisions — shared prefix pages keep the precision they were
+/// written at while the tail migrates to a coarser pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PageRef {
+    id: u32,
+    prec: KvPrecision,
+}
+
+/// Page table of one sequence x layer: precision-tagged physical page
+/// refs covering positions `[0, len)`.  Invariant: `pages.len() ==
 /// ceil(len / KV_PAGE)` between appends (the final page may be
 /// partially filled).
 #[derive(Debug, Clone, Default)]
 pub struct LayerTable {
-    pages: Vec<u32>,
+    pages: Vec<PageRef>,
     len: usize,
 }
 
 struct SeqState {
     layers: Vec<LayerTable>,
+    /// Precision fresh appends land at.  Pages already in the tables
+    /// keep their own tags; requantization moves this down the ladder
+    /// so the sequence keeps growing at the degraded precision.
     prec: KvPrecision,
 }
 
@@ -632,6 +675,47 @@ pub struct KvArena {
     /// Staging row scratch for quantized appends (rope'd K rows, then
     /// gathered V rows); grow-only, reused across calls.
     rot: Vec<f32>,
+    /// Deterministic fault-injection plan (tests only; see [`FailPlan`]).
+    #[cfg(feature = "failpoints")]
+    fail_plan: Option<FailPlan>,
+    /// Append-path page-claim attempts so far (failpoint schedule index).
+    #[cfg(feature = "failpoints")]
+    alloc_attempts: u64,
+}
+
+/// Deterministic fault-injection plan (`--features failpoints`): the
+/// arena counts append-path page-claim attempts, and any attempt whose
+/// 0-based index is in the plan fails with a synthetic [`OutOfPages`]
+/// as if the byte budget were exhausted at that instant.  The attempt
+/// counter advances on denied attempts too, so a rolled-back append
+/// that retries consumes its denial and then proceeds — every finite
+/// schedule terminates.  Synthetic faults report the arena's *real*
+/// free bytes, so recovery code can tell them from a genuine shortage.
+#[cfg(feature = "failpoints")]
+#[derive(Debug, Clone, Default)]
+pub struct FailPlan {
+    deny: std::collections::BTreeSet<u64>,
+}
+
+#[cfg(feature = "failpoints")]
+impl FailPlan {
+    /// Deny exactly the listed page-claim attempt indices.
+    pub fn deny_at(indices: &[u64]) -> FailPlan {
+        FailPlan { deny: indices.iter().copied().collect() }
+    }
+
+    /// Deny `n` attempts spaced `every` apart starting at `start`
+    /// (a periodic pressure schedule).
+    pub fn deny_every(start: u64, every: u64, n: u64) -> FailPlan {
+        assert!(every > 0);
+        FailPlan {
+            deny: (0..n).map(|i| start + i * every).collect(),
+        }
+    }
+
+    fn denies(&self, attempt: u64) -> bool {
+        self.deny.contains(&attempt)
+    }
 }
 
 impl KvArena {
@@ -657,7 +741,25 @@ impl KvArena {
             seqs: Vec::new(),
             free_seqs: Vec::new(),
             rot: Vec::new(),
+            #[cfg(feature = "failpoints")]
+            fail_plan: None,
+            #[cfg(feature = "failpoints")]
+            alloc_attempts: 0,
         }
+    }
+
+    /// Install (or clear) a fault-injection plan.  The attempt counter
+    /// keeps running across plans so schedules compose within one run.
+    #[cfg(feature = "failpoints")]
+    pub fn set_fail_plan(&mut self, plan: Option<FailPlan>) {
+        self.fail_plan = plan;
+    }
+
+    /// Append-path page-claim attempts seen so far (failpoint index
+    /// space — lets tests aim a denial at "the Nth claim from now").
+    #[cfg(feature = "failpoints")]
+    pub fn alloc_attempts(&self) -> u64 {
+        self.alloc_attempts
     }
 
     /// Pages needed to hold `positions` KV rows of one layer.
@@ -778,7 +880,10 @@ impl KvArena {
         self.insert_seq(state)
     }
 
-    /// Storage precision of a sequence's pages.
+    /// Precision a sequence's fresh appends land at.  Individual pages
+    /// already in its tables may sit higher up the ladder (e.g. an f32
+    /// shared prefix after the tail was requantized) — see
+    /// [`KvLayerView::page_precision`] for per-page tags.
     pub fn seq_precision(&self, h: KvHandle) -> KvPrecision {
         self.seqs[h.idx()].as_ref().expect("stale handle").prec
     }
@@ -807,7 +912,7 @@ impl KvArena {
         };
         for t in &layers {
             for &p in &t.pages {
-                self.refcount_mut(prec)[p as usize] += 1;
+                self.refcount_mut(p.prec)[p.id as usize] += 1;
             }
         }
         self.insert_seq(SeqState { layers, prec })
@@ -824,6 +929,15 @@ impl KvArena {
             KvPrecision::F32 => &mut self.pool_f32.refcount,
             KvPrecision::Int8 => &mut self.pool_i8.refcount,
             KvPrecision::Int4 => &mut self.pool_u4.refcount,
+        }
+    }
+
+    /// Current owner count of one table entry's physical page.
+    fn refcount_of(&self, p: PageRef) -> u32 {
+        match p.prec {
+            KvPrecision::F32 => self.pool_f32.refcount[p.id as usize],
+            KvPrecision::Int8 => self.pool_i8.refcount[p.id as usize],
+            KvPrecision::Int4 => self.pool_u4.refcount[p.id as usize],
         }
     }
 
@@ -881,7 +995,7 @@ impl KvArena {
         let state = self.seqs[h.idx()].take().expect("double free_seq");
         for t in &state.layers {
             for &p in &t.pages {
-                self.decref_at(state.prec, p);
+                self.decref_at(p.prec, p.id);
             }
         }
         self.free_seqs.push(h.idx());
@@ -891,17 +1005,16 @@ impl KvArena {
     /// (the window-reset idiom of the PPL evaluator and probes).
     pub fn reset_seq(&mut self, h: KvHandle) {
         let mut tables = Vec::new();
-        let prec = {
+        {
             let s = self.seqs[h.idx()].as_mut().expect("stale handle");
             for t in &mut s.layers {
                 tables.push(std::mem::take(&mut t.pages));
                 t.len = 0;
             }
-            s.prec
-        };
+        }
         for pages in tables {
             for p in pages {
-                self.decref_at(prec, p);
+                self.decref_at(p.prec, p.id);
             }
         }
     }
@@ -928,41 +1041,42 @@ impl KvArena {
             .layers.iter().map(|t| t.pages.len()).sum()
     }
 
-    /// Budget bytes this sequence's mapped pages occupy at its storage
-    /// precision (shared pages count once per mapping, like
-    /// [`Self::seq_pages`]).
+    /// Budget bytes this sequence's mapped pages occupy, each page at
+    /// its own storage precision (shared pages count once per mapping,
+    /// like [`Self::seq_pages`]).
     pub fn seq_bytes(&self, h: KvHandle) -> usize {
-        self.seq_pages(h) * self.page_bytes_at(self.seq_precision(h))
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers.iter()
+            .flat_map(|t| t.pages.iter())
+            .map(|p| self.page_bytes_at(p.prec))
+            .sum()
     }
 
     /// Read view of one sequence x layer for the attention kernels.
+    /// The view carries all three pools so a mixed-precision table
+    /// (f32 shared prefix + requantized tail) resolves every run at
+    /// the precision its own page stores.
     pub fn layer(&self, h: KvHandle, layer: usize) -> KvLayerView<'_> {
         let s = self.seqs[h.idx()].as_ref().expect("stale handle");
         let t = &s.layers[layer];
-        let store = match s.prec {
-            KvPrecision::F32 => ViewStore::F32 {
-                k: &self.pool_f32.k,
-                v: &self.pool_f32.v,
-            },
-            KvPrecision::Int8 => ViewStore::I8 {
-                k: &self.pool_i8.k,
-                v: &self.pool_i8.v,
-                ks: &self.pool_i8.k_scale,
-                vs: &self.pool_i8.v_scale,
-            },
-            KvPrecision::Int4 => ViewStore::U4 {
-                k: &self.pool_u4.k,
-                v: &self.pool_u4.v,
-                ks: &self.pool_u4.k_scale,
-                vs: &self.pool_u4.v_scale,
-            },
-        };
         KvLayerView {
             pages: &t.pages,
             len: t.len,
             head_dim: self.head_dim,
             n_kv_heads: self.n_kv_heads,
-            store,
+            append_prec: s.prec,
+            pools: PoolViews {
+                f32k: &self.pool_f32.k,
+                f32v: &self.pool_f32.v,
+                i8k: &self.pool_i8.k,
+                i8v: &self.pool_i8.v,
+                i8ks: &self.pool_i8.k_scale,
+                i8vs: &self.pool_i8.v_scale,
+                u4k: &self.pool_u4.k,
+                u4v: &self.pool_u4.v,
+                u4ks: &self.pool_u4.k_scale,
+                u4vs: &self.pool_u4.v_scale,
+            },
         }
     }
 
@@ -993,13 +1107,24 @@ impl KvArena {
         self.ensure_tail_pages(h, layer, pos0, t)?;
 
         // Touched page ids, copied out so the table borrow does not
-        // pin `self` while we write the page slabs.
+        // pin `self` while we write the page slabs.  ensure_tail_pages
+        // just put every touched page at the append precision (COW
+        // converts a mismatched partial tail), so raw ids suffice.
         let first = pos0 / KV_PAGE;
         let n_touched = Self::pages_for(pos0 + t) - first;
         let (pages, prec): (Vec<u32>, KvPrecision) = {
             let s = self.seqs[h.idx()].as_ref().expect("stale handle");
-            (s.layers[layer].pages[first..first + n_touched].to_vec(),
-             s.prec)
+            let prec = s.prec;
+            let ids = s.layers[layer].pages[first..first + n_touched]
+                .iter()
+                .map(|p| {
+                    debug_assert_eq!(p.prec, prec,
+                                     "append into a foreign-precision \
+                                      page (tail COW missed)");
+                    p.id
+                })
+                .collect();
+            (ids, prec)
         };
         match prec {
             KvPrecision::F32 => {
@@ -1059,10 +1184,13 @@ impl KvArena {
         }
     }
 
-    /// Make positions `[pos0, pos0 + t)` writable: COW a shared
-    /// partial tail page, then claim fresh pages to cover the range.
-    /// Byte availability is checked up front so a failure leaves the
-    /// table untouched (no half-grown state).
+    /// Make positions `[pos0, pos0 + t)` writable at the sequence's
+    /// append precision: COW a partial tail page that is shared *or*
+    /// sits at a different precision (a requantized sequence growing
+    /// past an f32 prefix converts the straddled page down), then
+    /// claim fresh pages to cover the range.  Byte availability is
+    /// checked up front so a failure leaves the table untouched (no
+    /// half-grown state).
     fn ensure_tail_pages(&mut self, h: KvHandle, layer: usize,
                          pos0: usize, t: usize) -> Result<(), OutOfPages> {
         let need_pages = Self::pages_for(pos0 + t);
@@ -1077,15 +1205,23 @@ impl KvArena {
             };
             (tbl.pages.len(), tail, s.prec)
         };
-        let refcounts = match prec {
-            KvPrecision::F32 => &self.pool_f32.refcount,
-            KvPrecision::Int8 => &self.pool_i8.refcount,
-            KvPrecision::Int4 => &self.pool_u4.refcount,
-        };
-        let cow = tail_page
-            .is_some_and(|p| refcounts[p as usize] > 1);
+        let shared = tail_page.is_some_and(|p| self.refcount_of(p) > 1);
+        let convert = tail_page.is_some_and(|p| p.prec != prec);
+        let cow = shared || convert;
         let fresh_needed = (need_pages - have) + cow as usize;
         let need_bytes = fresh_needed * self.page_bytes_at(prec);
+        #[cfg(feature = "failpoints")]
+        if fresh_needed > 0 {
+            let attempt = self.alloc_attempts;
+            self.alloc_attempts += 1;
+            if self.fail_plan.as_ref().is_some_and(|p| p.denies(attempt))
+            {
+                return Err(OutOfPages {
+                    needed_bytes: need_bytes,
+                    free_bytes: self.free_bytes(),
+                });
+            }
+        }
         if self.free_bytes() < need_bytes {
             return Err(OutOfPages {
                 needed_bytes: need_bytes,
@@ -1094,31 +1230,260 @@ impl KvArena {
         }
         if cow {
             let old = tail_page.unwrap();
-            let fresh = self.alloc_page_at(prec);
+            let fresh = PageRef { id: self.alloc_page_at(prec), prec };
             let rows = pos0 % KV_PAGE;
             let n_kv = self.n_kv_heads;
-            match prec {
-                KvPrecision::F32 => self.pool_f32
-                    .copy_page_prefix(old, fresh, rows, n_kv,
-                                      self.head_dim),
-                KvPrecision::Int8 => self.pool_i8
-                    .copy_page_prefix(old, fresh, rows, n_kv,
-                                      self.head_dim),
-                KvPrecision::Int4 => self.pool_u4
-                    .copy_page_prefix(old, fresh, rows, n_kv,
-                                      self.head_dim / 2),
+            if convert {
+                self.convert_page(old, fresh, rows);
+            } else {
+                match prec {
+                    KvPrecision::F32 => self.pool_f32
+                        .copy_page_prefix(old.id, fresh.id, rows, n_kv,
+                                          self.head_dim),
+                    KvPrecision::Int8 => self.pool_i8
+                        .copy_page_prefix(old.id, fresh.id, rows, n_kv,
+                                          self.head_dim),
+                    KvPrecision::Int4 => self.pool_u4
+                        .copy_page_prefix(old.id, fresh.id, rows, n_kv,
+                                          self.head_dim / 2),
+                }
             }
-            // shared: the other owners keep the old page's bytes
-            self.refcount_mut(prec)[old as usize] -= 1;
+            // shared: the other owners keep the old page's bytes;
+            // exclusively-owned (precision-convert case): the old page
+            // frees and its bytes return to the budget
+            self.decref_at(old.prec, old.id);
             self.seqs[h.idx()].as_mut().expect("stale handle")
                 .layers[layer].pages[pos0 / KV_PAGE] = fresh;
         }
         for _ in have..need_pages {
-            let p = self.alloc_page_at(prec);
+            let p = PageRef { id: self.alloc_page_at(prec), prec };
             self.seqs[h.idx()].as_mut().expect("stale handle")
                 .layers[layer].pages.push(p);
         }
         Ok(())
+    }
+
+    /// Online-requantize a resident sequence down the ladder: every
+    /// exclusively-owned page above `target`'s rank converts in place
+    /// (allocate a page in the target pool, dequantize the valid rows,
+    /// re-quantize with a fresh per-(head, side) absmax step, free the
+    /// old page), and future appends land at `target`.  Shared pages —
+    /// a prefix-cache entry or fork still reads them — are skipped:
+    /// their other owners expect the bytes they wrote.  Never fails:
+    /// if the transient double-hold (new page allocated before the old
+    /// one frees) doesn't fit the budget, the pass stops early and
+    /// reports what it did convert.
+    ///
+    /// The conversion is one extra quantization of already-stored
+    /// rows, so the requantized tail obeys the same absmax-step error
+    /// bound as pages written at `target` directly, plus the source
+    /// precision's (smaller) step — within the i8 ≤ 1e-2 / u4 ≤ 0.3
+    /// attention tolerances the oracle tests pin.
+    pub fn requant_seq_tail(&mut self, h: KvHandle,
+                            target: KvPrecision) -> RequantSummary {
+        assert!(target != KvPrecision::Int4 || self.head_dim % 2 == 0,
+                "int4 KV needs an even head_dim");
+        let mut out = RequantSummary::default();
+        {
+            let s = self.seqs[h.idx()].as_mut().expect("stale handle");
+            if target.rank() > s.prec.rank() {
+                s.prec = target;
+            }
+        }
+        for layer in 0..self.n_layers {
+            let (len, pages) = {
+                let s = self.seqs[h.idx()].as_ref().unwrap();
+                let t = &s.layers[layer];
+                (t.len, t.pages.clone())
+            };
+            for (pidx, &pref) in pages.iter().enumerate() {
+                if pref.prec.rank() >= target.rank()
+                    || self.refcount_of(pref) != 1
+                {
+                    continue;
+                }
+                if self.free_bytes() < self.page_bytes_at(target) {
+                    return out;
+                }
+                let rows = (len - pidx * KV_PAGE).min(KV_PAGE);
+                let dst = PageRef {
+                    id: self.alloc_page_at(target),
+                    prec: target,
+                };
+                self.convert_page(pref, dst, rows);
+                self.decref_at(pref.prec, pref.id);
+                self.seqs[h.idx()].as_mut().unwrap()
+                    .layers[layer].pages[pidx] = dst;
+                out.pages += 1;
+                out.bytes_freed += self.page_bytes_at(pref.prec)
+                    - self.page_bytes_at(target);
+            }
+        }
+        out
+    }
+
+    /// Roll a sequence back to `len` positions on every layer,
+    /// dropping (and decref'ing) pages past the new end.  This is the
+    /// scheduler's OutOfPages recovery primitive: a mid-operation
+    /// failure leaves layers at different lengths (appends land layer
+    /// by layer), so each table truncates independently back to the
+    /// pre-operation snapshot.  Rows already written into a kept
+    /// partial page are simply abandoned — scales only ever widen, so
+    /// stale rows past `len` are never read and never corrupt later
+    /// appends.
+    pub fn truncate_seq(&mut self, h: KvHandle, len: usize) {
+        let keep = Self::pages_for(len);
+        for layer in 0..self.n_layers {
+            let mut dropped = Vec::new();
+            {
+                let s = self.seqs[h.idx()].as_mut()
+                    .expect("stale handle");
+                let t = &mut s.layers[layer];
+                debug_assert!(t.len >= len,
+                              "truncate_seq cannot grow a layer");
+                while t.pages.len() > keep {
+                    dropped.push(t.pages.pop().unwrap());
+                }
+                t.len = len;
+            }
+            for p in dropped {
+                self.decref_at(p.prec, p.id);
+            }
+        }
+    }
+
+    /// Convert the first `rows` positions of page `src` into the
+    /// freshly allocated page `dst` (refcount 1, zeroed scales),
+    /// dequantizing each (head, side) run and re-quantizing it with a
+    /// fresh absmax step over exactly those rows.
+    fn convert_page(&mut self, src: PageRef, dst: PageRef, rows: usize) {
+        let hd = self.head_dim;
+        let n_kv = self.n_kv_heads;
+        let mut buf = std::mem::take(&mut self.rot);
+        if buf.len() < rows * hd {
+            buf.resize(rows * hd, 0.0);
+        }
+        for head in 0..n_kv {
+            for side_k in [true, false] {
+                self.read_page_head(src, head, side_k, rows, &mut buf);
+                self.write_page_head(dst, head, side_k, rows, &buf);
+            }
+        }
+        self.rot = buf;
+    }
+
+    /// Dequantize the first `rows` rows of one (page, head, side) into
+    /// `out[..rows * head_dim]`.
+    fn read_page_head(&self, p: PageRef, head: usize, side_k: bool,
+                      rows: usize, out: &mut [f32]) {
+        let hd = self.head_dim;
+        let n = rows * hd;
+        match p.prec {
+            KvPrecision::F32 => {
+                let pe = self.n_kv_heads * KV_PAGE * hd;
+                let lo = p.id as usize * pe + head * KV_PAGE * hd;
+                let side = if side_k {
+                    &self.pool_f32.k
+                } else {
+                    &self.pool_f32.v
+                };
+                out[..n].copy_from_slice(&side[lo..lo + n]);
+            }
+            KvPrecision::Int8 => {
+                let pe = self.n_kv_heads * KV_PAGE * hd;
+                let lo = p.id as usize * pe + head * KV_PAGE * hd;
+                let sidx = p.id as usize * self.n_kv_heads + head;
+                let (side, sc) = if side_k {
+                    (&self.pool_i8.k, self.pool_i8.k_scale[sidx])
+                } else {
+                    (&self.pool_i8.v, self.pool_i8.v_scale[sidx])
+                };
+                for (o, &c) in out[..n].iter_mut()
+                    .zip(&side[lo..lo + n])
+                {
+                    *o = c as f32 * sc;
+                }
+            }
+            KvPrecision::Int4 => {
+                let re = hd / 2;
+                let pe = self.n_kv_heads * KV_PAGE * re;
+                let lo = p.id as usize * pe + head * KV_PAGE * re;
+                let sidx = p.id as usize * self.n_kv_heads + head;
+                let (side, sc) = if side_k {
+                    (&self.pool_u4.k, self.pool_u4.k_scale[sidx])
+                } else {
+                    (&self.pool_u4.v, self.pool_u4.v_scale[sidx])
+                };
+                let data = &side[lo..lo + rows * re];
+                for (i, o) in out[..n].iter_mut().enumerate() {
+                    *o = u4_code(data, i) as f32 * sc;
+                }
+            }
+        }
+    }
+
+    /// Quantize `rows` dequantized rows into one (page, head, side) of
+    /// the freshly allocated `p`, with an absmax step over exactly
+    /// these rows (a new page has no widening history to respect).
+    fn write_page_head(&mut self, p: PageRef, head: usize, side_k: bool,
+                       rows: usize, src: &[f32]) {
+        let hd = self.head_dim;
+        let n_kv = self.n_kv_heads;
+        match p.prec {
+            KvPrecision::F32 => {
+                let pe = n_kv * KV_PAGE * hd;
+                let lo = p.id as usize * pe + head * KV_PAGE * hd;
+                let side = if side_k {
+                    &mut self.pool_f32.k
+                } else {
+                    &mut self.pool_f32.v
+                };
+                side[lo..lo + rows * hd]
+                    .copy_from_slice(&src[..rows * hd]);
+            }
+            KvPrecision::Int8 => {
+                write_quant_head(&mut self.pool_i8, n_kv, hd,
+                                 p.id as usize, head, side_k, rows, src);
+            }
+            KvPrecision::Int4 => {
+                write_quant_head(&mut self.pool_u4, n_kv, hd,
+                                 p.id as usize, head, side_k, rows, src);
+            }
+        }
+    }
+}
+
+/// Outcome of one [`KvArena::requant_seq_tail`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RequantSummary {
+    /// Pages converted into the target pool.
+    pub pages: usize,
+    /// Budget bytes the conversions returned (old size minus new).
+    pub bytes_freed: usize,
+}
+
+/// Fresh-page quantize body of [`KvArena::write_page_head`]: absmax
+/// over the rows, set the (page, head, side) scale, store the rows.
+#[allow(clippy::too_many_arguments)]
+fn write_quant_head<T: QuantStore>(pool: &mut PagePool<T>, n_kv: usize,
+                                   hd: usize, page: usize, head: usize,
+                                   side_k: bool, rows: usize,
+                                   src: &[f32]) {
+    let re = T::row_elems(hd);
+    let head_base = page * n_kv * KV_PAGE * re + head * KV_PAGE * re;
+    let sidx = page * n_kv + head;
+    let amax = src[..rows * hd].iter()
+        .fold(0f32, |m, &x| m.max(x.abs()));
+    let step = amax / T::QMAX;
+    let (data, scale) = if side_k {
+        (&mut pool.k, &mut pool.k_scale[sidx])
+    } else {
+        (&mut pool.v, &mut pool.v_scale[sidx])
+    };
+    *scale = step;
+    for i in 0..rows {
+        T::store_row(&mut data[head_base + i * re..][..re],
+                     &src[i * hd..(i + 1) * hd], step);
     }
 }
 
@@ -1180,42 +1545,45 @@ fn append_quant<T: QuantStore>(pool: &mut PagePool<T>, n_kv: usize,
 
 /// Read view of one sequence x layer of a [`KvArena`]: resolves page
 /// tables so the attention kernels see contiguous head-major runs, at
-/// whatever precision the sequence's pages store.
+/// whatever precision each backing page stores.  Because a run never
+/// straddles a page, mixed tables cost nothing in the kernels — each
+/// tile still sees exactly one precision and one scale.
 pub struct KvLayerView<'a> {
-    pages: &'a [u32],
+    pages: &'a [PageRef],
     len: usize,
     head_dim: usize,
     n_kv_heads: usize,
-    store: ViewStore<'a>,
+    append_prec: KvPrecision,
+    pools: PoolViews<'a>,
 }
 
-enum ViewStore<'a> {
-    F32 {
-        k: &'a [f32],
-        v: &'a [f32],
-    },
-    I8 {
-        k: &'a [i8],
-        v: &'a [i8],
-        ks: &'a [f32],
-        vs: &'a [f32],
-    },
-    U4 {
-        k: &'a [u8],
-        v: &'a [u8],
-        ks: &'a [f32],
-        vs: &'a [f32],
-    },
+/// Borrowed data + scale slabs of all three pools (scales empty for
+/// the f32 pool).
+struct PoolViews<'a> {
+    f32k: &'a [f32],
+    f32v: &'a [f32],
+    i8k: &'a [i8],
+    i8v: &'a [i8],
+    i8ks: &'a [f32],
+    i8vs: &'a [f32],
+    u4k: &'a [u8],
+    u4v: &'a [u8],
+    u4ks: &'a [f32],
+    u4vs: &'a [f32],
 }
 
 impl KvLayerView<'_> {
-    /// Storage precision of the viewed pages.
+    /// Precision the sequence's fresh appends land at (the tail pages'
+    /// precision; earlier pages may differ — see
+    /// [`Self::page_precision`]).
     pub fn precision(&self) -> KvPrecision {
-        match self.store {
-            ViewStore::F32 { .. } => KvPrecision::F32,
-            ViewStore::I8 { .. } => KvPrecision::Int8,
-            ViewStore::U4 { .. } => KvPrecision::Int4,
-        }
+        self.append_prec
+    }
+
+    /// Storage precision of the page holding position `pos`.
+    pub fn page_precision(&self, pos: usize) -> KvPrecision {
+        debug_assert!(pos < self.len);
+        self.pages[pos / KV_PAGE].prec
     }
 
     #[inline]
@@ -1224,32 +1592,42 @@ impl KvLayerView<'_> {
         debug_assert!(p0 < p1 && p1 <= self.len);
         debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
                          "KV run straddles a page");
-        let page = self.pages[p0 / KV_PAGE] as usize;
+        let pref = self.pages[p0 / KV_PAGE];
+        let page = pref.id as usize;
         let off = p0 % KV_PAGE;
         let n = p1 - p0;
         let hd = self.head_dim;
         let sidx = page * self.n_kv_heads + h;
-        match &self.store {
-            ViewStore::F32 { k, v } => {
+        let p = &self.pools;
+        match pref.prec {
+            KvPrecision::F32 => {
                 let pe = self.n_kv_heads * KV_PAGE * hd;
                 let lo = page * pe + (h * KV_PAGE + off) * hd;
-                let side = if side_k { k } else { v };
+                let side = if side_k { p.f32k } else { p.f32v };
                 KvRun::F32(&side[lo..lo + n * hd])
             }
-            ViewStore::I8 { k, v, ks, vs } => {
+            KvPrecision::Int8 => {
                 let pe = self.n_kv_heads * KV_PAGE * hd;
                 let lo = page * pe + (h * KV_PAGE + off) * hd;
-                let (side, sc) = if side_k { (k, ks) } else { (v, vs) };
+                let (side, sc) = if side_k {
+                    (p.i8k, p.i8ks)
+                } else {
+                    (p.i8v, p.i8vs)
+                };
                 KvRun::I8 {
                     data: &side[lo..lo + n * hd],
                     scale: sc[sidx],
                 }
             }
-            ViewStore::U4 { k, v, ks, vs } => {
+            KvPrecision::Int4 => {
                 let re = hd / 2;
                 let pe = self.n_kv_heads * KV_PAGE * re;
                 let lo = page * pe + (h * KV_PAGE + off) * re;
-                let (side, sc) = if side_k { (k, ks) } else { (v, vs) };
+                let (side, sc) = if side_k {
+                    (p.u4k, p.u4ks)
+                } else {
+                    (p.u4v, p.u4vs)
+                };
                 KvRun::U4 {
                     data: &side[lo..lo + n * re],
                     scale: sc[sidx],
@@ -1289,8 +1667,8 @@ mod tests {
         assert_eq!(c.v_head_at(0, 1), &[7.0, 8.0]);
         assert_eq!(c.k_head(0), &[1.0, 2.0, 5.0, 6.0]);
         assert_eq!(c.len, 2);
-        assert_eq!(c.k_run(0, 0, 2).as_f32(), &[1.0, 2.0, 5.0, 6.0]);
-        assert_eq!(c.v_run(0, 1, 2).as_f32(), &[7.0, 8.0]);
+        assert_eq!(c.k_run(0, 0, 2).as_f32().unwrap(), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(c.v_run(0, 1, 2).as_f32().unwrap(), &[7.0, 8.0]);
         c.reset();
         assert_eq!(c.len, 0);
     }
@@ -1478,8 +1856,8 @@ mod tests {
         assert_eq!(a.seq_len(f), t0);
         assert_eq!(a.resident_pages(), 2, "fork copies no pages");
         // both views read the same bytes
-        let want = a.layer(h, 0).k_run(0, 0, KV_PAGE).as_f32().to_vec();
-        assert_eq!(a.layer(f, 0).k_run(0, 0, KV_PAGE).as_f32(),
+        let want = a.layer(h, 0).k_run(0, 0, KV_PAGE).as_f32().unwrap().to_vec();
+        assert_eq!(a.layer(f, 0).k_run(0, 0, KV_PAGE).as_f32().unwrap(),
                    &want[..]);
 
         // appending to the fork COWs only the partial page
@@ -1487,9 +1865,9 @@ mod tests {
         assert_eq!(a.resident_pages(), 3, "COW copies one page");
         // source rows are untouched, fork kept the shared prefix
         let src_tail = a.layer(h, 0)
-            .k_run(0, KV_PAGE, t0).as_f32().to_vec();
+            .k_run(0, KV_PAGE, t0).as_f32().unwrap().to_vec();
         let fork_tail = a.layer(f, 0)
-            .k_run(0, KV_PAGE, t0).as_f32().to_vec();
+            .k_run(0, KV_PAGE, t0).as_f32().unwrap().to_vec();
         assert_eq!(src_tail, fork_tail,
                    "COW must preserve the shared rows");
         assert_eq!(a.seq_len(f), t0 + 1);
@@ -1514,8 +1892,8 @@ mod tests {
         // a reference to the partial page)
         fill(&mut a, &rope, h, 1, 5.0).unwrap();
         assert_eq!(a.resident_pages(), 2);
-        let hv = a.layer(h, 0).k_run(0, 0, 10).as_f32().to_vec();
-        let fv = a.layer(f, 0).k_run(0, 0, 10).as_f32().to_vec();
+        let hv = a.layer(h, 0).k_run(0, 0, 10).as_f32().unwrap().to_vec();
+        let fv = a.layer(f, 0).k_run(0, 0, 10).as_f32().unwrap().to_vec();
         assert_eq!(hv, fv, "shared prefix must survive source COW");
         assert_eq!(a.seq_len(f), 10);
     }
@@ -1560,11 +1938,11 @@ mod tests {
             let mut p = 0usize;
             while p < t {
                 let end = (p + KV_PAGE).min(t);
-                assert_eq!(view.k_run(head, p, end).as_f32(),
-                           slab.k_run(head, p, end).as_f32(),
+                assert_eq!(view.k_run(head, p, end).as_f32().unwrap(),
+                           slab.k_run(head, p, end).as_f32().unwrap(),
                            "K head {head} run [{p}, {end})");
-                assert_eq!(view.v_run(head, p, end).as_f32(),
-                           slab.v_run(head, p, end).as_f32(),
+                assert_eq!(view.v_run(head, p, end).as_f32().unwrap(),
+                           slab.v_run(head, p, end).as_f32().unwrap(),
                            "V head {head} run [{p}, {end})");
                 p = end;
             }
@@ -1600,7 +1978,7 @@ mod tests {
                 let end = (p + KV_PAGE).min(t);
                 let run = view.k_run(head, p, end);
                 let deq = run.dequant(hd);
-                let exact = slab.k_run(head, p, end).as_f32();
+                let exact = slab.k_run(head, p, end).as_f32().unwrap();
                 // 1.5 steps: the SCALE_GROW hysteresis bounds the
                 // geometric re-code error series at 1.5 * step_final
                 let tol = 1.5 * run.scale();
@@ -1657,13 +2035,165 @@ mod tests {
             + a.page_bytes_at(KvPrecision::Int8)
             + a.page_bytes_at(KvPrecision::Int4);
         assert_eq!(a.resident_bytes(), want_bytes);
-        let f32_rows = a.layer(hf, 0).k_run(0, 0, 3).as_f32().to_vec();
+        let f32_rows = a.layer(hf, 0).k_run(0, 0, 3).as_f32().unwrap().to_vec();
         a.free_seq(h8);
         assert_eq!(a.resident_pages_at(KvPrecision::Int8), 0);
-        assert_eq!(a.layer(hf, 0).k_run(0, 0, 3).as_f32(),
+        assert_eq!(a.layer(hf, 0).k_run(0, 0, 3).as_f32().unwrap(),
                    &f32_rows[..],
                    "freeing the i8 pool must not disturb f32 pages");
         assert_eq!(a.resident_bytes(),
                    want_bytes - a.page_bytes_at(KvPrecision::Int8));
+    }
+
+    // -- online requantization / pressure primitives (PR 6) ----------------
+
+    #[test]
+    fn requant_tail_frees_bytes_and_preserves_rows() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        let t = 2 * KV_PAGE + 8;
+        fill(&mut a, &rope, h, t, 1.0).unwrap();
+        let before: Vec<f32> =
+            a.layer(h, 0).k_run(0, 2 * KV_PAGE, t).dequant(2);
+        let used0 = a.resident_bytes();
+
+        let r = a.requant_seq_tail(h, KvPrecision::Int8);
+        assert_eq!(r.pages, 3, "all exclusive pages convert");
+        assert_eq!(r.bytes_freed,
+                   3 * (a.page_bytes()
+                        - a.page_bytes_at(KvPrecision::Int8)));
+        assert_eq!(a.resident_bytes(), used0 - r.bytes_freed);
+        assert_eq!(a.resident_pages_at(KvPrecision::F32), 0);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int8), 3);
+        assert_eq!(a.seq_precision(h), KvPrecision::Int8);
+        assert_eq!(a.seq_len(h), t, "requant must not change length");
+        assert_eq!(a.seq_bytes(h),
+                   3 * a.page_bytes_at(KvPrecision::Int8));
+
+        // converted rows stay within one fresh absmax step of the
+        // exact rows they quantized from
+        let view = a.layer(h, 0);
+        assert_eq!(view.page_precision(0), KvPrecision::Int8);
+        let run = view.k_run(0, 2 * KV_PAGE, t);
+        let deq = run.dequant(2);
+        let tol = run.scale();
+        for (i, (got, want)) in deq.iter().zip(&before).enumerate() {
+            assert!((got - want).abs() <= tol,
+                    "elem {i}: {got} vs {want} (tol {tol})");
+        }
+    }
+
+    #[test]
+    fn requant_skips_shared_pages_and_converts_on_cow() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let src = a.alloc_seq();
+        let t0 = KV_PAGE + KV_PAGE / 2;
+        fill(&mut a, &rope, src, t0, 1.0).unwrap();
+        let fork = a.fork_prefix(src, t0);
+        let fork_rows = a.layer(fork, 0)
+            .k_run(0, KV_PAGE, t0).as_f32().unwrap().to_vec();
+
+        // every page is shared -> nothing converts, but the append
+        // precision still degrades
+        let r = a.requant_seq_tail(src, KvPrecision::Int8);
+        assert_eq!(r, RequantSummary::default(),
+                   "shared pages must not convert under their owners");
+        assert_eq!(a.seq_precision(src), KvPrecision::Int8);
+        assert_eq!(a.layer(src, 0).page_precision(0), KvPrecision::F32);
+
+        // the next append COWs the partial tail page *into the i8
+        // pool* while the fork keeps reading its f32 bytes
+        fill(&mut a, &rope, src, 1, 2.0).unwrap();
+        let sv = a.layer(src, 0);
+        assert_eq!(sv.page_precision(0), KvPrecision::F32,
+                   "full shared page stays at its written precision");
+        assert_eq!(sv.page_precision(KV_PAGE), KvPrecision::Int8,
+                   "COW'd tail lands in the target pool");
+        assert_eq!(a.layer(fork, 0)
+                       .k_run(0, KV_PAGE, t0).as_f32().unwrap(),
+                   &fork_rows[..],
+                   "fork's f32 bytes survive the source's convert-COW");
+        // mixed table reads dispatch per page
+        assert!(matches!(sv.k_run(0, 0, KV_PAGE), KvRun::F32(_)));
+        assert!(matches!(sv.k_run(0, KV_PAGE, t0 + 1),
+                         KvRun::I8 { .. }));
+    }
+
+    #[test]
+    fn requant_stops_when_double_hold_does_not_fit() {
+        // budget exactly fits the resident f32 page: the transient
+        // new-page-before-old-frees hold cannot be satisfied, so the
+        // pass is a clean no-op instead of a panic or partial state
+        let mut a = small_arena(1);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 4, 1.0).unwrap();
+        assert_eq!(a.free_bytes(), 0);
+        let r = a.requant_seq_tail(h, KvPrecision::Int8);
+        assert_eq!(r, RequantSummary::default());
+        assert_eq!(a.layer(h, 0).page_precision(0), KvPrecision::F32);
+    }
+
+    #[test]
+    fn truncate_seq_rolls_back_pages() {
+        let mut a = small_arena(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 2 * KV_PAGE + 5, 1.0).unwrap();
+        assert_eq!(a.resident_pages(), 3);
+        a.truncate_seq(h, KV_PAGE + 3);
+        assert_eq!(a.seq_len(h), KV_PAGE + 3);
+        assert_eq!(a.resident_pages(), 2, "dropped page returns");
+        // the kept partial page accepts fresh appends
+        fill(&mut a, &rope, h, 2, 2.0).unwrap();
+        assert_eq!(a.seq_len(h), KV_PAGE + 5);
+        a.truncate_seq(h, 0);
+        assert_eq!(a.seq_len(h), 0);
+        assert_eq!(a.resident_pages(), 0);
+        fill(&mut a, &rope, h, 3, 3.0).unwrap();
+        assert_eq!(a.seq_len(h), 3);
+    }
+
+    #[test]
+    fn requant_then_append_grows_at_target() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, KV_PAGE + 8, 1.0).unwrap();
+        let r = a.requant_seq_tail(h, KvPrecision::Int4);
+        assert_eq!(r.pages, 2);
+        fill(&mut a, &rope, h, KV_PAGE, 2.0).unwrap();
+        assert_eq!(a.seq_len(h), 2 * KV_PAGE + 8);
+        assert_eq!(a.resident_pages_at(KvPrecision::F32), 0);
+        assert_eq!(a.resident_pages_at(KvPrecision::Int4), 3);
+        // V rows are constant val + 0.5; spot-check both eras
+        let view = a.layer(h, 0);
+        let run = view.v_run(0, KV_PAGE + 8, KV_PAGE + 12);
+        for &x in &run.dequant(2) {
+            assert!((x - 2.5).abs() <= run.scale());
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn failpoint_denies_scheduled_attempt_then_recovers() {
+        let mut a = small_arena(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        a.set_fail_plan(Some(FailPlan::deny_at(&[1])));
+        fill(&mut a, &rope, h, KV_PAGE, 1.0).unwrap(); // attempt 0
+        let len0 = a.seq_len(h);
+        let err = fill(&mut a, &rope, h, 1, 2.0).unwrap_err(); // 1: denied
+        assert!(err.free_bytes >= err.needed_bytes,
+                "synthetic fault reports real free bytes, \
+                 distinguishing it from a genuine shortage");
+        assert_eq!(a.seq_len(h), len0, "denied append must not grow");
+        // the attempt index was consumed: the retry succeeds
+        fill(&mut a, &rope, h, 1, 2.0).unwrap(); // attempt 2
+        assert_eq!(a.seq_len(h), len0 + 1);
+        assert_eq!(a.alloc_attempts(), 3);
+        a.set_fail_plan(None);
     }
 }

@@ -432,15 +432,15 @@ impl Model {
             let xn = &scratch.xn[..d];
             let run =
                 |name: &str, x: &[f32], out: &mut [f32],
-                 eng: &mut Scratch| {
-                    self.layers[li].linear(name)
-                        .forward_token(x, precision, eng, out)
+                 eng: &mut Scratch| -> Result<usize> {
+                    Ok(self.layers[li].linear(name)?
+                        .forward_token(x, precision, eng, out))
                 };
-            let b = run("wq", xn, &mut scratch.q, &mut scratch.engine);
+            let b = run("wq", xn, &mut scratch.q, &mut scratch.engine)?;
             stats.record(li, 0, b, c.slice_bits);
-            let b = run("wk", xn, &mut scratch.k, &mut scratch.engine);
+            let b = run("wk", xn, &mut scratch.k, &mut scratch.engine)?;
             stats.record(li, 1, b, c.slice_bits);
-            let b = run("wv", xn, &mut scratch.v, &mut scratch.engine);
+            let b = run("wv", xn, &mut scratch.v, &mut scratch.engine)?;
             stats.record(li, 2, b, c.slice_bits);
 
             scratch.rope.apply(&mut scratch.q, pos);
@@ -451,7 +451,7 @@ impl Model {
                             &mut scratch.attn, pool, &mut scratch.ctx);
             scratch.stage[..d].copy_from_slice(&scratch.ctx);
             let b = run("wo", &scratch.stage[..d], &mut scratch.attn_out,
-                        &mut scratch.engine);
+                        &mut scratch.engine)?;
             stats.record(li, 3, b, c.slice_bits);
             for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
                 *xi += ai;
@@ -462,10 +462,10 @@ impl Model {
                     &mut scratch.xn[..d]);
             scratch.stage[..d].copy_from_slice(&scratch.xn[..d]);
             let b = run("w_gate", &scratch.stage[..d], &mut scratch.gate,
-                        &mut scratch.engine);
+                        &mut scratch.engine)?;
             stats.record(li, 4, b, c.slice_bits);
             let b = run("w_up", &scratch.stage[..d], &mut scratch.up,
-                        &mut scratch.engine);
+                        &mut scratch.engine)?;
             stats.record(li, 5, b, c.slice_bits);
             for (f, (g, u)) in scratch.ff.iter_mut()
                 .zip(scratch.gate.iter().zip(&scratch.up)) {
@@ -474,7 +474,7 @@ impl Model {
             let ff = c.d_ff;
             scratch.stage[..ff].copy_from_slice(&scratch.ff);
             let b = run("w_down", &scratch.stage[..ff],
-                        &mut scratch.mlp_out, &mut scratch.engine);
+                        &mut scratch.mlp_out, &mut scratch.engine)?;
             stats.record(li, 6, b, c.slice_bits);
             for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp_out) {
                 *xi += mi;
@@ -831,6 +831,27 @@ impl Model {
             toks.push(argmax(&scratch.logits) as u32);
         }
         Ok(toks)
+    }
+
+    /// Resume-from-preemption entry: rebuild a parked sequence's KV
+    /// state into `seq` (a fresh handle) by re-prefilling `tokens` —
+    /// the prompt *plus every token generated before preemption* —
+    /// and return the next greedy token.  Decoding is greedy and KV
+    /// content is a pure function of the token prefix, so the token
+    /// returned is exactly the one the preempted decode would have
+    /// produced; the scheduler's resume admission uses the same
+    /// property chunk-by-chunk, this is the one-shot form for tests
+    /// and embedders driving the model directly.
+    pub fn resume(&self, tokens: &[u32], arena: &mut KvArena,
+                  seq: KvHandle, precision: Precision,
+                  scratch: &mut DecodeScratch,
+                  stats: &mut DecodeStats) -> Result<u32> {
+        anyhow::ensure!(!tokens.is_empty(),
+                        "resume needs at least one token");
+        anyhow::ensure!(arena.seq_len(seq) == 0,
+                        "resume target must be a fresh sequence");
+        self.prefill(tokens, arena, seq, precision, scratch, stats)?;
+        Ok(argmax(&scratch.logits) as u32)
     }
 }
 

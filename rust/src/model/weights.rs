@@ -1,6 +1,6 @@
 //! Model configuration + weight loading from a `.mobiq` bundle.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{MobiqLinear, Precision, Scratch};
@@ -61,16 +61,19 @@ impl ModelConfig {
         })
     }
 
-    pub fn linear_dims(&self, name: &str) -> (usize, usize) {
+    /// (d_in, d_out) of a named linear; a name outside
+    /// [`LINEAR_NAMES`] is a malformed-bundle error, not a panic — the
+    /// server degrades the request instead of aborting.
+    pub fn linear_dims(&self, name: &str) -> Result<(usize, usize)> {
         let d = self.d_model;
         let dkv = self.kv_dim();
-        match name {
+        Ok(match name {
             "wq" | "wo" => (d, d),
             "wk" | "wv" => (d, dkv),
             "w_gate" | "w_up" => (d, self.d_ff),
             "w_down" => (self.d_ff, d),
-            _ => panic!("unknown linear {name}"),
-        }
+            _ => bail!("unknown linear {name}"),
+        })
     }
 }
 
@@ -170,8 +173,10 @@ pub struct LayerWeights {
 }
 
 impl LayerWeights {
-    pub fn linear(&self, name: &str) -> &LinearBackend {
-        match name {
+    /// Look up a linear by bundle name; an unknown name degrades into
+    /// an error the serving loop can reject instead of aborting on.
+    pub fn linear(&self, name: &str) -> Result<&LinearBackend> {
+        Ok(match name {
             "wq" => &self.wq,
             "wk" => &self.wk,
             "wv" => &self.wv,
@@ -179,8 +184,8 @@ impl LayerWeights {
             "w_gate" => &self.w_gate,
             "w_up" => &self.w_up,
             "w_down" => &self.w_down,
-            _ => panic!("unknown linear {name}"),
-        }
+            _ => bail!("unknown linear {name}"),
+        })
     }
 }
 

@@ -386,10 +386,10 @@ fn quantized_roundtrip_error_bound_at_page_seams() {
                     for side_k in [true, false] {
                         let (run, exact) = if side_k {
                             (view.k_run(head, p, end),
-                             slab.k_run(head, p, end).as_f32())
+                             slab.k_run(head, p, end).as_f32().unwrap())
                         } else {
                             (view.v_run(head, p, end),
-                             slab.v_run(head, p, end).as_f32())
+                             slab.v_run(head, p, end).as_f32().unwrap())
                         };
                         let deq = run.dequant(cfg.head_dim());
                         let tol = 1.5 * run.scale();
