@@ -1,0 +1,147 @@
+//! §Perf §Speculative — self-speculative decoding study
+//! (EXPERIMENTS.md §Speculative).  All on the synthetic model, no
+//! `make artifacts` needed.
+//!
+//! 1. **Acceptance controls (exact):** drafting at the verify
+//!    precision makes the draft chain the greedy oracle chain, so
+//!    every round must fully accept — accept rate exactly 1.0 and
+//!    tokens per verify step exactly k+1 (the "> 1" acceptance bar),
+//!    asserted at run time so regenerated rows can never silently
+//!    regress.  Output parity with `generate_at` is asserted too.
+//! 2. **Feedback trajectory (exact):** the adaptation rule
+//!    ([`SpecState::observe`]) is pure arithmetic; scripted outcomes
+//!    pin the k / draft-bits / EMA walk.
+//! 3. **Wall clock** on the synthetic model (the 2-layer toy is too
+//!    small for the draft to win on wall time — the projection rows
+//!    model real shapes) plus the analytic expectation
+//!    `E[tokens/verify] = (1 - a^(k+1)) / (1 - a)` for per-token
+//!    draft accept probability `a` and draft/verify cost ratio `r`.
+//!
+//! Writes `target/bench_reports/BENCH_spec.json`.
+
+use std::time::Instant;
+
+use mobiquant::bench_support::synth_model_shaped;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::{DecodeStats, KvPrecision, SpecConfig, SpecState};
+use mobiquant::util::bench::{black_box, Suite};
+
+fn main() {
+    let mut suite = Suite::new("BENCH_spec");
+    suite.header();
+    let model = synth_model_shaped(71, 4, 2, 256);
+    let n_layers = model.cfg.n_layers;
+    let prec = Precision::elastic(4.0);
+    let prompt: Vec<u32> =
+        (0..32).map(|i| ((i * 5 + 3) % 256) as u32).collect();
+    // n_new - 1 = 60 divides by k+1 for k in {1, 2, 4}: every verify
+    // round runs the full window, so tokens_per_verify is exactly k+1
+    let n_new = 61usize;
+
+    // ---------------- exact acceptance controls -----------------------
+    for &kvp in &[KvPrecision::F32, KvPrecision::Int8] {
+        for &k in &[1usize, 2, 4] {
+            let cfg = SpecConfig {
+                k_min: k,
+                k_max: k,
+                draft_bits_min: 4.0,
+                draft_bits_max: 4.0,
+                max_delta: 0.0,
+                ..SpecConfig::default()
+            };
+            let mut st = SpecState::new(&cfg, n_layers);
+            let mut stats = DecodeStats::new(n_layers);
+            let t0 = Instant::now();
+            let spec = model
+                .generate_speculative(&prompt, n_new, prec, kvp, &cfg,
+                                      &mut stats, &mut st)
+                .unwrap();
+            let spec_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            let mut ostats = DecodeStats::new(n_layers);
+            let t0 = Instant::now();
+            let oracle = model
+                .generate_at(&prompt, n_new, prec, kvp, &mut ostats)
+                .unwrap();
+            let plain_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            assert_eq!(spec, oracle, "speculative parity broke");
+            assert_eq!(st.accept_rate(), 1.0,
+                       "self-draft at the verify precision must \
+                        fully accept");
+            assert_eq!(st.commit_tokens, (n_new - 1) as u64);
+            assert_eq!(st.rounds as usize * (k + 1), n_new - 1,
+                       "every round must run the full window");
+            black_box(&spec);
+            suite.row(&format!("spec control {} k {k} exact",
+                               kvp.label()),
+                      &[
+                ("accept_rate", st.accept_rate()),
+                ("tokens_per_verify", st.tokens_per_round()),
+                ("rounds", st.rounds as f64),
+            ]);
+            suite.row(&format!("spec control {} k {k} wall",
+                               kvp.label()),
+                      &[
+                ("spec_ms", spec_ms),
+                ("plain_ms", plain_ms),
+                ("wall_ratio", plain_ms / spec_ms.max(1e-9)),
+            ]);
+        }
+    }
+
+    // ---------------- exact feedback trajectory -----------------------
+    // Scripted outcomes through the real adaptation rule: 8 rounds of
+    // full acceptance walk the window to k_max at the cheapest draft
+    // bits; 6 rounds of total rejection walk it back down and give the
+    // draft its bits back.
+    let cfg = SpecConfig::default();
+    let mut st = SpecState::new(&cfg, n_layers);
+    for _ in 0..8 {
+        let k = st.k;
+        st.observe(&cfg, k, k, k + 1);
+    }
+    assert_eq!(st.k, cfg.k_max);
+    assert_eq!(st.draft_bits, cfg.draft_bits_min);
+    suite.row("spec feedback 8 full-accept rounds", &[
+        ("k", st.k as f64),
+        ("draft_bits", st.draft_bits),
+        ("ema", st.ema),
+    ]);
+    for _ in 0..6 {
+        let k = st.k;
+        st.observe(&cfg, k, 0, 1);
+    }
+    assert_eq!(st.k, cfg.k_min);
+    assert_eq!(st.draft_bits, cfg.draft_bits_max);
+    suite.row("spec feedback +6 full-reject rounds", &[
+        ("k", st.k as f64),
+        ("draft_bits", st.draft_bits),
+        ("ema", st.ema),
+    ]);
+
+    // ---------------- analytic projection -----------------------------
+    suite.note(
+        "projection model: E[tokens/verify] = (1 - a^(k+1)) / (1 - a) \
+         for per-token draft accept probability a; round cost = r*k + v \
+         full-decode-step equivalents, r = draft/verify cost ratio \
+         (~bits ratio: 0.5 = 2b draft under 4b verify, 0.25 = 2b under \
+         8b), v = 1.3 (batched k+1-token verify amortizes weight \
+         streaming but pays attention for every position). \
+         projected_speedup = E / (r*k + v).");
+    for &r in &[0.5f64, 0.25] {
+        for &a in &[0.5f64, 0.7, 0.9] {
+            for &k in &[2usize, 4] {
+                let e = (1.0 - a.powi(k as i32 + 1)) / (1.0 - a);
+                let cost = r * k as f64 + 1.3;
+                suite.row(
+                    &format!("spec projection r {r} a {a} k {k}"),
+                    &[
+                        ("e_tokens_per_verify", e),
+                        ("round_cost_full_steps", cost),
+                        ("projected_speedup", e / cost),
+                    ],
+                );
+            }
+        }
+    }
+    suite.finish();
+}

@@ -17,6 +17,7 @@
 use std::collections::VecDeque;
 
 use super::request::{PreemptedSeq, Request, RequestId};
+use crate::model::SpecConfig;
 
 pub struct Batcher {
     queue: VecDeque<Request>,
@@ -40,6 +41,12 @@ pub struct Batcher {
     /// behaviour); `Some(p)` lets the deployment commit less memory
     /// than the worst case and queue requests when bytes run short.
     pub kv_page_budget: Option<usize>,
+    /// Self-speculative decode policy for the coalesced decode tick:
+    /// `Some` makes every decode group draft with a low-bit slice mask
+    /// and verify in one batched full-precision step (greedy outputs
+    /// stay bit-identical; see `model::speculative`).  `None` keeps the
+    /// plain one-token-per-tick decode.
+    pub spec: Option<SpecConfig>,
     admitted: u64,
     rejected: u64,
     deferred: u64,
@@ -60,6 +67,7 @@ impl Batcher {
             prefill_chunk: 16,
             max_decode_batch: 32,
             kv_page_budget: None,
+            spec: None,
             admitted: 0,
             rejected: 0,
             deferred: 0,
@@ -77,6 +85,13 @@ impl Batcher {
     /// Commit an explicit KV page budget (see `kv_page_budget`).
     pub fn with_kv_budget(mut self, pages: usize) -> Batcher {
         self.kv_page_budget = Some(pages.max(1));
+        self
+    }
+
+    /// Enable self-speculative decoding for the coalesced decode tick
+    /// (see `spec`).
+    pub fn with_speculative(mut self, cfg: SpecConfig) -> Batcher {
+        self.spec = Some(cfg);
         self
     }
 

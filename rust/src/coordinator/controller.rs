@@ -80,6 +80,17 @@ impl ElasticController {
     pub fn switches(&self) -> u64 {
         self.switches
     }
+
+    /// Ceiling for the *draft* pass's elastic bits under the current
+    /// system pressure: half the serving precision, floored at 2 bits
+    /// (the MSB plane is not divisible).  Speculation only pays when
+    /// the draft is meaningfully cheaper than the verify pass, so as
+    /// the controller degrades the serving bits toward the draft's
+    /// band, the draft budget shrinks with it instead of converging on
+    /// a draft that costs as much as the model it is drafting for.
+    pub fn draft_bits_ceiling(&self) -> f64 {
+        (0.5 * self.current_bits).max(2.0)
+    }
 }
 
 #[cfg(test)]

@@ -67,6 +67,27 @@ pub struct Metrics {
     /// Mid-tick `OutOfPages` faults the degradation ladder absorbed
     /// (none of these escaped `Scheduler::run`).
     pub oom_recoveries: u64,
+    // -- self-speculative decoding (draft/verify accounting) ---------
+    /// Draft→verify→commit rounds executed (one per member per
+    /// speculative group tick).
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub spec_drafted: u64,
+    /// Draft tokens accepted by the full-precision verify pass.
+    pub spec_accepted: u64,
+    /// Draft tokens the verify pass rejected (rolled back exactly).
+    pub spec_rejected: u64,
+    /// Tokens committed by verify rounds (accepted prefixes plus their
+    /// correction/bonus tokens); divided by `spec_rounds` this is the
+    /// headline tokens-per-verify-step.
+    pub spec_commit_tokens: u64,
+    /// Accept-rate EMA of the most recently observed round (the value
+    /// driving that sequence's draft depth and bits).
+    pub spec_accept_ema: f64,
+    /// Histogram over effective bits per *draft-pass* linear call
+    /// (same binning as `DecodeStats::bits_hist`: bin k = k routed
+    /// slices active), merged when sequences retire or park.
+    pub spec_draft_bits_hist: Vec<u64>,
 }
 
 impl Metrics {
@@ -108,6 +129,59 @@ impl Metrics {
         }
     }
 
+    /// Fold one speculative round's outcome into the counters.
+    pub fn record_spec_round(&mut self, drafted: usize, matched: usize,
+                             committed: usize, ema: f64) {
+        self.spec_rounds += 1;
+        self.spec_drafted += drafted as u64;
+        self.spec_accepted += matched as u64;
+        self.spec_rejected += (drafted - matched) as u64;
+        self.spec_commit_tokens += committed as u64;
+        self.spec_accept_ema = ema;
+    }
+
+    /// Merge a retiring (or parking) sequence's draft-pass bit
+    /// histogram into the run-wide draft-bit histogram.
+    pub fn record_spec_hist(&mut self, hist: &[u64]) {
+        if self.spec_draft_bits_hist.len() < hist.len() {
+            self.spec_draft_bits_hist.resize(hist.len(), 0);
+        }
+        for (acc, &h) in self.spec_draft_bits_hist.iter_mut().zip(hist) {
+            *acc += h;
+        }
+    }
+
+    /// Lifetime fraction of drafted tokens the verify pass accepted.
+    pub fn spec_accept_rate(&self) -> f64 {
+        stats::rate(self.spec_accepted, self.spec_drafted)
+    }
+
+    /// Mean accepted-prefix length per round (accepted drafts only —
+    /// the free correction/bonus token is not counted here).
+    pub fn spec_mean_prefix(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_rounds as f64
+    }
+
+    /// Tokens committed per verify step; > 1 means speculation pays.
+    pub fn spec_tokens_per_round(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            return 0.0;
+        }
+        self.spec_commit_tokens as f64 / self.spec_rounds as f64
+    }
+
+    /// Draft-bit histogram with trailing empty bins dropped (display).
+    pub fn spec_hist_trimmed(&self) -> Vec<u64> {
+        let mut h = self.spec_draft_bits_hist.clone();
+        while h.last() == Some(&0) {
+            h.pop();
+        }
+        h
+    }
+
     /// Fraction of admissions that reused a shared prompt prefix.
     pub fn prefix_hit_rate(&self) -> f64 {
         stats::rate(self.prefix_hits, self.prefix_hits
@@ -145,7 +219,11 @@ impl Metrics {
              kv_pages_f32/i8/u4={}/{}/{} kv_saved_vs_f32={}B \
              prefix_hit_rate={:.2} prefix_tokens_reused={} deferred={} \
              pressure_ticks={:?} degraded={} requant={}ev/{}pg/{}B \
-             preempt={}/{} oom_recovered={}",
+             preempt={}/{} oom_recovered={} \
+             spec_rounds={} spec_drafted={} spec_accepted={} \
+             spec_rejected={} spec_accept_ema={:.2} \
+             spec_mean_prefix={:.2} spec_tok_per_verify={:.2} \
+             spec_draft_bits_hist={:?}",
             self.requests_completed,
             self.tokens_generated,
             self.throughput_tokens_per_s(wall_s),
@@ -172,6 +250,14 @@ impl Metrics {
             self.preemptions,
             self.resumes,
             self.oom_recoveries,
+            self.spec_rounds,
+            self.spec_drafted,
+            self.spec_accepted,
+            self.spec_rejected,
+            self.spec_accept_ema,
+            self.spec_mean_prefix(),
+            self.spec_tokens_per_round(),
+            self.spec_hist_trimmed(),
         )
     }
 }
@@ -193,5 +279,30 @@ mod tests {
         assert_eq!(m.mean_request_ms(), 150.0);
         assert!((m.p50_token_ms() - 4.5).abs() < 1e-9);
         assert_eq!(m.throughput_tokens_per_s(3.0), 10.0);
+    }
+
+    #[test]
+    fn spec_accounting_and_summary() {
+        let mut m = Metrics::default();
+        // two rounds: 4 drafted / 4 accepted, then 4 drafted / 1
+        // accepted (commit = accepted prefix + 1 verify token)
+        m.record_spec_round(4, 4, 5, 0.60);
+        m.record_spec_round(4, 1, 2, 0.55);
+        m.record_spec_hist(&[0, 3, 5, 0]);
+        m.record_spec_hist(&[0, 1, 0, 0, 2]);
+        assert_eq!(m.spec_rounds, 2);
+        assert_eq!(m.spec_drafted, 8);
+        assert_eq!(m.spec_accepted, 5);
+        assert_eq!(m.spec_rejected, 3);
+        assert_eq!(m.spec_commit_tokens, 7);
+        assert!((m.spec_accept_rate() - 5.0 / 8.0).abs() < 1e-12);
+        assert!((m.spec_mean_prefix() - 2.5).abs() < 1e-12);
+        assert!((m.spec_tokens_per_round() - 3.5).abs() < 1e-12);
+        assert_eq!(m.spec_hist_trimmed(), vec![0, 4, 5, 0, 2]);
+        let s = m.summary(1.0);
+        assert!(s.contains("spec_rounds=2"));
+        assert!(s.contains("spec_accept_ema=0.55"));
+        assert!(s.contains("spec_tok_per_verify=3.50"));
+        assert!(s.contains("spec_draft_bits_hist=[0, 4, 5, 0, 2]"));
     }
 }

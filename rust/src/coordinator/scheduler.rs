@@ -57,11 +57,12 @@ use super::pressure::{PressureConfig, PressureController, PressureLevel};
 use super::request::{PreemptedSeq, Request, RequestId, RequestMetrics,
                      Response};
 use crate::mobiq::engine::Precision;
+use crate::mobiq::router::draft_delta;
 use crate::model::kvcache::{KvArena, KvHandle, KvPrecision, OutOfPages,
-                            KV_PAGE};
+                            SeqCheckpoint, KV_PAGE};
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
-                                DecodeStats};
-use crate::model::Model;
+                                DecodeStats, MAX_PREFILL_BLOCK};
+use crate::model::{Model, SpecCapture, SpecConfig, SpecState};
 
 /// Max parked shared-prefix entries; the LRU entry is evicted on
 /// insertion past this, or one per tick under page backpressure.
@@ -105,6 +106,11 @@ struct ActiveSeq {
     /// pages is the one with the least sunk prefill/decode work.
     admit_ord: u64,
     stats: DecodeStats,
+    /// Self-speculative decode state (accept-rate EMA driving draft
+    /// depth and draft bits) when the batcher enables speculation.
+    /// Preemption drops it — a resumed sequence re-learns its accept
+    /// rate from the neutral seed rather than trusting a stale EMA.
+    spec: Option<SpecState>,
     prefill_ms: f64,
     decode_ms: f64,
     admitted_at: Instant,
@@ -144,6 +150,9 @@ pub struct Scheduler<'m> {
     prefix: Vec<PrefixEntry>,
     pressure: PressureController,
     scratch: DecodeScratch,
+    /// Verify-pass capture scratch (per-position pre-RoPE K/V rows +
+    /// logits), reused across speculative rounds and sequences.
+    spec_cap: SpecCapture,
     started: Instant,
     ticks: u64,
     admit_counter: u64,
@@ -218,6 +227,7 @@ impl<'m> Scheduler<'m> {
             active: Vec::new(),
             prefix: Vec::new(),
             pressure: PressureController::new(PressureConfig::default()),
+            spec_cap: SpecCapture::new(),
             started: Instant::now(),
             ticks: 0,
             admit_counter: 0,
@@ -289,6 +299,9 @@ impl<'m> Scheduler<'m> {
     fn retire_at(&mut self, i: usize) {
         let seq = self.active.swap_remove(i);
         self.arena.free_seq(seq.seq);
+        if let Some(st) = &seq.spec {
+            self.metrics.record_spec_hist(&st.draft_stats.bits_hist);
+        }
         let total_ms =
             seq.req.submitted.elapsed().as_secs_f64() * 1000.0;
         let queue_ms =
@@ -323,6 +336,11 @@ impl<'m> Scheduler<'m> {
         let s = self.active.swap_remove(i);
         self.arena.free_seq(s.seq);
         self.metrics.preemptions += 1;
+        // the spec state is dropped with the eviction (see ActiveSeq);
+        // bank its draft-bit histogram before it goes
+        if let Some(st) = &s.spec {
+            self.metrics.record_spec_hist(&st.draft_stats.bits_hist);
+        }
         // park the *ask* precision, not the possibly-degraded one: the
         // resume admission re-applies whatever floor holds then
         self.batcher.park(PreemptedSeq {
@@ -413,6 +431,313 @@ impl<'m> Scheduler<'m> {
             }
         }
         false
+    }
+
+    /// Advance one decode group by one token through a single
+    /// coalesced batched call.  On OutOfPages: roll every member back
+    /// one appended position, walk the ladder, retry with the
+    /// surviving members.  Returns model steps (tokens) executed.
+    fn decode_group_plain(&mut self, group: &[RequestId],
+                          precision: Precision) -> Result<usize> {
+        let model = self.model;
+        let vocab = model.cfg.vocab_size;
+        let mut steps = 0usize;
+        let mut attempt = 0u32;
+        loop {
+            let members: Vec<usize> = group.iter()
+                .filter_map(|id| self.index_of(*id))
+                .collect();
+            if members.is_empty() {
+                break;
+            }
+            let len0: Vec<(KvHandle, usize)> = members.iter()
+                .map(|&i| {
+                    let h = self.active[i].seq;
+                    (h, self.arena.seq_len(h))
+                })
+                .collect();
+            // stats move out so DecodeSlot can hold &mut into them
+            // while the member list indexes self.active
+            let mut stats: Vec<DecodeStats> = members.iter()
+                .map(|&i| {
+                    std::mem::take(&mut self.active[i].stats)
+                })
+                .collect();
+            let t0 = Instant::now();
+            let res = {
+                let active = &self.active;
+                let mut slots: Vec<DecodeSlot> = members.iter()
+                    .zip(stats.iter_mut())
+                    .map(|(&i, st)| DecodeSlot {
+                        token: active[i].tokens[active[i].fed],
+                        seq: active[i].seq,
+                        stats: st,
+                    })
+                    .collect();
+                model.decode_batch(&mut slots, &mut self.arena,
+                                   precision, &mut self.scratch)
+            };
+            for (&i, st) in members.iter().zip(stats) {
+                self.active[i].stats = st;
+            }
+            match res {
+                Ok(()) => {
+                    // per-token latency attribution: the batch
+                    // advanced every member one token in one wall
+                    // interval
+                    let ms = t0.elapsed().as_secs_f64() * 1000.0
+                        / members.len() as f64;
+                    for (row, &i) in members.iter().enumerate() {
+                        let lo = row * vocab;
+                        let next = argmax(
+                            &self.scratch.block.logits
+                                [lo..lo + vocab]) as u32;
+                        let s = &mut self.active[i];
+                        s.fed += 1;
+                        s.tokens.push(next);
+                        s.generated += 1;
+                        s.decode_ms += ms;
+                        self.metrics.record_token(ms);
+                        steps += 1;
+                    }
+                    break;
+                }
+                Err(e) => match e.downcast::<OutOfPages>() {
+                    Ok(oom) => {
+                        for &(h, l) in &len0 {
+                            self.arena.truncate_seq(h, l);
+                        }
+                        attempt += 1;
+                        if !self.recover_oom(&oom, None, attempt) {
+                            break;
+                        }
+                    }
+                    Err(e) => return Err(e),
+                },
+            }
+        }
+        Ok(steps)
+    }
+
+    /// Advance one decode group speculatively: draft up to `k` tokens
+    /// per member through `k` coalesced batched calls at the group's
+    /// low-bit draft precision, roll every member's arena state back
+    /// *exactly* (checkpoint/rollback — absmax scales widened by draft
+    /// appends must not leak into committed pages), then verify and
+    /// commit per member with one batched full-precision pass each
+    /// ([`Model::verify_commit`]).  Greedy outputs are bit-identical
+    /// to [`Scheduler::decode_group_plain`]'s; a fully accepted round
+    /// commits k+1 tokens for a single verify step.
+    ///
+    /// The group drafts in lockstep: `k` is the min over members'
+    /// adaptive depths (and per-member remaining-token / context
+    /// headroom), the draft bits are the weakest member's, capped by
+    /// the controller's [`ElasticController::draft_bits_ceiling`] so
+    /// system pressure also shrinks the draft budget, and the router
+    /// threshold shift comes from the members' mean accept EMA.
+    ///
+    /// OOM recovery ordering matters: a mid-draft fault first rolls
+    /// every member back to its checkpoint and only then walks the
+    /// degradation ladder — an in-place requant of draft-polluted
+    /// pages would otherwise bake the widened scales in permanently.
+    fn decode_group_spec(&mut self, group: &[RequestId],
+                         precision: Precision, cfg: &SpecConfig)
+                         -> Result<usize> {
+        let model = self.model;
+        let vocab = model.cfg.vocab_size;
+        let max_seq = model.cfg.max_seq_len;
+        let n_layers = model.cfg.n_layers;
+        let mut attempt = 0u32;
+        // phase A: lockstep drafting, bracketed by exact checkpoints
+        let (ids, chains, draft_ms) = loop {
+            let members: Vec<usize> = group.iter()
+                .filter_map(|id| self.index_of(*id))
+                .collect();
+            if members.is_empty() {
+                return Ok(0);
+            }
+            // a sequence admitted before speculation was switched on
+            // (tests toggle the pub batcher field) starts neutral
+            for &i in &members {
+                if self.active[i].spec.is_none() {
+                    self.active[i].spec =
+                        Some(SpecState::new(cfg, n_layers));
+                }
+            }
+            let mut group_k = usize::MAX;
+            let mut bits = f64::INFINITY;
+            let mut ema_sum = 0.0;
+            for &i in &members {
+                let s = &self.active[i];
+                let st = s.spec.as_ref().expect("spec state");
+                let remaining = s.req.max_new_tokens
+                    .saturating_sub(s.generated);
+                let len = self.arena.seq_len(s.seq);
+                group_k = group_k
+                    .min(st.k)
+                    .min(remaining.saturating_sub(1))
+                    .min(max_seq.saturating_sub(len + 1))
+                    .min(MAX_PREFILL_BLOCK - 1);
+                bits = bits.min(st.draft_bits);
+                ema_sum += st.ema;
+            }
+            if group_k == 0 {
+                // nothing left to gamble on (some member is one token
+                // from done or from the context edge): plain decode
+                return self.decode_group_plain(group, precision);
+            }
+            let bits = bits.min(self.controller.draft_bits_ceiling());
+            let ema = ema_sum / members.len() as f64;
+            let dprec = Precision::elastic(bits).with_delta(
+                draft_delta(ema, cfg.accept_lo, cfg.accept_hi,
+                            cfg.max_delta));
+            let cks: Vec<(KvHandle, SeqCheckpoint)> = members.iter()
+                .map(|&i| {
+                    let h = self.active[i].seq;
+                    (h, self.arena.checkpoint_seq(h))
+                })
+                .collect();
+            let t0 = Instant::now();
+            // chains[m][0] = the member's pending token; drafts follow
+            let mut chains: Vec<Vec<u32>> = members.iter()
+                .map(|&i| {
+                    let s = &self.active[i];
+                    vec![s.tokens[s.fed]]
+                })
+                .collect();
+            let mut fault: Option<OutOfPages> = None;
+            'draft: for _ in 0..group_k {
+                // draft stats move out (like decode_group_plain's) —
+                // they live on the spec state so scaffolding tokens
+                // never pollute the request's routing stats
+                let mut dstats: Vec<DecodeStats> = members.iter()
+                    .map(|&i| {
+                        let st = self.active[i].spec.as_mut()
+                            .expect("spec state");
+                        std::mem::take(&mut st.draft_stats)
+                    })
+                    .collect();
+                let res = {
+                    let active = &self.active;
+                    let mut slots: Vec<DecodeSlot> = members.iter()
+                        .zip(dstats.iter_mut())
+                        .zip(chains.iter())
+                        .map(|((&i, st), chain)| DecodeSlot {
+                            token: *chain.last().unwrap(),
+                            seq: active[i].seq,
+                            stats: st,
+                        })
+                        .collect();
+                    model.decode_batch(&mut slots, &mut self.arena,
+                                       dprec, &mut self.scratch)
+                };
+                for (&i, st) in members.iter().zip(dstats) {
+                    self.active[i].spec.as_mut()
+                        .expect("spec state").draft_stats = st;
+                }
+                match res {
+                    Ok(()) => {
+                        for (row, chain) in
+                            chains.iter_mut().enumerate()
+                        {
+                            let lo = row * vocab;
+                            chain.push(argmax(
+                                &self.scratch.block.logits
+                                    [lo..lo + vocab]) as u32);
+                        }
+                    }
+                    Err(e) => match e.downcast::<OutOfPages>() {
+                        Ok(oom) => {
+                            fault = Some(oom);
+                            break 'draft;
+                        }
+                        Err(e) => return Err(e),
+                    },
+                }
+            }
+            // draft KV is scaffolding either way: restore every
+            // member's exact committed bytes/scales *before* recovery
+            // can requantize pages the drafts polluted
+            for (h, ck) in &cks {
+                self.arena.rollback_seq(*h, ck);
+            }
+            match fault {
+                None => {
+                    let ids: Vec<RequestId> = members.iter()
+                        .map(|&i| self.active[i].req.id)
+                        .collect();
+                    break (ids, chains,
+                           t0.elapsed().as_secs_f64() * 1000.0);
+                }
+                Some(oom) => {
+                    attempt += 1;
+                    if !self.recover_oom(&oom, None, attempt) {
+                        return Ok(0);
+                    }
+                }
+            }
+        };
+        // phase B: per-member batched verify + exact commit.
+        // verify_commit takes its own fresh checkpoint, so a member's
+        // OOM recovery (which may requant others' tails) never leaves
+        // half-verified state behind.
+        let mut steps = 0usize;
+        let share = draft_ms / ids.len() as f64;
+        for (m, id) in ids.iter().enumerate() {
+            let drafts = &chains[m][1..];
+            let mut vattempt = 0u32;
+            loop {
+                let Some(i) = self.index_of(*id) else { break };
+                let t0 = Instant::now();
+                let seq = self.active[i].seq;
+                let last = self.active[i].tokens[self.active[i].fed];
+                debug_assert_eq!(last, chains[m][0]);
+                let mut stats =
+                    std::mem::take(&mut self.active[i].stats);
+                let res = model.verify_commit(
+                    last, drafts, &mut self.arena, seq, precision,
+                    &mut self.scratch, &mut self.spec_cap, &mut stats);
+                self.active[i].stats = stats;
+                match res {
+                    Ok(round) => {
+                        let committed = round.tokens.len();
+                        let ms = t0.elapsed().as_secs_f64() * 1000.0
+                            + share;
+                        let s = &mut self.active[i];
+                        s.fed += committed;
+                        s.tokens.extend_from_slice(&round.tokens);
+                        s.generated += committed;
+                        s.decode_ms += ms;
+                        let st = s.spec.as_mut().expect("spec state");
+                        st.observe(cfg, round.drafted, round.matched,
+                                   committed);
+                        let ema = st.ema;
+                        let per_tok = ms / committed as f64;
+                        for _ in 0..committed {
+                            self.metrics.record_token(per_tok);
+                        }
+                        self.metrics.record_spec_round(
+                            round.drafted, round.matched, committed,
+                            ema);
+                        steps += committed;
+                        break;
+                    }
+                    // verify_commit already rolled the member back to
+                    // its committed state before surfacing the fault
+                    Err(e) => match e.downcast::<OutOfPages>() {
+                        Ok(oom) => {
+                            vattempt += 1;
+                            if !self.recover_oom(&oom, Some(*id),
+                                                 vattempt) {
+                                break;
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    },
+                }
+            }
+        }
+        Ok(steps)
     }
 
     /// One scheduling tick under the given external pressure.
@@ -529,6 +854,8 @@ impl<'m> Scheduler<'m> {
                 admit_ord: self.admit_counter,
                 tokens: p.tokens,
                 generated: p.generated,
+                spec: self.batcher.spec.as_ref()
+                    .map(|c| SpecState::new(c, n_layers)),
                 stats: p.stats,
                 prefill_ms: p.prefill_ms,
                 decode_ms: p.decode_ms,
@@ -629,6 +956,8 @@ impl<'m> Scheduler<'m> {
                 admit_ord: self.admit_counter,
                 tokens,
                 generated: 0,
+                spec: self.batcher.spec.as_ref()
+                    .map(|c| SpecState::new(c, n_layers)),
                 stats: DecodeStats::new(self.model.cfg.n_layers),
                 prefill_ms: 0.0,
                 decode_ms: 0.0,
@@ -776,85 +1105,20 @@ impl<'m> Scheduler<'m> {
 
         // 3c. coalesced decode: fuse ready sequences (up to
         // max_decode_batch per group) into one batched call per layer.
-        // On OutOfPages: roll every member back one appended position,
-        // walk the ladder, retry with the surviving members.
-        let vocab = model.cfg.vocab_size;
+        // With speculation enabled each group drafts in lockstep at a
+        // low-bit slice mask and verifies per member in one batched
+        // full-precision pass (greedy outputs stay bit-identical, a
+        // fully accepted round commits k+1 tokens per verify step);
+        // otherwise every member advances exactly one token.
         let cap = self.batcher.max_decode_batch;
+        let spec_cfg = self.batcher.spec.clone();
         for group in decode_ids.chunks(cap) {
-            let mut attempt = 0u32;
-            loop {
-                let members: Vec<usize> = group.iter()
-                    .filter_map(|id| self.index_of(*id))
-                    .collect();
-                if members.is_empty() {
-                    break;
+            steps += match &spec_cfg {
+                Some(cfg) => {
+                    self.decode_group_spec(group, precision, cfg)?
                 }
-                let len0: Vec<(KvHandle, usize)> = members.iter()
-                    .map(|&i| {
-                        let h = self.active[i].seq;
-                        (h, self.arena.seq_len(h))
-                    })
-                    .collect();
-                // stats move out so DecodeSlot can hold &mut into them
-                // while the member list indexes self.active
-                let mut stats: Vec<DecodeStats> = members.iter()
-                    .map(|&i| {
-                        std::mem::take(&mut self.active[i].stats)
-                    })
-                    .collect();
-                let t0 = Instant::now();
-                let res = {
-                    let active = &self.active;
-                    let mut slots: Vec<DecodeSlot> = members.iter()
-                        .zip(stats.iter_mut())
-                        .map(|(&i, st)| DecodeSlot {
-                            token: active[i].tokens[active[i].fed],
-                            seq: active[i].seq,
-                            stats: st,
-                        })
-                        .collect();
-                    model.decode_batch(&mut slots, &mut self.arena,
-                                       precision, &mut self.scratch)
-                };
-                for (&i, st) in members.iter().zip(stats) {
-                    self.active[i].stats = st;
-                }
-                match res {
-                    Ok(()) => {
-                        // per-token latency attribution: the batch
-                        // advanced every member one token in one wall
-                        // interval
-                        let ms = t0.elapsed().as_secs_f64() * 1000.0
-                            / members.len() as f64;
-                        for (row, &i) in members.iter().enumerate() {
-                            let lo = row * vocab;
-                            let next = argmax(
-                                &self.scratch.block.logits
-                                    [lo..lo + vocab]) as u32;
-                            let s = &mut self.active[i];
-                            s.fed += 1;
-                            s.tokens.push(next);
-                            s.generated += 1;
-                            s.decode_ms += ms;
-                            self.metrics.record_token(ms);
-                            steps += 1;
-                        }
-                        break;
-                    }
-                    Err(e) => match e.downcast::<OutOfPages>() {
-                        Ok(oom) => {
-                            for &(h, l) in &len0 {
-                                self.arena.truncate_seq(h, l);
-                            }
-                            attempt += 1;
-                            if !self.recover_oom(&oom, None, attempt) {
-                                break;
-                            }
-                        }
-                        Err(e) => return Err(e),
-                    },
-                }
-            }
+                None => self.decode_group_plain(group, precision)?,
+            };
         }
 
         // 4. retire: pages go back to the free list (minus any still

@@ -16,7 +16,7 @@ use super::pressure::PressureConfig;
 use super::request::{Request, RequestId, Response};
 use super::scheduler::Scheduler;
 use crate::model::kvcache::KvPrecision;
-use crate::model::Model;
+use crate::model::{Model, SpecConfig};
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -44,6 +44,12 @@ pub struct ServerConfig {
     /// External resource pressure in [0, 1] sampled each tick via the
     /// shared cell (set by the embedder, e.g. from a workload trace).
     pub initial_pressure: f64,
+    /// Self-speculative decoding for the coalesced decode tick: `Some`
+    /// drafts every decode group with a low-bit slice mask and verifies
+    /// in one batched full-precision step (greedy outputs stay
+    /// bit-identical to plain decode); `None` (the default) keeps the
+    /// one-token-per-tick decode.
+    pub speculative: Option<SpecConfig>,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +64,7 @@ impl Default for ServerConfig {
             controller: ControllerConfig::default(),
             pressure: PressureConfig::default(),
             initial_pressure: 0.0,
+            speculative: None,
         }
     }
 }
@@ -97,6 +104,9 @@ impl Server {
             .with_chunking(cfg.prefill_chunk, cfg.max_decode_batch);
         if let Some(pages) = cfg.kv_page_budget {
             batcher = batcher.with_kv_budget(pages);
+        }
+        if let Some(spec) = cfg.speculative.clone() {
+            batcher = batcher.with_speculative(spec);
         }
         let controller = ElasticController::new(cfg.controller.clone());
         let mut sched = Scheduler::new(&model, batcher, controller)

@@ -28,6 +28,21 @@ impl Precision {
     pub fn elastic(target_bits: f64) -> Precision {
         Precision::Elastic { target_bits, delta: 0.0 }
     }
+
+    /// Replace the Eq. 10 global threshold shift of an elastic policy
+    /// (no-op on `Fixed` — a static slice count has no threshold to
+    /// shift).  The speculative draft path uses this to couple the
+    /// router to the accept-rate feedback loop: a struggling draft
+    /// lowers delta so sensitive tokens pick up extra residual slices
+    /// (`mobiq::router::draft_delta`).
+    pub fn with_delta(self, delta: f32) -> Precision {
+        match self {
+            Precision::Elastic { target_bits, .. } => {
+                Precision::Elastic { target_bits, delta }
+            }
+            p => p,
+        }
+    }
 }
 
 /// One quantized linear layer (weights only live as bit-planes).

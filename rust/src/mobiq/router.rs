@@ -110,6 +110,25 @@ pub fn mask_bits(mask: &[bool], slice_bits: usize) -> usize {
     mask.iter().filter(|&&b| b).count() * slice_bits
 }
 
+/// Map a speculative accept-rate EMA into the Eq. 10 global threshold
+/// shift for the **draft** pass.  [`hard_mask`] activates a slice when
+/// `score > threshold + delta`, so a *negative* delta admits more
+/// slices.  A struggling draft (`ema <= lo`) therefore gets
+/// `-max_shift` — sensitive tokens pick up extra residual slices and
+/// the draft tracks the verify model more closely — while a draft
+/// that's already matching (`ema >= hi`) gets `+max_shift` and sheds
+/// slices it evidently doesn't need.  Linear ramp in between, zero at
+/// the band midpoint; degenerate bands (`hi <= lo`) shift nothing.
+pub fn draft_delta(ema: f64, lo: f64, hi: f64, max_shift: f32) -> f32 {
+    if hi <= lo {
+        return 0.0;
+    }
+    let mid = 0.5 * (lo + hi);
+    let half = 0.5 * (hi - lo);
+    let t = ((ema - mid) / half).clamp(-1.0, 1.0);
+    t as f32 * max_shift
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +197,22 @@ mod tests {
         // raising delta prunes slices (Eq. 10 elasticity)
         hard_mask(&[0.5, -0.5, 0.1], 0.0, 0.4, &mut m);
         assert_eq!(m, vec![true, true, false, false]);
+    }
+
+    #[test]
+    fn draft_delta_ramp() {
+        // low accept rate -> negative shift (more slices in the draft)
+        assert_eq!(draft_delta(0.0, 0.35, 0.75, 0.25), -0.25);
+        assert_eq!(draft_delta(0.35, 0.35, 0.75, 0.25), -0.25);
+        // high accept rate -> positive shift (fewer slices)
+        assert_eq!(draft_delta(0.75, 0.35, 0.75, 0.25), 0.25);
+        assert_eq!(draft_delta(1.0, 0.35, 0.75, 0.25), 0.25);
+        // band midpoint is neutral, ramp is monotone
+        assert!(draft_delta(0.55, 0.35, 0.75, 0.25).abs() < 1e-6);
+        assert!(draft_delta(0.45, 0.35, 0.75, 0.25)
+                    < draft_delta(0.65, 0.35, 0.75, 0.25));
+        // degenerate band never shifts
+        assert_eq!(draft_delta(0.9, 0.5, 0.5, 0.25), 0.0);
     }
 
     #[test]

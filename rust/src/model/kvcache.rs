@@ -1352,6 +1352,124 @@ impl KvArena {
         }
     }
 
+    /// Byte-exact snapshot of a sequence's append frontier: the current
+    /// length plus, for every layer whose tail page is partially filled
+    /// *and quantized*, the raw codes and absmax scales of that page's
+    /// written rows.  [`Self::truncate_seq`] alone is not an exact undo
+    /// on quantized pools — rows appended past the snapshot can widen
+    /// the partial tail page's scale, lossily re-coding the kept rows —
+    /// so speculative decoding pairs every draft burst with a
+    /// checkpoint and restores through [`Self::rollback_seq`], after
+    /// which re-appending the same rows reproduces the straight-line
+    /// bytes and scales exactly.  f32 tails need no snapshot: appends
+    /// never disturb rows before their own position.
+    pub fn checkpoint_seq(&self, h: KvHandle) -> SeqCheckpoint {
+        let s = self.seqs[h.idx()].as_ref().expect("stale handle");
+        let len = s.layers[0].len;
+        let rows = len % KV_PAGE;
+        let mut tails = Vec::new();
+        if rows > 0 {
+            for (layer, t) in s.layers.iter().enumerate() {
+                debug_assert_eq!(t.len, len,
+                                 "checkpoint inside a layer loop");
+                let pref = t.pages[len / KV_PAGE];
+                let n_kv = self.n_kv_heads;
+                let sidx = pref.id as usize * n_kv;
+                let (k, v, ks, vs) = match pref.prec {
+                    KvPrecision::F32 => continue,
+                    KvPrecision::Int8 => {
+                        let re = self.head_dim;
+                        (TailCodes::I8(read_tail_codes(
+                             &self.pool_i8.k, pref.id, n_kv, re, rows)),
+                         TailCodes::I8(read_tail_codes(
+                             &self.pool_i8.v, pref.id, n_kv, re, rows)),
+                         self.pool_i8.k_scale[sidx..sidx + n_kv]
+                             .to_vec(),
+                         self.pool_i8.v_scale[sidx..sidx + n_kv]
+                             .to_vec())
+                    }
+                    KvPrecision::Int4 => {
+                        let re = self.head_dim / 2;
+                        (TailCodes::U4(read_tail_codes(
+                             &self.pool_u4.k, pref.id, n_kv, re, rows)),
+                         TailCodes::U4(read_tail_codes(
+                             &self.pool_u4.v, pref.id, n_kv, re, rows)),
+                         self.pool_u4.k_scale[sidx..sidx + n_kv]
+                             .to_vec(),
+                         self.pool_u4.v_scale[sidx..sidx + n_kv]
+                             .to_vec())
+                    }
+                };
+                tails.push(TailSnapshot {
+                    layer,
+                    prec: pref.prec,
+                    rows,
+                    k,
+                    v,
+                    k_scale: ks,
+                    v_scale: vs,
+                });
+            }
+        }
+        SeqCheckpoint { len, tails }
+    }
+
+    /// Restore a sequence to a [`Self::checkpoint_seq`] snapshot:
+    /// truncate every layer back to the checkpoint length, then write
+    /// the saved tail-page codes and scales back over whatever the
+    /// abandoned appends left there.  Works across an intervening COW
+    /// (the copy carried the same bytes, and the restore resolves the
+    /// *current* table entry); restoring into a still-shared page
+    /// writes the bytes it already holds.  A tail whose page changed
+    /// precision since the checkpoint (an intervening
+    /// [`Self::requant_seq_tail`]) keeps the requantized bytes — the
+    /// snapshot's codes no longer apply, and the requant pass already
+    /// re-scaled over exactly the valid rows.
+    pub fn rollback_seq(&mut self, h: KvHandle, ck: &SeqCheckpoint) {
+        self.truncate_seq(h, ck.len);
+        if ck.tails.is_empty() {
+            return;
+        }
+        let pidx = ck.len / KV_PAGE;
+        let n_kv = self.n_kv_heads;
+        for t in &ck.tails {
+            let pref = {
+                let s = self.seqs[h.idx()].as_ref()
+                    .expect("stale handle");
+                s.layers[t.layer].pages[pidx]
+            };
+            if pref.prec != t.prec {
+                continue;
+            }
+            let sidx = pref.id as usize * n_kv;
+            match (&t.k, &t.v) {
+                (TailCodes::I8(k), TailCodes::I8(v)) => {
+                    let re = self.head_dim;
+                    write_tail_codes(&mut self.pool_i8.k, pref.id,
+                                     n_kv, re, t.rows, k);
+                    write_tail_codes(&mut self.pool_i8.v, pref.id,
+                                     n_kv, re, t.rows, v);
+                    self.pool_i8.k_scale[sidx..sidx + n_kv]
+                        .copy_from_slice(&t.k_scale);
+                    self.pool_i8.v_scale[sidx..sidx + n_kv]
+                        .copy_from_slice(&t.v_scale);
+                }
+                (TailCodes::U4(k), TailCodes::U4(v)) => {
+                    let re = self.head_dim / 2;
+                    write_tail_codes(&mut self.pool_u4.k, pref.id,
+                                     n_kv, re, t.rows, k);
+                    write_tail_codes(&mut self.pool_u4.v, pref.id,
+                                     n_kv, re, t.rows, v);
+                    self.pool_u4.k_scale[sidx..sidx + n_kv]
+                        .copy_from_slice(&t.k_scale);
+                    self.pool_u4.v_scale[sidx..sidx + n_kv]
+                        .copy_from_slice(&t.v_scale);
+                }
+                _ => debug_assert!(false, "mismatched tail snapshot"),
+            }
+        }
+    }
+
     /// Convert the first `rows` positions of page `src` into the
     /// freshly allocated page `dst` (refcount 1, zeroed scales),
     /// dequantizing each (head, side) run and re-quantizing it with a
@@ -1450,6 +1568,70 @@ impl KvArena {
                                  p.id as usize, head, side_k, rows, src);
             }
         }
+    }
+}
+
+/// Opaque snapshot from [`KvArena::checkpoint_seq`]: the sequence
+/// length plus raw codes + scales of each layer's partially filled
+/// quantized tail page, enough for [`KvArena::rollback_seq`] to make a
+/// draft-and-reject burst byte-invisible.  O(partial page) per layer —
+/// at most `KV_PAGE` rows per side — and nothing at all when the
+/// length sits on a page seam or the tail is f32.
+#[derive(Debug, Clone)]
+pub struct SeqCheckpoint {
+    len: usize,
+    tails: Vec<TailSnapshot>,
+}
+
+impl SeqCheckpoint {
+    /// Sequence length the snapshot restores to.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Saved state of one layer's partial quantized tail page.
+#[derive(Debug, Clone)]
+struct TailSnapshot {
+    layer: usize,
+    prec: KvPrecision,
+    /// Valid rows in the page (`len % KV_PAGE`).
+    rows: usize,
+    /// Raw codes, `rows * row_elems` per head, heads concatenated.
+    k: TailCodes,
+    v: TailCodes,
+    /// The page's per-head absmax steps at snapshot time.
+    k_scale: Vec<f32>,
+    v_scale: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+enum TailCodes {
+    I8(Vec<i8>),
+    U4(Vec<u8>),
+}
+
+/// Copy the first `rows` rows of every head of one page side out of a
+/// pool slab (checkpoint body).
+fn read_tail_codes<T: Copy>(data: &[T], page: u32, n_kv: usize,
+                            re: usize, rows: usize) -> Vec<T> {
+    let cap = KV_PAGE * re;
+    let mut out = Vec::with_capacity(n_kv * rows * re);
+    for head in 0..n_kv {
+        let lo = page as usize * n_kv * cap + head * cap;
+        out.extend_from_slice(&data[lo..lo + rows * re]);
+    }
+    out
+}
+
+/// Write saved tail codes back into a pool slab (rollback body).
+fn write_tail_codes<T: Copy>(data: &mut [T], page: u32, n_kv: usize,
+                             re: usize, rows: usize, src: &[T]) {
+    let cap = KV_PAGE * re;
+    for head in 0..n_kv {
+        let lo = page as usize * n_kv * cap + head * cap;
+        data[lo..lo + rows * re]
+            .copy_from_slice(&src[head * rows * re..][..rows * re]);
     }
 }
 

@@ -6,10 +6,12 @@
 
 pub mod attention;
 pub mod kvcache;
+pub mod speculative;
 pub mod transformer;
 pub mod weights;
 
 pub use kvcache::{KvArena, KvHandle, KvPrecision, KvRun, KvSource,
-                  KV_PAGE};
+                  SeqCheckpoint, KV_PAGE};
+pub use speculative::{SpecCapture, SpecConfig, SpecRound, SpecState};
 pub use transformer::{DecodeStats, Model};
 pub use weights::{LinearBackend, ModelConfig};

@@ -1,0 +1,518 @@
+//! Self-speculative decoding from residual bit-slices.
+//!
+//! MoBiQuant's recursive residual quantization means a low-bit prefix
+//! of the *same* packed weights is a free draft model: draft k tokens
+//! with 1–2 residual bit-planes (`Precision::elastic` + the router's
+//! threshold shift), verify all k in one batched full-precision pass,
+//! accept the longest matching greedy prefix, and roll the KV arena
+//! back for the rejected tail.  No second model, no extra weight
+//! memory — the elastic representation *is* the draft/verify
+//! hierarchy, which turns the §4 token-aware router into a latency
+//! feature rather than only a quality knob.
+//!
+//! ## The invariant, and why rollback is not just `truncate_seq`
+//!
+//! Speculative greedy output must be **token-for-token identical** to
+//! [`Model::generate`].  Two hazards on quantized KV pools would break
+//! that with the naive truncate-and-batched-verify design:
+//!
+//! 1. Draft rows appended into a partially filled i8/u4 tail page can
+//!    widen its absmax scale, lossily re-coding the rows *before* them
+//!    — `truncate_seq` drops the rows but cannot narrow the scale
+//!    back, so every later append would quantize differently from a
+//!    straight-line run.  The draft/verify loop therefore brackets
+//!    every burst with [`KvArena::checkpoint_seq`] /
+//!    [`KvArena::rollback_seq`], which snapshot and restore the tail
+//!    page's raw codes and scales exactly.
+//! 2. A block append takes its absmax over the whole block, which is
+//!    not the scale trajectory t single-token appends produce.  The
+//!    verify pass ([`Model::verify_logits`]) keeps the seven linears
+//!    batched but commits KV one position at a time with per-position
+//!    attention — `decode_step` granularity — so the verify logits are
+//!    bit-identical to a run of decode steps.
+//!
+//! On acceptance of a proper prefix, the loop rolls back to the
+//! checkpoint and re-commits only the accepted positions' K/V rows
+//! (captured pre-RoPE during the verify) one at a time, in the same
+//! position-outer order as `decode_step` — reproducing the
+//! straight-line bytes and scales exactly.  The parity suite
+//! (`rust/tests/speculative.rs`) pins this across GQA configs,
+//! page-seam lengths and all three KV precisions, including
+//! forced-rejection rounds with garbage drafts.
+//!
+//! ## Feedback loop
+//!
+//! A per-sequence accept-rate EMA ([`SpecState`]) adapts the draft
+//! depth k and the draft's elastic bit-width: sustained full
+//! acceptance deepens the draft window and sheds draft bits; sustained
+//! rejection shallows it and gives the router more residual slices
+//! (via [`draft_delta`]'s Eq. 10 threshold shift — sensitive tokens
+//! draft with more slices).  The adaptation rule is pure integer/f64
+//! arithmetic on observed accept counts, so benches and tests can
+//! simulate a trajectory exactly.
+
+use anyhow::Result;
+
+use super::kvcache::{KvArena, KvHandle, KvPrecision};
+use super::transformer::{argmax, DecodeScratch, DecodeStats, Model,
+                         MAX_PREFILL_BLOCK};
+use crate::mobiq::engine::Precision;
+use crate::mobiq::router::draft_delta;
+
+/// Tuning knobs of the speculative loop.  Defaults are conservative:
+/// the window starts at `k_min` and only deepens on sustained
+/// acceptance.
+#[derive(Debug, Clone)]
+pub struct SpecConfig {
+    /// Smallest / largest draft window (tokens drafted per round).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Draft elastic target-bit band: the draft starts cheap at
+    /// `draft_bits_min` and the feedback loop walks it up toward
+    /// `draft_bits_max` in `bits_step` increments when drafts keep
+    /// missing.
+    pub draft_bits_min: f64,
+    pub draft_bits_max: f64,
+    pub bits_step: f64,
+    /// Accept-rate EMA smoothing (weight of the newest round).
+    pub ema_alpha: f64,
+    /// EMA band: at or above `accept_hi` (with a fully accepted round)
+    /// the window deepens and the draft sheds bits; at or below
+    /// `accept_lo` the window shallows and the draft gains bits.
+    pub accept_hi: f64,
+    pub accept_lo: f64,
+    /// Magnitude of the router threshold shift [`draft_delta`] feeds
+    /// the draft precision (Eq. 10 delta at the band edges).
+    pub max_delta: f32,
+}
+
+impl Default for SpecConfig {
+    fn default() -> SpecConfig {
+        SpecConfig {
+            k_min: 1,
+            k_max: 4,
+            draft_bits_min: 2.0,
+            draft_bits_max: 4.0,
+            bits_step: 2.0,
+            ema_alpha: 0.25,
+            accept_hi: 0.75,
+            accept_lo: 0.35,
+            max_delta: 0.25,
+        }
+    }
+}
+
+/// Per-sequence speculative state: the adaptive knobs (window depth,
+/// draft bits, accept-rate EMA) plus lifetime counters and the draft
+/// pass's own routing stats (kept separate from the request's stats —
+/// draft tokens are scaffolding, not output).
+#[derive(Debug, Clone)]
+pub struct SpecState {
+    /// Current draft window depth.
+    pub k: usize,
+    /// Current draft elastic target bits.
+    pub draft_bits: f64,
+    /// Accept-rate EMA (fraction of drafted tokens accepted), seeded
+    /// neutrally at 0.5.
+    pub ema: f64,
+    pub rounds: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    /// Tokens committed by verify rounds (accepted prefixes plus their
+    /// correction/bonus tokens).
+    pub commit_tokens: u64,
+    /// Routing stats of the draft passes (bits histogram feeds the
+    /// metrics summary's draft-bit histogram).
+    pub draft_stats: DecodeStats,
+}
+
+impl SpecState {
+    pub fn new(cfg: &SpecConfig, n_layers: usize) -> SpecState {
+        SpecState {
+            k: cfg.k_min,
+            draft_bits: cfg.draft_bits_min,
+            ema: 0.5,
+            rounds: 0,
+            drafted: 0,
+            accepted: 0,
+            rejected: 0,
+            commit_tokens: 0,
+            draft_stats: DecodeStats::new(n_layers),
+        }
+    }
+
+    /// Precision of the next draft pass: elastic at the current draft
+    /// bits, with the router threshold shifted by the accept-rate EMA
+    /// ([`draft_delta`] — a struggling draft gives sensitive tokens
+    /// more residual slices).
+    pub fn draft_precision(&self, cfg: &SpecConfig) -> Precision {
+        Precision::elastic(self.draft_bits).with_delta(draft_delta(
+            self.ema,
+            cfg.accept_lo,
+            cfg.accept_hi,
+            cfg.max_delta,
+        ))
+    }
+
+    /// Fold one round's outcome into the EMA and walk the adaptive
+    /// knobs.  Deterministic arithmetic only — benches simulate
+    /// trajectories with exactly this rule.
+    pub fn observe(&mut self, cfg: &SpecConfig, drafted: usize,
+                   matched: usize, committed: usize) {
+        self.rounds += 1;
+        self.drafted += drafted as u64;
+        self.accepted += matched as u64;
+        self.rejected += (drafted - matched) as u64;
+        self.commit_tokens += committed as u64;
+        if drafted == 0 {
+            // end-of-request degenerate round (pure verify step):
+            // nothing was risked, nothing to learn
+            return;
+        }
+        let rate = matched as f64 / drafted as f64;
+        self.ema += cfg.ema_alpha * (rate - self.ema);
+        if matched == drafted && self.ema >= cfg.accept_hi {
+            self.k = (self.k + 1).min(cfg.k_max);
+            self.draft_bits =
+                (self.draft_bits - cfg.bits_step).max(cfg.draft_bits_min);
+        } else if self.ema <= cfg.accept_lo {
+            self.k = self.k.saturating_sub(1).max(cfg.k_min);
+            self.draft_bits =
+                (self.draft_bits + cfg.bits_step).min(cfg.draft_bits_max);
+        }
+    }
+
+    /// Lifetime fraction of drafted tokens accepted.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+
+    /// Mean tokens committed per verify round (the headline
+    /// tokens-per-verify-step number; > 1 means speculation pays).
+    pub fn tokens_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.commit_tokens as f64 / self.rounds as f64
+    }
+}
+
+/// Scratch the verify forward fills per round: each position's
+/// pre-RoPE K/V linear outputs for every layer (so a rejection can
+/// roll back to the checkpoint and re-commit only the accepted rows),
+/// plus reusable token/logits buffers.  Grow-only, reused across
+/// rounds and sequences.
+pub struct SpecCapture {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+    dkv: usize,
+    /// Verify logits buffer ((t, vocab) row-major), recycled between
+    /// rounds.
+    pub(crate) logits: Vec<f32>,
+    /// Fed-token staging buffer (pending token + drafts).
+    fed: Vec<u32>,
+}
+
+impl SpecCapture {
+    pub fn new() -> SpecCapture {
+        SpecCapture {
+            k: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+            dkv: 0,
+            logits: Vec::new(),
+            fed: Vec::new(),
+        }
+    }
+
+    /// Size the capture for one verify pass (`prefill_inner` calls
+    /// this when running in spec mode).
+    pub(crate) fn begin(&mut self, n_layers: usize, t: usize,
+                        dkv: usize) {
+        self.t = t;
+        self.dkv = dkv;
+        let n = n_layers * t * dkv;
+        if self.k.len() < n {
+            self.k.resize(n, 0.0);
+            self.v.resize(n, 0.0);
+        }
+    }
+
+    /// Stash one layer's pre-RoPE K/V linear outputs ((t, kv_dim)
+    /// row-major).
+    pub(crate) fn save_layer(&mut self, li: usize, k: &[f32],
+                             v: &[f32]) {
+        let n = self.t * self.dkv;
+        let lo = li * n;
+        self.k[lo..lo + n].copy_from_slice(&k[..n]);
+        self.v[lo..lo + n].copy_from_slice(&v[..n]);
+    }
+
+    fn k_row(&self, li: usize, i: usize) -> &[f32] {
+        &self.k[(li * self.t + i) * self.dkv..][..self.dkv]
+    }
+
+    fn v_row(&self, li: usize, i: usize) -> &[f32] {
+        &self.v[(li * self.t + i) * self.dkv..][..self.dkv]
+    }
+}
+
+/// Outcome of one draft→verify→commit round.
+#[derive(Debug, Clone)]
+pub struct SpecRound {
+    /// Draft tokens fed to the verify pass.
+    pub drafted: usize,
+    /// Length of the accepted draft prefix.
+    pub matched: usize,
+    /// Tokens committed to the sequence: the accepted drafts plus one
+    /// verify token (the correction where the first draft missed, or
+    /// the bonus token after a fully accepted window).  Always
+    /// `matched + 1` long, and always exactly what straight-line
+    /// greedy decode would have produced.
+    pub tokens: Vec<u32>,
+}
+
+impl Model {
+    /// One full speculative round for a sequence whose pending (not
+    /// yet fed) token is `last`: draft up to `k` tokens at
+    /// `draft_precision` with single-token greedy steps, roll the
+    /// arena back, then verify and commit via
+    /// [`Model::verify_commit`].  On any error (e.g. `OutOfPages`
+    /// surfaced mid-draft) the sequence is rolled back to its
+    /// pre-round state before the error propagates, so the caller can
+    /// run recovery and retry the round.
+    ///
+    /// `k` is clamped so the verify pass (k+1 tokens) fits both the
+    /// context window and `MAX_PREFILL_BLOCK`; `k = 0` degenerates to
+    /// a plain decode step through the verify path.
+    pub fn speculate_round(&self, last: u32, arena: &mut KvArena,
+                           seq: KvHandle, precision: Precision,
+                           draft_precision: Precision, k: usize,
+                           scratch: &mut DecodeScratch,
+                           cap: &mut SpecCapture,
+                           stats: &mut DecodeStats,
+                           draft_stats: &mut DecodeStats)
+                           -> Result<SpecRound> {
+        let len0 = arena.seq_len(seq);
+        let k = k
+            .min(self.cfg.max_seq_len.saturating_sub(len0 + 1))
+            .min(MAX_PREFILL_BLOCK - 1);
+        let mut drafts = std::mem::take(&mut cap.fed);
+        drafts.clear();
+        if k > 0 {
+            let ck = arena.checkpoint_seq(seq);
+            let mut cur = last;
+            for _ in 0..k {
+                match self.greedy_step(cur, arena, seq, draft_precision,
+                                       scratch, draft_stats) {
+                    Ok(next) => {
+                        drafts.push(next);
+                        cur = next;
+                    }
+                    Err(e) => {
+                        arena.rollback_seq(seq, &ck);
+                        cap.fed = drafts;
+                        return Err(e);
+                    }
+                }
+            }
+            arena.rollback_seq(seq, &ck);
+        }
+        let res = self.verify_commit(last, &drafts, arena, seq,
+                                     precision, scratch, cap, stats);
+        cap.fed = drafts;
+        res
+    }
+
+    /// Verify `drafts` against the full-precision model and commit the
+    /// longest matching greedy prefix (plus the verify's own
+    /// correction/bonus token).  The sequence must be at its committed
+    /// length with `last` pending; on return it has advanced by
+    /// `matched + 1` positions whose KV bytes are identical to a
+    /// straight-line run, whatever the drafts were — the parity
+    /// invariant holds for *arbitrary* draft tokens, which is what
+    /// lets the tests force rejections with garbage drafts.
+    ///
+    /// On error the sequence is rolled back to its pre-call state.
+    /// `stats` accumulates the verify pass's routing stats (it feeds
+    /// `drafts.len() + 1` tokens — a superset of the committed ones).
+    pub fn verify_commit(&self, last: u32, drafts: &[u32],
+                         arena: &mut KvArena, seq: KvHandle,
+                         precision: Precision,
+                         scratch: &mut DecodeScratch,
+                         cap: &mut SpecCapture,
+                         stats: &mut DecodeStats) -> Result<SpecRound> {
+        let k = drafts.len();
+        anyhow::ensure!(k + 1 <= MAX_PREFILL_BLOCK,
+                        "draft window exceeds MAX_PREFILL_BLOCK");
+        let len0 = arena.seq_len(seq);
+        anyhow::ensure!(len0 + k + 1 <= self.cfg.max_seq_len,
+                        "speculative window exceeds the context");
+        let ck = arena.checkpoint_seq(seq);
+        let mut logits = std::mem::take(&mut cap.logits);
+        logits.clear();
+        let mut fed = Vec::with_capacity(k + 1);
+        fed.push(last);
+        fed.extend_from_slice(drafts);
+        if let Err(e) = self.verify_logits(&fed, arena, seq, precision,
+                                           scratch, stats, cap,
+                                           &mut logits) {
+            arena.rollback_seq(seq, &ck);
+            cap.logits = logits;
+            return Err(e);
+        }
+        // Greedy accept: row i is the full-precision distribution
+        // after feeding fed[..=i], so drafts[i] is accepted iff it is
+        // row i's argmax.  First-max tie-breaking on both sides (see
+        // `transformer::argmax`) keeps ties from diverging.
+        let vocab = self.cfg.vocab_size;
+        let mut matched = 0usize;
+        while matched < k {
+            let next =
+                argmax(&logits[matched * vocab..(matched + 1) * vocab]);
+            if next as u32 == drafts[matched] {
+                matched += 1;
+            } else {
+                break;
+            }
+        }
+        let mut tokens = Vec::with_capacity(matched + 1);
+        tokens.extend_from_slice(&drafts[..matched]);
+        tokens.push(
+            argmax(&logits[matched * vocab..(matched + 1) * vocab])
+                as u32,
+        );
+        if matched < k {
+            // Rejection: roll back to the checkpoint, then re-commit
+            // the accepted positions' captured K/V rows one position
+            // at a time (position-outer, layer-inner — the exact
+            // append order of a run of decode_steps, so quantized
+            // page scales retrace the straight-line trajectory).
+            arena.rollback_seq(seq, &ck);
+            for i in 0..=matched {
+                for li in 0..self.cfg.n_layers {
+                    if let Err(e) = arena.append_kv_block(
+                        seq, li, &scratch.rope, cap.k_row(li, i),
+                        cap.v_row(li, i), 1)
+                    {
+                        arena.rollback_seq(seq, &ck);
+                        cap.logits = logits;
+                        return Err(e.into());
+                    }
+                }
+            }
+        }
+        // matched == k: every appended position is an accepted one —
+        // the serial verify commit already left the straight-line
+        // bytes in place, no rollback needed.
+        cap.logits = logits;
+        Ok(SpecRound { drafted: k, matched, tokens })
+    }
+
+    /// Greedy continuation of a prompt through the speculative loop —
+    /// the self-contained counterpart of [`Model::generate_at`], and
+    /// guaranteed to return exactly its output.  `state` carries the
+    /// adaptive knobs and counters across calls (pass a fresh
+    /// [`SpecState`] for a fresh sequence).
+    pub fn generate_speculative(&self, prompt: &[u32], n_new: usize,
+                                precision: Precision,
+                                kv_prec: KvPrecision, cfg: &SpecConfig,
+                                stats: &mut DecodeStats,
+                                state: &mut SpecState)
+                                -> Result<Vec<u32>> {
+        let (mut arena, seq) = self.new_kv_at(kv_prec);
+        let mut scratch = self.new_scratch();
+        let mut cap = SpecCapture::new();
+        let mut toks = prompt.to_vec();
+        if n_new == 0 || prompt.is_empty() {
+            return Ok(toks);
+        }
+        let mut last = self.greedy_prefill(prompt, &mut arena, seq,
+                                           precision, &mut scratch,
+                                           stats)?;
+        toks.push(last);
+        let mut generated = 1usize;
+        while generated < n_new {
+            // a round commits at most k + 1 tokens; never overshoot
+            // the request
+            let k = state.k.min(n_new - generated - 1);
+            let draft_precision = state.draft_precision(cfg);
+            let round = self.speculate_round(
+                last, &mut arena, seq, precision, draft_precision, k,
+                &mut scratch, &mut cap, stats,
+                &mut state.draft_stats)?;
+            debug_assert_eq!(round.tokens.len(), round.matched + 1);
+            toks.extend_from_slice(&round.tokens);
+            generated += round.tokens.len();
+            last = *round.tokens.last().expect("round commits >= 1");
+            state.observe(cfg, round.drafted, round.matched,
+                          round.tokens.len());
+        }
+        debug_assert_eq!(toks.len(), prompt.len() + n_new);
+        Ok(toks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_state_adapts_on_acceptance() {
+        let cfg = SpecConfig::default();
+        let mut st = SpecState::new(&cfg, 2);
+        assert_eq!(st.k, cfg.k_min);
+        // sustained full acceptance: EMA climbs, window deepens
+        for _ in 0..8 {
+            let k = st.k;
+            st.observe(&cfg, k, k, k + 1);
+        }
+        assert_eq!(st.k, cfg.k_max);
+        assert!(st.ema > cfg.accept_hi);
+        assert_eq!(st.accept_rate(), 1.0);
+        assert!(st.tokens_per_round() > 1.0);
+        // sustained total rejection: EMA falls, window shallows,
+        // draft gains bits
+        for _ in 0..12 {
+            let k = st.k;
+            st.observe(&cfg, k, 0, 1);
+        }
+        assert_eq!(st.k, cfg.k_min);
+        assert!(st.ema < cfg.accept_lo);
+        assert_eq!(st.draft_bits, cfg.draft_bits_max);
+    }
+
+    #[test]
+    fn spec_state_draft_precision_tracks_ema() {
+        let cfg = SpecConfig::default();
+        let mut st = SpecState::new(&cfg, 2);
+        st.ema = 0.0;
+        let lo = st.draft_precision(&cfg);
+        st.ema = 1.0;
+        let hi = st.draft_precision(&cfg);
+        match (lo, hi) {
+            (Precision::Elastic { delta: dl, .. },
+             Precision::Elastic { delta: dh, .. }) => {
+                assert_eq!(dl, -cfg.max_delta, "low EMA -> more slices");
+                assert_eq!(dh, cfg.max_delta, "high EMA -> fewer");
+            }
+            _ => panic!("draft precision must be elastic"),
+        }
+    }
+
+    #[test]
+    fn zero_draft_round_is_neutral() {
+        let cfg = SpecConfig::default();
+        let mut st = SpecState::new(&cfg, 2);
+        let (k0, ema0) = (st.k, st.ema);
+        st.observe(&cfg, 0, 0, 1);
+        assert_eq!((st.k, st.ema), (k0, ema0));
+        assert_eq!(st.commit_tokens, 1);
+        assert_eq!(st.rounds, 1);
+    }
+}

@@ -26,6 +26,7 @@ use anyhow::Result;
 use super::attention::{attention_block, attention_cross_slots,
                        AttnScratch, RopeCache};
 use super::kvcache::{KvArena, KvHandle, KvPrecision, KV_PAGE};
+use super::speculative::SpecCapture;
 use super::weights::{load_fp_dense, load_linear, BackendKind,
                      LayerWeights, LinearBackend, ModelConfig,
                      LINEAR_NAMES};
@@ -504,12 +505,21 @@ impl Model {
     ///   (the decode loop discards the others anyway).
     /// * `capture: Some((layer, rows))` pushes each token's attn-norm
     ///   input at `layer` (the Fig. 1/5 probe) and skips the lm_head.
+    /// * `spec: Some(cap)` is the speculative **verify** mode: the
+    ///   linears stay batched, but KV lands one position at a time with
+    ///   per-position attention — the same append granularity as
+    ///   [`Model::decode_step`], so quantized page scales widen in
+    ///   straight-line order and the logits match a run of decode
+    ///   steps bit-for-bit.  Each position's pre-RoPE K/V linear
+    ///   outputs are captured into `cap` so a rejection can roll back
+    ///   and re-commit only the accepted rows (`model/speculative.rs`).
     fn prefill_inner(&self, tokens: &[u32], arena: &mut KvArena,
                      seq: KvHandle, precision: Precision,
                      scratch: &mut DecodeScratch,
                      stats: &mut DecodeStats,
                      mut all_logits: Option<&mut Vec<f32>>,
-                     mut capture: Option<(usize, &mut Vec<Vec<f32>>)>)
+                     mut capture: Option<(usize, &mut Vec<Vec<f32>>)>,
+                     mut spec: Option<&mut SpecCapture>)
                      -> Result<()> {
         let c = &self.cfg;
         let t = tokens.len();
@@ -527,6 +537,9 @@ impl Model {
         let need_logits = all_logits.is_some();
         scratch.block.ensure(t, d, dkv, d_ff,
                              if need_logits { c.vocab_size } else { 0 });
+        if let Some(cap) = spec.as_deref_mut() {
+            cap.begin(self.layers.len(), t, dkv);
+        }
         scratch.rope.ensure(pos0 + t);
         let pool = self.pool.as_deref();
         let bb = &mut scratch.block;
@@ -556,23 +569,49 @@ impl Model {
                                 &mut scratch.engine, &mut bb.v[..t * dkv]);
             record_block(stats, &scratch.engine.batch.bits, li, 2,
                          c.slice_bits);
-            // RoPE from the cached tables, then land the whole block's
-            // K/V in the head-major arena pages (fused rotate+scatter,
-            // COW/page claims inside), then one tiled attention pass
-            // over all t queries — causality is masked inside the
-            // kernel instead of being sequenced through per-position
-            // pushes.
-            for i in 0..t {
-                scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d],
-                                   pos0 + i);
+            if let Some(cap) = spec.as_deref_mut() {
+                // Speculative verify: capture the pre-RoPE K/V rows,
+                // then append + attend one position at a time.  A
+                // block-wide quantized append takes its absmax over
+                // all t rows at once, which is *not* the scale
+                // trajectory t single-token decode steps would have
+                // produced — serializing only the KV commit keeps the
+                // verify bit-identical to `decode_step` while the
+                // seven linears above still run batched.
+                cap.save_layer(li, &bb.k[..t * dkv], &bb.v[..t * dkv]);
+                for i in 0..t {
+                    let pos = pos0 + i;
+                    scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d],
+                                       pos);
+                    arena.append_kv_block(
+                        seq, li, &scratch.rope,
+                        &bb.k[i * dkv..(i + 1) * dkv],
+                        &bb.v[i * dkv..(i + 1) * dkv], 1)?;
+                    let view = arena.layer(seq, li);
+                    attention_block(c, &bb.q[i * d..(i + 1) * d],
+                                    &view, pos, 1, &mut scratch.attn,
+                                    pool,
+                                    &mut bb.ctx[i * d..(i + 1) * d]);
+                }
+            } else {
+                // RoPE from the cached tables, then land the whole
+                // block's K/V in the head-major arena pages (fused
+                // rotate+scatter, COW/page claims inside), then one
+                // tiled attention pass over all t queries — causality
+                // is masked inside the kernel instead of being
+                // sequenced through per-position pushes.
+                for i in 0..t {
+                    scratch.rope.apply(&mut bb.q[i * d..(i + 1) * d],
+                                       pos0 + i);
+                }
+                arena.append_kv_block(seq, li, &scratch.rope,
+                                      &bb.k[..t * dkv],
+                                      &bb.v[..t * dkv], t)?;
+                let view = arena.layer(seq, li);
+                attention_block(c, &bb.q[..t * d], &view, pos0, t,
+                                &mut scratch.attn, pool,
+                                &mut bb.ctx[..t * d]);
             }
-            arena.append_kv_block(seq, li, &scratch.rope,
-                                  &bb.k[..t * dkv], &bb.v[..t * dkv],
-                                  t)?;
-            let view = arena.layer(seq, li);
-            attention_block(c, &bb.q[..t * d], &view, pos0, t,
-                            &mut scratch.attn, pool,
-                            &mut bb.ctx[..t * d]);
             lw.wo.forward_batch(&bb.ctx[..t * d], precision,
                                 &mut scratch.engine,
                                 &mut bb.attn_out[..t * d]);
@@ -637,7 +676,7 @@ impl Model {
                    stats: &mut DecodeStats) -> Result<()> {
         for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
             self.prefill_inner(chunk, arena, seq, precision, scratch,
-                               stats, None, None)?;
+                               stats, None, None, None)?;
         }
         Ok(())
     }
@@ -652,9 +691,27 @@ impl Model {
                           -> Result<()> {
         for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
             self.prefill_inner(chunk, arena, seq, precision, scratch,
-                               stats, Some(out), None)?;
+                               stats, Some(out), None, None)?;
         }
         Ok(())
+    }
+
+    /// Batched **verify** forward for the speculative accept loop
+    /// (`model/speculative.rs`): feed the pending token plus the draft
+    /// tokens through the batched linears with per-position KV commit
+    /// (see [`Model::prefill_inner`]'s `spec` mode), appending every
+    /// token's logits row ((T, vocab) row-major) to `out` and the
+    /// pre-RoPE K/V rows to `cap`.
+    pub fn verify_logits(&self, tokens: &[u32], arena: &mut KvArena,
+                         seq: KvHandle, precision: Precision,
+                         scratch: &mut DecodeScratch,
+                         stats: &mut DecodeStats,
+                         cap: &mut SpecCapture, out: &mut Vec<f32>)
+                         -> Result<()> {
+        anyhow::ensure!(tokens.len() <= MAX_PREFILL_BLOCK,
+                        "verify block exceeds MAX_PREFILL_BLOCK");
+        self.prefill_inner(tokens, arena, seq, precision, scratch,
+                           stats, Some(out), None, Some(cap))
     }
 
     /// Advance several sequences by one token each through **one
@@ -804,10 +861,36 @@ impl Model {
             for chunk in window.chunks(MAX_PREFILL_BLOCK) {
                 self.prefill_inner(chunk, &mut arena, seq, precision,
                                    &mut scratch, &mut stats, None,
-                                   Some((layer, &mut out)))?;
+                                   Some((layer, &mut out)), None)?;
             }
         }
         Ok(out)
+    }
+
+    /// Canonical prefill→argmax head of every greedy loop: prefill
+    /// `tokens` and return the greedy next token.  `generate`,
+    /// `resume`, the speculative loop and the scheduler all start
+    /// here, so tie-break behaviour (see [`argmax`]) is pinned in one
+    /// place.
+    pub fn greedy_prefill(&self, tokens: &[u32], arena: &mut KvArena,
+                          seq: KvHandle, precision: Precision,
+                          scratch: &mut DecodeScratch,
+                          stats: &mut DecodeStats) -> Result<u32> {
+        anyhow::ensure!(!tokens.is_empty(),
+                        "greedy prefill needs at least one token");
+        self.prefill(tokens, arena, seq, precision, scratch, stats)?;
+        Ok(argmax(&scratch.logits) as u32)
+    }
+
+    /// Canonical greedy decode step: feed `token`, return the greedy
+    /// next token.  The speculative draft loop uses this too — there
+    /// is exactly one decode→argmax path in the codebase.
+    pub fn greedy_step(&self, token: u32, arena: &mut KvArena,
+                       seq: KvHandle, precision: Precision,
+                       scratch: &mut DecodeScratch,
+                       stats: &mut DecodeStats) -> Result<u32> {
+        self.decode_step(token, arena, seq, precision, scratch, stats)?;
+        Ok(argmax(&scratch.logits) as u32)
     }
 
     /// Greedy-sample continuation of a prompt (used by examples/serving):
@@ -815,20 +898,30 @@ impl Model {
     pub fn generate(&self, prompt: &[u32], n_new: usize,
                     precision: Precision, stats: &mut DecodeStats)
                     -> Result<Vec<u32>> {
-        let (mut arena, seq) = self.new_kv();
+        self.generate_at(prompt, n_new, precision, KvPrecision::F32,
+                         stats)
+    }
+
+    /// [`Model::generate`] with the sequence's KV pages stored at a
+    /// chosen precision — the straight-line oracle the speculative
+    /// parity suite compares against at every KV precision.
+    pub fn generate_at(&self, prompt: &[u32], n_new: usize,
+                       precision: Precision, kv_prec: KvPrecision,
+                       stats: &mut DecodeStats) -> Result<Vec<u32>> {
+        let (mut arena, seq) = self.new_kv_at(kv_prec);
         let mut scratch = self.new_scratch();
         let mut toks = prompt.to_vec();
         if n_new == 0 || prompt.is_empty() {
             return Ok(toks);
         }
-        self.prefill(prompt, &mut arena, seq, precision, &mut scratch,
-                     stats)?;
-        toks.push(argmax(&scratch.logits) as u32);
+        let mut last = self.greedy_prefill(prompt, &mut arena, seq,
+                                           precision, &mut scratch,
+                                           stats)?;
+        toks.push(last);
         for _ in 1..n_new {
-            let last = *toks.last().unwrap();
-            self.decode_step(last, &mut arena, seq, precision,
-                             &mut scratch, stats)?;
-            toks.push(argmax(&scratch.logits) as u32);
+            last = self.greedy_step(last, &mut arena, seq, precision,
+                                    &mut scratch, stats)?;
+            toks.push(last);
         }
         Ok(toks)
     }
@@ -850,8 +943,8 @@ impl Model {
                         "resume needs at least one token");
         anyhow::ensure!(arena.seq_len(seq) == 0,
                         "resume target must be a fresh sequence");
-        self.prefill(tokens, arena, seq, precision, scratch, stats)?;
-        Ok(argmax(&scratch.logits) as u32)
+        self.greedy_prefill(tokens, arena, seq, precision, scratch,
+                            stats)
     }
 }
 
@@ -872,6 +965,19 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// Greedy sampling: index of the maximum logit.
+///
+/// **Tie-break contract (load-bearing for speculative decoding):** on
+/// exact ties the *lowest* index wins — the strict `>` only replaces
+/// the running best when a later logit exceeds it.  Draft and verify
+/// passes compare token ids, so both sides must resolve a tied row to
+/// the same id; any change here (e.g. `>=`, or a reversed scan) would
+/// make speculative acceptance diverge from [`Model::generate`] on
+/// tied logits while both outputs were still "a valid argmax".  NaN
+/// logits never win for the same reason (every comparison with NaN is
+/// false), so a poisoned row degrades to index 0 deterministically
+/// rather than picking a platform-dependent token.  Pinned by
+/// `argmax_tie_breaks_to_first`.
 pub fn argmax(v: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in v.iter().enumerate() {
@@ -922,6 +1028,25 @@ mod tests {
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 5.0, -2.0]), 1);
         assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    /// The tie-break contract draft-vs-verify acceptance relies on:
+    /// first max wins, everywhere, deterministically.
+    #[test]
+    fn argmax_tie_breaks_to_first() {
+        // two-way and three-way exact ties resolve to the lowest index
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[3.0, 3.0, 3.0]), 0);
+        assert_eq!(argmax(&[-1.0, -1.0]), 0);
+        // ties among negatives and at the end of the row
+        assert_eq!(argmax(&[-5.0, -2.0, -2.0]), 1);
+        assert_eq!(argmax(&[0.0, 1.0, 1.0]), 1);
+        // NaN never wins (all comparisons false): earlier finite max
+        // stays, and an all-NaN row degrades to index 0
+        assert_eq!(argmax(&[2.0, f32::NAN, 1.0]), 0);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        // infinities follow the same first-max rule
+        assert_eq!(argmax(&[f32::INFINITY, f32::INFINITY, 0.0]), 0);
     }
 
     /// Shapes big enough that `par_rows` engages the pool: the block

@@ -1,0 +1,427 @@
+//! Self-speculative decoding parity suite.
+//!
+//! The tentpole invariant: speculative greedy output is token-for-token
+//! identical to [`Model::generate_at`] — across GQA configs, page-seam
+//! sequence lengths, every KV storage precision, and forced-rejection
+//! rounds with adversarial draft tokens.  Plus the arena-level exactness
+//! the invariant rests on: checkpoint/rollback of a draft burst must
+//! reproduce the straight-line page bytes AND quantization scales, even
+//! when the burst widened a partial tail page's absmax scale or forced
+//! a copy-on-write of a fork-shared tail.
+//!
+//! Runs entirely on the synthetic model (no `make artifacts` needed).
+
+use std::time::Duration;
+
+use mobiquant::bench_support::{synth_model, synth_model_shaped};
+use mobiquant::coordinator::controller::ControllerConfig;
+use mobiquant::coordinator::{Server, ServerConfig};
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::attention::RopeCache;
+use mobiquant::model::{DecodeStats, KvArena, KvHandle, KvPrecision,
+                       KvRun, KvSource, Model, SpecCapture, SpecConfig,
+                       SpecState, KV_PAGE};
+use mobiquant::util::prng::Pcg;
+
+const KV_PRECS: [KvPrecision; 3] =
+    [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4];
+
+fn prompt_for(id: usize, len: usize) -> Vec<u32> {
+    (0..len).map(|i| ((i * 5 + 11 * id) % 256) as u32).collect()
+}
+
+fn verify_prec() -> Precision {
+    Precision::elastic(4.0)
+}
+
+// ---------------------------------------------------------------------------
+// Arena checkpoint/rollback exactness (the primitive the loop rests on)
+// ---------------------------------------------------------------------------
+
+/// Byte-and-scale equality of two sequences' first `upto` positions,
+/// checked run-by-run so quantized codes and page-uniform scales are
+/// compared exactly (not through a dequantized lens).
+fn assert_kv_identical(a: &KvArena, x: KvHandle, y: KvHandle,
+                       n_layers: usize, n_kv: usize, upto: usize) {
+    for li in 0..n_layers {
+        let vx = a.layer(x, li);
+        let vy = a.layer(y, li);
+        assert!(vx.len() >= upto && vy.len() >= upto,
+                "layer {li}: lens {} / {} < {upto}", vx.len(), vy.len());
+        for h in 0..n_kv {
+            let mut p = 0;
+            while p < upto {
+                let p1 = ((p / KV_PAGE + 1) * KV_PAGE).min(upto);
+                assert_run_eq(vx.k_run(h, p, p1), vy.k_run(h, p, p1),
+                              "K", li, h, p);
+                assert_run_eq(vx.v_run(h, p, p1), vy.v_run(h, p, p1),
+                              "V", li, h, p);
+                p = p1;
+            }
+        }
+    }
+}
+
+fn assert_run_eq(a: KvRun, b: KvRun, what: &str, li: usize, h: usize,
+                 p: usize) {
+    let at = format!("{what} layer {li} head {h} pos {p}");
+    match (a, b) {
+        (KvRun::F32(x), KvRun::F32(y)) => {
+            assert_eq!(x, y, "f32 rows diverge at {at}");
+        }
+        (KvRun::I8 { data: dx, scale: sx },
+         KvRun::I8 { data: dy, scale: sy }) => {
+            assert_eq!(sx.to_bits(), sy.to_bits(),
+                       "i8 scale diverges at {at}: {sx} vs {sy}");
+            assert_eq!(dx, dy, "i8 codes diverge at {at}");
+        }
+        (KvRun::U4 { data: dx, scale: sx },
+         KvRun::U4 { data: dy, scale: sy }) => {
+            assert_eq!(sx.to_bits(), sy.to_bits(),
+                       "u4 scale diverges at {at}: {sx} vs {sy}");
+            assert_eq!(dx, dy, "u4 codes diverge at {at}");
+        }
+        (a, b) => panic!("run precision mismatch at {at}: {a:?} vs {b:?}"),
+    }
+}
+
+/// Straight-line oracle vs checkpoint → garbage burst → rollback →
+/// continue, on one shared arena.  `m` is the checkpoint position,
+/// `g` the number of garbage rows (huge values, so any scale widening
+/// that survives the rollback is loud).
+fn rollback_case(prec: KvPrecision, m: usize, g: usize) {
+    const L: usize = 2;
+    const HD: usize = 4; // one kv head, head_dim 4 (even, for u4)
+    let n = 2 * KV_PAGE + 3;
+    let mut a = KvArena::new(L, 4 * KV_PAGE, 1, HD, 64);
+    let mut rope = RopeCache::new(HD, 1e4);
+    rope.ensure(4 * KV_PAGE);
+    let mut rng = Pcg::new(0x5eed ^ (m as u64) ^ ((g as u64) << 20));
+    let ks = rng.normal_vec(L * n * HD, 1.0);
+    let vs = rng.normal_vec(L * n * HD, 1.0);
+    let row = |s: &[f32], li: usize, i: usize| &s[(li * n + i) * HD..][..HD];
+
+    let ha = a.alloc_seq_at(prec);
+    for i in 0..n {
+        for li in 0..L {
+            a.append_kv_block(ha, li, &rope, row(&ks, li, i),
+                              row(&vs, li, i), 1).unwrap();
+        }
+    }
+    let hb = a.alloc_seq_at(prec);
+    for i in 0..m {
+        for li in 0..L {
+            a.append_kv_block(hb, li, &rope, row(&ks, li, i),
+                              row(&vs, li, i), 1).unwrap();
+        }
+    }
+    let ck = a.checkpoint_seq(hb);
+    let junk = vec![1.0e4f32; HD];
+    for _ in 0..g {
+        for li in 0..L {
+            a.append_kv_block(hb, li, &rope, &junk, &junk, 1).unwrap();
+        }
+    }
+    a.rollback_seq(hb, &ck);
+    assert_eq!(a.seq_len(hb), m, "rollback must restore the length");
+    for i in m..n {
+        for li in 0..L {
+            a.append_kv_block(hb, li, &rope, row(&ks, li, i),
+                              row(&vs, li, i), 1).unwrap();
+        }
+    }
+    assert_kv_identical(&a, ha, hb, L, 1, n);
+}
+
+#[test]
+fn rollback_reproduces_straight_line_bytes_and_scales() {
+    for prec in KV_PRECS {
+        // checkpoint just under a page boundary, garbage crosses it
+        rollback_case(prec, KV_PAGE - 1, 2);
+        // checkpoint exactly on a boundary (empty tail: truncate-only)
+        rollback_case(prec, KV_PAGE, 1);
+        // mid-page tail, garbage burst spills a whole page past it
+        rollback_case(prec, KV_PAGE + 3, KV_PAGE);
+        // tail one row short of full
+        rollback_case(prec, 2 * KV_PAGE - 1, 3);
+    }
+}
+
+/// Rollback across an intervening copy-on-write: fork a child that
+/// shares the parent's partial tail page, checkpoint, append garbage
+/// (forcing the COW), roll back, continue.  The child must reproduce
+/// the straight line AND the parent's shared prefix must be untouched.
+#[test]
+fn rollback_survives_cow_fork_of_partial_tail() {
+    const L: usize = 2;
+    const HD: usize = 4;
+    for prec in KV_PRECS {
+        let m = KV_PAGE + 5;
+        let n = 2 * KV_PAGE + 1;
+        let mut a = KvArena::new(L, 4 * KV_PAGE, 1, HD, 64);
+        let mut rope = RopeCache::new(HD, 1e4);
+        rope.ensure(4 * KV_PAGE);
+        let mut rng = Pcg::new(0xf0f0 ^ m as u64);
+        let ks = rng.normal_vec(L * n * HD, 1.0);
+        let vs = rng.normal_vec(L * n * HD, 1.0);
+        let row =
+            |s: &[f32], li: usize, i: usize| &s[(li * n + i) * HD..][..HD];
+
+        let ha = a.alloc_seq_at(prec); // straight-line oracle
+        for i in 0..n {
+            for li in 0..L {
+                a.append_kv_block(ha, li, &rope, row(&ks, li, i),
+                                  row(&vs, li, i), 1).unwrap();
+            }
+        }
+        let hp = a.alloc_seq_at(prec); // parent, stops at m
+        for i in 0..m {
+            for li in 0..L {
+                a.append_kv_block(hp, li, &rope, row(&ks, li, i),
+                                  row(&vs, li, i), 1).unwrap();
+            }
+        }
+        let hc = a.fork_prefix(hp, m); // shares the partial tail page
+        let ck = a.checkpoint_seq(hc);
+        let junk = vec![2.0e4f32; HD];
+        for _ in 0..3 {
+            for li in 0..L {
+                a.append_kv_block(hc, li, &rope, &junk, &junk, 1)
+                    .unwrap();
+            }
+        }
+        a.rollback_seq(hc, &ck);
+        // the draft burst COWed the tail; the parent must not have
+        // seen any of it
+        assert_kv_identical(&a, ha, hp, L, 1, m);
+        for i in m..n {
+            for li in 0..L {
+                a.append_kv_block(hc, li, &rope, row(&ks, li, i),
+                                  row(&vs, li, i), 1).unwrap();
+            }
+        }
+        assert_kv_identical(&a, ha, hc, L, 1, n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model-level parity: generate_speculative == generate_at
+// ---------------------------------------------------------------------------
+
+fn parity_case(model: &Model, total: usize, kv: KvPrecision) {
+    let prompt = prompt_for(3, 31);
+    let n_new = total - prompt.len();
+    let prec = verify_prec();
+    let mut stats = DecodeStats::new(2);
+    let oracle =
+        model.generate_at(&prompt, n_new, prec, kv, &mut stats).unwrap();
+
+    let cfg = SpecConfig::default();
+    let mut st = SpecState::new(&cfg, 2);
+    let mut stats2 = DecodeStats::new(2);
+    let got = model
+        .generate_speculative(&prompt, n_new, prec, kv, &cfg,
+                              &mut stats2, &mut st)
+        .unwrap();
+    assert_eq!(got, oracle, "kv {kv:?} total {total}");
+    assert_eq!(st.drafted, st.accepted + st.rejected);
+    assert_eq!(st.commit_tokens, (n_new - 1) as u64,
+               "every post-prefill token flows through a verify round");
+    assert!(st.rounds > 0);
+}
+
+/// GQA model (4 heads / 2 kv heads), totals bracketing the page seam
+/// (KV_PAGE = 64): 63, 64, 65 and a two-seam length, at every KV
+/// storage precision.
+#[test]
+fn speculative_matches_generate_gqa_page_seams() {
+    let model = synth_model_shaped(17, 4, 2, 160);
+    for kv in KV_PRECS {
+        for total in [63, 64, 65, 129] {
+            parity_case(&model, total, kv);
+        }
+    }
+}
+
+/// MHA model (4 heads / 4 kv heads) across the KV precisions.
+#[test]
+fn speculative_matches_generate_mha() {
+    let model = synth_model_shaped(23, 4, 4, 160);
+    for kv in KV_PRECS {
+        parity_case(&model, 65, kv);
+    }
+}
+
+/// `verify_commit` holds the parity invariant for ARBITRARY drafts —
+/// feed it deterministic mixtures of correct and garbage tokens and
+/// the committed stream must still be exactly the oracle's.  Cycles
+/// full-accept / partial-accept / full-reject / mixed rounds so the
+/// rollback + re-commit path runs with every accepted-prefix shape.
+#[test]
+fn forced_rejections_preserve_parity() {
+    let model = synth_model_shaped(29, 4, 2, 160);
+    let prec = verify_prec();
+    for (ci, kv) in KV_PRECS.into_iter().enumerate() {
+        let prompt = prompt_for(7, 33);
+        let n_new = 48;
+        let mut stats = DecodeStats::new(2);
+        let oracle = model
+            .generate_at(&prompt, n_new, prec, kv, &mut stats)
+            .unwrap();
+
+        let (mut arena, seq) = model.new_kv_at(kv);
+        let mut scratch = model.new_scratch();
+        let mut cap = SpecCapture::new();
+        let mut rng = Pcg::new(0xbad5eed + ci as u64);
+        let mut toks = prompt.clone();
+        let mut last = model
+            .greedy_prefill(&prompt, &mut arena, seq, prec,
+                            &mut scratch, &mut stats)
+            .unwrap();
+        assert_eq!(last, oracle[prompt.len()]);
+        toks.push(last);
+        let mut generated = 1usize;
+        let (mut full, mut partial, mut rejected) = (0u32, 0u32, 0u32);
+        let mut round_no = 0usize;
+        while generated < n_new {
+            let k = 3.min(n_new - generated - 1);
+            let drafts: Vec<u32> = (0..k)
+                .map(|j| {
+                    let right = oracle[toks.len() + j];
+                    let wrong = (right + 1 + rng.below(200) as u32) % 256;
+                    match round_no % 4 {
+                        0 => right,                            // full accept
+                        1 => if j == 0 { right } else { wrong }, // partial
+                        2 => wrong,                            // full reject
+                        _ => if rng.below(2) == 0 { right } else { wrong },
+                    }
+                })
+                .collect();
+            round_no += 1;
+            let round = model
+                .verify_commit(last, &drafts, &mut arena, seq, prec,
+                               &mut scratch, &mut cap, &mut stats)
+                .unwrap();
+            assert_eq!(round.tokens.len(), round.matched + 1);
+            if round.drafted > 0 && round.matched == round.drafted {
+                full += 1;
+            }
+            if round.matched > 0 && round.matched < round.drafted {
+                partial += 1;
+            }
+            if round.matched < round.drafted {
+                rejected += 1;
+            }
+            toks.extend_from_slice(&round.tokens);
+            generated += round.tokens.len();
+            last = *round.tokens.last().unwrap();
+        }
+        assert_eq!(toks, oracle, "kv {kv:?}");
+        assert!(full > 0 && partial > 0 && rejected > 0,
+                "kv {kv:?}: exercise all accept shapes \
+                 (full={full} partial={partial} rejected={rejected})");
+    }
+}
+
+/// k = 0 degenerates to a plain decode step: same token, same length,
+/// byte-identical KV pages.
+#[test]
+fn empty_draft_verify_is_a_decode_step() {
+    let model = synth_model_shaped(5, 4, 2, 96);
+    let prec = verify_prec();
+    for kv in KV_PRECS {
+        let mut arena = model.new_arena(2);
+        let s1 = arena.alloc_seq_at(kv);
+        let s2 = arena.alloc_seq_at(kv);
+        let mut scratch = model.new_scratch();
+        let mut stats = DecodeStats::new(2);
+        let mut cap = SpecCapture::new();
+        let prompt = prompt_for(1, 21);
+        let mut last1 = model
+            .greedy_prefill(&prompt, &mut arena, s1, prec, &mut scratch,
+                            &mut stats)
+            .unwrap();
+        let mut last2 = model
+            .greedy_prefill(&prompt, &mut arena, s2, prec, &mut scratch,
+                            &mut stats)
+            .unwrap();
+        assert_eq!(last1, last2);
+        for _ in 0..5 {
+            let next = model
+                .greedy_step(last1, &mut arena, s1, prec, &mut scratch,
+                             &mut stats)
+                .unwrap();
+            let round = model
+                .verify_commit(last2, &[], &mut arena, s2, prec,
+                               &mut scratch, &mut cap, &mut stats)
+                .unwrap();
+            assert_eq!((round.drafted, round.matched), (0, 0));
+            assert_eq!(round.tokens, vec![next]);
+            last1 = next;
+            last2 = round.tokens[0];
+        }
+        let len = arena.seq_len(s1);
+        assert_eq!(len, arena.seq_len(s2));
+        assert_kv_identical(&arena, s1, s2, 2, 2, len);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-level parity: speculative decode tick vs plain decode tick
+// ---------------------------------------------------------------------------
+
+/// With the controller pinned (no precision jitter) and no page
+/// pressure, turning speculation on must not change a single output
+/// token for any request — it only changes how many verify steps the
+/// tokens took.  Also pins the spec accounting surfaced by `Metrics`.
+#[test]
+fn scheduler_speculative_matches_plain_decode() {
+    let base = || ServerConfig {
+        max_active: 3,
+        controller: ControllerConfig {
+            min_bits: 4.0,
+            max_bits: 4.0,
+            ..ControllerConfig::default()
+        },
+        ..ServerConfig::default()
+    };
+    let prompts: Vec<Vec<u32>> =
+        (0..3).map(|i| prompt_for(i, 13)).collect();
+    let n_new = 24usize;
+
+    let run = |cfg: ServerConfig| {
+        let server = Server::start(synth_model(41), cfg);
+        let rxs: Vec<_> = prompts
+            .iter()
+            .zip(KV_PRECS)
+            .map(|(p, kv)| server.submit_at(p.clone(), n_new, kv))
+            .collect();
+        let toks: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|(_, rx)| {
+                let r = rx.recv_timeout(Duration::from_secs(120))
+                    .expect("response");
+                assert_eq!(r.metrics.generated_tokens, n_new);
+                r.tokens
+            })
+            .collect();
+        (toks, server.shutdown().unwrap())
+    };
+
+    let (plain, m_plain) = run(base());
+    let mut cfg = base();
+    cfg.speculative = Some(SpecConfig::default());
+    let (spec, m_spec) = run(cfg);
+
+    assert_eq!(spec, plain,
+               "speculative tick changed scheduler outputs");
+    assert_eq!(m_plain.spec_rounds, 0);
+    assert!(m_spec.spec_rounds > 0, "no speculative rounds ran");
+    assert_eq!(m_spec.spec_drafted,
+               m_spec.spec_accepted + m_spec.spec_rejected);
+    assert!(m_spec.spec_commit_tokens >= m_spec.spec_rounds,
+            "every round commits at least one token");
+    assert!(m_spec.spec_tokens_per_round() >= 1.0);
+    let s = m_spec.summary();
+    assert!(s.contains("spec_rounds="), "summary missing spec: {s}");
+}
