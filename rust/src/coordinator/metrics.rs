@@ -1,6 +1,6 @@
 //! Serving metrics: counters + streaming latency histograms.
 
-use crate::model::kvcache::{KvArena, KvPrecision};
+use crate::model::kvcache::{KvPrecision, KvShards};
 use crate::util::stats;
 
 #[derive(Debug, Default, Clone)]
@@ -107,8 +107,11 @@ impl Metrics {
     }
 
     /// Snapshot the arena's page and byte occupancy (called once per
-    /// tick).
-    pub fn record_kv(&mut self, arena: &KvArena) {
+    /// tick).  Under shards the page-slot numbers come from the
+    /// mirrored shard 0 (== unsharded) and byte numbers sum across the
+    /// per-shard arenas (== unsharded exactly), so dashboards read the
+    /// same regardless of shard count.
+    pub fn record_kv(&mut self, arena: &KvShards) {
         self.kv_pages_capacity = arena.capacity_pages();
         self.kv_pages_resident = arena.resident_pages();
         self.kv_pages_resident_peak = arena.peak_resident_pages();

@@ -215,6 +215,61 @@ mod tests {
         assert_eq!(c.escalations(), 1);
     }
 
+    /// Escalation boundaries are inclusive: occupancy exactly at a
+    /// band's entry threshold engages that band (raw_level uses >=),
+    /// and one ulp below it does not.
+    #[test]
+    fn escalation_engages_exactly_at_threshold() {
+        let cfg = PressureConfig::default();
+        let mut c = PressureController::new(cfg.clone());
+        assert_eq!(c.update(cfg.moderate - 1e-9), PressureLevel::Calm);
+        assert_eq!(c.update(cfg.moderate), PressureLevel::Moderate);
+        assert_eq!(c.update(cfg.high - 1e-9), PressureLevel::Moderate);
+        assert_eq!(c.update(cfg.high), PressureLevel::High);
+        assert_eq!(c.update(cfg.critical - 1e-9), PressureLevel::High);
+        assert_eq!(c.update(cfg.critical), PressureLevel::Critical);
+        assert_eq!(c.escalations(), 3);
+    }
+
+    /// De-escalation is strict: occupancy exactly at entry − hysteresis
+    /// holds the band; only strictly below it releases.  Checked at
+    /// every band edge of the default config.
+    #[test]
+    fn deescalation_release_points_are_strict() {
+        let cfg = PressureConfig::default();
+        // Critical: entry 0.97, release 0.92.
+        let mut c = PressureController::new(cfg.clone());
+        assert_eq!(c.update(0.99), PressureLevel::Critical);
+        let release = cfg.critical - cfg.hysteresis;
+        assert_eq!(c.update(release), PressureLevel::Critical);
+        // Strictly below release: steps down to the raw band (High,
+        // since release - eps is still above cfg.high).
+        assert_eq!(c.update(release - 1e-9), PressureLevel::High);
+
+        // High: entry 0.85, release 0.80.
+        let release = cfg.high - cfg.hysteresis;
+        assert_eq!(c.update(release), PressureLevel::High);
+        assert_eq!(c.update(release - 1e-9), PressureLevel::Moderate);
+
+        // Moderate: entry 0.70, release 0.65.
+        let release = cfg.moderate - cfg.hysteresis;
+        assert_eq!(c.update(release), PressureLevel::Moderate);
+        assert_eq!(c.update(release - 1e-9), PressureLevel::Calm);
+    }
+
+    /// A collapse in occupancy drops straight to the raw band — the
+    /// ladder does not unwind one rung per tick.
+    #[test]
+    fn deescalation_skips_bands_on_collapse() {
+        let mut c = PressureController::new(PressureConfig::default());
+        assert_eq!(c.update(0.99), PressureLevel::Critical);
+        assert_eq!(c.update(0.10), PressureLevel::Calm);
+        // And straight from Critical into a mid band.
+        assert_eq!(c.update(0.99), PressureLevel::Critical);
+        assert_eq!(c.update(0.72), PressureLevel::Moderate);
+        assert_eq!(c.escalations(), 2);
+    }
+
     #[test]
     fn admission_floor_never_upgrades() {
         let mut c = PressureController::new(PressureConfig::default());

@@ -58,8 +58,9 @@ use super::request::{PreemptedSeq, Request, RequestId, RequestMetrics,
                      Response};
 use crate::mobiq::engine::Precision;
 use crate::mobiq::router::draft_delta;
-use crate::model::kvcache::{KvArena, KvHandle, KvPrecision, OutOfPages,
+use crate::model::kvcache::{KvHandle, KvPrecision, KvShards, OutOfPages,
                             SeqCheckpoint, KV_PAGE};
+use crate::model::shard::ShardRuntime;
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
                                 DecodeStats, MAX_PREFILL_BLOCK};
 use crate::model::{Model, SpecCapture, SpecConfig, SpecState};
@@ -119,7 +120,7 @@ struct ActiveSeq {
 impl ActiveSeq {
     /// Budget bytes this sequence may still claim from the arena (its
     /// admission reservation minus what it has already allocated).
-    fn reserved_remaining(&self, arena: &KvArena) -> usize {
+    fn reserved_remaining(&self, arena: &KvShards) -> usize {
         let grown = arena.seq_bytes(self.seq)
             .saturating_sub(self.bytes_at_admission);
         self.reserved_bytes.saturating_sub(grown)
@@ -144,8 +145,13 @@ pub struct Scheduler<'m> {
     pub batcher: Batcher,
     pub controller: ElasticController,
     pub metrics: Metrics,
-    /// The process-wide paged KV pool all sequences live in.
-    pub arena: KvArena,
+    /// The process-wide paged KV pool all sequences live in: one arena
+    /// per shard (a single mirrored element when unsharded), sharing
+    /// one logical byte budget.
+    pub arena: KvShards,
+    /// Tensor-parallel execution engine when serving with `--shards`
+    /// N > 1; `None` runs the pre-PR single-arena model entry points.
+    shard_rt: Option<ShardRuntime>,
     active: Vec<ActiveSeq>,
     prefix: Vec<PrefixEntry>,
     pressure: PressureController,
@@ -161,7 +167,7 @@ pub struct Scheduler<'m> {
 /// Worst-case budget bytes a request needs: its (truncated) prompt
 /// plus full generation headroom, across all layers, at its KV
 /// storage precision.
-fn worst_bytes(arena: &KvArena, prompt_len: usize, max_new: usize,
+fn worst_bytes(arena: &KvShards, prompt_len: usize, max_new: usize,
                kv_prec: KvPrecision) -> usize {
     arena.seq_worst_bytes(prompt_len + max_new, kv_prec)
 }
@@ -213,10 +219,10 @@ impl<'m> Scheduler<'m> {
         // The arena: an explicit page budget commits less memory than
         // the worst case (admission queues when pages run short);
         // otherwise size it so every slot can reach full context.
-        let arena = match batcher.kv_page_budget {
+        let arena = KvShards::single(match batcher.kv_page_budget {
             Some(pages) => model.new_arena_with_pages(pages),
             None => model.new_arena(batcher.max_active),
-        };
+        });
         Scheduler {
             scratch,
             model,
@@ -224,6 +230,7 @@ impl<'m> Scheduler<'m> {
             controller,
             metrics: Metrics::default(),
             arena,
+            shard_rt: None,
             active: Vec::new(),
             prefix: Vec::new(),
             pressure: PressureController::new(PressureConfig::default()),
@@ -238,6 +245,34 @@ impl<'m> Scheduler<'m> {
     pub fn with_pressure(mut self, cfg: PressureConfig) -> Scheduler<'m> {
         self.pressure = PressureController::new(cfg);
         self
+    }
+
+    /// Shard the model over `n` tensor-parallel workers.  Replaces the
+    /// KV store with one mirrored arena per shard — each holding that
+    /// shard's kv heads under the *same* page-slot budget as the
+    /// unsharded arena, so byte totals, occupancy fractions, and the
+    /// pressure ladder's behavior are unchanged.  Must be called on a
+    /// fresh scheduler (before any admission).  `n = 1` keeps the
+    /// pre-PR single-arena execution path.
+    pub fn with_shards(mut self, n: usize) -> Result<Scheduler<'m>> {
+        assert!(self.active.is_empty() && self.prefix.is_empty(),
+                "with_shards on a scheduler that already has state");
+        if n <= 1 {
+            return Ok(self);
+        }
+        let rt = ShardRuntime::new(self.model, n)?;
+        self.arena = match self.batcher.kv_page_budget {
+            Some(pages) => rt.new_shards_with_pages(self.model, pages),
+            None => rt.new_shards_arena(self.model,
+                                        self.batcher.max_active),
+        };
+        self.shard_rt = Some(rt);
+        Ok(self)
+    }
+
+    /// Tensor-parallel worker count (1 = unsharded).
+    pub fn n_shards(&self) -> usize {
+        self.arena.n_shards()
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -474,8 +509,14 @@ impl<'m> Scheduler<'m> {
                         stats: st,
                     })
                     .collect();
-                model.decode_batch(&mut slots, &mut self.arena,
-                                   precision, &mut self.scratch)
+                match &mut self.shard_rt {
+                    Some(rt) => rt.decode_batch(
+                        model, &mut slots, &mut self.arena, precision,
+                        &mut self.scratch.block.logits),
+                    None => model.decode_batch(
+                        &mut slots, self.arena.only_mut(), precision,
+                        &mut self.scratch),
+                }
             };
             for (&i, st) in members.iter().zip(stats) {
                 self.active[i].stats = st;
@@ -591,7 +632,9 @@ impl<'m> Scheduler<'m> {
             let dprec = Precision::elastic(bits).with_delta(
                 draft_delta(ema, cfg.accept_lo, cfg.accept_hi,
                             cfg.max_delta));
-            let cks: Vec<(KvHandle, SeqCheckpoint)> = members.iter()
+            // per-shard checkpoints (one per mirrored arena; a single
+            // element when unsharded)
+            let cks: Vec<(KvHandle, Vec<SeqCheckpoint>)> = members.iter()
                 .map(|&i| {
                     let h = self.active[i].seq;
                     (h, self.arena.checkpoint_seq(h))
@@ -628,8 +671,14 @@ impl<'m> Scheduler<'m> {
                             stats: st,
                         })
                         .collect();
-                    model.decode_batch(&mut slots, &mut self.arena,
-                                       dprec, &mut self.scratch)
+                    match &mut self.shard_rt {
+                        Some(rt) => rt.decode_batch(
+                            model, &mut slots, &mut self.arena, dprec,
+                            &mut self.scratch.block.logits),
+                        None => model.decode_batch(
+                            &mut slots, self.arena.only_mut(), dprec,
+                            &mut self.scratch),
+                    }
                 };
                 for (&i, st) in members.iter().zip(dstats) {
                     self.active[i].spec.as_mut()
@@ -694,9 +743,15 @@ impl<'m> Scheduler<'m> {
                 debug_assert_eq!(last, chains[m][0]);
                 let mut stats =
                     std::mem::take(&mut self.active[i].stats);
-                let res = model.verify_commit(
-                    last, drafts, &mut self.arena, seq, precision,
-                    &mut self.scratch, &mut self.spec_cap, &mut stats);
+                let res = match &mut self.shard_rt {
+                    Some(rt) => rt.verify_commit(
+                        model, last, drafts, &mut self.arena, seq,
+                        precision, &mut stats),
+                    None => model.verify_commit(
+                        last, drafts, self.arena.only_mut(), seq,
+                        precision, &mut self.scratch,
+                        &mut self.spec_cap, &mut stats),
+                };
                 self.active[i].stats = stats;
                 match res {
                     Ok(round) => {
@@ -1007,9 +1062,16 @@ impl<'m> Scheduler<'m> {
                     .min(self.active[idx].prefill_len);
                 let res = {
                     let s = &mut self.active[idx];
-                    model.prefill(&s.tokens[s.fed..end],
-                                  &mut self.arena, s.seq, precision,
-                                  &mut self.scratch, &mut s.stats)
+                    match &mut self.shard_rt {
+                        Some(rt) => rt.prefill(
+                            model, &s.tokens[s.fed..end],
+                            &mut self.arena, s.seq, precision,
+                            &mut s.stats, &mut self.scratch.logits),
+                        None => model.prefill(
+                            &s.tokens[s.fed..end],
+                            self.arena.only_mut(), s.seq, precision,
+                            &mut self.scratch, &mut s.stats),
+                    }
                 };
                 match res {
                     Ok(()) => {

@@ -50,6 +50,39 @@ pub struct ServerConfig {
     /// bit-identical to plain decode); `None` (the default) keeps the
     /// one-token-per-tick decode.
     pub speculative: Option<SpecConfig>,
+    /// Tensor-parallel worker shards (`--shards N`).  1 (the default)
+    /// serves on the pre-PR single-arena path; N > 1 partitions
+    /// attention heads / FFN channels / KV pages across N in-process
+    /// shards behind the `Communicator` abstraction.  Must satisfy
+    /// `1 <= shards <= n_kv_heads`.  Greedy outputs are bit-identical
+    /// for every shard count.
+    pub shards: usize,
+    /// Runtime override for the LUT-GEMM fan-out threshold
+    /// (`MOBIQ_PARALLEL_MIN_DOUT`); `None` keeps the env var or the
+    /// compiled-in default.  Moves dispatch only, never arithmetic.
+    pub parallel_min_dout: Option<usize>,
+    /// Runtime override for the attention fan-out threshold
+    /// (`MOBIQ_ATTN_PARALLEL_MIN_WORK`).
+    pub attn_parallel_min_work: Option<usize>,
+    /// Runtime override for the elementwise row fan-out threshold
+    /// (`MOBIQ_ELEMENTWISE_PARALLEL_MIN`).
+    pub elementwise_parallel_min: Option<usize>,
+}
+
+/// Apply the config's parallel-gate overrides to the process-wide
+/// tunables; `None` fields leave the gate on its env/default
+/// resolution.  Called once at server start, before the scheduler
+/// touches any kernel.
+pub fn apply_gate_overrides(cfg: &ServerConfig) {
+    if let Some(v) = cfg.parallel_min_dout {
+        crate::mobiq::gemv::PARALLEL_MIN_DOUT_GATE.set(v);
+    }
+    if let Some(v) = cfg.attn_parallel_min_work {
+        crate::model::attention::ATTN_PARALLEL_MIN_WORK_GATE.set(v);
+    }
+    if let Some(v) = cfg.elementwise_parallel_min {
+        crate::model::transformer::ELEMENTWISE_PARALLEL_MIN_GATE.set(v);
+    }
 }
 
 impl Default for ServerConfig {
@@ -65,6 +98,10 @@ impl Default for ServerConfig {
             pressure: PressureConfig::default(),
             initial_pressure: 0.0,
             speculative: None,
+            shards: 1,
+            parallel_min_dout: None,
+            attn_parallel_min_work: None,
+            elementwise_parallel_min: None,
         }
     }
 }
@@ -108,9 +145,19 @@ impl Server {
         if let Some(spec) = cfg.speculative.clone() {
             batcher = batcher.with_speculative(spec);
         }
+        apply_gate_overrides(&cfg);
         let controller = ElasticController::new(cfg.controller.clone());
         let mut sched = Scheduler::new(&model, batcher, controller)
             .with_pressure(cfg.pressure.clone());
+        if cfg.shards > 1 {
+            sched = match sched.with_shards(cfg.shards) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("server: cannot shard model: {e:#}");
+                    return;
+                }
+            };
+        }
         let mut pressure = cfg.initial_pressure;
         loop {
             // drain control/requests without blocking while busy
@@ -195,5 +242,42 @@ impl Drop for Server {
             let _ = self.tx.send(Msg::Shutdown(tx));
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::attention::ATTN_PARALLEL_MIN_WORK_GATE;
+    use crate::model::transformer::ELEMENTWISE_PARALLEL_MIN_GATE;
+
+    /// ServerConfig overrides reach the process-wide gates; `None`
+    /// leaves them untouched.  (The PARALLEL_MIN_DOUT gate is owned by
+    /// gemv's own dispatch test — mutating it here would race.)
+    #[test]
+    fn gate_overrides_apply() {
+        let cfg = ServerConfig {
+            attn_parallel_min_work: Some(123_456),
+            elementwise_parallel_min: Some(654_321),
+            ..ServerConfig::default()
+        };
+        apply_gate_overrides(&cfg);
+        assert_eq!(ATTN_PARALLEL_MIN_WORK_GATE.get(), 123_456);
+        assert_eq!(ELEMENTWISE_PARALLEL_MIN_GATE.get(), 654_321);
+        // None fields must not clobber an existing setting
+        let noop = ServerConfig::default();
+        apply_gate_overrides(&noop);
+        assert_eq!(ATTN_PARALLEL_MIN_WORK_GATE.get(), 123_456);
+        ATTN_PARALLEL_MIN_WORK_GATE.clear();
+        ELEMENTWISE_PARALLEL_MIN_GATE.clear();
+    }
+
+    #[test]
+    fn default_config_is_unsharded() {
+        let cfg = ServerConfig::default();
+        assert_eq!(cfg.shards, 1);
+        assert!(cfg.parallel_min_dout.is_none());
+        assert!(cfg.attn_parallel_min_work.is_none());
+        assert!(cfg.elementwise_parallel_min.is_none());
     }
 }

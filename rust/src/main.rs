@@ -55,6 +55,12 @@ fn print_help() {
          \x20 eval      --backend mobiq|fp|<static> --bits B  perplexity\n\
          \x20 generate  --prompt TEXT --tokens N --bits B\n\
          \x20 serve     --requests N --rate R --pressure phased|calm|high\n\
+         \x20           --shards N   tensor-parallel worker shards\n\
+         \x20                        (default 1; attention heads, FFN\n\
+         \x20                        channels and KV pages partition\n\
+         \x20                        across N in-process shards — greedy\n\
+         \x20                        outputs are bit-identical for every\n\
+         \x20                        N; requires N <= n_kv_heads)\n\
          \x20 pjrt      --variant fp|q2|q4|q6|q8   run AOT module\n\
          \n\
          OPTIONS\n\
@@ -190,9 +196,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         _ => workload::PressureSignal::phased(4000.0),
     };
 
-    println!("serving {} requests on {model_name} (elastic precision)",
-             trace.len());
-    let server = Server::start(model, ServerConfig::default());
+    let shards = args.get_usize("shards", 1);
+    anyhow::ensure!(shards >= 1 && shards <= model.cfg.n_kv_heads,
+                    "--shards must be in 1..={} for this model",
+                    model.cfg.n_kv_heads);
+    println!("serving {} requests on {model_name} (elastic precision, \
+              {shards} shard{})",
+             trace.len(), if shards == 1 { "" } else { "s" });
+    let server = Server::start(model, ServerConfig {
+        shards,
+        ..ServerConfig::default()
+    });
     let t0 = std::time::Instant::now();
     let mut receivers = Vec::new();
     for spec in &trace {

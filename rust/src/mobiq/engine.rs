@@ -7,8 +7,9 @@ use anyhow::Result;
 
 use super::artifact::Bundle;
 use super::bitplane::PackedSlice;
-use super::gemv::{gemm_lut_batch, gemm_lut_batch_parallel, gemv_lut,
-                  gemv_lut_parallel, BatchLut, TokenLut};
+use super::gemv::{gemm_lut_batch, gemm_lut_batch_parallel,
+                  gemm_lut_batch_range, gemv_lut, gemv_lut_parallel,
+                  gemv_lut_range, BatchLut, SharedOut, TokenLut};
 use super::quantizer::GroupParams;
 use super::router::{hard_mask, mask_bits, ratio_for_target_bits,
                     RouterMlp, ThresholdTable};
@@ -228,6 +229,64 @@ impl MobiqLinear {
         total_bits
     }
 
+    /// Column-sharded token forward for the tensor-parallel path:
+    /// route on the **full** input (routing is replicated — every shard
+    /// runs the same router on the same x and derives the same mask, so
+    /// no cross-shard precision coordination is needed), then compute
+    /// only output channels `o0..o1` into the compact `out`
+    /// (len o1-o0).  Serial kernel — the shard lanes are the
+    /// parallelism.  Per channel the accumulation order matches
+    /// [`MobiqLinear::forward_token`] exactly (bit-identical
+    /// reassembly).  Returns effective bits.
+    pub fn forward_token_range(&self, x: &[f32], precision: Precision,
+                               scratch: &mut Scratch, o0: usize,
+                               o1: usize, out: &mut [f32]) -> usize {
+        let bits = self.route(x, precision, scratch);
+        let x_eff: &[f32] = if let Some(ab) = self.act_bits {
+            quantize_activation(x, ab, &mut scratch.xq[..x.len()]);
+            &scratch.xq[..x.len()]
+        } else {
+            x
+        };
+        scratch.lut.build(x_eff, self.base.group_size);
+        gemv_lut_range(&self.slices, &self.base, &scratch.lut,
+                       &scratch.mask, o0, o1, out);
+        bits
+    }
+
+    /// Column-sharded batched forward: per-token routing and LUT builds
+    /// exactly as [`MobiqLinear::forward_batch`] (replicated per shard;
+    /// `scratch.batch.bits` is filled identically on every shard), then
+    /// the weight-stationary kernel over channels `o0..o1` only,
+    /// written at full `d_out` stride into the shared buffer.  Callers
+    /// guarantee disjoint column ranges across concurrent lanes.
+    /// Returns summed effective bits.
+    pub fn forward_batch_range(&self, xs: &[f32], precision: Precision,
+                               scratch: &mut Scratch, o0: usize,
+                               o1: usize, out: &SharedOut) -> usize {
+        let t = xs.len() / self.d_in;
+        scratch.batch.ensure_tokens(t);
+        scratch.batch.bits.clear();
+        let mut total_bits = 0usize;
+        for i in 0..t {
+            let x = &xs[i * self.d_in..(i + 1) * self.d_in];
+            let bits = self.route(x, precision, scratch);
+            total_bits += bits;
+            scratch.batch.bits.push(bits);
+            scratch.batch.set_mask(i, &scratch.mask);
+            let x_eff: &[f32] = if let Some(ab) = self.act_bits {
+                quantize_activation(x, ab, &mut scratch.xq[..x.len()]);
+                &scratch.xq[..x.len()]
+            } else {
+                x
+            };
+            scratch.batch.build_token(i, x_eff, self.base.group_size);
+        }
+        gemm_lut_batch_range(&self.slices, &self.base, &scratch.batch, t,
+                             o0, o1, out);
+        total_bits
+    }
+
     /// Packed weight bytes actually loaded for a mask (traffic model).
     pub fn bytes_for_mask(&self, mask: &[bool]) -> usize {
         mask.iter().zip(&self.slices)
@@ -370,6 +429,45 @@ mod tests {
             }
         }
         assert_eq!(bits_b, bits_s);
+    }
+
+    #[test]
+    fn range_forward_matches_full_bitwise() {
+        // shard entry points: stitched column ranges must be bit-equal
+        // to the full serial forwards, with identical routing records
+        let mut rng = Pcg::new(9);
+        let lin = synth_linear(&mut rng, 64, 24);
+        let mut sc = Scratch::new(64, 32, 8, 4);
+        let prec = Precision::elastic(4.0);
+        let x = rng.normal_vec(64, 1.0);
+        let mut full = vec![0f32; 24];
+        let bits_full = lin.forward_token(&x, prec, &mut sc, &mut full);
+        let mut stitched = vec![0f32; 24];
+        let mut bits_r = Vec::new();
+        for w in [0usize, 9, 24].windows(2) {
+            bits_r.push(lin.forward_token_range(
+                &x, prec, &mut sc, w[0], w[1],
+                &mut stitched[w[0]..w[1]]));
+        }
+        assert_eq!(full, stitched);
+        assert!(bits_r.iter().all(|&b| b == bits_full),
+                "routing must be identical on every shard");
+
+        let t = 5;
+        let xs = rng.normal_vec(64 * t, 1.0);
+        let mut bfull = vec![0f32; 24 * t];
+        let bits_b = lin.forward_batch(&xs, prec, &mut sc, &mut bfull);
+        let rec_full = sc.batch.bits.clone();
+        let mut bst = vec![0f32; 24 * t];
+        let optr = SharedOut(bst.as_mut_ptr());
+        for w in [0usize, 7, 24].windows(2) {
+            let bits = lin.forward_batch_range(&xs, prec, &mut sc, w[0],
+                                               w[1], &optr);
+            assert_eq!(bits, bits_b);
+            assert_eq!(sc.batch.bits, rec_full,
+                       "per-token bits record must replicate");
+        }
+        assert_eq!(bfull, bst);
     }
 
     #[test]

@@ -21,12 +21,13 @@
 use super::bitplane::PackedSlice;
 use super::quantizer::{dequantize, GroupParams};
 use crate::util::threadpool::{SharedMut, ThreadPool};
+use crate::util::tunable::TunableGate;
 
 /// Raw output pointer so workers (and the batched kernel's per-token
-/// writebacks) can write disjoint cells of one output buffer.
-/// Soundness argument at each use site: every worker/group owns a
-/// disjoint (token, o) index set.
-type SharedOut = SharedMut<f32>;
+/// writebacks, and the tensor-parallel shard lanes) can write disjoint
+/// cells of one output buffer.  Soundness argument at each use site:
+/// every worker/group/shard owns a disjoint (token, o) index set.
+pub type SharedOut = SharedMut<f32>;
 
 /// Per-token scratch: byte-chunk LUTs + group sums.  Reused across calls
 /// to keep the decode loop allocation-free.
@@ -163,6 +164,15 @@ pub fn gemv_lut(slices: &[PackedSlice], base: &GroupParams, lut: &TokenLut,
 /// contiguous channels for the plane stream to amortize.
 pub const PARALLEL_MIN_DOUT: usize = 128;
 
+/// Runtime-overridable view of [`PARALLEL_MIN_DOUT`] (satellite of the
+/// sharding PR): `MOBIQ_PARALLEL_MIN_DOUT` in the environment or
+/// `ServerConfig.parallel_min_dout` moves the gate without a rebuild so
+/// the first cargo-equipped session can tune it from measured
+/// `perf_pool` dispatch latency.  Only the serial/parallel dispatch
+/// decision moves; serial and pooled kernels are pinned bit-identical.
+pub static PARALLEL_MIN_DOUT_GATE: TunableGate =
+    TunableGate::new("MOBIQ_PARALLEL_MIN_DOUT", PARALLEL_MIN_DOUT);
+
 /// `gemv_lut` parallelised over contiguous d_out chunks on the
 /// persistent fork-join pool.  Falls back to the serial kernel for
 /// size-1 pools or small layers where even the cheap dispatch
@@ -172,7 +182,7 @@ pub fn gemv_lut_parallel(slices: &[PackedSlice], base: &GroupParams,
                          pool: &ThreadPool, out: &mut [f32]) {
     let d_out = base.d_out;
     debug_assert_eq!(out.len(), d_out);
-    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT {
+    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT_GATE.get() {
         return gemv_lut(slices, base, lut, active, out);
     }
     let optr = SharedOut(out.as_mut_ptr());
@@ -189,10 +199,15 @@ pub fn gemv_lut_parallel(slices: &[PackedSlice], base: &GroupParams,
 
 /// Output-channel range core of [`gemv_lut`]: computes channels
 /// `o0..o1` into `out` (len o1-o0).  The parallel wrappers partition
-/// d_out across workers with this.
-fn gemv_lut_range(slices: &[PackedSlice], base: &GroupParams,
-                  lut: &TokenLut, active: &[bool], o0: usize, o1: usize,
-                  out: &mut [f32]) {
+/// d_out across workers with this, and the tensor-parallel shard path
+/// uses it directly as the column-sharded per-token entry point: each
+/// output channel is accumulated entirely by one caller in the exact
+/// order of the full kernel, so a column partition is bit-identical to
+/// the unsharded GEMV for any shard count (already pinned by the
+/// parallel-parity suite).
+pub fn gemv_lut_range(slices: &[PackedSlice], base: &GroupParams,
+                      lut: &TokenLut, active: &[bool], o0: usize, o1: usize,
+                      out: &mut [f32]) {
     let d_out = base.d_out;
     let gs = base.group_size;
     let n_groups = base.n_groups;
@@ -496,6 +511,81 @@ pub fn matvec(w: &[f32], x: &[f32], out: &mut [f32], d_in: usize,
     }
 }
 
+/// Column range of [`matvec`]: output channels `o0..o1` into the
+/// compact `out` (len o1-o0).  Each channel accumulates over rows in
+/// the same order as the full kernel (including the zero-activation
+/// skip, which also preserves ±0.0 signs), so a column partition is
+/// bit-identical to the unsharded GEMV — the dense-backend analogue of
+/// [`gemv_lut_range`] for the tensor-parallel shard path.
+pub fn matvec_range(w: &[f32], x: &[f32], d_in: usize, d_out: usize,
+                    o0: usize, o1: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), o1 - o0);
+    out.fill(0.0);
+    for (row, &xv) in x.iter().enumerate().take(d_in) {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[row * d_out + o0..row * d_out + o1];
+        for (ov, wv) in out.iter_mut().zip(wrow) {
+            *ov += xv * wv;
+        }
+    }
+}
+
+/// Row-sharded (input-range) LUT-GEMM entry point: the partial
+/// contribution of activation groups `g0..g1` to **all** `d_out`
+/// channels.  Summing the partials of a disjoint group partition over
+/// shards — e.g. with [`Communicator::all_reduce_sum`] — recovers the
+/// full GEMV up to f32 reassociation (the per-channel sum is split at
+/// group boundaries, so the result matches to ~1e-6 relative, not
+/// bit-exactly; see `row_partials_sum_to_full`).  The exact sharded
+/// transformer path therefore uses the column-range entries above; this
+/// one exists for backends whose cost model favours row sharding
+/// (smaller per-shard activation slices, one all-reduce join) and
+/// accepts the reassociation.
+///
+/// [`Communicator::all_reduce_sum`]: crate::util::comm::Communicator::all_reduce_sum
+pub fn gemv_lut_row_partial(slices: &[PackedSlice], base: &GroupParams,
+                            lut: &TokenLut, active: &[bool], g0: usize,
+                            g1: usize, out: &mut [f32]) {
+    let d_out = base.d_out;
+    let gs = base.group_size;
+    debug_assert_eq!(out.len(), d_out);
+    debug_assert!(active[0], "slice 0 is the shared expert");
+    debug_assert!(g1 <= base.n_groups);
+    let mut resid_c = 0f32;
+    for (e, &a) in active.iter().enumerate().skip(1) {
+        if a {
+            resid_c += slice_weight(e, base.bits)
+                * ((1u32 << (base.bits - 1)) as f32 - 0.5);
+        }
+    }
+    for o in 0..d_out {
+        let mut acc = 0f32;
+        for g in g0..g1 {
+            let mut a = 0f32;
+            for (e, &is_active) in active.iter().enumerate() {
+                if !is_active {
+                    continue;
+                }
+                let sl = &slices[e];
+                let mut qdot = 0f32;
+                let mut mult = 1f32;
+                for p in 0..sl.slice_bits {
+                    qdot += mult
+                        * lut.plane_group_sum(sl.plane(p, o), g, gs);
+                    mult *= 2.0;
+                }
+                a += slice_weight(e, base.bits) * qdot;
+            }
+            let (s1, z1) = base.at(g, o);
+            let c = (z1 - 0.5 + resid_c) * lut.group_sums[g];
+            acc += s1 * (a - c);
+        }
+        out[o] = acc;
+    }
+}
+
 /// Group tokens by identical slice masks — §4.3 token permutation.  The
 /// returned permutation makes same-precision tokens contiguous so the
 /// batched path streams each slice's planes once per token group.
@@ -601,7 +691,7 @@ pub fn gemm_lut_batch_parallel(slices: &[PackedSlice],
                                out: &mut [f32]) {
     let d_out = base.d_out;
     debug_assert_eq!(out.len(), t * d_out);
-    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT {
+    if pool.size() <= 1 || d_out < PARALLEL_MIN_DOUT_GATE.get() {
         return gemm_lut_batch(slices, base, batch, t, out);
     }
     if t == 0 {
@@ -615,6 +705,26 @@ pub fn gemm_lut_batch_parallel(slices: &[PackedSlice],
             gemm_lut_group(slices, base, batch, g, o0, o1, &optr);
         }
     });
+}
+
+/// Column-sharded batched entry point for the tensor-parallel path:
+/// every mask group of tokens `0..t` resolved over output channels
+/// `o0..o1` only, written at full `d_out` stride into the shared
+/// buffer.  Per output channel the accumulation order is exactly that
+/// of [`gemm_lut_batch`] (each channel is owned end-to-end by one
+/// caller), so N shards covering disjoint column ranges reproduce the
+/// unsharded batch bit-for-bit.  Callers guarantee disjoint (token, o)
+/// cell sets across concurrent invocations.
+pub fn gemm_lut_batch_range(slices: &[PackedSlice], base: &GroupParams,
+                            batch: &BatchLut, t: usize, o0: usize,
+                            o1: usize, out: &SharedOut) {
+    if t == 0 || o0 == o1 {
+        return;
+    }
+    let groups = mask_groups(&batch.masks[..t]);
+    for g in &groups {
+        gemm_lut_group(slices, base, batch, g, o0, o1, out);
+    }
 }
 
 /// Weight-stationary core over one same-mask token group and one
@@ -1030,6 +1140,121 @@ mod tests {
         let pool = ThreadPool::new(4);
         gemv_lut_parallel(&slices, &base, &lut, &active, &pool, &mut par);
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn column_ranges_match_full_kernels() {
+        // the shard entry points: disjoint column ranges must reassemble
+        // the full per-token, batched, and dense outputs bit-for-bit,
+        // including ragged splits that don't divide d_out
+        property(33, 6, |rng, _| {
+            let (d_in, d_out, gs) = (96, 24, 32);
+            let (slices, base) = setup(rng, d_in, d_out, gs);
+            let x = rng.normal_vec(d_in, 1.0);
+            let active = vec![true, rng.bool(0.5), true, rng.bool(0.5)];
+            let mut lut = TokenLut::new(d_in, gs);
+            lut.build(&x, gs);
+            let mut full = vec![0f32; d_out];
+            gemv_lut(&slices, &base, &lut, &active, &mut full);
+            for cuts in [vec![0, 24], vec![0, 7, 24], vec![0, 5, 16, 24]] {
+                let mut stitched = vec![0f32; d_out];
+                for w in cuts.windows(2) {
+                    gemv_lut_range(&slices, &base, &lut, &active, w[0],
+                                   w[1], &mut stitched[w[0]..w[1]]);
+                }
+                assert_eq!(full, stitched, "cuts {cuts:?}");
+            }
+
+            // batched entry: strided writes into one shared buffer
+            let t = 1 + rng.below(5);
+            let xs = rng.normal_vec(d_in * t, 1.0);
+            let batch = setup_batch(rng, d_in, gs, t, &xs);
+            let mut bfull = vec![0f32; t * d_out];
+            gemm_lut_batch(&slices, &base, &batch, t, &mut bfull);
+            let mut bst = vec![0f32; t * d_out];
+            let optr = SharedOut(bst.as_mut_ptr());
+            for w in [0usize, 9, 24].windows(2) {
+                gemm_lut_batch_range(&slices, &base, &batch, t, w[0],
+                                     w[1], &optr);
+            }
+            assert_eq!(bfull, bst);
+
+            // dense entry
+            let w = rng.normal_vec(d_in * d_out, 0.2);
+            let mut dfull = vec![0f32; d_out];
+            matvec(&w, &x, &mut dfull, d_in, d_out);
+            let mut dst = vec![0f32; d_out];
+            for c in [0usize, 11, 24].windows(2) {
+                matvec_range(&w, &x, d_in, d_out, c[0], c[1],
+                             &mut dst[c[0]..c[1]]);
+            }
+            assert_eq!(dfull, dst);
+        });
+    }
+
+    #[test]
+    fn row_partials_sum_to_full() {
+        // the row-sharded entry composes by summation (all_reduce
+        // semantics): approximate, not bit-exact — the split reassociates
+        // each channel's f32 sum at the group boundary
+        let mut rng = Pcg::new(34);
+        let (d_in, d_out, gs) = (128, 16, 32);
+        let (slices, base) = setup(&mut rng, d_in, d_out, gs);
+        let x = rng.normal_vec(d_in, 1.0);
+        let active = vec![true, true, false, true];
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let mut full = vec![0f32; d_out];
+        gemv_lut_simple(&slices, &base, &lut, &active, &mut full);
+        let n_groups = base.n_groups;
+        let mut sum = vec![0f32; d_out];
+        let mut part = vec![0f32; d_out];
+        for w in [0, n_groups / 3, n_groups / 2 + 1, n_groups].windows(2) {
+            gemv_lut_row_partial(&slices, &base, &lut, &active, w[0],
+                                 w[1], &mut part);
+            for (s, p) in sum.iter_mut().zip(&part) {
+                *s += p;
+            }
+        }
+        for (a, b) in sum.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-4,
+                    "row partials {a} vs full {b}");
+        }
+        // degenerate single shard covers every group: exactly the
+        // simple kernel's order, so bit-equal
+        gemv_lut_row_partial(&slices, &base, &lut, &active, 0, n_groups,
+                             &mut part);
+        assert_eq!(part, full);
+    }
+
+    #[test]
+    fn gate_override_moves_dispatch_not_bits() {
+        // forcing the gate to 0 (always parallel) and usize::MAX (never)
+        // must not change one output bit — the gate only moves dispatch.
+        // Safe against concurrent suites for the same reason.
+        let mut rng = Pcg::new(35);
+        let (d_in, d_out, gs) = (64, 96, 32); // below the default gate
+        let (slices, base) = setup(&mut rng, d_in, d_out, gs);
+        let x = rng.normal_vec(d_in, 1.0);
+        let active = vec![true, true, true, false];
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let mut serial = vec![0f32; d_out];
+        gemv_lut(&slices, &base, &lut, &active, &mut serial);
+        let pool = ThreadPool::new(3);
+        let mut forced = vec![0f32; d_out];
+        PARALLEL_MIN_DOUT_GATE.set(0);
+        gemv_lut_parallel(&slices, &base, &lut, &active, &pool,
+                          &mut forced);
+        assert_eq!(serial, forced, "forced-parallel dispatch");
+        PARALLEL_MIN_DOUT_GATE.set(usize::MAX);
+        gemv_lut_parallel(&slices, &base, &lut, &active, &pool,
+                          &mut forced);
+        assert_eq!(serial, forced, "forced-serial dispatch");
+        PARALLEL_MIN_DOUT_GATE.clear();
+        if std::env::var(PARALLEL_MIN_DOUT_GATE.env_var()).is_err() {
+            assert_eq!(PARALLEL_MIN_DOUT_GATE.get(), PARALLEL_MIN_DOUT);
+        }
     }
 
     #[test]

@@ -44,6 +44,7 @@
 use super::kvcache::{u4_code, KvCache, KvRun, KvSource, KV_PAGE};
 use super::weights::ModelConfig;
 use crate::util::threadpool::{SharedMut, ThreadPool};
+use crate::util::tunable::TunableGate;
 
 /// Key/value positions per tile.  32 positions x head_dim 64 x 4 B =
 /// 8 KB of K plus 8 KB of V per tile — comfortably L1-resident while a
@@ -69,6 +70,15 @@ const _: () = assert!(KV_PAGE % ATTN_TILE == 0,
 /// ctx >= 256 at head_dim 64 (was >= 2048) — which is also what lets
 /// the cross-slot decode dispatch engage at serving batch sizes.
 pub const ATTN_PARALLEL_MIN_WORK: usize = 1 << 14;
+
+/// Runtime-overridable view of [`ATTN_PARALLEL_MIN_WORK`]:
+/// `MOBIQ_ATTN_PARALLEL_MIN_WORK` or `ServerConfig.attn_parallel_min_work`
+/// moves the dispatch threshold without a rebuild (tuning knob for the
+/// first cargo-equipped session).  Dispatch only — per-head math is
+/// identical either way.
+pub static ATTN_PARALLEL_MIN_WORK_GATE: TunableGate =
+    TunableGate::new("MOBIQ_ATTN_PARALLEL_MIN_WORK",
+                     ATTN_PARALLEL_MIN_WORK);
 
 // ---------------------------------------------------------------------------
 // RoPE cache
@@ -303,13 +313,14 @@ pub fn attention_block<S: KvSource>(cfg: &ModelConfig, q: &[f32],
     scratch.ensure(n_heads, t, hd);
 
     let work = t * (pos0 + t) * hd;
-    let parallel = n_heads > 1 && work >= ATTN_PARALLEL_MIN_WORK
+    let parallel = n_heads > 1
+        && work >= ATTN_PARALLEL_MIN_WORK_GATE.get()
         && pool.is_some_and(|p| p.size() > 1);
     let cptr = SharedCtx(ctx.as_mut_ptr());
     if !parallel {
         for (h, hs) in scratch.heads[..n_heads].iter_mut().enumerate() {
-            attn_head(q, cache, h, h / rep, hd, d, scale, pos0, t, hs,
-                      &cptr);
+            attn_head(q, d, h * hd, cache, h / rep, hd, d, h * hd,
+                      scale, pos0, t, hs, &cptr);
         }
         return;
     }
@@ -320,10 +331,56 @@ pub fn attention_block<S: KvSource>(cfg: &ModelConfig, q: &[f32],
             // so this worker is the only one touching heads[h] and the
             // h-th ctx spans.
             let hs = unsafe { &mut *hptr.0.add(h) };
-            attn_head(q, cache, h, h / rep, hd, d, scale, pos0, t, hs,
-                      &cptr);
+            attn_head(q, d, h * hd, cache, h / rep, hd, d, h * hd,
+                      scale, pos0, t, hs, &cptr);
         }
     });
+}
+
+/// Head-range-scoped attention for the tensor-parallel shard path: one
+/// shard's heads `h0..h1` of a query block, against that shard's own
+/// KV-arena view.
+///
+/// * `q` — **compact** `(t, (h1-h0) * head_dim)` row-major: the shard's
+///   local wq output (RoPE applied), holding only its own heads'
+///   columns.
+/// * `cache` — the shard's [`KvSource`], holding only kv heads
+///   `kv0..` of the global model; `kv0` maps global kv-head indices to
+///   this local view (`local = global_kv - kv0`).
+/// * `ctx` — the **full-width** shared `(t, n_heads * head_dim)`
+///   buffer; head `h` writes its global `h * head_dim` column span, so
+///   N shards covering disjoint head ranges reassemble exactly the
+///   buffer [`attention_block`] writes.  Callers guarantee disjoint
+///   head ranges across concurrent shard lanes.
+///
+/// Runs serially — the shard lanes themselves are the parallelism.
+/// Per head the math is [`attn_head`] with identical tiling and
+/// accumulation order, so a head partition is bit-identical to the
+/// unsharded kernel for any shard count (the same argument the
+/// `parallel_chunks` head dispatch already relies on).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_block_range<S: KvSource>(cfg: &ModelConfig, q: &[f32],
+                                          cache: &S, pos0: usize,
+                                          t: usize, h0: usize, h1: usize,
+                                          kv0: usize,
+                                          scratch: &mut AttnScratch,
+                                          ctx: &SharedMut<f32>) {
+    if t == 0 || h0 == h1 {
+        return;
+    }
+    let hd = cfg.head_dim();
+    let rep = cfg.n_heads / cfg.n_kv_heads;
+    let d = cfg.n_heads * hd;
+    let lw = (h1 - h0) * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    debug_assert!(q.len() >= t * lw);
+    debug_assert!(cache.len() >= pos0 + t, "block K/V not in cache yet");
+    scratch.ensure(h1 - h0, t, hd);
+    for (k, hs) in scratch.heads[..h1 - h0].iter_mut().enumerate() {
+        let h = h0 + k;
+        attn_head(q, lw, k * hd, cache, h / rep - kv0, hd, d, h * hd,
+                  scale, pos0, t, hs, ctx);
+    }
 }
 
 /// Single-token attention for a whole batch of decode slots in one
@@ -369,7 +426,7 @@ pub fn attention_cross_slots<S: KvSource>(cfg: &ModelConfig, q: &[f32],
     let total_positions: usize = caches.iter().map(|c| c.len()).sum();
     let work = hd * total_positions;
     let parallel = n_slots * n_heads > 1
-        && work >= ATTN_PARALLEL_MIN_WORK
+        && work >= ATTN_PARALLEL_MIN_WORK_GATE.get()
         && pool.is_some_and(|p| p.size() > 1);
     let cptr = SharedCtx(ctx.as_mut_ptr());
     let hptr = SharedHeads(scratch.heads.as_mut_ptr());
@@ -386,8 +443,8 @@ pub fn attention_cross_slots<S: KvSource>(cfg: &ModelConfig, q: &[f32],
             let hs = unsafe { &mut *hptr.0.add(idx) };
             let qrow = &q[slot * d..(slot + 1) * d];
             let crow = SharedCtx(unsafe { cptr.0.add(slot * d) });
-            attn_head(qrow, cache, h, h / rep, hd, d, scale, pos0, 1,
-                      hs, &crow);
+            attn_head(qrow, d, h * hd, cache, h / rep, hd, d, h * hd,
+                      scale, pos0, 1, hs, &crow);
         }
     };
     if !parallel {
@@ -415,11 +472,19 @@ pub fn attention_cross_slots<S: KvSource>(cfg: &ModelConfig, q: &[f32],
 /// `head_dim`-wide accumulate — no scratch dequant buffers, no extra
 /// pass over the cache, and the streamed bytes shrink 4x (i8) / 8x
 /// (i4).
+/// Layout parameters (decoupled so the shard path can feed a compact
+/// per-shard q while writing the full-width shared ctx):
+/// * `qs`/`qcol` — q row stride and this head's column offset within a
+///   q row (`d` / `h*hd` for the unsharded callers).
+/// * `d`/`ccol` — ctx row stride and this head's ctx column offset
+///   (always the global `h*hd` so shards reassemble the full buffer).
+/// * `kvh` — the head's kv index *in the given cache* (callers subtract
+///   the shard's kv base for local arena views).
 #[allow(clippy::too_many_arguments)]
-fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
-                          hd: usize, d: usize, scale: f32, pos0: usize,
-                          t: usize, hs: &mut HeadScratch,
-                          ctx: &SharedCtx) {
+fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
+                          kvh: usize, hd: usize, d: usize, ccol: usize,
+                          scale: f32, pos0: usize, t: usize,
+                          hs: &mut HeadScratch, ctx: &SharedCtx) {
     let HeadScratch { m, l, acc, s } = hs;
     m[..t].fill(f32::NEG_INFINITY);
     l[..t].fill(0.0);
@@ -435,7 +500,7 @@ fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
             // query i sees positions 0..=pos0 + i (limit > p0 always:
             // for i >= i0, pos0 + i + 1 >= p0 + 1)
             let limit = (pos0 + i + 1).min(p1);
-            let qh = &q[i * d + h * hd..i * d + (h + 1) * hd];
+            let qh = &q[i * qs + qcol..i * qs + qcol + hd];
             // scores for the visible part of the tile
             let mut tmax = f32::NEG_INFINITY;
             match cache.k_run(kvh, p0, limit) {
@@ -535,9 +600,10 @@ fn attn_head<S: KvSource>(q: &[f32], cache: &S, h: usize, kvh: usize,
     for i in 0..t {
         let inv = 1.0 / l[i];
         let src = &acc[i * hd..(i + 1) * hd];
-        // SAFETY: span (i, h) is written by head h only; see caller.
+        // SAFETY: the (i, ccol) span is written by this head only; see
+        // caller.
         let dst = unsafe {
-            std::slice::from_raw_parts_mut(ctx.0.add(i * d + h * hd), hd)
+            std::slice::from_raw_parts_mut(ctx.0.add(i * d + ccol), hd)
         };
         for (o, a) in dst.iter_mut().zip(src) {
             *o = a * inv;

@@ -1836,6 +1836,270 @@ impl KvSource for KvLayerView<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-shard arena group
+// ---------------------------------------------------------------------------
+
+/// The tensor-parallel KV store: one [`KvArena`] per shard, each holding
+/// that shard's contiguous kv-head range, all sharing one logical byte
+/// budget.
+///
+/// **Mirroring invariant.**  Every lifecycle operation (alloc, fork,
+/// free, reset, truncate, requant, checkpoint, rollback, append) is
+/// applied to all arenas in the same order, so their page tables evolve
+/// in lockstep: identical handle indices, identical page-slot counts,
+/// identical per-page precisions and refcounts.  Only the *width* of a
+/// page differs (local kv heads x head_dim), and every arena is built
+/// with the same `capacity_pages`, so each shard's budget is exactly
+/// its head fraction of the whole — summed byte queries reproduce the
+/// unsharded arena's numbers bit-for-bit, per-shard occupancy
+/// *fractions* are identical across shards even when the GQA remainder
+/// rule gives them different head counts, and an append that runs out
+/// of pages does so on every shard in the same forward position.
+///
+/// Page-slot counts (`resident_pages`, `seq_pages`, ...) are identical
+/// across mirrored arenas, so those queries report shard 0 rather than
+/// an N-times-inflated sum; byte queries sum across shards.  This keeps
+/// the pressure controller and metrics numerically identical to the
+/// unsharded deployment.
+///
+/// The scheduler holds a `KvShards` regardless of shard count; the
+/// single-shard case exposes the inner arena through
+/// [`KvShards::only_mut`] so the pre-PR model entry points run
+/// unchanged.
+pub struct KvShards {
+    arenas: Vec<KvArena>,
+}
+
+impl KvShards {
+    /// Wrap an already-partitioned arena set (built by
+    /// `model::shard::ShardPlan`); single-element vectors are the
+    /// unsharded case.
+    pub fn new(arenas: Vec<KvArena>) -> KvShards {
+        assert!(!arenas.is_empty(), "at least one arena shard");
+        let a0 = &arenas[0];
+        for a in &arenas[1..] {
+            assert_eq!(a.n_layers, a0.n_layers, "mirrored shape");
+            assert_eq!(a.max_seq, a0.max_seq, "mirrored shape");
+            assert_eq!(a.head_dim, a0.head_dim, "mirrored shape");
+            assert_eq!(a.capacity_pages(), a0.capacity_pages(),
+                       "shards share one page budget");
+        }
+        KvShards { arenas }
+    }
+
+    /// Single-arena convenience (the shards = 1 deployment).
+    pub fn single(arena: KvArena) -> KvShards {
+        KvShards { arenas: vec![arena] }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.arenas.len()
+    }
+
+    pub fn arenas(&self) -> &[KvArena] {
+        &self.arenas
+    }
+
+    /// Mutable arena slice for the shard lanes (each lane takes its own
+    /// element through a `SharedMut` fan-out; disjointness is by shard
+    /// index).
+    pub fn arenas_mut(&mut self) -> &mut [KvArena] {
+        &mut self.arenas
+    }
+
+    /// The unsharded deployment's single arena; panics when sharded —
+    /// call sites dispatch on shard count first.
+    pub fn only_mut(&mut self) -> &mut KvArena {
+        assert_eq!(self.arenas.len(), 1,
+                   "only_mut on a sharded KV store");
+        &mut self.arenas[0]
+    }
+
+    pub fn only(&self) -> &KvArena {
+        assert_eq!(self.arenas.len(), 1,
+                   "only on a sharded KV store");
+        &self.arenas[0]
+    }
+
+    // -- mirrored lifecycle ops ---------------------------------------
+
+    pub fn alloc_seq(&mut self) -> KvHandle {
+        self.alloc_seq_at(KvPrecision::F32)
+    }
+
+    pub fn alloc_seq_at(&mut self, prec: KvPrecision) -> KvHandle {
+        let mut hs = self.arenas.iter_mut()
+            .map(|a| a.alloc_seq_at(prec));
+        let h = hs.next().unwrap();
+        assert!(hs.all(|x| x == h), "mirrored handles diverged");
+        h
+    }
+
+    pub fn fork_prefix(&mut self, src: KvHandle, len: usize)
+                       -> KvHandle {
+        let mut hs = self.arenas.iter_mut()
+            .map(|a| a.fork_prefix(src, len));
+        let h = hs.next().unwrap();
+        assert!(hs.all(|x| x == h), "mirrored handles diverged");
+        h
+    }
+
+    pub fn fork_seq(&mut self, src: KvHandle) -> KvHandle {
+        let mut hs = self.arenas.iter_mut().map(|a| a.fork_seq(src));
+        let h = hs.next().unwrap();
+        assert!(hs.all(|x| x == h), "mirrored handles diverged");
+        h
+    }
+
+    pub fn free_seq(&mut self, h: KvHandle) {
+        for a in &mut self.arenas {
+            a.free_seq(h);
+        }
+    }
+
+    pub fn reset_seq(&mut self, h: KvHandle) {
+        for a in &mut self.arenas {
+            a.reset_seq(h);
+        }
+    }
+
+    pub fn truncate_seq(&mut self, h: KvHandle, len: usize) {
+        for a in &mut self.arenas {
+            a.truncate_seq(h, len);
+        }
+    }
+
+    /// Mirrored tail requant; the returned summary sums the per-shard
+    /// byte/page outcomes (pages convert in lockstep, so `pages` is
+    /// shard 0's count — the unsharded number — while `bytes_freed`
+    /// sums to the unsharded figure).
+    pub fn requant_seq_tail(&mut self, h: KvHandle,
+                            target: KvPrecision) -> RequantSummary {
+        let mut total = RequantSummary::default();
+        for (i, a) in self.arenas.iter_mut().enumerate() {
+            let s = a.requant_seq_tail(h, target);
+            if i == 0 {
+                total.pages = s.pages;
+            } else {
+                debug_assert_eq!(s.pages, total.pages,
+                                 "mirrored requant diverged");
+            }
+            total.bytes_freed += s.bytes_freed;
+        }
+        total
+    }
+
+    /// Per-shard checkpoints, index-aligned with [`KvShards::arenas`].
+    pub fn checkpoint_seq(&self, h: KvHandle) -> Vec<SeqCheckpoint> {
+        self.arenas.iter().map(|a| a.checkpoint_seq(h)).collect()
+    }
+
+    pub fn rollback_seq(&mut self, h: KvHandle, cks: &[SeqCheckpoint]) {
+        assert_eq!(cks.len(), self.arenas.len(),
+                   "one checkpoint per shard");
+        for (a, ck) in self.arenas.iter_mut().zip(cks) {
+            a.rollback_seq(h, ck);
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    pub fn set_fail_plan(&mut self, plan: Option<FailPlan>) {
+        for a in &mut self.arenas {
+            a.set_fail_plan(plan.clone());
+        }
+    }
+
+    #[cfg(feature = "failpoints")]
+    pub fn alloc_attempts(&self) -> u64 {
+        self.arenas[0].alloc_attempts()
+    }
+
+    // -- mirrored reads (shard 0 carries the shared state) ------------
+
+    pub fn seq_len(&self, h: KvHandle) -> usize {
+        self.arenas[0].seq_len(h)
+    }
+
+    pub fn layer_len(&self, h: KvHandle, layer: usize) -> usize {
+        self.arenas[0].layer_len(h, layer)
+    }
+
+    pub fn seq_precision(&self, h: KvHandle) -> KvPrecision {
+        self.arenas[0].seq_precision(h)
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.arenas[0].max_seq()
+    }
+
+    // -- page-slot queries (identical across mirrored shards) ---------
+
+    pub fn capacity_pages(&self) -> usize {
+        self.arenas[0].capacity_pages()
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.arenas[0].resident_pages()
+    }
+
+    pub fn resident_pages_at(&self, prec: KvPrecision) -> usize {
+        self.arenas[0].resident_pages_at(prec)
+    }
+
+    pub fn peak_resident_pages(&self) -> usize {
+        self.arenas[0].peak_resident_pages()
+    }
+
+    pub fn seq_pages(&self, h: KvHandle) -> usize {
+        self.arenas[0].seq_pages(h)
+    }
+
+    pub fn seq_worst_pages(&self, positions: usize) -> usize {
+        self.arenas[0].seq_worst_pages(positions)
+    }
+
+    // -- byte queries (summed across shards == unsharded exactly) -----
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.capacity_bytes()).sum()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.resident_bytes()).sum()
+    }
+
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.peak_resident_bytes()).sum()
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.free_bytes()).sum()
+    }
+
+    pub fn page_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.page_bytes()).sum()
+    }
+
+    pub fn page_bytes_at(&self, prec: KvPrecision) -> usize {
+        self.arenas.iter().map(|a| a.page_bytes_at(prec)).sum()
+    }
+
+    pub fn bytes_saved_vs_f32(&self) -> usize {
+        self.arenas.iter().map(|a| a.bytes_saved_vs_f32()).sum()
+    }
+
+    pub fn seq_bytes(&self, h: KvHandle) -> usize {
+        self.arenas.iter().map(|a| a.seq_bytes(h)).sum()
+    }
+
+    pub fn seq_worst_bytes(&self, positions: usize,
+                           prec: KvPrecision) -> usize {
+        self.arenas.iter()
+            .map(|a| a.seq_worst_bytes(positions, prec)).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2356,6 +2620,114 @@ mod tests {
         for &x in &run.dequant(2) {
             assert!((x - 2.5).abs() <= run.scale());
         }
+    }
+
+    /// Mirrored per-shard arenas vs one unsharded arena: summed byte
+    /// queries match exactly, page-slot queries match shard 0, and the
+    /// per-shard occupancy fractions are identical even under a GQA
+    /// remainder split (2+1 heads) — the invariant the shard-aware
+    /// pressure ladder rests on.
+    #[test]
+    fn shards_sum_to_unsharded_budget() {
+        let (hd, cap, max) = (2usize, 12usize, 4 * KV_PAGE);
+        let mut full = KvArena::new(1, max, 3, hd, cap);
+        let mut shards = KvShards::new(vec![
+            KvArena::new(1, max, 2, hd, cap), // heads 0..2 (remainder)
+            KvArena::new(1, max, 1, hd, cap), // head 2
+        ]);
+        let rope = ident_rope();
+        let hf = full.alloc_seq_at(KvPrecision::Int8);
+        let hs = shards.alloc_seq_at(KvPrecision::Int8);
+        assert_eq!(hf, hs, "mirrored handle allocation");
+        let t = KV_PAGE + 9;
+        // head-major row blocks: full block is 3 heads wide, shard
+        // blocks carry each shard's own head columns
+        let kf: Vec<f32> = (0..t * 3 * hd).map(|i| i as f32 * 0.01)
+            .collect();
+        let vf: Vec<f32> = kf.iter().map(|x| x + 0.5).collect();
+        full.append_kv_block(hf, 0, &rope, &kf, &vf, t).unwrap();
+        for (s, (h0, h1)) in [(0usize, (0usize, 2usize)), (1, (2, 3))] {
+            let w = (h1 - h0) * hd;
+            let mut k = vec![0f32; t * w];
+            let mut v = vec![0f32; t * w];
+            for i in 0..t {
+                let lo = i * 3 * hd + h0 * hd;
+                k[i * w..(i + 1) * w]
+                    .copy_from_slice(&kf[lo..lo + w]);
+                v[i * w..(i + 1) * w]
+                    .copy_from_slice(&vf[lo..lo + w]);
+            }
+            shards.arenas_mut()[s]
+                .append_kv_block(hs, 0, &rope, &k, &v, t).unwrap();
+        }
+        assert_eq!(shards.seq_len(hs), full.seq_len(hf));
+        assert_eq!(shards.resident_pages(), full.resident_pages());
+        assert_eq!(shards.seq_pages(hs), full.seq_pages(hf));
+        assert_eq!(shards.capacity_bytes(), full.capacity_bytes());
+        assert_eq!(shards.resident_bytes(), full.resident_bytes());
+        assert_eq!(shards.seq_bytes(hs), full.seq_bytes(hf));
+        assert_eq!(shards.page_bytes(), full.page_bytes());
+        assert_eq!(shards.bytes_saved_vs_f32(),
+                   full.bytes_saved_vs_f32());
+        // identical occupancy fraction on every shard, despite the
+        // remainder head split
+        let occ_full = full.resident_bytes() as f64
+            / full.capacity_bytes() as f64;
+        for a in shards.arenas() {
+            let occ = a.resident_bytes() as f64
+                / a.capacity_bytes() as f64;
+            assert!((occ - occ_full).abs() < 1e-12,
+                    "per-shard occupancy {occ} vs unsharded {occ_full}");
+        }
+        // quantized codes/scales per corresponding head are mirrored:
+        // shard 1's head 0 IS the full arena's head 2
+        let vfull = full.layer(hf, 0);
+        let vsh = shards.arenas()[1].layer(hs, 0);
+        let rf = vfull.k_run(2, 0, KV_PAGE);
+        let rs = vsh.k_run(0, 0, KV_PAGE);
+        assert_eq!(rf.scale(), rs.scale());
+        assert_eq!(rf.dequant(hd), rs.dequant(hd));
+        // mirrored requant: summed bytes_freed matches the unsharded
+        // pass, page count stays the slot count
+        let sf = full.requant_seq_tail(hf, KvPrecision::Int4);
+        let ss = shards.requant_seq_tail(hs, KvPrecision::Int4);
+        assert_eq!(ss.pages, sf.pages);
+        assert_eq!(ss.bytes_freed, sf.bytes_freed);
+        // mirrored checkpoint → append → rollback keeps lockstep
+        let ckf = full.checkpoint_seq(hf);
+        let cks = shards.checkpoint_seq(hs);
+        assert_eq!(cks.len(), 2);
+        assert_eq!(cks[0].len(), ckf.len());
+        let t2 = 3;
+        let k2: Vec<f32> = (0..t2 * 3 * hd)
+            .map(|i| 0.3 - i as f32 * 0.02).collect();
+        let v2: Vec<f32> = k2.iter().map(|x| x - 0.25).collect();
+        full.append_kv_block(hf, 0, &rope, &k2, &v2, t2).unwrap();
+        for (s, (h0, h1)) in [(0usize, (0usize, 2usize)), (1, (2, 3))] {
+            let w = (h1 - h0) * hd;
+            let mut k = vec![0f32; t2 * w];
+            let mut v = vec![0f32; t2 * w];
+            for i in 0..t2 {
+                let lo = i * 3 * hd + h0 * hd;
+                k[i * w..(i + 1) * w]
+                    .copy_from_slice(&k2[lo..lo + w]);
+                v[i * w..(i + 1) * w]
+                    .copy_from_slice(&v2[lo..lo + w]);
+            }
+            shards.arenas_mut()[s]
+                .append_kv_block(hs, 0, &rope, &k, &v, t2).unwrap();
+        }
+        full.rollback_seq(hf, &ckf);
+        shards.rollback_seq(hs, &cks);
+        assert_eq!(shards.seq_len(hs), full.seq_len(hf));
+        assert_eq!(shards.resident_bytes(), full.resident_bytes());
+        // mirrored truncate stays in lockstep
+        shards.truncate_seq(hs, KV_PAGE);
+        full.truncate_seq(hf, KV_PAGE);
+        assert_eq!(shards.seq_len(hs), full.seq_len(hf));
+        assert_eq!(shards.resident_bytes(), full.resident_bytes());
+        shards.free_seq(hs);
+        assert_eq!(shards.resident_bytes(), 0);
     }
 
     #[cfg(feature = "failpoints")]

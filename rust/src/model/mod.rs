@@ -6,12 +6,14 @@
 
 pub mod attention;
 pub mod kvcache;
+pub mod shard;
 pub mod speculative;
 pub mod transformer;
 pub mod weights;
 
-pub use kvcache::{KvArena, KvHandle, KvPrecision, KvRun, KvSource,
-                  SeqCheckpoint, KV_PAGE};
+pub use kvcache::{KvArena, KvHandle, KvPrecision, KvRun, KvShards,
+                  KvSource, SeqCheckpoint, KV_PAGE};
+pub use shard::{shard_range, ShardPlan, ShardRuntime};
 pub use speculative::{SpecCapture, SpecConfig, SpecRound, SpecState};
 pub use transformer::{DecodeStats, Model};
 pub use weights::{LinearBackend, ModelConfig};

@@ -1,0 +1,1486 @@
+//! Tensor-parallel sharded execution behind the [`Communicator`]
+//! abstraction (`util/comm.rs`).
+//!
+//! [`ShardRuntime`] partitions the model across N in-process worker
+//! shards: each shard owns a contiguous slice of attention heads (whole
+//! GQA groups), FFN channels, d_model output channels and vocab rows,
+//! plus its own per-shard KV arena (see [`KvShards`]) holding only its
+//! kv heads' pages.  Shards run the full layer stack concurrently and
+//! meet at **exactly four barriers per layer** — around the two joins
+//! the issue names (the o-proj input/output and the down-proj
+//! input/output) — then reassemble logits column-wise at the tail.
+//!
+//! ## Exactness: column-sharded joins, not reductions
+//!
+//! The textbook Megatron split row-shards wo/w_down and joins with an
+//! `all_reduce_sum`.  That join re-associates f32 addition, so the
+//! result depends on the shard count — it can never be bit-identical
+//! to the serial kernel, which this codebase's parity contract (and
+//! the speculative accept loop, and the golden vectors) requires.  The
+//! sharded path therefore **column-shards every linear by output
+//! channels**: each output element is produced whole by exactly one
+//! shard running the serial per-element kernel over the full (locally
+//! recomputed, bit-equal) input, and the joins are *gather barriers*
+//! publishing disjoint column spans of a shared buffer.  Stitching
+//! column ranges changes which elements a shard computes, never how
+//! any element is computed — so N-shard output is bit-identical to
+//! 1-shard output, which is bit-identical to the unsharded path
+//! (pinned by `tests/shard_parity.rs`).  The reduction-based
+//! row-partial entry points ([`crate::mobiq::gemv::gemv_lut_row_partial`]
+//! + [`Communicator::all_reduce_sum`]) remain available for backends
+//! where exactness is scoped per device; EXPERIMENTS.md §Sharding
+//! records the deviation and the cost model.
+//!
+//! Replicated stages (embedding row, rmsnorm, residual adds) run the
+//! identical f32 ops in the identical order on every shard, so every
+//! lane's residual stream stays bit-equal without communication; the
+//! MoBiRoute router sees the same replicated activations, so every
+//! shard routes every token to the same slice count — **bit-plane
+//! weights need no cross-shard precision coordination** (shard 0's
+//! routing log is replayed into the caller's [`DecodeStats`]).
+//!
+//! ## Degradation semantics under shards
+//!
+//! Mirrored per-shard arenas are built with the *same page-slot
+//! budget*, so page claims — and therefore `OutOfPages` — fire at the
+//! same append on every shard.  A lane that fails an append goes
+//! *dead*: it skips its remaining compute but still arrives at every
+//! remaining barrier (the per-layer barrier count is fixed, so no lane
+//! can deadlock), and the first error by rank order is returned after
+//! the dispatch drains.  Callers repair through the mirrored
+//! [`KvShards`] ops exactly as the unsharded ladder does.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::attention::{attention_block_range, AttnScratch, RopeCache};
+use super::kvcache::{KvArena, KvHandle, KvPrecision, KvShards,
+                     OutOfPages, KV_PAGE};
+use super::speculative::{SpecCapture, SpecConfig, SpecRound, SpecState};
+use super::transformer::{argmax, record_block, record_slots, rmsnorm,
+                         silu, DecodeSlot, DecodeStats, Model,
+                         MAX_PREFILL_BLOCK};
+use super::weights::{LinearBackend, ModelConfig, LINEAR_NAMES};
+use crate::mobiq::engine::{Precision, Scratch};
+use crate::mobiq::gemv::SharedOut;
+use crate::util::comm::{Communicator, InProcComm, InProcGroup};
+use crate::util::threadpool::{SharedMut, ThreadPool};
+
+// ---------------------------------------------------------------------------
+// Partition plan
+// ---------------------------------------------------------------------------
+
+/// Contiguous range of shard `s` when `total` items are split over `n`
+/// shards: every shard gets `total / n`, and the first `total % n`
+/// shards carry one extra item — the **remainder rule** every
+/// partition in the plan uses (kv heads, FFN channels, d_model
+/// columns, vocab rows).  Ranges are contiguous, disjoint, and cover
+/// `0..total` for any `n >= 1`.
+pub fn shard_range(total: usize, n: usize, s: usize) -> (usize, usize) {
+    debug_assert!(s < n);
+    let base = total / n;
+    let rem = total % n;
+    let lo = s * base + s.min(rem);
+    let hi = lo + base + usize::from(s < rem);
+    (lo, hi)
+}
+
+/// Static partition map of one model shape over `n_shards` shards.
+/// Attention is split at **kv-head granularity** (whole GQA groups:
+/// shard `s` owns kv heads `kv[s]` and therefore query heads
+/// `heads[s] = (kv.0 * rep, kv.1 * rep)`), so a query head and the kv
+/// head it attends over always live on the same shard.  With
+/// `n_kv_heads % n_shards != 0` the remainder rule above applies —
+/// e.g. 3 kv heads over 2 shards is `[(0,2), (2,3)]`, and per-shard
+/// byte budgets stay proportional while page-slot counts stay mirrored
+/// (see [`KvShards`]).  FFN / d_model / vocab columns split
+/// independently with the same rule.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub n_shards: usize,
+    /// Per-shard kv-head range.
+    pub kv: Vec<(usize, usize)>,
+    /// Per-shard query-head range (`kv` scaled by the GQA group size).
+    pub heads: Vec<(usize, usize)>,
+    /// Per-shard output-column range of wo / w_down.
+    pub d_model: Vec<(usize, usize)>,
+    /// Per-shard output-channel range of w_gate / w_up (and the SwiGLU
+    /// combine feeding w_down's shared input).
+    pub d_ff: Vec<(usize, usize)>,
+    /// Per-shard lm_head row range.
+    pub vocab: Vec<(usize, usize)>,
+}
+
+impl ShardPlan {
+    pub fn new(cfg: &ModelConfig, n_shards: usize) -> Result<ShardPlan> {
+        anyhow::ensure!(
+            n_shards >= 1 && n_shards <= cfg.n_kv_heads,
+            "shard count must be in 1..={} (one whole kv head per \
+             shard minimum), got {}",
+            cfg.n_kv_heads, n_shards);
+        let rep = cfg.n_heads / cfg.n_kv_heads;
+        let kv: Vec<_> = (0..n_shards)
+            .map(|s| shard_range(cfg.n_kv_heads, n_shards, s))
+            .collect();
+        let heads = kv.iter().map(|&(a, b)| (a * rep, b * rep)).collect();
+        Ok(ShardPlan {
+            n_shards,
+            heads,
+            kv,
+            d_model: (0..n_shards)
+                .map(|s| shard_range(cfg.d_model, n_shards, s))
+                .collect(),
+            d_ff: (0..n_shards)
+                .map(|s| shard_range(cfg.d_ff, n_shards, s))
+                .collect(),
+            vocab: (0..n_shards)
+                .map(|s| shard_range(cfg.vocab_size, n_shards, s))
+                .collect(),
+        })
+    }
+
+    /// Per-token f32 gather volume of one layer's two joins: join A
+    /// publishes the attention context (wo input) and the wo output
+    /// columns, join B the SwiGLU output (w_down input) and the w_down
+    /// output columns.  The issue's canonical "2 joins x d_model x
+    /// tokens" counts the two published d_model outputs; the inputs
+    /// add `d_model + d_ff` because the gather join also publishes the
+    /// join *inputs* (a reduce join would ship partials instead).
+    pub fn join_elems_per_token(&self, cfg: &ModelConfig) -> usize {
+        2 * cfg.d_model + cfg.d_model + cfg.d_ff
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-lane state
+// ---------------------------------------------------------------------------
+
+/// One shard's private working set: replicated residual buffers, the
+/// compact per-shard activation slices, its own kernel scratch (no
+/// inner pool — the shard lanes *are* the parallelism) and, on rank 0,
+/// the routing-bits log the main thread replays into the caller's
+/// stats.
+struct LaneState {
+    engine: Scratch,
+    attn: AttnScratch,
+    /// Per-shard speculative capture (local kv width).
+    cap: SpecCapture,
+    /// Replicated residual stream, `(t, d)`.
+    xs: Vec<f32>,
+    /// Replicated norm output, `(t, d)`.
+    xn: Vec<f32>,
+    /// Full-width staging for the batched column kernels (`(t, d)` /
+    /// `(t, dkv)` / `(t, d_ff)`): `forward_batch_range` writes at full
+    /// stride, the compact copies below carve out this shard's span.
+    qf: Vec<f32>,
+    kf: Vec<f32>,
+    vf: Vec<f32>,
+    gf: Vec<f32>,
+    uf: Vec<f32>,
+    /// Compact per-shard slices: q `(t, local_heads * hd)`, k/v
+    /// `(t, local_kv * hd)`.
+    qc: Vec<f32>,
+    kc: Vec<f32>,
+    vc: Vec<f32>,
+    /// Rank 0 only: per-(layer, linear) effective bits of every token,
+    /// indexed `li * 7 + lin` — routing is replicated, so shard 0's
+    /// log equals what the unsharded path would have recorded.
+    bits: Vec<Vec<usize>>,
+    /// Set when this lane's arena rejected an append; the lane skips
+    /// remaining compute but keeps arriving at barriers.
+    dead: bool,
+    err: Option<OutOfPages>,
+}
+
+impl LaneState {
+    fn new(cfg: &ModelConfig) -> LaneState {
+        LaneState {
+            engine: Scratch::new(cfg.d_model.max(cfg.d_ff),
+                                 cfg.group_size, cfg.router_hidden,
+                                 cfg.n_slices),
+            attn: AttnScratch::new(),
+            cap: SpecCapture::new(),
+            xs: Vec::new(),
+            xn: Vec::new(),
+            qf: Vec::new(),
+            kf: Vec::new(),
+            vf: Vec::new(),
+            gf: Vec::new(),
+            uf: Vec::new(),
+            qc: Vec::new(),
+            kc: Vec::new(),
+            vc: Vec::new(),
+            bits: Vec::new(),
+            dead: false,
+            err: None,
+        }
+    }
+
+    fn ensure(&mut self, t: usize, cfg: &ModelConfig, lw: usize,
+              lkv: usize) {
+        let d = cfg.d_model;
+        grow(&mut self.xs, t * d);
+        grow(&mut self.xn, t * d);
+        grow(&mut self.qf, t * d);
+        grow(&mut self.kf, t * cfg.kv_dim());
+        grow(&mut self.vf, t * cfg.kv_dim());
+        grow(&mut self.gf, t * cfg.d_ff);
+        grow(&mut self.uf, t * cfg.d_ff);
+        grow(&mut self.qc, t * lw);
+        grow(&mut self.kc, t * lkv);
+        grow(&mut self.vc, t * lkv);
+    }
+}
+
+fn grow(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        v.resize(n, 0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+/// How a block forward surfaces logits (mirrors the `all_logits` /
+/// `spec` modes of `Model::prefill_inner`).
+#[derive(Clone, Copy, PartialEq)]
+enum BlockMode {
+    /// lm_head on the last token only; row 0 of the shared logits.
+    Last,
+    /// lm_head on every token; `(t, vocab)` rows in the shared logits.
+    All,
+    /// Speculative verify: `All` logits plus per-position KV commit
+    /// and per-lane pre-RoPE K/V capture.
+    Spec,
+}
+
+/// Tensor-parallel execution engine: a [`ShardPlan`], one
+/// [`LaneState`] per shard, the shared gather buffers the barriers
+/// publish, and the [`InProcGroup`] whose [`Communicator`] handles are
+/// the only synchronization primitive the forward loops touch.
+///
+/// The public surface mirrors [`Model`]'s forward entry points
+/// (`decode_step` / `prefill` / `decode_batch` / the speculative
+/// round) over a [`KvShards`] store; every one is bit-identical to its
+/// unsharded counterpart for any shard count (`tests/shard_parity.rs`).
+pub struct ShardRuntime {
+    group: InProcGroup,
+    plan: ShardPlan,
+    lanes: Vec<LaneState>,
+    /// Shared RoPE tables (read-only inside a dispatch; grown by the
+    /// main thread before lanes launch).
+    rope: RopeCache,
+    // Gather buffers published at the barriers: disjoint column spans
+    // written per shard, full-width reads after the join.
+    shared_ctx: Vec<f32>,
+    shared_attn: Vec<f32>,
+    shared_ff: Vec<f32>,
+    shared_mlp: Vec<f32>,
+    shared_logits: Vec<f32>,
+}
+
+impl ShardRuntime {
+    /// Build a runtime for `model` over `n_shards` shards.  Reuses the
+    /// model's worker pool when it has at least one lane per shard
+    /// (ranks block in barriers, so each needs its own lane — see
+    /// `util/comm.rs`), otherwise brings up a dedicated pool.
+    ///
+    /// Static-PTQ backends have no column-range kernels (they are
+    /// baseline records, never served sharded) and are rejected here —
+    /// which is what lets the range dispatch in `weights.rs` treat
+    /// `Static` as unreachable.
+    pub fn new(model: &Model, n_shards: usize) -> Result<ShardRuntime> {
+        let cfg = &model.cfg;
+        let plan = ShardPlan::new(cfg, n_shards)?;
+        for (li, layer) in model.layers.iter().enumerate() {
+            for name in LINEAR_NAMES {
+                if matches!(layer.linear(name)?,
+                            LinearBackend::Static(_)) {
+                    bail!("layer {li} {name}: static-PTQ backends \
+                           cannot run sharded");
+                }
+            }
+        }
+        if matches!(model.lm_head, LinearBackend::Static(_)) {
+            bail!("lm_head: static-PTQ backends cannot run sharded");
+        }
+        let pool = match &model.pool {
+            Some(p) if p.size() >= n_shards => Arc::clone(p),
+            _ => Arc::new(ThreadPool::new(n_shards)),
+        };
+        Ok(ShardRuntime {
+            group: InProcGroup::new(n_shards, pool),
+            lanes: (0..n_shards).map(|_| LaneState::new(cfg)).collect(),
+            plan,
+            rope: RopeCache::new(cfg.head_dim(), cfg.rope_theta),
+            shared_ctx: Vec::new(),
+            shared_attn: Vec::new(),
+            shared_ff: Vec::new(),
+            shared_mlp: Vec::new(),
+            shared_logits: Vec::new(),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Per-shard KV arenas with the given page-slot budget, mirrored
+    /// handles, per-shard byte budgets proportional to their kv heads
+    /// (the slot counts are identical, so OOM fires at the same append
+    /// on every shard).
+    pub fn new_shards_with_pages(&self, model: &Model,
+                                 capacity_pages: usize) -> KvShards {
+        let c = &model.cfg;
+        KvShards::new(self.plan.kv.iter()
+            .map(|&(k0, k1)| KvArena::new(c.n_layers, c.max_seq_len,
+                                          k1 - k0, c.head_dim(),
+                                          capacity_pages))
+            .collect())
+    }
+
+    /// Sharded analogue of [`Model::new_arena`]: budget for `n_seqs`
+    /// full-context sequences (same page-slot count per shard as the
+    /// unsharded arena, so the byte total is identical too).
+    pub fn new_shards_arena(&self, model: &Model, n_seqs: usize)
+                            -> KvShards {
+        let c = &model.cfg;
+        let pages = n_seqs.max(1) * c.n_layers
+            * ((c.max_seq_len + KV_PAGE - 1) / KV_PAGE);
+        self.new_shards_with_pages(model, pages)
+    }
+
+    /// Sharded analogue of [`Model::new_kv_at`].
+    pub fn new_kv_at(&self, model: &Model, prec: KvPrecision)
+                     -> (KvShards, KvHandle) {
+        let mut kv = self.new_shards_arena(model, 1);
+        let seq = kv.alloc_seq_at(prec);
+        (kv, seq)
+    }
+
+    fn ensure_shared(&mut self, t: usize, cfg: &ModelConfig,
+                     logit_rows: usize) {
+        let d = cfg.d_model;
+        grow(&mut self.shared_ctx, t * d);
+        grow(&mut self.shared_attn, t * d);
+        grow(&mut self.shared_ff, t * cfg.d_ff);
+        grow(&mut self.shared_mlp, t * d);
+        grow(&mut self.shared_logits, logit_rows * cfg.vocab_size);
+    }
+
+    /// Reset per-dispatch lane state (dead flags, rank-0 bits log) and
+    /// size every lane's buffers.
+    fn arm_lanes(&mut self, t: usize, cfg: &ModelConfig) {
+        let n_rec = cfg.n_layers * LINEAR_NAMES.len();
+        for (s, lane) in self.lanes.iter_mut().enumerate() {
+            let (h0, h1) = self.plan.heads[s];
+            let (k0, k1) = self.plan.kv[s];
+            lane.ensure(t, cfg, (h1 - h0) * cfg.head_dim(),
+                        (k1 - k0) * cfg.head_dim());
+            lane.dead = false;
+            lane.err = None;
+            if s == 0 {
+                lane.bits.resize(n_rec, Vec::new());
+                for b in &mut lane.bits {
+                    b.clear();
+                }
+            }
+        }
+    }
+
+    /// First lane error by rank order (all lanes hit the same append
+    /// deterministically — mirrored budgets — but rank order makes the
+    /// pick well-defined regardless).
+    fn take_err(&mut self) -> Option<OutOfPages> {
+        self.lanes.iter_mut().find_map(|l| l.err.take())
+    }
+
+    /// Replay rank 0's routing log into a single stats accumulator in
+    /// the exact order the unsharded path records (layer-major, linear
+    /// 0..6, token-minor).
+    fn replay_stats(&self, stats: &mut DecodeStats, cfg: &ModelConfig) {
+        for li in 0..cfg.n_layers {
+            for lin in 0..LINEAR_NAMES.len() {
+                record_block(stats,
+                             &self.lanes[0].bits[li * 7 + lin], li, lin,
+                             cfg.slice_bits);
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Token path (decode_step mirror)
+    // -----------------------------------------------------------------
+
+    /// Sharded [`Model::decode_step`]: logits land in the shared
+    /// buffer (`self.shared_logits[..vocab]`), routing stats replay
+    /// from shard 0's log.  Bit-identical to the unsharded step.
+    fn decode_step_inner(&mut self, m: &Model, token: u32,
+                         kv: &mut KvShards, seq: KvHandle,
+                         precision: Precision,
+                         stats: &mut DecodeStats) -> Result<()> {
+        let c = &m.cfg;
+        let d = c.d_model;
+        let pos = kv.seq_len(seq);
+        anyhow::ensure!(pos < c.max_seq_len, "sequence too long");
+        anyhow::ensure!((token as usize) < c.vocab_size, "token oob");
+        self.rope.ensure(pos + 1);
+        self.ensure_shared(1, c, 1);
+        self.arm_lanes(1, c);
+
+        let hd = c.head_dim();
+        let ctxp = SharedMut(self.shared_ctx.as_mut_ptr());
+        let attnp = SharedMut(self.shared_attn.as_mut_ptr());
+        let ffp = SharedMut(self.shared_ff.as_mut_ptr());
+        let mlpp = SharedMut(self.shared_mlp.as_mut_ptr());
+        let logp = SharedMut(self.shared_logits.as_mut_ptr());
+        let lanesp = SharedMut(self.lanes.as_mut_ptr());
+        let arenasp = SharedMut(kv.arenas_mut().as_mut_ptr());
+        let plan = &self.plan;
+        let rope = &self.rope;
+
+        self.group.run(|comm: &InProcComm| {
+            let r = comm.rank();
+            // SAFETY: one rank per lane/arena index; disjoint &mut.
+            let lane = unsafe { &mut *lanesp.0.add(r) };
+            let arena = unsafe { &mut *arenasp.0.add(r) };
+            let (h0, h1) = plan.heads[r];
+            let (k0, k1) = plan.kv[r];
+            let (m0, m1) = plan.d_model[r];
+            let (f0, f1) = plan.d_ff[r];
+            let (v0, v1) = plan.vocab[r];
+            let (lw, lkv) = ((h1 - h0) * hd, (k1 - k0) * hd);
+            let tok = token as usize;
+            lane.xs[..d].copy_from_slice(&m.embed[tok * d..(tok + 1) * d]);
+
+            for (li, layer) in m.layers.iter().enumerate() {
+                if !lane.dead {
+                    rmsnorm(&lane.xs[..d], &layer.attn_norm, c.norm_eps,
+                            &mut lane.xn[..d]);
+                    let b = layer.wq.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine,
+                        h0 * hd, h1 * hd, &mut lane.qc[..lw]);
+                    if r == 0 {
+                        lane.bits[li * 7].push(b);
+                    }
+                    let b = layer.wk.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd, &mut lane.kc[..lkv]);
+                    if r == 0 {
+                        lane.bits[li * 7 + 1].push(b);
+                    }
+                    let b = layer.wv.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd, &mut lane.vc[..lkv]);
+                    if r == 0 {
+                        lane.bits[li * 7 + 2].push(b);
+                    }
+                    rope.apply(&mut lane.qc[..lw], pos);
+                    match arena.append_kv_block(seq, li, rope,
+                                                &lane.kc[..lkv],
+                                                &lane.vc[..lkv], 1) {
+                        Ok(_) => {
+                            let view = arena.layer(seq, li);
+                            attention_block_range(c, &lane.qc[..lw],
+                                                  &view, pos, 1, h0, h1,
+                                                  k0, &mut lane.attn,
+                                                  &ctxp);
+                        }
+                        Err(e) => {
+                            lane.err = Some(e);
+                            lane.dead = true;
+                        }
+                    }
+                }
+                comm.barrier(); // join A entry: ctx columns published
+                if !lane.dead {
+                    let ctx_all = unsafe {
+                        std::slice::from_raw_parts(ctxp.0, d)
+                    };
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(attnp.0.add(m0),
+                                                       m1 - m0)
+                    };
+                    let b = layer.wo.forward_token_range(
+                        ctx_all, precision, &mut lane.engine, m0, m1,
+                        out);
+                    if r == 0 {
+                        lane.bits[li * 7 + 3].push(b);
+                    }
+                }
+                comm.barrier(); // join A exit: attn_out published
+                if !lane.dead {
+                    let attn_all = unsafe {
+                        std::slice::from_raw_parts(attnp.0, d)
+                    };
+                    for (xi, ai) in lane.xs[..d].iter_mut()
+                        .zip(attn_all) {
+                        *xi += ai;
+                    }
+                    rmsnorm(&lane.xs[..d], &layer.mlp_norm, c.norm_eps,
+                            &mut lane.xn[..d]);
+                    let b = layer.w_gate.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine, f0,
+                        f1, &mut lane.gf[..f1 - f0]);
+                    if r == 0 {
+                        lane.bits[li * 7 + 4].push(b);
+                    }
+                    let b = layer.w_up.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine, f0,
+                        f1, &mut lane.uf[..f1 - f0]);
+                    if r == 0 {
+                        lane.bits[li * 7 + 5].push(b);
+                    }
+                    let ff_out = unsafe {
+                        std::slice::from_raw_parts_mut(ffp.0.add(f0),
+                                                       f1 - f0)
+                    };
+                    for (o, (g, u)) in ff_out.iter_mut()
+                        .zip(lane.gf[..f1 - f0].iter()
+                            .zip(&lane.uf[..f1 - f0])) {
+                        *o = silu(*g) * u;
+                    }
+                }
+                comm.barrier(); // join B entry: ff columns published
+                if !lane.dead {
+                    let ff_all = unsafe {
+                        std::slice::from_raw_parts(ffp.0, c.d_ff)
+                    };
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(mlpp.0.add(m0),
+                                                       m1 - m0)
+                    };
+                    let b = layer.w_down.forward_token_range(
+                        ff_all, precision, &mut lane.engine, m0, m1,
+                        out);
+                    if r == 0 {
+                        lane.bits[li * 7 + 6].push(b);
+                    }
+                }
+                comm.barrier(); // join B exit: mlp_out published
+                if !lane.dead {
+                    let mlp_all = unsafe {
+                        std::slice::from_raw_parts(mlpp.0, d)
+                    };
+                    for (xi, mi) in lane.xs[..d].iter_mut()
+                        .zip(mlp_all) {
+                        *xi += mi;
+                    }
+                }
+            }
+            if !lane.dead {
+                rmsnorm(&lane.xs[..d], &m.final_norm, c.norm_eps,
+                        &mut lane.xn[..d]);
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(logp.0.add(v0),
+                                                   v1 - v0)
+                };
+                m.lm_head.forward_token_range(&lane.xn[..d], precision,
+                                              &mut lane.engine, v0, v1,
+                                              out);
+            }
+        });
+
+        self.replay_stats(stats, c);
+        if let Some(e) = self.take_err() {
+            return Err(e.into());
+        }
+        stats.tokens += 1;
+        Ok(())
+    }
+
+    /// Sharded [`Model::decode_step`]; `logits` receives the
+    /// vocab-wide row.
+    pub fn decode_step(&mut self, m: &Model, token: u32,
+                       kv: &mut KvShards, seq: KvHandle,
+                       precision: Precision, stats: &mut DecodeStats,
+                       logits: &mut [f32]) -> Result<()> {
+        self.decode_step_inner(m, token, kv, seq, precision, stats)?;
+        logits.copy_from_slice(
+            &self.shared_logits[..m.cfg.vocab_size]);
+        Ok(())
+    }
+
+    /// Sharded [`Model::greedy_step`].
+    pub fn greedy_step(&mut self, m: &Model, token: u32,
+                       kv: &mut KvShards, seq: KvHandle,
+                       precision: Precision, stats: &mut DecodeStats)
+                       -> Result<u32> {
+        self.decode_step_inner(m, token, kv, seq, precision, stats)?;
+        Ok(argmax(&self.shared_logits[..m.cfg.vocab_size]) as u32)
+    }
+
+    // -----------------------------------------------------------------
+    // Block path (prefill_inner mirror)
+    // -----------------------------------------------------------------
+
+    /// Sharded `Model::prefill_inner`: one token block through the
+    /// four-barrier layer protocol with batched column kernels.  On
+    /// return the shared logits hold the last row (`BlockMode::Last`)
+    /// or all `t` rows (`All` / `Spec`); `Spec` additionally commits
+    /// KV per position and captures pre-RoPE K/V into each lane's
+    /// local-width [`SpecCapture`].
+    fn block_forward(&mut self, m: &Model, tokens: &[u32],
+                     kv: &mut KvShards, seq: KvHandle,
+                     precision: Precision, stats: &mut DecodeStats,
+                     mode: BlockMode) -> Result<()> {
+        let c = &m.cfg;
+        let t = tokens.len();
+        if t == 0 {
+            return Ok(());
+        }
+        let d = c.d_model;
+        let dkv = c.kv_dim();
+        let d_ff = c.d_ff;
+        let pos0 = kv.seq_len(seq);
+        anyhow::ensure!(pos0 + t <= c.max_seq_len, "sequence too long");
+        for &tok in tokens {
+            anyhow::ensure!((tok as usize) < c.vocab_size, "token oob");
+        }
+        self.rope.ensure(pos0 + t);
+        let logit_rows = if mode == BlockMode::Last { 1 } else { t };
+        self.ensure_shared(t, c, logit_rows);
+        self.arm_lanes(t, c);
+
+        let hd = c.head_dim();
+        let n_layers = c.n_layers;
+        let ctxp = SharedMut(self.shared_ctx.as_mut_ptr());
+        let attnp = SharedMut(self.shared_attn.as_mut_ptr());
+        let ffp = SharedMut(self.shared_ff.as_mut_ptr());
+        let mlpp = SharedMut(self.shared_mlp.as_mut_ptr());
+        let logp = SharedMut(self.shared_logits.as_mut_ptr());
+        let lanesp = SharedMut(self.lanes.as_mut_ptr());
+        let arenasp = SharedMut(kv.arenas_mut().as_mut_ptr());
+        let plan = &self.plan;
+        let rope = &self.rope;
+
+        self.group.run(|comm: &InProcComm| {
+            let r = comm.rank();
+            // SAFETY: one rank per lane/arena index; disjoint &mut.
+            let lane = unsafe { &mut *lanesp.0.add(r) };
+            let arena = unsafe { &mut *arenasp.0.add(r) };
+            let (h0, h1) = plan.heads[r];
+            let (k0, k1) = plan.kv[r];
+            let (m0, m1) = plan.d_model[r];
+            let (f0, f1) = plan.d_ff[r];
+            let (v0, v1) = plan.vocab[r];
+            let (lw, lkv) = ((h1 - h0) * hd, (k1 - k0) * hd);
+            if mode == BlockMode::Spec {
+                lane.cap.begin(n_layers, t, lkv);
+            }
+            for (i, &tok) in tokens.iter().enumerate() {
+                let e = tok as usize * d;
+                lane.xs[i * d..(i + 1) * d]
+                    .copy_from_slice(&m.embed[e..e + d]);
+            }
+
+            for (li, layer) in m.layers.iter().enumerate() {
+                if !lane.dead {
+                    for i in 0..t {
+                        rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                                &layer.attn_norm, c.norm_eps,
+                                &mut lane.xn[i * d..(i + 1) * d]);
+                    }
+                    let qout = SharedOut(lane.qf.as_mut_ptr());
+                    layer.wq.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        h0 * hd, h1 * hd, &qout);
+                    if r == 0 {
+                        lane.bits[li * 7]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    let kout = SharedOut(lane.kf.as_mut_ptr());
+                    layer.wk.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd, &kout);
+                    if r == 0 {
+                        lane.bits[li * 7 + 1]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    let vout = SharedOut(lane.vf.as_mut_ptr());
+                    layer.wv.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd, &vout);
+                    if r == 0 {
+                        lane.bits[li * 7 + 2]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    // carve this shard's compact activation slices out
+                    // of the full-stride staging buffers
+                    for i in 0..t {
+                        lane.qc[i * lw..(i + 1) * lw].copy_from_slice(
+                            &lane.qf[i * d + h0 * hd..][..lw]);
+                        lane.kc[i * lkv..(i + 1) * lkv].copy_from_slice(
+                            &lane.kf[i * dkv + k0 * hd..][..lkv]);
+                        lane.vc[i * lkv..(i + 1) * lkv].copy_from_slice(
+                            &lane.vf[i * dkv + k0 * hd..][..lkv]);
+                    }
+                    if mode == BlockMode::Spec {
+                        // verify mode: capture pre-RoPE K/V, then
+                        // append + attend one position at a time —
+                        // decode_step append granularity, so quantized
+                        // page scales retrace the straight-line
+                        // trajectory (see Model::prefill_inner).
+                        lane.cap.save_layer(li, &lane.kc[..t * lkv],
+                                            &lane.vc[..t * lkv]);
+                        for i in 0..t {
+                            let pos = pos0 + i;
+                            rope.apply(
+                                &mut lane.qc[i * lw..(i + 1) * lw],
+                                pos);
+                            match arena.append_kv_block(
+                                seq, li, rope,
+                                &lane.kc[i * lkv..(i + 1) * lkv],
+                                &lane.vc[i * lkv..(i + 1) * lkv], 1) {
+                                Ok(_) => {
+                                    let view = arena.layer(seq, li);
+                                    let crow = SharedMut(unsafe {
+                                        ctxp.0.add(i * d)
+                                    });
+                                    attention_block_range(
+                                        c,
+                                        &lane.qc[i * lw..(i + 1) * lw],
+                                        &view, pos, 1, h0, h1, k0,
+                                        &mut lane.attn, &crow);
+                                }
+                                Err(e) => {
+                                    lane.err = Some(e);
+                                    lane.dead = true;
+                                    break;
+                                }
+                            }
+                        }
+                    } else {
+                        for i in 0..t {
+                            rope.apply(
+                                &mut lane.qc[i * lw..(i + 1) * lw],
+                                pos0 + i);
+                        }
+                        match arena.append_kv_block(seq, li, rope,
+                                                    &lane.kc[..t * lkv],
+                                                    &lane.vc[..t * lkv],
+                                                    t) {
+                            Ok(_) => {
+                                let view = arena.layer(seq, li);
+                                attention_block_range(
+                                    c, &lane.qc[..t * lw], &view, pos0,
+                                    t, h0, h1, k0, &mut lane.attn,
+                                    &ctxp);
+                            }
+                            Err(e) => {
+                                lane.err = Some(e);
+                                lane.dead = true;
+                            }
+                        }
+                    }
+                }
+                comm.barrier(); // join A entry: ctx columns published
+                if !lane.dead {
+                    let ctx_all = unsafe {
+                        std::slice::from_raw_parts(ctxp.0, t * d)
+                    };
+                    layer.wo.forward_batch_range(
+                        ctx_all, precision, &mut lane.engine, m0, m1,
+                        &SharedOut(attnp.0));
+                    if r == 0 {
+                        lane.bits[li * 7 + 3]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                }
+                comm.barrier(); // join A exit: attn_out published
+                if !lane.dead {
+                    let attn_all = unsafe {
+                        std::slice::from_raw_parts(attnp.0, t * d)
+                    };
+                    for (xi, ai) in lane.xs[..t * d].iter_mut()
+                        .zip(attn_all) {
+                        *xi += ai;
+                    }
+                    for i in 0..t {
+                        rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                                &layer.mlp_norm, c.norm_eps,
+                                &mut lane.xn[i * d..(i + 1) * d]);
+                    }
+                    let gout = SharedOut(lane.gf.as_mut_ptr());
+                    layer.w_gate.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        f0, f1, &gout);
+                    if r == 0 {
+                        lane.bits[li * 7 + 4]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    let uout = SharedOut(lane.uf.as_mut_ptr());
+                    layer.w_up.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        f0, f1, &uout);
+                    if r == 0 {
+                        lane.bits[li * 7 + 5]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    for i in 0..t {
+                        let g = &lane.gf[i * d_ff + f0..][..f1 - f0];
+                        let u = &lane.uf[i * d_ff + f0..][..f1 - f0];
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                ffp.0.add(i * d_ff + f0), f1 - f0)
+                        };
+                        for (o, (gi, ui)) in out.iter_mut()
+                            .zip(g.iter().zip(u)) {
+                            *o = silu(*gi) * ui;
+                        }
+                    }
+                }
+                comm.barrier(); // join B entry: ff columns published
+                if !lane.dead {
+                    let ff_all = unsafe {
+                        std::slice::from_raw_parts(ffp.0, t * d_ff)
+                    };
+                    layer.w_down.forward_batch_range(
+                        ff_all, precision, &mut lane.engine, m0, m1,
+                        &SharedOut(mlpp.0));
+                    if r == 0 {
+                        lane.bits[li * 7 + 6]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                }
+                comm.barrier(); // join B exit: mlp_out published
+                if !lane.dead {
+                    let mlp_all = unsafe {
+                        std::slice::from_raw_parts(mlpp.0, t * d)
+                    };
+                    for (xi, mi) in lane.xs[..t * d].iter_mut()
+                        .zip(mlp_all) {
+                        *xi += mi;
+                    }
+                }
+            }
+            if !lane.dead {
+                if mode == BlockMode::Last {
+                    rmsnorm(&lane.xs[(t - 1) * d..t * d],
+                            &m.final_norm, c.norm_eps,
+                            &mut lane.xn[..d]);
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(logp.0.add(v0),
+                                                       v1 - v0)
+                    };
+                    m.lm_head.forward_token_range(
+                        &lane.xn[..d], precision, &mut lane.engine, v0,
+                        v1, out);
+                } else {
+                    for i in 0..t {
+                        rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                                &m.final_norm, c.norm_eps,
+                                &mut lane.xn[i * d..(i + 1) * d]);
+                    }
+                    m.lm_head.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        v0, v1, &SharedOut(logp.0));
+                }
+            }
+        });
+
+        self.replay_stats(stats, c);
+        if let Some(e) = self.take_err() {
+            return Err(e.into());
+        }
+        stats.tokens += t as u64;
+        Ok(())
+    }
+
+    /// Sharded [`Model::prefill`]; the last token's logits land in
+    /// `logits` (vocab-wide; untouched when `tokens` is empty).
+    pub fn prefill(&mut self, m: &Model, tokens: &[u32],
+                   kv: &mut KvShards, seq: KvHandle,
+                   precision: Precision, stats: &mut DecodeStats,
+                   logits: &mut [f32]) -> Result<()> {
+        for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
+            self.block_forward(m, chunk, kv, seq, precision, stats,
+                               BlockMode::Last)?;
+        }
+        if !tokens.is_empty() {
+            logits.copy_from_slice(
+                &self.shared_logits[..m.cfg.vocab_size]);
+        }
+        Ok(())
+    }
+
+    /// Sharded [`Model::prefill_logits`]: appends every token's logits
+    /// row to `out`.
+    pub fn prefill_logits(&mut self, m: &Model, tokens: &[u32],
+                          kv: &mut KvShards, seq: KvHandle,
+                          precision: Precision, stats: &mut DecodeStats,
+                          out: &mut Vec<f32>) -> Result<()> {
+        let v = m.cfg.vocab_size;
+        for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
+            self.block_forward(m, chunk, kv, seq, precision, stats,
+                               BlockMode::All)?;
+            out.extend_from_slice(&self.shared_logits[..chunk.len() * v]);
+        }
+        Ok(())
+    }
+
+    /// Sharded [`Model::greedy_prefill`].
+    pub fn greedy_prefill(&mut self, m: &Model, tokens: &[u32],
+                          kv: &mut KvShards, seq: KvHandle,
+                          precision: Precision, stats: &mut DecodeStats)
+                          -> Result<u32> {
+        anyhow::ensure!(!tokens.is_empty(),
+                        "greedy prefill needs at least one token");
+        for chunk in tokens.chunks(MAX_PREFILL_BLOCK) {
+            self.block_forward(m, chunk, kv, seq, precision, stats,
+                               BlockMode::Last)?;
+        }
+        Ok(argmax(&self.shared_logits[..m.cfg.vocab_size]) as u32)
+    }
+
+    /// Sharded [`Model::forward_logits`].
+    pub fn forward_logits(&mut self, m: &Model, tokens: &[u32],
+                          precision: Precision) -> Result<Vec<f32>> {
+        let (mut kv, seq) = self.new_kv_at(m, KvPrecision::F32);
+        let mut stats = DecodeStats::new(m.cfg.n_layers);
+        let mut out =
+            Vec::with_capacity(tokens.len() * m.cfg.vocab_size);
+        self.prefill_logits(m, tokens, &mut kv, seq, precision,
+                            &mut stats, &mut out)?;
+        Ok(out)
+    }
+
+    /// Sharded [`Model::resume`].
+    pub fn resume(&mut self, m: &Model, tokens: &[u32],
+                  kv: &mut KvShards, seq: KvHandle,
+                  precision: Precision, stats: &mut DecodeStats)
+                  -> Result<u32> {
+        anyhow::ensure!(!tokens.is_empty(),
+                        "resume needs at least one token");
+        anyhow::ensure!(kv.seq_len(seq) == 0,
+                        "resume target must be a fresh sequence");
+        self.greedy_prefill(m, tokens, kv, seq, precision, stats)
+    }
+
+    /// Sharded [`Model::generate`].
+    pub fn generate(&mut self, m: &Model, prompt: &[u32], n_new: usize,
+                    precision: Precision, stats: &mut DecodeStats)
+                    -> Result<Vec<u32>> {
+        self.generate_at(m, prompt, n_new, precision, KvPrecision::F32,
+                         stats)
+    }
+
+    /// Sharded [`Model::generate_at`].
+    pub fn generate_at(&mut self, m: &Model, prompt: &[u32],
+                       n_new: usize, precision: Precision,
+                       kv_prec: KvPrecision, stats: &mut DecodeStats)
+                       -> Result<Vec<u32>> {
+        let (mut kv, seq) = self.new_kv_at(m, kv_prec);
+        let mut toks = prompt.to_vec();
+        if n_new == 0 || prompt.is_empty() {
+            return Ok(toks);
+        }
+        let mut last = self.greedy_prefill(m, prompt, &mut kv, seq,
+                                           precision, stats)?;
+        toks.push(last);
+        for _ in 1..n_new {
+            last = self.greedy_step(m, last, &mut kv, seq, precision,
+                                    stats)?;
+            toks.push(last);
+        }
+        Ok(toks)
+    }
+
+    // -----------------------------------------------------------------
+    // Coalesced decode (decode_batch mirror)
+    // -----------------------------------------------------------------
+
+    /// Sharded [`Model::decode_batch`]: every slot advances one token
+    /// through the four-barrier protocol; per-slot logits rows land in
+    /// `logits` (`(n_slots, vocab)` row-major, grown as needed) and
+    /// per-slot routing stats replay from shard 0's log.
+    pub fn decode_batch(&mut self, m: &Model, slots: &mut [DecodeSlot],
+                        kv: &mut KvShards, precision: Precision,
+                        logits: &mut Vec<f32>) -> Result<()> {
+        let c = &m.cfg;
+        let t = slots.len();
+        if t == 0 {
+            return Ok(());
+        }
+        let d = c.d_model;
+        let dkv = c.kv_dim();
+        let d_ff = c.d_ff;
+        let mut max_pos = 0usize;
+        for s in slots.iter() {
+            let len = kv.seq_len(s.seq);
+            anyhow::ensure!(len < c.max_seq_len, "sequence too long");
+            anyhow::ensure!((s.token as usize) < c.vocab_size,
+                            "token oob");
+            max_pos = max_pos.max(len);
+        }
+        self.rope.ensure(max_pos + 1);
+        self.ensure_shared(t, c, t);
+        self.arm_lanes(t, c);
+        let ids: Vec<u32> = slots.iter().map(|s| s.token).collect();
+        let seqs: Vec<KvHandle> = slots.iter().map(|s| s.seq).collect();
+
+        let hd = c.head_dim();
+        let ctxp = SharedMut(self.shared_ctx.as_mut_ptr());
+        let attnp = SharedMut(self.shared_attn.as_mut_ptr());
+        let ffp = SharedMut(self.shared_ff.as_mut_ptr());
+        let mlpp = SharedMut(self.shared_mlp.as_mut_ptr());
+        let logp = SharedMut(self.shared_logits.as_mut_ptr());
+        let lanesp = SharedMut(self.lanes.as_mut_ptr());
+        let arenasp = SharedMut(kv.arenas_mut().as_mut_ptr());
+        let plan = &self.plan;
+        let rope = &self.rope;
+
+        self.group.run(|comm: &InProcComm| {
+            let r = comm.rank();
+            // SAFETY: one rank per lane/arena index; disjoint &mut.
+            let lane = unsafe { &mut *lanesp.0.add(r) };
+            let arena = unsafe { &mut *arenasp.0.add(r) };
+            let (h0, h1) = plan.heads[r];
+            let (k0, k1) = plan.kv[r];
+            let (m0, m1) = plan.d_model[r];
+            let (f0, f1) = plan.d_ff[r];
+            let (v0, v1) = plan.vocab[r];
+            let (lw, lkv) = ((h1 - h0) * hd, (k1 - k0) * hd);
+            for (i, &tok) in ids.iter().enumerate() {
+                let e = tok as usize * d;
+                lane.xs[i * d..(i + 1) * d]
+                    .copy_from_slice(&m.embed[e..e + d]);
+            }
+
+            for (li, layer) in m.layers.iter().enumerate() {
+                if !lane.dead {
+                    for i in 0..t {
+                        rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                                &layer.attn_norm, c.norm_eps,
+                                &mut lane.xn[i * d..(i + 1) * d]);
+                    }
+                    layer.wq.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        h0 * hd, h1 * hd,
+                        &SharedOut(lane.qf.as_mut_ptr()));
+                    if r == 0 {
+                        lane.bits[li * 7]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    layer.wk.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd,
+                        &SharedOut(lane.kf.as_mut_ptr()));
+                    if r == 0 {
+                        lane.bits[li * 7 + 1]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    layer.wv.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        k0 * hd, k1 * hd,
+                        &SharedOut(lane.vf.as_mut_ptr()));
+                    if r == 0 {
+                        lane.bits[li * 7 + 2]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    for i in 0..t {
+                        lane.qc[i * lw..(i + 1) * lw].copy_from_slice(
+                            &lane.qf[i * d + h0 * hd..][..lw]);
+                        lane.kc[i * lkv..(i + 1) * lkv].copy_from_slice(
+                            &lane.kf[i * dkv + k0 * hd..][..lkv]);
+                        lane.vc[i * lkv..(i + 1) * lkv].copy_from_slice(
+                            &lane.vf[i * dkv + k0 * hd..][..lkv]);
+                    }
+                    // land every slot's fresh K/V (the slot's position
+                    // at this layer is the layer's own table length —
+                    // see Model::decode_batch), then attend per slot
+                    // over this shard's heads
+                    for i in 0..t {
+                        let pos = arena.layer_len(seqs[i], li);
+                        rope.apply(&mut lane.qc[i * lw..(i + 1) * lw],
+                                   pos);
+                        if let Err(e) = arena.append_kv_block(
+                            seqs[i], li, rope,
+                            &lane.kc[i * lkv..(i + 1) * lkv],
+                            &lane.vc[i * lkv..(i + 1) * lkv], 1) {
+                            lane.err = Some(e);
+                            lane.dead = true;
+                            break;
+                        }
+                    }
+                    if !lane.dead {
+                        for i in 0..t {
+                            let view = arena.layer(seqs[i], li);
+                            let pos = arena.layer_len(seqs[i], li) - 1;
+                            let crow =
+                                SharedMut(unsafe { ctxp.0.add(i * d) });
+                            attention_block_range(
+                                c, &lane.qc[i * lw..(i + 1) * lw],
+                                &view, pos, 1, h0, h1, k0,
+                                &mut lane.attn, &crow);
+                        }
+                    }
+                }
+                comm.barrier(); // join A entry
+                if !lane.dead {
+                    let ctx_all = unsafe {
+                        std::slice::from_raw_parts(ctxp.0, t * d)
+                    };
+                    layer.wo.forward_batch_range(
+                        ctx_all, precision, &mut lane.engine, m0, m1,
+                        &SharedOut(attnp.0));
+                    if r == 0 {
+                        lane.bits[li * 7 + 3]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                }
+                comm.barrier(); // join A exit
+                if !lane.dead {
+                    let attn_all = unsafe {
+                        std::slice::from_raw_parts(attnp.0, t * d)
+                    };
+                    for (xi, ai) in lane.xs[..t * d].iter_mut()
+                        .zip(attn_all) {
+                        *xi += ai;
+                    }
+                    for i in 0..t {
+                        rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                                &layer.mlp_norm, c.norm_eps,
+                                &mut lane.xn[i * d..(i + 1) * d]);
+                    }
+                    layer.w_gate.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        f0, f1, &SharedOut(lane.gf.as_mut_ptr()));
+                    if r == 0 {
+                        lane.bits[li * 7 + 4]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    layer.w_up.forward_batch_range(
+                        &lane.xn[..t * d], precision, &mut lane.engine,
+                        f0, f1, &SharedOut(lane.uf.as_mut_ptr()));
+                    if r == 0 {
+                        lane.bits[li * 7 + 5]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                    for i in 0..t {
+                        let g = &lane.gf[i * d_ff + f0..][..f1 - f0];
+                        let u = &lane.uf[i * d_ff + f0..][..f1 - f0];
+                        let out = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                ffp.0.add(i * d_ff + f0), f1 - f0)
+                        };
+                        for (o, (gi, ui)) in out.iter_mut()
+                            .zip(g.iter().zip(u)) {
+                            *o = silu(*gi) * ui;
+                        }
+                    }
+                }
+                comm.barrier(); // join B entry
+                if !lane.dead {
+                    let ff_all = unsafe {
+                        std::slice::from_raw_parts(ffp.0, t * d_ff)
+                    };
+                    layer.w_down.forward_batch_range(
+                        ff_all, precision, &mut lane.engine, m0, m1,
+                        &SharedOut(mlpp.0));
+                    if r == 0 {
+                        lane.bits[li * 7 + 6]
+                            .extend_from_slice(&lane.engine.batch.bits);
+                    }
+                }
+                comm.barrier(); // join B exit
+                if !lane.dead {
+                    let mlp_all = unsafe {
+                        std::slice::from_raw_parts(mlpp.0, t * d)
+                    };
+                    for (xi, mi) in lane.xs[..t * d].iter_mut()
+                        .zip(mlp_all) {
+                        *xi += mi;
+                    }
+                }
+            }
+            if !lane.dead {
+                for i in 0..t {
+                    rmsnorm(&lane.xs[i * d..(i + 1) * d],
+                            &m.final_norm, c.norm_eps,
+                            &mut lane.xn[i * d..(i + 1) * d]);
+                }
+                m.lm_head.forward_batch_range(
+                    &lane.xn[..t * d], precision, &mut lane.engine, v0,
+                    v1, &SharedOut(logp.0));
+            }
+        });
+
+        // replay shard 0's per-token bits into each slot's own stats
+        for li in 0..c.n_layers {
+            for lin in 0..LINEAR_NAMES.len() {
+                record_slots(slots, &self.lanes[0].bits[li * 7 + lin],
+                             li, lin, c.slice_bits);
+            }
+        }
+        if let Some(e) = self.take_err() {
+            return Err(e.into());
+        }
+        for s in slots.iter_mut() {
+            s.stats.tokens += 1;
+        }
+        let v = c.vocab_size;
+        if logits.len() < t * v {
+            logits.resize(t * v, 0.0);
+        }
+        logits[..t * v].copy_from_slice(&self.shared_logits[..t * v]);
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Speculative decoding under shards
+    // -----------------------------------------------------------------
+
+    /// Sharded [`Model::verify_logits`]: batched linears,
+    /// per-position KV commit, per-lane pre-RoPE K/V capture; appends
+    /// every row's logits to `out`.
+    pub fn verify_logits(&mut self, m: &Model, tokens: &[u32],
+                         kv: &mut KvShards, seq: KvHandle,
+                         precision: Precision, stats: &mut DecodeStats,
+                         out: &mut Vec<f32>) -> Result<()> {
+        anyhow::ensure!(tokens.len() <= MAX_PREFILL_BLOCK,
+                        "verify block exceeds MAX_PREFILL_BLOCK");
+        self.block_forward(m, tokens, kv, seq, precision, stats,
+                           BlockMode::Spec)?;
+        out.extend_from_slice(
+            &self.shared_logits[..tokens.len() * m.cfg.vocab_size]);
+        Ok(())
+    }
+
+    /// Sharded [`Model::verify_commit`]: same accept loop, same
+    /// rollback discipline, with mirrored checkpoints and each lane
+    /// re-committing accepted rows from its own local-width capture in
+    /// the identical position-outer / layer-inner order.
+    pub fn verify_commit(&mut self, m: &Model, last: u32,
+                         drafts: &[u32], kv: &mut KvShards,
+                         seq: KvHandle, precision: Precision,
+                         stats: &mut DecodeStats) -> Result<SpecRound> {
+        let c = &m.cfg;
+        let k = drafts.len();
+        anyhow::ensure!(k + 1 <= MAX_PREFILL_BLOCK,
+                        "draft window exceeds MAX_PREFILL_BLOCK");
+        let len0 = kv.seq_len(seq);
+        anyhow::ensure!(len0 + k + 1 <= c.max_seq_len,
+                        "speculative window exceeds the context");
+        let cks = kv.checkpoint_seq(seq);
+        let mut fed = Vec::with_capacity(k + 1);
+        fed.push(last);
+        fed.extend_from_slice(drafts);
+        if let Err(e) = self.block_forward(m, &fed, kv, seq, precision,
+                                           stats, BlockMode::Spec) {
+            kv.rollback_seq(seq, &cks);
+            return Err(e);
+        }
+        let vocab = c.vocab_size;
+        let logits = &self.shared_logits;
+        let mut matched = 0usize;
+        while matched < k {
+            let next =
+                argmax(&logits[matched * vocab..(matched + 1) * vocab]);
+            if next as u32 == drafts[matched] {
+                matched += 1;
+            } else {
+                break;
+            }
+        }
+        let mut tokens = Vec::with_capacity(matched + 1);
+        tokens.extend_from_slice(&drafts[..matched]);
+        tokens.push(
+            argmax(&logits[matched * vocab..(matched + 1) * vocab])
+                as u32,
+        );
+        if matched < k {
+            // roll every shard back, then re-commit the accepted
+            // positions from each lane's capture — position-outer,
+            // layer-inner, exactly the unsharded append order per
+            // arena
+            kv.rollback_seq(seq, &cks);
+            for i in 0..=matched {
+                for li in 0..c.n_layers {
+                    for (s, arena) in
+                        kv.arenas_mut().iter_mut().enumerate() {
+                        let cap = &self.lanes[s].cap;
+                        if let Err(e) = arena.append_kv_block(
+                            seq, li, &self.rope, cap.k_row(li, i),
+                            cap.v_row(li, i), 1) {
+                            kv.rollback_seq(seq, &cks);
+                            return Err(e.into());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(SpecRound { drafted: k, matched, tokens })
+    }
+
+    /// Sharded [`Model::speculate_round`].
+    pub fn speculate_round(&mut self, m: &Model, last: u32,
+                           kv: &mut KvShards, seq: KvHandle,
+                           precision: Precision,
+                           draft_precision: Precision, k: usize,
+                           stats: &mut DecodeStats,
+                           draft_stats: &mut DecodeStats)
+                           -> Result<SpecRound> {
+        let len0 = kv.seq_len(seq);
+        let k = k
+            .min(m.cfg.max_seq_len.saturating_sub(len0 + 1))
+            .min(MAX_PREFILL_BLOCK - 1);
+        let mut drafts = Vec::with_capacity(k);
+        if k > 0 {
+            let cks = kv.checkpoint_seq(seq);
+            let mut cur = last;
+            for _ in 0..k {
+                match self.greedy_step(m, cur, kv, seq,
+                                       draft_precision, draft_stats) {
+                    Ok(next) => {
+                        drafts.push(next);
+                        cur = next;
+                    }
+                    Err(e) => {
+                        kv.rollback_seq(seq, &cks);
+                        return Err(e);
+                    }
+                }
+            }
+            kv.rollback_seq(seq, &cks);
+        }
+        self.verify_commit(m, last, &drafts, kv, seq, precision, stats)
+    }
+
+    /// Sharded [`Model::generate_speculative`].
+    pub fn generate_speculative(&mut self, m: &Model, prompt: &[u32],
+                                n_new: usize, precision: Precision,
+                                kv_prec: KvPrecision, cfg: &SpecConfig,
+                                stats: &mut DecodeStats,
+                                state: &mut SpecState)
+                                -> Result<Vec<u32>> {
+        let (mut kv, seq) = self.new_kv_at(m, kv_prec);
+        let mut toks = prompt.to_vec();
+        if n_new == 0 || prompt.is_empty() {
+            return Ok(toks);
+        }
+        let mut last = self.greedy_prefill(m, prompt, &mut kv, seq,
+                                           precision, stats)?;
+        toks.push(last);
+        let mut generated = 1usize;
+        while generated < n_new {
+            let k = state.k.min(n_new - generated - 1);
+            let draft_precision = state.draft_precision(cfg);
+            let round = self.speculate_round(
+                m, last, &mut kv, seq, precision, draft_precision, k,
+                stats, &mut state.draft_stats)?;
+            debug_assert_eq!(round.tokens.len(), round.matched + 1);
+            toks.extend_from_slice(&round.tokens);
+            generated += round.tokens.len();
+            last = *round.tokens.last().expect("round commits >= 1");
+            state.observe(cfg, round.drafted, round.matched,
+                          round.tokens.len());
+        }
+        debug_assert_eq!(toks.len(), prompt.len() + n_new);
+        Ok(toks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::synth_model_shaped;
+
+    #[test]
+    fn shard_range_covers_contiguously() {
+        for total in [1usize, 2, 3, 5, 7, 8, 64, 100] {
+            for n in 1..=total.min(9) {
+                let mut next = 0usize;
+                for s in 0..n {
+                    let (lo, hi) = shard_range(total, n, s);
+                    assert_eq!(lo, next, "gap at shard {s}/{n}");
+                    assert!(hi > lo, "empty shard {s}/{n} of {total}");
+                    // remainder rule: first `total % n` shards get one
+                    // extra
+                    let want = total / n + usize::from(s < total % n);
+                    assert_eq!(hi - lo, want);
+                    next = hi;
+                }
+                assert_eq!(next, total);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_keeps_gqa_groups_whole() {
+        let m = synth_model_shaped(7, 6, 3, 64);
+        let plan = ShardPlan::new(&m.cfg, 2).unwrap();
+        // 3 kv heads over 2 shards: remainder shard 0 takes 2
+        assert_eq!(plan.kv, vec![(0, 2), (2, 3)]);
+        // rep = 2 query heads per kv head, scaled ranges
+        assert_eq!(plan.heads, vec![(0, 4), (4, 6)]);
+        let elems = plan.join_elems_per_token(&m.cfg);
+        assert_eq!(elems, 3 * m.cfg.d_model + m.cfg.d_ff);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shard_counts() {
+        let m = synth_model_shaped(7, 4, 2, 64);
+        assert!(ShardPlan::new(&m.cfg, 0).is_err());
+        assert!(ShardPlan::new(&m.cfg, 3).is_err(), "3 > n_kv_heads");
+        assert!(ShardPlan::new(&m.cfg, 1).is_ok());
+        assert!(ShardPlan::new(&m.cfg, 2).is_ok());
+    }
+
+    #[test]
+    fn static_backend_rejected() {
+        let m = synth_model_shaped(3, 4, 2, 64);
+        assert!(ShardRuntime::new(&m, 2).is_ok());
+        // (static backends only come from bundles; synth models are
+        // Mobiq + Dense, so the accept path is what's checkable here)
+    }
+
+    /// One shard == the unsharded model, bit for bit: the sharded
+    /// protocol with N = 1 runs the same kernels over full ranges.
+    #[test]
+    fn single_shard_matches_unsharded() {
+        let m = synth_model_shaped(11, 4, 2, 96);
+        let prec = Precision::elastic(4.0);
+        let toks: Vec<u32> = (0..40u32).map(|i| (i * 7 + 3) % 256)
+            .collect();
+        let want = m.forward_logits(&toks, prec).unwrap();
+        let mut rt = ShardRuntime::new(&m, 1).unwrap();
+        let got = rt.forward_logits(&m, &toks, prec).unwrap();
+        assert_eq!(want, got, "single-shard logits must be bitwise \
+                               equal to the unsharded path");
+
+        let mut st_a = DecodeStats::new(m.cfg.n_layers);
+        let mut st_b = DecodeStats::new(m.cfg.n_layers);
+        let a = m.generate(&toks[..9], 12, prec, &mut st_a).unwrap();
+        let b = rt.generate(&m, &toks[..9], 12, prec, &mut st_b)
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(st_a.total_bits, st_b.total_bits,
+                   "stats replay must match direct recording");
+        assert_eq!(st_a.bits_hist, st_b.bits_hist);
+        assert_eq!(st_a.tokens, st_b.tokens);
+    }
+
+    /// Two shards == one shard (== unsharded), including a GQA
+    /// remainder split (3 kv heads over 2 shards).
+    #[test]
+    fn two_shards_match_single() {
+        for (nh, nkv) in [(4usize, 2usize), (6, 3)] {
+            let m = synth_model_shaped(13, nh, nkv, 96);
+            let prec = Precision::elastic(4.0);
+            let toks: Vec<u32> = (0..33u32).map(|i| (i * 11 + 5) % 256)
+                .collect();
+            let want = m.forward_logits(&toks, prec).unwrap();
+            let mut rt = ShardRuntime::new(&m, 2).unwrap();
+            let got = rt.forward_logits(&m, &toks, prec).unwrap();
+            assert_eq!(want, got,
+                       "{nh}/{nkv} heads over 2 shards diverged");
+        }
+    }
+}

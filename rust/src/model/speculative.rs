@@ -253,11 +253,11 @@ impl SpecCapture {
         self.v[lo..lo + n].copy_from_slice(&v[..n]);
     }
 
-    fn k_row(&self, li: usize, i: usize) -> &[f32] {
+    pub(crate) fn k_row(&self, li: usize, i: usize) -> &[f32] {
         &self.k[(li * self.t + i) * self.dkv..][..self.dkv]
     }
 
-    fn v_row(&self, li: usize, i: usize) -> &[f32] {
+    pub(crate) fn v_row(&self, li: usize, i: usize) -> &[f32] {
         &self.v[(li * self.t + i) * self.dkv..][..self.dkv]
     }
 }

@@ -33,6 +33,7 @@ use super::weights::{load_fp_dense, load_linear, BackendKind,
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{Precision, Scratch};
 use crate::util::threadpool::{SharedMut, ThreadPool};
+use crate::util::tunable::TunableGate;
 
 // Re-exported so existing call sites (benches, analysis probes) keep
 // their `transformer::` paths after the attention split.
@@ -77,8 +78,8 @@ impl DecodeStats {
         self.per_linear_bits[i] as f64 / self.per_linear_calls[i] as f64
     }
 
-    fn record(&mut self, layer: usize, lin: usize, bits: usize,
-              slice_bits: usize) {
+    pub(crate) fn record(&mut self, layer: usize, lin: usize, bits: usize,
+                         slice_bits: usize) {
         self.linear_calls += 1;
         self.total_bits += bits as u64;
         let k = (bits / slice_bits.max(1)).min(self.bits_hist.len() - 1);
@@ -183,8 +184,8 @@ pub struct DecodeSlot<'a> {
 }
 
 /// Record one batched linear's per-token effective bits.
-fn record_block(stats: &mut DecodeStats, bits: &[usize], layer: usize,
-                lin: usize, slice_bits: usize) {
+pub(crate) fn record_block(stats: &mut DecodeStats, bits: &[usize],
+                           layer: usize, lin: usize, slice_bits: usize) {
     for &b in bits {
         stats.record(layer, lin, b, slice_bits);
     }
@@ -192,8 +193,8 @@ fn record_block(stats: &mut DecodeStats, bits: &[usize], layer: usize,
 
 /// Record one batched linear's effective bits into each slot's own
 /// stats accumulator (slot i routed the batch's i-th token).
-fn record_slots(slots: &mut [DecodeSlot], bits: &[usize], layer: usize,
-                lin: usize, slice_bits: usize) {
+pub(crate) fn record_slots(slots: &mut [DecodeSlot], bits: &[usize],
+                           layer: usize, lin: usize, slice_bits: usize) {
     for (s, &b) in slots.iter_mut().zip(bits) {
         s.stats.record(layer, lin, b, slice_bits);
     }
@@ -218,6 +219,14 @@ fn record_slots(slots: &mut [DecodeSlot], bits: &[usize], layer: usize,
 /// a 4x margin (EXPERIMENTS.md §Runtime).
 pub const ELEMENTWISE_PARALLEL_MIN: usize = 1 << 13;
 
+/// Runtime-overridable view of [`ELEMENTWISE_PARALLEL_MIN`]:
+/// `MOBIQ_ELEMENTWISE_PARALLEL_MIN` or
+/// `ServerConfig.elementwise_parallel_min` moves the dispatch gate
+/// without a rebuild.  Dispatch only — per-row math is identical.
+pub static ELEMENTWISE_PARALLEL_MIN_GATE: TunableGate =
+    TunableGate::new("MOBIQ_ELEMENTWISE_PARALLEL_MIN",
+                     ELEMENTWISE_PARALLEL_MIN);
+
 /// One scaffold for every block helper: run `body(i, row)` for each
 /// token row `i in 0..t` (`row` = the `width`-wide &mut slice of `out`
 /// at row i), chunked over the pool when `t * width` clears the gate
@@ -227,7 +236,8 @@ fn par_rows(t: usize, width: usize, pool: Option<&ThreadPool>,
             out: &mut [f32], body: impl Fn(usize, &mut [f32]) + Sync) {
     debug_assert!(out.len() >= t * width);
     let parallel = pool.filter(|p| {
-        p.size() > 1 && t > 1 && t * width >= ELEMENTWISE_PARALLEL_MIN
+        p.size() > 1 && t > 1
+            && t * width >= ELEMENTWISE_PARALLEL_MIN_GATE.get()
     });
     let Some(p) = parallel else {
         for (i, row) in out[..t * width].chunks_exact_mut(width)

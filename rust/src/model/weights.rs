@@ -4,7 +4,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::mobiq::artifact::Bundle;
 use crate::mobiq::engine::{MobiqLinear, Precision, Scratch};
-use crate::mobiq::gemv::matvec;
+use crate::mobiq::gemv::{matvec, matvec_range, SharedOut};
 use crate::mobiq::static_quant::StaticLinear;
 
 pub const LINEAR_NAMES: [&str; 7] =
@@ -138,6 +138,61 @@ impl LinearBackend {
                 }
                 s.bits as usize * t
             }
+        }
+    }
+
+    /// Column-sharded token forward for the tensor-parallel path:
+    /// output channels `o0..o1` into the compact `out`, bit-identical
+    /// per channel to [`LinearBackend::forward_token`].  `Static` has
+    /// no range kernel and is rejected at `ShardRuntime` construction
+    /// (baseline backend, never served sharded) — reaching it here is a
+    /// caller bug.
+    pub fn forward_token_range(&self, x: &[f32], precision: Precision,
+                               scratch: &mut Scratch, o0: usize,
+                               o1: usize, out: &mut [f32]) -> usize {
+        match self {
+            LinearBackend::Dense { w, d_in, d_out } => {
+                matvec_range(w, x, *d_in, *d_out, o0, o1, out);
+                16
+            }
+            LinearBackend::Mobiq(m) => {
+                m.forward_token_range(x, precision, scratch, o0, o1, out)
+            }
+            LinearBackend::Static(_) => unreachable!(
+                "Static backends are rejected at ShardRuntime::new"),
+        }
+    }
+
+    /// Column-sharded batched forward: channels `o0..o1` of every
+    /// token, written at full d_out stride into the shared buffer.
+    /// Fills `scratch.batch.bits` identically to
+    /// [`LinearBackend::forward_batch`] (replicated routing); returns
+    /// the summed bits.
+    pub fn forward_batch_range(&self, xs: &[f32], precision: Precision,
+                               scratch: &mut Scratch, o0: usize,
+                               o1: usize, out: &SharedOut) -> usize {
+        match self {
+            LinearBackend::Dense { w, d_in, d_out } => {
+                let (di, dn) = (*d_in, *d_out);
+                let t = xs.len() / di;
+                scratch.batch.bits.clear();
+                for i in 0..t {
+                    // SAFETY: lanes own disjoint (token, o0..o1) cells.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            out.0.add(i * dn + o0), o1 - o0)
+                    };
+                    matvec_range(w, &xs[i * di..(i + 1) * di], di, dn,
+                                 o0, o1, row);
+                    scratch.batch.bits.push(16);
+                }
+                16 * t
+            }
+            LinearBackend::Mobiq(m) => {
+                m.forward_batch_range(xs, precision, scratch, o0, o1, out)
+            }
+            LinearBackend::Static(_) => unreachable!(
+                "Static backends are rejected at ShardRuntime::new"),
         }
     }
 

@@ -1,0 +1,370 @@
+//! Communicator abstraction for tensor-parallel sharded execution.
+//!
+//! The sharded forward path (`model/shard.rs`) partitions attention
+//! heads, FFN slices and the KV arena across N worker shards.  All
+//! cross-shard coordination goes through the [`Communicator`] trait —
+//! the sharded transformer code never touches the threadpool directly —
+//! so the in-process backend here can later be swapped for a
+//! multi-process or PJRT-device backend behind the same three
+//! primitives (the `CommunicatorGroup`/`ReduceType` shape InfiniLM
+//! uses for its NVIDIA distributed llama; see ROADMAP).
+//!
+//! ## First backend: in-process shards on the persistent pool
+//!
+//! [`InProcGroup`] owns N rank handles ([`InProcComm`]) and dispatches
+//! one closure per rank onto the existing persistent fork-join
+//! [`ThreadPool`] ([`InProcGroup::run`] — the single point where
+//! sharded execution meets the pool).  Ranks coordinate through a
+//! sense-counting barrier (mutex + condvar; a dispatch-heavy fanout
+//! would want a spinning tree barrier, but a decode layer crosses the
+//! barrier 4 times per layer against ~10⁵-FLOP phases, so the condvar
+//! cost is noise at current shapes and trivially correct).
+//!
+//! **Determinism note.**  `all_reduce_sum` is rank-count-dependent by
+//! construction: it folds partials in rank order, which re-associates
+//! f32 addition relative to a serial kernel, so a reduction-based join
+//! cannot be bit-identical across shard counts.  The sharded
+//! transformer therefore joins by *gather* — every output element is
+//! computed whole by exactly one shard and barriers publish the
+//! columns (see `model/shard.rs` and EXPERIMENTS.md §Sharding) —
+//! and `all_reduce_sum`/`broadcast` are provided (and unit-tested)
+//! for the approximate row-partial GEMM path and for future backends
+//! where exactness is already scoped per device.
+//!
+//! ## Pool-capacity contract
+//!
+//! Ranks block inside barriers mid-closure, so every rank must run on
+//! its own pool lane for the lifetime of one `run` dispatch:
+//! `parallel_for(n_shards, ..)` with `pool.size() >= n_shards` wakes
+//! exactly `n_shards - 1` workers and runs the last rank on the
+//! caller, and a lane blocked in a barrier cannot claim a second rank
+//! before every rank has been claimed (the barrier only opens once all
+//! ranks reach it).  [`InProcGroup::new`] enforces the capacity bound
+//! at construction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::threadpool::ThreadPool;
+
+/// Collective-communication surface of one shard (one "rank").  The
+/// sharded forward path is written against this trait only.
+pub trait Communicator {
+    /// Number of shards in the group.
+    fn n_shards(&self) -> usize;
+
+    /// This shard's index, `0..n_shards`.
+    fn rank(&self) -> usize;
+
+    /// Block until every rank in the group has called `barrier`.
+    /// This is the primitive the exact gather joins are built on.
+    fn barrier(&self);
+
+    /// Element-wise sum of every rank's `buf` across the group; all
+    /// ranks return with identical contents.  Partials are folded in
+    /// rank order (deterministic for a fixed shard count, not
+    /// bit-stable across shard counts — see module docs).  All ranks
+    /// must pass equal-length buffers.
+    fn all_reduce_sum(&self, buf: &mut [f32]);
+
+    /// Copy `root`'s `buf` into every rank's `buf`.  All ranks must
+    /// pass equal-length buffers.
+    fn broadcast(&self, root: usize, buf: &mut [f32]);
+}
+
+/// Shared state of one in-process group.
+struct InProcShared {
+    n: usize,
+    /// Sense-counting barrier: arrivals in the current generation,
+    /// plus the generation counter that releases waiters.
+    gate: Mutex<(usize, u64)>,
+    cv: Condvar,
+    /// Exchange slab for `all_reduce_sum`/`broadcast`: `n` rank slots
+    /// of the call's buffer length, grown on demand under the lock.
+    slots: Mutex<Vec<f32>>,
+    /// Length every rank passed to the current collective (validated:
+    /// ragged collectives are a protocol bug, caught loudly).
+    slot_len: AtomicUsize,
+}
+
+impl InProcShared {
+    fn barrier(&self) {
+        let mut g = self.gate.lock().unwrap();
+        let gen = g.1;
+        g.0 += 1;
+        if g.0 == self.n {
+            g.0 = 0;
+            g.1 = g.1.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        while g.1 == gen {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// One rank's handle onto an in-process shard group.  Cheap to clone
+/// conceptually (all state is behind an `Arc`), but ranks are handed
+/// out by [`InProcGroup::run`] — user code never fabricates one.
+pub struct InProcComm {
+    rank: usize,
+    shared: Arc<InProcShared>,
+}
+
+impl InProcComm {
+    /// Stage this rank's buffer into its exchange slot.  Returns the
+    /// per-rank slot stride (== `buf.len()`).
+    fn stage(&self, buf: &[f32]) {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let need = self.shared.n * buf.len();
+        if slots.len() < need {
+            slots.resize(need, 0.0);
+        }
+        let prev = self.shared.slot_len.swap(buf.len(), Ordering::Relaxed);
+        debug_assert!(prev == 0 || prev == buf.len(),
+                      "ragged collective: ranks passed different lengths");
+        let lo = self.rank * buf.len();
+        slots[lo..lo + buf.len()].copy_from_slice(buf);
+    }
+}
+
+impl Communicator for InProcComm {
+    fn n_shards(&self) -> usize {
+        self.shared.n
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn barrier(&self) {
+        self.shared.barrier();
+    }
+
+    fn all_reduce_sum(&self, buf: &mut [f32]) {
+        if self.shared.n == 1 {
+            return;
+        }
+        self.stage(buf);
+        // all slots staged after this
+        self.shared.barrier();
+        {
+            let slots = self.shared.slots.lock().unwrap();
+            let w = buf.len();
+            // fold in rank order so every rank computes the identical
+            // (shard-count-dependent) association
+            buf.copy_from_slice(&slots[..w]);
+            for r in 1..self.shared.n {
+                for (o, &x) in buf.iter_mut().zip(&slots[r * w..(r + 1) * w])
+                {
+                    *o += x;
+                }
+            }
+        }
+        // all ranks done reading before slots can be restaged
+        self.shared.slot_len.store(0, Ordering::Relaxed);
+        self.shared.barrier();
+    }
+
+    fn broadcast(&self, root: usize, buf: &mut [f32]) {
+        if self.shared.n == 1 {
+            return;
+        }
+        debug_assert!(root < self.shared.n, "broadcast root out of range");
+        if self.rank == root {
+            self.stage(buf);
+        } else {
+            // non-roots still publish their length for the ragged check
+            let mut slots = self.shared.slots.lock().unwrap();
+            let need = self.shared.n * buf.len();
+            if slots.len() < need {
+                slots.resize(need, 0.0);
+            }
+        }
+        self.shared.barrier();
+        if self.rank != root {
+            let slots = self.shared.slots.lock().unwrap();
+            let w = buf.len();
+            buf.copy_from_slice(&slots[root * w..root * w + w]);
+        }
+        self.shared.barrier();
+    }
+}
+
+/// An in-process shard group: N rank handles plus the pool that runs
+/// them.  This is the only type in the sharded path that talks to the
+/// [`ThreadPool`]; everything above it sees [`Communicator`]s.
+pub struct InProcGroup {
+    comms: Vec<InProcComm>,
+    pool: Arc<ThreadPool>,
+}
+
+impl InProcGroup {
+    /// Build a group of `n_shards` ranks on `pool`.
+    ///
+    /// # Panics
+    /// If `n_shards == 0` or `pool.size() < n_shards` — ranks block in
+    /// barriers, so each needs a dedicated lane (see module docs).
+    pub fn new(n_shards: usize, pool: Arc<ThreadPool>) -> InProcGroup {
+        assert!(n_shards > 0, "shard group needs at least one rank");
+        assert!(pool.size() >= n_shards,
+                "pool of {} lanes cannot run {} blocking shard ranks",
+                pool.size(), n_shards);
+        let shared = Arc::new(InProcShared {
+            n: n_shards,
+            gate: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+            slots: Mutex::new(Vec::new()),
+            slot_len: AtomicUsize::new(0),
+        });
+        let comms = (0..n_shards)
+            .map(|rank| InProcComm { rank, shared: Arc::clone(&shared) })
+            .collect();
+        InProcGroup { comms, pool }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.comms.len()
+    }
+
+    /// Run `f` once per rank, concurrently, returning when every rank
+    /// has finished.  The closure may call barriers/collectives on its
+    /// rank handle; it must make the same sequence of collective calls
+    /// on every rank (the usual SPMD contract).
+    pub fn run(&self, f: impl Fn(&InProcComm) + Sync) {
+        let n = self.comms.len();
+        if n == 1 {
+            f(&self.comms[0]);
+            return;
+        }
+        self.pool.parallel_for(n, |i| f(&self.comms[i]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn group(n: usize) -> InProcGroup {
+        InProcGroup::new(n, Arc::new(ThreadPool::new(n)))
+    }
+
+    #[test]
+    fn runs_every_rank_once() {
+        let g = group(4);
+        let seen = AtomicU64::new(0);
+        g.run(|c| {
+            assert_eq!(c.n_shards(), 4);
+            seen.fetch_or(1 << c.rank(), Ordering::SeqCst);
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        // every rank writes its slot in phase 1; after the barrier,
+        // every rank must observe all phase-1 writes
+        let g = group(3);
+        let phase1 = [AtomicU64::new(0), AtomicU64::new(0),
+                      AtomicU64::new(0)];
+        g.run(|c| {
+            phase1[c.rank()].store(c.rank() as u64 + 1, Ordering::SeqCst);
+            c.barrier();
+            for (r, slot) in phase1.iter().enumerate() {
+                assert_eq!(slot.load(Ordering::SeqCst), r as u64 + 1,
+                           "rank {} missed rank {}'s phase-1 write",
+                           c.rank(), r);
+            }
+            c.barrier();
+        });
+    }
+
+    #[test]
+    fn barrier_reusable_many_generations() {
+        let g = group(2);
+        let counter = AtomicU64::new(0);
+        g.run(|c| {
+            for i in 0..64u64 {
+                if c.rank() == 0 {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }
+                c.barrier();
+                assert_eq!(counter.load(Ordering::SeqCst), i + 1);
+                c.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn all_reduce_sums_in_rank_order() {
+        let g = group(3);
+        let ok = AtomicU64::new(0);
+        g.run(|c| {
+            let mut buf = vec![c.rank() as f32 + 1.0; 5];
+            buf[0] = (c.rank() as f32 + 1.0) * 10.0;
+            c.all_reduce_sum(&mut buf);
+            // ranks contribute 1+2+3 (tail) and 10+20+30 (head)
+            assert_eq!(buf[0], 60.0);
+            assert!(buf[1..].iter().all(|&x| x == 6.0));
+            ok.fetch_add(1, Ordering::SeqCst);
+            // back-to-back reductions must not see stale slots
+            let mut buf2 = vec![1.0f32; 2];
+            c.all_reduce_sum(&mut buf2);
+            assert!(buf2.iter().all(|&x| x == 3.0));
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn all_reduce_single_rank_is_identity() {
+        let g = group(1);
+        g.run(|c| {
+            let mut buf = vec![4.0f32, 5.0];
+            c.all_reduce_sum(&mut buf);
+            assert_eq!(buf, vec![4.0, 5.0]);
+        });
+    }
+
+    #[test]
+    fn broadcast_copies_root() {
+        let g = group(4);
+        g.run(|c| {
+            let mut buf = if c.rank() == 2 {
+                vec![7.0f32, 8.0, 9.0]
+            } else {
+                vec![0.0f32; 3]
+            };
+            c.broadcast(2, &mut buf);
+            assert_eq!(buf, vec![7.0, 8.0, 9.0], "rank {}", c.rank());
+            // a second broadcast from a different root reuses the slab
+            let mut buf2 = if c.rank() == 0 {
+                vec![-1.0f32]
+            } else {
+                vec![0.0f32]
+            };
+            c.broadcast(0, &mut buf2);
+            assert_eq!(buf2, vec![-1.0]);
+        });
+    }
+
+    #[test]
+    fn oversized_pool_is_fine() {
+        // more lanes than ranks: parallel_for(n) wakes only n-1
+        let g = InProcGroup::new(2, Arc::new(ThreadPool::new(5)));
+        let hits = AtomicU64::new(0);
+        g.run(|c| {
+            c.barrier();
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run")]
+    fn undersized_pool_rejected() {
+        // 2 lanes cannot host 3 ranks that block in barriers
+        let _ = InProcGroup::new(3, Arc::new(ThreadPool::new(2)));
+    }
+}

@@ -3,7 +3,9 @@
 
 pub mod bench;
 pub mod cli;
+pub mod comm;
 pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod threadpool;
+pub mod tunable;

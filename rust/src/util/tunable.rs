@@ -1,0 +1,159 @@
+//! Runtime-overridable performance gates.
+//!
+//! The three parallel-dispatch thresholds (`PARALLEL_MIN_DOUT`,
+//! `ATTN_PARALLEL_MIN_WORK`, `ELEMENTWISE_PARALLEL_MIN`) were derived
+//! analytically for the persistent fork-join pool and have never been
+//! validated on real hardware (no container since the seed has carried
+//! a Rust toolchain — see ROADMAP "toolchain debt").  Baking them in as
+//! `const`s means the first cargo-equipped session would need a
+//! rebuild per candidate value to tune them from measured `perf_pool`
+//! dispatch latency.  A [`TunableGate`] keeps the compiled-in constant
+//! as the default but lets it be overridden at process start (env var)
+//! or at runtime (`ServerConfig` / tests), no rebuild required.
+//!
+//! Resolution order: programmatic [`TunableGate::set`] beats the
+//! environment variable beats the compiled-in default.  The env lookup
+//! is cached on first read (gates sit on kernel hot paths; a `getenv`
+//! per GEMV would be absurd), so exported overrides must be in place
+//! before the first forward pass — which is how deployment knobs work
+//! anyway.  The programmatic setter is plumbed for tests and for
+//! `ServerConfig`, where it is applied before the scheduler starts.
+//!
+//! Gates only move the serial/parallel dispatch decision, never the
+//! arithmetic: serial and pooled kernels are pinned bit-identical
+//! (`tests/parallel_parity.rs`), so a concurrently flipped gate can
+//! change wall time but not one output bit.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Sentinel meaning "no programmatic override installed".
+const UNSET: usize = usize::MAX;
+
+/// One runtime-overridable threshold: a compiled-in default, an
+/// optional environment override (read once), and an optional
+/// programmatic override (atomic, takes precedence).
+pub struct TunableGate {
+    env_name: &'static str,
+    default: usize,
+    /// Programmatic override; [`UNSET`] when absent.
+    set: AtomicUsize,
+    /// Cached result of the env lookup (`None` = unset or unparsable).
+    env: OnceLock<Option<usize>>,
+}
+
+impl TunableGate {
+    /// `const`-constructible so gates can live in `static`s next to
+    /// the constants they wrap.
+    pub const fn new(env_name: &'static str, default: usize)
+                     -> TunableGate {
+        TunableGate {
+            env_name,
+            default,
+            set: AtomicUsize::new(UNSET),
+            env: OnceLock::new(),
+        }
+    }
+
+    /// Current effective value: programmatic override, else env var
+    /// (first read wins, cached), else the compiled-in default.
+    #[inline]
+    pub fn get(&self) -> usize {
+        let s = self.set.load(Ordering::Relaxed);
+        if s != UNSET {
+            return s;
+        }
+        self.env
+            .get_or_init(|| {
+                std::env::var(self.env_name)
+                    .ok()
+                    .and_then(|v| v.trim().parse().ok())
+            })
+            .unwrap_or(self.default)
+    }
+
+    /// Install a programmatic override (beats env and default).
+    /// `usize::MAX` is reserved as the unset sentinel and clamps down
+    /// one — at that magnitude both values mean "never parallel".
+    pub fn set(&self, v: usize) {
+        self.set.store(v.min(UNSET - 1), Ordering::Relaxed);
+    }
+
+    /// Drop the programmatic override, falling back to env/default.
+    pub fn clear(&self) {
+        self.set.store(UNSET, Ordering::Relaxed);
+    }
+
+    /// The compiled-in default (what `get` returns with no overrides).
+    pub fn default_value(&self) -> usize {
+        self.default
+    }
+
+    /// The environment variable this gate reads at first use.
+    pub fn env_var(&self) -> &'static str {
+        self.env_name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_when_untouched() {
+        let g = TunableGate::new("MOBIQ_TEST_GATE_UNSET_XYZ", 128);
+        assert_eq!(g.get(), 128);
+        assert_eq!(g.default_value(), 128);
+        assert_eq!(g.env_var(), "MOBIQ_TEST_GATE_UNSET_XYZ");
+    }
+
+    #[test]
+    fn programmatic_override_and_clear() {
+        let g = TunableGate::new("MOBIQ_TEST_GATE_SET_XYZ", 128);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(0);
+        assert_eq!(g.get(), 0, "zero (always parallel) is a valid value");
+        g.clear();
+        assert_eq!(g.get(), 128, "clear falls back to the default");
+    }
+
+    #[test]
+    fn env_override_read_once() {
+        // Fresh gate instances so the global statics are untouched and
+        // this test cannot race the parity suites.
+        std::env::set_var("MOBIQ_TEST_GATE_ENV_XYZ", "4096");
+        let g = TunableGate::new("MOBIQ_TEST_GATE_ENV_XYZ", 128);
+        assert_eq!(g.get(), 4096);
+        // the lookup is cached: later env changes do not move the gate
+        std::env::set_var("MOBIQ_TEST_GATE_ENV_XYZ", "1");
+        assert_eq!(g.get(), 4096);
+        std::env::remove_var("MOBIQ_TEST_GATE_ENV_XYZ");
+    }
+
+    #[test]
+    fn set_beats_env() {
+        std::env::set_var("MOBIQ_TEST_GATE_PREC_XYZ", "4096");
+        let g = TunableGate::new("MOBIQ_TEST_GATE_PREC_XYZ", 128);
+        g.set(9);
+        assert_eq!(g.get(), 9, "programmatic override beats env");
+        g.clear();
+        assert_eq!(g.get(), 4096, "clearing falls back to env");
+        std::env::remove_var("MOBIQ_TEST_GATE_PREC_XYZ");
+    }
+
+    #[test]
+    fn garbage_env_falls_back_to_default() {
+        std::env::set_var("MOBIQ_TEST_GATE_BAD_XYZ", "not-a-number");
+        let g = TunableGate::new("MOBIQ_TEST_GATE_BAD_XYZ", 128);
+        assert_eq!(g.get(), 128);
+        std::env::remove_var("MOBIQ_TEST_GATE_BAD_XYZ");
+    }
+
+    #[test]
+    fn max_clamps_below_sentinel() {
+        let g = TunableGate::new("MOBIQ_TEST_GATE_MAX_XYZ", 128);
+        g.set(usize::MAX);
+        assert_eq!(g.get(), usize::MAX - 1);
+    }
+}

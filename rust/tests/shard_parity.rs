@@ -1,0 +1,352 @@
+//! Tensor-parallel shard parity (ISSUE 8 acceptance).
+//!
+//! The bar: sharded execution is a *partition*, never an
+//! approximation.  Every output channel is still computed whole by
+//! exactly one lane running the serial kernels, and the per-layer
+//! joins are gather barriers — so for any shard count N the logits,
+//! the greedy tokens, the routing stats, and the speculative
+//! accept/reject trace must be **bit-identical** to the unsharded
+//! model.  Swept across GQA configs (including kv-head counts that do
+//! not divide evenly across shards), KV storage precisions, page-seam
+//! context lengths, ragged coalesced-decode batches, and the
+//! scheduler's memory-pressure ladder.
+//!
+//! All on synthetic models, so no `make artifacts` is needed.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use mobiquant::bench_support::synth_model_shaped;
+use mobiquant::coordinator::batcher::Batcher;
+use mobiquant::coordinator::controller::{ControllerConfig,
+                                         ElasticController};
+use mobiquant::coordinator::request::{Request, Response};
+use mobiquant::coordinator::scheduler::Scheduler;
+use mobiquant::coordinator::PressureConfig;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::transformer::{argmax, DecodeSlot, DecodeStats};
+use mobiquant::model::{KvPrecision, ShardRuntime, SpecConfig, SpecState,
+                       KV_PAGE};
+
+/// The GQA sweep: (n_heads, n_kv_heads).  (6, 3) and (8, 4) make the
+/// kv-head remainder rule do real work at N = 2 and N = 3 (3 kv heads
+/// over 2 shards -> 2 + 1; 4 kv heads over 3 shards -> 2 + 1 + 1).
+const GQA: [(usize, usize); 3] = [(4, 2), (6, 3), (8, 4)];
+
+fn prompt_for(seed: usize, len: usize) -> Vec<u32> {
+    (0..len).map(|i| ((i * 7 + 5 * seed + 3) % 256) as u32).collect()
+}
+
+/// Whole-prompt `forward_logits` across every GQA config and every
+/// legal shard count in {1, 2, 3}: all-position logits must be exactly
+/// equal to the unsharded model's.
+#[test]
+fn forward_logits_bit_identical_across_shard_counts() {
+    for &(n_heads, n_kv) in &GQA {
+        let model = synth_model_shaped(131, n_heads, n_kv, 160);
+        let tokens = prompt_for(n_heads, 100);
+        for prec in [Precision::Fixed(2), Precision::elastic(4.0)] {
+            let want = model.forward_logits(&tokens, prec).unwrap();
+            for n in [1usize, 2, 3] {
+                if n > n_kv {
+                    continue;
+                }
+                let mut rt = ShardRuntime::new(&model, n).unwrap();
+                let got = rt.forward_logits(&model, &tokens, prec)
+                    .unwrap();
+                assert_eq!(got, want,
+                           "{n_heads}h/{n_kv}kv N={n} {prec:?}: sharded \
+                            forward diverged from unsharded");
+            }
+        }
+    }
+}
+
+/// End-to-end greedy generation plus the replayed routing stats: the
+/// token stream, the per-token bit histogram, and every per-linear
+/// call/bit counter must match the unsharded run exactly — the stats
+/// replay from lane 0's log may not lose or duplicate a record.
+#[test]
+fn generate_and_stats_bit_identical() {
+    for &(n_heads, n_kv) in &GQA {
+        let model = synth_model_shaped(137, n_heads, n_kv, 128);
+        let prompt = prompt_for(n_kv, 24);
+        let prec = Precision::elastic(4.0);
+        let mut sw = DecodeStats::new(model.cfg.n_layers);
+        let want = model.generate(&prompt, 16, prec, &mut sw).unwrap();
+        for n in [2usize, 3] {
+            if n > n_kv {
+                continue;
+            }
+            let mut rt = ShardRuntime::new(&model, n).unwrap();
+            let mut sg = DecodeStats::new(model.cfg.n_layers);
+            let got = rt.generate(&model, &prompt, 16, prec, &mut sg)
+                .unwrap();
+            assert_eq!(got, want,
+                       "{n_heads}h/{n_kv}kv N={n}: sharded generation \
+                        diverged");
+            assert_eq!(sg.tokens, sw.tokens);
+            assert_eq!(sg.total_bits, sw.total_bits,
+                       "router decisions must be shard-invariant");
+            assert_eq!(sg.linear_calls, sw.linear_calls);
+            assert_eq!(sg.bits_hist, sw.bits_hist);
+            assert_eq!(sg.per_linear_bits, sw.per_linear_bits);
+            assert_eq!(sg.per_linear_calls, sw.per_linear_calls);
+        }
+    }
+}
+
+/// Quantized KV storage under sharding: the per-shard arenas quantize
+/// each kv head's rows with the same per-(page, head, side) absmax
+/// steps as the single arena, so greedy outputs at i8 and u4 KV match
+/// the unsharded run bit for bit.
+#[test]
+fn kv_precision_parity_f32_i8_u4() {
+    let model = synth_model_shaped(139, 6, 3, 128);
+    let prompt = prompt_for(9, 30);
+    let prec = Precision::elastic(4.0);
+    for kvp in [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4] {
+        let mut sw = DecodeStats::new(model.cfg.n_layers);
+        let want = model.generate_at(&prompt, 12, prec, kvp, &mut sw)
+            .unwrap();
+        for n in [2usize, 3] {
+            let mut rt = ShardRuntime::new(&model, n).unwrap();
+            let mut sg = DecodeStats::new(model.cfg.n_layers);
+            let got = rt.generate_at(&model, &prompt, 12, prec, kvp,
+                                     &mut sg).unwrap();
+            assert_eq!(got, want,
+                       "{} KV N={n}: sharded generation diverged",
+                       kvp.label());
+            assert_eq!(sg.total_bits, sw.total_bits);
+        }
+    }
+}
+
+/// Page-seam sweep: context lengths straddling KV page boundaries
+/// (KV_PAGE-1 / KV_PAGE / KV_PAGE+1 / 2*KV_PAGE+1) — per-shard arenas
+/// claim pages at the same positions as the single arena, so the
+/// all-position logits stay exactly equal across the seams.
+#[test]
+fn page_seam_contexts_bit_identical() {
+    let model = synth_model_shaped(149, 4, 2, 3 * KV_PAGE);
+    let prec = Precision::Fixed(2);
+    let mut rt = ShardRuntime::new(&model, 2).unwrap();
+    for len in [KV_PAGE - 1, KV_PAGE, KV_PAGE + 1, 2 * KV_PAGE + 1] {
+        let tokens = prompt_for(len, len);
+        let want = model.forward_logits(&tokens, prec).unwrap();
+        let got = rt.forward_logits(&model, &tokens, prec).unwrap();
+        assert_eq!(got, want, "len={len}: sharded logits diverged at \
+                               a page seam");
+    }
+}
+
+/// Coalesced decode: ragged multi-slot `decode_batch` through the
+/// sharded runtime vs the unsharded model — every logits row and every
+/// greedy token must be exactly equal, step after step, in one shared
+/// (per-shard) paged arena.
+#[test]
+fn decode_batch_bit_identical() {
+    let n_slots = 3usize;
+    let model = synth_model_shaped(151, 4, 2, 256);
+    let prec = Precision::elastic(4.0);
+    let n_new = 6usize;
+    let vocab = model.cfg.vocab_size;
+    let prompts: Vec<Vec<u32>> = (0..n_slots)
+        .map(|s| prompt_for(s, 50 + 20 * s))
+        .collect();
+
+    // unsharded reference
+    let mut scratch = model.new_scratch();
+    let mut arena = model.new_arena(n_slots);
+    let seqs: Vec<_> = (0..n_slots).map(|_| arena.alloc_seq()).collect();
+    let mut stats: Vec<DecodeStats> = (0..n_slots)
+        .map(|_| DecodeStats::new(model.cfg.n_layers)).collect();
+    let mut next = Vec::new();
+    for (s, p) in prompts.iter().enumerate() {
+        model.prefill(p, &mut arena, seqs[s], prec, &mut scratch,
+                      &mut stats[s]).unwrap();
+        next.push(argmax(&scratch.logits) as u32);
+    }
+    let mut want_tokens: Vec<Vec<u32>> =
+        next.iter().map(|&t| vec![t]).collect();
+    let mut want_logits = Vec::new();
+    for _ in 0..n_new {
+        {
+            let mut slots: Vec<DecodeSlot> = seqs.iter()
+                .zip(stats.iter_mut()).zip(&next)
+                .map(|((&seq, st), &tok)| DecodeSlot {
+                    token: tok, seq, stats: st,
+                })
+                .collect();
+            model.decode_batch(&mut slots, &mut arena, prec,
+                               &mut scratch).unwrap();
+        }
+        want_logits.push(scratch.block.logits[..n_slots * vocab]
+            .to_vec());
+        for s in 0..n_slots {
+            let tok = argmax(&scratch.block.logits[s * vocab
+                ..(s + 1) * vocab]) as u32;
+            want_tokens[s].push(tok);
+            next[s] = tok;
+        }
+    }
+
+    // sharded subject, same protocol
+    let mut rt = ShardRuntime::new(&model, 2).unwrap();
+    let mut kv = rt.new_shards_arena(&model, n_slots);
+    let seqs: Vec<_> = (0..n_slots).map(|_| kv.alloc_seq()).collect();
+    let mut stats: Vec<DecodeStats> = (0..n_slots)
+        .map(|_| DecodeStats::new(model.cfg.n_layers)).collect();
+    let mut logits = vec![0f32; vocab];
+    let mut next = Vec::new();
+    for (s, p) in prompts.iter().enumerate() {
+        rt.prefill(&model, p, &mut kv, seqs[s], prec, &mut stats[s],
+                   &mut logits).unwrap();
+        next.push(argmax(&logits) as u32);
+    }
+    let mut got_tokens: Vec<Vec<u32>> =
+        next.iter().map(|&t| vec![t]).collect();
+    let mut block_logits = Vec::new();
+    for (step, want) in want_logits.iter().enumerate() {
+        {
+            let mut slots: Vec<DecodeSlot> = seqs.iter()
+                .zip(stats.iter_mut()).zip(&next)
+                .map(|((&seq, st), &tok)| DecodeSlot {
+                    token: tok, seq, stats: st,
+                })
+                .collect();
+            rt.decode_batch(&model, &mut slots, &mut kv, prec,
+                            &mut block_logits).unwrap();
+        }
+        assert_eq!(&block_logits[..n_slots * vocab], &want[..],
+                   "step {step}: sharded decode_batch logits diverged");
+        for s in 0..n_slots {
+            let tok = argmax(&block_logits[s * vocab
+                ..(s + 1) * vocab]) as u32;
+            got_tokens[s].push(tok);
+            next[s] = tok;
+        }
+    }
+    assert_eq!(got_tokens, want_tokens);
+}
+
+/// Self-speculative decoding under sharding: the draft/verify/rollback
+/// loop (low-bit drafts, batched verification, exact KV rollback of
+/// rejected tails) must replay the unsharded accept/reject trace
+/// exactly — same tokens, same round/draft/accept counters, same final
+/// draft window and bits.
+#[test]
+fn speculative_decode_bit_identical() {
+    let model = synth_model_shaped(157, 4, 2, 192);
+    let prompt = prompt_for(3, 28);
+    let prec = Precision::elastic(6.0);
+    let cfg = SpecConfig::default();
+    for kvp in [KvPrecision::F32, KvPrecision::Int8] {
+        let mut sw = DecodeStats::new(model.cfg.n_layers);
+        let mut stw = SpecState::new(&cfg, model.cfg.n_layers);
+        let want = model.generate_speculative(&prompt, 20, prec, kvp,
+                                              &cfg, &mut sw, &mut stw)
+            .unwrap();
+        let mut rt = ShardRuntime::new(&model, 2).unwrap();
+        let mut sg = DecodeStats::new(model.cfg.n_layers);
+        let mut stg = SpecState::new(&cfg, model.cfg.n_layers);
+        let got = rt.generate_speculative(&model, &prompt, 20, prec,
+                                          kvp, &cfg, &mut sg, &mut stg)
+            .unwrap();
+        assert_eq!(got, want,
+                   "{} KV: sharded speculative output diverged",
+                   kvp.label());
+        assert_eq!(stg.rounds, stw.rounds);
+        assert_eq!(stg.drafted, stw.drafted);
+        assert_eq!(stg.accepted, stw.accepted);
+        assert_eq!(stg.k, stw.k, "draft window feedback must match");
+        assert_eq!(stg.draft_bits, stw.draft_bits);
+        assert_eq!(sg.tokens, sw.tokens);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scheduler-level parity: the pressure ladder over per-shard arenas
+// ---------------------------------------------------------------------------
+
+fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize)
+          -> (Request, mpsc::Receiver<Response>) {
+    let (tx, rx) = mpsc::channel();
+    (Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        kv_precision: KvPrecision::F32,
+        submitted: Instant::now(),
+        reply: tx,
+    }, rx)
+}
+
+fn fixed_controller() -> ElasticController {
+    ElasticController::new(ControllerConfig {
+        min_bits: 4.0,
+        max_bits: 4.0,
+        ..ControllerConfig::default()
+    })
+}
+
+/// The degradation ladder over sharded arenas: with a tiny page budget
+/// and lowered bands, a 2-shard scheduler must (a) report exactly the
+/// same byte capacity as the single-arena scheduler (occupancy sums
+/// across per-shard arenas), (b) walk the same ladder (bands engaged,
+/// requants fired, zero drops), and (c) emit bit-identical tokens for
+/// every request.
+#[test]
+fn scheduler_pressure_ladder_parity_across_shards() {
+    let model = synth_model_shaped(59, 4, 2, 128);
+    let bands = PressureConfig {
+        moderate: 0.2,
+        high: 0.5,
+        critical: 0.99,
+        hysteresis: 0.05,
+    };
+    let run = |shards: usize| {
+        let batcher = Batcher::new(4, 16).with_kv_budget(5);
+        let mut sched =
+            Scheduler::new(&model, batcher, fixed_controller())
+                .with_pressure(bands.clone());
+        if shards > 1 {
+            sched = sched.with_shards(shards).unwrap();
+        }
+        assert_eq!(sched.n_shards(), shards.max(1));
+        let capacity = sched.arena.capacity_bytes();
+        let mut rxs = Vec::new();
+        for id in 0..8u64 {
+            let (req, rx) = mk_req(id, prompt_for(id as usize, 40), 4);
+            sched.submit(req);
+            rxs.push(rx);
+        }
+        sched.run_to_completion(|_| 0.0).unwrap();
+        assert_eq!(sched.arena.resident_pages(), 0,
+                   "retire must return every page on every shard");
+        let tokens: Vec<Vec<u32>> = rxs.iter()
+            .map(|rx| rx.try_recv()
+                .expect("no request may be dropped").tokens)
+            .collect();
+        (capacity, tokens, sched.metrics.clone())
+    };
+
+    let (cap1, tok1, m1) = run(1);
+    let (cap2, tok2, m2) = run(2);
+
+    assert_eq!(cap2, cap1,
+               "per-shard arena bytes must sum to the unsharded budget");
+    assert_eq!(tok2, tok1,
+               "sharded scheduling under pressure diverged from the \
+                single-arena run");
+    assert_eq!(m2.requests_completed, 8);
+    assert_eq!(m2.rejected, 0, "the ladder must never drop a request");
+    assert_eq!(m2.pressure_ticks, m1.pressure_ticks,
+               "summed occupancy must drive the same band per tick");
+    assert_eq!(m2.requant_events, m1.requant_events);
+    assert_eq!(m2.admissions_degraded, m1.admissions_degraded);
+    assert_eq!(m2.preemptions, m1.preemptions);
+    assert_eq!(m2.oom_recoveries, m1.oom_recoveries);
+    assert!(m2.pressure_ticks[1..].iter().sum::<u64>() > 0,
+            "the tiny budget must push the sharded run off Calm");
+}
