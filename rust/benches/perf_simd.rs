@@ -1,0 +1,140 @@
+//! §SIMD — runtime-dispatched wide-kernel study (EXPERIMENTS.md §SIMD).
+//!
+//! Benches each kernel family under forced-scalar (`MOBIQ_SIMD=off`
+//! semantics) and auto-detected wide dispatch in the same process —
+//! the bench binary owns the process-wide mode, so flipping it here
+//! races nothing.  Reported speedups are the ISSUE 9 acceptance
+//! numbers: >= 2x on the i8 fused-dequant attention dot, >= 1.5x on
+//! LUT plane-word resolution.
+//!
+//! Build with `RUSTFLAGS="-C target-cpu=x86-64-v3"` to compile the
+//! AVX2 paths CI gates on (runtime detection still decides dispatch).
+
+use mobiquant::mobiq::bitplane::PackedSlice;
+use mobiquant::mobiq::gemv::{gemv_lut, TokenLut};
+use mobiquant::mobiq::quantizer::{decompose, GroupParams};
+use mobiquant::util::bench::{black_box, Suite};
+use mobiquant::util::prng::Pcg;
+use mobiquant::util::simd::{self, SimdMode};
+
+/// (mode to force, report tag).
+const ARMS: [(SimdMode, &str); 2] = [(SimdMode::Off, "scalar"),
+                                     (SimdMode::Auto, "simd")];
+
+fn main() {
+    let mut suite = Suite::new("perf_simd");
+    suite.header();
+    let det = simd::detected();
+    suite.row("dispatch", &[("detected_lanes", det.lanes() as f64)]);
+    let mut rng = Pcg::new(5);
+
+    // ---- family 1: quantized attention dots / axpys ----
+    // One query row against a T x hd code slab — the K-walk shape of
+    // `attn_head` (decode: every resident position per head).
+    let (t, hd) = (2048usize, 128usize);
+    let q = rng.normal_vec(hd, 1.0);
+    let k8: Vec<i8> = (0..t * hd)
+        .map(|_| (rng.next_u32() & 0xFF) as u8 as i8)
+        .collect();
+    let k4: Vec<u8> = (0..t * hd / 2)
+        .map(|_| (rng.next_u32() & 0xFF) as u8)
+        .collect();
+    let mut acc_row = vec![0f32; hd];
+
+    let mut ns_i8 = [0f64; 2];
+    let mut ns_u4 = [0f64; 2];
+    let mut ns_ax = [0f64; 2];
+    for (ai, (mode, tag)) in ARMS.iter().enumerate() {
+        simd::set_mode(*mode);
+        ns_i8[ai] = suite.bench(
+            &format!("i8 dot {t}x{hd} [{tag}]"), || {
+                let mut acc = 0f32;
+                for row in k8.chunks_exact(hd) {
+                    acc += simd::dot_f32_i8(&q, row);
+                }
+                black_box(acc);
+            });
+        ns_u4[ai] = suite.bench(
+            &format!("u4 dot {t}x{hd} [{tag}]"), || {
+                let mut acc = 0f32;
+                for row in k4.chunks_exact(hd / 2) {
+                    acc += simd::dot_f32_u4(&q, row);
+                }
+                black_box(acc);
+            });
+        ns_ax[ai] = suite.bench(
+            &format!("i8 axpy {t}x{hd} [{tag}]"), || {
+                acc_row.fill(0.0);
+                for (j, row) in k8.chunks_exact(hd).enumerate() {
+                    simd::axpy_f32_i8(&mut acc_row, 1.0 / (j + 1) as f32,
+                                      row);
+                }
+                black_box(acc_row[0]);
+            });
+    }
+
+    // ---- family 2: LUT plane-word resolution ----
+    // Byte-table shape (1024) and nibble-table shape (4096), 2-bit
+    // active mask — the per-token `gemv_lut` decode walk.
+    let mut ns_lut = Vec::new();
+    for (d_in, d_out) in [(1024usize, 1024usize), (4096, 4096)] {
+        let gs = 32;
+        let w = rng.normal_vec(d_in * d_out, 0.1);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = decompose(&w, &base, 4);
+        let slices: Vec<PackedSlice> = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        let x = rng.normal_vec(d_in, 1.0);
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let active = [true, false, false, false];
+        let mut out = vec![0f32; d_out];
+        let mut ns = [0f64; 2];
+        for (ai, (mode, tag)) in ARMS.iter().enumerate() {
+            simd::set_mode(*mode);
+            ns[ai] = suite.bench(
+                &format!("LUT {d_in}x{d_out} @2bit [{tag}]"), || {
+                    gemv_lut(&slices, &base, &lut, &active, &mut out);
+                    black_box(out[0]);
+                });
+        }
+        ns_lut.push((d_in, ns));
+    }
+
+    // ---- family 3: elementwise rows ----
+    let d = 4096usize;
+    let xr = rng.normal_vec(d, 1.0);
+    let wr = rng.normal_vec(d, 0.5);
+    let gr = rng.normal_vec(d, 2.0);
+    let mut outr = vec![0f32; d];
+    let mut ns_rms = [0f64; 2];
+    let mut ns_sw = [0f64; 2];
+    for (ai, (mode, tag)) in ARMS.iter().enumerate() {
+        simd::set_mode(*mode);
+        ns_rms[ai] = suite.bench(&format!("rmsnorm d={d} [{tag}]"), || {
+            simd::rmsnorm_row(&xr, &wr, 1e-5, &mut outr);
+            black_box(outr[0]);
+        });
+        ns_sw[ai] = suite.bench(&format!("swiglu d={d} [{tag}]"), || {
+            simd::swiglu_row(&gr, &xr, &mut outr);
+            black_box(outr[0]);
+        });
+    }
+    simd::clear_mode();
+
+    suite.row("speedup scalar/simd", &[
+        ("i8_dot", ns_i8[0] / ns_i8[1]),
+        ("u4_dot", ns_u4[0] / ns_u4[1]),
+        ("i8_axpy", ns_ax[0] / ns_ax[1]),
+        ("lut_1024", ns_lut[0].1[0] / ns_lut[0].1[1]),
+        ("lut_4096", ns_lut[1].1[0] / ns_lut[1].1[1]),
+        ("rmsnorm", ns_rms[0] / ns_rms[1]),
+        ("swiglu", ns_sw[0] / ns_sw[1]),
+    ]);
+    suite.note("targets (ISSUE 9 acceptance): i8_dot >= 2x, LUT \
+                resolution >= 1.5x vs forced-scalar.  Both arms run in \
+                this one process (the bench owns the dispatch mode); \
+                parity of the two arms is pinned by tests/simd_parity.");
+    suite.finish();
+}

@@ -67,6 +67,11 @@ pub struct ServerConfig {
     /// Runtime override for the elementwise row fan-out threshold
     /// (`MOBIQ_ELEMENTWISE_PARALLEL_MIN`).
     pub elementwise_parallel_min: Option<usize>,
+    /// Runtime override for the SIMD kernel dispatch (`MOBIQ_SIMD`):
+    /// `Some(false)` forces the byte-identical pre-SIMD scalar loops,
+    /// `Some(true)` forces auto-detected wide kernels, `None` keeps
+    /// the env var or the compiled-in default (auto).
+    pub simd: Option<bool>,
 }
 
 /// Apply the config's parallel-gate overrides to the process-wide
@@ -82,6 +87,9 @@ pub fn apply_gate_overrides(cfg: &ServerConfig) {
     }
     if let Some(v) = cfg.elementwise_parallel_min {
         crate::model::transformer::ELEMENTWISE_PARALLEL_MIN_GATE.set(v);
+    }
+    if let Some(on) = cfg.simd {
+        crate::util::simd::set_enabled(on);
     }
 }
 
@@ -102,6 +110,7 @@ impl Default for ServerConfig {
             parallel_min_dout: None,
             attn_parallel_min_work: None,
             elementwise_parallel_min: None,
+            simd: None,
         }
     }
 }
@@ -253,7 +262,10 @@ mod tests {
 
     /// ServerConfig overrides reach the process-wide gates; `None`
     /// leaves them untouched.  (The PARALLEL_MIN_DOUT gate is owned by
-    /// gemv's own dispatch test — mutating it here would race.)
+    /// gemv's own dispatch test — mutating it here would race.  The
+    /// `simd` override is likewise exercised only in the serialized
+    /// `tests/simd_parity.rs` binary: flipping the process-wide SIMD
+    /// mode here would race the in-crate numeric parity tests.)
     #[test]
     fn gate_overrides_apply() {
         let cfg = ServerConfig {
@@ -279,5 +291,7 @@ mod tests {
         assert!(cfg.parallel_min_dout.is_none());
         assert!(cfg.attn_parallel_min_work.is_none());
         assert!(cfg.elementwise_parallel_min.is_none());
+        assert!(cfg.simd.is_none(),
+                "default must defer to MOBIQ_SIMD / auto-detection");
     }
 }

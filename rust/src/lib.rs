@@ -9,7 +9,7 @@
 //! Module map:
 //! * [`util`] — substrates built from scratch for this environment
 //!   (JSON, CLI, PRNG + property testing, stats, thread pool, bench
-//!   harness).
+//!   harness, runtime-dispatched SIMD kernels).
 //! * [`mobiq`] — the paper's core: bit-plane packed MoBiSlice weights,
 //!   shared-scale shift-add GEMV kernels, MoBiRoute router inference,
 //!   elastic threshold control, static-PTQ baseline records.

@@ -65,7 +65,10 @@ fn print_help() {
          \n\
          OPTIONS\n\
          \x20 --threads N   kernel worker threads for eval/generate/serve\n\
-         \x20               (default: cores - 1; 1 disables parallelism)\n"
+         \x20               (default: cores - 1; 1 disables parallelism)\n\
+         \x20 --simd MODE   SIMD kernel dispatch for serve: auto (default,\n\
+         \x20               detect AVX2/SSE4.1/NEON), on, or off (exact\n\
+         \x20               pre-SIMD scalar loops; same as MOBIQ_SIMD)\n"
     );
 }
 
@@ -200,11 +203,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     anyhow::ensure!(shards >= 1 && shards <= model.cfg.n_kv_heads,
                     "--shards must be in 1..={} for this model",
                     model.cfg.n_kv_heads);
+    // --simd off pins the byte-identical scalar kernels; on forces the
+    // auto-detected wide paths; auto (default) defers to MOBIQ_SIMD.
+    let simd = match args.get_or("simd", "auto") {
+        "off" | "scalar" | "0" => Some(false),
+        "on" | "force" | "1" => Some(true),
+        _ => None,
+    };
     println!("serving {} requests on {model_name} (elastic precision, \
               {shards} shard{})",
              trace.len(), if shards == 1 { "" } else { "s" });
     let server = Server::start(model, ServerConfig {
         shards,
+        simd,
         ..ServerConfig::default()
     });
     let t0 = std::time::Instant::now();

@@ -20,6 +20,7 @@
 
 use super::bitplane::PackedSlice;
 use super::quantizer::{dequantize, GroupParams};
+use crate::util::simd;
 use crate::util::threadpool::{SharedMut, ThreadPool};
 use crate::util::tunable::TunableGate;
 
@@ -137,9 +138,137 @@ impl TokenLut {
 }
 
 /// Residual shift-add weight for slice e: 2^{-bits·e} (shared-scale form).
+/// Checked shift: `bits·e >= 64` would overflow the u64 shift (a panic
+/// in debug, UB-adjacent wrap in release); such slices weigh less than
+/// 2^-64 — below f32 relevance for any accumulated dot — so they
+/// resolve to a hard 0.0.
 #[inline]
 fn slice_weight(e: usize, bits: u32) -> f32 {
-    1.0 / (1u64 << (bits as usize * e)) as f32
+    let sh = bits as usize * e;
+    if sh >= 64 {
+        return 0.0;
+    }
+    1.0 / (1u64 << sh) as f32
+}
+
+/// Scalar walk of one plane's words against the byte LUT — the
+/// byte-identical pre-SIMD inner loop (the `MOBIQ_SIMD=off` arm).
+/// Accumulates two group partials per word into `ga[w*2..w*2+2]`.
+#[inline]
+fn byte_words_scalar(plane: &[u64], n_words: usize, table: &[f32],
+                     mult: f32, ga: &mut [f32]) {
+    for (w, &pw) in plane.iter().enumerate().take(n_words) {
+        if pw == 0 {
+            continue; // zero word: all LUT hits are 0
+        }
+        let c0 = w * 8 * 256;
+        // SAFETY: table is padded to whole words; byte
+        // offsets < 256 by construction.
+        unsafe {
+            let q0 = *table.get_unchecked(
+                c0 + (pw & 0xFF) as usize)
+                + *table.get_unchecked(
+                    c0 + 256 + ((pw >> 8) & 0xFF) as usize);
+            let q1 = *table.get_unchecked(
+                c0 + 512 + ((pw >> 16) & 0xFF) as usize)
+                + *table.get_unchecked(
+                    c0 + 768 + ((pw >> 24) & 0xFF) as usize);
+            let q2 = *table.get_unchecked(
+                c0 + 1024 + ((pw >> 32) & 0xFF) as usize)
+                + *table.get_unchecked(
+                    c0 + 1280 + ((pw >> 40) & 0xFF) as usize);
+            let q3 = *table.get_unchecked(
+                c0 + 1536 + ((pw >> 48) & 0xFF) as usize)
+                + *table.get_unchecked(
+                    c0 + 1792 + ((pw >> 56) & 0xFF) as usize);
+            let g0 = ga.get_unchecked_mut(w * 2);
+            *g0 += mult * (q0 + q1);
+            let g1 = ga.get_unchecked_mut(w * 2 + 1);
+            *g1 += mult * (q2 + q3);
+        }
+    }
+}
+
+/// AVX2-gathered variant of [`byte_words_scalar`]: one `vgatherdps`
+/// resolves all 8 bytes of the word, reduced in the identical pairwise
+/// tree — bit-identical to the scalar walk (pinned in `util::simd`).
+#[inline]
+fn byte_words_gather(plane: &[u64], n_words: usize, table: &[f32],
+                     mult: f32, ga: &mut [f32]) {
+    for (w, &pw) in plane.iter().enumerate().take(n_words) {
+        if pw == 0 {
+            continue;
+        }
+        let c0 = w * 8 * 256;
+        // SAFETY: the caller hoisted `lut_gather_active()` (AVX2
+        // detected), and the table is padded to whole words so
+        // c0 + 2048 <= table.len().
+        let (h0, h1) = unsafe { simd::lut_bytes_pair(table, c0, pw) };
+        ga[w * 2] += mult * h0;
+        ga[w * 2 + 1] += mult * h1;
+    }
+}
+
+/// Scalar walk of one plane's words against the nibble LUT — the
+/// byte-identical pre-SIMD inner loop (the `MOBIQ_SIMD=off` arm).
+#[inline]
+fn nibble_words_scalar(plane: &[u64], n_words: usize, nt: &[f32],
+                       mult: f32, ga: &mut [f32]) {
+    for (w, &pw) in plane.iter().enumerate().take(n_words) {
+        if pw == 0 {
+            continue;
+        }
+        let c0 = w * 16 * 16;
+        // SAFETY: ntable padded to whole words;
+        // nibble < 16 by construction.
+        unsafe {
+            let mut q0 = 0f32;
+            let mut q1 = 0f32;
+            let mut q2 = 0f32;
+            let mut q3 = 0f32;
+            for j in 0..4 {
+                q0 += *nt.get_unchecked(
+                    c0 + j * 16
+                        + ((pw >> (4 * j)) & 0xF) as usize);
+                q1 += *nt.get_unchecked(
+                    c0 + (4 + j) * 16
+                        + ((pw >> (16 + 4 * j)) & 0xF)
+                        as usize);
+                q2 += *nt.get_unchecked(
+                    c0 + (8 + j) * 16
+                        + ((pw >> (32 + 4 * j)) & 0xF)
+                        as usize);
+                q3 += *nt.get_unchecked(
+                    c0 + (12 + j) * 16
+                        + ((pw >> (48 + 4 * j)) & 0xF)
+                        as usize);
+            }
+            *ga.get_unchecked_mut(w * 2) +=
+                mult * (q0 + q1);
+            *ga.get_unchecked_mut(w * 2 + 1) +=
+                mult * (q2 + q3);
+        }
+    }
+}
+
+/// AVX2-gathered variant of [`nibble_words_scalar`]: two gathers
+/// resolve the 16 nibbles, reduced with the scalar walk's exact
+/// left-associated per-group order — bit-identical.
+#[inline]
+fn nibble_words_gather(plane: &[u64], n_words: usize, nt: &[f32],
+                       mult: f32, ga: &mut [f32]) {
+    for (w, &pw) in plane.iter().enumerate().take(n_words) {
+        if pw == 0 {
+            continue;
+        }
+        let c0 = w * 16 * 16;
+        // SAFETY: the caller hoisted `lut_gather_active()` (AVX2
+        // detected), and ntable is padded to whole words so
+        // c0 + 256 <= nt.len().
+        let (h0, h1) = unsafe { simd::lut_nibbles_pair(nt, c0, pw) };
+        ga[w * 2] += mult * h0;
+        ga[w * 2 + 1] += mult * h1;
+    }
 }
 
 /// The MoBiQuant kernel: token-adaptive bit-sliced GEMV with shared
@@ -230,6 +359,12 @@ pub fn gemv_lut_range(slices: &[PackedSlice], base: &GroupParams,
         }
     }
 
+    // Hoisted SIMD dispatch (ISSUE 9): the AVX2 gather resolves a
+    // whole plane word per instruction and reduces in the exact
+    // pairwise tree of the scalar walk below, so both arms are
+    // bit-identical (pinned by util::simd tests + tests/simd_parity).
+    let gather = simd::lut_gather_active();
+
     let table = &lut.table[..];
     for o in o0..o1 {
         // padding words spill into ga[n_groups..2*n_words] with zero
@@ -250,75 +385,22 @@ pub fn gemv_lut_range(slices: &[PackedSlice], base: &GroupParams,
                     assert_eq!(bytes_per_group, 4,
                                "nibble path requires group_size 32");
                     let nt = &lut.ntable[..];
-                    for (w, &pw) in plane.iter().enumerate().take(n_words)
-                    {
-                        if pw == 0 {
-                            continue;
-                        }
-                        let c0 = w * 16 * 16;
-                        // SAFETY: ntable padded to whole words;
-                        // nibble < 16 by construction.
-                        unsafe {
-                            let mut q0 = 0f32;
-                            let mut q1 = 0f32;
-                            let mut q2 = 0f32;
-                            let mut q3 = 0f32;
-                            for j in 0..4 {
-                                q0 += *nt.get_unchecked(
-                                    c0 + j * 16
-                                        + ((pw >> (4 * j)) & 0xF) as usize);
-                                q1 += *nt.get_unchecked(
-                                    c0 + (4 + j) * 16
-                                        + ((pw >> (16 + 4 * j)) & 0xF)
-                                        as usize);
-                                q2 += *nt.get_unchecked(
-                                    c0 + (8 + j) * 16
-                                        + ((pw >> (32 + 4 * j)) & 0xF)
-                                        as usize);
-                                q3 += *nt.get_unchecked(
-                                    c0 + (12 + j) * 16
-                                        + ((pw >> (48 + 4 * j)) & 0xF)
-                                        as usize);
-                            }
-                            *ga.get_unchecked_mut(w * 2) +=
-                                mult * (q0 + q1);
-                            *ga.get_unchecked_mut(w * 2 + 1) +=
-                                mult * (q2 + q3);
-                        }
+                    if gather {
+                        nibble_words_gather(plane, n_words, nt, mult,
+                                            &mut ga);
+                    } else {
+                        nibble_words_scalar(plane, n_words, nt, mult,
+                                            &mut ga);
                     }
                 } else if bytes_per_group == 4 {
                     // hot configuration (group_size 32): two group-quads
                     // per word, unrolled with independent accumulators.
-                    for (w, &pw) in plane.iter().enumerate().take(n_words)
-                    {
-                        if pw == 0 {
-                            continue; // zero word: all LUT hits are 0
-                        }
-                        let c0 = w * 8 * 256;
-                        // SAFETY: table is padded to whole words; byte
-                        // offsets < 256 by construction.
-                        unsafe {
-                            let q0 = *table.get_unchecked(
-                                c0 + (pw & 0xFF) as usize)
-                                + *table.get_unchecked(
-                                    c0 + 256 + ((pw >> 8) & 0xFF) as usize);
-                            let q1 = *table.get_unchecked(
-                                c0 + 512 + ((pw >> 16) & 0xFF) as usize)
-                                + *table.get_unchecked(
-                                    c0 + 768 + ((pw >> 24) & 0xFF) as usize);
-                            let q2 = *table.get_unchecked(
-                                c0 + 1024 + ((pw >> 32) & 0xFF) as usize)
-                                + *table.get_unchecked(
-                                    c0 + 1280 + ((pw >> 40) & 0xFF) as usize);
-                            let q3 = *table.get_unchecked(
-                                c0 + 1536 + ((pw >> 48) & 0xFF) as usize)
-                                + *table.get_unchecked(
-                                    c0 + 1792 + ((pw >> 56) & 0xFF) as usize);
-                            let g0 = ga.get_unchecked_mut(w * 2);
-                            *g0 += mult * (q0 + q1);
-                            let g1 = ga.get_unchecked_mut(w * 2 + 1);
-                            *g1 += mult * (q2 + q3);
-                        }
+                    if gather {
+                        byte_words_gather(plane, n_words, table, mult,
+                                          &mut ga);
+                    } else {
+                        byte_words_scalar(plane, n_words, table, mult,
+                                          &mut ga);
                     }
                 } else {
                     // generic path: acc/g/b persist across words so any
@@ -780,6 +862,9 @@ fn gemm_lut_group(slices: &[PackedSlice], base: &GroupParams,
     // malloc per (group, worker) call is noise next to the plane stream.
     let gstride = n_groups.max(2 * n_words);
     let mut ga = vec![0f32; nt * gstride];
+    // Hoisted SIMD dispatch (ISSUE 9) — same bit-identical gather as
+    // the per-token kernel, so batch-vs-per-token stays assert_eq.
+    let gather = simd::lut_gather_active();
     for o in o0..o1 {
         ga.fill(0.0);
         for (e, &is_active) in active.iter().enumerate() {
@@ -798,6 +883,24 @@ fn gemm_lut_group(slices: &[PackedSlice], base: &GroupParams,
                             continue; // zero word: all LUT hits are 0
                         }
                         let c0 = w * 16 * 16;
+                        if gather {
+                            // gathered fast path: the word's nibble
+                            // decode rides in the index vector
+                            for (k, &ti) in toks.iter().enumerate() {
+                                let ntab = &batch.luts[ti].ntable[..];
+                                let gb = k * gstride + w * 2;
+                                // SAFETY: gather ⇒ AVX2 detected;
+                                // ntable is padded to whole words so
+                                // c0 + 256 <= ntab.len().
+                                let (h0, h1) = unsafe {
+                                    simd::lut_nibbles_pair(ntab, c0,
+                                                           pw)
+                                };
+                                ga[gb] += mult * h0;
+                                ga[gb + 1] += mult * h1;
+                            }
+                            continue;
+                        }
                         // split the word into 16 nibbles once, reused by
                         // every token in the group (weight-stationary)
                         let mut nib = [0usize; 16];
@@ -838,6 +941,21 @@ fn gemm_lut_group(slices: &[PackedSlice], base: &GroupParams,
                             continue;
                         }
                         let c0 = w * 8 * 256;
+                        if gather {
+                            for (k, &ti) in toks.iter().enumerate() {
+                                let table = &batch.luts[ti].table[..];
+                                let gb = k * gstride + w * 2;
+                                // SAFETY: gather ⇒ AVX2 detected;
+                                // table is padded to whole words so
+                                // c0 + 2048 <= table.len().
+                                let (h0, h1) = unsafe {
+                                    simd::lut_bytes_pair(table, c0, pw)
+                                };
+                                ga[gb] += mult * h0;
+                                ga[gb + 1] += mult * h1;
+                            }
+                            continue;
+                        }
                         let mut by = [0usize; 8];
                         for (j, b) in by.iter_mut().enumerate() {
                             *b = ((pw >> (8 * j)) & 0xFF) as usize;
@@ -909,6 +1027,22 @@ mod tests {
             .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
             .collect();
         (slices, base)
+    }
+
+    /// `bits·e >= 64` used to left-shift a u64 out of range (panic in
+    /// debug, wrap in release); the checked form pins the boundary.
+    #[test]
+    fn slice_weight_checked_shift_at_boundary() {
+        assert_eq!(slice_weight(0, 2), 1.0);
+        assert_eq!(slice_weight(1, 2), 0.25);
+        // largest in-range shifts
+        assert_eq!(slice_weight(31, 2), 1.0 / (1u64 << 62) as f32);
+        assert_eq!(slice_weight(63, 1), 1.0 / (1u64 << 63) as f32);
+        // at and past the u64 boundary: a hard 0.0, no overflow
+        assert_eq!(slice_weight(32, 2), 0.0);
+        assert_eq!(slice_weight(64, 1), 0.0);
+        assert_eq!(slice_weight(16, 4), 0.0);
+        assert_eq!(slice_weight(1000, 8), 0.0);
     }
 
     #[test]

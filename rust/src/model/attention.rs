@@ -33,6 +33,14 @@
 //! page, so the scale is uniform per tile).  The f32 paths are
 //! untouched — bit-identical to the pre-quantization kernel.
 //!
+//! Since PR 9 the quantized dot / weighted-accumulate inner loops go
+//! through [`crate::util::simd`]: with `MOBIQ_SIMD=off` they dispatch
+//! to the exact pre-PR sequential loops; when enabled they follow the
+//! lane-blocked fixed-reduction-order contract, so the wide kernels
+//! are bit-identical to their blocked scalar references and both arms
+//! stay inside the existing quantized oracle bounds
+//! (`tests/kv_arena.rs`, `tests/simd_parity.rs`).
+//!
 //! Determinism note: position tiles are anchored at absolute position 0
 //! (`[0, TILE)`, `[TILE, 2*TILE)`, ...), independent of where a block
 //! starts.  A query at absolute position P therefore accumulates its
@@ -41,8 +49,9 @@
 //! to each other.  Against the scalar oracle the result differs only by
 //! FP reordering (the parity tests use a 1e-4 tolerance).
 
-use super::kvcache::{u4_code, KvCache, KvRun, KvSource, KV_PAGE};
+use super::kvcache::{KvCache, KvRun, KvSource, KV_PAGE};
 use super::weights::ModelConfig;
+use crate::util::simd;
 use crate::util::threadpool::{SharedMut, ThreadPool};
 use crate::util::tunable::TunableGate;
 
@@ -517,14 +526,15 @@ fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
                 }
                 KvRun::I8 { data, scale: kstep } => {
                     // page-uniform step folded into the softmax scale:
-                    // one multiply per position, none per element
+                    // one multiply per position, none per element.
+                    // SIMD-dispatched fused-dequant dot (ISSUE 9):
+                    // codes convert exactly to f32 and the wide kernel
+                    // follows the fixed lane-blocked reduction order,
+                    // so both dispatch arms land inside the existing
+                    // quantized oracle bounds.
                     let ks = kstep * scale;
                     for (j, kr) in data.chunks_exact(hd).enumerate() {
-                        let mut dot = 0f32;
-                        for (a, &b) in qh.iter().zip(kr) {
-                            dot += a * b as f32;
-                        }
-                        let sc = dot * ks;
+                        let sc = simd::dot_f32_i8(qh, kr) * ks;
                         s[j] = sc;
                         tmax = tmax.max(sc);
                     }
@@ -533,11 +543,7 @@ fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
                     let ks = kstep * scale;
                     for (j, kr) in data.chunks_exact(hd / 2)
                         .enumerate() {
-                        let mut dot = 0f32;
-                        for (e, a) in qh.iter().enumerate() {
-                            dot += a * u4_code(kr, e) as f32;
-                        }
-                        let sc = dot * ks;
+                        let sc = simd::dot_f32_u4(qh, kr) * ks;
                         s[j] = sc;
                         tmax = tmax.max(sc);
                     }
@@ -550,9 +556,7 @@ fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
             let acc_i = &mut acc[i * hd..(i + 1) * hd];
             if coef != 1.0 {
                 l[i] *= coef;
-                for a in acc_i.iter_mut() {
-                    *a *= coef;
-                }
+                simd::scale_in_place(acc_i, coef);
             }
             let mut li = l[i];
             match cache.v_run(kvh, p0, limit) {
@@ -573,9 +577,7 @@ fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
                         // dequant step rides the weight into the
                         // accumulate (one multiply per position)
                         let wv = w * vstep;
-                        for (a, &vv) in acc_i.iter_mut().zip(vr) {
-                            *a += wv * vv as f32;
-                        }
+                        simd::axpy_f32_i8(acc_i, wv, vr);
                     }
                 }
                 KvRun::U4 { data, scale: vstep } => {
@@ -584,9 +586,7 @@ fn attn_head<S: KvSource>(q: &[f32], qs: usize, qcol: usize, cache: &S,
                         let w = (s[j] - m_new).exp();
                         li += w;
                         let wv = w * vstep;
-                        for (e, a) in acc_i.iter_mut().enumerate() {
-                            *a += wv * u4_code(vr, e) as f32;
-                        }
+                        simd::axpy_f32_u4(acc_i, wv, vr);
                     }
                 }
             }
@@ -628,15 +628,11 @@ fn run_dot(qh: &[f32], run: &KvRun<'_>, j: usize, hd: usize) -> f32 {
         }
         KvRun::I8 { data, scale } => {
             let row = &data[j * hd..(j + 1) * hd];
-            let dot: f32 = qh.iter().zip(row)
-                .map(|(a, &b)| a * b as f32).sum();
-            dot * scale
+            simd::dot_f32_i8(qh, row) * scale
         }
         KvRun::U4 { data, scale } => {
             let row = &data[j * (hd / 2)..(j + 1) * (hd / 2)];
-            let dot: f32 = qh.iter().enumerate()
-                .map(|(e, a)| a * u4_code(row, e) as f32).sum();
-            dot * scale
+            simd::dot_f32_u4(qh, row) * scale
         }
     }
 }
@@ -655,17 +651,11 @@ fn run_axpy(out: &mut [f32], w: f32, run: &KvRun<'_>, j: usize,
         }
         KvRun::I8 { data, scale } => {
             let row = &data[j * hd..(j + 1) * hd];
-            let wv = w * scale;
-            for (o, &vv) in out.iter_mut().zip(row) {
-                *o += wv * vv as f32;
-            }
+            simd::axpy_f32_i8(out, w * scale, row);
         }
         KvRun::U4 { data, scale } => {
             let row = &data[j * (hd / 2)..(j + 1) * (hd / 2)];
-            let wv = w * scale;
-            for (e, o) in out.iter_mut().enumerate() {
-                *o += wv * u4_code(row, e) as f32;
-            }
+            simd::axpy_f32_u4(out, w * scale, row);
         }
     }
 }

@@ -59,12 +59,13 @@ use super::kvcache::{KvArena, KvHandle, KvPrecision, KvShards,
                      OutOfPages, KV_PAGE};
 use super::speculative::{SpecCapture, SpecConfig, SpecRound, SpecState};
 use super::transformer::{argmax, record_block, record_slots, rmsnorm,
-                         silu, DecodeSlot, DecodeStats, Model,
+                         DecodeSlot, DecodeStats, Model,
                          MAX_PREFILL_BLOCK};
 use super::weights::{LinearBackend, ModelConfig, LINEAR_NAMES};
 use crate::mobiq::engine::{Precision, Scratch};
 use crate::mobiq::gemv::SharedOut;
 use crate::util::comm::{Communicator, InProcComm, InProcGroup};
+use crate::util::simd;
 use crate::util::threadpool::{SharedMut, ThreadPool};
 
 // ---------------------------------------------------------------------------
@@ -519,10 +520,7 @@ impl ShardRuntime {
                     let attn_all = unsafe {
                         std::slice::from_raw_parts(attnp.0, d)
                     };
-                    for (xi, ai) in lane.xs[..d].iter_mut()
-                        .zip(attn_all) {
-                        *xi += ai;
-                    }
+                    simd::add_assign(&mut lane.xs[..d], attn_all);
                     rmsnorm(&lane.xs[..d], &layer.mlp_norm, c.norm_eps,
                             &mut lane.xn[..d]);
                     let b = layer.w_gate.forward_token_range(
@@ -541,11 +539,8 @@ impl ShardRuntime {
                         std::slice::from_raw_parts_mut(ffp.0.add(f0),
                                                        f1 - f0)
                     };
-                    for (o, (g, u)) in ff_out.iter_mut()
-                        .zip(lane.gf[..f1 - f0].iter()
-                            .zip(&lane.uf[..f1 - f0])) {
-                        *o = silu(*g) * u;
-                    }
+                    simd::swiglu_row(&lane.gf[..f1 - f0],
+                                     &lane.uf[..f1 - f0], ff_out);
                 }
                 comm.barrier(); // join B entry: ff columns published
                 if !lane.dead {
@@ -568,10 +563,7 @@ impl ShardRuntime {
                     let mlp_all = unsafe {
                         std::slice::from_raw_parts(mlpp.0, d)
                     };
-                    for (xi, mi) in lane.xs[..d].iter_mut()
-                        .zip(mlp_all) {
-                        *xi += mi;
-                    }
+                    simd::add_assign(&mut lane.xs[..d], mlp_all);
                 }
             }
             if !lane.dead {
@@ -798,10 +790,7 @@ impl ShardRuntime {
                     let attn_all = unsafe {
                         std::slice::from_raw_parts(attnp.0, t * d)
                     };
-                    for (xi, ai) in lane.xs[..t * d].iter_mut()
-                        .zip(attn_all) {
-                        *xi += ai;
-                    }
+                    simd::add_assign(&mut lane.xs[..t * d], attn_all);
                     for i in 0..t {
                         rmsnorm(&lane.xs[i * d..(i + 1) * d],
                                 &layer.mlp_norm, c.norm_eps,
@@ -830,10 +819,7 @@ impl ShardRuntime {
                             std::slice::from_raw_parts_mut(
                                 ffp.0.add(i * d_ff + f0), f1 - f0)
                         };
-                        for (o, (gi, ui)) in out.iter_mut()
-                            .zip(g.iter().zip(u)) {
-                            *o = silu(*gi) * ui;
-                        }
+                        simd::swiglu_row(g, u, out);
                     }
                 }
                 comm.barrier(); // join B entry: ff columns published
@@ -854,10 +840,7 @@ impl ShardRuntime {
                     let mlp_all = unsafe {
                         std::slice::from_raw_parts(mlpp.0, t * d)
                     };
-                    for (xi, mi) in lane.xs[..t * d].iter_mut()
-                        .zip(mlp_all) {
-                        *xi += mi;
-                    }
+                    simd::add_assign(&mut lane.xs[..t * d], mlp_all);
                 }
             }
             if !lane.dead {
@@ -1140,10 +1123,7 @@ impl ShardRuntime {
                     let attn_all = unsafe {
                         std::slice::from_raw_parts(attnp.0, t * d)
                     };
-                    for (xi, ai) in lane.xs[..t * d].iter_mut()
-                        .zip(attn_all) {
-                        *xi += ai;
-                    }
+                    simd::add_assign(&mut lane.xs[..t * d], attn_all);
                     for i in 0..t {
                         rmsnorm(&lane.xs[i * d..(i + 1) * d],
                                 &layer.mlp_norm, c.norm_eps,
@@ -1170,10 +1150,7 @@ impl ShardRuntime {
                             std::slice::from_raw_parts_mut(
                                 ffp.0.add(i * d_ff + f0), f1 - f0)
                         };
-                        for (o, (gi, ui)) in out.iter_mut()
-                            .zip(g.iter().zip(u)) {
-                            *o = silu(*gi) * ui;
-                        }
+                        simd::swiglu_row(g, u, out);
                     }
                 }
                 comm.barrier(); // join B entry
@@ -1194,10 +1171,7 @@ impl ShardRuntime {
                     let mlp_all = unsafe {
                         std::slice::from_raw_parts(mlpp.0, t * d)
                     };
-                    for (xi, mi) in lane.xs[..t * d].iter_mut()
-                        .zip(mlp_all) {
-                        *xi += mi;
-                    }
+                    simd::add_assign(&mut lane.xs[..t * d], mlp_all);
                 }
             }
             if !lane.dead {

@@ -275,9 +275,7 @@ fn add_block(acc: &mut [f32], delta: &[f32], t: usize, d: usize,
              pool: Option<&ThreadPool>) {
     debug_assert!(delta.len() >= t * d);
     par_rows(t, d, pool, acc, |i, row| {
-        for (a, b) in row.iter_mut().zip(&delta[i * d..(i + 1) * d]) {
-            *a += b;
-        }
+        crate::util::simd::add_assign(row, &delta[i * d..(i + 1) * d]);
     });
 }
 
@@ -288,10 +286,8 @@ fn swiglu_block(gate: &[f32], up: &[f32], t: usize, d_ff: usize,
     debug_assert!(gate.len() >= t * d_ff && up.len() >= t * d_ff);
     par_rows(t, d_ff, pool, ff, |i, row| {
         let lo = i * d_ff;
-        for (f, (g, u)) in row.iter_mut()
-            .zip(gate[lo..lo + d_ff].iter().zip(&up[lo..lo + d_ff])) {
-            *f = silu(*g) * u;
-        }
+        crate::util::simd::swiglu_row(&gate[lo..lo + d_ff],
+                                      &up[lo..lo + d_ff], row);
     });
 }
 
@@ -464,9 +460,8 @@ impl Model {
             let b = run("wo", &scratch.stage[..d], &mut scratch.attn_out,
                         &mut scratch.engine)?;
             stats.record(li, 3, b, c.slice_bits);
-            for (xi, ai) in scratch.x.iter_mut().zip(&scratch.attn_out) {
-                *xi += ai;
-            }
+            crate::util::simd::add_assign(&mut scratch.x,
+                                          &scratch.attn_out[..d]);
 
             // ---- mlp ----
             rmsnorm(&scratch.x, &lw.mlp_norm, c.norm_eps,
@@ -478,18 +473,15 @@ impl Model {
             let b = run("w_up", &scratch.stage[..d], &mut scratch.up,
                         &mut scratch.engine)?;
             stats.record(li, 5, b, c.slice_bits);
-            for (f, (g, u)) in scratch.ff.iter_mut()
-                .zip(scratch.gate.iter().zip(&scratch.up)) {
-                *f = silu(*g) * u;
-            }
+            crate::util::simd::swiglu_row(&scratch.gate, &scratch.up,
+                                          &mut scratch.ff);
             let ff = c.d_ff;
             scratch.stage[..ff].copy_from_slice(&scratch.ff);
             let b = run("w_down", &scratch.stage[..ff],
                         &mut scratch.mlp_out, &mut scratch.engine)?;
             stats.record(li, 6, b, c.slice_bits);
-            for (xi, mi) in scratch.x.iter_mut().zip(&scratch.mlp_out) {
-                *xi += mi;
-            }
+            crate::util::simd::add_assign(&mut scratch.x,
+                                          &scratch.mlp_out[..d]);
         }
         stats.tokens += 1;
 
@@ -963,6 +955,14 @@ impl Model {
 // ---------------------------------------------------------------------------
 
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    // With SIMD enabled the Σx² reduction follows the lane-blocked
+    // order (util::simd contract); each dispatch mode is internally
+    // self-consistent, and `MOBIQ_SIMD=off` keeps the pre-SIMD
+    // sequential sum below byte-for-byte.
+    if crate::util::simd::enabled() {
+        crate::util::simd::rmsnorm_row(x, w, eps, out);
+        return;
+    }
     let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let r = 1.0 / (ms + eps).sqrt();
     for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {

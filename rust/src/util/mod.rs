@@ -6,6 +6,7 @@ pub mod cli;
 pub mod comm;
 pub mod json;
 pub mod prng;
+pub mod simd;
 pub mod stats;
 pub mod threadpool;
 pub mod tunable;

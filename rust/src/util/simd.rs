@@ -1,0 +1,1720 @@
+//! Runtime-dispatched SIMD kernels for the serving hot loops
+//! (ISSUE 9 tentpole).
+//!
+//! Three kernel families live here, each with a sequential scalar
+//! fallback that is the byte-identical pre-SIMD code path:
+//!
+//! 1. **Quantized attention dots** — `dot_f32_i8` / `dot_f32_u4` and
+//!    the V-side `axpy_f32_i8` / `axpy_f32_u4`.  The wide variants
+//!    follow the *lane-blocked fixed-reduction-order contract*: with
+//!    `L = level().lanes()`, lane `j` accumulates elements
+//!    `j, j+L, j+2L, …` with a separate multiply then add (never a
+//!    fused multiply-add), lanes reduce in the fixed tree
+//!    `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`, and the `< L` tail is
+//!    added sequentially after the reduction.  i8 and 4-bit codes
+//!    convert exactly to f32 and per-lane IEEE mul/add are identical
+//!    between scalar and vector units, so every SIMD dot is
+//!    **bit-identical** to `dot_*_blocked(q, k, L)` — pinned by unit
+//!    tests here and `tests/simd_parity.rs`.
+//! 2. **LUT plane-word resolution** — `lut_bytes_pair` /
+//!    `lut_nibbles_pair` gather the eight byte-table (or sixteen
+//!    nibble-table) entries of one 64-bit plane word and reduce them
+//!    in *exactly* the pairwise tree the scalar walk in
+//!    `mobiq/gemv.rs` uses, so the gathered path is bit-identical to
+//!    the scalar kernel (LUT entries are never `-0.0`: every table
+//!    starts from `+0.0` and `+0.0 + x` only yields `-0.0` when both
+//!    addends are `-0.0`).  AVX2-only (x86 gathers); other levels keep
+//!    the scalar walk.
+//! 3. **Elementwise rows** — `add_assign`, `swiglu_row`,
+//!    `rmsnorm_row`, `scale_in_place`, `sum_squares`.  Per-element
+//!    ops are order-independent, hence bit-identical to scalar at any
+//!    width; only the `sum_squares` reduction inside `rmsnorm_row`
+//!    uses the lane-blocked contract (so f32 norms *do* change
+//!    bitwise between `off` and `on` — by design, each mode is
+//!    self-consistent and the parity suites pin both arms).
+//!
+//! Dispatch resolution (highest priority first), mirroring
+//! `TunableGate`: a programmatic override (`set_mode`, reachable via
+//! `ServerConfig.simd` / `--simd`), then the `MOBIQ_SIMD` env var
+//! (read once: `off|0|false|scalar`, `on|1|true|auto`, or a level cap
+//! `sse41|avx2|neon`), then the default `auto`.  `auto` resolves to
+//! the best level the CPU reports (`is_x86_feature_detected!` for
+//! AVX2/SSE4.1; NEON is baseline on aarch64); `off` routes every
+//! wrapper to the sequential scalar loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Environment variable consulted (once) when no programmatic
+/// override is set.
+pub const ENV_VAR: &str = "MOBIQ_SIMD";
+
+/// Widest lane count any level uses (AVX2: 8 f32 lanes).
+pub const MAX_LANES: usize = 8;
+
+/// Instruction-set level a kernel dispatches at.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdLevel {
+    /// Sequential scalar loops — the byte-identical pre-SIMD paths.
+    Scalar,
+    /// x86-64 SSE4.1: 4 f32 lanes (`_mm_cvtepi8_epi32` widening).
+    Sse41,
+    /// x86-64 AVX2: 8 f32 lanes + `vgatherdps` LUT resolution.
+    Avx2,
+    /// aarch64 NEON: 4 f32 lanes (baseline feature, always present).
+    Neon,
+}
+
+impl SimdLevel {
+    /// f32 lanes per accumulator block at this level (the `L` of the
+    /// fixed-reduction-order contract).
+    pub fn lanes(self) -> usize {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Sse41 | SimdLevel::Neon => 4,
+            SimdLevel::Avx2 => MAX_LANES,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse41 => "sse41",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// Requested dispatch mode (before capping by what the CPU has).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdMode {
+    /// Force the sequential scalar kernels everywhere.
+    Off,
+    /// Use the best detected level (the default).
+    Auto,
+    /// Use at most this level (e.g. pin AVX2 hardware to SSE4.1 to
+    /// compare lane widths); caps from the wrong architecture resolve
+    /// to scalar.
+    Cap(SimdLevel),
+}
+
+// Atomic encoding of the programmatic override; 0 = no override.
+const MODE_UNSET: usize = 0;
+
+fn encode(m: SimdMode) -> usize {
+    match m {
+        SimdMode::Off | SimdMode::Cap(SimdLevel::Scalar) => 1,
+        SimdMode::Auto => 2,
+        SimdMode::Cap(SimdLevel::Sse41) => 3,
+        SimdMode::Cap(SimdLevel::Avx2) => 4,
+        SimdMode::Cap(SimdLevel::Neon) => 5,
+    }
+}
+
+fn decode(v: usize) -> Option<SimdMode> {
+    match v {
+        1 => Some(SimdMode::Off),
+        2 => Some(SimdMode::Auto),
+        3 => Some(SimdMode::Cap(SimdLevel::Sse41)),
+        4 => Some(SimdMode::Cap(SimdLevel::Avx2)),
+        5 => Some(SimdMode::Cap(SimdLevel::Neon)),
+        _ => None,
+    }
+}
+
+static MODE_OVERRIDE: AtomicUsize = AtomicUsize::new(MODE_UNSET);
+static ENV_MODE: OnceLock<SimdMode> = OnceLock::new();
+static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+
+/// Parse a `MOBIQ_SIMD` value.  Pure (no env access) so tests can pin
+/// the grammar without racing the process environment.
+pub fn parse_mode(s: &str) -> Option<SimdMode> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" | "false" | "scalar" => Some(SimdMode::Off),
+        "on" | "1" | "true" | "auto" => Some(SimdMode::Auto),
+        "sse41" | "sse4.1" => Some(SimdMode::Cap(SimdLevel::Sse41)),
+        "avx2" => Some(SimdMode::Cap(SimdLevel::Avx2)),
+        "neon" => Some(SimdMode::Cap(SimdLevel::Neon)),
+        _ => None,
+    }
+}
+
+fn env_mode() -> SimdMode {
+    *ENV_MODE.get_or_init(|| {
+        std::env::var(ENV_VAR)
+            .ok()
+            .and_then(|s| parse_mode(&s))
+            .unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// Install a programmatic mode override (wins over `MOBIQ_SIMD`).
+/// Process-global: serialize tests that flip it.
+pub fn set_mode(m: SimdMode) {
+    MODE_OVERRIDE.store(encode(m), Ordering::Relaxed);
+}
+
+/// Drop the programmatic override, falling back to env / default.
+pub fn clear_mode() {
+    MODE_OVERRIDE.store(MODE_UNSET, Ordering::Relaxed);
+}
+
+/// `ServerConfig.simd` shorthand: `true` ⇒ `Auto`, `false` ⇒ `Off`.
+pub fn set_enabled(on: bool) {
+    set_mode(if on { SimdMode::Auto } else { SimdMode::Off });
+}
+
+/// The mode currently in force (override > env > `Auto`).
+pub fn mode() -> SimdMode {
+    decode(MODE_OVERRIDE.load(Ordering::Relaxed)).unwrap_or_else(env_mode)
+}
+
+/// Best level this CPU supports (detected once, cached).
+pub fn detected() -> SimdLevel {
+    *DETECTED.get_or_init(detect)
+}
+
+#[allow(unreachable_code)] // per-arch early returns leave dead fallback
+fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        if is_x86_feature_detected!("sse4.1") {
+            return SimdLevel::Sse41;
+        }
+        return SimdLevel::Scalar;
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+fn cap_level(det: SimdLevel, cap: SimdLevel) -> SimdLevel {
+    match cap {
+        SimdLevel::Scalar => SimdLevel::Scalar,
+        // NEON cap on x86 (or vice versa below) degrades to scalar:
+        // a cap never *raises* past what the CPU has.
+        SimdLevel::Neon => {
+            if det == SimdLevel::Neon {
+                SimdLevel::Neon
+            } else {
+                SimdLevel::Scalar
+            }
+        }
+        SimdLevel::Sse41 | SimdLevel::Avx2 => match det {
+            SimdLevel::Avx2 => cap,
+            SimdLevel::Sse41 => SimdLevel::Sse41,
+            _ => SimdLevel::Scalar,
+        },
+    }
+}
+
+/// The level every dispatching wrapper below uses for this call.
+pub fn level() -> SimdLevel {
+    match mode() {
+        SimdMode::Off => SimdLevel::Scalar,
+        SimdMode::Auto => detected(),
+        SimdMode::Cap(c) => cap_level(detected(), c),
+    }
+}
+
+/// Whether any wide path is active (false ⇒ pre-SIMD scalar kernels).
+pub fn enabled() -> bool {
+    level() != SimdLevel::Scalar
+}
+
+// ---------------------------------------------------------------------
+// Shared pieces: fixed-order reduction, 4-bit decode.
+// ---------------------------------------------------------------------
+
+/// The fixed lane-reduction tree of the contract.  8 lanes:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`; 4 lanes: the left half.
+#[inline]
+pub fn reduce_tree(l: &[f32]) -> f32 {
+    match l.len() {
+        8 => ((l[0] + l[1]) + (l[2] + l[3]))
+            + ((l[4] + l[5]) + (l[6] + l[7])),
+        4 => (l[0] + l[1]) + (l[2] + l[3]),
+        _ => l.iter().copied().fold(0.0, |a, b| a + b),
+    }
+}
+
+/// Signed 4-bit code `i` from the packed nibble stream (low nibble
+/// first) — same decode as `model::kvcache::u4_code`, duplicated here
+/// so `util` stays below `model` in the layer order.
+#[inline]
+fn u4(packed: &[u8], i: usize) -> i8 {
+    let nib = (packed[i >> 1] >> ((i & 1) * 4)) & 0xF;
+    ((nib << 4) as i8) >> 4
+}
+
+// ---------------------------------------------------------------------
+// Family 1+3 sequential fallbacks — byte-identical pre-SIMD loops.
+// ---------------------------------------------------------------------
+
+fn dot_f32_i8_seq(q: &[f32], k: &[i8]) -> f32 {
+    let mut dot = 0f32;
+    for (a, &b) in q.iter().zip(k) {
+        dot += a * b as f32;
+    }
+    dot
+}
+
+fn dot_f32_u4_seq(q: &[f32], packed: &[u8]) -> f32 {
+    let mut dot = 0f32;
+    for (e, a) in q.iter().enumerate() {
+        dot += a * u4(packed, e) as f32;
+    }
+    dot
+}
+
+fn axpy_f32_i8_seq(acc: &mut [f32], w: f32, v: &[i8]) {
+    for (a, &vv) in acc.iter_mut().zip(v) {
+        *a += w * vv as f32;
+    }
+}
+
+fn axpy_f32_u4_seq(acc: &mut [f32], w: f32, packed: &[u8]) {
+    for (e, a) in acc.iter_mut().enumerate() {
+        *a += w * u4(packed, e) as f32;
+    }
+}
+
+fn sum_squares_seq(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>()
+}
+
+fn add_assign_seq(acc: &mut [f32], delta: &[f32]) {
+    for (a, b) in acc.iter_mut().zip(delta) {
+        *a += b;
+    }
+}
+
+fn scale_in_place_seq(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+// Mirrors `model::transformer::silu` exactly (duplicated here so the
+// util layer keeps no model-layer dependency); `swiglu_equals_scalar`
+// in tests/simd_parity.rs pins the two bit-identical.
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn swiglu_row_seq(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    for ((f, g), u) in out.iter_mut().zip(gate).zip(up) {
+        *f = silu(*g) * u;
+    }
+}
+
+fn scale_mul_seq(x: &[f32], r: f32, w: &[f32], out: &mut [f32]) {
+    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * r * wi;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane-blocked scalar references (the contract, executable).  Tests
+// pin each SIMD kernel bit-identical to `*_blocked(.., level.lanes())`.
+// ---------------------------------------------------------------------
+
+/// Lane-blocked i8 dot: lane `j` accumulates elements `j, j+L, …`,
+/// fixed-tree reduce, sequential `< L` tail.  `lanes <= 1` is the
+/// sequential loop.
+pub fn dot_f32_i8_blocked(q: &[f32], k: &[i8], lanes: usize) -> f32 {
+    let n = q.len();
+    if lanes <= 1 {
+        return dot_f32_i8_seq(q, k);
+    }
+    debug_assert!(lanes <= MAX_LANES && k.len() >= n);
+    let mut l = [0f32; MAX_LANES];
+    let blocks = n / lanes;
+    for b in 0..blocks {
+        let base = b * lanes;
+        for (j, lj) in l[..lanes].iter_mut().enumerate() {
+            *lj += q[base + j] * k[base + j] as f32;
+        }
+    }
+    let mut dot = reduce_tree(&l[..lanes]);
+    for i in blocks * lanes..n {
+        dot += q[i] * k[i] as f32;
+    }
+    dot
+}
+
+/// Lane-blocked u4 dot (see [`dot_f32_i8_blocked`]).
+pub fn dot_f32_u4_blocked(q: &[f32], packed: &[u8], lanes: usize) -> f32 {
+    let n = q.len();
+    if lanes <= 1 {
+        return dot_f32_u4_seq(q, packed);
+    }
+    debug_assert!(lanes <= MAX_LANES && packed.len() * 2 >= n);
+    let mut l = [0f32; MAX_LANES];
+    let blocks = n / lanes;
+    for b in 0..blocks {
+        let base = b * lanes;
+        for (j, lj) in l[..lanes].iter_mut().enumerate() {
+            *lj += q[base + j] * u4(packed, base + j) as f32;
+        }
+    }
+    let mut dot = reduce_tree(&l[..lanes]);
+    for i in blocks * lanes..n {
+        dot += q[i] * u4(packed, i) as f32;
+    }
+    dot
+}
+
+/// Lane-blocked sum of squares (the `rmsnorm_row` reduction).
+pub fn sum_squares_blocked(x: &[f32], lanes: usize) -> f32 {
+    let n = x.len();
+    if lanes <= 1 {
+        return sum_squares_seq(x);
+    }
+    debug_assert!(lanes <= MAX_LANES);
+    let mut l = [0f32; MAX_LANES];
+    let blocks = n / lanes;
+    for b in 0..blocks {
+        let base = b * lanes;
+        for (j, lj) in l[..lanes].iter_mut().enumerate() {
+            *lj += x[base + j] * x[base + j];
+        }
+    }
+    let mut s = reduce_tree(&l[..lanes]);
+    for &v in &x[blocks * lanes..n] {
+        s += v * v;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Public dispatching wrappers.
+// ---------------------------------------------------------------------
+
+/// `Σ q[i] · k[i]` with i8 codes (`k.len() >= q.len()`).  Scalar level
+/// is the pre-SIMD sequential loop; wide levels follow the blocked
+/// contract at `level().lanes()`.
+pub fn dot_f32_i8(q: &[f32], k: &[i8]) -> f32 {
+    debug_assert!(k.len() >= q.len());
+    match level() {
+        SimdLevel::Scalar => dot_f32_i8_seq(q, k),
+        // SAFETY: `level()` only returns a wide level after the
+        // matching CPU feature was detected at startup.
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dot_f32_i8_sse41(q, k) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot_f32_i8_avx2(q, k) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::dot_f32_i8_neon(q, k) },
+        _ => dot_f32_i8_seq(q, k),
+    }
+}
+
+/// `Σ q[i] · u4(packed, i)` with packed signed 4-bit codes
+/// (`packed.len() * 2 >= q.len()`).
+pub fn dot_f32_u4(q: &[f32], packed: &[u8]) -> f32 {
+    debug_assert!(packed.len() * 2 >= q.len());
+    match level() {
+        SimdLevel::Scalar => dot_f32_u4_seq(q, packed),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::dot_f32_u4_sse41(q, packed) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dot_f32_u4_avx2(q, packed) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::dot_f32_u4_neon(q, packed) },
+        _ => dot_f32_u4_seq(q, packed),
+    }
+}
+
+/// `acc[i] += w · v[i]` with i8 codes (`v.len() >= acc.len()`).
+/// Per-element, so every level is bit-identical to scalar.
+pub fn axpy_f32_i8(acc: &mut [f32], w: f32, v: &[i8]) {
+    debug_assert!(v.len() >= acc.len());
+    match level() {
+        SimdLevel::Scalar => axpy_f32_i8_seq(acc, w, v),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::axpy_f32_i8_sse41(acc, w, v) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_f32_i8_avx2(acc, w, v) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::axpy_f32_i8_neon(acc, w, v) },
+        _ => axpy_f32_i8_seq(acc, w, v),
+    }
+}
+
+/// `acc[i] += w · u4(packed, i)` (`packed.len() * 2 >= acc.len()`).
+pub fn axpy_f32_u4(acc: &mut [f32], w: f32, packed: &[u8]) {
+    debug_assert!(packed.len() * 2 >= acc.len());
+    match level() {
+        SimdLevel::Scalar => axpy_f32_u4_seq(acc, w, packed),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe {
+            x86::axpy_f32_u4_sse41(acc, w, packed)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_f32_u4_avx2(acc, w, packed) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            neon::axpy_f32_u4_neon(acc, w, packed)
+        },
+        _ => axpy_f32_u4_seq(acc, w, packed),
+    }
+}
+
+/// `Σ x[i]²` under the blocked contract (wide levels reassociate —
+/// callers that need the pre-SIMD sum must check `enabled()` first,
+/// as `model::transformer::rmsnorm` does).
+pub fn sum_squares(x: &[f32]) -> f32 {
+    match level() {
+        SimdLevel::Scalar => sum_squares_seq(x),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::sum_squares_sse41(x) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::sum_squares_avx2(x) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::sum_squares_neon(x) },
+        _ => sum_squares_seq(x),
+    }
+}
+
+/// `acc[i] += delta[i]` (residual rows).  Bit-identical at any level.
+pub fn add_assign(acc: &mut [f32], delta: &[f32]) {
+    match level() {
+        SimdLevel::Scalar => add_assign_seq(acc, delta),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::add_assign_sse41(acc, delta) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::add_assign_avx2(acc, delta) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::add_assign_neon(acc, delta) },
+        _ => add_assign_seq(acc, delta),
+    }
+}
+
+/// `x[i] *= s` (online-softmax correction rows).  Bit-identical at
+/// any level.
+pub fn scale_in_place(x: &mut [f32], s: f32) {
+    match level() {
+        SimdLevel::Scalar => scale_in_place_seq(x, s),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe { x86::scale_in_place_sse41(x, s) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::scale_in_place_avx2(x, s) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::scale_in_place_neon(x, s) },
+        _ => scale_in_place_seq(x, s),
+    }
+}
+
+/// `out[i] = silu(gate[i]) · up[i]` (SwiGLU rows).  `exp` stays
+/// scalar; the multiply vectorizes.  Bit-identical at any level.
+pub fn swiglu_row(gate: &[f32], up: &[f32], out: &mut [f32]) {
+    match level() {
+        SimdLevel::Scalar => swiglu_row_seq(gate, up, out),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe {
+            x86::swiglu_row_sse41(gate, up, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::swiglu_row_avx2(gate, up, out) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            neon::swiglu_row_neon(gate, up, out)
+        },
+        _ => swiglu_row_seq(gate, up, out),
+    }
+}
+
+/// Full RMSNorm row at the active level: lane-blocked `Σx²`, then the
+/// per-element `out[i] = (x[i]·r)·w[i]` scale (same association as
+/// the scalar loop).  Callers guarantee equal lengths.
+pub fn rmsnorm_row(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms = sum_squares(x) / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    match level() {
+        SimdLevel::Scalar => scale_mul_seq(x, r, w, out),
+        // SAFETY: level implies the feature was detected (see above).
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse41 => unsafe {
+            x86::scale_mul_sse41(x, r, w, out)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::scale_mul_avx2(x, r, w, out) },
+        // SAFETY: NEON is a baseline feature on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::scale_mul_neon(x, r, w, out) },
+        _ => scale_mul_seq(x, r, w, out),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Family 2: LUT plane-word gathers (AVX2 only).
+// ---------------------------------------------------------------------
+
+/// True when the active level supports the gathered LUT walk
+/// (AVX2 `vgatherdps`); hoist this out of the plane-word loop.
+pub fn lut_gather_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        level() == SimdLevel::Avx2
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Gather the eight byte-table entries of plane word `pw` and return
+/// the two group sums `((t0+t1)+(t2+t3), (t4+t5)+(t6+t7))` — the
+/// exact pairwise tree of the scalar walk in `gemv_lut_range`.
+///
+/// # Safety
+/// `c0 + 2048 <= table.len()` (the byte LUT is padded to whole
+/// words), and `lut_gather_active()` must have returned true for this
+/// dispatch round (AVX2 present).
+pub unsafe fn lut_bytes_pair(table: &[f32], c0: usize, pw: u64)
+                             -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        x86::lut_bytes_pair_avx2(table, c0, pw)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (table, c0, pw);
+        unreachable!("lut_bytes_pair without gather support")
+    }
+}
+
+/// Gather the sixteen nibble-table entries of plane word `pw` and
+/// return the two group sums with the scalar walk's association
+/// (`q0 = ((n0+n1)+n2)+n3`, …, returning `(q0+q1, q2+q3)`).
+///
+/// # Safety
+/// `c0 + 256 <= ntable.len()` and `lut_gather_active()` returned true
+/// for this dispatch round (AVX2 present).
+pub unsafe fn lut_nibbles_pair(ntable: &[f32], c0: usize, pw: u64)
+                               -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        x86::lut_nibbles_pair_avx2(ntable, c0, pw)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (ntable, c0, pw);
+        unreachable!("lut_nibbles_pair without gather support")
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86-64 kernels.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{reduce_tree, silu, u4};
+    use std::arch::x86_64::*;
+
+    /// i8 dot, 8 codes/iter: sign-extend to i32, convert, separate
+    /// mul + add per lane (no FMA — bit-identity with the blocked
+    /// scalar requires two roundings).
+    ///
+    /// # Safety
+    /// AVX2 must be available; `k.len() >= q.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_i8_avx2(q: &[f32], k: &[i8]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n <= q.len() <= k.len().
+            let kb =
+                _mm_loadl_epi64(k.as_ptr().add(i) as *const __m128i);
+            let kf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(kb));
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(qv, kf));
+            i += 8;
+        }
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * k[i] as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// Unpack 4 packed bytes into 8 signed 4-bit codes in stream
+    /// order (low nibble first) in the low 8 bytes of the result.
+    ///
+    /// # Safety
+    /// SSE2 baseline only; `w` holds the 4 bytes.
+    #[inline]
+    unsafe fn unpack_u4x8(w: u32) -> __m128i {
+        let b = _mm_cvtsi32_si128(w as i32);
+        let mask = _mm_set1_epi8(0x0F);
+        let lo = _mm_and_si128(b, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
+        // interleave -> c0,c1,c2,…,c7 (low nibble of byte t is code
+        // 2t, high nibble is code 2t+1)
+        let inter = _mm_unpacklo_epi8(lo, hi);
+        // sign-extend 4 bits: (x ^ 8) - 8 over unsigned nibbles
+        let eight = _mm_set1_epi8(8);
+        _mm_sub_epi8(_mm_xor_si128(inter, eight), eight)
+    }
+
+    /// u4 dot, 8 codes/iter from 4 packed bytes.
+    ///
+    /// # Safety
+    /// AVX2 must be available; `packed.len() * 2 >= q.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32_u4_avx2(q: &[f32], packed: &[u8]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i is a multiple of 8, so i/2 + 4 <= n/2 <=
+            // packed.len() — the 4-byte read is in bounds.
+            let w = (packed.as_ptr().add(i / 2) as *const u32)
+                .read_unaligned();
+            let kf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(
+                unpack_u4x8(w)));
+            let qv = _mm256_loadu_ps(q.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(qv, kf));
+            i += 8;
+        }
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * u4(packed, i) as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `v.len() >= acc.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32_i8_avx2(acc: &mut [f32], w: f32, v: &[i8]) {
+        let n = acc.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n <= acc.len() <= v.len().
+            let vb =
+                _mm_loadl_epi64(v.as_ptr().add(i) as *const __m128i);
+            let vf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(vb));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(
+                acc.as_mut_ptr().add(i),
+                _mm256_add_ps(av, _mm256_mul_ps(wv, vf)),
+            );
+            i += 8;
+        }
+        while i < n {
+            acc[i] += w * v[i] as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `packed.len() * 2 >= acc.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32_u4_avx2(acc: &mut [f32], w: f32,
+                                   packed: &[u8]) {
+        let n = acc.len();
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: as in dot_f32_u4_avx2.
+            let word = (packed.as_ptr().add(i / 2) as *const u32)
+                .read_unaligned();
+            let vf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(
+                unpack_u4x8(word)));
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            _mm256_storeu_ps(
+                acc.as_mut_ptr().add(i),
+                _mm256_add_ps(av, _mm256_mul_ps(wv, vf)),
+            );
+            i += 8;
+        }
+        while i < n {
+            acc[i] += w * u4(packed, i) as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_squares_avx2(x: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n.
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, xv));
+            i += 8;
+        }
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = reduce_tree(&l);
+        while i < n {
+            s += x[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `delta.len() >= acc.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_avx2(acc: &mut [f32], delta: &[f32]) {
+        let n = acc.len().min(delta.len());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n bounds both slices.
+            let av = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let dv = _mm256_loadu_ps(delta.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i),
+                             _mm256_add_ps(av, dv));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += delta[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_in_place_avx2(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let sv = _mm256_set1_ps(s);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n.
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i),
+                             _mm256_mul_ps(xv, sv));
+            i += 8;
+        }
+        while i < n {
+            x[i] *= s;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `gate`/`up` cover `out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn swiglu_row_avx2(gate: &[f32], up: &[f32],
+                                  out: &mut [f32]) {
+        let n = out.len().min(gate.len()).min(up.len());
+        let mut sbuf = [0f32; 8];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            for (j, s) in sbuf.iter_mut().enumerate() {
+                *s = silu(gate[i + j]);
+            }
+            // SAFETY: i + 8 <= n bounds all three slices.
+            let sv = _mm256_loadu_ps(sbuf.as_ptr());
+            let uv = _mm256_loadu_ps(up.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i),
+                             _mm256_mul_ps(sv, uv));
+            i += 8;
+        }
+        while i < n {
+            out[i] = silu(gate[i]) * up[i];
+            i += 1;
+        }
+    }
+
+    /// `out[i] = (x[i]·r)·w[i]` — the rmsnorm elementwise scale.
+    ///
+    /// # Safety
+    /// AVX2 must be available; `x`/`w` cover `out.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_mul_avx2(x: &[f32], r: f32, w: &[f32],
+                                 out: &mut [f32]) {
+        let n = out.len().min(x.len()).min(w.len());
+        let rv = _mm256_set1_ps(r);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n bounds all three slices.
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let wv = _mm256_loadu_ps(w.as_ptr().add(i));
+            _mm256_storeu_ps(
+                out.as_mut_ptr().add(i),
+                _mm256_mul_ps(_mm256_mul_ps(xv, rv), wv),
+            );
+            i += 8;
+        }
+        while i < n {
+            out[i] = x[i] * r * w[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `c0 + 2048 <= table.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_bytes_pair_avx2(table: &[f32], c0: usize,
+                                      pw: u64) -> (f32, f32) {
+        let idx = _mm256_set_epi32(
+            (1792 + ((pw >> 56) & 0xFF)) as i32,
+            (1536 + ((pw >> 48) & 0xFF)) as i32,
+            (1280 + ((pw >> 40) & 0xFF)) as i32,
+            (1024 + ((pw >> 32) & 0xFF)) as i32,
+            (768 + ((pw >> 24) & 0xFF)) as i32,
+            (512 + ((pw >> 16) & 0xFF)) as i32,
+            (256 + ((pw >> 8) & 0xFF)) as i32,
+            (pw & 0xFF) as i32,
+        );
+        // SAFETY: every index < 2048 and c0 + 2048 <= table.len()
+        // (caller contract), so all 8 gather slots are in bounds.
+        let g = _mm256_i32gather_ps::<4>(table.as_ptr().add(c0), idx);
+        let mut l = [0f32; 8];
+        _mm256_storeu_ps(l.as_mut_ptr(), g);
+        ((l[0] + l[1]) + (l[2] + l[3]), (l[4] + l[5]) + (l[6] + l[7]))
+    }
+
+    /// # Safety
+    /// AVX2 must be available; `c0 + 256 <= ntable.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut_nibbles_pair_avx2(ntable: &[f32], c0: usize,
+                                        pw: u64) -> (f32, f32) {
+        let base = ntable.as_ptr().add(c0);
+        let idx_lo = _mm256_set_epi32(
+            (7 * 16 + ((pw >> 28) & 0xF)) as i32,
+            (6 * 16 + ((pw >> 24) & 0xF)) as i32,
+            (5 * 16 + ((pw >> 20) & 0xF)) as i32,
+            (4 * 16 + ((pw >> 16) & 0xF)) as i32,
+            (3 * 16 + ((pw >> 12) & 0xF)) as i32,
+            (2 * 16 + ((pw >> 8) & 0xF)) as i32,
+            (16 + ((pw >> 4) & 0xF)) as i32,
+            (pw & 0xF) as i32,
+        );
+        let idx_hi = _mm256_set_epi32(
+            (15 * 16 + ((pw >> 60) & 0xF)) as i32,
+            (14 * 16 + ((pw >> 56) & 0xF)) as i32,
+            (13 * 16 + ((pw >> 52) & 0xF)) as i32,
+            (12 * 16 + ((pw >> 48) & 0xF)) as i32,
+            (11 * 16 + ((pw >> 44) & 0xF)) as i32,
+            (10 * 16 + ((pw >> 40) & 0xF)) as i32,
+            (9 * 16 + ((pw >> 36) & 0xF)) as i32,
+            (8 * 16 + ((pw >> 32) & 0xF)) as i32,
+        );
+        // SAFETY: every index < 256 and c0 + 256 <= ntable.len()
+        // (caller contract), so all 16 gather slots are in bounds.
+        let ga = _mm256_i32gather_ps::<4>(base, idx_lo);
+        let gb = _mm256_i32gather_ps::<4>(base, idx_hi);
+        let mut a = [0f32; 8];
+        let mut b = [0f32; 8];
+        _mm256_storeu_ps(a.as_mut_ptr(), ga);
+        _mm256_storeu_ps(b.as_mut_ptr(), gb);
+        // replicate the scalar left-associated per-group walk
+        let q0 = ((a[0] + a[1]) + a[2]) + a[3];
+        let q1 = ((a[4] + a[5]) + a[6]) + a[7];
+        let q2 = ((b[0] + b[1]) + b[2]) + b[3];
+        let q3 = ((b[4] + b[5]) + b[6]) + b[7];
+        (q0 + q1, q2 + q3)
+    }
+
+    // ---- SSE4.1 tier: 4 lanes, same contract ----
+
+    /// # Safety
+    /// SSE4.1 must be available; `k.len() >= q.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_f32_i8_sse41(q: &[f32], k: &[i8]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds the 4-byte read.
+            let w = (k.as_ptr().add(i) as *const i32).read_unaligned();
+            let kb = _mm_cvtsi32_si128(w);
+            let kf = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(kb));
+            let qv = _mm_loadu_ps(q.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(qv, kf));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * k[i] as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `packed.len() * 2 >= q.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dot_f32_u4_sse41(q: &[f32], packed: &[u8]) -> f32 {
+        let n = q.len();
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let kf = _mm_set_ps(
+                u4(packed, i + 3) as f32,
+                u4(packed, i + 2) as f32,
+                u4(packed, i + 1) as f32,
+                u4(packed, i) as f32,
+            );
+            // SAFETY: i + 4 <= n bounds the f32 load.
+            let qv = _mm_loadu_ps(q.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(qv, kf));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * u4(packed, i) as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `v.len() >= acc.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_f32_i8_sse41(acc: &mut [f32], w: f32,
+                                    v: &[i8]) {
+        let n = acc.len();
+        let wv = _mm_set1_ps(w);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n <= v.len().
+            let word =
+                (v.as_ptr().add(i) as *const i32).read_unaligned();
+            let vf = _mm_cvtepi32_ps(_mm_cvtepi8_epi32(
+                _mm_cvtsi32_si128(word)));
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i),
+                          _mm_add_ps(av, _mm_mul_ps(wv, vf)));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += w * v[i] as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `packed.len() * 2 >= acc.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn axpy_f32_u4_sse41(acc: &mut [f32], w: f32,
+                                    packed: &[u8]) {
+        let n = acc.len();
+        let wv = _mm_set1_ps(w);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vf = _mm_set_ps(
+                u4(packed, i + 3) as f32,
+                u4(packed, i + 2) as f32,
+                u4(packed, i + 1) as f32,
+                u4(packed, i) as f32,
+            );
+            // SAFETY: i + 4 <= n bounds the loads/stores.
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i),
+                          _mm_add_ps(av, _mm_mul_ps(wv, vf)));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += w * u4(packed, i) as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn sum_squares_sse41(x: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc = _mm_setzero_ps();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n.
+            let xv = _mm_loadu_ps(x.as_ptr().add(i));
+            acc = _mm_add_ps(acc, _mm_mul_ps(xv, xv));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), acc);
+        let mut s = reduce_tree(&l);
+        while i < n {
+            s += x[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `delta.len() >= acc.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn add_assign_sse41(acc: &mut [f32], delta: &[f32]) {
+        let n = acc.len().min(delta.len());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds both slices.
+            let av = _mm_loadu_ps(acc.as_ptr().add(i));
+            let dv = _mm_loadu_ps(delta.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i),
+                          _mm_add_ps(av, dv));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += delta[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn scale_in_place_sse41(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let sv = _mm_set1_ps(s);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n.
+            let xv = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(x.as_mut_ptr().add(i),
+                          _mm_mul_ps(xv, sv));
+            i += 4;
+        }
+        while i < n {
+            x[i] *= s;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `gate`/`up` cover `out.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn swiglu_row_sse41(gate: &[f32], up: &[f32],
+                                   out: &mut [f32]) {
+        let n = out.len().min(gate.len()).min(up.len());
+        let mut sbuf = [0f32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            for (j, s) in sbuf.iter_mut().enumerate() {
+                *s = silu(gate[i + j]);
+            }
+            // SAFETY: i + 4 <= n bounds all three slices.
+            let sv = _mm_loadu_ps(sbuf.as_ptr());
+            let uv = _mm_loadu_ps(up.as_ptr().add(i));
+            _mm_storeu_ps(out.as_mut_ptr().add(i),
+                          _mm_mul_ps(sv, uv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = silu(gate[i]) * up[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// SSE4.1 must be available; `x`/`w` cover `out.len()`.
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn scale_mul_sse41(x: &[f32], r: f32, w: &[f32],
+                                  out: &mut [f32]) {
+        let n = out.len().min(x.len()).min(w.len());
+        let rv = _mm_set1_ps(r);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds all three slices.
+            let xv = _mm_loadu_ps(x.as_ptr().add(i));
+            let wv = _mm_loadu_ps(w.as_ptr().add(i));
+            _mm_storeu_ps(out.as_mut_ptr().add(i),
+                          _mm_mul_ps(_mm_mul_ps(xv, rv), wv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = x[i] * r * w[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 NEON kernels (baseline feature, 4 lanes).
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{reduce_tree, silu, u4};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `k.len() >= q.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_i8_neon(q: &[f32], k: &[i8]) -> f32 {
+        let n = q.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        // 8 codes per load, accumulated as two in-order 4-blocks —
+        // identical association to blocked(4).
+        while i + 8 <= n {
+            // SAFETY: i + 8 <= n bounds the 8-byte load.
+            let k16 = vmovl_s8(vld1_s8(k.as_ptr().add(i)));
+            let klo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(k16)));
+            let khi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(k16)));
+            let qlo = vld1q_f32(q.as_ptr().add(i));
+            let qhi = vld1q_f32(q.as_ptr().add(i + 4));
+            acc = vaddq_f32(acc, vmulq_f32(qlo, klo));
+            acc = vaddq_f32(acc, vmulq_f32(qhi, khi));
+            i += 8;
+        }
+        if i + 4 <= n {
+            let kf = [
+                k[i] as f32,
+                k[i + 1] as f32,
+                k[i + 2] as f32,
+                k[i + 3] as f32,
+            ];
+            // SAFETY: stack array + i + 4 <= n bound the loads.
+            let kv = vld1q_f32(kf.as_ptr());
+            let qv = vld1q_f32(q.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(qv, kv));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        vst1q_f32(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * k[i] as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `packed.len() * 2 >= q.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_f32_u4_neon(q: &[f32], packed: &[u8]) -> f32 {
+        let n = q.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let kf = [
+                u4(packed, i) as f32,
+                u4(packed, i + 1) as f32,
+                u4(packed, i + 2) as f32,
+                u4(packed, i + 3) as f32,
+            ];
+            // SAFETY: stack array + i + 4 <= n bound the loads.
+            let kv = vld1q_f32(kf.as_ptr());
+            let qv = vld1q_f32(q.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(qv, kv));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        vst1q_f32(l.as_mut_ptr(), acc);
+        let mut dot = reduce_tree(&l);
+        while i < n {
+            dot += q[i] * u4(packed, i) as f32;
+            i += 1;
+        }
+        dot
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `v.len() >= acc.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32_i8_neon(acc: &mut [f32], w: f32,
+                                   v: &[i8]) {
+        let n = acc.len();
+        let wv = vdupq_n_f32(w);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vf = [
+                v[i] as f32,
+                v[i + 1] as f32,
+                v[i + 2] as f32,
+                v[i + 3] as f32,
+            ];
+            // SAFETY: stack array + i + 4 <= n bound the accesses.
+            let vv = vld1q_f32(vf.as_ptr());
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i),
+                      vaddq_f32(av, vmulq_f32(wv, vv)));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += w * v[i] as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `packed.len()*2 >= acc.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_f32_u4_neon(acc: &mut [f32], w: f32,
+                                   packed: &[u8]) {
+        let n = acc.len();
+        let wv = vdupq_n_f32(w);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vf = [
+                u4(packed, i) as f32,
+                u4(packed, i + 1) as f32,
+                u4(packed, i + 2) as f32,
+                u4(packed, i + 3) as f32,
+            ];
+            // SAFETY: stack array + i + 4 <= n bound the accesses.
+            let vv = vld1q_f32(vf.as_ptr());
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i),
+                      vaddq_f32(av, vmulq_f32(wv, vv)));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += w * u4(packed, i) as f32;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_squares_neon(x: &[f32]) -> f32 {
+        let n = x.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n.
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            acc = vaddq_f32(acc, vmulq_f32(xv, xv));
+            i += 4;
+        }
+        let mut l = [0f32; 4];
+        vst1q_f32(l.as_mut_ptr(), acc);
+        let mut s = reduce_tree(&l);
+        while i < n {
+            s += x[i] * x[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `delta.len() >= acc.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign_neon(acc: &mut [f32], delta: &[f32]) {
+        let n = acc.len().min(delta.len());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds both slices.
+            let av = vld1q_f32(acc.as_ptr().add(i));
+            let dv = vld1q_f32(delta.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(av, dv));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += delta[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_in_place_neon(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let sv = vdupq_n_f32(s);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n.
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(xv, sv));
+            i += 4;
+        }
+        while i < n {
+            x[i] *= s;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `gate`/`up` cover `out.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn swiglu_row_neon(gate: &[f32], up: &[f32],
+                                  out: &mut [f32]) {
+        let n = out.len().min(gate.len()).min(up.len());
+        let mut sbuf = [0f32; 4];
+        let mut i = 0usize;
+        while i + 4 <= n {
+            for (j, s) in sbuf.iter_mut().enumerate() {
+                *s = silu(gate[i + j]);
+            }
+            // SAFETY: i + 4 <= n bounds all three slices.
+            let sv = vld1q_f32(sbuf.as_ptr());
+            let uv = vld1q_f32(up.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(sv, uv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = silu(gate[i]) * up[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64; `x`/`w` cover `out.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_mul_neon(x: &[f32], r: f32, w: &[f32],
+                                 out: &mut [f32]) {
+        let n = out.len().min(x.len()).min(w.len());
+        let rv = vdupq_n_f32(r);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            // SAFETY: i + 4 <= n bounds all three slices.
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let wv = vld1q_f32(w.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i),
+                      vmulq_f32(vmulq_f32(xv, rv), wv));
+            i += 4;
+        }
+        while i < n {
+            out[i] = x[i] * r * w[i];
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Tests.  Per-level kernels are pinned against the blocked scalar
+// reference *without* touching the global mode (no races with
+// concurrently running tests); mode-resolution tests only exercise
+// the pure parser and the encode/decode round-trip.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg;
+
+    fn mats(n: usize, seed: u64) -> (Vec<f32>, Vec<i8>, Vec<u8>) {
+        let mut rng = Pcg::new(seed);
+        let q = rng.normal_vec(n, 1.0);
+        let k: Vec<i8> =
+            (0..n).map(|_| (rng.next_u32() as i8)).collect();
+        let packed: Vec<u8> = (0..n.div_ceil(2))
+            .map(|_| rng.next_u32() as u8)
+            .collect();
+        (q, k, packed)
+    }
+
+    #[test]
+    fn parse_mode_grammar() {
+        assert_eq!(parse_mode("off"), Some(SimdMode::Off));
+        assert_eq!(parse_mode("0"), Some(SimdMode::Off));
+        assert_eq!(parse_mode("SCALAR"), Some(SimdMode::Off));
+        assert_eq!(parse_mode("auto"), Some(SimdMode::Auto));
+        assert_eq!(parse_mode(" on "), Some(SimdMode::Auto));
+        assert_eq!(parse_mode("avx2"),
+                   Some(SimdMode::Cap(SimdLevel::Avx2)));
+        assert_eq!(parse_mode("sse4.1"),
+                   Some(SimdMode::Cap(SimdLevel::Sse41)));
+        assert_eq!(parse_mode("neon"),
+                   Some(SimdMode::Cap(SimdLevel::Neon)));
+        assert_eq!(parse_mode("bogus"), None);
+        assert_eq!(parse_mode(""), None);
+    }
+
+    #[test]
+    fn mode_encoding_round_trips() {
+        for m in [
+            SimdMode::Off,
+            SimdMode::Auto,
+            SimdMode::Cap(SimdLevel::Sse41),
+            SimdMode::Cap(SimdLevel::Avx2),
+            SimdMode::Cap(SimdLevel::Neon),
+        ] {
+            assert_eq!(decode(encode(m)), Some(m));
+        }
+        assert_eq!(decode(MODE_UNSET), None);
+        // Cap(Scalar) folds into Off
+        assert_eq!(decode(encode(SimdMode::Cap(SimdLevel::Scalar))),
+                   Some(SimdMode::Off));
+    }
+
+    #[test]
+    fn cap_never_raises_above_detected() {
+        use SimdLevel::*;
+        assert_eq!(cap_level(Avx2, Sse41), Sse41);
+        assert_eq!(cap_level(Avx2, Avx2), Avx2);
+        assert_eq!(cap_level(Sse41, Avx2), Sse41);
+        assert_eq!(cap_level(Scalar, Avx2), Scalar);
+        assert_eq!(cap_level(Neon, Neon), Neon);
+        assert_eq!(cap_level(Neon, Avx2), Scalar);
+        assert_eq!(cap_level(Avx2, Neon), Scalar);
+        assert_eq!(cap_level(Avx2, Scalar), Scalar);
+    }
+
+    #[test]
+    fn u4_decode_matches_kvcache() {
+        let packed: Vec<u8> = (0..=255u8).collect();
+        for i in 0..512 {
+            assert_eq!(u4(&packed, i),
+                       crate::model::kvcache::u4_code(&packed, i));
+        }
+    }
+
+    /// blocked(1) degenerates to the sequential loop exactly.
+    #[test]
+    fn blocked_one_lane_is_sequential() {
+        let (q, k, p) = mats(301, 9);
+        assert_eq!(dot_f32_i8_blocked(&q, &k, 1),
+                   dot_f32_i8_seq(&q, &k));
+        assert_eq!(dot_f32_u4_blocked(&q, &p, 1),
+                   dot_f32_u4_seq(&q, &p));
+        assert_eq!(sum_squares_blocked(&q, 1), sum_squares_seq(&q));
+    }
+
+    /// Blocked reductions track the sequential sum closely (they
+    /// reassociate, so equality is approximate by design).
+    #[test]
+    fn blocked_tracks_sequential() {
+        for n in [0usize, 1, 3, 7, 8, 9, 63, 64, 65, 300] {
+            let (q, k, p) = mats(n, 1000 + n as u64);
+            for lanes in [4usize, 8] {
+                let a = dot_f32_i8_blocked(&q, &k, lanes);
+                let b = dot_f32_i8_seq(&q, &k);
+                assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                        "i8 n={n} lanes={lanes}: {a} vs {b}");
+                let a = dot_f32_u4_blocked(&q, &p, lanes);
+                let b = dot_f32_u4_seq(&q, &p);
+                assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                        "u4 n={n} lanes={lanes}: {a} vs {b}");
+            }
+        }
+    }
+
+    /// Each compiled-in wide kernel is bit-identical to the blocked
+    /// scalar reference at its lane count — the contract the parity
+    /// suites lean on.  Skips levels the CPU doesn't have.
+    #[test]
+    fn wide_kernels_match_blocked_reference_bitwise() {
+        for n in [0usize, 1, 4, 7, 8, 12, 15, 16, 64, 65, 127, 256] {
+            let (q, k, p) = mats(n, 40_000 + n as u64);
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("avx2") {
+                    // SAFETY: feature checked on the line above.
+                    let (di, du, ss) = unsafe {
+                        (x86::dot_f32_i8_avx2(&q, &k),
+                         x86::dot_f32_u4_avx2(&q, &p),
+                         x86::sum_squares_avx2(&q))
+                    };
+                    assert_eq!(di, dot_f32_i8_blocked(&q, &k, 8),
+                               "avx2 i8 n={n}");
+                    assert_eq!(du, dot_f32_u4_blocked(&q, &p, 8),
+                               "avx2 u4 n={n}");
+                    assert_eq!(ss, sum_squares_blocked(&q, 8),
+                               "avx2 ssq n={n}");
+                }
+                if is_x86_feature_detected!("sse4.1") {
+                    // SAFETY: feature checked on the line above.
+                    let (di, du, ss) = unsafe {
+                        (x86::dot_f32_i8_sse41(&q, &k),
+                         x86::dot_f32_u4_sse41(&q, &p),
+                         x86::sum_squares_sse41(&q))
+                    };
+                    assert_eq!(di, dot_f32_i8_blocked(&q, &k, 4),
+                               "sse41 i8 n={n}");
+                    assert_eq!(du, dot_f32_u4_blocked(&q, &p, 4),
+                               "sse41 u4 n={n}");
+                    assert_eq!(ss, sum_squares_blocked(&q, 4),
+                               "sse41 ssq n={n}");
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                // SAFETY: NEON is baseline on aarch64.
+                let (di, du, ss) = unsafe {
+                    (neon::dot_f32_i8_neon(&q, &k),
+                     neon::dot_f32_u4_neon(&q, &p),
+                     neon::sum_squares_neon(&q))
+                };
+                assert_eq!(di, dot_f32_i8_blocked(&q, &k, 4),
+                           "neon i8 n={n}");
+                assert_eq!(du, dot_f32_u4_blocked(&q, &p, 4),
+                           "neon u4 n={n}");
+                assert_eq!(ss, sum_squares_blocked(&q, 4),
+                           "neon ssq n={n}");
+            }
+        }
+    }
+
+    /// Elementwise kernels (axpy, add, scale, swiglu, rmsnorm scale)
+    /// are per-element and must equal the sequential loop exactly at
+    /// every compiled-in level.
+    #[test]
+    fn elementwise_kernels_bit_identical_to_sequential() {
+        for n in [0usize, 1, 5, 8, 13, 64, 100] {
+            let (q, k, p) = mats(n, 70_000 + n as u64);
+            let mut rng = Pcg::new(99 + n as u64);
+            let delta = rng.normal_vec(n, 1.0);
+            let up = rng.normal_vec(n, 1.0);
+            let w = 0.37f32;
+
+            let mut want_axi = q.clone();
+            axpy_f32_i8_seq(&mut want_axi, w, &k);
+            let mut want_axu = q.clone();
+            axpy_f32_u4_seq(&mut want_axu, w, &p);
+            let mut want_add = q.clone();
+            add_assign_seq(&mut want_add, &delta);
+            let mut want_scale = q.clone();
+            scale_in_place_seq(&mut want_scale, w);
+            let mut want_swi = vec![0f32; n];
+            swiglu_row_seq(&q, &up, &mut want_swi);
+            let mut want_sm = vec![0f32; n];
+            scale_mul_seq(&q, w, &delta, &mut want_sm);
+
+            #[cfg(target_arch = "x86_64")]
+            {
+                type Apply = (&'static str, bool);
+                let levels: [Apply; 2] = [
+                    ("avx2", is_x86_feature_detected!("avx2")),
+                    ("sse4.1", is_x86_feature_detected!("sse4.1")),
+                ];
+                for (name, present) in levels {
+                    if !present {
+                        continue;
+                    }
+                    let mut axi = q.clone();
+                    let mut axu = q.clone();
+                    let mut add = q.clone();
+                    let mut sc = q.clone();
+                    let mut swi = vec![0f32; n];
+                    let mut sm = vec![0f32; n];
+                    // SAFETY: the matching feature was detected.
+                    unsafe {
+                        if name == "avx2" {
+                            x86::axpy_f32_i8_avx2(&mut axi, w, &k);
+                            x86::axpy_f32_u4_avx2(&mut axu, w, &p);
+                            x86::add_assign_avx2(&mut add, &delta);
+                            x86::scale_in_place_avx2(&mut sc, w);
+                            x86::swiglu_row_avx2(&q, &up, &mut swi);
+                            x86::scale_mul_avx2(&q, w, &delta,
+                                                &mut sm);
+                        } else {
+                            x86::axpy_f32_i8_sse41(&mut axi, w, &k);
+                            x86::axpy_f32_u4_sse41(&mut axu, w, &p);
+                            x86::add_assign_sse41(&mut add, &delta);
+                            x86::scale_in_place_sse41(&mut sc, w);
+                            x86::swiglu_row_sse41(&q, &up, &mut swi);
+                            x86::scale_mul_sse41(&q, w, &delta,
+                                                 &mut sm);
+                        }
+                    }
+                    assert_eq!(axi, want_axi, "{name} axpy_i8 n={n}");
+                    assert_eq!(axu, want_axu, "{name} axpy_u4 n={n}");
+                    assert_eq!(add, want_add, "{name} add n={n}");
+                    assert_eq!(sc, want_scale, "{name} scale n={n}");
+                    assert_eq!(swi, want_swi, "{name} swiglu n={n}");
+                    assert_eq!(sm, want_sm, "{name} scale_mul n={n}");
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                let mut axi = q.clone();
+                let mut axu = q.clone();
+                let mut add = q.clone();
+                let mut sc = q.clone();
+                let mut swi = vec![0f32; n];
+                let mut sm = vec![0f32; n];
+                // SAFETY: NEON is baseline on aarch64.
+                unsafe {
+                    neon::axpy_f32_i8_neon(&mut axi, w, &k);
+                    neon::axpy_f32_u4_neon(&mut axu, w, &p);
+                    neon::add_assign_neon(&mut add, &delta);
+                    neon::scale_in_place_neon(&mut sc, w);
+                    neon::swiglu_row_neon(&q, &up, &mut swi);
+                    neon::scale_mul_neon(&q, w, &delta, &mut sm);
+                }
+                assert_eq!(axi, want_axi, "neon axpy_i8 n={n}");
+                assert_eq!(axu, want_axu, "neon axpy_u4 n={n}");
+                assert_eq!(add, want_add, "neon add n={n}");
+                assert_eq!(sc, want_scale, "neon scale n={n}");
+                assert_eq!(swi, want_swi, "neon swiglu n={n}");
+                assert_eq!(sm, want_sm, "neon scale_mul n={n}");
+            }
+        }
+    }
+
+    /// The AVX2 LUT gathers replicate the scalar pairwise trees
+    /// bit-for-bit (byte path: `(t0+t1)+(t2+t3)`; nibble path: the
+    /// left-associated 4-entry walk).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn lut_gathers_match_scalar_trees_bitwise() {
+        if !is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let mut rng = Pcg::new(7);
+        let table = rng.normal_vec(2 * 2048, 1.0);
+        let ntable = rng.normal_vec(2 * 256, 1.0);
+        for trial in 0..64u64 {
+            let pw = rng.next_u64();
+            let c0 = if trial % 2 == 0 { 0 } else { 2048 };
+            // scalar byte tree, exactly as gemv_lut_range walks it
+            let t = |j: usize| {
+                table[c0 + j * 256 + ((pw >> (8 * j)) & 0xFF) as usize]
+            };
+            let q0 = t(0) + t(1);
+            let q1 = t(2) + t(3);
+            let q2 = t(4) + t(5);
+            let q3 = t(6) + t(7);
+            // SAFETY: AVX2 checked at fn entry; c0 + 2048 in bounds.
+            let got = unsafe { lut_bytes_pair(&table, c0, pw) };
+            assert_eq!(got, (q0 + q1, q2 + q3), "byte pw={pw:#x}");
+
+            let nc0 = if trial % 2 == 0 { 0 } else { 256 };
+            let nt = |j: usize| {
+                ntable[nc0 + j * 16 + ((pw >> (4 * j)) & 0xF) as usize]
+            };
+            let mut qs = [0f32; 4];
+            for (g, qv) in qs.iter_mut().enumerate() {
+                for j in 0..4 {
+                    *qv += nt(4 * g + j);
+                }
+            }
+            // SAFETY: AVX2 checked at fn entry; nc0 + 256 in bounds.
+            let got = unsafe { lut_nibbles_pair(&ntable, nc0, pw) };
+            assert_eq!(got, (qs[0] + qs[1], qs[2] + qs[3]),
+                       "nibble pw={pw:#x}");
+        }
+    }
+}

@@ -23,6 +23,14 @@
 //! arithmetic: serial and pooled kernels are pinned bit-identical
 //! (`tests/parallel_parity.rs`), so a concurrently flipped gate can
 //! change wall time but not one output bit.
+//!
+//! The SIMD kernel dispatch ([`crate::util::simd`], `MOBIQ_SIMD`)
+//! follows the same resolution order — programmatic override
+//! (`ServerConfig.simd` / tests) beats the cached env var beats the
+//! default — but is *not* a `TunableGate`: its value is an enum (off /
+//! auto / level cap) rather than a threshold, and unlike these gates
+//! flipping it can reassociate f32 reductions, which is why the parity
+//! suites pin each mode separately (`tests/simd_parity.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;

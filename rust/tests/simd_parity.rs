@@ -1,0 +1,390 @@
+//! SIMD dispatch parity (ISSUE 9 acceptance).
+//!
+//! The bar: `MOBIQ_SIMD=off` runs the byte-identical pre-SIMD scalar
+//! loops, `auto` runs the detected wide kernels, and every existing
+//! parity suite must hold under *both* — the tiled-vs-oracle attention
+//! bound, the quantized KV oracle bounds, and shard bit-identity at
+//! N = 2.  On top of that, three exactness pins:
+//!
+//! * the dispatching i8/u4 dot wrappers are **bit-identical** to the
+//!   lane-blocked scalar reference at the active lane count (integer
+//!   codes convert exactly to f32; separate mul + add per lane; fixed
+//!   reduction tree — see `util/simd.rs`);
+//! * the LUT plane-word gather replicates the scalar walk's pairwise
+//!   sum trees, so `gemv_lut` is bit-identical **across** modes;
+//! * the per-element families (axpy, residual add, scale, SwiGLU) are
+//!   bit-identical across modes — only reductions (`Σx²` in rmsnorm)
+//!   may reassociate, and then only within 1e-5 relative error.
+//!
+//! Every test here flips the process-wide dispatch mode, so the whole
+//! binary serialises on one lock — these tests must NOT move into the
+//! lib crate, where they would race the in-crate numeric parity tests.
+
+use std::sync::{Mutex, MutexGuard};
+
+use mobiquant::bench_support::synth_model_shaped;
+use mobiquant::mobiq::bitplane::PackedSlice;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::mobiq::gemv::{gemv_lut, TokenLut};
+use mobiquant::mobiq::quantizer::{decompose, GroupParams};
+use mobiquant::model::attention::{append_kv_block, attention_block,
+                                  attention_step, AttnScratch,
+                                  RopeCache};
+use mobiquant::model::kvcache::KvCache;
+use mobiquant::model::transformer::{rmsnorm, silu};
+use mobiquant::model::weights::ModelConfig;
+use mobiquant::model::{KvArena, KvPrecision, ShardRuntime, KV_PAGE};
+use mobiquant::util::prng::Pcg;
+use mobiquant::util::simd::{self, SimdMode};
+
+const TOL: f32 = 1e-4;
+
+/// Process-wide dispatch mode is global state; serialise every test.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // a panicked test poisons the lock but leaves the () intact
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the dispatch mode forced, restoring env/default
+/// resolution afterwards.
+fn with_mode<T>(mode: SimdMode, f: impl FnOnce() -> T) -> T {
+    simd::set_mode(mode);
+    let out = f();
+    simd::clear_mode();
+    out
+}
+
+const MODES: [SimdMode; 2] = [SimdMode::Off, SimdMode::Auto];
+
+fn attn_cfg(n_heads: usize, n_kv_heads: usize, hd: usize,
+            max_seq: usize) -> ModelConfig {
+    ModelConfig {
+        name: "simd".into(),
+        vocab_size: 16,
+        d_model: n_heads * hd,
+        n_layers: 1,
+        n_heads,
+        n_kv_heads,
+        d_ff: 16,
+        max_seq_len: max_seq,
+        rope_theta: 1e4,
+        norm_eps: 1e-5,
+        n_slices: 4,
+        slice_bits: 2,
+        group_size: 32,
+        router_hidden: 8,
+    }
+}
+
+fn quant_inputs(rng: &mut Pcg, n: usize) -> (Vec<f32>, Vec<i8>, Vec<u8>) {
+    let q = rng.normal_vec(n, 1.0);
+    let k: Vec<i8> = (0..n)
+        .map(|_| (rng.next_u32() & 0xFF) as u8 as i8)
+        .collect();
+    let packed: Vec<u8> = (0..n.div_ceil(2))
+        .map(|_| (rng.next_u32() & 0xFF) as u8)
+        .collect();
+    (q, k, packed)
+}
+
+/// The tentpole exactness pin: under each mode, the dispatching dot /
+/// Σx² wrappers equal the lane-blocked scalar reference at the active
+/// lane count, bit for bit (i32-style exact code conversion + fixed
+/// reduction order — the "vectorized == restructured scalar" claim).
+#[test]
+fn dot_wrappers_match_blocked_reference_bitwise() {
+    let _g = lock();
+    let mut rng = Pcg::new(9001);
+    for &n in &[1usize, 4, 7, 8, 15, 16, 64, 65, 127, 256] {
+        let (q, k, packed) = quant_inputs(&mut rng, n);
+        for mode in MODES {
+            with_mode(mode, || {
+                let lanes = simd::level().lanes();
+                assert_eq!(simd::dot_f32_i8(&q, &k),
+                           simd::dot_f32_i8_blocked(&q, &k, lanes),
+                           "i8 dot n={n} {mode:?} lanes={lanes}");
+                assert_eq!(simd::dot_f32_u4(&q, &packed),
+                           simd::dot_f32_u4_blocked(&q, &packed, lanes),
+                           "u4 dot n={n} {mode:?} lanes={lanes}");
+                assert_eq!(simd::sum_squares(&q),
+                           simd::sum_squares_blocked(&q, lanes),
+                           "sum_squares n={n} {mode:?} lanes={lanes}");
+            });
+        }
+    }
+}
+
+/// Per-element kernel families carry no reduction, so off and auto
+/// must agree bit for bit: V-side axpys, residual adds, the
+/// online-softmax correction scale, and the SwiGLU combine.
+#[test]
+fn elementwise_rows_bit_identical_across_modes() {
+    let _g = lock();
+    let mut rng = Pcg::new(9002);
+    for &n in &[1usize, 7, 8, 65, 256] {
+        let (q, k, packed) = quant_inputs(&mut rng, n);
+        let gate = rng.normal_vec(n, 2.0);
+        let base = rng.normal_vec(n, 1.0);
+        let per_mode: Vec<_> = MODES.iter().map(|&mode| {
+            with_mode(mode, || {
+                let mut axi = base.clone();
+                simd::axpy_f32_i8(&mut axi, 0.37, &k);
+                let mut axu = base.clone();
+                simd::axpy_f32_u4(&mut axu, -1.21, &packed);
+                let mut add = base.clone();
+                simd::add_assign(&mut add, &q);
+                let mut sc = base.clone();
+                simd::scale_in_place(&mut sc, 0.731);
+                let mut sw = vec![0f32; n];
+                simd::swiglu_row(&gate, &q, &mut sw);
+                (axi, axu, add, sc, sw)
+            })
+        }).collect();
+        assert_eq!(per_mode[0], per_mode[1],
+                   "n={n}: an elementwise family diverged across modes");
+    }
+}
+
+/// Pins `util::simd`'s private `silu` duplicate to
+/// `model::transformer::silu` (the util layer keeps no model-layer
+/// dependency, so the function body is duplicated).
+#[test]
+fn swiglu_equals_scalar() {
+    let _g = lock();
+    let mut rng = Pcg::new(9003);
+    let gate = rng.normal_vec(129, 2.0);
+    let up = rng.normal_vec(129, 1.0);
+    let want: Vec<f32> = gate.iter().zip(&up)
+        .map(|(g, u)| silu(*g) * u)
+        .collect();
+    for mode in MODES {
+        with_mode(mode, || {
+            let mut got = vec![0f32; gate.len()];
+            simd::swiglu_row(&gate, &up, &mut got);
+            assert_eq!(got, want, "{mode:?}: swiglu != silu(g)*u");
+        });
+    }
+}
+
+/// RMSNorm: off mode must be byte-identical to the pre-SIMD sequential
+/// loop; auto may reassociate Σx² (blocked lanes) but stays within
+/// 1e-5 relative error of it.
+#[test]
+fn rmsnorm_off_exact_auto_within_1e5() {
+    let _g = lock();
+    let mut rng = Pcg::new(9004);
+    for &n in &[8usize, 64, 160, 1024] {
+        let x = rng.normal_vec(n, 1.0);
+        let w = rng.normal_vec(n, 0.5);
+        let eps = 1e-5f32;
+        // the pre-SIMD scalar loop, verbatim
+        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / n as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        let want: Vec<f32> = x.iter().zip(&w)
+            .map(|(xi, wi)| xi * r * wi)
+            .collect();
+
+        let mut off = vec![0f32; n];
+        with_mode(SimdMode::Off, || rmsnorm(&x, &w, eps, &mut off));
+        assert_eq!(off, want, "n={n}: off-mode rmsnorm not pre-SIMD");
+
+        let mut auto = vec![0f32; n];
+        with_mode(SimdMode::Auto, || rmsnorm(&x, &w, eps, &mut auto));
+        for (i, (a, b)) in auto.iter().zip(&want).enumerate() {
+            let rel = (a - b).abs() / b.abs().max(1e-6);
+            assert!(rel <= 1e-5,
+                    "n={n} elem {i}: auto rmsnorm rel err {rel}");
+        }
+    }
+}
+
+/// Family 2: the AVX2 LUT gather replicates the scalar walk's pairwise
+/// sum trees, so whole `gemv_lut` outputs are bit-identical across
+/// modes — on both the byte-table path (small d_in) and the
+/// nibble-table path (d_in past the nibble threshold).
+#[test]
+fn lut_gemv_bit_identical_across_modes() {
+    let _g = lock();
+    let mut rng = Pcg::new(77);
+    for &(d_in, d_out) in &[(512usize, 96usize), (2048, 64)] {
+        let gs = 32;
+        let w = rng.normal_vec(d_in * d_out, 0.1);
+        let base = GroupParams::from_minmax(&w, d_in, d_out, 2, gs);
+        let codes = decompose(&w, &base, 4);
+        let slices: Vec<PackedSlice> = codes.iter()
+            .map(|c| PackedSlice::from_codes(c, d_in, d_out, 2))
+            .collect();
+        let x = rng.normal_vec(d_in, 1.0);
+        let mut lut = TokenLut::new(d_in, gs);
+        lut.build(&x, gs);
+        let active = [true, true, false, true];
+
+        let mut off = vec![0f32; d_out];
+        with_mode(SimdMode::Off,
+                  || gemv_lut(&slices, &base, &lut, &active, &mut off));
+        let mut auto = vec![0f32; d_out];
+        with_mode(SimdMode::Auto,
+                  || gemv_lut(&slices, &base, &lut, &active, &mut auto));
+        assert_eq!(off, auto,
+                   "{d_in}x{d_out}: gathered LUT walk diverged from \
+                    the scalar word walk");
+    }
+}
+
+fn filled_cache(rng: &mut Pcg, n_kv: usize, hd: usize,
+                positions: usize) -> KvCache {
+    let mut cache = KvCache::new(positions, n_kv, hd);
+    let w = n_kv * hd;
+    for _ in 0..positions {
+        let k = rng.normal_vec(w, 1.0);
+        let v = rng.normal_vec(w, 1.0);
+        cache.push(&k, &v);
+    }
+    cache
+}
+
+/// attention_parity's bar, per mode: the tiled online-softmax kernel
+/// tracks the two-pass scalar oracle within 1e-4 whether the dots are
+/// scalar or wide (both kernel and oracle dispatch together).
+#[test]
+fn attention_tiled_matches_oracle_under_both_modes() {
+    let _g = lock();
+    let (n_heads, n_kv, hd, max_seq) = (4usize, 2usize, 16usize, 256);
+    let cfg = attn_cfg(n_heads, n_kv, hd, max_seq);
+    let d = cfg.d_model;
+    for mode in MODES {
+        with_mode(mode, || {
+            let mut rng = Pcg::new(4200);
+            let cache = filled_cache(&mut rng, n_kv, hd, max_seq);
+            for &(pos0, t) in &[(0usize, 33usize), (100, 57), (255, 1)] {
+                let q = rng.normal_vec(t * d, 1.0);
+                let mut scores = vec![0f32; max_seq];
+                let mut want = vec![0f32; t * d];
+                for i in 0..t {
+                    attention_step(&q[i * d..(i + 1) * d], &cache, &cfg,
+                                   pos0 + i, &mut scores,
+                                   &mut want[i * d..(i + 1) * d]);
+                }
+                let mut got = vec![0f32; t * d];
+                let mut sc = AttnScratch::new();
+                attention_block(&cfg, &q, &cache, pos0, t, &mut sc,
+                                None, &mut got);
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < TOL,
+                            "{mode:?} pos0={pos0} t={t} ctx[{i}]: \
+                             tiled {a} vs oracle {b}");
+                }
+            }
+        });
+    }
+}
+
+/// Identical K/V stream into a slab and a paged arena sequence at
+/// `kvp` (uneven chunks crossing page seams) — kv_arena's fixture.
+fn paired_fill(cfg: &ModelConfig, t: usize, seed: u64,
+               kvp: KvPrecision) -> (KvCache, KvArena,
+                                     mobiquant::model::KvHandle) {
+    let hd = cfg.head_dim();
+    let n_kv = cfg.n_kv_heads;
+    let w = n_kv * hd;
+    let mut rng = Pcg::new(seed);
+    let k_block = rng.normal_vec(t * w, 1.0);
+    let v_block = rng.normal_vec(t * w, 1.0);
+    let mut rope = RopeCache::new(hd, cfg.rope_theta);
+    rope.ensure(t);
+
+    let mut slab = KvCache::new(cfg.max_seq_len, n_kv, hd);
+    let mut arena = KvArena::new(1, cfg.max_seq_len, n_kv, hd, 8);
+    let seq = arena.alloc_seq_at(kvp);
+    let mut fed = 0usize;
+    for chunk in [50usize, 31, 64, 64] {
+        let n = chunk.min(t - fed);
+        if n == 0 {
+            break;
+        }
+        let lo = fed * w;
+        append_kv_block(&mut slab, &rope, &k_block[lo..(fed + n) * w],
+                        &v_block[lo..(fed + n) * w], n);
+        arena.append_kv_block(seq, 0, &rope,
+                              &k_block[lo..(fed + n) * w],
+                              &v_block[lo..(fed + n) * w], n)
+            .unwrap();
+        fed += n;
+    }
+    assert_eq!(fed, t);
+    (slab, arena, seq)
+}
+
+fn rel_err(got: &[f32], want: &[f32]) -> f32 {
+    let mut max_err = 0f32;
+    let mut max_abs = 0f32;
+    for (a, b) in got.iter().zip(want) {
+        max_err = max_err.max((a - b).abs());
+        max_abs = max_abs.max(b.abs());
+    }
+    max_err / max_abs.max(1e-6)
+}
+
+/// kv_arena's quantized bar, per mode: i8 paged attention within 1e-2
+/// of the f32 slab oracle, u4 within 0.3, across a page-seam sweep —
+/// the wide fused-dequant dots must not widen either bound.
+#[test]
+fn quantized_attention_bounds_hold_under_both_modes() {
+    let _g = lock();
+    let cfg = attn_cfg(4, 2, 16, 3 * KV_PAGE);
+    let d = cfg.d_model;
+    for mode in MODES {
+        with_mode(mode, || {
+            for &t in &[65usize, 129] {
+                let mut rng = Pcg::new(700 + t as u64);
+                let q = rng.normal_vec(t * d, 1.0);
+                let (slab, _, _) = paired_fill(&cfg, t, 600 + t as u64,
+                                               KvPrecision::F32);
+                let mut sc = AttnScratch::new();
+                let mut want = vec![0f32; t * d];
+                attention_block(&cfg, &q, &slab, 0, t, &mut sc, None,
+                                &mut want);
+                for &(kvp, tol) in &[(KvPrecision::Int8, 1e-2f32),
+                                     (KvPrecision::Int4, 0.3)] {
+                    let (_, arena, seq) =
+                        paired_fill(&cfg, t, 600 + t as u64, kvp);
+                    let view = arena.layer(seq, 0);
+                    let mut got = vec![0f32; t * d];
+                    attention_block(&cfg, &q, &view, 0, t, &mut sc,
+                                    None, &mut got);
+                    let e = rel_err(&got, &want);
+                    assert!(e <= tol,
+                            "{mode:?} {} T={t}: rel err {e} > {tol}",
+                            kvp.label());
+                }
+            }
+        });
+    }
+}
+
+/// shard_parity's bar at N = 2, per mode: sharded execution stays a
+/// partition (bit-identical logits), whichever kernels are dispatched
+/// — lanes read the same process-wide mode as the unsharded run.
+#[test]
+fn shard_n2_bit_identical_under_both_modes() {
+    let _g = lock();
+    let model = synth_model_shaped(131, 4, 2, 160);
+    let tokens: Vec<u32> = (0..100)
+        .map(|i| ((i * 7 + 3) % 256) as u32)
+        .collect();
+    for mode in MODES {
+        with_mode(mode, || {
+            for prec in [Precision::Fixed(2), Precision::elastic(4.0)] {
+                let want = model.forward_logits(&tokens, prec).unwrap();
+                let mut rt = ShardRuntime::new(&model, 2).unwrap();
+                let got = rt.forward_logits(&model, &tokens, prec)
+                    .unwrap();
+                assert_eq!(got, want,
+                           "{mode:?} {prec:?}: sharded forward \
+                            diverged from unsharded");
+            }
+        });
+    }
+}
