@@ -1,0 +1,134 @@
+//! §Perf §Swap — host-tier KV page swap study (EXPERIMENTS.md §Swap).
+//!
+//! Questions, all on the synthetic model (no `make artifacts`):
+//!
+//! 1. **Exact byte accounting** of a swap-out/swap-in round trip at
+//!    f32 / i8 / u4 page storage: the pass must move exactly the
+//!    cold-page bytes (full pages strictly before the tail page, both
+//!    layers), restore exactly the same bytes, and leave the host
+//!    tier empty afterwards.  These rows are exact and asserted — a
+//!    regenerated report can never silently regress them.
+//! 2. **Swap vs recompute**: wall time of a full round trip
+//!    (device→host→device memcpy of the cold pages) vs re-prefilling
+//!    the same token prefix through the model — the crossover the
+//!    ladder's swap rung exists to exploit.  Timing rows vary by
+//!    machine; the acceptance bar is the ratio, not the absolute ns.
+//!
+//! Writes `target/bench_reports/BENCH_swap.json`.
+
+use mobiquant::bench_support::synth_model_shaped;
+use mobiquant::mobiq::engine::Precision;
+use mobiquant::model::{DecodeStats, KvPrecision, KV_PAGE};
+use mobiquant::util::bench::{black_box, Suite};
+
+const KV_PRECS: [KvPrecision; 3] =
+    [KvPrecision::F32, KvPrecision::Int8, KvPrecision::Int4];
+
+fn main() {
+    let mut suite = Suite::new("BENCH_swap");
+    suite.header();
+    let prec = Precision::Fixed(2);
+
+    // 4h/2kv, head_dim 16, 2 layers — the shape the pressure tests use
+    let model = synth_model_shaped(301, 4, 2, 1024);
+    let cfg = &model.cfg;
+    let n_layers = cfg.n_layers;
+
+    // ---------------- exact byte accounting x precision ---------------
+    // 2.5 pages per layer: exactly two cold pages each, tail stays hot
+    let t = 2 * KV_PAGE + KV_PAGE / 2;
+    let prompt: Vec<u32> = (0..t).map(|i| ((i * 5 + 2) % 256) as u32)
+        .collect();
+    for &kvp in &KV_PRECS {
+        let mut arena = model.new_arena(1);
+        arena.set_host_budget_pages(16);
+        let mut scratch = model.new_scratch();
+        let mut dstats = DecodeStats::new(n_layers);
+        let seq = arena.alloc_seq_at(kvp);
+        model.prefill(&prompt, &mut arena, seq, prec, &mut scratch,
+                      &mut dstats).unwrap();
+        let pb = arena.page_bytes_at(kvp);
+        let dev0 = arena.resident_bytes();
+
+        let out = arena.swap_out_seq_cold(seq);
+        let cold_pages = 2 * n_layers; // 2 cold pages per layer
+        assert_eq!(out.pages, cold_pages,
+                   "{}: every cold page must move", kvp.label());
+        assert_eq!(out.bytes, cold_pages * pb,
+                   "{}: swap-out bytes must be exact", kvp.label());
+        assert_eq!(arena.host_resident_bytes(), cold_pages * pb);
+        assert_eq!(arena.resident_bytes(), dev0 - cold_pages * pb,
+                   "{}: device bytes must return to the budget",
+                   kvp.label());
+
+        let back = arena.swap_in_seq(seq).unwrap();
+        assert_eq!(back.pages, out.pages);
+        assert_eq!(back.bytes, out.bytes,
+                   "{}: the restore must move the same bytes back",
+                   kvp.label());
+        assert_eq!(arena.host_resident_bytes(), 0);
+        assert_eq!(arena.resident_bytes(), dev0);
+
+        suite.row(&format!("swap bytes {} @len {t}", kvp.label()), &[
+            ("cold_pages", out.pages as f64),
+            ("swap_out_bytes", out.bytes as f64),
+            ("page_bytes", pb as f64),
+            ("bytes_vs_f32_ratio",
+             out.bytes as f64
+                 / (cold_pages * arena.page_bytes()) as f64),
+        ]);
+        arena.free_seq(seq);
+    }
+
+    // ---------------- swap round trip vs re-prefill -------------------
+    // the rung's economics: restoring a parked prefix is O(memcpy) in
+    // the cold bytes; the fallback recomputes the same prefix through
+    // every layer.  Measure both over the identical token prefix.
+    for &ctx in &[2 * KV_PAGE, 8 * KV_PAGE] {
+        let prompt: Vec<u32> = (0..ctx + KV_PAGE / 2)
+            .map(|i| ((i * 7 + 3) % 256) as u32)
+            .collect();
+        let mut arena = model.new_arena(2);
+        arena.set_host_budget_pages(2 * (ctx / KV_PAGE) * n_layers);
+        let mut scratch = model.new_scratch();
+        let mut dstats = DecodeStats::new(n_layers);
+        let seq = arena.alloc_seq();
+        model.prefill(&prompt, &mut arena, seq, prec, &mut scratch,
+                      &mut dstats).unwrap();
+        let cold_bytes = arena.seq_bytes(seq)
+            - n_layers * arena.page_bytes(); // tail pages stay hot
+
+        let ns_swap = suite.bench(
+            &format!("swap round trip ctx {ctx}"), || {
+                let out = arena.swap_out_seq_cold(seq);
+                black_box(out.bytes);
+                let back = arena.swap_in_seq(seq).unwrap();
+                black_box(back.bytes);
+            });
+        let ns_reprefill = suite.bench(
+            &format!("re-prefill {ctx} cold tokens"), || {
+                let h = arena.alloc_seq();
+                model.prefill(&prompt[..ctx], &mut arena, h, prec,
+                              &mut scratch, &mut dstats).unwrap();
+                black_box(scratch.logits[0]);
+                arena.free_seq(h);
+            });
+        suite.row(&format!("swap vs recompute ctx {ctx}"), &[
+            ("ns_swap_roundtrip", ns_swap),
+            ("ns_reprefill", ns_reprefill),
+            ("reprefill_over_swap", ns_reprefill / ns_swap),
+            ("cold_bytes", cold_bytes as f64),
+        ]);
+        arena.free_seq(seq);
+    }
+
+    suite.note(&format!(
+        "targets: swap bytes rows are exact (cold_pages = 2 per layer \
+         x {n_layers} layers; bytes_vs_f32_ratio = 1 / 0.25 / 0.125 \
+         for f32/i8/u4 — scales are side metadata); swap vs recompute: \
+         reprefill_over_swap must stay >> 1 and grow with ctx (a \
+         memcpy round trip vs {n_layers} transformer layers per \
+         token), which is the whole case for the ladder's swap rung \
+         ahead of preemption"));
+    suite.finish();
+}

@@ -47,6 +47,14 @@ pub struct Batcher {
     /// stay bit-identical; see `model::speculative`).  `None` keeps the
     /// plain one-token-per-tick decode.
     pub spec: Option<SpecConfig>,
+    /// Host swap tier budget in bytes (0 disables the tier).  Sized
+    /// in bytes — not f32-page equivalents like `kv_page_budget` —
+    /// because host memory is a real external resource the deployment
+    /// hands over; the scheduler converts it to whole f32-page slots
+    /// when it sizes the arena.  When enabled, the pressure ladder's
+    /// High/Critical rungs move cold KV pages here (exact byte
+    /// copies) and preemption parks cold KV instead of dropping it.
+    pub host_swap_bytes: usize,
     admitted: u64,
     rejected: u64,
     deferred: u64,
@@ -68,6 +76,7 @@ impl Batcher {
             max_decode_batch: 32,
             kv_page_budget: None,
             spec: None,
+            host_swap_bytes: 0,
             admitted: 0,
             rejected: 0,
             deferred: 0,
@@ -92,6 +101,12 @@ impl Batcher {
     /// (see `spec`).
     pub fn with_speculative(mut self, cfg: SpecConfig) -> Batcher {
         self.spec = Some(cfg);
+        self
+    }
+
+    /// Commit a host swap tier budget in bytes (see `host_swap_bytes`).
+    pub fn with_host_swap(mut self, bytes: usize) -> Batcher {
+        self.host_swap_bytes = bytes;
         self
     }
 
@@ -130,8 +145,12 @@ impl Batcher {
                 self.deferred += 1;
                 break;
             }
+            // the head just costed is popped here; a logic slip that
+            // empties the queue in between must stop admission, not
+            // panic the dispatcher thread
+            let Some(req) = self.queue.pop_front() else { break };
             free_budget -= cost;
-            out.push(self.queue.pop_front().unwrap());
+            out.push(req);
         }
         self.admitted += out.len() as u64;
         out

@@ -67,6 +67,31 @@ pub struct Metrics {
     /// Mid-tick `OutOfPages` faults the degradation ladder absorbed
     /// (none of these escaped `Scheduler::run`).
     pub oom_recoveries: u64,
+    // -- host swap tier (O(memcpy) relief instead of O(recompute)) ---
+    /// Swap-out sweeps that moved at least one page to the host tier.
+    pub swap_out_events: u64,
+    /// KV pages copied device→host across all sweeps.
+    pub swap_out_pages: u64,
+    /// Bytes (codes + scales) copied device→host.
+    pub swap_out_bytes: u64,
+    /// Swap-in passes that restored at least one page.
+    pub swap_in_events: u64,
+    /// KV pages copied host→device.
+    pub swap_in_pages: u64,
+    /// Bytes (codes + scales) copied host→device.
+    pub swap_in_bytes: u64,
+    /// Host-tier bytes resident at the last tick.
+    pub host_bytes_resident: usize,
+    /// High-water mark of host-tier bytes over the run.
+    pub host_bytes_resident_peak: usize,
+    /// Host-tier byte budget (0 = tier disabled).
+    pub host_bytes_capacity: usize,
+    /// Resumes that fell back to a full re-prefill because the parked
+    /// host pages could not be restored (tier exhausted or a failpoint
+    /// denied the swap-in).  Each one is a request saved from a drop
+    /// at recompute cost — the number the swap tier exists to keep
+    /// near zero.
+    pub swap_fallback_reprefills: u64,
     // -- self-speculative decoding (draft/verify accounting) ---------
     /// Draft→verify→commit rounds executed (one per member per
     /// speculative group tick).
@@ -123,6 +148,9 @@ impl Metrics {
         self.kv_pages_i8 = arena.resident_pages_at(KvPrecision::Int8);
         self.kv_pages_u4 = arena.resident_pages_at(KvPrecision::Int4);
         self.kv_bytes_saved_vs_f32 = arena.bytes_saved_vs_f32();
+        self.host_bytes_resident = arena.host_resident_bytes();
+        self.host_bytes_resident_peak = arena.host_peak_bytes();
+        self.host_bytes_capacity = arena.host_capacity_bytes();
     }
 
     /// Count a tick spent in a pressure band.
@@ -223,6 +251,8 @@ impl Metrics {
              prefix_hit_rate={:.2} prefix_tokens_reused={} deferred={} \
              pressure_ticks={:?} degraded={} requant={}ev/{}pg/{}B \
              preempt={}/{} oom_recovered={} \
+             swap_out={}ev/{}pg/{}B swap_in={}ev/{}pg/{}B \
+             host_kv_peak={}/{}B swap_fallback_reprefill={} \
              spec_rounds={} spec_drafted={} spec_accepted={} \
              spec_rejected={} spec_accept_ema={:.2} \
              spec_mean_prefix={:.2} spec_tok_per_verify={:.2} \
@@ -253,6 +283,15 @@ impl Metrics {
             self.preemptions,
             self.resumes,
             self.oom_recoveries,
+            self.swap_out_events,
+            self.swap_out_pages,
+            self.swap_out_bytes,
+            self.swap_in_events,
+            self.swap_in_pages,
+            self.swap_in_bytes,
+            self.host_bytes_resident_peak,
+            self.host_bytes_capacity,
+            self.swap_fallback_reprefills,
             self.spec_rounds,
             self.spec_drafted,
             self.spec_accepted,
@@ -307,5 +346,24 @@ mod tests {
         assert!(s.contains("spec_accept_ema=0.55"));
         assert!(s.contains("spec_tok_per_verify=3.50"));
         assert!(s.contains("spec_draft_bits_hist=[0, 4, 5, 0, 2]"));
+    }
+
+    #[test]
+    fn swap_accounting_and_summary() {
+        let mut m = Metrics::default();
+        m.swap_out_events = 2;
+        m.swap_out_pages = 7;
+        m.swap_out_bytes = 7 * 1024;
+        m.swap_in_events = 1;
+        m.swap_in_pages = 4;
+        m.swap_in_bytes = 4 * 1024;
+        m.host_bytes_resident_peak = 3 * 1024;
+        m.host_bytes_capacity = 8 * 1024;
+        m.swap_fallback_reprefills = 1;
+        let s = m.summary(1.0);
+        assert!(s.contains("swap_out=2ev/7pg/7168B"));
+        assert!(s.contains("swap_in=1ev/4pg/4096B"));
+        assert!(s.contains("host_kv_peak=3072/8192B"));
+        assert!(s.contains("swap_fallback_reprefill=1"));
     }
 }

@@ -12,10 +12,17 @@
 //! * **High** — admissions floor to i4 AND resident sequences'
 //!   exclusively-owned tail pages are requantized in place
 //!   (f32→i8; see [`KvArena::requant_seq_tail`]
-//!   (crate::model::kvcache::KvArena::requant_seq_tail)).
+//!   (crate::model::kvcache::KvArena::requant_seq_tail)), AND — when
+//!   a host swap tier is configured — cold pages of the LRU-most
+//!   sequences move to host memory until occupancy re-enters the
+//!   band's entry threshold (exact byte copies; see
+//!   [`KvArena::swap_out_seq_cold`]
+//!   (crate::model::kvcache::KvArena::swap_out_seq_cold)).
 //! * **Critical** — requant target drops to i4 and the scheduler may
-//!   preempt the youngest sequence, parking its tokens for a later
-//!   re-prefill.
+//!   preempt the youngest sequence: its cold KV parks in the host
+//!   tier (resume restores it by memcpy and re-feeds only the
+//!   unparked suffix) and only when the host tier is disabled or
+//!   exhausted does the resume fall back to a full re-prefill.
 //!
 //! Escalation is immediate (pressure is dangerous), de-escalation is
 //! hysteretic: the controller only steps down once occupancy falls
@@ -182,6 +189,22 @@ impl PressureController {
         }
     }
 
+    /// Whether the band calls for swapping resident sequences' cold
+    /// pages out to the host tier (the rung between in-place requant
+    /// and preemption: exact byte relief where requant is lossy and
+    /// preemption costs recompute).
+    pub fn should_swap(&self) -> bool {
+        self.level >= PressureLevel::High
+    }
+
+    /// Occupancy the swap rung drives toward: the High band's entry
+    /// threshold.  Swapping stops as soon as occupancy drops below
+    /// it — going further would stall more sequences than pressure
+    /// requires.
+    pub fn swap_target(&self) -> f64 {
+        self.cfg.high
+    }
+
     /// Whether the band permits preempting the youngest sequence.
     pub fn should_preempt(&self) -> bool {
         self.level == PressureLevel::Critical
@@ -290,12 +313,19 @@ mod tests {
         let mut c = PressureController::new(PressureConfig::default());
         let _ = c.update(0.1);
         assert_eq!(c.requant_target(), None);
+        assert!(!c.should_swap());
         assert!(!c.should_preempt());
+        let _ = c.update(0.72);
+        assert!(!c.should_swap(), "Moderate floors admissions only");
         let _ = c.update(0.86);
         assert_eq!(c.requant_target(), Some(KvPrecision::Int8));
+        assert!(c.should_swap());
         assert!(!c.should_preempt());
         let _ = c.update(0.99);
         assert_eq!(c.requant_target(), Some(KvPrecision::Int4));
+        assert!(c.should_swap(), "Critical swaps before it preempts");
         assert!(c.should_preempt());
+        assert!((c.swap_target() - 0.85).abs() < 1e-12,
+                "swap rung drives occupancy back under High entry");
     }
 }

@@ -3,7 +3,7 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::model::kvcache::KvPrecision;
+use crate::model::kvcache::{KvHandle, KvPrecision};
 use crate::model::transformer::DecodeStats;
 
 pub type RequestId = u64;
@@ -23,19 +23,32 @@ pub struct Request {
 }
 
 /// A sequence evicted mid-flight by the pressure ladder's Critical
-/// rung: its arena pages are released and everything needed to finish
-/// the request later is parked here.  `tokens` holds the prompt *plus
-/// every token generated so far* — decoding is greedy (argmax, no
-/// sampling state), so KV content is a pure function of the token
-/// prefix and re-prefilling `tokens` reproduces exactly the logits the
-/// preempted decode would have seen next.  That is the preempt→resume
-/// parity guarantee `tests/pressure.rs` pins.
+/// rung: everything needed to finish the request later is parked
+/// here.  `tokens` holds the prompt *plus every token generated so
+/// far* — decoding is greedy (argmax, no sampling state), so KV
+/// content is a pure function of the token prefix and re-prefilling
+/// `tokens` reproduces exactly the logits the preempted decode would
+/// have seen next.  That is the preempt→resume parity guarantee
+/// `tests/pressure.rs` pins.
+///
+/// With a host swap tier configured, preemption first moves the
+/// sequence's cold KV pages to host memory and parks the (truncated)
+/// arena handle in `host_kv` — the resume then restores those pages
+/// by memcpy and re-feeds only `tokens[len..]`, which is bit-identical
+/// to the full re-prefill because the swapped pages round-trip
+/// byte-exactly.
 #[derive(Debug)]
 pub struct PreemptedSeq {
     pub req: Request,
     /// Prompt + generated-so-far (the resume re-prefill input).
     pub tokens: Vec<u32>,
     pub prompt_len: usize,
+    /// KV parked in the host tier: the still-live arena handle whose
+    /// remaining pages are all host-resident, plus the token count
+    /// those pages cover (page-aligned).  `None` when the host tier
+    /// is disabled, exhausted, or denied — the resume then rebuilds
+    /// the whole context through the re-prefill fallback.
+    pub host_kv: Option<(KvHandle, usize)>,
     /// Tokens already generated (counts against `max_new_tokens`).
     pub generated: usize,
     /// KV storage precision the request *asked* for; the resume

@@ -21,13 +21,28 @@
 //! [`PressureController`] maps occupancy bands to rungs: Moderate
 //! floors new admissions to i8 KV storage, High additionally
 //! requantizes resident sequences' exclusively-owned tail pages in
-//! place (f32→i8) and reclaims prefix-cache pages, Critical drops the
-//! requant target to i4 and preempts the youngest sequence — its
-//! tokens park in the batcher's resume queue and re-prefill later
-//! (greedy decoding makes the resumed completion bit-identical to an
-//! uninterrupted run).  A mid-tick `OutOfPages` fault walks the same
-//! rungs via [`Scheduler::tick`]'s recovery loop instead of
-//! propagating out of `run_to_completion`.
+//! place (f32→i8), reclaims prefix-cache pages, and — when a host
+//! swap tier is configured (`--host-swap`) — moves cold pages of the
+//! LRU-most sequences to host memory until occupancy re-enters the
+//! band (exact byte copies, O(memcpy) instead of O(recompute)),
+//! Critical drops the requant target to i4 and preempts the youngest
+//! sequence — its cold KV parks in the host tier and its tokens park
+//! in the batcher's resume queue; the resume restores the cold
+//! prefix by memcpy and re-feeds only the unparked suffix, falling
+//! back to a full re-prefill when the host tier is disabled,
+//! exhausted, or its restore fails (greedy decoding makes either
+//! resumed completion bit-identical to an uninterrupted run).  A
+//! mid-tick `OutOfPages` fault walks the same rungs — prefix-evict →
+//! requant → swap → preempt — via [`Scheduler::tick`]'s recovery
+//! loop instead of propagating out of `run_to_completion`.
+//!
+//! A sequence whose pages are (partly) host-resident is *stalled*:
+//! it is excluded from prefill/decode dispatch until
+//! [`Scheduler::tick`]'s swap-in pass restores it, which is gated on
+//! occupancy clearing the High band's entry by the de-escalation
+//! hysteresis so the swap rung and its undo cannot thrash tick over
+//! tick.  When every active sequence is stalled the gate yields and
+//! the oldest restores unconditionally (deadlock guard).
 //!
 //! ## Prefix sharing
 //!
@@ -59,7 +74,7 @@ use super::request::{PreemptedSeq, Request, RequestId, RequestMetrics,
 use crate::mobiq::engine::Precision;
 use crate::mobiq::router::draft_delta;
 use crate::model::kvcache::{KvHandle, KvPrecision, KvShards, OutOfPages,
-                            SeqCheckpoint, KV_PAGE};
+                            SeqCheckpoint, SwapSummary, KV_PAGE};
 use crate::model::shard::ShardRuntime;
 use crate::model::transformer::{argmax, DecodeScratch, DecodeSlot,
                                 DecodeStats, MAX_PREFILL_BLOCK};
@@ -106,6 +121,12 @@ struct ActiveSeq {
     /// preemption is the max of these, so the sequence that loses its
     /// pages is the one with the least sunk prefill/decode work.
     admit_ord: u64,
+    /// Tick at which this sequence's host-tier pages were last
+    /// restored (0 = never).  The OOM ladder's swap rung skips
+    /// sequences restored in the current tick — re-evicting pages the
+    /// deadlock-guarded swap-in just paid to bring back would livelock
+    /// the two passes against each other.
+    swapped_in_tick: u64,
     stats: DecodeStats,
     /// Self-speculative decode state (accept-rate EMA driving draft
     /// depth and draft bits) when the batcher enables speculation.
@@ -223,7 +244,7 @@ impl<'m> Scheduler<'m> {
             Some(pages) => model.new_arena_with_pages(pages),
             None => model.new_arena(batcher.max_active),
         });
-        Scheduler {
+        let mut s = Scheduler {
             scratch,
             model,
             batcher,
@@ -238,7 +259,23 @@ impl<'m> Scheduler<'m> {
             started: Instant::now(),
             ticks: 0,
             admit_counter: 0,
+        };
+        s.apply_host_budget();
+        s
+    }
+
+    /// Size the arena's host swap tier from the batcher's byte budget
+    /// (rounded down to whole f32-page slots; a non-zero budget always
+    /// grants at least one page so `--host-swap` with a small number
+    /// is not a silent no-op).  Re-applied after `with_shards` rebuilds
+    /// the arena.
+    fn apply_host_budget(&mut self) {
+        if self.batcher.host_swap_bytes == 0 {
+            return;
         }
+        let pb = self.arena.page_bytes().max(1);
+        let pages = (self.batcher.host_swap_bytes / pb).max(1);
+        self.arena.set_host_budget_pages(pages);
     }
 
     /// Override the pressure ladder's occupancy bands.
@@ -267,6 +304,7 @@ impl<'m> Scheduler<'m> {
                                         self.batcher.max_active),
         };
         self.shard_rt = Some(rt);
+        self.apply_host_budget();
         Ok(self)
     }
 
@@ -369,16 +407,21 @@ impl<'m> Scheduler<'m> {
             return;
         }
         let s = self.active.swap_remove(i);
-        self.arena.free_seq(s.seq);
         self.metrics.preemptions += 1;
         // the spec state is dropped with the eviction (see ActiveSeq);
         // bank its draft-bit histogram before it goes
         if let Some(st) = &s.spec {
             self.metrics.record_spec_hist(&st.draft_stats.bits_hist);
         }
+        // swap-then-preempt: the cold KV prefix moves to the host
+        // tier (when one is configured and has room) so the resume is
+        // a memcpy + short suffix re-feed instead of a full
+        // re-prefill; everything that could not move is released
+        let host_kv = self.park_kv(s.seq);
         // park the *ask* precision, not the possibly-degraded one: the
         // resume admission re-applies whatever floor holds then
         self.batcher.park(PreemptedSeq {
+            host_kv,
             tokens: s.tokens,
             prompt_len: s.prompt_len,
             generated: s.generated,
@@ -389,6 +432,167 @@ impl<'m> Scheduler<'m> {
             admitted_at: s.admitted_at,
             req: s.req,
         });
+    }
+
+    /// Try to park a preempted sequence's KV in the host tier: swap
+    /// its cold pages out, then truncate the sequence to the
+    /// contiguous host-resident prefix (releasing the device tail and
+    /// any cold pages that could not move — shared, budget-stopped,
+    /// or failpoint-denied).  Returns the still-live handle plus the
+    /// token count its host pages cover, or frees the sequence
+    /// entirely when nothing made it to the host tier (the resume
+    /// then takes the full re-prefill path).
+    fn park_kv(&mut self, seq: KvHandle) -> Option<(KvHandle, usize)> {
+        let sum = self.arena.swap_out_seq_cold(seq);
+        self.note_swap_out(sum);
+        let kept = self.arena.seq_host_prefix_len(seq);
+        if kept == 0 {
+            self.arena.free_seq(seq);
+            return None;
+        }
+        self.arena.truncate_seq(seq, kept);
+        Some((seq, kept))
+    }
+
+    fn note_swap_out(&mut self, sum: SwapSummary) {
+        if sum.pages > 0 {
+            self.metrics.swap_out_events += 1;
+            self.metrics.swap_out_pages += sum.pages as u64;
+            self.metrics.swap_out_bytes += sum.bytes as u64;
+        }
+    }
+
+    fn note_swap_in(&mut self, sum: SwapSummary) {
+        if sum.pages > 0 {
+            self.metrics.swap_in_events += 1;
+            self.metrics.swap_in_pages += sum.pages as u64;
+            self.metrics.swap_in_bytes += sum.bytes as u64;
+        }
+    }
+
+    /// High/Critical band rung: move cold pages of the oldest-admitted
+    /// (LRU-most) sequences to the host tier until occupancy drops
+    /// below `target` (a fraction of the device budget).  The pages
+    /// move byte-exactly, and each affected sequence stalls — excluded
+    /// from dispatch — until the swap-in pass restores it.
+    fn swap_out_lru_until(&mut self, target: f64) {
+        let capacity = self.arena.capacity_bytes();
+        if capacity == 0 || self.arena.host_capacity_bytes() == 0 {
+            return;
+        }
+        let mut order: Vec<(u64, KvHandle)> = self.active.iter()
+            .map(|s| (s.admit_ord, s.seq))
+            .collect();
+        order.sort_unstable();
+        for (_, h) in order {
+            let occ = self.arena.resident_bytes() as f64
+                / capacity as f64;
+            if occ < target {
+                break;
+            }
+            let sum = self.arena.swap_out_seq_cold(h);
+            self.note_swap_out(sum);
+        }
+    }
+
+    /// The OOM ladder's swap rung: sweep cold pages of other
+    /// sequences to the host tier (oldest first) until the fault's
+    /// byte shortage is covered or nothing more can move.  The
+    /// faulting sequence is skipped — its retry needs its own pages
+    /// device-resident — and so is anything the swap-in pass restored
+    /// this tick (see `ActiveSeq::swapped_in_tick`).  Returns bytes
+    /// freed from the device budget.
+    fn swap_out_rung(&mut self, needed: usize,
+                     protect: Option<RequestId>) -> usize {
+        if self.arena.host_capacity_bytes() == 0 {
+            return 0;
+        }
+        let mut order: Vec<(u64, RequestId)> = self.active.iter()
+            .filter(|s| Some(s.req.id) != protect
+                && s.swapped_in_tick != self.ticks)
+            .map(|s| (s.admit_ord, s.req.id))
+            .collect();
+        order.sort_unstable();
+        let mut bytes = 0usize;
+        for (_, id) in order {
+            if bytes >= needed {
+                break;
+            }
+            let Some(i) = self.index_of(id) else { continue };
+            let sum = self.arena.swap_out_seq_cold(self.active[i].seq);
+            self.note_swap_out(sum);
+            bytes += sum.bytes;
+        }
+        bytes
+    }
+
+    /// Tick-start restore pass for stalled sequences (host-resident
+    /// pages exclude a sequence from dispatch).  Oldest first — they
+    /// carry the most sunk work — and gated on the *projected*
+    /// occupancy after the restore clearing the High band's entry by
+    /// the de-escalation hysteresis, so the swap rung does not evict
+    /// the same pages right back next tick.  The pass stops at the
+    /// first sequence that does not fit (no out-of-order restores).
+    /// Deadlock guard: when every active sequence is stalled no
+    /// dispatch could ever lower occupancy, so the oldest restores
+    /// unconditionally, walking the OOM ladder on failure.
+    fn swap_in_stalled(&mut self) {
+        let capacity = self.arena.capacity_bytes();
+        if capacity == 0 || self.arena.host_resident_pages() == 0 {
+            return;
+        }
+        let mut stalled: Vec<(u64, RequestId)> = self.active.iter()
+            .filter(|s| self.arena.seq_swapped_pages(s.seq) > 0)
+            .map(|s| (s.admit_ord, s.req.id))
+            .collect();
+        if stalled.is_empty() {
+            return;
+        }
+        stalled.sort_unstable();
+        let all_stalled = stalled.len() == self.active.len();
+        let release = (self.pressure.swap_target()
+            - self.pressure.config().hysteresis).max(0.0);
+        for (k, &(_, id)) in stalled.iter().enumerate() {
+            let forced = all_stalled && k == 0;
+            let mut attempt = 0u32;
+            loop {
+                let Some(i) = self.index_of(id) else { break };
+                let h = self.active[i].seq;
+                let need = self.arena.seq_host_bytes(h);
+                let projected =
+                    (self.arena.resident_bytes() + need) as f64
+                        / capacity as f64;
+                if !forced && projected >= release {
+                    return;
+                }
+                match self.arena.swap_in_seq(h) {
+                    Ok(sum) => {
+                        self.note_swap_in(sum);
+                        self.active[i].swapped_in_tick = self.ticks;
+                        break;
+                    }
+                    Err(oom) => {
+                        // partial progress is kept (the restore is
+                        // retryable); on the gated path just wait for
+                        // a later tick, on the forced path free bytes
+                        // through the ladder and retry
+                        if !forced {
+                            return;
+                        }
+                        attempt += 1;
+                        if !self.recover_oom(&oom, Some(id), attempt) {
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether a sequence is stalled on host-resident pages (must not
+    /// reach the attention kernels until swapped back in).
+    fn seq_stalled(&self, i: usize) -> bool {
+        self.arena.seq_swapped_pages(self.active[i].seq) > 0
     }
 
     /// Requantize every resident sequence stored costlier than
@@ -453,6 +657,13 @@ impl<'m> Scheduler<'m> {
                     return true;
                 }
             }
+            // host-swap rung: relieve the byte shortage by memcpy
+            // before any sequence loses work — the swapped sequences
+            // stall for the rest of the tick but keep their exact KV
+            let short = oom.needed_bytes - oom.free_bytes;
+            if self.swap_out_rung(short, protect) > 0 {
+                return true;
+            }
         }
         if let Some(i) = self.youngest_active(protect) {
             self.preempt(i);
@@ -479,8 +690,13 @@ impl<'m> Scheduler<'m> {
         let mut steps = 0usize;
         let mut attempt = 0u32;
         loop {
+            // re-resolve per attempt: OOM recovery may preempt
+            // (remove) members or stall them behind a host swap-out —
+            // a stalled member's pages are not readable, so it sits
+            // this tick out and restores at the next swap-in pass
             let members: Vec<usize> = group.iter()
                 .filter_map(|id| self.index_of(*id))
+                .filter(|&i| !self.seq_stalled(i))
                 .collect();
             if members.is_empty() {
                 break;
@@ -591,8 +807,11 @@ impl<'m> Scheduler<'m> {
         let mut attempt = 0u32;
         // phase A: lockstep drafting, bracketed by exact checkpoints
         let (ids, chains, draft_ms) = loop {
+            // like decode_group_plain: drop members preempted or
+            // stalled (host-swapped) by a previous attempt's recovery
             let members: Vec<usize> = group.iter()
                 .filter_map(|id| self.index_of(*id))
+                .filter(|&i| !self.seq_stalled(i))
                 .collect();
             if members.is_empty() {
                 return Ok(0);
@@ -610,7 +829,10 @@ impl<'m> Scheduler<'m> {
             let mut ema_sum = 0.0;
             for &i in &members {
                 let s = &self.active[i];
-                let st = s.spec.as_ref().expect("spec state");
+                // seeded just above for every member; a logic slip
+                // must cost this member its vote on the group's draft
+                // shape, not the dispatcher thread
+                let Some(st) = s.spec.as_ref() else { continue };
                 let remaining = s.req.max_new_tokens
                     .saturating_sub(s.generated);
                 let len = self.arena.seq_len(s.seq);
@@ -653,11 +875,18 @@ impl<'m> Scheduler<'m> {
                 // draft stats move out (like decode_group_plain's) —
                 // they live on the spec state so scaffolding tokens
                 // never pollute the request's routing stats
+                // spec state exists for every member (seeded above);
+                // a missing one degrades to fresh stats for this
+                // round rather than killing the dispatcher
                 let mut dstats: Vec<DecodeStats> = members.iter()
                     .map(|&i| {
-                        let st = self.active[i].spec.as_mut()
-                            .expect("spec state");
-                        std::mem::take(&mut st.draft_stats)
+                        self.active[i].spec.as_mut()
+                            .map(|st| {
+                                std::mem::take(&mut st.draft_stats)
+                            })
+                            .unwrap_or_else(|| {
+                                DecodeStats::new(n_layers)
+                            })
                     })
                     .collect();
                 let res = {
@@ -681,8 +910,9 @@ impl<'m> Scheduler<'m> {
                     }
                 };
                 for (&i, st) in members.iter().zip(dstats) {
-                    self.active[i].spec.as_mut()
-                        .expect("spec state").draft_stats = st;
+                    if let Some(sp) = self.active[i].spec.as_mut() {
+                        sp.draft_stats = st;
+                    }
                 }
                 match res {
                     Ok(()) => {
@@ -737,6 +967,12 @@ impl<'m> Scheduler<'m> {
             let mut vattempt = 0u32;
             loop {
                 let Some(i) = self.index_of(*id) else { break };
+                if self.seq_stalled(i) {
+                    // a previous member's OOM recovery swapped this
+                    // sequence's cold pages out: its verify pass
+                    // waits for the next tick's swap-in restore
+                    break;
+                }
                 let t0 = Instant::now();
                 let seq = self.active[i].seq;
                 let last = self.active[i].tokens[self.active[i].fed];
@@ -763,10 +999,17 @@ impl<'m> Scheduler<'m> {
                         s.tokens.extend_from_slice(&round.tokens);
                         s.generated += committed;
                         s.decode_ms += ms;
-                        let st = s.spec.as_mut().expect("spec state");
-                        st.observe(cfg, round.drafted, round.matched,
-                                   committed);
-                        let ema = st.ema;
+                        // seeded in phase A; a missing state only
+                        // costs this member its accept-EMA update
+                        // (0.5 is SpecState's neutral seed)
+                        let ema = match s.spec.as_mut() {
+                            Some(st) => {
+                                st.observe(cfg, round.drafted,
+                                           round.matched, committed);
+                                st.ema
+                            }
+                            None => 0.5,
+                        };
                         let per_tok = ms / committed as f64;
                         for _ in 0..committed {
                             self.metrics.record_token(per_tok);
@@ -825,11 +1068,24 @@ impl<'m> Scheduler<'m> {
         if let Some(target) = self.pressure.requant_target() {
             self.requant_active(target);
         }
+        // the swap rung sits between requant (lossy, in place) and
+        // preemption (recompute): cold pages of the LRU-most
+        // sequences move byte-exactly to the host tier until
+        // occupancy re-enters the High band's entry threshold
+        if self.pressure.should_swap() {
+            self.swap_out_lru_until(self.pressure.swap_target());
+        }
         if self.pressure.should_preempt() && self.active.len() > 1 {
             if let Some(i) = self.youngest_active(None) {
                 self.preempt(i);
             }
         }
+
+        // 1c. restore stalled sequences' host pages when occupancy
+        // (projected past the restore) has hysteresis room below the
+        // swap rung's target — see `swap_in_stalled` for the
+        // anti-thrash gate and the all-stalled deadlock guard
+        self.swap_in_stalled();
 
         // 2. admission against real free bytes: each queued request
         // needs its worst-case bytes (at its KV storage precision)
@@ -885,28 +1141,78 @@ impl<'m> Scheduler<'m> {
             if !self.active.is_empty() && worst > avail {
                 break;
             }
-            let p = self.batcher.pop_resume().unwrap();
+            // the peek above saw a head; a logic slip in between must
+            // end the resume pass, not panic the dispatcher thread
+            let Some(p) = self.batcher.pop_resume() else { break };
             if eff.rank() > p.kv_prec.rank() {
                 self.metrics.admissions_degraded += 1;
             }
-            let seq = self.arena.alloc_seq_at(eff);
+            let left =
+                p.req.max_new_tokens.saturating_sub(p.generated);
+            let total = (p.tokens.len() + left).min(max_seq);
+            // host-tier fast path: restore the parked cold prefix by
+            // memcpy and re-feed only the unparked suffix; any
+            // restore failure (device bytes, failpoint denial) falls
+            // back to the full re-prefill — either way the request is
+            // never dropped, and greedy decoding makes both paths
+            // produce the same tokens (swapped pages round-trip
+            // byte-exactly)
+            let (seq, fed, kv_prec, reserved) = match p.host_kv {
+                Some((h, kv_len)) => {
+                    match self.arena.swap_in_seq(h) {
+                        Ok(sum) => {
+                            self.note_swap_in(sum);
+                            // appends continue at the precision the
+                            // parked sequence was left at (requant
+                            // may have degraded it below the ask);
+                            // re-make the reservation at that rate
+                            let prec = self.arena.seq_precision(h);
+                            let r = self.arena
+                                .seq_worst_bytes(total, prec);
+                            (h, kv_len, prec, r)
+                        }
+                        Err(_) => {
+                            // partially-restored pages are released
+                            // with the rest of the handle
+                            self.arena.free_seq(h);
+                            self.metrics.swap_fallback_reprefills += 1;
+                            (self.arena.alloc_seq_at(eff), 0, eff,
+                             worst)
+                        }
+                    }
+                }
+                None => {
+                    // parked without host KV while a host tier was
+                    // configured: the tier was exhausted (or denied)
+                    // at preempt time — this resume pays the full
+                    // re-prefill the swap tier exists to avoid
+                    if self.arena.host_capacity_bytes() > 0 {
+                        self.metrics.swap_fallback_reprefills += 1;
+                    }
+                    (self.arena.alloc_seq_at(eff), 0, eff, worst)
+                }
+            };
+            let bytes_at_admission = self.arena.seq_bytes(seq);
             self.metrics.resumes += 1;
             self.admit_counter += 1;
             self.active.push(ActiveSeq {
                 seq,
                 prompt_len: p.prompt_len,
-                // re-prefill the whole parked state: prompt plus every
-                // token generated before preemption (greedy decoding
-                // makes this reproduce the parked logits exactly)
+                // feed the parked state not yet in KV: the whole
+                // prompt + generated-so-far on a re-prefill, only the
+                // suffix past the restored prefix on the host path
+                // (greedy decoding makes either reproduce the parked
+                // logits exactly)
                 prefill_len: p.tokens.len(),
-                fed: 0,
-                kv_prec: eff,
-                reserved_bytes: worst,
-                bytes_at_admission: 0,
+                fed,
+                kv_prec,
+                reserved_bytes: reserved,
+                bytes_at_admission,
                 prefill_prec: None,
                 prefill_uniform: false,
                 registered: true,
                 admit_ord: self.admit_counter,
+                swapped_in_tick: if fed > 0 { self.ticks } else { 0 },
                 tokens: p.tokens,
                 generated: p.generated,
                 spec: self.batcher.spec.as_ref()
@@ -1009,6 +1315,7 @@ impl<'m> Scheduler<'m> {
                 prefill_uniform: true,
                 registered: false,
                 admit_ord: self.admit_counter,
+                swapped_in_tick: 0,
                 tokens,
                 generated: 0,
                 spec: self.batcher.spec.as_ref()
@@ -1036,12 +1343,17 @@ impl<'m> Scheduler<'m> {
         // re-resolved per attempt and missing members are skipped.
         let model = self.model;
         let mut steps = 0usize;
+        // stalled sequences (host-resident pages) sit the tick out —
+        // their KV is not readable until the swap-in pass restores it
+        let arena = &self.arena;
         let prefill_ids: Vec<RequestId> = self.active.iter()
-            .filter(|s| s.fed < s.prefill_len)
+            .filter(|s| s.fed < s.prefill_len
+                && arena.seq_swapped_pages(s.seq) == 0)
             .map(|s| s.req.id)
             .collect();
         let decode_ids: Vec<RequestId> = self.active.iter()
-            .filter(|s| s.fed >= s.prefill_len)
+            .filter(|s| s.fed >= s.prefill_len
+                && arena.seq_swapped_pages(s.seq) == 0)
             .map(|s| s.req.id)
             .collect();
         let prefill_chunk = self.batcher.prefill_chunk;
@@ -1055,6 +1367,12 @@ impl<'m> Scheduler<'m> {
             let mut attempt = 0u32;
             loop {
                 let Some(idx) = self.index_of(id) else { break };
+                if self.seq_stalled(idx) {
+                    // OOM recovery swapped this sequence out while
+                    // retrying: its prefill resumes after the next
+                    // swap-in pass (fed was not advanced)
+                    break;
+                }
                 let len0 = self.arena.seq_len(self.active[idx].seq);
                 let t0 = Instant::now();
                 let fed_before = self.active[idx].fed;
@@ -1129,6 +1447,13 @@ impl<'m> Scheduler<'m> {
                  s.kv_prec)
             };
             if !attempt {
+                continue;
+            }
+            if self.seq_stalled(i) {
+                // a later sequence's OOM recovery swapped this one
+                // out after its prefill completed: registering now
+                // would fork host-resident pages.  Leave `registered`
+                // unset so the attempt retries once restored.
                 continue;
             }
             // one registration attempt per sequence, made the tick its

@@ -37,6 +37,13 @@ pub struct ServerConfig {
     /// Default storage precision of admitted sequences' KV pages
     /// (requests submitted via [`Server::submit_at`] override it).
     pub kv_precision: KvPrecision,
+    /// Host swap tier budget in **bytes** (`--host-swap`); `None`
+    /// disables the tier.  When set, the pressure ladder's
+    /// High/Critical rungs move cold KV pages to host memory by exact
+    /// byte copy and preemption parks KV there instead of discarding
+    /// it — resume restores by memcpy and re-feeds only the unparked
+    /// suffix.
+    pub host_swap_bytes: Option<usize>,
     pub controller: ControllerConfig,
     /// Occupancy bands of the memory-pressure degradation ladder
     /// (admission floors, in-place tail requant, preemption).
@@ -102,6 +109,7 @@ impl Default for ServerConfig {
             max_decode_batch: 32,
             kv_page_budget: None,
             kv_precision: KvPrecision::F32,
+            host_swap_bytes: None,
             controller: ControllerConfig::default(),
             pressure: PressureConfig::default(),
             initial_pressure: 0.0,
@@ -153,6 +161,9 @@ impl Server {
         }
         if let Some(spec) = cfg.speculative.clone() {
             batcher = batcher.with_speculative(spec);
+        }
+        if let Some(bytes) = cfg.host_swap_bytes {
+            batcher = batcher.with_host_swap(bytes);
         }
         apply_gate_overrides(&cfg);
         let controller = ElasticController::new(cfg.controller.clone());
@@ -288,6 +299,8 @@ mod tests {
     fn default_config_is_unsharded() {
         let cfg = ServerConfig::default();
         assert_eq!(cfg.shards, 1);
+        assert!(cfg.host_swap_bytes.is_none(),
+                "host swap tier must be opt-in");
         assert!(cfg.parallel_min_dout.is_none());
         assert!(cfg.attn_parallel_min_work.is_none());
         assert!(cfg.elementwise_parallel_min.is_none());

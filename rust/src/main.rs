@@ -61,6 +61,14 @@ fn print_help() {
          \x20                        across N in-process shards — greedy\n\
          \x20                        outputs are bit-identical for every\n\
          \x20                        N; requires N <= n_kv_heads)\n\
+         \x20           --host-swap BYTES   host KV swap tier budget\n\
+         \x20                        (default 0 = off; under High/\n\
+         \x20                        Critical pressure, cold KV pages\n\
+         \x20                        move to host memory by exact byte\n\
+         \x20                        copy and preemption parks KV there\n\
+         \x20                        instead of recomputing it — see\n\
+         \x20                        swap_out/swap_in/host_kv_peak in\n\
+         \x20                        the metrics summary)\n\
          \x20 pjrt      --variant fp|q2|q4|q6|q8   run AOT module\n\
          \n\
          OPTIONS\n\
@@ -210,12 +218,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "on" | "force" | "1" => Some(true),
         _ => None,
     };
+    // --host-swap 0 (the default) keeps the tier off; any positive
+    // byte count arms the swap rungs of the pressure ladder.
+    let host_swap = args.get_usize("host-swap", 0);
     println!("serving {} requests on {model_name} (elastic precision, \
               {shards} shard{})",
              trace.len(), if shards == 1 { "" } else { "s" });
     let server = Server::start(model, ServerConfig {
         shards,
         simd,
+        host_swap_bytes: (host_swap > 0).then_some(host_swap),
         ..ServerConfig::default()
     });
     let t0 = std::time::Instant::now();

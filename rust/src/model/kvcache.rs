@@ -63,6 +63,23 @@
 //! and [`KvLayerView`] (one sequence x layer of the arena) implement
 //! it; the f32 paged path is bit-identical to the slab under the same
 //! kernel (pinned by tests).
+//!
+//! ## Host swap tier (PR 10)
+//!
+//! Preempting a sequence under Critical pressure used to throw its KV
+//! away and pay a full prefix re-prefill at resume — O(context) of
+//! recompute for exactly the long-context requests that cause
+//! pressure.  The arena now carries a second, host-side byte budget
+//! ([`KvArena::set_host_budget_pages`]): [`KvArena::swap_out_seq_cold`]
+//! moves a sequence's exclusively-owned **cold** pages (every full
+//! page before the tail page) into host-tier pools byte-for-byte and
+//! returns their device bytes to the budget, and
+//! [`KvArena::swap_in_seq`] restores them — so parking and resuming a
+//! sequence is O(memcpy), with re-prefill demoted to the fallback for
+//! a full (or failpoint-denied) host tier.  Page tables tag each
+//! entry with its tier ([`PageLocation`]); a host-tagged page must be
+//! swapped back in before the kernels read it ([`KvLayerView`] treats
+//! a host-tier run as a dispatch bug and panics).
 
 use super::attention::RopeCache;
 
@@ -535,6 +552,46 @@ impl<T: Copy + Default> PagePool<T> {
     }
 }
 
+/// The host memory tier: byte-budgeted page pools (one per precision,
+/// same geometry as the device pools) that hold cold KV pages swapped
+/// out under pressure.  Host pages are always exclusively owned —
+/// [`KvArena::swap_out_seq_cold`] only takes refcount-1 pages — so the
+/// pools' refcounts are only ever 0 or 1 and the free lists recycle
+/// slots the moment a page swaps back in or its sequence dies.  A zero
+/// budget (the default) disables the tier entirely.
+#[derive(Default)]
+struct HostArena {
+    pool_f32: PagePool<f32>,
+    pool_i8: PagePool<i8>,
+    pool_u4: PagePool<u8>,
+    budget_bytes: usize,
+    used_bytes: usize,
+    peak_bytes: usize,
+}
+
+/// Copy one full page (both sides + scales) between two pools of the
+/// same precision — the swap-out / swap-in body.  A byte-for-byte move
+/// of codes and absmax steps, so a swapped-then-restored page reads
+/// back bit-identical to one that never left the device.
+fn copy_page_across<T: Copy + Default>(src: &PagePool<T>, sp: u32,
+                                       dst: &mut PagePool<T>, dp: u32,
+                                       page_elems: usize, n_kv: usize) {
+    let s0 = sp as usize * page_elems;
+    let d0 = dp as usize * page_elems;
+    dst.k[d0..d0 + page_elems]
+        .copy_from_slice(&src.k[s0..s0 + page_elems]);
+    dst.v[d0..d0 + page_elems]
+        .copy_from_slice(&src.v[s0..s0 + page_elems]);
+    if !src.k_scale.is_empty() {
+        let ss = sp as usize * n_kv;
+        let ds = dp as usize * n_kv;
+        dst.k_scale[ds..ds + n_kv]
+            .copy_from_slice(&src.k_scale[ss..ss + n_kv]);
+        dst.v_scale[ds..ds + n_kv]
+            .copy_from_slice(&src.v_scale[ss..ss + n_kv]);
+    }
+}
+
 /// Widening hysteresis: when a fresh row outgrows a page-head's step,
 /// the new step is at least this multiple of the old one.  Each
 /// re-code of a row adds at most half its (then-current) step of
@@ -621,16 +678,39 @@ impl std::fmt::Display for OutOfPages {
 
 impl std::error::Error for OutOfPages {}
 
+/// Which memory tier a page-table entry's bytes live in.  `Device`
+/// pages are resident in the arena's budgeted pools and readable by
+/// the attention kernels; `Host` pages were swapped out by
+/// [`KvArena::swap_out_seq_cold`] into the host arena — their codes
+/// and scales are preserved byte-exactly, but they must come back
+/// through [`KvArena::swap_in_seq`] before any kernel touches them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PageLocation {
+    Device,
+    Host,
+}
+
 /// One page-table entry: a pool-local page id tagged with the pool it
 /// lives in.  Until PR 6 a whole sequence shared one precision; online
 /// requantization ([`KvArena::requant_seq_tail`]) now converts
 /// exclusively owned pages down the ladder in place, so a table can
 /// mix precisions — shared prefix pages keep the precision they were
-/// written at while the tail migrates to a coarser pool.
+/// written at while the tail migrates to a coarser pool.  Since PR 10
+/// an entry also records its tier: `id` indexes the device pool of
+/// `prec` when `loc` is `Device`, the host pool of `prec` when `Host`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct PageRef {
     id: u32,
     prec: KvPrecision,
+    loc: PageLocation,
+}
+
+impl PageRef {
+    /// A device-resident entry (the common case — every page starts
+    /// life on device; only the swap path mints `Host` refs).
+    fn device(id: u32, prec: KvPrecision) -> PageRef {
+        PageRef { id, prec, loc: PageLocation::Device }
+    }
 }
 
 /// Page table of one sequence x layer: precision-tagged physical page
@@ -670,6 +750,9 @@ pub struct KvArena {
     used_bytes: usize,
     peak_bytes: usize,
     peak_pages: usize,
+    /// The host swap tier (separate byte budget; disabled at 0 — see
+    /// [`Self::set_host_budget_pages`]).
+    host: HostArena,
     seqs: Vec<Option<SeqState>>,
     free_seqs: Vec<usize>,
     /// Staging row scratch for quantized appends (rope'd K rows, then
@@ -681,6 +764,12 @@ pub struct KvArena {
     /// Append-path page-claim attempts so far (failpoint schedule index).
     #[cfg(feature = "failpoints")]
     alloc_attempts: u64,
+    /// Host-tier page-claim attempts so far (swap-out failpoint index).
+    #[cfg(feature = "failpoints")]
+    host_attempts: u64,
+    /// Swap-in page-restore attempts so far (swap-in failpoint index).
+    #[cfg(feature = "failpoints")]
+    swap_in_attempts: u64,
 }
 
 /// Deterministic fault-injection plan (`--features failpoints`): the
@@ -691,17 +780,31 @@ pub struct KvArena {
 /// that retries consumes its denial and then proceeds — every finite
 /// schedule terminates.  Synthetic faults report the arena's *real*
 /// free bytes, so recovery code can tell them from a genuine shortage.
+///
+/// The host swap tier has two independent denial axes on their own
+/// attempt counters: `deny_host` makes a host-page claim behave as if
+/// the host budget were exhausted (the swap-out pass stops and reports
+/// what it did move — exactly the full-tier behaviour, so `host_all()`
+/// proves the re-prefill fallback end to end), and `deny_swap_in`
+/// fails a page restore with a synthetic [`OutOfPages`] so the
+/// resume-side fallback paths execute under test.
 #[cfg(feature = "failpoints")]
 #[derive(Debug, Clone, Default)]
 pub struct FailPlan {
     deny: std::collections::BTreeSet<u64>,
+    deny_host: std::collections::BTreeSet<u64>,
+    deny_host_all: bool,
+    deny_swap_in: std::collections::BTreeSet<u64>,
 }
 
 #[cfg(feature = "failpoints")]
 impl FailPlan {
     /// Deny exactly the listed page-claim attempt indices.
     pub fn deny_at(indices: &[u64]) -> FailPlan {
-        FailPlan { deny: indices.iter().copied().collect() }
+        FailPlan {
+            deny: indices.iter().copied().collect(),
+            ..FailPlan::default()
+        }
     }
 
     /// Deny `n` attempts spaced `every` apart starting at `start`
@@ -710,11 +813,54 @@ impl FailPlan {
         assert!(every > 0);
         FailPlan {
             deny: (0..n).map(|i| start + i * every).collect(),
+            ..FailPlan::default()
+        }
+    }
+
+    /// Deny every host-tier page claim — the host arena behaves as
+    /// permanently exhausted, forcing the ladder's re-prefill fallback.
+    pub fn host_all() -> FailPlan {
+        FailPlan { deny_host_all: true, ..FailPlan::default() }
+    }
+
+    /// Deny the listed host-tier page-claim attempt indices (the
+    /// swap-out pass treats a denial as budget exhaustion and stops).
+    pub fn host_at(indices: &[u64]) -> FailPlan {
+        FailPlan {
+            deny_host: indices.iter().copied().collect(),
+            ..FailPlan::default()
+        }
+    }
+
+    /// Compose this plan with a host-tier deny-all: the device-alloc
+    /// schedule keeps firing AND every host-page claim fails, so a
+    /// stress run exercises preemption with the swap tier armed but
+    /// useless — the re-prefill fallback must carry every resume.
+    pub fn and_host_all(mut self) -> FailPlan {
+        self.deny_host_all = true;
+        self
+    }
+
+    /// Deny the listed swap-in page-restore attempt indices (each
+    /// fails with a synthetic [`OutOfPages`] reporting real free
+    /// bytes, like the append-path denials).
+    pub fn swap_in_at(indices: &[u64]) -> FailPlan {
+        FailPlan {
+            deny_swap_in: indices.iter().copied().collect(),
+            ..FailPlan::default()
         }
     }
 
     fn denies(&self, attempt: u64) -> bool {
         self.deny.contains(&attempt)
+    }
+
+    fn denies_host(&self, attempt: u64) -> bool {
+        self.deny_host_all || self.deny_host.contains(&attempt)
+    }
+
+    fn denies_swap_in(&self, attempt: u64) -> bool {
+        self.deny_swap_in.contains(&attempt)
     }
 }
 
@@ -738,6 +884,7 @@ impl KvArena {
             used_bytes: 0,
             peak_bytes: 0,
             peak_pages: 0,
+            host: HostArena::default(),
             seqs: Vec::new(),
             free_seqs: Vec::new(),
             rot: Vec::new(),
@@ -745,6 +892,10 @@ impl KvArena {
             fail_plan: None,
             #[cfg(feature = "failpoints")]
             alloc_attempts: 0,
+            #[cfg(feature = "failpoints")]
+            host_attempts: 0,
+            #[cfg(feature = "failpoints")]
+            swap_in_attempts: 0,
         }
     }
 
@@ -760,6 +911,20 @@ impl KvArena {
     #[cfg(feature = "failpoints")]
     pub fn alloc_attempts(&self) -> u64 {
         self.alloc_attempts
+    }
+
+    /// Host-tier page-claim attempts seen so far (swap-out failpoint
+    /// index space).
+    #[cfg(feature = "failpoints")]
+    pub fn host_attempts(&self) -> u64 {
+        self.host_attempts
+    }
+
+    /// Swap-in page-restore attempts seen so far (swap-in failpoint
+    /// index space).
+    #[cfg(feature = "failpoints")]
+    pub fn swap_in_attempts(&self) -> u64 {
+        self.swap_in_attempts
     }
 
     /// Pages needed to hold `positions` KV rows of one layer.
@@ -847,6 +1012,44 @@ impl KvArena {
         self.max_seq
     }
 
+    // -- host swap tier (PR 10) ---------------------------------------
+
+    /// Size the host swap tier in **f32-page equivalents** — the same
+    /// unit as the device budget, so a quantized page draws
+    /// proportionally less of it.  0 (the default) disables swapping:
+    /// [`Self::swap_out_seq_cold`] becomes a no-op and the pressure
+    /// ladder falls straight through to preemption + re-prefill.
+    pub fn set_host_budget_pages(&mut self, pages: usize) {
+        self.host.budget_bytes = pages * self.page_bytes();
+    }
+
+    /// The host tier's byte budget (0 = tier disabled).
+    pub fn host_capacity_bytes(&self) -> usize {
+        self.host.budget_bytes
+    }
+
+    /// Bytes of swapped-out pages currently parked in the host tier.
+    pub fn host_resident_bytes(&self) -> usize {
+        self.host.used_bytes
+    }
+
+    /// High-water mark of [`Self::host_resident_bytes`].
+    pub fn host_peak_bytes(&self) -> usize {
+        self.host.peak_bytes
+    }
+
+    /// Host-tier bytes still free for swap-outs.
+    pub fn host_free_bytes(&self) -> usize {
+        self.host.budget_bytes - self.host.used_bytes
+    }
+
+    /// Pages currently parked in the host tier (count across all
+    /// precision pools, like [`Self::resident_pages`]).
+    pub fn host_resident_pages(&self) -> usize {
+        self.host.pool_f32.resident() + self.host.pool_i8.resident()
+            + self.host.pool_u4.resident()
+    }
+
     /// Park a sequence state in a (possibly recycled) handle slot.
     fn insert_seq(&mut self, state: SeqState) -> KvHandle {
         let idx = match self.free_seqs.pop() {
@@ -912,6 +1115,12 @@ impl KvArena {
         };
         for t in &layers {
             for &p in &t.pages {
+                // the scheduler never registers a swapped sequence as a
+                // prefix-cache source, and host pages are refcount-1 by
+                // construction — sharing one would break both tiers'
+                // accounting
+                assert_eq!(p.loc, PageLocation::Device,
+                           "fork_prefix across a swapped-out page");
                 self.refcount_mut(p.prec)[p.id as usize] += 1;
             }
         }
@@ -932,8 +1141,11 @@ impl KvArena {
         }
     }
 
-    /// Current owner count of one table entry's physical page.
+    /// Current owner count of one table entry's physical page
+    /// (device-tier entries only — host pages are always refcount 1).
     fn refcount_of(&self, p: PageRef) -> u32 {
+        debug_assert_eq!(p.loc, PageLocation::Device,
+                         "refcount_of on a host-tier page");
         match p.prec {
             KvPrecision::F32 => self.pool_f32.refcount[p.id as usize],
             KvPrecision::Int8 => self.pool_i8.refcount[p.id as usize],
@@ -952,6 +1164,49 @@ impl KvArena {
         if freed {
             self.used_bytes -= self.page_bytes_at(prec);
         }
+    }
+
+    /// Drop one table entry's page whichever tier it lives in:
+    /// device pages decref (and may free), host pages always free.
+    fn release_page(&mut self, p: PageRef) {
+        match p.loc {
+            PageLocation::Device => self.decref_at(p.prec, p.id),
+            PageLocation::Host => self.host_release(p.prec, p.id),
+        }
+    }
+
+    /// Claim one host-tier page of `prec`'s pool (caller has already
+    /// checked the host budget) and charge the host accountant.
+    fn host_alloc(&mut self, prec: KvPrecision) -> u32 {
+        let pb = self.page_bytes_at(prec);
+        debug_assert!(self.host.used_bytes + pb
+                          <= self.host.budget_bytes,
+                      "host_alloc past budget check");
+        let (page_elems, scale_elems) = self.pool_geom(prec);
+        let p = match prec {
+            KvPrecision::F32 => self.host.pool_f32.alloc(page_elems, 0),
+            KvPrecision::Int8 => {
+                self.host.pool_i8.alloc(page_elems, scale_elems)
+            }
+            KvPrecision::Int4 => {
+                self.host.pool_u4.alloc(page_elems, scale_elems)
+            }
+        };
+        self.host.used_bytes += pb;
+        self.host.peak_bytes =
+            self.host.peak_bytes.max(self.host.used_bytes);
+        p
+    }
+
+    /// Return one host-tier page's bytes to the host budget.
+    fn host_release(&mut self, prec: KvPrecision, page: u32) {
+        let freed = match prec {
+            KvPrecision::F32 => self.host.pool_f32.decref(page),
+            KvPrecision::Int8 => self.host.pool_i8.decref(page),
+            KvPrecision::Int4 => self.host.pool_u4.decref(page),
+        };
+        debug_assert!(freed, "host pages are exclusively owned");
+        self.host.used_bytes -= self.page_bytes_at(prec);
     }
 
     /// Claim one page of `prec`'s pool (caller has already checked the
@@ -995,7 +1250,7 @@ impl KvArena {
         let state = self.seqs[h.idx()].take().expect("double free_seq");
         for t in &state.layers {
             for &p in &t.pages {
-                self.decref_at(p.prec, p.id);
+                self.release_page(p);
             }
         }
         self.free_seqs.push(h.idx());
@@ -1014,7 +1269,7 @@ impl KvArena {
         }
         for pages in tables {
             for p in pages {
-                self.decref_at(p.prec, p.id);
+                self.release_page(p);
             }
         }
     }
@@ -1041,13 +1296,16 @@ impl KvArena {
             .layers.iter().map(|t| t.pages.len()).sum()
     }
 
-    /// Budget bytes this sequence's mapped pages occupy, each page at
-    /// its own storage precision (shared pages count once per mapping,
-    /// like [`Self::seq_pages`]).
+    /// **Device**-budget bytes this sequence's mapped pages occupy,
+    /// each page at its own storage precision (shared pages count once
+    /// per mapping, like [`Self::seq_pages`]).  Host-tier pages are
+    /// excluded — their bytes left the device budget at swap-out, and
+    /// this number feeds the scheduler's device reservation math.
     pub fn seq_bytes(&self, h: KvHandle) -> usize {
         self.seqs[h.idx()].as_ref().expect("stale handle")
             .layers.iter()
             .flat_map(|t| t.pages.iter())
+            .filter(|p| p.loc == PageLocation::Device)
             .map(|p| self.page_bytes_at(p.prec))
             .sum()
     }
@@ -1230,7 +1488,7 @@ impl KvArena {
         }
         if cow {
             let old = tail_page.unwrap();
-            let fresh = PageRef { id: self.alloc_page_at(prec), prec };
+            let fresh = PageRef::device(self.alloc_page_at(prec), prec);
             let rows = pos0 % KV_PAGE;
             let n_kv = self.n_kv_heads;
             if convert {
@@ -1256,7 +1514,7 @@ impl KvArena {
                 .layers[layer].pages[pos0 / KV_PAGE] = fresh;
         }
         for _ in have..need_pages {
-            let p = PageRef { id: self.alloc_page_at(prec), prec };
+            let p = PageRef::device(self.alloc_page_at(prec), prec);
             self.seqs[h.idx()].as_mut().expect("stale handle")
                 .layers[layer].pages.push(p);
         }
@@ -1297,7 +1555,11 @@ impl KvArena {
                 (t.len, t.pages.clone())
             };
             for (pidx, &pref) in pages.iter().enumerate() {
-                if pref.prec.rank() >= target.rank()
+                // host-tier pages are skipped like shared ones: their
+                // bytes are already off the device budget, and they
+                // convert (if still worth it) after they swap back in
+                if pref.loc == PageLocation::Host
+                    || pref.prec.rank() >= target.rank()
                     || self.refcount_of(pref) != 1
                 {
                     continue;
@@ -1306,10 +1568,8 @@ impl KvArena {
                     return out;
                 }
                 let rows = (len - pidx * KV_PAGE).min(KV_PAGE);
-                let dst = PageRef {
-                    id: self.alloc_page_at(target),
-                    prec: target,
-                };
+                let dst = PageRef::device(self.alloc_page_at(target),
+                                          target);
                 self.convert_page(pref, dst, rows);
                 self.decref_at(pref.prec, pref.id);
                 self.seqs[h.idx()].as_mut().unwrap()
@@ -1320,6 +1580,194 @@ impl KvArena {
             }
         }
         out
+    }
+
+    /// Swap a sequence's exclusively-owned **cold** pages out to the
+    /// host tier: every full page strictly before the page holding the
+    /// last position (the tail page — hot, partially filled, and the
+    /// append frontier — never moves) copies its codes + absmax scales
+    /// into a host-pool page byte-for-byte and releases its device
+    /// bytes back to the budget.  Shared pages (a prefix-cache entry
+    /// or fork still reads them) are skipped, like
+    /// [`Self::requant_seq_tail`] skips them: evicting a page other
+    /// owners resolve would corrupt their reads.  Never fails: when
+    /// the host budget runs out (or, under `failpoints`, a host-tier
+    /// claim is denied — same semantics) the pass stops early and
+    /// reports what it did move.  The sequence must not be dispatched
+    /// to the kernels again until [`Self::swap_in_seq`] restores it —
+    /// [`KvLayerView`] panics on a host-tier run.
+    pub fn swap_out_seq_cold(&mut self, h: KvHandle) -> SwapSummary {
+        let mut out = SwapSummary::default();
+        if self.host.budget_bytes == 0 {
+            return out;
+        }
+        for layer in 0..self.n_layers {
+            let (len, pages) = {
+                let s = self.seqs[h.idx()].as_ref()
+                    .expect("stale handle");
+                let t = &s.layers[layer];
+                (t.len, t.pages.clone())
+            };
+            if len == 0 {
+                continue;
+            }
+            let tail_idx = (len - 1) / KV_PAGE;
+            for (pidx, &pref) in pages.iter().enumerate()
+                .take(tail_idx)
+            {
+                if pref.loc == PageLocation::Host
+                    || self.refcount_of(pref) != 1
+                {
+                    continue;
+                }
+                let pb = self.page_bytes_at(pref.prec);
+                #[cfg(feature = "failpoints")]
+                {
+                    let attempt = self.host_attempts;
+                    self.host_attempts += 1;
+                    if self.fail_plan.as_ref()
+                        .is_some_and(|p| p.denies_host(attempt))
+                    {
+                        return out;
+                    }
+                }
+                if self.host_free_bytes() < pb {
+                    return out;
+                }
+                let dst = self.host_alloc(pref.prec);
+                self.copy_swap_page(pref.prec, pref.id, dst, true);
+                self.decref_at(pref.prec, pref.id);
+                self.seqs[h.idx()].as_mut().unwrap()
+                    .layers[layer].pages[pidx] = PageRef {
+                        id: dst,
+                        prec: pref.prec,
+                        loc: PageLocation::Host,
+                    };
+                out.pages += 1;
+                out.bytes += pb;
+            }
+        }
+        out
+    }
+
+    /// Restore every host-tier page of a sequence back into the
+    /// device pools (byte-exact — reads after the round trip are
+    /// bit-identical to a sequence that never swapped).  Fails with
+    /// [`OutOfPages`] when the device budget cannot hold the next
+    /// page (or a `failpoints` swap-in denial fires); pages already
+    /// restored stay restored, so the caller may retry after freeing
+    /// device bytes, or give up and [`Self::free_seq`] — both leave
+    /// consistent accounting.
+    pub fn swap_in_seq(&mut self, h: KvHandle)
+                       -> Result<SwapSummary, OutOfPages> {
+        let mut out = SwapSummary::default();
+        for layer in 0..self.n_layers {
+            let pages = self.seqs[h.idx()].as_ref()
+                .expect("stale handle").layers[layer].pages.clone();
+            for (pidx, &pref) in pages.iter().enumerate() {
+                if pref.loc != PageLocation::Host {
+                    continue;
+                }
+                let pb = self.page_bytes_at(pref.prec);
+                #[cfg(feature = "failpoints")]
+                {
+                    let attempt = self.swap_in_attempts;
+                    self.swap_in_attempts += 1;
+                    if self.fail_plan.as_ref()
+                        .is_some_and(|p| p.denies_swap_in(attempt))
+                    {
+                        return Err(OutOfPages {
+                            needed_bytes: pb,
+                            free_bytes: self.free_bytes(),
+                        });
+                    }
+                }
+                if self.free_bytes() < pb {
+                    return Err(OutOfPages {
+                        needed_bytes: pb,
+                        free_bytes: self.free_bytes(),
+                    });
+                }
+                let dev = self.alloc_page_at(pref.prec);
+                self.copy_swap_page(pref.prec, dev, pref.id, false);
+                self.host_release(pref.prec, pref.id);
+                self.seqs[h.idx()].as_mut().unwrap()
+                    .layers[layer].pages[pidx] =
+                    PageRef::device(dev, pref.prec);
+                out.pages += 1;
+                out.bytes += pb;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Pages of this sequence currently parked in the host tier (all
+    /// layers).  Non-zero means the sequence must not reach the
+    /// attention kernels.
+    pub fn seq_swapped_pages(&self, h: KvHandle) -> usize {
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers.iter()
+            .flat_map(|t| t.pages.iter())
+            .filter(|p| p.loc == PageLocation::Host)
+            .count()
+    }
+
+    /// Bytes of this sequence's host-tier pages (all layers, each
+    /// page at its own precision) — what [`Self::swap_in_seq`] would
+    /// need from the device budget to restore it.
+    pub fn seq_host_bytes(&self, h: KvHandle) -> usize {
+        self.seqs[h.idx()].as_ref().expect("stale handle")
+            .layers.iter()
+            .flat_map(|t| t.pages.iter())
+            .filter(|p| p.loc == PageLocation::Host)
+            .map(|p| self.page_bytes_at(p.prec))
+            .sum()
+    }
+
+    /// Tokens covered by the sequence's *contiguous* host-resident
+    /// prefix: the minimum over layers of leading host-tagged pages
+    /// (a budget/failpoint stop mid-pass can leave layers uneven, and
+    /// a shared cold page that could not move truncates the run).
+    /// This is the length the scheduler may truncate a preempted
+    /// sequence to when parking its KV in the host tier — everything
+    /// past it must be re-prefilled on resume anyway.
+    pub fn seq_host_prefix_len(&self, h: KvHandle) -> usize {
+        let s = self.seqs[h.idx()].as_ref().expect("stale handle");
+        let pages = s.layers.iter()
+            .map(|t| {
+                t.pages.iter()
+                    .take_while(|p| p.loc == PageLocation::Host)
+                    .count()
+            })
+            .min()
+            .unwrap_or(0);
+        pages * KV_PAGE
+    }
+
+    /// Full-page copy between the device and host pools of one
+    /// precision: `dev` / `host` are pool-local ids on their own
+    /// tiers; `out` selects the direction (device→host on swap-out).
+    fn copy_swap_page(&mut self, prec: KvPrecision, dev: u32,
+                      host: u32, out: bool) {
+        let (page_elems, _) = self.pool_geom(prec);
+        let n_kv = self.n_kv_heads;
+        macro_rules! xfer {
+            ($pool:ident) => {{
+                let KvArena { $pool, host: h, .. } = self;
+                if out {
+                    copy_page_across(&*$pool, dev, &mut h.$pool, host,
+                                     page_elems, n_kv);
+                } else {
+                    copy_page_across(&h.$pool, host, $pool, dev,
+                                     page_elems, n_kv);
+                }
+            }};
+        }
+        match prec {
+            KvPrecision::F32 => xfer!(pool_f32),
+            KvPrecision::Int8 => xfer!(pool_i8),
+            KvPrecision::Int4 => xfer!(pool_u4),
+        }
     }
 
     /// Roll a sequence back to `len` positions on every layer,
@@ -1347,7 +1795,7 @@ impl KvArena {
                 t.len = len;
             }
             for p in dropped {
-                self.decref_at(p.prec, p.id);
+                self.release_page(p);
             }
         }
     }
@@ -1373,6 +1821,8 @@ impl KvArena {
                 debug_assert_eq!(t.len, len,
                                  "checkpoint inside a layer loop");
                 let pref = t.pages[len / KV_PAGE];
+                debug_assert_eq!(pref.loc, PageLocation::Device,
+                                 "partial tail pages never swap out");
                 let n_kv = self.n_kv_heads;
                 let sidx = pref.id as usize * n_kv;
                 let (k, v, ks, vs) = match pref.prec {
@@ -1644,6 +2094,17 @@ pub struct RequantSummary {
     pub bytes_freed: usize,
 }
 
+/// Outcome of one [`KvArena::swap_out_seq_cold`] or
+/// [`KvArena::swap_in_seq`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwapSummary {
+    /// Pages moved across the tier boundary.
+    pub pages: usize,
+    /// Device-budget bytes released (swap-out) or re-claimed
+    /// (swap-in) — each page at its own storage precision.
+    pub bytes: usize,
+}
+
 /// Fresh-page quantize body of [`KvArena::write_page_head`]: absmax
 /// over the rows, set the (page, head, side) scale, store the rows.
 #[allow(clippy::too_many_arguments)]
@@ -1775,6 +2236,13 @@ impl KvLayerView<'_> {
         debug_assert_eq!(p0 / KV_PAGE, (p1 - 1) / KV_PAGE,
                          "KV run straddles a page");
         let pref = self.pages[p0 / KV_PAGE];
+        // the scheduler stalls (or swaps in) any sequence with a
+        // host-tier page before dispatching it; reaching one here is a
+        // dispatch-ordering bug, not a recoverable condition
+        assert_eq!(pref.loc, PageLocation::Device,
+                   "KV run touches a swapped-out page (position {p0}): \
+                    swap_in_seq must run before this sequence is \
+                    dispatched");
         let page = pref.id as usize;
         let off = p0 % KV_PAGE;
         let n = p1 - p0;
@@ -1990,6 +2458,70 @@ impl KvShards {
         total
     }
 
+    /// Size every shard's host swap tier to the same f32-page count.
+    /// Each arena derives its byte budget from its *own* page width,
+    /// so per-shard host budgets are exactly the head fraction of the
+    /// whole and swap passes stop at the same page on every shard —
+    /// the mirroring invariant extends to the host tier.
+    pub fn set_host_budget_pages(&mut self, pages: usize) {
+        for a in &mut self.arenas {
+            a.set_host_budget_pages(pages);
+        }
+    }
+
+    /// Mirrored cold-page swap-out; like
+    /// [`KvShards::requant_seq_tail`], `pages` is shard 0's count (the
+    /// unsharded number) while `bytes` sums to the unsharded figure.
+    pub fn swap_out_seq_cold(&mut self, h: KvHandle) -> SwapSummary {
+        let mut total = SwapSummary::default();
+        for (i, a) in self.arenas.iter_mut().enumerate() {
+            let s = a.swap_out_seq_cold(h);
+            if i == 0 {
+                total.pages = s.pages;
+            } else {
+                debug_assert_eq!(s.pages, total.pages,
+                                 "mirrored swap-out diverged");
+            }
+            total.bytes += s.bytes;
+        }
+        total
+    }
+
+    /// Mirrored swap-in.  The deterministic claim order means a
+    /// failing shard fails at the same page index on every shard, so
+    /// on `Err` all arenas hold the same partially-restored state and
+    /// the caller's fallback (retry or free + re-prefill) stays
+    /// mirrored too.
+    pub fn swap_in_seq(&mut self, h: KvHandle)
+                       -> Result<SwapSummary, OutOfPages> {
+        let mut total = SwapSummary::default();
+        let mut first_err = None;
+        for (i, a) in self.arenas.iter_mut().enumerate() {
+            match a.swap_in_seq(h) {
+                Ok(s) => {
+                    if i == 0 {
+                        total.pages = s.pages;
+                    } else {
+                        debug_assert_eq!(s.pages, total.pages,
+                                         "mirrored swap-in diverged");
+                    }
+                    total.bytes += s.bytes;
+                }
+                Err(e) => {
+                    debug_assert!(i == 0 || first_err.is_some(),
+                                  "mirrored swap-in diverged");
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(total),
+        }
+    }
+
     /// Per-shard checkpoints, index-aligned with [`KvShards::arenas`].
     pub fn checkpoint_seq(&self, h: KvHandle) -> Vec<SeqCheckpoint> {
         self.arenas.iter().map(|a| a.checkpoint_seq(h)).collect()
@@ -2059,6 +2591,18 @@ impl KvShards {
         self.arenas[0].seq_worst_pages(positions)
     }
 
+    pub fn seq_swapped_pages(&self, h: KvHandle) -> usize {
+        self.arenas[0].seq_swapped_pages(h)
+    }
+
+    pub fn seq_host_prefix_len(&self, h: KvHandle) -> usize {
+        self.arenas[0].seq_host_prefix_len(h)
+    }
+
+    pub fn host_resident_pages(&self) -> usize {
+        self.arenas[0].host_resident_pages()
+    }
+
     // -- byte queries (summed across shards == unsharded exactly) -----
 
     pub fn capacity_bytes(&self) -> usize {
@@ -2089,8 +2633,24 @@ impl KvShards {
         self.arenas.iter().map(|a| a.bytes_saved_vs_f32()).sum()
     }
 
+    pub fn host_capacity_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.host_capacity_bytes()).sum()
+    }
+
+    pub fn host_resident_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.host_resident_bytes()).sum()
+    }
+
+    pub fn host_peak_bytes(&self) -> usize {
+        self.arenas.iter().map(|a| a.host_peak_bytes()).sum()
+    }
+
     pub fn seq_bytes(&self, h: KvHandle) -> usize {
         self.arenas.iter().map(|a| a.seq_bytes(h)).sum()
+    }
+
+    pub fn seq_host_bytes(&self, h: KvHandle) -> usize {
+        self.arenas.iter().map(|a| a.seq_host_bytes(h)).sum()
     }
 
     pub fn seq_worst_bytes(&self, positions: usize,
@@ -2749,5 +3309,268 @@ mod tests {
         assert_eq!(a.seq_len(h), len0 + 1);
         assert_eq!(a.alloc_attempts(), 3);
         a.set_fail_plan(None);
+    }
+
+    // -- host swap tier ----------------------------------------------------
+
+    /// Dequantized K then V of the whole sequence (layer 0, head 0):
+    /// equal iff the underlying codes and scales are equal, so
+    /// comparing dumps proves bit-identical storage.
+    fn dump(a: &KvArena, h: KvHandle) -> Vec<f32> {
+        let len = a.seq_len(h);
+        let view = a.layer(h, 0);
+        let mut out = Vec::new();
+        let mut p = 0;
+        while p < len {
+            let hi = ((p / KV_PAGE + 1) * KV_PAGE).min(len);
+            out.extend(view.k_run(0, p, hi).dequant(2));
+            out.extend(view.v_run(0, p, hi).dequant(2));
+            p = hi;
+        }
+        out
+    }
+
+    #[test]
+    fn swap_out_cold_and_back_is_bit_identical() {
+        for prec in [KvPrecision::F32, KvPrecision::Int8,
+                     KvPrecision::Int4] {
+            let mut a = small_arena(8);
+            a.set_host_budget_pages(4);
+            let rope = ident_rope();
+            let h = a.alloc_seq_at(prec);
+            // 2.5 pages with per-chunk values so pages are distinct
+            fill(&mut a, &rope, h, KV_PAGE, 1.0).unwrap();
+            fill(&mut a, &rope, h, KV_PAGE, -3.0).unwrap();
+            fill(&mut a, &rope, h, KV_PAGE / 2, 7.0).unwrap();
+            let before = dump(&a, h);
+            let pb = a.page_bytes_at(prec);
+            let dev0 = a.resident_bytes();
+
+            let s = a.swap_out_seq_cold(h);
+            assert_eq!(s.pages, 2,
+                       "{}: both full cold pages must move",
+                       prec.label());
+            assert_eq!(s.bytes, 2 * pb);
+            assert_eq!(a.seq_swapped_pages(h), 2);
+            assert_eq!(a.host_resident_bytes(), 2 * pb);
+            assert_eq!(a.host_resident_pages(), 2);
+            assert_eq!(a.resident_bytes(), dev0 - 2 * pb,
+                       "device bytes must return to the budget");
+
+            // idempotent: nothing left to move
+            assert_eq!(a.swap_out_seq_cold(h), SwapSummary::default());
+
+            let r = a.swap_in_seq(h).unwrap();
+            assert_eq!(r.pages, 2);
+            assert_eq!(r.bytes, 2 * pb);
+            assert_eq!(a.seq_swapped_pages(h), 0);
+            assert_eq!(a.host_resident_bytes(), 0);
+            assert_eq!(a.resident_bytes(), dev0);
+            assert_eq!(dump(&a, h), before,
+                       "{}: swap round trip must be bit-identical",
+                       prec.label());
+
+            // the sequence keeps growing normally afterwards
+            fill(&mut a, &rope, h, KV_PAGE / 2, 2.0).unwrap();
+            a.free_seq(h);
+            assert_eq!(a.resident_pages(), 0);
+            assert_eq!(a.host_resident_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn swap_disabled_at_zero_budget() {
+        let mut a = small_arena(8);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 2 * KV_PAGE + 1, 1.0).unwrap();
+        assert_eq!(a.swap_out_seq_cold(h), SwapSummary::default());
+        assert_eq!(a.seq_swapped_pages(h), 0);
+    }
+
+    #[test]
+    fn swap_skips_shared_and_tail_pages() {
+        let mut a = small_arena(8);
+        a.set_host_budget_pages(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 2 * KV_PAGE + KV_PAGE / 2, 1.0).unwrap();
+        // page 0 is shared with a fork; page 2 is the partial tail
+        let f = a.fork_prefix(h, KV_PAGE);
+        let fork_read = dump(&a, f);
+
+        let s = a.swap_out_seq_cold(h);
+        assert_eq!(s.pages, 1,
+                   "only the exclusively-owned cold page may move");
+        assert_eq!(a.seq_swapped_pages(h), 1);
+        // the fork still reads its shared page untouched
+        assert_eq!(dump(&a, f), fork_read);
+
+        a.swap_in_seq(h).unwrap();
+        assert_eq!(a.seq_swapped_pages(h), 0);
+        a.free_seq(h);
+        a.free_seq(f);
+        assert_eq!(a.resident_pages(), 0);
+        assert_eq!(a.host_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn swap_out_stops_at_host_budget() {
+        let mut a = small_arena(8);
+        a.set_host_budget_pages(1);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 3 * KV_PAGE + 1, 1.0).unwrap();
+        let s = a.swap_out_seq_cold(h);
+        assert_eq!(s.pages, 1, "one-page host tier holds one page");
+        assert_eq!(a.host_free_bytes(), 0);
+        a.swap_in_seq(h).unwrap();
+        assert_eq!(a.host_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn free_seq_releases_parked_host_pages() {
+        let mut a = small_arena(8);
+        a.set_host_budget_pages(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 2 * KV_PAGE + 1, 1.0).unwrap();
+        assert_eq!(a.swap_out_seq_cold(h).pages, 2);
+        // truncating to the cold boundary keeps the host pages parked
+        a.truncate_seq(h, 2 * KV_PAGE);
+        assert_eq!(a.seq_swapped_pages(h), 2);
+        a.free_seq(h);
+        assert_eq!(a.resident_pages(), 0);
+        assert_eq!(a.host_resident_bytes(), 0,
+                   "free_seq must drain both tiers");
+        assert!(a.host_peak_bytes() > 0);
+    }
+
+    #[test]
+    fn swap_in_fails_cleanly_when_device_is_full() {
+        let mut a = small_arena(2);
+        a.set_host_budget_pages(2);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, KV_PAGE + 1, 1.0).unwrap();
+        assert_eq!(a.swap_out_seq_cold(h).pages, 1);
+        // another sequence takes the freed device page
+        let h2 = a.alloc_seq();
+        fill(&mut a, &rope, h2, KV_PAGE, 2.0).unwrap();
+        let err = a.swap_in_seq(h).unwrap_err();
+        assert_eq!(err.needed_bytes, a.page_bytes());
+        assert_eq!(err.free_bytes, 0);
+        assert_eq!(a.seq_swapped_pages(h), 1,
+                   "failed swap-in leaves the page parked");
+        // freeing device bytes lets the retry through
+        a.free_seq(h2);
+        a.swap_in_seq(h).unwrap();
+        assert_eq!(a.seq_swapped_pages(h), 0);
+        a.free_seq(h);
+        assert_eq!(a.resident_pages(), 0);
+        assert_eq!(a.host_resident_bytes(), 0);
+    }
+
+    /// Mirrored swap decisions across shards: same page counts on
+    /// every shard, summed bytes equal the unsharded figure, and the
+    /// restored bytes stay mirrored.
+    #[test]
+    fn shards_mirror_swap_decisions() {
+        let mut full = KvArena::new(1, 4 * KV_PAGE, 3, 2, 12);
+        full.set_host_budget_pages(6);
+        let mut shards = KvShards::new(vec![
+            KvArena::new(1, 4 * KV_PAGE, 2, 2, 12),
+            KvArena::new(1, 4 * KV_PAGE, 1, 2, 12),
+        ]);
+        shards.set_host_budget_pages(6);
+        let mut rope = RopeCache::new(2, 1e4);
+        rope.ensure(4 * KV_PAGE);
+        let hf = full.alloc_seq();
+        let hs = shards.alloc_seq();
+        let t = 2 * KV_PAGE + 5;
+        let kf: Vec<f32> = (0..t * 3 * 2).map(|i| i as f32 * 0.01)
+            .collect();
+        let vf: Vec<f32> = kf.iter().map(|x| x + 0.5).collect();
+        full.append_kv_block(hf, 0, &rope, &kf, &vf, t).unwrap();
+        for (s, (h0, h1)) in [(0usize, (0usize, 2usize)), (1, (2, 3))] {
+            let w = (h1 - h0) * 2;
+            let mut k = vec![0f32; t * w];
+            let mut v = vec![0f32; t * w];
+            for i in 0..t {
+                let lo = i * 3 * 2 + h0 * 2;
+                k[i * w..(i + 1) * w].copy_from_slice(&kf[lo..lo + w]);
+                v[i * w..(i + 1) * w].copy_from_slice(&vf[lo..lo + w]);
+            }
+            shards.arenas_mut()[s]
+                .append_kv_block(hs, 0, &rope, &k, &v, t).unwrap();
+        }
+        let sf = full.swap_out_seq_cold(hf);
+        let ss = shards.swap_out_seq_cold(hs);
+        assert_eq!(ss.pages, sf.pages);
+        assert_eq!(ss.bytes, sf.bytes);
+        assert_eq!(shards.seq_swapped_pages(hs),
+                   full.seq_swapped_pages(hf));
+        assert_eq!(shards.host_resident_bytes(),
+                   full.host_resident_bytes());
+        assert_eq!(shards.host_resident_pages(),
+                   full.host_resident_pages());
+        let rf = full.swap_in_seq(hf).unwrap();
+        let rs = shards.swap_in_seq(hs).unwrap();
+        assert_eq!(rs.pages, rf.pages);
+        assert_eq!(rs.bytes, rf.bytes);
+        assert_eq!(shards.host_resident_bytes(), 0);
+        shards.free_seq(hs);
+        full.free_seq(hf);
+        assert_eq!(shards.resident_bytes(), full.resident_bytes());
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn host_denial_behaves_as_exhausted_tier() {
+        let mut a = small_arena(8);
+        a.set_host_budget_pages(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 3 * KV_PAGE + 1, 1.0).unwrap();
+        // deny-all: the tier acts permanently full — zero pages move
+        a.set_fail_plan(Some(FailPlan::host_all()));
+        assert_eq!(a.swap_out_seq_cold(h), SwapSummary::default());
+        assert_eq!(a.seq_swapped_pages(h), 0);
+        assert_eq!(a.host_attempts(), 1,
+                   "the denied claim consumes its attempt index");
+        // deny the second claim: one page moves, then the pass stops
+        a.set_fail_plan(Some(FailPlan::host_at(&[2])));
+        let s = a.swap_out_seq_cold(h);
+        assert_eq!(s.pages, 1);
+        assert_eq!(a.seq_swapped_pages(h), 1);
+        a.set_fail_plan(None);
+        a.swap_in_seq(h).unwrap();
+        a.free_seq(h);
+        assert_eq!(a.host_resident_bytes(), 0);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn swap_in_denial_is_synthetic_oom_and_retryable() {
+        let mut a = small_arena(8);
+        a.set_host_budget_pages(4);
+        let rope = ident_rope();
+        let h = a.alloc_seq();
+        fill(&mut a, &rope, h, 2 * KV_PAGE + 1, 1.0).unwrap();
+        let before = dump(&a, h);
+        assert_eq!(a.swap_out_seq_cold(h).pages, 2);
+        a.set_fail_plan(Some(FailPlan::swap_in_at(&[1])));
+        let err = a.swap_in_seq(h).unwrap_err(); // attempts 0 ok, 1 denied
+        assert!(err.free_bytes >= err.needed_bytes,
+                "synthetic swap-in fault reports real free bytes");
+        assert_eq!(a.seq_swapped_pages(h), 1,
+                   "pages restored before the denial stay restored");
+        // the denial consumed its index: the retry completes
+        a.swap_in_seq(h).unwrap();
+        assert_eq!(a.seq_swapped_pages(h), 0);
+        assert_eq!(dump(&a, h), before);
+        assert_eq!(a.swap_in_attempts(), 3);
+        a.set_fail_plan(None);
+        a.free_seq(h);
     }
 }

@@ -12,7 +12,8 @@ pub mod transformer;
 pub mod weights;
 
 pub use kvcache::{KvArena, KvHandle, KvPrecision, KvRun, KvShards,
-                  KvSource, SeqCheckpoint, KV_PAGE};
+                  KvSource, PageLocation, SeqCheckpoint, SwapSummary,
+                  KV_PAGE};
 pub use shard::{shard_range, ShardPlan, ShardRuntime};
 pub use speculative::{SpecCapture, SpecConfig, SpecRound, SpecState};
 pub use transformer::{DecodeStats, Model};

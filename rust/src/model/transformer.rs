@@ -929,24 +929,38 @@ impl Model {
     }
 
     /// Resume-from-preemption entry: rebuild a parked sequence's KV
-    /// state into `seq` (a fresh handle) by re-prefilling `tokens` —
-    /// the prompt *plus every token generated before preemption* —
-    /// and return the next greedy token.  Decoding is greedy and KV
-    /// content is a pure function of the token prefix, so the token
-    /// returned is exactly the one the preempted decode would have
-    /// produced; the scheduler's resume admission uses the same
-    /// property chunk-by-chunk, this is the one-shot form for tests
-    /// and embedders driving the model directly.
+    /// state into `seq` and return the next greedy token.  Two shapes
+    /// of parked state are accepted:
+    ///
+    /// * a **fresh handle** (`seq_len == 0`) — re-prefill `tokens`,
+    ///   the prompt *plus every token generated before preemption*;
+    /// * a **host-parked handle** — a sequence whose cold prefix was
+    ///   swapped to the host tier at preemption.  The prefix is
+    ///   restored first (byte-exact memcpy; see
+    ///   [`KvArena::swap_in_seq`]) and only the *unparked suffix*
+    ///   `tokens[seq_len..]` is re-fed, at its absolute positions.
+    ///
+    /// Decoding is greedy and KV content is a pure function of the
+    /// token prefix, so both shapes return exactly the token the
+    /// preempted decode would have produced; the scheduler's resume
+    /// admission uses the same property chunk-by-chunk, this is the
+    /// one-shot form for tests and embedders driving the model
+    /// directly.
     pub fn resume(&self, tokens: &[u32], arena: &mut KvArena,
                   seq: KvHandle, precision: Precision,
                   scratch: &mut DecodeScratch,
                   stats: &mut DecodeStats) -> Result<u32> {
         anyhow::ensure!(!tokens.is_empty(),
                         "resume needs at least one token");
-        anyhow::ensure!(arena.seq_len(seq) == 0,
-                        "resume target must be a fresh sequence");
-        self.greedy_prefill(tokens, arena, seq, precision, scratch,
-                            stats)
+        if arena.seq_swapped_pages(seq) > 0 {
+            arena.swap_in_seq(seq)?;
+        }
+        let done = arena.seq_len(seq);
+        anyhow::ensure!(done < tokens.len(),
+                        "resume needs at least one token past the \
+                         parked KV prefix");
+        self.greedy_prefill(&tokens[done..], arena, seq, precision,
+                            scratch, stats)
     }
 }
 

@@ -35,12 +35,18 @@ use mobiquant::util::prng::Pcg;
 
 fn mk_req(id: u64, prompt: Vec<u32>, max_new: usize)
           -> (Request, mpsc::Receiver<Response>) {
+    mk_req_at(id, prompt, max_new, KvPrecision::F32)
+}
+
+fn mk_req_at(id: u64, prompt: Vec<u32>, max_new: usize,
+             kv_precision: KvPrecision)
+             -> (Request, mpsc::Receiver<Response>) {
     let (tx, rx) = mpsc::channel();
     (Request {
         id,
         prompt,
         max_new_tokens: max_new,
-        kv_precision: KvPrecision::F32,
+        kv_precision,
         submitted: Instant::now(),
         reply: tx,
     }, rx)
@@ -141,6 +147,85 @@ fn critical_band_preempts_youngest_and_resumes() {
                "the proactive ladder must act before faults happen");
     assert_eq!(sched.arena.resident_pages(), 0,
                "retire must return every page");
+}
+
+/// Proactive host-tier swap, no injected faults: sequences whose KV
+/// already stores at i4 leave the requant rung nothing to convert, so
+/// under a one-f32-page budget the High band's only gentle relief is
+/// moving cold pages to the host tier.  Swapped sequences stall for
+/// the tick and the swap-in pass (including the all-stalled deadlock
+/// guard — here every High tick stalls the lone active sequence and
+/// must force it back) restores them, so the run both completes with
+/// zero drops AND reproduces the unpressured token stream bit for bit
+/// (host pages round-trip byte-exactly).
+#[test]
+fn high_band_swaps_cold_pages_and_output_stays_bit_identical() {
+    let model = synth_model_shaped(67, 4, 2, 256);
+    let run = |budget: Option<usize>, host_swap: usize| {
+        let mut batcher = Batcher::new(4, 16);
+        if let Some(p) = budget {
+            batcher = batcher.with_kv_budget(p);
+        }
+        if host_swap > 0 {
+            batcher = batcher.with_host_swap(host_swap);
+        }
+        let mut sched =
+            Scheduler::new(&model, batcher, fixed_controller());
+        if budget.is_some() {
+            sched = sched.with_pressure(PressureConfig {
+                moderate: 0.2,
+                high: 0.5,
+                critical: 0.99,
+                hysteresis: 0.05,
+            });
+        }
+        let mut rxs = Vec::new();
+        for id in 0..4u64 {
+            // 150-token prompts: two+ full pages per layer, so cold
+            // pages exist once prefill crosses the second page seam
+            let (req, rx) = mk_req_at(id, prompt_for(id, 150), 4,
+                                      KvPrecision::Int4);
+            sched.submit(req);
+            rxs.push(rx);
+        }
+        sched.run_to_completion(|_| 0.0).unwrap();
+        let resps: Vec<Response> = rxs.iter()
+            .map(|rx| rx.try_recv().expect("no request may be dropped"))
+            .collect();
+        let dev = sched.arena.resident_pages();
+        let host = sched.arena.host_resident_bytes();
+        (resps, sched.metrics.clone(), dev, host)
+    };
+
+    // unpressured oracle: ample budget, no host tier
+    let (base, m0, _, _) = run(None, 0);
+    assert_eq!(m0.preemptions, 0);
+    assert_eq!(m0.swap_out_pages, 0);
+
+    // one f32-page budget = eight i4 pages: a single 150-token i4
+    // sequence alone crosses the lowered High threshold mid-prefill
+    let (tight, m, dev, host) = run(Some(1), 1 << 20);
+    for (a, b) in base.iter().zip(&tight) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens,
+                   "swap-out -> stall -> swap-in -> continue must be \
+                    bit-identical to the unpressured run");
+        assert_eq!(b.metrics.generated_tokens, 4);
+    }
+    assert!(m.pressure_ticks[2] > 0,
+            "the tight budget must reach the High band");
+    assert!(m.swap_out_pages >= 1,
+            "High must move cold pages to the host tier");
+    assert!(m.swap_in_pages >= 1,
+            "stalled sequences must be restored");
+    assert_eq!(m.swap_fallback_reprefills, 0,
+               "no preemption happened: nothing may re-prefill");
+    assert_eq!(m.preemptions, 0,
+               "swap relief must keep the run below Critical");
+    assert_eq!(m.oom_recoveries, 0,
+               "the proactive ladder must act before faults happen");
+    assert_eq!(dev, 0, "retire must return every device page");
+    assert_eq!(host, 0, "retire must drain the host tier too");
 }
 
 /// Requantized-tail attention against the f32 slab oracle: after
@@ -303,6 +388,61 @@ fn model_resume_matches_uninterrupted_generate() {
                "resume must reproduce the uninterrupted greedy run");
 }
 
+/// `Model::resume` from host-parked KV: instead of freeing the
+/// interrupted sequence, park its cold pages in the host tier and
+/// truncate to the parked prefix — `resume` must restore the pages by
+/// memcpy, re-feed only the unparked suffix at its absolute positions,
+/// and still reproduce `generate`'s uninterrupted greedy output.
+#[test]
+fn model_resume_from_host_parked_kv_matches_generate() {
+    let model = synth_model_shaped(83, 4, 2, 256);
+    let prec = Precision::Fixed(2);
+    // > KV_PAGE prompt so the interrupted sequence owns a cold page
+    let prompt = prompt_for(9, 100);
+
+    let mut stats = DecodeStats::new(model.cfg.n_layers);
+    let base = model.generate(&prompt, 6, prec, &mut stats).unwrap();
+
+    let (mut arena, seq) = model.new_kv();
+    arena.set_host_budget_pages(8);
+    let mut scratch = model.new_scratch();
+    let mut stats = DecodeStats::new(model.cfg.n_layers);
+    let mut toks = prompt.clone();
+    model.prefill(&toks, &mut arena, seq, prec, &mut scratch,
+                  &mut stats).unwrap();
+    toks.push(argmax(&scratch.logits) as u32);
+    for _ in 0..2 {
+        let last = *toks.last().unwrap();
+        model.decode_step(last, &mut arena, seq, prec, &mut scratch,
+                          &mut stats).unwrap();
+        toks.push(argmax(&scratch.logits) as u32);
+    }
+    // the preemption: cold pages park in the host tier and the
+    // sequence truncates to the page-aligned host prefix
+    let sum = arena.swap_out_seq_cold(seq);
+    assert!(sum.pages >= 1, "a 103-token sequence has cold pages");
+    let kept = arena.seq_host_prefix_len(seq);
+    assert_eq!(kept, KV_PAGE);
+    arena.truncate_seq(seq, kept);
+    assert!(arena.seq_swapped_pages(seq) > 0);
+
+    let mut stats = DecodeStats::new(model.cfg.n_layers);
+    let next = model.resume(&toks, &mut arena, seq, prec,
+                            &mut scratch, &mut stats).unwrap();
+    assert_eq!(arena.seq_swapped_pages(seq), 0,
+               "resume must restore the parked pages first");
+    toks.push(next);
+    for _ in 0..2 {
+        let last = *toks.last().unwrap();
+        model.decode_step(last, &mut arena, seq, prec, &mut scratch,
+                          &mut stats).unwrap();
+        toks.push(argmax(&scratch.logits) as u32);
+    }
+    assert_eq!(toks, base,
+               "resume from host-parked KV must reproduce the \
+                uninterrupted greedy run");
+}
+
 // ---------------------------------------------------------------------------
 // fault injection (compiled only under --features failpoints)
 // ---------------------------------------------------------------------------
@@ -347,22 +487,29 @@ fn injected_faults_recover_32_requests_zero_drops() {
 /// Preempt->resume parity: a run whose decode is interrupted by an
 /// injected allocation fault (forcing a preemption and a later resume)
 /// must produce token-for-token the same greedy output as the same
-/// workload with no fault.  The arena budget is ample, so the only
-/// difference between the runs is the injected fault itself.
+/// workload with no fault — both when the resume re-prefills from
+/// scratch (no host tier) and when it restores host-parked KV by
+/// memcpy.  The arena budget is ample, so the only difference between
+/// the runs is the injected fault itself.
 #[cfg(feature = "failpoints")]
 #[test]
 fn preempt_resume_output_bit_identical_to_unpressured_run() {
     use mobiquant::model::kvcache::FailPlan;
 
     let model = synth_model_shaped(41, 4, 2, 256);
-    let run = |plan: Option<FailPlan>| {
-        let batcher = Batcher::new(2, 16);
+    let run = |plan: Option<FailPlan>, host_swap: usize| {
+        let mut batcher = Batcher::new(2, 16);
+        if host_swap > 0 {
+            batcher = batcher.with_host_swap(host_swap);
+        }
         let mut sched =
             Scheduler::new(&model, batcher, fixed_controller());
         sched.arena.set_fail_plan(plan);
         let mut rxs = Vec::new();
         for id in 0..2u64 {
-            let (req, rx) = mk_req(id, prompt_for(id, 60), 8);
+            // 150-token prompts: three pages per layer, so a sequence
+            // preempted past the second seam owns cold (parkable) KV
+            let (req, rx) = mk_req(id, prompt_for(id, 150), 8);
             sched.submit(req);
             rxs.push(rx);
         }
@@ -370,22 +517,24 @@ fn preempt_resume_output_bit_identical_to_unpressured_run() {
         let resps: Vec<Response> = rxs.iter()
             .map(|rx| rx.try_recv().expect("response"))
             .collect();
-        (resps, sched.arena.alloc_attempts(),
-         sched.metrics.preemptions, sched.metrics.resumes,
-         sched.metrics.oom_recoveries)
+        let attempts = sched.arena.alloc_attempts();
+        (resps, attempts, sched.metrics.clone())
     };
 
-    let (base, attempts, p0, _, _) = run(None);
-    assert_eq!(p0, 0, "ample budget: baseline must not preempt");
+    let (base, attempts, m0) = run(None, 0);
+    assert_eq!(m0.preemptions, 0,
+               "ample budget: baseline must not preempt");
     assert!(attempts >= 4, "workload must allocate several pages");
 
     // deny one mid-run allocation: the synthetic fault reports real
     // free bytes, so recovery skips the gentle rungs and preempts
-    let (faulted, _, p1, r1, o1) = run(Some(FailPlan::deny_at(
-        &[attempts / 2])));
-    assert!(o1 >= 1, "the denial must surface as an OOM recovery");
-    assert!(p1 >= 1, "recovery must preempt");
-    assert_eq!(p1, r1, "every preemption must resume");
+    let (faulted, _, m1) = run(Some(FailPlan::deny_at(
+        &[attempts / 2])), 0);
+    assert!(m1.oom_recoveries >= 1,
+            "the denial must surface as an OOM recovery");
+    assert!(m1.preemptions >= 1, "recovery must preempt");
+    assert_eq!(m1.preemptions, m1.resumes,
+               "every preemption must resume");
     for (a, b) in base.iter().zip(&faulted) {
         assert_eq!(a.id, b.id);
         assert_eq!(a.tokens, b.tokens,
@@ -394,4 +543,77 @@ fn preempt_resume_output_bit_identical_to_unpressured_run() {
         assert_eq!(a.metrics.generated_tokens,
                    b.metrics.generated_tokens);
     }
+
+    // same fault class with the host tier armed, denied late enough
+    // that the preempted sequence owns cold pages: preemption parks
+    // its KV in host memory and the resume restores it by memcpy
+    // instead of re-prefilling — the output must STILL be
+    // bit-identical, because swapped pages round-trip byte-exactly
+    let (swapped, _, m2) = run(Some(FailPlan::deny_at(
+        &[attempts - 2])), 1 << 20);
+    assert!(m2.preemptions >= 1, "recovery must preempt");
+    assert_eq!(m2.preemptions, m2.resumes,
+               "every preemption must resume");
+    assert!(m2.swap_out_pages >= 1,
+            "preemption must park cold KV in the host tier");
+    assert!(m2.swap_in_pages >= 1,
+            "the resume must restore the parked pages");
+    assert_eq!(m2.swap_in_pages, m2.swap_out_pages,
+               "every parked page must come back");
+    assert_eq!(m2.swap_fallback_reprefills, 0,
+               "the host tier had room: no resume may fall back");
+    for (a, b) in base.iter().zip(&swapped) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens,
+                   "preempt->swap->resume output must be bit-identical \
+                    to the unpressured greedy run");
+        assert_eq!(a.metrics.generated_tokens,
+                   b.metrics.generated_tokens);
+    }
+}
+
+/// The acceptance fallback: the 32-request/4-page stress run with the
+/// host tier *armed but failpoint-exhausted* (every host-page claim
+/// denied).  Preemptions find no host room, park nothing, and every
+/// resume must carry its request through the full re-prefill fallback
+/// — zero drops, zero pages in either tier at the end, and the
+/// fallback counter accounts for every resume.
+#[cfg(feature = "failpoints")]
+#[test]
+fn host_tier_exhausted_falls_back_to_reprefill_zero_drops() {
+    use mobiquant::model::kvcache::FailPlan;
+
+    let model = synth_model_shaped(97, 4, 2, 128);
+    let batcher = Batcher::new(4, 64)
+        .with_kv_budget(4)
+        .with_host_swap(1 << 20);
+    let mut sched = Scheduler::new(&model, batcher, fixed_controller());
+    sched.arena.set_fail_plan(Some(
+        FailPlan::deny_every(3, 5, 25).and_host_all()));
+    let mut rxs = Vec::new();
+    for id in 0..32u64 {
+        let (req, rx) = mk_req(id, prompt_for(id, 40), 4);
+        sched.submit(req);
+        rxs.push(rx);
+    }
+    sched.run_to_completion(|_| 0.0).unwrap();
+
+    for rx in rxs {
+        let resp = rx.try_recv().expect("no request may be dropped");
+        assert_eq!(resp.metrics.generated_tokens, 4);
+    }
+    let m = &sched.metrics;
+    assert_eq!(m.requests_completed, 32);
+    assert_eq!(m.rejected, 0);
+    assert!(m.oom_recoveries > 0,
+            "the denial schedule must actually fire mid-tick");
+    assert_eq!(m.preemptions, m.resumes,
+               "every preempted sequence must resume");
+    assert_eq!(m.swap_in_pages, 0,
+               "a denied host tier can never restore pages");
+    assert_eq!(m.swap_fallback_reprefills, m.resumes,
+               "with the tier armed but exhausted, every resume must \
+                go through the re-prefill fallback");
+    assert_eq!(sched.arena.resident_pages(), 0);
+    assert_eq!(sched.arena.host_resident_bytes(), 0);
 }
